@@ -1,0 +1,110 @@
+//! News-stream summarization under concept drift (abc/examiner scenario).
+//!
+//! Demonstrates the coordinator: a gradually drifting headline-embedding
+//! stream flows through the pipeline; the mean-shift detector fires as
+//! topics move, each epoch's summary is checkpointed, and the algorithm
+//! re-selects — the deployment the paper prescribes for ThreeSieves on
+//! non-iid streams (§3). Compares against a drift-blind run.
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::{StreamingAlgorithm, ThreeSieves};
+use threesieves::coordinator::checkpoint::Checkpoint;
+use threesieves::coordinator::{MeanShiftDetector, NoDrift, PipelineConfig, StreamPipeline};
+use threesieves::data::registry;
+use threesieves::functions::{LogDetConfig, NativeLogDet};
+
+fn algo(dim: usize, k: usize) -> ThreeSieves {
+    let f = NativeLogDet::new(LogDetConfig::for_streaming(dim, k));
+    ThreeSieves::new(Box::new(f), k, 0.01, SieveTuning::FixedT(1000))
+}
+
+fn main() {
+    let dataset = "abc-like";
+    let n = 40_000;
+    let k = 15;
+    let info = registry::info(dataset).unwrap();
+    let ckpt_dir = std::env::temp_dir().join("threesieves_news_drift");
+    std::fs::create_dir_all(&ckpt_dir).unwrap();
+    let ckpt = ckpt_dir.join("epoch.ckpt");
+
+    println!("dataset: {dataset} (surrogate for {}), n={n}, d={}\n", info.paper_name, info.dim);
+
+    // Drift-aware run: detector + re-selection + epoch checkpoints.
+    let mut aware = algo(info.dim, k);
+    let mut det = MeanShiftDetector::new(info.dim, 800, 1.5);
+    let cfg = PipelineConfig {
+        checkpoint_path: Some(ckpt.clone()),
+        reselect_on_drift: true,
+        ..Default::default()
+    };
+    let src = registry::source(dataset, n, 7).unwrap();
+    let report = StreamPipeline::new(cfg).run(src, &mut aware, &mut det).unwrap();
+
+    println!("drift-aware pipeline:");
+    println!("  throughput     : {:.0} items/s", report.throughput);
+    println!("  drift events   : {}", report.drift_events);
+    println!("  re-selections  : {}", report.reselections);
+    println!("  epoch ckpts    : {}", report.checkpoints_written);
+    println!("  final f(S)     : {:.4} ({} items)", report.final_value, report.final_summary_len);
+
+    // Drift-blind baseline on the identical stream realization.
+    let mut blind = algo(info.dim, k);
+    let mut nodet = NoDrift::default();
+    let src2 = registry::source(dataset, n, 7).unwrap();
+    let blind_report = StreamPipeline::new(PipelineConfig::default())
+        .run(src2, &mut blind, &mut nodet)
+        .unwrap();
+    println!("\ndrift-blind baseline:");
+    println!("  final f(S)     : {:.4}", blind_report.final_value);
+
+    // Score both summaries against the *tail* of the stream (the current
+    // topic regime): fresh summaries should cover it better.
+    let tail = {
+        let mut src = registry::source(dataset, n, 7).unwrap();
+        use threesieves::data::StreamSource;
+        let mut buf = vec![0.0f32; info.dim];
+        let mut rows = Vec::new();
+        let mut seen = 0usize;
+        while src.next_into(&mut buf) {
+            seen += 1;
+            if seen > n - 2000 {
+                rows.extend_from_slice(&buf);
+            }
+        }
+        rows
+    };
+    let coverage = |summary: &[f32]| -> f64 {
+        // Mean best-exemplar similarity over tail items. Scored with a
+        // *topic-scale* kernel (much wider than the selection kernel):
+        // under a random-walk topic drift the exact selection gamma rates
+        // even same-topic items from different weeks as dissimilar, which
+        // would flatten every summary to 0 coverage.
+        let kernel = threesieves::kernels::RbfKernel::new(info.dim as f64 / 2.0 / 64.0);
+        use threesieves::kernels::Kernel;
+        let mut total = 0.0;
+        let mut count = 0;
+        for ev in tail.chunks_exact(info.dim) {
+            let best = summary
+                .chunks_exact(info.dim)
+                .map(|ex| kernel.eval(ev, ex))
+                .fold(0.0f64, f64::max);
+            total += best;
+            count += 1;
+        }
+        if count == 0 {
+            0.0
+        } else {
+            total / count as f64
+        }
+    };
+    let aware_cov = coverage(&aware.summary());
+    let blind_cov = coverage(&blind.summary());
+    println!("\ntail-regime coverage (mean best-exemplar similarity, higher = fresher):");
+    println!("  drift-aware : {aware_cov:.4}");
+    println!("  drift-blind : {blind_cov:.4}");
+
+    if let Ok(ck) = Checkpoint::load(&ckpt) {
+        println!("\nlatest checkpoint: {} rows @ {} items, f = {:.4}", ck.summary_len(), ck.elements, ck.value);
+    }
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+}

@@ -1,0 +1,60 @@
+//! Quickstart: select a K-element summary from a stream with ThreeSieves.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Runs the paper's core loop on a synthetic Creditfraud-like stream with
+//! the native log-det oracle, then compares against SieveStreaming and
+//! Random on the same stream to show the value/resource trade-off.
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::{
+    RandomReservoir, SieveStreaming, StreamingAlgorithm, ThreeSieves,
+};
+use threesieves::data::registry;
+use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+use threesieves::util::timer::Stopwatch;
+
+fn oracle(dim: usize, k: usize) -> Box<dyn SubmodularFunction> {
+    Box::new(NativeLogDet::new(LogDetConfig::for_streaming(dim, k)))
+}
+
+fn main() {
+    let dataset = "creditfraud-like";
+    let (n, k, eps) = (20_000, 20, 0.001);
+    let info = registry::info(dataset).expect("registered dataset");
+    println!("dataset: {dataset} (surrogate for {}), n={n}, d={}", info.paper_name, info.dim);
+    println!("objective: f(S) = ½·logdet(I + Σ_S), RBF kernel, K={k}\n");
+
+    let mut algos: Vec<Box<dyn StreamingAlgorithm>> = vec![
+        Box::new(ThreeSieves::new(oracle(info.dim, k), k, eps, SieveTuning::FixedT(1000))),
+        Box::new(SieveStreaming::new(oracle(info.dim, k), k, eps)),
+        Box::new(RandomReservoir::new(oracle(info.dim, k), k, 42)),
+    ];
+
+    println!(
+        "{:<22} {:>10} {:>10} {:>12} {:>10}",
+        "algorithm", "f(S)", "time", "queries", "peak mem"
+    );
+    for algo in algos.iter_mut() {
+        let mut src = registry::source(dataset, n, 42).unwrap();
+        let mut buf = vec![0.0f32; info.dim];
+        let sw = Stopwatch::start();
+        while src.next_into(&mut buf) {
+            algo.process(&buf);
+        }
+        algo.finalize();
+        let st = algo.stats();
+        println!(
+            "{:<22} {:>10.4} {:>9.3}s {:>12} {:>10}",
+            algo.name(),
+            algo.value(),
+            sw.elapsed_s(),
+            st.queries,
+            st.peak_stored,
+        );
+    }
+    println!("\nThreeSieves matches the sieve family's value at a fraction of the");
+    println!("queries and exactly K stored elements — the paper's headline trade.");
+}

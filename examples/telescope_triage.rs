@@ -1,0 +1,164 @@
+//! Telescope triage — the paper's appendix use case (FACT Crab Nebula).
+//!
+//! A Cherenkov telescope records ~60 events/s; physicists cannot review
+//! them all. The deployment loop from the appendix: extract a diverse
+//! summary with ThreeSieves (T=5000, ε=0.005), then assign every stream
+//! event to its most similar summary exemplar so an expert can browse the
+//! stream through K representative events.
+//!
+//! Here the FACT autoencoder embeddings are simulated by a labelled
+//! mixture of event archetypes (night-sky background, small showers,
+//! gamma ellipsoids, proton showers, corner clippers) so we can *score*
+//! the triage: a good summary covers all archetypes and assignment
+//! recovers the archetype structure.
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::{StreamingAlgorithm, ThreeSieves};
+use threesieves::data::synthetic::Mixture;
+use threesieves::functions::{LogDetConfig, NativeLogDet};
+use threesieves::kernels::{Kernel, RbfKernel};
+use threesieves::util::rng::Rng;
+
+const ARCHETYPES: [&str; 5] =
+    ["night-sky bg", "small shower", "gamma ellipsoid", "proton shower", "corner clipper"];
+
+fn main() {
+    let dim = 32; // simulated autoencoder embedding size
+    let n = 30_000usize;
+    let k = 10;
+    let mut rng = Rng::seed_from(2013_11_01);
+
+    // Event archetype mixture; background dominates like real telescope
+    // data. Calibrated like the registry surrogates: unit per-dim variance
+    // with within-archetype similarity visible under gamma = d/2, so the
+    // objective actually rewards covering rare archetypes (see
+    // data::registry::calibrated for the derivation).
+    let sigma2n: f64 = 0.05 / (2.0 * (dim * dim) as f64);
+    let spread = (dim as f64 * (1.0 - sigma2n)).sqrt();
+    let mix = Mixture::random(dim, ARCHETYPES.len(), spread, sigma2n.sqrt(), &mut rng)
+        .with_skew(0.45);
+    let centers = mix.centers.clone();
+    let weights = mix.weights.clone();
+
+    // Stream the night's events through ThreeSieves (paper: T=5000,
+    // eps=0.005). We raise the ridge scale to a = 4: with a = 1 an exact
+    // duplicate still gains ½·ln(3/2) ≈ 0.20 > m/2 ≈ 0.17, so duplicates
+    // pass the top sieve threshold and crowd out rare archetypes; a = 4
+    // pushes the duplicate gain below m/2 and makes the objective genuinely
+    // diversity-seeking (the paper treats a as a free positive parameter).
+    // Grid scale 3: start the threshold walk above OPT (the paper builds O
+    // from the loose m = 1+aK bound, which does the same thing) so the
+    // descent phase filters background duplicates before slots fill; the T
+    // budget is sized so the walk reaches acceptable thresholds within the
+    // night's ~30k events.
+    let gamma = dim as f64 / 2.0;
+    let oracle = NativeLogDet::new(LogDetConfig::with_gamma(dim, k, gamma, 4.0));
+    let mut algo =
+        ThreeSieves::with_grid_scale(Box::new(oracle), k, 0.005, SieveTuning::FixedT(100), 3.0);
+
+    let mut src =
+        threesieves::data::synthetic::MixtureSource::new(mix, n, 20131101);
+    use threesieves::data::StreamSource;
+    let mut buf = vec![0.0f32; dim];
+    let sw = threesieves::util::timer::Stopwatch::start();
+    let mut events: Vec<f32> = Vec::with_capacity(n * dim);
+    while src.next_into(&mut buf) {
+        algo.process(&buf);
+        events.extend_from_slice(&buf);
+    }
+    let elapsed = sw.elapsed_s();
+
+    println!("processed {n} events in {elapsed:.2}s ({:.0} events/s)", n as f64 / elapsed);
+    println!("summary: {} exemplars, f(S) = {:.4}\n", algo.summary_len(), algo.value());
+
+    // Label each exemplar by its nearest archetype center.
+    let summary = algo.summary();
+    let kernel = RbfKernel::new(gamma);
+    let nearest_archetype = |row: &[f32]| -> usize {
+        (0..ARCHETYPES.len())
+            .max_by(|&a, &b| {
+                kernel
+                    .eval(row, &centers[a * dim..(a + 1) * dim])
+                    .partial_cmp(&kernel.eval(row, &centers[b * dim..(b + 1) * dim]))
+                    .unwrap()
+            })
+            .unwrap()
+    };
+
+    let exemplar_labels: Vec<usize> =
+        summary.chunks_exact(dim).map(nearest_archetype).collect();
+
+    // Assign every event to its most similar exemplar (the appendix's
+    // "present all events assigned to the reference point" workflow).
+    let mut census = vec![0usize; algo.summary_len()];
+    for ev in events.chunks_exact(dim) {
+        let best = (0..algo.summary_len())
+            .max_by(|&a, &b| {
+                kernel
+                    .eval(ev, &summary[a * dim..(a + 1) * dim])
+                    .partial_cmp(&kernel.eval(ev, &summary[b * dim..(b + 1) * dim]))
+                    .unwrap()
+            })
+            .unwrap();
+        census[best] += 1;
+    }
+
+    println!("exemplar census (events routed to each reference point):");
+    for (i, (&label, &count)) in exemplar_labels.iter().zip(&census).enumerate() {
+        let bar = "#".repeat((count * 60 / n).max(1));
+        println!(
+            "  exemplar {i:>2} [{:<16}] {:>6} events  {bar}",
+            ARCHETYPES[label], count
+        );
+    }
+
+    // Coverage check: did the summary capture every archetype, including
+    // the rare tail the skewed weights produce?
+    let mut covered = vec![false; ARCHETYPES.len()];
+    for &l in &exemplar_labels {
+        covered[l] = true;
+    }
+    let covered_count = covered.iter().filter(|&&c| c).count();
+    println!(
+        "\narchetype coverage: {covered_count}/{} (weights {:?})",
+        ARCHETYPES.len(),
+        weights.iter().map(|w| format!("{w:.2}")).collect::<Vec<_>>()
+    );
+
+    // Baseline: a uniform Random summary over the same stream. Note the
+    // paper's own Fig. 5 summary contains several night-sky/background
+    // duplicates — full archetype coverage is not guaranteed, but the
+    // value-driven summary must not lose to Random.
+    let mut rnd_oracle = NativeLogDet::new(LogDetConfig::with_gamma(dim, k, gamma, 4.0));
+    let rnd_best: usize;
+    {
+        use threesieves::algorithms::RandomReservoir;
+        let mut rnd = RandomReservoir::new(
+            Box::new(std::mem::replace(
+                &mut rnd_oracle,
+                NativeLogDet::new(LogDetConfig::with_gamma(dim, k, gamma, 4.0)),
+            )),
+            k,
+            1,
+        );
+        for ev in events.chunks_exact(dim) {
+            rnd.process(ev);
+        }
+        let mut rc = vec![false; ARCHETYPES.len()];
+        for row in rnd.summary().chunks_exact(dim) {
+            rc[nearest_archetype(row)] = true;
+        }
+        rnd_best = rc.iter().filter(|&&c| c).count();
+        println!(
+            "random baseline : coverage {rnd_best}/{}, f(S) = {:.4} (ThreeSieves {:.4})",
+            ARCHETYPES.len(),
+            rnd.value(),
+            algo.value()
+        );
+        assert!(algo.value() >= rnd.value() * 0.98, "ThreeSieves must not lose to Random");
+    }
+    assert!(covered_count >= 3, "summary must cover the major archetypes");
+    assert!(covered_count >= rnd_best.saturating_sub(1));
+    assert!(algo.stats().peak_stored <= k, "O(K) memory contract");
+    println!("triage OK: an expert reviews {k} exemplars instead of {n} events.");
+}

@@ -1,0 +1,121 @@
+"""AOT: lower the L2 entry points to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each *config* (name, d, K, B, gamma, a) produces three artifacts:
+
+  artifacts/<name>.gain.hlo.txt     (summary, chol, n, cands)  -> (gains,)
+  artifacts/<name>.append.hlo.txt   (summary, chol, n, item)   -> (summary', chol', n')
+  artifacts/<name>.value.hlo.txt    (chol, n)                  -> (f,)
+
+plus a single ``artifacts/manifest.json`` describing shapes and constants so
+the Rust side never hard-codes them.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import make_entry_points
+
+
+def default_configs():
+    """The (d, K, B) grid used by examples, integration tests and benches.
+
+    gamma follows the paper: batch experiments use l = 1/(2 sqrt(d)) i.e.
+    gamma = 1/(2 l^2) = 2d; streaming experiments use l = 1/sqrt(d) i.e.
+    gamma = d/2.  a = 1 everywhere.
+    """
+    cfgs = []
+    for name, d, k, b, gamma in [
+        ("quickstart_d16", 16, 32, 8, 2.0 * 16),
+        ("batch_d10_k50", 10, 50, 32, 2.0 * 10),
+        ("stream_d16_k32", 16, 32, 1, 16 / 2.0),
+        ("bench_d32_k64", 32, 64, 64, 2.0 * 32),
+    ]:
+        cfgs.append(
+            {"name": name, "d": d, "k": k, "b": b, "gamma": gamma, "a": 1.0}
+        )
+    return cfgs
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg: dict, out_dir: str) -> dict:
+    d, k, b = cfg["d"], cfg["k"], cfg["b"]
+    gamma, a = cfg["gamma"], cfg["a"]
+    eps = make_entry_points(gamma, a)
+
+    f32 = jnp.float32
+    summary = jax.ShapeDtypeStruct((k, d), f32)
+    chol = jax.ShapeDtypeStruct((k, k), f32)
+    n = jax.ShapeDtypeStruct((1,), jnp.int32)
+    cands = jax.ShapeDtypeStruct((b, d), f32)
+    item = jax.ShapeDtypeStruct((d,), f32)
+
+    specs = {
+        "gain": (eps["gain"], (summary, chol, n, cands)),
+        "append": (eps["append"], (summary, chol, n, item)),
+        "value": (eps["value"], (chol, n)),
+    }
+
+    files = {}
+    for ep_name, (fn, args) in specs.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg['name']}.{ep_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[ep_name] = fname
+
+    entry = dict(cfg)
+    entry["files"] = files
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--configs",
+        default=None,
+        help="JSON list of configs overriding the default grid",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cfgs = json.loads(args.configs) if args.configs else default_configs()
+
+    manifest = {"format": "hlo-text", "a_note": "M_S = I + a*Sigma_S", "configs": []}
+    for cfg in cfgs:
+        entry = lower_config(cfg, args.out)
+        manifest["configs"].append(entry)
+        print(f"lowered {cfg['name']}: d={cfg['d']} K={cfg['k']} B={cfg['b']} "
+              f"gamma={cfg['gamma']:.3g}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['configs'])} configs to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: RBF kernel slab between a candidate batch and the summary.
+
+This is the compute hot-spot of every streaming submodular algorithm in the
+paper: scoring the marginal gain of candidates requires the kernel row
+``k(e, s_i)`` for every summary element ``s_i``.  We compute the whole
+``(B, K)`` slab at once using the classic decomposition
+
+    ||x - s||^2 = ||x||^2 + ||s||^2 - 2 * <x, s>
+
+so the dominant cost is a single ``B x d @ d x K`` matmul — the MXU-shaped
+formulation demanded by the TPU discipline (see DESIGN.md
+§Hardware-Adaptation).  On this CPU image the kernel runs under
+``interpret=True`` (real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute); the BlockSpec structure is nevertheless written
+for VMEM-sized tiles.
+
+The scale parameter ``gamma = 1 / (2 l^2)`` is *static*: each AOT artifact
+bakes one value (the paper fixes ``l`` per dataset), so it is closed over at
+trace time rather than passed as a runtime scalar.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes chosen so that one candidate tile (BT x d), one summary tile
+# (KT x d) and the output tile (BT x KT) fit comfortably in ~16 MB VMEM for
+# d <= 2048 at f32: 128*2048*4 * 2 + 128*128*4 ≈ 2.2 MB.  See EXPERIMENTS.md
+# §Perf for the footprint table.
+BLOCK_B = 128
+BLOCK_K = 128
+
+
+def _rbf_slab_kernel(x_ref, s_ref, o_ref, *, gamma: float):
+    """One (BLOCK_B, BLOCK_K) output tile of the RBF slab."""
+    x = x_ref[...]  # (BT, d)
+    s = s_ref[...]  # (KT, d)
+    # Row norms: rank-1 corrections around the matmul.
+    xsq = jnp.sum(x * x, axis=1, keepdims=True)  # (BT, 1)
+    ssq = jnp.sum(s * s, axis=1, keepdims=True).T  # (1, KT)
+    # The MXU-shaped term.  preferred_element_type keeps f32 accumulation
+    # even if inputs are bf16.
+    dot = jax.lax.dot_general(
+        x,
+        s,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BT, KT)
+    d2 = xsq + ssq - 2.0 * dot
+    # Clamp: rounding can push ||x-x||^2 slightly negative, which would make
+    # exp(...) > 1 and break the normalized-kernel invariant k <= 1.
+    d2 = jnp.maximum(d2, 0.0)
+    o_ref[...] = jnp.exp(-gamma * d2).astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret"))
+def rbf_slab(x: jax.Array, s: jax.Array, *, gamma: float, interpret: bool = True) -> jax.Array:
+    """RBF kernel slab ``[exp(-gamma * ||x_i - s_j||^2)]_{ij}``.
+
+    Args:
+      x: ``(B, d)`` candidate batch.
+      s: ``(K, d)`` summary matrix (rows may be padding; callers mask).
+      gamma: static RBF scale ``1/(2 l^2)``.
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      ``(B, K)`` slab, same dtype as ``x``.
+    """
+    b, d = x.shape
+    k, d2 = s.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch: x has d={d}, s has d={d2}")
+    # Pad to tile multiples; padded rows produce garbage columns/rows that we
+    # slice away below (cheaper than predication in-kernel).
+    bp = _ceil_to(max(b, 1), BLOCK_B)
+    kp = _ceil_to(max(k, 1), BLOCK_K)
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    sp = jnp.pad(s, ((0, kp - k), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rbf_slab_kernel, gamma=float(gamma)),
+        grid=(bp // BLOCK_B, kp // BLOCK_K),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_K, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, BLOCK_K), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, kp), x.dtype),
+        interpret=interpret,
+    )(xp, sp)
+    return out[:b, :k]

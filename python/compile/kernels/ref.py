@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the L1/L2 compute path.
+
+Everything here is deliberately naive — O(K^3) slogdet differences, dense
+pairwise broadcasts — so it can serve as the ground truth that the Pallas
+kernel and the AOT'd L2 graph are validated against (pytest + hypothesis).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_slab_ref(x: jnp.ndarray, s: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Naive (B, K) RBF slab: exp(-gamma * ||x_i - s_j||^2)."""
+    diff = x[:, None, :] - s[None, :, :]  # (B, K, d)
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.exp(-gamma * d2)
+
+
+def kernel_matrix_ref(items: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Naive (N, N) RBF kernel matrix."""
+    return rbf_slab_ref(items, items, gamma)
+
+
+def logdet_ref(summary: jnp.ndarray, gamma: float, a: float) -> jnp.ndarray:
+    """f(S) = 0.5 * logdet(I + a * Sigma_S) via dense slogdet.
+
+    ``summary`` is (n, d) with *no* padding — the caller slices valid rows.
+    """
+    n = summary.shape[0]
+    if n == 0:
+        return jnp.float32(0.0)
+    sigma = kernel_matrix_ref(summary, gamma)
+    m = jnp.eye(n, dtype=summary.dtype) + a * sigma
+    _sign, ld = jnp.linalg.slogdet(m)
+    return 0.5 * ld
+
+
+def gain_ref(summary: jnp.ndarray, cand: jnp.ndarray, gamma: float, a: float) -> jnp.ndarray:
+    """Marginal gain Δf(e|S) = f(S ∪ {e}) - f(S) via two dense slogdets."""
+    stacked = jnp.concatenate([summary, cand[None, :]], axis=0)
+    return logdet_ref(stacked, gamma, a) - logdet_ref(summary, gamma, a)
+
+
+def batched_gain_ref(summary: jnp.ndarray, cands: jnp.ndarray, gamma: float, a: float) -> jnp.ndarray:
+    """(B,) marginal gains of each candidate against the same summary."""
+    return jnp.stack([gain_ref(summary, cands[i], gamma, a) for i in range(cands.shape[0])])

@@ -1,0 +1,182 @@
+"""L2: the submodular gain oracle as a JAX compute graph (build-time only).
+
+The streaming algorithms in the Rust coordinator need exactly two dense
+operations per stream item:
+
+  * ``batched_gain``  — score a batch of candidates against the current
+    summary (one marginal gain each), and
+  * ``chol_append``   — extend the summary state when a candidate is
+    accepted (rank-1 Cholesky update).
+
+Both operate on *padded, static-shape* state so they can be AOT-lowered once
+(`aot.py`) and executed from Rust through PJRT with zero Python on the
+request path:
+
+  summary : (K, d) f32   rows >= n are zero padding
+  chol    : (K, K) f32   lower Cholesky of M_S = I + a*Sigma_S on the valid
+                         n x n block; identity on padded rows/cols
+  n       : (1,)  i32    number of valid summary rows
+
+The math (see DESIGN.md §2): appending item e to S extends M_S by one
+row/col, and
+
+  logdet(M_{S+e}) = logdet(M_S) + log(1 + a*k(e,e) - ||z||^2),
+  z = L^{-1} (a * k_vec),   k_vec = [k(e, s_i)]_i
+
+so Δf(e|S) = 0.5 * log(1 + a - ||z||^2) for normalized kernels (k(e,e)=1).
+
+The kernel slab k_vec is produced by the L1 Pallas kernel (rbf_slab), which
+lowers into the same HLO module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.rbf_slab import rbf_slab
+
+# Numerical floor for the log argument / sqrt argument.  Items that are
+# (numerically) identical to a summary row drive 1 + a - ||z||^2 to ~a*0; the
+# floor keeps the gain finite and strongly negative-ish (tiny), which is the
+# behaviour the selection algorithms want: duplicates score ~0 gain.
+_EPS = 1e-6
+
+
+def _col_mask(k: int, n: jnp.ndarray) -> jnp.ndarray:
+    """(K,) f32 mask of valid summary columns; ``n`` is a (1,) i32 array."""
+    return (jnp.arange(k, dtype=jnp.int32) < n[0]).astype(jnp.float32)
+
+
+def _tri_solve(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Forward substitution ``z = L^{-1} b`` for lower-triangular L (K,K).
+
+    Hand-rolled with ``lax.fori_loop`` + dynamic slices instead of
+    ``jax.scipy.linalg.solve_triangular``: the library routine lowers to a
+    LAPACK *typed-FFI custom call* on CPU, which the runtime's
+    xla_extension 0.5.1 cannot compile ("Unknown custom-call API version
+    ... API_VERSION_TYPED_FFI"). This version emits only dot/dynamic-slice
+    HLO ops, so the artifact stays loadable everywhere.
+
+    ``b`` is (K, B). Each step computes one z row; rows ≥ i of ``z`` are
+    still zero, so the full (1,K)@(K,B) dot only picks up j < i terms.
+    """
+    k, batch = b.shape
+    z0 = jnp.zeros_like(b)
+
+    def body(i, z):
+        li = jax.lax.dynamic_slice(l, (i, 0), (1, k))  # (1, K)
+        bi = jax.lax.dynamic_slice(b, (i, 0), (1, batch))  # (1, B)
+        acc = li @ z  # (1, B): only j < i contribute (z rows >= i are 0)
+        lii = jax.lax.dynamic_slice(l, (i, i), (1, 1))  # (1, 1)
+        zi = (bi - acc) / lii
+        return jax.lax.dynamic_update_slice(z, zi, (i, 0))
+
+    return jax.lax.fori_loop(0, k, body, z0)
+
+
+def batched_gain(
+    summary: jnp.ndarray,
+    chol: jnp.ndarray,
+    n: jnp.ndarray,
+    cands: jnp.ndarray,
+    *,
+    gamma: float,
+    a: float,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(B,) marginal gains Δf(e_b | S) for a candidate batch.
+
+    Works for any 0 <= n <= K thanks to the padding conventions above; for
+    n == 0 it returns the singleton value 0.5*log(1+a) for every candidate.
+    """
+    k = summary.shape[0]
+    slab = rbf_slab(cands, summary, gamma=gamma, interpret=interpret)  # (B, K)
+    slab = slab * _col_mask(k, n)[None, :]
+    rhs = (a * slab).T  # (K, B)
+    z = _tri_solve(chol, rhs)  # (K, B)
+    znorm2 = jnp.sum(z * z, axis=0)  # (B,)
+    arg = jnp.maximum(1.0 + a - znorm2, _EPS)
+    return 0.5 * jnp.log(arg)
+
+
+def chol_append(
+    summary: jnp.ndarray,
+    chol: jnp.ndarray,
+    n: jnp.ndarray,
+    item: jnp.ndarray,
+    *,
+    gamma: float,
+    a: float,
+    interpret: bool = True,
+):
+    """Accept ``item`` into the summary: returns (summary', chol', n').
+
+    Rank-1 extension of the Cholesky factor: new row ``[z^T, sqrt(arg)]`` at
+    index n.  Caller guarantees n < K (the algorithms never accept into a
+    full summary).
+    """
+    k = summary.shape[0]
+    kv = rbf_slab(item[None, :], summary, gamma=gamma, interpret=interpret)[0]  # (K,)
+    kv = kv * _col_mask(k, n)
+    z = _tri_solve(chol, (a * kv)[:, None])[:, 0]  # (K,)
+    arg = jnp.maximum(1.0 + a - jnp.sum(z * z), _EPS)
+    dval = jnp.sqrt(arg)
+    # Row n of chol becomes [z_0 .. z_{n-1}, dval, 0 ...]; z is already zero
+    # at indices >= n because kv was masked and padded chol rows are e_i.
+    onehot = (jnp.arange(k, dtype=jnp.int32) == n[0]).astype(jnp.float32)
+    new_row = z + dval * onehot
+    chol2 = jax.lax.dynamic_update_slice(chol, new_row[None, :], (n[0], 0))
+    summary2 = jax.lax.dynamic_update_slice(summary, item[None, :], (n[0], 0))
+    return summary2, chol2, n + 1
+
+
+def f_from_chol(chol: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Current function value f(S) = sum_i log L_ii over valid rows."""
+    k = chol.shape[0]
+    diag = jnp.diagonal(chol)
+    mask = _col_mask(k, n)
+    return jnp.sum(jnp.log(jnp.maximum(diag, _EPS)) * mask)
+
+
+def init_state(k: int, d: int):
+    """Fresh padded state (summary, chol, n).  Mirrors Rust-side init."""
+    return (
+        jnp.zeros((k, d), dtype=jnp.float32),
+        jnp.eye(k, dtype=jnp.float32),
+        jnp.zeros((1,), dtype=jnp.int32),
+    )
+
+
+def kernel_matrix(items: jnp.ndarray, *, gamma: float, interpret: bool = True) -> jnp.ndarray:
+    """(N, N) RBF kernel matrix through the L1 kernel (diagnostics/Greedy)."""
+    return rbf_slab(items, items, gamma=gamma, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: concrete closures over (gamma, a) with tupled outputs,
+# matching the rust runtime's expectations (return_tuple=True unwrapping).
+# ---------------------------------------------------------------------------
+
+
+def make_entry_points(gamma: float, a: float):
+    """Build the jit-able functions lowered by aot.py for one config."""
+
+    def gain_fn(summary, chol, n, cands):
+        return (batched_gain(summary, chol, n, cands, gamma=gamma, a=a),)
+
+    def append_fn(summary, chol, n, item):
+        return chol_append(summary, chol, n, item, gamma=gamma, a=a)
+
+    def value_fn(chol, n):
+        return (f_from_chol(chol, n),)
+
+    return {"gain": gain_fn, "append": append_fn, "value": value_fn}
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_entry_points(gamma: float, a: float):
+    eps = make_entry_points(gamma, a)
+    return {name: jax.jit(fn) for name, fn in eps.items()}

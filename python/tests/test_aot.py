@@ -1,0 +1,68 @@
+"""AOT lowering contract: HLO text artifacts + manifest shape.
+
+These tests lower a deliberately tiny config so they stay fast; the heavy
+default grid is exercised by `make artifacts` + the Rust integration tests.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+TINY = {"name": "tiny_d4", "d": 4, "k": 6, "b": 2, "gamma": 2.0, "a": 1.0}
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("arts"))
+    entry = aot.lower_config(dict(TINY), out)
+    return out, entry
+
+
+def test_emits_all_entry_points(lowered):
+    out, entry = lowered
+    assert set(entry["files"]) == {"gain", "append", "value"}
+    for fname in entry["files"].values():
+        path = os.path.join(out, fname)
+        assert os.path.exists(path), fname
+        text = open(path).read()
+        # HLO text, not a serialized proto, and a real module.
+        assert text.lstrip().startswith("HloModule"), fname
+        assert "ENTRY" in text, fname
+
+
+def test_no_typed_ffi_custom_calls(lowered):
+    """xla_extension 0.5.1 rejects API_VERSION_TYPED_FFI custom calls —
+    the L2 graphs must stay free of them (this is why _tri_solve exists)."""
+    out, entry = lowered
+    for fname in entry["files"].values():
+        text = open(os.path.join(out, fname)).read()
+        assert "API_VERSION_TYPED_FFI" not in text, fname
+
+
+def test_manifest_round_trips(tmp_path):
+    out = str(tmp_path / "arts")
+    os.makedirs(out)
+    entry = aot.lower_config(dict(TINY), out)
+    manifest = {"format": "hlo-text", "configs": [entry]}
+    mpath = os.path.join(out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    back = json.load(open(mpath))
+    cfg = back["configs"][0]
+    assert cfg["name"] == "tiny_d4"
+    assert cfg["d"] == 4 and cfg["k"] == 6 and cfg["b"] == 2
+    assert cfg["gamma"] == 2.0
+
+
+def test_default_configs_are_well_formed():
+    cfgs = aot.default_configs()
+    assert len(cfgs) >= 3
+    names = [c["name"] for c in cfgs]
+    assert len(set(names)) == len(names), "config names must be unique"
+    for c in cfgs:
+        assert c["k"] > 0 and c["b"] > 0 and c["d"] > 0
+        assert c["gamma"] > 0 and c["a"] > 0

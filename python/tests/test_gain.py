@@ -1,0 +1,131 @@
+"""L2 oracle (batched_gain / chol_append / f_from_chol) vs dense slogdet oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import batched_gain_ref, logdet_ref
+from compile.model import (
+    batched_gain,
+    chol_append,
+    f_from_chol,
+    init_state,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+A = 1.0
+
+
+def _grow_state(rng, k, d, n, gamma):
+    """Build a padded state by accepting n random items through chol_append."""
+    summary, chol, cnt = init_state(k, d)
+    items = rng.standard_normal((n, d)).astype(np.float32)
+    for i in range(n):
+        summary, chol, cnt = chol_append(
+            summary, chol, cnt, jnp.asarray(items[i]), gamma=gamma, a=A
+        )
+    return summary, chol, cnt, items
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(min_value=2, max_value=24),
+    d=st.integers(min_value=1, max_value=16),
+    b=st.integers(min_value=1, max_value=12),
+    frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_batched_gain_matches_slogdet(k, d, b, frac, seed):
+    rng = np.random.default_rng(seed)
+    n = int(round(frac * (k - 1)))
+    gamma = 2.0 * d
+    summary, chol, cnt, items = _grow_state(rng, k, d, n, gamma)
+    cands = rng.standard_normal((b, d)).astype(np.float32)
+
+    got = batched_gain(summary, chol, cnt, jnp.asarray(cands), gamma=gamma, a=A)
+    want = batched_gain_ref(jnp.asarray(items), jnp.asarray(cands), gamma, A)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(min_value=2, max_value=20),
+    d=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_append_tracks_dense_cholesky(k, d, seed):
+    """After n appends, chol == cholesky(I + a*Sigma) on the valid block."""
+    rng = np.random.default_rng(seed)
+    n = k - 1
+    gamma = float(d)
+    summary, chol, cnt, items = _grow_state(rng, k, d, n, gamma)
+
+    diff = items[:, None, :] - items[None, :, :]
+    sigma = np.exp(-gamma * np.sum(diff * diff, axis=-1))
+    m = np.eye(n) + A * sigma
+    want = np.linalg.cholesky(m)
+    got = np.asarray(chol)[:n, :n]
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+    # Padded rows stay identity.
+    pad = np.asarray(chol)[n:, n:]
+    np.testing.assert_allclose(pad, np.eye(k - n), atol=1e-6)
+    assert int(cnt[0]) == n
+
+
+def test_value_matches_logdet_ref():
+    rng = np.random.default_rng(7)
+    k, d, n, gamma = 16, 8, 9, 16.0
+    summary, chol, cnt, items = _grow_state(rng, k, d, n, gamma)
+    got = float(f_from_chol(chol, cnt))
+    want = float(logdet_ref(jnp.asarray(items), gamma, A))
+    assert abs(got - want) < 1e-3 * max(1.0, abs(want))
+
+
+def test_empty_summary_gain_is_singleton_value():
+    """n = 0: every candidate scores f({e}) = 0.5*log(1 + a)."""
+    k, d, b = 8, 4, 5
+    summary, chol, cnt = init_state(k, d)
+    rng = np.random.default_rng(11)
+    cands = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
+    got = np.asarray(batched_gain(summary, chol, cnt, cands, gamma=8.0, a=A))
+    want = 0.5 * np.log(1.0 + A)
+    np.testing.assert_allclose(got, np.full(b, want, dtype=np.float32), rtol=1e-5)
+
+
+def test_duplicate_candidate_gain_is_ridge_limited():
+    """With the +I ridge a duplicate adds exactly 0.5*log(3/2) (a=1) when
+    the rest of the kernel row is ~0 — strictly below the singleton value."""
+    rng = np.random.default_rng(13)
+    k, d, gamma = 8, 4, 8.0
+    summary, chol, cnt, items = _grow_state(rng, k, d, 3, gamma)
+    dup = jnp.asarray(items[1])[None, :]
+    g = float(batched_gain(summary, chol, cnt, dup, gamma=gamma, a=A)[0])
+    want = 0.5 * np.log(1.5)
+    assert abs(g - want) < 1e-3
+    assert g < 0.5 * np.log(1.0 + A)
+
+
+def test_gains_monotone_decreasing_in_summary_size():
+    """Submodularity: gain of a fixed candidate shrinks as S grows."""
+    rng = np.random.default_rng(17)
+    k, d, gamma = 12, 6, 4.0
+    cand = jnp.asarray(rng.standard_normal((1, d)).astype(np.float32))
+    summary, chol, cnt = init_state(k, d)
+    prev = float("inf")
+    for i in range(6):
+        g = float(batched_gain(summary, chol, cnt, cand, gamma=gamma, a=A)[0])
+        assert g <= prev + 1e-5
+        prev = g
+        item = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+        summary, chol, cnt = chol_append(summary, chol, cnt, item, gamma=gamma, a=A)
+
+
+def test_opt_upper_bound():
+    """Buschjäger et al. 2017: f(S) <= K * log(1 + a) for normalized kernels."""
+    rng = np.random.default_rng(19)
+    k, d, gamma = 10, 5, 10.0
+    summary, chol, cnt, _ = _grow_state(rng, k, d, k, gamma)
+    val = float(f_from_chol(chol, cnt))
+    assert val <= k * np.log(1.0 + A) + 1e-4

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel vs pure-jnp oracle (hypothesis sweep over shapes/dtypes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.rbf_slab import rbf_slab, BLOCK_B, BLOCK_K
+from compile.kernels.ref import rbf_slab_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=130),
+    k=st.integers(min_value=1, max_value=130),
+    d=st.integers(min_value=1, max_value=64),
+    gamma=st.floats(min_value=0.01, max_value=64.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref(b, k, d, gamma, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    s = _rand(rng, k, d)
+    got = rbf_slab(x, s, gamma=gamma)
+    want = rbf_slab_ref(x, s, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_exact_tile_boundaries():
+    """Shapes exactly at / around the BlockSpec tile sizes."""
+    rng = np.random.default_rng(0)
+    for b in (BLOCK_B - 1, BLOCK_B, BLOCK_B + 1):
+        for k in (BLOCK_K - 1, BLOCK_K, BLOCK_K + 1):
+            x = _rand(rng, b, 8)
+            s = _rand(rng, k, 8)
+            got = rbf_slab(x, s, gamma=4.0)
+            want = rbf_slab_ref(x, s, 4.0)
+            assert got.shape == (b, k)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_self_similarity_is_one():
+    """Normalized kernel invariant: k(x, x) == 1 even with fp cancellation."""
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 16, 32) * 100.0  # large magnitudes stress the decomposition
+    slab = rbf_slab(x, x, gamma=8.0)
+    diag = np.diag(np.asarray(slab))
+    np.testing.assert_allclose(diag, np.ones_like(diag), rtol=0, atol=1e-4)
+
+
+def test_values_in_unit_interval():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, 40, 12)
+    s = _rand(rng, 17, 12)
+    slab = np.asarray(rbf_slab(x, s, gamma=2.0))
+    assert (slab >= 0.0).all() and (slab <= 1.0 + 1e-6).all()
+
+
+def test_bf16_inputs():
+    """bf16 candidates still produce a usable slab (f32 accumulation)."""
+    rng = np.random.default_rng(3)
+    x32 = rng.standard_normal((8, 16)).astype(np.float32)
+    s32 = rng.standard_normal((5, 16)).astype(np.float32)
+    x = jnp.asarray(x32, dtype=jnp.bfloat16)
+    s = jnp.asarray(s32, dtype=jnp.bfloat16)
+    got = np.asarray(rbf_slab(x, s, gamma=1.0), dtype=np.float32)
+    want = np.asarray(rbf_slab_ref(jnp.asarray(x32), jnp.asarray(s32), 1.0))
+    np.testing.assert_allclose(got, want, rtol=0.1, atol=0.05)
+
+
+def test_dim_mismatch_raises():
+    x = jnp.zeros((2, 3))
+    s = jnp.zeros((2, 4))
+    with pytest.raises(ValueError, match="dim mismatch"):
+        rbf_slab(x, s, gamma=1.0)

@@ -1,0 +1,46 @@
+//! Bench: regenerate **Figure 1** — relative performance, runtime and
+//! memory over ε (fixed K = 50) on the batch-dataset surrogates.
+//!
+//! Run: `cargo bench --bench fig1_epsilon_sweep` (`TS_BENCH_N` rescales).
+//! Writes results/fig1.{csv,json}.
+
+use std::path::PathBuf;
+
+use threesieves::experiments::figures::{fig1, SweepScale};
+
+fn main() {
+    let n: usize =
+        std::env::var("TS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1_500);
+    let out = PathBuf::from("results");
+    println!("== Figure 1 sweep: eps in {{0.001..0.1}}, K = 50, n = {n} per dataset ==");
+    let records = fig1(&out, SweepScale { n, seed: 42 }).expect("fig1 sweep");
+
+    // The paper's second/third rows: runtime and memory vs eps, which is
+    // where ThreeSieves' flat resource profile shows.
+    println!("\n== series: runtime (s) and peak memory vs eps ==");
+    let mut datasets: Vec<String> = records.iter().map(|r| r.dataset.clone()).collect();
+    datasets.sort();
+    datasets.dedup();
+    for ds in &datasets {
+        println!("\n[{ds}]");
+        for &eps in &[0.001, 0.005, 0.01, 0.05, 0.1] {
+            let pick = |algo: &str| {
+                records
+                    .iter()
+                    .find(|r| r.dataset == *ds && r.epsilon == eps && r.algorithm == algo)
+            };
+            let fmt = |r: Option<&threesieves::metrics::RunRecord>| match r {
+                Some(r) => format!("{:.2}s/{}el", r.runtime.as_secs_f64(), r.stats.peak_stored),
+                None => "-".into(),
+            };
+            println!(
+                "  eps={eps:<6} 3S(T=5000)={} SS={} SS++={} SAL={}",
+                fmt(pick("ThreeSieves(T=5000)")),
+                fmt(pick("SieveStreaming")),
+                fmt(pick("SieveStreaming++")),
+                fmt(pick("Salsa")),
+            );
+        }
+    }
+    println!("\nfig1 done — full rows in results/fig1.csv");
+}

@@ -1,0 +1,63 @@
+//! Bench: regenerate **Figure 2** — relative performance, runtime and
+//! memory over K (fixed ε = 0.001) on the five batch-dataset surrogates.
+//!
+//! Run: `cargo bench --bench fig2_k_sweep` (env `TS_BENCH_N`, `TS_BENCH_KS`
+//! to rescale). Prints the same three series per dataset the paper plots
+//! and writes results/fig2.{csv,json}.
+
+use std::path::PathBuf;
+
+use threesieves::experiments::figures::{fig2, SweepScale};
+
+fn main() {
+    let n: usize =
+        std::env::var("TS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1_500);
+    let ks: Vec<usize> = std::env::var("TS_BENCH_KS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.parse().ok()).collect())
+        .unwrap_or_else(|| vec![5, 10, 20, 50]);
+    let out = PathBuf::from("results");
+    println!("== Figure 2 sweep: K over {ks:?}, eps = 0.001, n = {n} per dataset ==");
+    let records = fig2(&out, SweepScale { n, seed: 42 }, &ks).expect("fig2 sweep");
+
+    // Summary series per dataset: the paper's first row (rel-to-greedy).
+    println!("\n== series: relative performance (rows = K) ==");
+    let mut datasets: Vec<String> = records.iter().map(|r| r.dataset.clone()).collect();
+    datasets.sort();
+    datasets.dedup();
+    for ds in &datasets {
+        println!("\n[{ds}]");
+        for &k in &ks {
+            let mut row = format!("K={k:<4}");
+            for algo in [
+                "ThreeSieves(T=5000)",
+                "SieveStreaming",
+                "SieveStreaming++",
+                "Salsa",
+                "IndependentSetImprovement",
+                "Random",
+            ] {
+                if let Some(r) = records
+                    .iter()
+                    .find(|r| r.dataset == *ds && r.k == k && r.algorithm == algo)
+                {
+                    row.push_str(&format!(" {}={:.2}", algo_short(algo), r.relative_to_greedy));
+                }
+            }
+            println!("  {row}");
+        }
+    }
+    println!("\nfig2 done — full rows in results/fig2.csv");
+}
+
+fn algo_short(a: &str) -> &'static str {
+    match a {
+        "ThreeSieves(T=5000)" => "3S",
+        "SieveStreaming" => "SS",
+        "SieveStreaming++" => "SS++",
+        "Salsa" => "SAL",
+        "IndependentSetImprovement" => "ISI",
+        "Random" => "RND",
+        _ => "?",
+    }
+}

@@ -1,0 +1,53 @@
+//! Bench: regenerate **Figure 3** — single-pass streaming with concept
+//! drift on stream51/abc/examiner surrogates, relative performance vs K
+//! for ε ∈ {0.1, 0.01}.
+//!
+//! Run: `cargo bench --bench fig3_drift` (`TS_BENCH_N`, `TS_BENCH_KS`).
+//! Writes results/fig3.{csv,json}.
+
+use std::path::PathBuf;
+
+use threesieves::experiments::figures::{fig3, SweepScale};
+
+fn main() {
+    let n: usize =
+        std::env::var("TS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1_500);
+    let ks: Vec<usize> = std::env::var("TS_BENCH_KS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.parse().ok()).collect())
+        .unwrap_or_else(|| vec![5, 10, 20, 50]);
+    let out = PathBuf::from("results");
+    println!("== Figure 3 sweep: drift streams, K over {ks:?}, eps in {{0.1, 0.01}}, n = {n} ==");
+    let records = fig3(&out, SweepScale { n, seed: 42 }, &ks).expect("fig3 sweep");
+
+    println!("\n== series: relative performance under drift ==");
+    let mut datasets: Vec<String> = records.iter().map(|r| r.dataset.clone()).collect();
+    datasets.sort();
+    datasets.dedup();
+    for ds in &datasets {
+        for &eps in &[0.1, 0.01] {
+            println!("\n[{ds}] eps={eps}");
+            for &k in &ks {
+                let pick = |algo: &str| {
+                    records.iter().find(|r| {
+                        r.dataset == *ds && r.k == k && r.epsilon == eps && r.algorithm == algo
+                    })
+                };
+                let fmt = |r: Option<&threesieves::metrics::RunRecord>| match r {
+                    Some(r) => format!("{:.2}", r.relative_to_greedy),
+                    None => "-".into(),
+                };
+                println!(
+                    "  K={k:<4} 3S(5000)={} 3S(500)={} SS={} SS++={} ISI={} RND={}",
+                    fmt(pick("ThreeSieves(T=5000)")),
+                    fmt(pick("ThreeSieves(T=500)")),
+                    fmt(pick("SieveStreaming")),
+                    fmt(pick("SieveStreaming++")),
+                    fmt(pick("IndependentSetImprovement")),
+                    fmt(pick("Random")),
+                );
+            }
+        }
+    }
+    println!("\nfig3 done — full rows in results/fig3.csv");
+}

@@ -1,0 +1,136 @@
+//! Micro-benchmarks of the per-element hot path — the §Perf work surface.
+//!
+//! * native log-det gain query: kernel row (O(nd)) + forward solve (O(n²))
+//! * Cholesky append and delete
+//! * PJRT gain query (single + batched) for the compiled artifact, showing
+//!   the dispatch overhead the native path avoids and the batch
+//!   amortization the artifact path relies on
+//! * ThreeSieves end-to-end items/second
+//!
+//! Run: `cargo bench --bench micro_hotpath`.
+
+use std::path::PathBuf;
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::{StreamingAlgorithm, ThreeSieves};
+use threesieves::data::registry;
+use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+use threesieves::runtime::PjrtLogDet;
+use threesieves::util::rng::Rng;
+use threesieves::util::timer::bench_loop;
+
+fn rand_rows(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+    (0..n * d).map(|_| rng.normal() as f32).collect()
+}
+
+fn bench_native_gain(d: usize, n_summary: usize) {
+    let mut rng = Rng::seed_from(1);
+    let rows = rand_rows(&mut rng, n_summary, d);
+    let mut f = NativeLogDet::new(LogDetConfig::with_gamma(d, n_summary, 2.0 * d as f64, 1.0));
+    for i in 0..n_summary {
+        f.accept(&rows[i * d..(i + 1) * d]);
+    }
+    let probe = rand_rows(&mut rng, 1, d);
+    let mut sink = 0.0;
+    let stats = bench_loop(200, 2000, || {
+        sink += f.peek_gain(&probe);
+    });
+    println!(
+        "native gain      d={d:<4} |S|={n_summary:<4}: {:>9.1} ns/query  ({:.2}M q/s)  [{}]",
+        stats.mean() * 1e9,
+        1e-6 / stats.mean(),
+        stats.summary("s")
+    );
+    std::hint::black_box(sink);
+}
+
+fn bench_native_append_remove(d: usize, k: usize) {
+    let mut rng = Rng::seed_from(2);
+    let rows = rand_rows(&mut rng, k, d);
+    let stats = bench_loop(5, 50, || {
+        let mut f = NativeLogDet::new(LogDetConfig::with_gamma(d, k, 2.0 * d as f64, 1.0));
+        for i in 0..k {
+            f.accept(&rows[i * d..(i + 1) * d]);
+        }
+        f.remove(0);
+        f.remove(k / 2 - 1);
+    });
+    println!(
+        "native build+2del d={d:<4} K={k:<4}: {:>9.1} µs/cycle [{}]",
+        stats.mean() * 1e6,
+        stats.summary("s")
+    );
+}
+
+fn bench_pjrt_gain(artifacts: &PathBuf) {
+    let Ok(mut oracle) = PjrtLogDet::from_artifacts(artifacts, "quickstart_d16") else {
+        println!("pjrt gain        : SKIP (artifacts not built)");
+        return;
+    };
+    let d = oracle.dim();
+    let b = oracle.batch_size();
+    let mut rng = Rng::seed_from(3);
+    for _ in 0..8 {
+        let item = rand_rows(&mut rng, 1, d);
+        oracle.accept(&item);
+    }
+    let probe = rand_rows(&mut rng, 1, d);
+    let mut sink = 0.0;
+    let stats = bench_loop(20, 200, || {
+        sink += oracle.peek_gain(&probe);
+    });
+    println!(
+        "pjrt gain (B=1)  d={d:<4} |S|=8  : {:>9.1} µs/query [{}]",
+        stats.mean() * 1e6,
+        stats.summary("s")
+    );
+    let cands = rand_rows(&mut rng, b, d);
+    let mut out = Vec::new();
+    let stats = bench_loop(20, 200, || {
+        oracle.peek_gain_batch(&cands, b, &mut out);
+    });
+    println!(
+        "pjrt gain (B={b:<2}) d={d:<4} |S|=8  : {:>9.1} µs/batch = {:>7.1} µs/query [{}]",
+        stats.mean() * 1e6,
+        stats.mean() * 1e6 / b as f64,
+        stats.summary("s")
+    );
+    std::hint::black_box(sink);
+}
+
+fn bench_threesieves_throughput() {
+    let dataset = "fact-highlevel-like";
+    let n = 20_000;
+    let info = registry::info(dataset).unwrap();
+    let ds = registry::get(dataset, n, 7).unwrap();
+    for k in [10usize, 50] {
+        let stats = bench_loop(1, 5, || {
+            let f = NativeLogDet::new(LogDetConfig::for_streaming(info.dim, k));
+            let mut algo =
+                ThreeSieves::new(Box::new(f), k, 0.001, SieveTuning::FixedT(1000));
+            for row in ds.iter() {
+                algo.process(row);
+            }
+            std::hint::black_box(algo.value());
+        });
+        println!(
+            "threesieves e2e  d={:<4} K={k:<4}: {:>9.2} ms/20k items = {:>8.0} items/s [{}]",
+            info.dim,
+            stats.mean() * 1e3,
+            n as f64 / stats.mean(),
+            stats.summary("s")
+        );
+    }
+}
+
+fn main() {
+    println!("== micro hot-path benchmarks ==");
+    for (d, n) in [(16usize, 10usize), (16, 50), (64, 50), (256, 100)] {
+        bench_native_gain(d, n);
+    }
+    bench_native_append_remove(16, 50);
+    bench_native_append_remove(64, 100);
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    bench_pjrt_gain(&artifacts);
+    bench_threesieves_throughput();
+}

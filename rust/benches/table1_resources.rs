@@ -1,0 +1,52 @@
+//! Bench: **Table 1, measured** — empirical peak memory and queries per
+//! element for all ten algorithms on a fixed stream, printed against the
+//! theoretical rows.
+//!
+//! Run: `cargo bench --bench table1_resources` (`TS_BENCH_N`, `TS_BENCH_K`).
+//! Writes results/table1.{csv,json}.
+
+use std::path::PathBuf;
+
+use threesieves::experiments::table1;
+
+fn main() {
+    let n: usize =
+        std::env::var("TS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(3_000);
+    let k: usize = std::env::var("TS_BENCH_K").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
+    println!("== Table 1 measured: n = {n}, K = {k}, eps = 0.01 ==\n");
+    let records = table1::run(&PathBuf::from("results"), n, k, 42).expect("table1");
+
+    // Verify the paper's resource ordering claims hold on this run.
+    let get = |prefix: &str| {
+        records
+            .iter()
+            .find(|r| r.algorithm.starts_with(prefix))
+            .unwrap_or_else(|| panic!("{prefix} missing"))
+    };
+    let three = get("ThreeSieves");
+    let sieve = get("SieveStreaming");
+    let salsa = get("Salsa");
+    println!("\nresource-ordering checks:");
+    println!(
+        "  ThreeSieves memory {} ≤ K = {k}: {}",
+        three.stats.peak_stored,
+        three.stats.peak_stored <= k
+    );
+    println!(
+        "  memory factor SieveStreaming/ThreeSieves: {:.1}×",
+        sieve.stats.peak_stored as f64 / three.stats.peak_stored.max(1) as f64
+    );
+    println!(
+        "  memory factor Salsa/ThreeSieves: {:.1}×",
+        salsa.stats.peak_stored as f64 / three.stats.peak_stored.max(1) as f64
+    );
+    println!(
+        "  query factor SieveStreaming/ThreeSieves: {:.1}×",
+        sieve.stats.queries as f64 / three.stats.queries.max(1) as f64
+    );
+    println!(
+        "  runtime factor Salsa/ThreeSieves: {:.1}×",
+        salsa.runtime.as_secs_f64() / three.runtime.as_secs_f64().max(1e-9)
+    );
+    println!("\ntable1 done — full rows in results/table1.csv");
+}

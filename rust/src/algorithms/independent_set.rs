@@ -1,0 +1,186 @@
+//! **IndependentSetImprovement** (Chakrabarti & Kale 2014), paper Alg. 4:
+//! store each element's marginal gain *at arrival time* as its weight;
+//! replace the minimum-weight summary element when a new element's weight
+//! is at least twice the minimum. ¼-approximation, O(1) queries/element.
+
+use crate::functions::SubmodularFunction;
+use crate::metrics::AlgoStats;
+
+use super::StreamingAlgorithm;
+
+/// Weight-based swap streaming (ISI).
+pub struct IndependentSetImprovement {
+    oracle: Box<dyn SubmodularFunction>,
+    k: usize,
+    /// Arrival-time weights, parallel to the oracle's summary order.
+    weights: Vec<f64>,
+    elements: u64,
+    peak_stored: usize,
+}
+
+impl IndependentSetImprovement {
+    pub fn new(oracle: Box<dyn SubmodularFunction>, k: usize) -> Self {
+        assert!(k > 0);
+        IndependentSetImprovement {
+            oracle,
+            k,
+            weights: Vec::with_capacity(k),
+            elements: 0,
+            peak_stored: 0,
+        }
+    }
+
+    fn argmin_weight(&self) -> usize {
+        let mut best = 0;
+        for i in 1..self.weights.len() {
+            if self.weights[i] < self.weights[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+impl StreamingAlgorithm for IndependentSetImprovement {
+    fn name(&self) -> String {
+        "IndependentSetImprovement".into()
+    }
+
+    fn process(&mut self, item: &[f32]) {
+        self.elements += 1;
+        // Weight = marginal gain against the *current* summary at arrival.
+        let w = self.oracle.peek_gain(item);
+        if self.oracle.len() < self.k {
+            self.oracle.accept(item);
+            self.weights.push(w);
+        } else {
+            let m = self.argmin_weight();
+            if w > 2.0 * self.weights[m] {
+                self.oracle.remove(m);
+                self.weights.remove(m);
+                self.oracle.accept(item);
+                self.weights.push(w);
+            }
+        }
+        if self.oracle.len() > self.peak_stored {
+            self.peak_stored = self.oracle.len();
+        }
+    }
+
+    fn value(&self) -> f64 {
+        self.oracle.current_value()
+    }
+
+    fn summary(&self) -> Vec<f32> {
+        self.oracle.summary().to_vec()
+    }
+
+    fn summary_len(&self) -> usize {
+        self.oracle.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.oracle.dim()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn stats(&self) -> AlgoStats {
+        AlgoStats {
+            queries: self.oracle.queries(),
+            elements: self.elements,
+            stored: self.oracle.len(),
+            peak_stored: self.peak_stored,
+            instances: 1,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.oracle.reset();
+        self.weights.clear();
+        self.elements = 0;
+        self.peak_stored = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testkit;
+
+    #[test]
+    fn fills_then_swaps_only_on_double_weight() {
+        let k = 3;
+        let d = testkit::DIM;
+        let mut algo = IndependentSetImprovement::new(testkit::oracle(k), k);
+        // Fill with near-identical items (low incremental weight for later ones).
+        let base = vec![0.1f32; d];
+        for _ in 0..k {
+            algo.process(&base);
+        }
+        assert_eq!(algo.summary_len(), k);
+        let w_before = algo.weights.clone();
+        // A duplicate has tiny weight -> no swap.
+        algo.process(&base);
+        assert_eq!(algo.weights, w_before);
+        // A far-away item has weight ≈ m > 2*min(duplicate weights) -> swap:
+        // the minimum-weight slot must be replaced by the new weight.
+        let old_min = w_before.iter().cloned().fold(f64::INFINITY, f64::min);
+        let far = vec![100.0f32; d];
+        algo.process(&far);
+        let new_min = algo.weights.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(new_min > old_min, "min weight must improve: {new_min} !> {old_min}");
+        assert_eq!(algo.weights.len(), k);
+    }
+
+    #[test]
+    fn constant_queries_per_element() {
+        let ds = testkit::clustered(800, 1);
+        let k = 6;
+        let mut algo = IndependentSetImprovement::new(testkit::oracle(k), k);
+        testkit::run(&mut algo, &ds);
+        let st = algo.stats();
+        // 1 peek per element + at most (K + #swaps)*2 update queries.
+        assert!(st.queries_per_element() < 2.0, "{}", st.queries_per_element());
+    }
+
+    #[test]
+    fn memory_bounded_by_k() {
+        let ds = testkit::clustered(500, 2);
+        let k = 5;
+        let mut algo = IndependentSetImprovement::new(testkit::oracle(k), k);
+        testkit::run(&mut algo, &ds);
+        assert!(algo.stats().peak_stored <= k);
+    }
+
+    #[test]
+    fn outperforms_random_on_clustered_data() {
+        // The paper observes ISI > Random in most settings; verify on a
+        // clearly clustered workload with a fixed seed.
+        let ds = testkit::clustered(3000, 3);
+        let k = 10;
+        let mut isi = IndependentSetImprovement::new(testkit::oracle(k), k);
+        let mut rnd = super::super::RandomReservoir::new(testkit::oracle(k), k, 1);
+        testkit::run(&mut isi, &ds);
+        testkit::run(&mut rnd, &ds);
+        // The paper observes ISI ≥ Random in most (not all) settings; allow
+        // a modest margin on this single seed.
+        assert!(
+            isi.value() >= rnd.value() * 0.85,
+            "ISI {} should not trail Random {} badly",
+            isi.value(),
+            rnd.value()
+        );
+    }
+
+    #[test]
+    fn weights_stay_parallel_to_summary() {
+        let ds = testkit::clustered(400, 4);
+        let k = 7;
+        let mut algo = IndependentSetImprovement::new(testkit::oracle(k), k);
+        testkit::run(&mut algo, &ds);
+        assert_eq!(algo.weights.len(), algo.summary_len());
+    }
+}

@@ -1,0 +1,214 @@
+//! The streaming submodular maximization algorithm family (paper Table 1).
+//!
+//! Every algorithm implements [`StreamingAlgorithm`]: elements arrive one at
+//! a time through [`StreamingAlgorithm::process`]; the algorithm owns one or
+//! more [`SubmodularFunction`] oracles (sieves) and decides, per element,
+//! whether to insert/swap/reject. Resource accounting matches the paper:
+//! *memory* = peak stored elements across all sieves, *queries* = total
+//! oracle evaluations.
+//!
+//! | Algorithm | Ratio | Memory | Queries/elem |
+//! |---|---|---|---|
+//! | [`Greedy`] (offline) | 1−1/e | O(K) | O(1) |
+//! | [`StreamGreedy`] | ½−ε (multi-pass) | O(K) | O(K) |
+//! | [`RandomReservoir`] | ¼ (expect.) | O(K) | O(1) |
+//! | [`PreemptionStreaming`] | ¼ | O(K) | O(K) |
+//! | [`IndependentSetImprovement`] | ¼ | O(K) | O(1) |
+//! | [`SieveStreaming`] | ½−ε | O(K log K / ε) | O(log K / ε) |
+//! | [`SieveStreamingPP`] | ½−ε | O(K/ε) | O(log K / ε) |
+//! | [`Salsa`] | ½−ε | O(K log K / ε) | O(log K / ε) |
+//! | [`QuickStream`] | 1/(4c)−ε | O(cK log K log 1/ε) | O(⌈1/c⌉+c) |
+//! | [`ThreeSieves`] | (1−ε)(1−1/e) w.p. (1−α)^K | O(K) | O(1) |
+
+pub mod greedy;
+pub mod independent_set;
+pub mod preemption;
+pub mod quick_stream;
+pub mod random;
+pub mod salsa;
+pub mod sieve_streaming;
+pub mod sieve_streaming_pp;
+pub mod stream_greedy;
+pub mod three_sieves;
+
+pub use greedy::Greedy;
+pub use independent_set::IndependentSetImprovement;
+pub use preemption::PreemptionStreaming;
+pub use quick_stream::QuickStream;
+pub use random::RandomReservoir;
+pub use salsa::Salsa;
+pub use sieve_streaming::SieveStreaming;
+pub use sieve_streaming_pp::SieveStreamingPP;
+pub use stream_greedy::StreamGreedy;
+pub use three_sieves::ThreeSieves;
+
+use crate::functions::SubmodularFunction;
+use crate::metrics::AlgoStats;
+
+/// A single-pass streaming summary-selection algorithm.
+///
+/// Not `Send` (see [`SubmodularFunction`]); the coordinator ships
+/// constructor closures to worker threads instead of built algorithms.
+pub trait StreamingAlgorithm {
+    /// Display name (stable across runs; used in result CSVs).
+    fn name(&self) -> String;
+
+    /// Observe one stream element.
+    fn process(&mut self, item: &[f32]);
+
+    /// Called once after the stream ends (QuickStream flushes its buffer,
+    /// others are no-ops).
+    fn finalize(&mut self) {}
+
+    /// Current best function value f(S).
+    fn value(&self) -> f64;
+
+    /// Current best summary, flat row-major `summary_len() × dim()`.
+    fn summary(&self) -> Vec<f32>;
+
+    /// Elements in the current best summary.
+    fn summary_len(&self) -> usize;
+
+    /// Feature dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Target cardinality K.
+    fn k(&self) -> usize;
+
+    /// Resource statistics so far.
+    fn stats(&self) -> AlgoStats;
+
+    /// Clear all state (drift re-selection hook from the coordinator).
+    fn reset(&mut self);
+
+    /// True once the best summary holds K elements.
+    fn is_full(&self) -> bool {
+        self.summary_len() >= self.k()
+    }
+}
+
+/// The SieveStreaming insertion rule shared by the threshold family
+/// (SieveStreaming, SieveStreaming++, Salsa's sieve rule, ThreeSieves):
+///
+/// accept e into S_v iff `Δf(e|S) ≥ (v/2 − f(S)) / (K − |S|)`.
+#[inline]
+pub(crate) fn sieve_threshold(v: f64, f_s: f64, k: usize, len: usize) -> f64 {
+    debug_assert!(len < k);
+    (v / 2.0 - f_s) / (k - len) as f64
+}
+
+/// One sieve: a candidate OPT estimate `v` plus its own oracle.
+pub(crate) struct Sieve {
+    pub v: f64,
+    pub oracle: Box<dyn SubmodularFunction>,
+}
+
+impl Sieve {
+    pub fn new(v: f64, proto: &dyn SubmodularFunction) -> Self {
+        Sieve { v, oracle: proto.clone_empty() }
+    }
+
+    /// Apply the sieve rule; returns true if the item was accepted.
+    pub fn offer(&mut self, item: &[f32], k: usize) -> bool {
+        let len = self.oracle.len();
+        if len >= k {
+            return false;
+        }
+        let thresh = sieve_threshold(self.v, self.oracle.current_value(), k, len);
+        let gain = self.oracle.peek_gain(item);
+        if gain >= thresh {
+            self.oracle.accept(item);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Aggregate stats over a set of sieves (+ the element counter the caller
+/// maintains). `extra_queries` covers bookkeeping queries the algorithm
+/// makes outside its sieves (e.g. m-estimation singleton probes).
+pub(crate) fn sieve_stats(
+    sieves: &[Sieve],
+    elements: u64,
+    extra_queries: u64,
+    peak: &mut usize,
+) -> AlgoStats {
+    let stored: usize = sieves.iter().map(|s| s.oracle.len()).sum();
+    if stored > *peak {
+        *peak = stored;
+    }
+    AlgoStats {
+        queries: sieves.iter().map(|s| s.oracle.queries()).sum::<u64>() + extra_queries,
+        elements,
+        stored,
+        peak_stored: *peak,
+        instances: sieves.len(),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testkit {
+    //! Shared test fixtures for the algorithm suite.
+    use crate::data::synthetic::{Mixture, MixtureSource};
+    use crate::data::Dataset;
+    use crate::data::StreamSource;
+    use crate::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+    use crate::util::rng::Rng;
+
+    pub const DIM: usize = 6;
+
+    /// A small clustered dataset where diverse summaries clearly beat
+    /// arbitrary ones.
+    pub fn clustered(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::seed_from(seed);
+        let mix = Mixture::random(DIM, 5, 6.0, 0.4, &mut rng);
+        let mut ds = MixtureSource::new(mix, n, seed).materialize("clustered", n);
+        ds.normalize();
+        ds
+    }
+
+    pub fn oracle(k: usize) -> Box<dyn SubmodularFunction> {
+        Box::new(NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0)))
+    }
+
+    /// Run a streaming algorithm over a dataset once.
+    pub fn run(algo: &mut dyn super::StreamingAlgorithm, ds: &Dataset) {
+        for row in ds.iter() {
+            algo.process(row);
+        }
+        algo.finalize();
+    }
+
+    /// Greedy reference value for relative-performance assertions.
+    pub fn greedy_value(ds: &Dataset, k: usize) -> f64 {
+        let mut g = super::Greedy::new(oracle(k), k);
+        g.fit(ds);
+        use super::StreamingAlgorithm;
+        g.value()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sieve_threshold_formula() {
+        // v = 2, f(S) = 0, K = 4, |S| = 0 -> (1 - 0)/4 = 0.25
+        assert!((sieve_threshold(2.0, 0.0, 4, 0) - 0.25).abs() < 1e-12);
+        // As f(S) approaches v/2 the threshold drops to 0.
+        assert!(sieve_threshold(2.0, 1.0, 4, 2) == 0.0);
+        // Past v/2 it goes negative (accept anything) — the sieve is "done".
+        assert!(sieve_threshold(2.0, 1.5, 4, 2) < 0.0);
+    }
+
+    #[test]
+    fn sieve_offer_respects_capacity() {
+        let proto = testkit::oracle(1);
+        let mut sieve = Sieve::new(0.1, proto.as_ref());
+        let item = vec![0.0f32; testkit::DIM];
+        assert!(sieve.offer(&item, 1));
+        assert!(!sieve.offer(&item, 1), "full sieve must reject");
+    }
+}

@@ -1,0 +1,248 @@
+//! **QuickStream** (Kuhnle 2021), paper Alg. 10: buffer `c` elements and
+//! evaluate `f` only once per buffer — built for settings where a single
+//! oracle call is very expensive. Accepted buffers are appended wholesale;
+//! when the working set exceeds `2·c·l·(K+1)·log₂K` elements the oldest
+//! half is dropped; at stream end the last `c·K` elements are randomly
+//! partitioned into ≤c candidate summaries of ≤K and the best one wins.
+//! Guarantee `1/(4c) − ε`.
+
+use crate::functions::SubmodularFunction;
+use crate::metrics::AlgoStats;
+use crate::util::rng::Rng;
+
+use super::StreamingAlgorithm;
+
+/// Buffered whole-chunk streaming.
+pub struct QuickStream {
+    proto: Box<dyn SubmodularFunction>,
+    /// Working-set oracle over A (value queried once per buffer flush).
+    work: Box<dyn SubmodularFunction>,
+    /// Final chosen summary oracle (built in finalize()).
+    chosen: Option<Box<dyn SubmodularFunction>>,
+    k: usize,
+    c: usize,
+    /// l = ⌈log₂(1/(4ε))⌉ + 3 (paper line 1).
+    l: usize,
+    buffer: Vec<f32>,
+    buffered: usize,
+    rng: Rng,
+    elements: u64,
+    peak_stored: usize,
+}
+
+impl QuickStream {
+    pub fn new(proto: Box<dyn SubmodularFunction>, k: usize, c: usize, epsilon: f64, seed: u64) -> Self {
+        assert!(k >= 2, "QuickStream requires K >= 2");
+        assert!(c >= 1);
+        assert!(epsilon > 0.0);
+        let l = ((1.0 / (4.0 * epsilon)).log2().ceil() as usize).max(1) + 3;
+        let work = proto.clone_empty();
+        QuickStream {
+            proto,
+            work,
+            chosen: None,
+            k,
+            c,
+            l,
+            buffer: Vec::new(),
+            buffered: 0,
+            rng: Rng::seed_from(seed),
+            elements: 0,
+            peak_stored: 0,
+        }
+    }
+
+    fn cap(&self) -> usize {
+        self.c * self.l * (self.k + 1) * (usize::BITS as usize - self.k.leading_zeros() as usize)
+    }
+
+    fn flush_buffer(&mut self) {
+        if self.buffered == 0 {
+            return;
+        }
+        let d = self.proto.dim();
+        // Evaluate f(A ∪ C) − f(A) with |C| oracle updates, then keep or
+        // roll back. One "logical" query per buffer, as the paper counts.
+        let before = self.work.current_value();
+        let n_before = self.work.len();
+        for i in 0..self.buffered {
+            self.work.accept(&self.buffer[i * d..(i + 1) * d]);
+        }
+        let gain = self.work.current_value() - before;
+        if gain < before / self.k as f64 {
+            // Reject: roll back the appended chunk.
+            for _ in 0..self.buffered {
+                let idx = self.work.len() - 1;
+                self.work.remove(idx);
+            }
+            debug_assert_eq!(self.work.len(), n_before);
+        } else {
+            // Keep; enforce the working-set cap by dropping the oldest.
+            let cap = self.cap();
+            while self.work.len() > cap {
+                self.work.remove(0);
+            }
+        }
+        self.buffer.clear();
+        self.buffered = 0;
+        if self.work.len() > self.peak_stored {
+            self.peak_stored = self.work.len();
+        }
+    }
+}
+
+impl StreamingAlgorithm for QuickStream {
+    fn name(&self) -> String {
+        format!("QuickStream(c={})", self.c)
+    }
+
+    fn process(&mut self, item: &[f32]) {
+        self.elements += 1;
+        self.buffer.extend_from_slice(item);
+        self.buffered += 1;
+        if self.buffered == self.c {
+            self.flush_buffer();
+        }
+    }
+
+    fn finalize(&mut self) {
+        self.flush_buffer();
+        // Keep the cK most recent, randomly partition into ≤c summaries of
+        // ≤K, return the best.
+        let d = self.proto.dim();
+        let n = self.work.len();
+        let keep = (self.c * self.k).min(n);
+        let feats: Vec<f32> = self.work.summary()[(n - keep) * d..].to_vec();
+        let mut order: Vec<usize> = (0..keep).collect();
+        self.rng.shuffle(&mut order);
+
+        let mut best: Option<Box<dyn SubmodularFunction>> = None;
+        for part in order.chunks(self.k.max(1)) {
+            let mut cand = self.proto.clone_empty();
+            for &i in part {
+                cand.accept(&feats[i * d..(i + 1) * d]);
+            }
+            let better = match &best {
+                None => true,
+                Some(b) => cand.current_value() > b.current_value(),
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        self.chosen = best;
+    }
+
+    fn value(&self) -> f64 {
+        match &self.chosen {
+            Some(c) => c.current_value(),
+            None => self.work.current_value(),
+        }
+    }
+
+    fn summary(&self) -> Vec<f32> {
+        match &self.chosen {
+            Some(c) => c.summary().to_vec(),
+            None => self.work.summary().to_vec(),
+        }
+    }
+
+    fn summary_len(&self) -> usize {
+        match &self.chosen {
+            Some(c) => c.len(),
+            None => self.work.len(),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.proto.dim()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn stats(&self) -> AlgoStats {
+        let stored = self.work.len() + self.buffered;
+        AlgoStats {
+            queries: self.work.queries()
+                + self.chosen.as_ref().map(|c| c.queries()).unwrap_or(0),
+            elements: self.elements,
+            stored,
+            peak_stored: self.peak_stored.max(stored),
+            instances: 1,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.work = self.proto.clone_empty();
+        self.chosen = None;
+        self.buffer.clear();
+        self.buffered = 0;
+        self.elements = 0;
+        self.peak_stored = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testkit;
+
+    #[test]
+    fn final_summary_at_most_k() {
+        let ds = testkit::clustered(600, 1);
+        let k = 8;
+        for c in [1usize, 4] {
+            let mut algo = QuickStream::new(testkit::oracle(k), k, c, 0.05, 7);
+            testkit::run(&mut algo, &ds);
+            assert!(algo.summary_len() <= k, "c={c}: {} > {k}", algo.summary_len());
+            assert!(algo.value() > 0.0);
+        }
+    }
+
+    #[test]
+    fn buffers_reduce_flushes() {
+        let ds = testkit::clustered(400, 2);
+        let k = 5;
+        let mut c1 = QuickStream::new(testkit::oracle(k), k, 1, 0.05, 1);
+        let mut c8 = QuickStream::new(testkit::oracle(k), k, 8, 0.05, 1);
+        testkit::run(&mut c1, &ds);
+        testkit::run(&mut c8, &ds);
+        // Larger buffers => fewer oracle interactions overall.
+        assert!(c8.stats().queries < c1.stats().queries);
+    }
+
+    #[test]
+    fn working_set_capped() {
+        let ds = testkit::clustered(2000, 3);
+        let k = 4;
+        let c = 2;
+        let mut algo = QuickStream::new(testkit::oracle(k), k, c, 0.1, 3);
+        let cap = algo.cap();
+        testkit::run(&mut algo, &ds);
+        assert!(algo.stats().peak_stored <= cap + c, "peak {} cap {cap}", algo.stats().peak_stored);
+    }
+
+    #[test]
+    fn memory_exceeds_plain_k_algorithms() {
+        // The paper notes QuickStream trades memory for fewer evaluations.
+        let ds = testkit::clustered(1500, 4);
+        let k = 5;
+        let mut algo = QuickStream::new(testkit::oracle(k), k, 2, 0.05, 9);
+        testkit::run(&mut algo, &ds);
+        assert!(algo.stats().peak_stored > k);
+    }
+
+    #[test]
+    fn reset_then_rerun() {
+        let ds = testkit::clustered(300, 5);
+        let k = 4;
+        let mut algo = QuickStream::new(testkit::oracle(k), k, 2, 0.1, 11);
+        testkit::run(&mut algo, &ds);
+        algo.reset();
+        assert_eq!(algo.summary_len(), 0);
+        testkit::run(&mut algo, &ds);
+        assert!(algo.summary_len() > 0);
+    }
+}

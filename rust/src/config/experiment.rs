@@ -1,0 +1,187 @@
+//! Experiment configuration: which algorithms, datasets and parameter grids
+//! an experiment driver should sweep. JSON-backed (see `util::json`) so
+//! configs can be checked into `configs/` and passed via `--config`.
+
+use std::path::Path;
+
+use crate::util::json::{Json, JsonError};
+
+/// Which algorithm to instantiate, with its hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgoSpec {
+    Greedy,
+    Random { seed: u64 },
+    StreamGreedy { nu: f64 },
+    Preemption,
+    IndependentSetImprovement,
+    SieveStreaming { epsilon: f64 },
+    SieveStreamingPP { epsilon: f64 },
+    Salsa { epsilon: f64, use_length_hint: bool },
+    QuickStream { c: usize, epsilon: f64, seed: u64 },
+    ThreeSieves { epsilon: f64, t: usize },
+}
+
+impl AlgoSpec {
+    /// Stable identifier used in CSVs and config files.
+    pub fn id(&self) -> String {
+        match self {
+            AlgoSpec::Greedy => "greedy".into(),
+            AlgoSpec::Random { .. } => "random".into(),
+            AlgoSpec::StreamGreedy { .. } => "stream-greedy".into(),
+            AlgoSpec::Preemption => "preemption".into(),
+            AlgoSpec::IndependentSetImprovement => "isi".into(),
+            AlgoSpec::SieveStreaming { .. } => "sieve-streaming".into(),
+            AlgoSpec::SieveStreamingPP { .. } => "sieve-streaming-pp".into(),
+            AlgoSpec::Salsa { .. } => "salsa".into(),
+            AlgoSpec::QuickStream { c, .. } => format!("quickstream-c{c}"),
+            AlgoSpec::ThreeSieves { t, .. } => format!("three-sieves-t{t}"),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let kind = j.get("algo").as_str().ok_or("missing algo")?;
+        let eps = || j.get("epsilon").as_f64().unwrap_or(0.001);
+        let seed = || j.get("seed").as_f64().unwrap_or(42.0) as u64;
+        Ok(match kind {
+            "greedy" => AlgoSpec::Greedy,
+            "random" => AlgoSpec::Random { seed: seed() },
+            "stream-greedy" => {
+                AlgoSpec::StreamGreedy { nu: j.get("nu").as_f64().unwrap_or(1e-4) }
+            }
+            "preemption" => AlgoSpec::Preemption,
+            "isi" => AlgoSpec::IndependentSetImprovement,
+            "sieve-streaming" => AlgoSpec::SieveStreaming { epsilon: eps() },
+            "sieve-streaming-pp" => AlgoSpec::SieveStreamingPP { epsilon: eps() },
+            "salsa" => AlgoSpec::Salsa {
+                epsilon: eps(),
+                use_length_hint: j.get("use_length_hint").as_bool().unwrap_or(true),
+            },
+            "quickstream" => AlgoSpec::QuickStream {
+                c: j.get("c").as_usize().unwrap_or(1),
+                epsilon: eps(),
+                seed: seed(),
+            },
+            "three-sieves" => AlgoSpec::ThreeSieves {
+                epsilon: eps(),
+                t: j.get("t").as_usize().unwrap_or(1000),
+            },
+            other => return Err(format!("unknown algo {other:?}")),
+        })
+    }
+}
+
+/// A full experiment sweep description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub datasets: Vec<String>,
+    /// Stream length per dataset (surrogate size).
+    pub n: usize,
+    pub ks: Vec<usize>,
+    pub epsilons: Vec<f64>,
+    pub ts: Vec<usize>,
+    pub seed: u64,
+    pub algos: Vec<AlgoSpec>,
+    /// Output directory for CSV/JSON results.
+    pub out_dir: String,
+}
+
+impl ExperimentConfig {
+    pub fn from_json_text(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text).map_err(|e: JsonError| e.to_string())?;
+        let strs = |key: &str| -> Vec<String> {
+            j.get(key)
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                .unwrap_or_default()
+        };
+        let nums = |key: &str| -> Vec<f64> {
+            j.get(key)
+                .as_arr()
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default()
+        };
+        let algos = match j.get("algos").as_arr() {
+            Some(arr) => arr.iter().map(AlgoSpec::from_json).collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+        Ok(ExperimentConfig {
+            name: j.get("name").as_str().unwrap_or("experiment").to_string(),
+            datasets: strs("datasets"),
+            n: j.get("n").as_usize().unwrap_or(10_000),
+            ks: nums("ks").into_iter().map(|v| v as usize).collect(),
+            epsilons: nums("epsilons"),
+            ts: nums("ts").into_iter().map(|v| v as usize).collect(),
+            seed: j.get("seed").as_f64().unwrap_or(42.0) as u64,
+            algos,
+            out_dir: j.get("out_dir").as_str().unwrap_or("results").to_string(),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_json_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_json_text(
+            r#"{
+              "name": "fig2",
+              "datasets": ["forestcover-like", "kddcup-like"],
+              "n": 5000,
+              "ks": [5, 10, 20],
+              "epsilons": [0.001],
+              "ts": [500, 1000],
+              "seed": 7,
+              "out_dir": "results/fig2",
+              "algos": [
+                {"algo": "greedy"},
+                {"algo": "three-sieves", "epsilon": 0.001, "t": 500},
+                {"algo": "salsa", "epsilon": 0.001},
+                {"algo": "quickstream", "c": 4}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig2");
+        assert_eq!(cfg.datasets.len(), 2);
+        assert_eq!(cfg.ks, vec![5, 10, 20]);
+        assert_eq!(cfg.algos.len(), 4);
+        assert_eq!(cfg.algos[1].id(), "three-sieves-t500");
+        assert_eq!(cfg.algos[3].id(), "quickstream-c4");
+    }
+
+    #[test]
+    fn unknown_algo_rejected() {
+        let err = ExperimentConfig::from_json_text(
+            r#"{"algos": [{"algo": "magic"}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown algo"));
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = ExperimentConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.n, 10_000);
+        assert_eq!(cfg.seed, 42);
+        assert!(cfg.algos.is_empty());
+    }
+
+    #[test]
+    fn algo_spec_roundtrip_ids() {
+        let specs = [
+            AlgoSpec::Greedy,
+            AlgoSpec::ThreeSieves { epsilon: 0.01, t: 2500 },
+            AlgoSpec::SieveStreamingPP { epsilon: 0.1 },
+        ];
+        let ids: Vec<String> = specs.iter().map(|s| s.id()).collect();
+        assert_eq!(ids, vec!["greedy", "three-sieves-t2500", "sieve-streaming-pp"]);
+    }
+}

@@ -1,0 +1,5 @@
+//! Experiment and service configuration (JSON-backed).
+
+pub mod experiment;
+
+pub use experiment::{AlgoSpec, ExperimentConfig};

@@ -1,0 +1,183 @@
+//! Summary checkpointing: persist a selected summary (+ metadata) so a
+//! pipeline can restart, or downstream consumers (dashboards, assignment
+//! services) can load the latest summary without touching the pipeline.
+//!
+//! Format: a small JSON header line, then row-major little-endian f32s.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// A persisted summary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub algorithm: String,
+    pub dim: usize,
+    pub k: usize,
+    pub value: f64,
+    /// Stream elements consumed when the checkpoint was taken.
+    pub elements: u64,
+    /// Drift events observed so far.
+    pub drift_events: usize,
+    /// Row-major `n × dim` summary features.
+    pub summary: Vec<f32>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("corrupt checkpoint: {0}")]
+    Corrupt(String),
+}
+
+const MAGIC: &[u8; 8] = b"TSCKPT1\n";
+
+impl Checkpoint {
+    pub fn summary_len(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.summary.len() / self.dim
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let header = Json::obj(vec![
+            ("algorithm", Json::str(self.algorithm.clone())),
+            ("dim", Json::num(self.dim as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("value", Json::num(self.value)),
+            ("elements", Json::num(self.elements as f64)),
+            ("drift_events", Json::num(self.drift_events as f64)),
+            ("rows", Json::num(self.summary_len() as f64)),
+        ])
+        .to_string();
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(MAGIC)?;
+            f.write_all(&(header.len() as u32).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            for v in &self.summary {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            f.sync_all()?;
+        }
+        // Atomic replace so readers never see a torn checkpoint.
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self, CheckpointError> {
+        let mut f = std::fs::File::open(path)?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic).map_err(|_| CheckpointError::Corrupt("short magic".into()))?;
+        if &magic != MAGIC {
+            return Err(CheckpointError::Corrupt("bad magic".into()));
+        }
+        let mut len_bytes = [0u8; 4];
+        f.read_exact(&mut len_bytes)
+            .map_err(|_| CheckpointError::Corrupt("short header len".into()))?;
+        let hlen = u32::from_le_bytes(len_bytes) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf).map_err(|_| CheckpointError::Corrupt("short header".into()))?;
+        let header = String::from_utf8(hbuf)
+            .map_err(|_| CheckpointError::Corrupt("header not utf-8".into()))?;
+        let j = Json::parse(&header)
+            .map_err(|e| CheckpointError::Corrupt(format!("header json: {e}")))?;
+        let dim = j.get("dim").as_usize().ok_or_else(|| corrupt("dim"))?;
+        let rows = j.get("rows").as_usize().ok_or_else(|| corrupt("rows"))?;
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        if payload.len() != rows * dim * 4 {
+            return Err(CheckpointError::Corrupt(format!(
+                "payload {} bytes, expected {}",
+                payload.len(),
+                rows * dim * 4
+            )));
+        }
+        let summary: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint {
+            algorithm: j.get("algorithm").as_str().unwrap_or("?").to_string(),
+            dim,
+            k: j.get("k").as_usize().ok_or_else(|| corrupt("k"))?,
+            value: j.get("value").as_f64().unwrap_or(0.0),
+            elements: j.get("elements").as_f64().unwrap_or(0.0) as u64,
+            drift_events: j.get("drift_events").as_usize().unwrap_or(0),
+            summary,
+        })
+    }
+}
+
+fn corrupt(field: &str) -> CheckpointError {
+    CheckpointError::Corrupt(format!("missing field {field:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            algorithm: "ThreeSieves(T=500)".into(),
+            dim: 3,
+            k: 4,
+            value: 2.5,
+            elements: 1000,
+            drift_events: 2,
+            summary: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ts_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("rt");
+        let ck = sample();
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.summary_len(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let p = tmp("trunc");
+        sample().save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(matches!(Checkpoint::load(&p), Err(CheckpointError::Corrupt(_))));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_bad_magic() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOTMAGIC rest").unwrap();
+        assert!(matches!(Checkpoint::load(&p), Err(CheckpointError::Corrupt(_))));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_summary_roundtrips() {
+        let p = tmp("empty");
+        let mut ck = sample();
+        ck.summary.clear();
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.summary_len(), 0);
+        std::fs::remove_file(&p).ok();
+    }
+}

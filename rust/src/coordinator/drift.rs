@@ -1,0 +1,219 @@
+//! Concept-drift detection for summary re-selection.
+//!
+//! The detector watches the raw feature stream (not the summaries): a
+//! reference window's mean vector is compared against a sliding current
+//! window; when the shift exceeds `threshold × pooled scale` the detector
+//! fires and the pipeline re-selects the summary. This is deliberately a
+//! simple, O(d)-per-item detector — the paper only requires *a* mechanism,
+//! and mean-shift catches both the class-incremental jumps (stream51-like)
+//! and accumulated random-walk drift (abc/examiner-like).
+
+/// Drift detection interface.
+pub trait DriftDetector: Send {
+    /// Observe one item; returns true if drift was detected at this item
+    /// (the detector re-baselines itself after firing).
+    fn observe(&mut self, item: &[f32]) -> bool;
+
+    /// Number of drift events so far.
+    fn events(&self) -> usize;
+
+    fn reset(&mut self);
+}
+
+/// A detector that never fires (iid streams).
+#[derive(Default, Debug)]
+pub struct NoDrift {
+    _priv: (),
+}
+
+impl DriftDetector for NoDrift {
+    fn observe(&mut self, _item: &[f32]) -> bool {
+        false
+    }
+
+    fn events(&self) -> usize {
+        0
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Windowed mean-shift detector.
+pub struct MeanShiftDetector {
+    dim: usize,
+    window: usize,
+    /// Fire when ||mean_cur − mean_ref||₂ > threshold × (scale_ref + ε).
+    threshold: f64,
+    /// Reference window statistics (frozen after warmup).
+    ref_mean: Vec<f64>,
+    ref_scale: f64,
+    ref_count: usize,
+    /// Current sliding accumulation.
+    cur_sum: Vec<f64>,
+    cur_count: usize,
+    events: usize,
+    warmed: bool,
+    /// Scratch accumulation of squared norms for the reference scale.
+    ref_sq_sum: f64,
+}
+
+impl MeanShiftDetector {
+    /// `window`: items per comparison window; `threshold`: shift multiple
+    /// (≈2–4 works well; lower = more sensitive).
+    pub fn new(dim: usize, window: usize, threshold: f64) -> Self {
+        assert!(dim > 0 && window > 0 && threshold > 0.0);
+        MeanShiftDetector {
+            dim,
+            window,
+            threshold,
+            ref_mean: vec![0.0; dim],
+            ref_scale: 0.0,
+            ref_count: 0,
+            cur_sum: vec![0.0; dim],
+            cur_count: 0,
+            events: 0,
+            warmed: false,
+            ref_sq_sum: 0.0,
+        }
+    }
+
+    fn rebaseline(&mut self) {
+        self.ref_mean.iter_mut().for_each(|v| *v = 0.0);
+        self.ref_scale = 0.0;
+        self.ref_count = 0;
+        self.ref_sq_sum = 0.0;
+        self.cur_sum.iter_mut().for_each(|v| *v = 0.0);
+        self.cur_count = 0;
+        self.warmed = false;
+    }
+}
+
+impl DriftDetector for MeanShiftDetector {
+    fn observe(&mut self, item: &[f32]) -> bool {
+        debug_assert_eq!(item.len(), self.dim);
+        if !self.warmed {
+            // Build the reference window.
+            let mut sq = 0.0;
+            for (j, &v) in item.iter().enumerate() {
+                self.ref_mean[j] += v as f64;
+                sq += (v as f64) * (v as f64);
+            }
+            self.ref_sq_sum += sq;
+            self.ref_count += 1;
+            if self.ref_count == self.window {
+                let n = self.window as f64;
+                for v in self.ref_mean.iter_mut() {
+                    *v /= n;
+                }
+                let mean_norm2: f64 = self.ref_mean.iter().map(|v| v * v).sum();
+                // Pooled per-item scale: sqrt(E||x||² − ||mean||²) — a
+                // d-dimensional standard-deviation analogue.
+                self.ref_scale = (self.ref_sq_sum / n - mean_norm2).max(1e-12).sqrt();
+                self.warmed = true;
+            }
+            return false;
+        }
+
+        for (j, &v) in item.iter().enumerate() {
+            self.cur_sum[j] += v as f64;
+        }
+        self.cur_count += 1;
+        if self.cur_count < self.window {
+            return false;
+        }
+
+        // Compare windows.
+        let n = self.cur_count as f64;
+        let mut shift2 = 0.0;
+        for j in 0..self.dim {
+            let dmean = self.cur_sum[j] / n - self.ref_mean[j];
+            shift2 += dmean * dmean;
+        }
+        let fired = shift2.sqrt() > self.threshold * self.ref_scale / (n.sqrt());
+        if fired {
+            self.events += 1;
+            self.rebaseline();
+        } else {
+            // Slide: current window becomes the fresh accumulation.
+            self.cur_sum.iter_mut().for_each(|v| *v = 0.0);
+            self.cur_count = 0;
+        }
+        fired
+    }
+
+    fn events(&self) -> usize {
+        self.events
+    }
+
+    fn reset(&mut self) {
+        self.events = 0;
+        self.rebaseline();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn feed_gaussian(det: &mut dyn DriftDetector, rng: &mut Rng, mean: f64, n: usize, d: usize) {
+        for _ in 0..n {
+            let item: Vec<f32> = (0..d).map(|_| (mean + rng.normal()) as f32).collect();
+            det.observe(&item);
+        }
+    }
+
+    #[test]
+    fn no_false_positives_on_stationary_stream() {
+        let d = 8;
+        let mut det = MeanShiftDetector::new(d, 50, 4.0);
+        let mut rng = Rng::seed_from(1);
+        feed_gaussian(&mut det, &mut rng, 0.0, 2000, d);
+        assert_eq!(det.events(), 0, "stationary stream must not fire");
+    }
+
+    #[test]
+    fn detects_abrupt_mean_shift() {
+        let d = 8;
+        let mut det = MeanShiftDetector::new(d, 50, 4.0);
+        let mut rng = Rng::seed_from(2);
+        feed_gaussian(&mut det, &mut rng, 0.0, 500, d);
+        feed_gaussian(&mut det, &mut rng, 3.0, 500, d);
+        assert!(det.events() >= 1, "3-sigma jump must fire");
+    }
+
+    #[test]
+    fn rebaselines_after_event() {
+        let d = 4;
+        let mut det = MeanShiftDetector::new(d, 40, 4.0);
+        let mut rng = Rng::seed_from(3);
+        feed_gaussian(&mut det, &mut rng, 0.0, 300, d);
+        feed_gaussian(&mut det, &mut rng, 5.0, 300, d);
+        let after_jump = det.events();
+        assert!(after_jump >= 1);
+        // Stay at the new level: no further events.
+        feed_gaussian(&mut det, &mut rng, 5.0, 1500, d);
+        assert_eq!(det.events(), after_jump, "must adapt to the new regime");
+    }
+
+    #[test]
+    fn no_drift_detector_is_silent() {
+        let mut det = NoDrift::default();
+        for _ in 0..100 {
+            assert!(!det.observe(&[1.0, 2.0]));
+        }
+        assert_eq!(det.events(), 0);
+    }
+
+    #[test]
+    fn reset_clears_events() {
+        let d = 4;
+        let mut det = MeanShiftDetector::new(d, 20, 3.0);
+        let mut rng = Rng::seed_from(4);
+        feed_gaussian(&mut det, &mut rng, 0.0, 100, d);
+        feed_gaussian(&mut det, &mut rng, 4.0, 100, d);
+        assert!(det.events() > 0);
+        det.reset();
+        assert_eq!(det.events(), 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! The L3 streaming coordinator.
+//!
+//! ThreeSieves assumes an iid stream and the paper prescribes pairing it
+//! with "an appropriate concept drift detection mechanism ... so that
+//! summaries are e.g. re-selected periodically" (§3). This module is that
+//! mechanism plus the production plumbing around it:
+//!
+//! * [`pipeline::StreamPipeline`] — source → bounded channel (backpressure)
+//!   → algorithm, with per-stage metrics and an optional drift detector
+//!   that triggers summary re-selection.
+//! * [`drift::MeanShiftDetector`] — windowed mean-shift drift detection.
+//! * [`sharded::ShardedThreeSieves`] — the paper's "more memory available"
+//!   extension: parallel ThreeSieves instances over disjoint threshold
+//!   partitions, best summary wins.
+//! * [`checkpoint`] — summary state save/restore for restartable pipelines.
+
+pub mod checkpoint;
+pub mod drift;
+pub mod page_hinkley;
+pub mod pipeline;
+pub mod race;
+pub mod sharded;
+
+pub use drift::{DriftDetector, MeanShiftDetector, NoDrift};
+pub use page_hinkley::PageHinkleyDetector;
+pub use pipeline::{PipelineConfig, PipelineReport, StreamPipeline};
+pub use race::{race, winner, AlgoFactory, LaneReport, RaceConfig};
+pub use sharded::ShardedThreeSieves;

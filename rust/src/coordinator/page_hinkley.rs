@@ -1,0 +1,161 @@
+//! Page-Hinkley drift detector — the classic sequential change-point test,
+//! provided alongside [`MeanShiftDetector`](super::MeanShiftDetector) so the
+//! pipeline can be configured with either (the ablation bench compares
+//! them on the drift surrogates).
+//!
+//! The test tracks the cumulative deviation of a univariate statistic from
+//! its running mean; drift fires when the deviation exceeds `lambda`. We
+//! monitor `‖x‖` shifts *and* the distance of each item to the running mean
+//! vector, which catches both scale and location drift.
+
+use super::drift::DriftDetector;
+
+/// Page-Hinkley test over the item-to-running-mean distance.
+pub struct PageHinkleyDetector {
+    dim: usize,
+    /// Forgetting factor for the running mean vector.
+    alpha: f64,
+    /// Minimum magnitude change to accumulate (the PH `delta`).
+    delta: f64,
+    /// Detection threshold (the PH `lambda`).
+    lambda: f64,
+    /// Running mean of the feature vector.
+    mean: Vec<f64>,
+    /// Running mean of the monitored statistic.
+    stat_mean: f64,
+    /// Cumulative PH sum and its running minimum.
+    m_t: f64,
+    m_min: f64,
+    t: u64,
+    warmup: u64,
+    events: usize,
+}
+
+impl PageHinkleyDetector {
+    /// `delta`: tolerated drift magnitude per step; `lambda`: alarm level.
+    /// `warmup`: items consumed before the test arms itself.
+    pub fn new(dim: usize, delta: f64, lambda: f64, warmup: u64) -> Self {
+        assert!(dim > 0 && delta >= 0.0 && lambda > 0.0);
+        PageHinkleyDetector {
+            dim,
+            alpha: 0.005,
+            delta,
+            lambda,
+            mean: vec![0.0; dim],
+            stat_mean: 0.0,
+            m_t: 0.0,
+            m_min: 0.0,
+            t: 0,
+            warmup,
+            events: 0,
+        }
+    }
+
+    fn rearm(&mut self) {
+        self.m_t = 0.0;
+        self.m_min = 0.0;
+        self.stat_mean = 0.0;
+        self.t = 0;
+        self.mean.iter_mut().for_each(|m| *m = 0.0);
+    }
+}
+
+impl DriftDetector for PageHinkleyDetector {
+    fn observe(&mut self, item: &[f32]) -> bool {
+        debug_assert_eq!(item.len(), self.dim);
+        self.t += 1;
+        // Monitored statistic: distance of the item to the running mean.
+        let mut d2 = 0.0;
+        for (m, &x) in self.mean.iter().zip(item) {
+            let diff = x as f64 - m;
+            d2 += diff * diff;
+        }
+        let stat = d2.sqrt();
+        // Update running structures (EWMA mean vector; CMA statistic mean).
+        for (m, &x) in self.mean.iter_mut().zip(item) {
+            *m += self.alpha * (x as f64 - *m);
+        }
+        let t = self.t as f64;
+        self.stat_mean += (stat - self.stat_mean) / t;
+
+        if self.t <= self.warmup {
+            return false;
+        }
+        // PH accumulation.
+        self.m_t += stat - self.stat_mean - self.delta;
+        if self.m_t < self.m_min {
+            self.m_min = self.m_t;
+        }
+        if self.m_t - self.m_min > self.lambda {
+            self.events += 1;
+            self.rearm();
+            return true;
+        }
+        false
+    }
+
+    fn events(&self) -> usize {
+        self.events
+    }
+
+    fn reset(&mut self) {
+        self.events = 0;
+        self.rearm();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn feed(det: &mut PageHinkleyDetector, rng: &mut Rng, mean: f64, n: usize, d: usize) {
+        for _ in 0..n {
+            let item: Vec<f32> = (0..d).map(|_| (mean + rng.normal()) as f32).collect();
+            det.observe(&item);
+        }
+    }
+
+    #[test]
+    fn quiet_on_stationary_stream() {
+        let d = 8;
+        let mut det = PageHinkleyDetector::new(d, 0.05, 80.0, 200);
+        let mut rng = Rng::seed_from(1);
+        feed(&mut det, &mut rng, 0.0, 5000, d);
+        assert_eq!(det.events(), 0);
+    }
+
+    #[test]
+    fn fires_on_level_shift() {
+        let d = 8;
+        let mut det = PageHinkleyDetector::new(d, 0.05, 80.0, 200);
+        let mut rng = Rng::seed_from(2);
+        feed(&mut det, &mut rng, 0.0, 1000, d);
+        feed(&mut det, &mut rng, 4.0, 1500, d);
+        assert!(det.events() >= 1, "4-sigma level shift must alarm");
+    }
+
+    #[test]
+    fn rearms_and_adapts() {
+        let d = 6;
+        let mut det = PageHinkleyDetector::new(d, 0.05, 60.0, 150);
+        let mut rng = Rng::seed_from(3);
+        feed(&mut det, &mut rng, 0.0, 800, d);
+        feed(&mut det, &mut rng, 5.0, 800, d);
+        let e = det.events();
+        assert!(e >= 1);
+        // After settling into the new regime, no runaway alarms.
+        feed(&mut det, &mut rng, 5.0, 4000, d);
+        assert!(det.events() <= e + 2, "detector must adapt: {} alarms", det.events());
+    }
+
+    #[test]
+    fn warmup_suppresses_early_alarms() {
+        let d = 4;
+        let mut det = PageHinkleyDetector::new(d, 0.0, 1.0, 1_000_000);
+        let mut rng = Rng::seed_from(4);
+        feed(&mut det, &mut rng, 0.0, 500, d);
+        feed(&mut det, &mut rng, 100.0, 500, d);
+        assert_eq!(det.events(), 0, "warmup must gate the test");
+    }
+}

@@ -1,0 +1,256 @@
+//! The streaming pipeline: source → bounded channel → selection worker.
+//!
+//! The source runs on its own thread (sources are `Send`); items flow
+//! through a `sync_channel` whose bound provides **backpressure** — if the
+//! selection worker falls behind, the producer blocks instead of buffering
+//! unboundedly. The consumer side runs the (non-`Send`) algorithm on the
+//! calling thread, interleaving drift detection, periodic checkpointing and
+//! throughput accounting.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::time::Instant;
+
+use crate::algorithms::StreamingAlgorithm;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::drift::DriftDetector;
+use crate::data::StreamSource;
+
+/// Pipeline tuning knobs.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Bounded channel capacity (items) — the backpressure window.
+    pub channel_capacity: usize,
+    /// Checkpoint the summary every this many items (0 = never).
+    pub checkpoint_every: u64,
+    /// Checkpoint path (required if checkpoint_every > 0).
+    pub checkpoint_path: Option<PathBuf>,
+    /// On drift: reset the algorithm and start a fresh summary.
+    pub reselect_on_drift: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            channel_capacity: 1024,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            reselect_on_drift: true,
+        }
+    }
+}
+
+/// End-of-run report.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub items: u64,
+    pub drift_events: usize,
+    pub reselections: usize,
+    pub checkpoints_written: usize,
+    pub wall_seconds: f64,
+    /// Items/second over the whole run.
+    pub throughput: f64,
+    /// Producer-side blocked sends (backpressure engagements).
+    pub backpressure_hits: u64,
+    pub final_value: f64,
+    pub final_summary_len: usize,
+}
+
+/// Orchestrates one stream through one algorithm.
+pub struct StreamPipeline {
+    cfg: PipelineConfig,
+}
+
+impl StreamPipeline {
+    pub fn new(cfg: PipelineConfig) -> Self {
+        StreamPipeline { cfg }
+    }
+
+    /// Run `source` to exhaustion through `algo`.
+    ///
+    /// The drift detector observes every item *before* it reaches the
+    /// algorithm; when it fires (and `reselect_on_drift` is set) the current
+    /// summary is checkpointed as an epoch artifact and the algorithm is
+    /// reset — the paper's prescribed deployment for ThreeSieves under
+    /// non-iid streams.
+    pub fn run(
+        &self,
+        mut source: Box<dyn StreamSource>,
+        algo: &mut dyn StreamingAlgorithm,
+        drift: &mut dyn DriftDetector,
+    ) -> std::io::Result<PipelineReport> {
+        let dim = source.dim();
+        assert_eq!(dim, algo.dim(), "source dim {} != algorithm dim {}", dim, algo.dim());
+        let (tx, rx): (SyncSender<Vec<f32>>, Receiver<Vec<f32>>) =
+            sync_channel(self.cfg.channel_capacity.max(1));
+
+        // Producer thread: pull from the source, push into the channel.
+        // try_send-then-send so we can count backpressure engagements.
+        let producer = std::thread::spawn(move || -> u64 {
+            let mut hits = 0u64;
+            let mut buf = vec![0.0f32; dim];
+            while source.next_into(&mut buf) {
+                match tx.try_send(buf.clone()) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(item)) => {
+                        hits += 1;
+                        if tx.send(item).is_err() {
+                            break; // consumer gone
+                        }
+                    }
+                    Err(TrySendError::Disconnected(_)) => break,
+                }
+            }
+            hits
+        });
+
+        let start = Instant::now();
+        let mut items = 0u64;
+        let mut reselections = 0usize;
+        let mut checkpoints = 0usize;
+        for item in rx.iter() {
+            items += 1;
+            if drift.observe(&item) && self.cfg.reselect_on_drift {
+                // Epoch boundary: persist the outgoing summary, then restart.
+                if let Some(path) = &self.cfg.checkpoint_path {
+                    let epoch_path =
+                        path.with_extension(format!("epoch{}.ckpt", drift.events()));
+                    self.write_checkpoint(algo, drift, items, &epoch_path)?;
+                    checkpoints += 1;
+                }
+                algo.reset();
+                reselections += 1;
+            }
+            algo.process(&item);
+            if self.cfg.checkpoint_every > 0 && items % self.cfg.checkpoint_every == 0 {
+                if let Some(path) = &self.cfg.checkpoint_path {
+                    self.write_checkpoint(algo, drift, items, path)?;
+                    checkpoints += 1;
+                }
+            }
+        }
+        algo.finalize();
+        let backpressure_hits = producer.join().unwrap_or(0);
+        let wall = start.elapsed().as_secs_f64();
+
+        if let Some(path) = &self.cfg.checkpoint_path {
+            self.write_checkpoint(algo, drift, items, path)?;
+            checkpoints += 1;
+        }
+
+        Ok(PipelineReport {
+            items,
+            drift_events: drift.events(),
+            reselections,
+            checkpoints_written: checkpoints,
+            wall_seconds: wall,
+            throughput: if wall > 0.0 { items as f64 / wall } else { 0.0 },
+            backpressure_hits,
+            final_value: algo.value(),
+            final_summary_len: algo.summary_len(),
+        })
+    }
+
+    fn write_checkpoint(
+        &self,
+        algo: &dyn StreamingAlgorithm,
+        drift: &dyn DriftDetector,
+        items: u64,
+        path: &std::path::Path,
+    ) -> std::io::Result<()> {
+        let ck = Checkpoint {
+            algorithm: algo.name(),
+            dim: algo.dim(),
+            k: algo.k(),
+            value: algo.value(),
+            elements: items,
+            drift_events: drift.events(),
+            summary: algo.summary(),
+        };
+        ck.save(path).map_err(|e| std::io::Error::other(e.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::three_sieves::SieveTuning;
+    use crate::algorithms::ThreeSieves;
+    use crate::coordinator::drift::{MeanShiftDetector, NoDrift};
+    use crate::data::registry;
+    use crate::functions::{LogDetConfig, NativeLogDet};
+
+    fn algo(dim: usize, k: usize) -> ThreeSieves {
+        let f = NativeLogDet::new(LogDetConfig::for_streaming(dim, k));
+        ThreeSieves::new(Box::new(f), k, 0.01, SieveTuning::FixedT(100))
+    }
+
+    #[test]
+    fn pipeline_consumes_whole_stream() {
+        let src = registry::source("fact-highlevel-like", 800, 1).unwrap();
+        let mut a = algo(16, 6);
+        let mut det = NoDrift::default();
+        let report = StreamPipeline::new(PipelineConfig::default())
+            .run(src, &mut a, &mut det)
+            .unwrap();
+        assert_eq!(report.items, 800);
+        assert_eq!(report.drift_events, 0);
+        assert!(report.final_value > 0.0);
+        assert!(report.throughput > 0.0);
+    }
+
+    #[test]
+    fn tiny_channel_engages_backpressure() {
+        let src = registry::source("fact-highlevel-like", 2000, 2).unwrap();
+        let mut a = algo(16, 6);
+        let mut det = NoDrift::default();
+        let cfg = PipelineConfig { channel_capacity: 1, ..Default::default() };
+        let report = StreamPipeline::new(cfg).run(src, &mut a, &mut det).unwrap();
+        assert_eq!(report.items, 2000);
+        assert!(report.backpressure_hits > 0, "capacity-1 channel must block");
+    }
+
+    #[test]
+    fn drift_triggers_reselection() {
+        // stream51-like: class-incremental jumps should fire the detector.
+        let src = registry::source("stream51-like", 3000, 3).unwrap();
+        let mut a = algo(64, 8);
+        let mut det = MeanShiftDetector::new(64, 100, 3.0);
+        let report = StreamPipeline::new(PipelineConfig::default())
+            .run(src, &mut a, &mut det)
+            .unwrap();
+        assert!(report.drift_events > 0, "class-incremental stream must drift");
+        assert_eq!(report.reselections, report.drift_events);
+    }
+
+    #[test]
+    fn checkpoints_are_written_and_loadable() {
+        let dir = std::env::temp_dir().join(format!("ts_pipe_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("summary.ckpt");
+        let src = registry::source("fact-highlevel-like", 500, 4).unwrap();
+        let mut a = algo(16, 5);
+        let mut det = NoDrift::default();
+        let cfg = PipelineConfig {
+            checkpoint_every: 200,
+            checkpoint_path: Some(ckpt.clone()),
+            ..Default::default()
+        };
+        let report = StreamPipeline::new(cfg).run(src, &mut a, &mut det).unwrap();
+        assert!(report.checkpoints_written >= 3); // 200, 400, final
+        let ck = Checkpoint::load(&ckpt).unwrap();
+        assert_eq!(ck.dim, 16);
+        assert_eq!(ck.elements, 500);
+        assert_eq!(ck.summary_len(), a.summary_len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "source dim")]
+    fn dim_mismatch_is_rejected() {
+        let src = registry::source("fact-highlevel-like", 10, 5).unwrap();
+        let mut a = algo(8, 3); // wrong dim
+        let mut det = NoDrift::default();
+        let _ = StreamPipeline::new(PipelineConfig::default()).run(src, &mut a, &mut det);
+    }
+}

@@ -1,0 +1,173 @@
+//! Multi-algorithm race: run several selection algorithms over the *same*
+//! stream concurrently, one worker thread each, and collect a comparative
+//! report. This is the coordinator behind the figure sweeps when
+//! `TS_PARALLEL` is set, and a deployment tool in its own right (e.g. run
+//! ThreeSieves with several `T` values live and serve the best summary).
+//!
+//! Algorithms are not `Send` (the PJRT oracle is Rc-based), so workers
+//! receive *factory closures* and construct their algorithm on-thread. The
+//! stream is fanned out by a broadcaster thread through one bounded channel
+//! per worker (slowest worker applies backpressure to the source, keeping
+//! every algorithm on the identical stream prefix).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::Instant;
+
+use crate::algorithms::StreamingAlgorithm;
+use crate::data::StreamSource;
+use crate::metrics::AlgoStats;
+
+/// Result of one lane of the race.
+#[derive(Clone, Debug)]
+pub struct LaneReport {
+    pub name: String,
+    pub value: f64,
+    pub summary: Vec<f32>,
+    pub summary_len: usize,
+    pub stats: AlgoStats,
+    pub wall_seconds: f64,
+}
+
+/// Factory that builds an algorithm on the worker thread.
+pub type AlgoFactory = Box<dyn FnOnce() -> Box<dyn StreamingAlgorithm> + Send>;
+
+/// Race configuration.
+pub struct RaceConfig {
+    /// Per-lane channel capacity (backpressure window).
+    pub channel_capacity: usize,
+}
+
+impl Default for RaceConfig {
+    fn default() -> Self {
+        RaceConfig { channel_capacity: 4096 }
+    }
+}
+
+/// Fan one stream out to N algorithms, each on its own thread.
+pub fn race(
+    mut source: Box<dyn StreamSource>,
+    factories: Vec<(String, AlgoFactory)>,
+    cfg: RaceConfig,
+) -> Vec<LaneReport> {
+    assert!(!factories.is_empty(), "race needs at least one lane");
+    let dim = source.dim();
+
+    let mut senders: Vec<SyncSender<Vec<f32>>> = Vec::with_capacity(factories.len());
+    let mut handles = Vec::with_capacity(factories.len());
+    for (label, factory) in factories {
+        let (tx, rx): (SyncSender<Vec<f32>>, Receiver<Vec<f32>>) =
+            sync_channel(cfg.channel_capacity.max(1));
+        senders.push(tx);
+        handles.push(std::thread::spawn(move || -> LaneReport {
+            let mut algo = factory();
+            assert_eq!(algo.dim(), dim, "lane {label}: dim mismatch");
+            let start = Instant::now();
+            for item in rx.iter() {
+                algo.process(&item);
+            }
+            algo.finalize();
+            LaneReport {
+                name: if label.is_empty() { algo.name() } else { label },
+                value: algo.value(),
+                summary: algo.summary(),
+                summary_len: algo.summary_len(),
+                stats: algo.stats(),
+                wall_seconds: start.elapsed().as_secs_f64(),
+            }
+        }));
+    }
+
+    // Broadcast loop: one allocation per item, cloned per lane.
+    let mut buf = vec![0.0f32; dim];
+    while source.next_into(&mut buf) {
+        for tx in &senders {
+            if tx.send(buf.clone()).is_err() {
+                // A worker panicked; drop out, join below will surface it.
+                break;
+            }
+        }
+    }
+    drop(senders);
+
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("race worker panicked"))
+        .collect()
+}
+
+/// Pick the winning lane by value.
+pub fn winner(reports: &[LaneReport]) -> &LaneReport {
+    reports
+        .iter()
+        .max_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
+        .expect("non-empty race")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::three_sieves::SieveTuning;
+    use crate::algorithms::{RandomReservoir, ThreeSieves};
+    use crate::data::registry;
+    use crate::functions::{LogDetConfig, NativeLogDet};
+
+    fn ts_factory(dim: usize, k: usize, t: usize) -> AlgoFactory {
+        Box::new(move || {
+            let f = NativeLogDet::new(LogDetConfig::for_streaming(dim, k));
+            Box::new(ThreeSieves::new(Box::new(f), k, 0.01, SieveTuning::FixedT(t)))
+        })
+    }
+
+    #[test]
+    fn all_lanes_see_the_full_stream() {
+        let src = registry::source("fact-highlevel-like", 1500, 1).unwrap();
+        let lanes = vec![
+            ("t50".to_string(), ts_factory(16, 6, 50)),
+            ("t200".to_string(), ts_factory(16, 6, 200)),
+            (
+                "random".to_string(),
+                Box::new(move || {
+                    let f = NativeLogDet::new(LogDetConfig::for_streaming(16, 6));
+                    Box::new(RandomReservoir::new(Box::new(f), 6, 3))
+                        as Box<dyn StreamingAlgorithm>
+                }) as AlgoFactory,
+            ),
+        ];
+        let reports = race(src, lanes, RaceConfig::default());
+        assert_eq!(reports.len(), 3);
+        for r in &reports {
+            assert_eq!(r.stats.elements, 1500, "lane {} missed items", r.name);
+            assert!(r.value > 0.0);
+        }
+        let w = winner(&reports);
+        assert!(reports.iter().all(|r| r.value <= w.value));
+    }
+
+    #[test]
+    fn lanes_are_isolated() {
+        // Identical factories => identical results (no cross-lane state).
+        let src = registry::source("fact-highlevel-like", 800, 2).unwrap();
+        let lanes = vec![
+            ("a".to_string(), ts_factory(16, 5, 100)),
+            ("b".to_string(), ts_factory(16, 5, 100)),
+        ];
+        let reports = race(src, lanes, RaceConfig::default());
+        assert_eq!(reports[0].value, reports[1].value);
+        assert_eq!(reports[0].summary, reports[1].summary);
+    }
+
+    #[test]
+    fn tiny_channel_still_completes() {
+        let src = registry::source("fact-highlevel-like", 1000, 3).unwrap();
+        let lanes = vec![("t".to_string(), ts_factory(16, 4, 50))];
+        let reports = race(src, lanes, RaceConfig { channel_capacity: 1 });
+        assert_eq!(reports[0].stats.elements, 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "race needs at least one lane")]
+    fn empty_race_rejected() {
+        let src = registry::source("fact-highlevel-like", 10, 4).unwrap();
+        race(src, Vec::new(), RaceConfig::default());
+    }
+}

@@ -1,0 +1,262 @@
+//! Threshold-sharded ThreeSieves — the paper's scale-out note made real:
+//! "If more memory is available, one may improve the performance of
+//! ThreeSieves by running multiple instances of ThreeSieves in parallel on
+//! different sets of thresholds" (§3).
+//!
+//! The geometric grid `O` is split into `shards` contiguous partitions;
+//! each shard runs an independent ThreeSieves restricted to its partition
+//! (starting at that partition's top threshold). The output is the best
+//! shard's summary. Memory grows to `shards × K`, queries to `shards` per
+//! element; the coarse shards converge down their partitions faster than a
+//! single instance walks the whole grid, improving small-T robustness.
+
+use crate::algorithms::three_sieves::SieveTuning;
+use crate::algorithms::{sieve_threshold, StreamingAlgorithm};
+use crate::functions::SubmodularFunction;
+use crate::metrics::AlgoStats;
+use crate::util::mathx::threshold_grid;
+
+/// One shard: a threshold partition walked top-down, ThreeSieves-style.
+struct Shard {
+    grid: Vec<f64>, // ascending; active popped from the back
+    v: f64,
+    t: usize,
+    oracle: Box<dyn SubmodularFunction>,
+}
+
+impl Shard {
+    fn new(mut grid: Vec<f64>, proto: &dyn SubmodularFunction) -> Self {
+        let v = grid.pop().expect("non-empty shard partition");
+        Shard { grid, v, t: 0, oracle: proto.clone_empty() }
+    }
+
+    fn process(&mut self, item: &[f32], k: usize, t_budget: usize) {
+        let len = self.oracle.len();
+        if len >= k {
+            return;
+        }
+        let thresh = sieve_threshold(self.v, self.oracle.current_value(), k, len);
+        let gain = self.oracle.peek_gain(item);
+        if gain >= thresh {
+            self.oracle.accept(item);
+            self.t = 0;
+        } else {
+            self.t += 1;
+            if self.t >= t_budget {
+                self.t = 0;
+                if let Some(v) = self.grid.pop() {
+                    self.v = v;
+                }
+            }
+        }
+    }
+}
+
+/// Parallel-threshold ThreeSieves.
+pub struct ShardedThreeSieves {
+    shards: Vec<Shard>,
+    k: usize,
+    epsilon: f64,
+    t_budget: usize,
+    dim: usize,
+    elements: u64,
+    peak_stored: usize,
+}
+
+impl ShardedThreeSieves {
+    pub fn new(
+        proto: Box<dyn SubmodularFunction>,
+        k: usize,
+        epsilon: f64,
+        tuning: SieveTuning,
+        shards: usize,
+    ) -> Self {
+        assert!(k > 0 && epsilon > 0.0 && shards > 0);
+        let m = proto.max_singleton_value();
+        let grid = threshold_grid(epsilon, m, k as f64 * m);
+        assert!(!grid.is_empty(), "empty threshold grid");
+        let shards_n = shards.min(grid.len());
+        let chunk = grid.len().div_ceil(shards_n);
+        let shard_vec: Vec<Shard> = grid
+            .chunks(chunk)
+            .map(|part| Shard::new(part.to_vec(), proto.as_ref()))
+            .collect();
+        ShardedThreeSieves {
+            shards: shard_vec,
+            k,
+            epsilon,
+            t_budget: tuning.t(),
+            dim: proto.dim(),
+            elements: 0,
+            peak_stored: 0,
+        }
+    }
+
+    fn best(&self) -> &Shard {
+        self.shards
+            .iter()
+            .max_by(|a, b| {
+                a.oracle.current_value().partial_cmp(&b.oracle.current_value()).unwrap()
+            })
+            .expect("at least one shard")
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+impl StreamingAlgorithm for ShardedThreeSieves {
+    fn name(&self) -> String {
+        format!("ShardedThreeSieves(p={},T={})", self.shards.len(), self.t_budget)
+    }
+
+    fn process(&mut self, item: &[f32]) {
+        self.elements += 1;
+        for s in self.shards.iter_mut() {
+            s.process(item, self.k, self.t_budget);
+        }
+        let stored: usize = self.shards.iter().map(|s| s.oracle.len()).sum();
+        if stored > self.peak_stored {
+            self.peak_stored = stored;
+        }
+    }
+
+    fn value(&self) -> f64 {
+        self.best().oracle.current_value()
+    }
+
+    fn summary(&self) -> Vec<f32> {
+        self.best().oracle.summary().to_vec()
+    }
+
+    fn summary_len(&self) -> usize {
+        self.best().oracle.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn stats(&self) -> AlgoStats {
+        let stored: usize = self.shards.iter().map(|s| s.oracle.len()).sum();
+        AlgoStats {
+            queries: self.shards.iter().map(|s| s.oracle.queries()).sum(),
+            elements: self.elements,
+            stored,
+            peak_stored: self.peak_stored.max(stored),
+            instances: self.shards.len(),
+        }
+    }
+
+    fn reset(&mut self) {
+        // Rebuild the pristine grid partitioning from the stored config.
+        let proto = self.shards[0].oracle.clone_empty();
+        let m = proto.max_singleton_value();
+        let grid = threshold_grid(self.epsilon, m, self.k as f64 * m);
+        let shards_n = self.shards.len();
+        let chunk = grid.len().div_ceil(shards_n).max(1);
+        self.shards =
+            grid.chunks(chunk).map(|part| Shard::new(part.to_vec(), proto.as_ref())).collect();
+        self.elements = 0;
+        self.peak_stored = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testkit;
+    use crate::algorithms::ThreeSieves;
+
+    #[test]
+    fn covers_the_full_grid() {
+        let algo = ShardedThreeSieves::new(
+            testkit::oracle(10),
+            10,
+            0.1,
+            SieveTuning::FixedT(100),
+            4,
+        );
+        assert_eq!(algo.shard_count(), 4);
+    }
+
+    #[test]
+    fn never_worse_than_single_instance_with_small_t() {
+        // With a small T the single instance can race past good thresholds;
+        // sharding starts lower partitions immediately.
+        let ds = testkit::clustered(2500, 7);
+        let k = 8;
+        let t = 30;
+        let mut single =
+            ThreeSieves::new(testkit::oracle(k), k, 0.01, SieveTuning::FixedT(t));
+        let mut sharded = ShardedThreeSieves::new(
+            testkit::oracle(k),
+            k,
+            0.01,
+            SieveTuning::FixedT(t),
+            4,
+        );
+        testkit::run(&mut single, &ds);
+        testkit::run(&mut sharded, &ds);
+        assert!(
+            sharded.value() >= single.value() * 0.98,
+            "sharded {} vs single {}",
+            sharded.value(),
+            single.value()
+        );
+    }
+
+    #[test]
+    fn memory_scales_with_shards() {
+        let ds = testkit::clustered(1000, 8);
+        let k = 5;
+        let mut algo = ShardedThreeSieves::new(
+            testkit::oracle(k),
+            k,
+            0.05,
+            SieveTuning::FixedT(20),
+            3,
+        );
+        testkit::run(&mut algo, &ds);
+        let st = algo.stats();
+        assert!(st.peak_stored <= 3 * k);
+        assert_eq!(st.instances, 3);
+    }
+
+    #[test]
+    fn more_shards_than_grid_points_is_clamped() {
+        let algo = ShardedThreeSieves::new(
+            testkit::oracle(3),
+            3,
+            0.5, // coarse grid -> few points
+            SieveTuning::FixedT(10),
+            1000,
+        );
+        assert!(algo.shard_count() <= 1000);
+        assert!(algo.shard_count() >= 1);
+    }
+
+    #[test]
+    fn reset_preserves_shard_count() {
+        let ds = testkit::clustered(500, 9);
+        let mut algo = ShardedThreeSieves::new(
+            testkit::oracle(5),
+            5,
+            0.05,
+            SieveTuning::FixedT(25),
+            3,
+        );
+        testkit::run(&mut algo, &ds);
+        let n = algo.shard_count();
+        algo.reset();
+        assert_eq!(algo.shard_count(), n);
+        assert_eq!(algo.summary_len(), 0);
+        testkit::run(&mut algo, &ds);
+        assert!(algo.value() > 0.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! File-backed dataset loaders: CSV (headerless, numeric) and a raw binary
+//! f32 format (`.f32bin`: u32 LE dim, then row-major little-endian f32s).
+//! These let downstream users feed real corpora into the same harness.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use crate::data::Dataset;
+
+/// Errors from dataset loading.
+#[derive(Debug, thiserror::Error)]
+pub enum LoadError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("inconsistent row width at line {line}: got {got}, expected {expected}")]
+    Ragged { line: usize, got: usize, expected: usize },
+    #[error("empty dataset")]
+    Empty,
+    #[error("corrupt binary file: {0}")]
+    Corrupt(String),
+}
+
+/// Load a headerless numeric CSV. Empty lines and `#` comments are skipped.
+pub fn load_csv(path: &Path) -> Result<Dataset, LoadError> {
+    let file = std::fs::File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut rows: Vec<f32> = Vec::new();
+    let mut dim = 0usize;
+    let mut n = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let mut width = 0usize;
+        for tok in trimmed.split(',') {
+            let v: f32 = tok.trim().parse().map_err(|e| LoadError::Parse {
+                line: lineno + 1,
+                msg: format!("{tok:?}: {e}"),
+            })?;
+            rows.push(v);
+            width += 1;
+        }
+        if dim == 0 {
+            dim = width;
+        } else if width != dim {
+            return Err(LoadError::Ragged { line: lineno + 1, got: width, expected: dim });
+        }
+        n += 1;
+    }
+    if n == 0 {
+        return Err(LoadError::Empty);
+    }
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("csv").to_string();
+    Ok(Dataset::new(name, dim, rows))
+}
+
+/// Write the `.f32bin` format.
+pub fn save_f32bin(ds: &Dataset, path: &Path) -> Result<(), LoadError> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&(ds.dim() as u32).to_le_bytes())?;
+    for v in ds.raw() {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load the `.f32bin` format.
+pub fn load_f32bin(path: &Path) -> Result<Dataset, LoadError> {
+    let mut f = std::fs::File::open(path)?;
+    let mut hdr = [0u8; 4];
+    f.read_exact(&mut hdr).map_err(|_| LoadError::Corrupt("missing header".into()))?;
+    let dim = u32::from_le_bytes(hdr) as usize;
+    if dim == 0 {
+        return Err(LoadError::Corrupt("dim = 0".into()));
+    }
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    if bytes.len() % 4 != 0 {
+        return Err(LoadError::Corrupt("payload not a multiple of 4 bytes".into()));
+    }
+    let count = bytes.len() / 4;
+    if count % dim != 0 {
+        return Err(LoadError::Corrupt(format!("{count} floats not divisible by dim {dim}")));
+    }
+    if count == 0 {
+        return Err(LoadError::Empty);
+    }
+    let mut rows = Vec::with_capacity(count);
+    for chunk in bytes.chunks_exact(4) {
+        rows.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("bin").to_string();
+    Ok(Dataset::new(name, dim, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ts_loader_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = tmpdir();
+        let p = dir.join("a.csv");
+        std::fs::write(&p, "# comment\n1.0, 2.0\n3.5,-4.5\n\n").unwrap();
+        let ds = load_csv(&p).unwrap();
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.row(1), &[3.5, -4.5]);
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let dir = tmpdir();
+        let p = dir.join("r.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        match load_csv(&p) {
+            Err(LoadError::Ragged { line: 2, got: 1, expected: 2 }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        let dir = tmpdir();
+        let p = dir.join("g.csv");
+        std::fs::write(&p, "1,notanumber\n").unwrap();
+        assert!(matches!(load_csv(&p), Err(LoadError::Parse { .. })));
+    }
+
+    #[test]
+    fn csv_rejects_empty() {
+        let dir = tmpdir();
+        let p = dir.join("e.csv");
+        std::fs::write(&p, "# nothing\n").unwrap();
+        assert!(matches!(load_csv(&p), Err(LoadError::Empty)));
+    }
+
+    #[test]
+    fn f32bin_roundtrip() {
+        let dir = tmpdir();
+        let p = dir.join("a.f32bin");
+        let ds = Dataset::new("x", 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        save_f32bin(&ds, &p).unwrap();
+        let back = load_f32bin(&p).unwrap();
+        assert_eq!(back.dim(), 3);
+        assert_eq!(back.raw(), ds.raw());
+    }
+
+    #[test]
+    fn f32bin_detects_corruption() {
+        let dir = tmpdir();
+        let p = dir.join("c.f32bin");
+        std::fs::write(&p, [2u8, 0, 0, 0, 1, 2, 3]).unwrap(); // 3 payload bytes
+        assert!(matches!(load_f32bin(&p), Err(LoadError::Corrupt(_))));
+        let p2 = dir.join("c2.f32bin");
+        std::fs::write(&p2, [0u8, 0, 0, 0]).unwrap(); // dim = 0
+        assert!(matches!(load_f32bin(&p2), Err(LoadError::Corrupt(_))));
+    }
+}

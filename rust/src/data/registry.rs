@@ -1,0 +1,221 @@
+//! Named dataset surrogates mirroring the paper's Table 2.
+//!
+//! Each entry reproduces the *dimensionality* and the stream-structure
+//! characteristics of the paper's dataset (see DESIGN.md §3); sizes are
+//! scaled to keep single-machine experiment sweeps tractable — pass a
+//! larger `n` to scale up.
+
+use crate::data::synthetic::{
+    ClassIncrementalSource, Mixture, MixtureSource, RandomWalkDriftSource,
+};
+use crate::data::{Dataset, StreamSource};
+use crate::util::rng::Rng;
+
+/// Descriptor of one surrogate (printed by `experiment datasets` → Table 2).
+#[derive(Clone, Debug)]
+pub struct DatasetInfo {
+    pub name: &'static str,
+    pub paper_name: &'static str,
+    pub paper_size: usize,
+    pub dim: usize,
+    pub drift: &'static str,
+}
+
+/// The registry, in the paper's Table 2 order.
+pub const REGISTRY: &[DatasetInfo] = &[
+    DatasetInfo {
+        name: "forestcover-like",
+        paper_name: "ForestCover",
+        paper_size: 286_048,
+        dim: 10,
+        drift: "none (iid)",
+    },
+    DatasetInfo {
+        name: "creditfraud-like",
+        paper_name: "Creditfraud",
+        paper_size: 284_807,
+        dim: 29,
+        drift: "none (iid, rare-cluster skew)",
+    },
+    DatasetInfo {
+        name: "fact-highlevel-like",
+        paper_name: "FACT Highlevel",
+        paper_size: 200_000,
+        dim: 16,
+        drift: "none (iid)",
+    },
+    DatasetInfo {
+        name: "fact-lowlevel-like",
+        paper_name: "FACT Lowlevel",
+        paper_size: 200_000,
+        dim: 256,
+        drift: "none (iid)",
+    },
+    DatasetInfo {
+        name: "kddcup-like",
+        paper_name: "KDDCup99",
+        paper_size: 60_632,
+        dim: 41,
+        drift: "none (iid, heavy skew)",
+    },
+    DatasetInfo {
+        name: "stream51-like",
+        paper_name: "stream51",
+        paper_size: 150_736,
+        dim: 64, // paper: 2048-dim CNN embeddings; scaled for runtime
+        drift: "class-incremental + AR(1) frames",
+    },
+    DatasetInfo {
+        name: "abc-like",
+        paper_name: "abc",
+        paper_size: 1_186_018,
+        dim: 50, // paper: 300-dim GloVe; scaled
+        drift: "gradual (random-walk topics)",
+    },
+    DatasetInfo {
+        name: "examiner-like",
+        paper_name: "examiner",
+        paper_size: 3_089_781,
+        dim: 50,
+        drift: "gradual (random-walk topics)",
+    },
+];
+
+/// Look up a surrogate descriptor.
+pub fn info(name: &str) -> Option<&'static DatasetInfo> {
+    REGISTRY.iter().find(|i| i.name == name)
+}
+
+/// All surrogate names.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|i| i.name).collect()
+}
+
+/// Mixture calibrated against the paper's RBF length scales.
+///
+/// The paper's gammas are huge for z-scored data (`γ = 2d` batch, `d/2`
+/// streaming); between independent points `‖x−y‖² ≈ 2d`, so the kernel
+/// vanishes and the log-det saturates at `K·m` for *any* diverse set —
+/// no algorithm could be distinguished. Real corpora avoid this because
+/// they are full of near-duplicates (video frames, repeated headlines,
+/// background events). We reproduce that: unit per-dim variance overall
+/// (normalization is then ~identity), with the *within-cluster* variance
+/// share `σ²_n = κ/(2d²)` so the within-cluster kernel is `exp(−2κ)`
+/// under the batch gamma and `exp(−κ/2)` under the streaming gamma.
+/// κ ≈ 1 ⇒ same-cluster items are visibly related, cross-cluster items
+/// are orthogonal — summarization = cover the clusters, which is the
+/// regime where the paper's relative orderings emerge.
+fn calibrated(d: usize, clusters: usize, kappa: f64, rng: &mut Rng) -> Mixture {
+    let sigma2n = (kappa / (2.0 * (d * d) as f64)).min(0.5);
+    let noise = sigma2n.sqrt();
+    let spread = (d as f64 * (1.0 - sigma2n)).sqrt();
+    Mixture::random(d, clusters, spread, noise, rng)
+}
+
+/// Build the stream source for a surrogate.
+pub fn source(name: &str, n: usize, seed: u64) -> Option<Box<dyn StreamSource>> {
+    let mut rng = Rng::seed_from(seed ^ 0xD5A7_A5E7_0000 ^ fxhash(name));
+    Some(match name {
+        "forestcover-like" => {
+            let mix = calibrated(10, 60, 0.25, &mut rng);
+            Box::new(MixtureSource::new(mix, n, seed))
+        }
+        "creditfraud-like" => {
+            // Dominant "legit" clusters + rare fraud clusters (heavy skew).
+            let mix = calibrated(29, 45, 0.25, &mut rng).with_skew(0.92);
+            Box::new(MixtureSource::new(mix, n, seed))
+        }
+        "fact-highlevel-like" => {
+            let mix = calibrated(16, 80, 0.25, &mut rng);
+            Box::new(MixtureSource::new(mix, n, seed))
+        }
+        "fact-lowlevel-like" => {
+            let mix = calibrated(256, 64, 0.5, &mut rng);
+            Box::new(MixtureSource::new(mix, n, seed))
+        }
+        "kddcup-like" => {
+            let mix = calibrated(41, 70, 0.25, &mut rng).with_skew(0.9);
+            Box::new(MixtureSource::new(mix, n, seed))
+        }
+        "stream51-like" => {
+            // 51 classes as in the paper, appearing segment by segment with
+            // AR(1)-correlated frames.
+            let clusters = 51;
+            let mix = calibrated(64, clusters, 1.0, &mut rng);
+            let seg = (n / clusters).max(1);
+            Box::new(ClassIncrementalSource::new(mix, n, seg, 0.7, seed))
+        }
+        "abc-like" => {
+            let mix = calibrated(50, 40, 0.25, &mut rng);
+            Box::new(RandomWalkDriftSource::new(mix, n, 0.001, seed))
+        }
+        "examiner-like" => {
+            let mix = calibrated(50, 30, 0.25, &mut rng);
+            Box::new(RandomWalkDriftSource::new(mix, n, 0.002, seed))
+        }
+        _ => return None,
+    })
+}
+
+/// Materialize a surrogate as a normalized in-memory dataset.
+pub fn get(name: &str, n: usize, seed: u64) -> Option<Dataset> {
+    let mut src = source(name, n, seed)?;
+    let mut ds = src.materialize(name, n);
+    ds.normalize();
+    Some(ds)
+}
+
+/// Tiny stable string hash for seed mixing.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_paper_table2() {
+        assert_eq!(REGISTRY.len(), 8);
+        assert_eq!(info("forestcover-like").unwrap().dim, 10);
+        assert_eq!(info("creditfraud-like").unwrap().dim, 29);
+        assert_eq!(info("kddcup-like").unwrap().dim, 41);
+    }
+
+    #[test]
+    fn all_registered_sources_build() {
+        for i in REGISTRY {
+            let ds = get(i.name, 100, 1).unwrap_or_else(|| panic!("{} failed", i.name));
+            assert_eq!(ds.len(), 100, "{}", i.name);
+            assert_eq!(ds.dim(), i.dim, "{}", i.name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_returns_none() {
+        assert!(get("nope", 10, 1).is_none());
+        assert!(source("nope", 10, 1).is_none());
+        assert!(info("nope").is_none());
+    }
+
+    #[test]
+    fn seeded_reproducibility() {
+        let a = get("fact-highlevel-like", 50, 3).unwrap();
+        let b = get("fact-highlevel-like", 50, 3).unwrap();
+        assert_eq!(a.raw(), b.raw());
+        let c = get("fact-highlevel-like", 50, 4).unwrap();
+        assert_ne!(a.raw(), c.raw());
+    }
+
+    #[test]
+    fn different_datasets_differ() {
+        let a = get("abc-like", 30, 1).unwrap();
+        let b = get("examiner-like", 30, 1).unwrap();
+        assert_ne!(a.raw(), b.raw());
+    }
+}

@@ -1,0 +1,158 @@
+//! Dataset diagnostics: the quantities that decide whether a workload can
+//! distinguish the algorithm family at all (see `registry::calibrated` —
+//! if the kernel saturates, every summary looks equally good).
+//!
+//! Used by `threesieves datasets --stats` and by tests that pin the
+//! surrogate calibration.
+
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// Summary statistics of a dataset under a given RBF gamma.
+#[derive(Clone, Debug)]
+pub struct DatasetDiagnostics {
+    pub n: usize,
+    pub dim: usize,
+    /// Mean / min / max per-dimension standard deviation.
+    pub dim_std_mean: f64,
+    pub dim_std_min: f64,
+    pub dim_std_max: f64,
+    /// Sampled pairwise squared-distance quantiles (q10, q50, q90).
+    pub dist2_q10: f64,
+    pub dist2_q50: f64,
+    pub dist2_q90: f64,
+    /// Sampled kernel-value quantiles under `gamma` (q50, q90, q99).
+    pub kernel_q50: f64,
+    pub kernel_q90: f64,
+    pub kernel_q99: f64,
+}
+
+/// Compute diagnostics from `pairs` sampled point pairs.
+pub fn diagnose(ds: &Dataset, gamma: f64, pairs: usize, seed: u64) -> DatasetDiagnostics {
+    let (n, d) = (ds.len(), ds.dim());
+    assert!(n >= 2, "need at least two rows");
+    // Per-dimension std.
+    let mut stds = Vec::with_capacity(d);
+    for j in 0..d {
+        let mut mean = 0.0f64;
+        for i in 0..n {
+            mean += ds.row(i)[j] as f64;
+        }
+        mean /= n as f64;
+        let mut var = 0.0f64;
+        for i in 0..n {
+            let c = ds.row(i)[j] as f64 - mean;
+            var += c * c;
+        }
+        stds.push((var / n as f64).sqrt());
+    }
+    let dim_std_mean = stds.iter().sum::<f64>() / d as f64;
+    let dim_std_min = stds.iter().cloned().fold(f64::INFINITY, f64::min);
+    let dim_std_max = stds.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+    // Sampled pairwise distances.
+    let mut rng = Rng::seed_from(seed);
+    let mut d2s = Vec::with_capacity(pairs);
+    for _ in 0..pairs {
+        let i = rng.range(0, n);
+        let mut j = rng.range(0, n);
+        if j == i {
+            j = (j + 1) % n;
+        }
+        d2s.push(crate::util::mathx::sq_dist_f32(ds.row(i), ds.row(j)));
+    }
+    d2s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| d2s[((p * (d2s.len() - 1) as f64).round() as usize).min(d2s.len() - 1)];
+    let (q10, q50, q90) = (q(0.10), q(0.50), q(0.90));
+    // Kernel quantiles: high kernel values live in the *low* distance tail.
+    let kq = |p: f64| (-gamma * q(1.0 - p)).exp();
+
+    DatasetDiagnostics {
+        n,
+        dim: d,
+        dim_std_mean,
+        dim_std_min,
+        dim_std_max,
+        dist2_q10: q10,
+        dist2_q50: q50,
+        dist2_q90: q90,
+        kernel_q50: (-gamma * q50).exp(),
+        kernel_q90: kq(0.90),
+        kernel_q99: kq(0.99),
+    }
+}
+
+impl DatasetDiagnostics {
+    /// True when the workload has usable kernel structure: the typical pair
+    /// is (near-)orthogonal but a visible fraction of pairs is related.
+    pub fn has_kernel_structure(&self) -> bool {
+        self.kernel_q50 < 0.05 && self.kernel_q99 > 0.1
+    }
+
+    pub fn to_row(&self, name: &str) -> String {
+        format!(
+            "{:<22} n={:<7} d={:<4} dimstd={:.2}[{:.2},{:.2}] d2(q10/50/90)={:.1}/{:.1}/{:.1} \
+             k(q50/90/99)={:.3}/{:.3}/{:.3}",
+            name,
+            self.n,
+            self.dim,
+            self.dim_std_mean,
+            self.dim_std_min,
+            self.dim_std_max,
+            self.dist2_q10,
+            self.dist2_q50,
+            self.dist2_q90,
+            self.kernel_q50,
+            self.kernel_q90,
+            self.kernel_q99,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+
+    #[test]
+    fn surrogates_have_kernel_structure() {
+        // The calibration contract: every registered surrogate must expose
+        // near-duplicate structure under its *streaming* gamma, otherwise
+        // the figure sweeps degenerate (all algorithms identical).
+        for info in registry::REGISTRY {
+            let ds = registry::get(info.name, 2_000, 7).unwrap();
+            let gamma = info.dim as f64 / 2.0;
+            let diag = diagnose(&ds, gamma, 4_000, 1);
+            assert!(
+                diag.has_kernel_structure(),
+                "{}: {}",
+                info.name,
+                diag.to_row(info.name)
+            );
+        }
+    }
+
+    #[test]
+    fn normalized_data_has_unit_dim_std() {
+        let ds = registry::get("forestcover-like", 1_000, 3).unwrap();
+        let diag = diagnose(&ds, 1.0, 500, 2);
+        assert!((diag.dim_std_mean - 1.0).abs() < 0.05, "{}", diag.dim_std_mean);
+    }
+
+    #[test]
+    fn quantiles_are_ordered() {
+        let ds = registry::get("kddcup-like", 500, 5).unwrap();
+        let diag = diagnose(&ds, 2.0, 1_000, 3);
+        assert!(diag.dist2_q10 <= diag.dist2_q50);
+        assert!(diag.dist2_q50 <= diag.dist2_q90);
+        assert!(diag.kernel_q50 <= diag.kernel_q90 + 1e-12);
+        assert!(diag.kernel_q90 <= diag.kernel_q99 + 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two rows")]
+    fn rejects_singleton_dataset() {
+        let ds = Dataset::new("one", 2, vec![1.0, 2.0]);
+        diagnose(&ds, 1.0, 10, 1);
+    }
+}

@@ -1,0 +1,323 @@
+//! Seeded synthetic data generators.
+//!
+//! Three stream regimes, matching the paper's experimental axes:
+//!
+//! * [`MixtureSource`] — iid draws from a fixed Gaussian mixture (the batch
+//!   datasets: ForestCover-like, Creditfraud-like, FACT-like, KDDCup-like).
+//!   Rare-cluster skew controls how "sparse" high-gain items are, which is
+//!   the knob that separates SieveStreaming-style thresholding behaviours.
+//! * [`ClassIncrementalSource`] — stream51-like: classes (clusters) appear
+//!   one after another in segments, and consecutive frames are AR(1)
+//!   correlated within a segment (violates iid two ways).
+//! * [`RandomWalkDriftSource`] — abc/examiner-like: cluster centroids
+//!   perform a slow random walk, giving gradual topical drift.
+
+use crate::data::StreamSource;
+use crate::util::rng::Rng;
+
+/// A Gaussian mixture specification.
+#[derive(Clone, Debug)]
+pub struct Mixture {
+    pub dim: usize,
+    /// Row-major `c × dim` cluster centers.
+    pub centers: Vec<f32>,
+    /// Mixture weights (unnormalized).
+    pub weights: Vec<f64>,
+    /// Isotropic within-cluster standard deviation.
+    pub noise: f64,
+}
+
+impl Mixture {
+    /// Random mixture: `clusters` centers on a sphere of radius `spread`.
+    pub fn random(dim: usize, clusters: usize, spread: f64, noise: f64, rng: &mut Rng) -> Self {
+        assert!(clusters > 0);
+        let mut centers = vec![0.0f32; clusters * dim];
+        for c in 0..clusters {
+            let mut norm = 0.0f64;
+            let row = &mut centers[c * dim..(c + 1) * dim];
+            for v in row.iter_mut() {
+                *v = rng.normal() as f32;
+                norm += (*v as f64) * (*v as f64);
+            }
+            let scale = spread / norm.sqrt().max(1e-9);
+            for v in row.iter_mut() {
+                *v = (*v as f64 * scale) as f32;
+            }
+        }
+        Mixture { dim, centers, weights: vec![1.0; clusters], noise }
+    }
+
+    /// Skew the weights so cluster `i` has weight `decay^i` — a heavy head
+    /// and a rare tail ("sparse" streams in the Salsa terminology).
+    pub fn with_skew(mut self, decay: f64) -> Self {
+        let c = self.weights.len();
+        for i in 0..c {
+            self.weights[i] = decay.powi(i as i32);
+        }
+        self
+    }
+
+    pub fn clusters(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn sample_into(&self, cluster: usize, rng: &mut Rng, out: &mut [f32]) {
+        let row = &self.centers[cluster * self.dim..(cluster + 1) * self.dim];
+        for (o, c) in out.iter_mut().zip(row) {
+            *o = (*c as f64 + self.noise * rng.normal()) as f32;
+        }
+    }
+}
+
+/// iid mixture stream of fixed length.
+pub struct MixtureSource {
+    mix: Mixture,
+    rng: Rng,
+    remaining: usize,
+    total: usize,
+}
+
+impl MixtureSource {
+    pub fn new(mix: Mixture, n: usize, seed: u64) -> Self {
+        MixtureSource { mix, rng: Rng::seed_from(seed), remaining: n, total: n }
+    }
+}
+
+impl StreamSource for MixtureSource {
+    fn dim(&self) -> usize {
+        self.mix.dim
+    }
+
+    fn next_into(&mut self, out: &mut [f32]) -> bool {
+        if self.remaining == 0 {
+            return false;
+        }
+        self.remaining -= 1;
+        let c = self.rng.categorical(&self.mix.weights);
+        self.mix.sample_into(c, &mut self.rng, out);
+        true
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.remaining)
+    }
+}
+
+impl MixtureSource {
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}
+
+/// stream51-like class-incremental stream: the class sequence is a fixed
+/// schedule of segments; within a segment items follow an AR(1) path around
+/// the class center (consecutive frames are highly dependent).
+pub struct ClassIncrementalSource {
+    mix: Mixture,
+    rng: Rng,
+    /// Items per class segment.
+    segment_len: usize,
+    /// AR(1) coefficient in [0,1): 0 = iid, →1 = frozen frames.
+    rho: f64,
+    remaining: usize,
+    pos_in_segment: usize,
+    current_class: usize,
+    /// Current AR state (deviation from the class center).
+    state: Vec<f64>,
+}
+
+impl ClassIncrementalSource {
+    pub fn new(mix: Mixture, n: usize, segment_len: usize, rho: f64, seed: u64) -> Self {
+        assert!(segment_len > 0);
+        assert!((0.0..1.0).contains(&rho));
+        let dim = mix.dim;
+        ClassIncrementalSource {
+            mix,
+            rng: Rng::seed_from(seed),
+            segment_len,
+            rho,
+            remaining: n,
+            pos_in_segment: 0,
+            current_class: 0,
+            state: vec![0.0; dim],
+        }
+    }
+}
+
+impl StreamSource for ClassIncrementalSource {
+    fn dim(&self) -> usize {
+        self.mix.dim
+    }
+
+    fn next_into(&mut self, out: &mut [f32]) -> bool {
+        if self.remaining == 0 {
+            return false;
+        }
+        self.remaining -= 1;
+        if self.pos_in_segment == self.segment_len {
+            self.pos_in_segment = 0;
+            self.current_class = (self.current_class + 1) % self.mix.clusters();
+            self.state.iter_mut().for_each(|s| *s = 0.0);
+        }
+        self.pos_in_segment += 1;
+        let c = self.current_class;
+        let center = &self.mix.centers[c * self.mix.dim..(c + 1) * self.mix.dim];
+        let sigma = self.mix.noise * (1.0 - self.rho * self.rho).sqrt();
+        for j in 0..self.mix.dim {
+            self.state[j] = self.rho * self.state[j] + sigma * self.rng.normal();
+            out[j] = (center[j] as f64 + self.state[j]) as f32;
+        }
+        true
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.remaining)
+    }
+}
+
+/// abc/examiner-like gradual drift: centroids random-walk each step.
+pub struct RandomWalkDriftSource {
+    mix: Mixture,
+    rng: Rng,
+    /// Per-step centroid step size (fraction of noise).
+    walk_sigma: f64,
+    remaining: usize,
+}
+
+impl RandomWalkDriftSource {
+    pub fn new(mix: Mixture, n: usize, walk_sigma: f64, seed: u64) -> Self {
+        RandomWalkDriftSource { mix, rng: Rng::seed_from(seed), walk_sigma, remaining: n }
+    }
+}
+
+impl StreamSource for RandomWalkDriftSource {
+    fn dim(&self) -> usize {
+        self.mix.dim
+    }
+
+    fn next_into(&mut self, out: &mut [f32]) -> bool {
+        if self.remaining == 0 {
+            return false;
+        }
+        self.remaining -= 1;
+        // Drift every centroid slightly.
+        let d = self.mix.dim;
+        for v in self.mix.centers.iter_mut() {
+            *v = (*v as f64 + self.walk_sigma * self.rng.normal()) as f32;
+        }
+        let c = self.rng.categorical(&self.mix.weights);
+        let mut tmp = vec![0.0f32; d];
+        self.mix.sample_into(c, &mut self.rng, &mut tmp);
+        out.copy_from_slice(&tmp);
+        true
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.remaining)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mathx::sq_dist_f32;
+
+    fn base_mix(seed: u64) -> Mixture {
+        let mut rng = Rng::seed_from(seed);
+        Mixture::random(4, 3, 5.0, 0.3, &mut rng)
+    }
+
+    #[test]
+    fn mixture_stream_is_deterministic() {
+        let mix = base_mix(1);
+        let mut a = MixtureSource::new(mix.clone(), 50, 7);
+        let mut b = MixtureSource::new(mix, 50, 7);
+        let da = a.materialize("a", usize::MAX);
+        let db = b.materialize("b", usize::MAX);
+        assert_eq!(da.raw(), db.raw());
+        assert_eq!(da.len(), 50);
+    }
+
+    #[test]
+    fn mixture_items_cluster_near_centers() {
+        let mix = base_mix(2);
+        let centers = mix.centers.clone();
+        let dim = mix.dim;
+        let mut src = MixtureSource::new(mix, 200, 3);
+        let ds = src.materialize("c", usize::MAX);
+        for i in 0..ds.len() {
+            let row = ds.row(i);
+            let min_d2 = (0..3)
+                .map(|c| sq_dist_f32(row, &centers[c * dim..(c + 1) * dim]))
+                .fold(f64::INFINITY, f64::min);
+            // within ~6 sigma of some center
+            assert!(min_d2.sqrt() < 0.3 * 8.0, "item {i} too far: {}", min_d2.sqrt());
+        }
+    }
+
+    #[test]
+    fn skew_makes_tail_rare() {
+        let mix = base_mix(3).with_skew(0.2);
+        assert!(mix.weights[0] > mix.weights[2] * 10.0);
+    }
+
+    #[test]
+    fn class_incremental_visits_classes_in_order() {
+        let mix = base_mix(4);
+        let centers = mix.centers.clone();
+        let dim = mix.dim;
+        let mut src = ClassIncrementalSource::new(mix, 60, 20, 0.8, 5);
+        let ds = src.materialize("ci", usize::MAX);
+        // First segment items nearest to center 0, second to 1, third to 2.
+        for (i, expected_class) in [(5usize, 0usize), (25, 1), (45, 2)] {
+            let row = ds.row(i);
+            let nearest = (0..3)
+                .min_by(|&a, &b| {
+                    sq_dist_f32(row, &centers[a * dim..(a + 1) * dim])
+                        .partial_cmp(&sq_dist_f32(row, &centers[b * dim..(b + 1) * dim]))
+                        .unwrap()
+                })
+                .unwrap();
+            assert_eq!(nearest, expected_class, "item {i}");
+        }
+    }
+
+    #[test]
+    fn ar1_consecutive_frames_are_correlated() {
+        let mix = base_mix(6);
+        let mut src = ClassIncrementalSource::new(mix.clone(), 100, 100, 0.95, 8);
+        let ds = src.materialize("ar", usize::MAX);
+        let mut iid = MixtureSource::new(mix, 100, 8);
+        let di = iid.materialize("iid", usize::MAX);
+        let avg_step = |d: &crate::data::Dataset| {
+            (1..d.len()).map(|i| sq_dist_f32(d.row(i), d.row(i - 1)).sqrt()).sum::<f64>()
+                / (d.len() - 1) as f64
+        };
+        // AR(1) steps must be much smaller than iid within-cluster jumps
+        // (ignoring segment switches — one big jump can't close a 3x gap).
+        assert!(avg_step(&ds) < avg_step(&di));
+    }
+
+    #[test]
+    fn random_walk_drifts_centroids() {
+        let mix = base_mix(9);
+        let start_centers = mix.centers.clone();
+        let mut src = RandomWalkDriftSource::new(mix, 500, 0.05, 10);
+        let mut buf = vec![0.0f32; 4];
+        while src.next_into(&mut buf) {}
+        let moved = sq_dist_f32(&src.mix.centers, &start_centers).sqrt();
+        assert!(moved > 0.5, "centroids did not drift: {moved}");
+    }
+
+    #[test]
+    fn sources_respect_length() {
+        let mix = base_mix(11);
+        let mut s = RandomWalkDriftSource::new(mix, 10, 0.01, 1);
+        let mut buf = vec![0.0f32; 4];
+        let mut count = 0;
+        while s.next_into(&mut buf) {
+            count += 1;
+        }
+        assert_eq!(count, 10);
+    }
+}

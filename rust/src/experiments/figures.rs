@@ -1,0 +1,181 @@
+//! Drivers for Figures 1–3: the paper's batch sweeps (vs ε, vs K) and the
+//! concept-drift streaming comparison.
+
+use std::path::Path;
+
+use crate::config::AlgoSpec;
+use crate::data::registry;
+use crate::metrics::{write_records, RunRecord};
+
+use super::runner::{run_batch_protocol, run_stream_protocol, GammaMode};
+use super::table2;
+
+/// Size knobs so the full sweep finishes on one machine; scale up for
+/// publication-grade runs.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepScale {
+    /// Stream length per dataset.
+    pub n: usize,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for SweepScale {
+    fn default() -> Self {
+        SweepScale { n: 5_000, seed: 42 }
+    }
+}
+
+/// The streaming-algorithm roster of the batch figures (Fig. 1–2):
+/// IndependentSetImprovement, SieveStreaming(++), Salsa, Random and
+/// ThreeSieves with the paper's T grid.
+fn batch_roster(eps: f64, ts: &[usize], seed: u64) -> Vec<AlgoSpec> {
+    let mut algos = vec![
+        AlgoSpec::Random { seed },
+        AlgoSpec::IndependentSetImprovement,
+        AlgoSpec::SieveStreaming { epsilon: eps },
+        AlgoSpec::SieveStreamingPP { epsilon: eps },
+        AlgoSpec::Salsa { epsilon: eps, use_length_hint: true },
+    ];
+    for &t in ts {
+        algos.push(AlgoSpec::ThreeSieves { epsilon: eps, t });
+    }
+    algos
+}
+
+fn greedy_reference(ds: &crate::data::Dataset, k: usize) -> f64 {
+    run_batch_protocol(&AlgoSpec::Greedy, ds, k, GammaMode::Batch, 1.0).value
+}
+
+/// **Figure 1**: relative performance / runtime / memory over ε for fixed
+/// K = 50 on the five batch surrogates.
+pub fn fig1(out_dir: &Path, scale: SweepScale) -> std::io::Result<Vec<RunRecord>> {
+    let epsilons = [0.001, 0.005, 0.01, 0.05, 0.1];
+    let ts = [500usize, 1000, 2500, 5000];
+    let k = 50;
+    let mut records = Vec::new();
+    for info in table2::batch_datasets() {
+        let ds = registry::get(info.name, scale.n, scale.seed).expect("registered dataset");
+        let greedy = greedy_reference(&ds, k);
+        for &eps in &epsilons {
+            for spec in batch_roster(eps, &ts, scale.seed) {
+                let rec = run_batch_protocol(&spec, &ds, k, GammaMode::Batch, greedy);
+                log_row("fig1", &rec);
+                records.push(rec);
+            }
+        }
+    }
+    write_records(&out_dir.join("fig1"), &records)?;
+    Ok(records)
+}
+
+/// **Figure 2**: relative performance / runtime / memory over K for fixed
+/// ε = 0.001.
+pub fn fig2(out_dir: &Path, scale: SweepScale, ks: &[usize]) -> std::io::Result<Vec<RunRecord>> {
+    let eps = 0.001;
+    let ts = [500usize, 1000, 2500, 5000];
+    let mut records = Vec::new();
+    for info in table2::batch_datasets() {
+        let ds = registry::get(info.name, scale.n, scale.seed).expect("registered dataset");
+        for &k in ks {
+            let greedy = greedy_reference(&ds, k);
+            for spec in batch_roster(eps, &ts, scale.seed) {
+                let rec = run_batch_protocol(&spec, &ds, k, GammaMode::Batch, greedy);
+                log_row("fig2", &rec);
+                records.push(rec);
+            }
+            // Greedy row itself (relative = 1.0 by construction).
+            let rec = run_batch_protocol(&AlgoSpec::Greedy, &ds, k, GammaMode::Batch, greedy);
+            records.push(rec);
+        }
+    }
+    write_records(&out_dir.join("fig2"), &records)?;
+    Ok(records)
+}
+
+/// **Figure 3**: single-pass streaming with concept drift, relative
+/// performance vs K for ε ∈ {0.1, 0.01}. Salsa is excluded (needs stream
+/// metadata — paper §4.2); Greedy is the batch reference.
+pub fn fig3(out_dir: &Path, scale: SweepScale, ks: &[usize]) -> std::io::Result<Vec<RunRecord>> {
+    let epsilons = [0.1, 0.01];
+    let ts = [500usize, 1000, 2500, 5000];
+    let mut records = Vec::new();
+    for info in table2::drift_datasets() {
+        // Greedy reference runs on the materialized stream (batch fashion).
+        let ds = registry::get(info.name, scale.n, scale.seed).expect("registered dataset");
+        for &k in ks {
+            let greedy = {
+                let rec =
+                    run_batch_protocol(&AlgoSpec::Greedy, &ds, k, GammaMode::Streaming, 1.0);
+                rec.value
+            };
+            for &eps in &epsilons {
+                let mut roster = vec![
+                    AlgoSpec::Random { seed: scale.seed },
+                    AlgoSpec::IndependentSetImprovement,
+                    AlgoSpec::SieveStreaming { epsilon: eps },
+                    AlgoSpec::SieveStreamingPP { epsilon: eps },
+                ];
+                for &t in &ts {
+                    roster.push(AlgoSpec::ThreeSieves { epsilon: eps, t });
+                }
+                for spec in roster {
+                    // Fresh source per run: single pass over the same drift
+                    // stream realization.
+                    let mut src = registry::source(info.name, scale.n, scale.seed).unwrap();
+                    let rec = run_stream_protocol(
+                        &spec,
+                        src.as_mut(),
+                        info.name,
+                        k,
+                        GammaMode::Streaming,
+                        greedy,
+                    );
+                    log_row("fig3", &rec);
+                    records.push(rec);
+                }
+            }
+        }
+    }
+    write_records(&out_dir.join("fig3"), &records)?;
+    Ok(records)
+}
+
+fn log_row(fig: &str, r: &RunRecord) {
+    println!(
+        "[{fig}] {:<28} {:<22} K={:<4} eps={:<6} rel={:.3} t={:.3}s mem={} q/e={:.2}",
+        r.dataset,
+        r.algorithm,
+        r.k,
+        r.epsilon,
+        r.relative_to_greedy,
+        r.runtime.as_secs_f64(),
+        r.stats.peak_stored,
+        r.stats.queries_per_element(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature fig2 sweep exercises the full driver path quickly.
+    #[test]
+    fn mini_fig2_sweep() {
+        let dir = std::env::temp_dir().join("ts_fig2_test");
+        let scale = SweepScale { n: 400, seed: 1 };
+        // Temporarily narrow: use just the smallest dataset and K.
+        let ds = registry::get("fact-highlevel-like", scale.n, scale.seed).unwrap();
+        let greedy = greedy_reference(&ds, 5);
+        assert!(greedy > 0.0);
+        let rec = run_batch_protocol(
+            &AlgoSpec::ThreeSieves { epsilon: 0.01, t: 100 },
+            &ds,
+            5,
+            GammaMode::Batch,
+            greedy,
+        );
+        assert!(rec.relative_to_greedy > 0.5, "rel {}", rec.relative_to_greedy);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

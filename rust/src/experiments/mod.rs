@@ -1,0 +1,23 @@
+//! Experiment drivers regenerating every table and figure of the paper.
+//!
+//! | id | paper artifact | driver |
+//! |---|---|---|
+//! | T1 | Table 1 (memory + queries/element) | [`table1::run`] |
+//! | T2 | Table 2 (dataset registry) | [`table2::rows`] |
+//! | F1 | Figure 1 (vs ε, K=50) | [`figures::fig1`] |
+//! | F2 | Figure 2 (vs K, ε=0.001) | [`figures::fig2`] |
+//! | F3 | Figure 3 (drift streams) | [`figures::fig3`] |
+//!
+//! Each driver emits `results/<id>.csv` + `.json` via [`crate::metrics`] and
+//! prints the same rows/series the paper plots. Absolute numbers differ
+//! from the paper's testbed; the *shape* (who wins, by what rough factor)
+//! is the reproduction target — see EXPERIMENTS.md.
+
+pub mod ablations;
+pub mod custom;
+pub mod figures;
+pub mod runner;
+pub mod table1;
+pub mod table2;
+
+pub use runner::{build_algo, run_batch_protocol, run_stream_protocol, GammaMode};

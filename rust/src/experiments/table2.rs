@@ -1,0 +1,49 @@
+//! **Table 2**: the dataset roster. Prints the surrogate registry with the
+//! paper's original sizes/dims alongside the surrogate parameters.
+
+use crate::data::registry::{DatasetInfo, REGISTRY};
+
+/// The five batch datasets (paper Table 2, top group).
+pub fn batch_datasets() -> Vec<&'static DatasetInfo> {
+    REGISTRY.iter().take(5).collect()
+}
+
+/// The three drift datasets (paper Table 2, bottom group).
+pub fn drift_datasets() -> Vec<&'static DatasetInfo> {
+    REGISTRY.iter().skip(5).collect()
+}
+
+/// Rows for printing.
+pub fn rows() -> Vec<String> {
+    let mut out = vec![format!(
+        "{:<22} {:<16} {:>10} {:>6}   {}",
+        "surrogate", "paper dataset", "paper size", "dim", "drift"
+    )];
+    for i in REGISTRY {
+        out.push(format!(
+            "{:<22} {:<16} {:>10} {:>6}   {}",
+            i.name, i.paper_name, i.paper_size, i.dim, i.drift
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_matches_paper_grouping() {
+        let batch = batch_datasets();
+        let drift = drift_datasets();
+        assert_eq!(batch.len(), 5);
+        assert_eq!(drift.len(), 3);
+        assert_eq!(batch[0].paper_name, "ForestCover");
+        assert_eq!(drift[0].paper_name, "stream51");
+    }
+
+    #[test]
+    fn rows_cover_registry() {
+        assert_eq!(rows().len(), REGISTRY.len() + 1);
+    }
+}

@@ -1,0 +1,194 @@
+//! A second monotone submodular function: concave-over-modular coverage.
+//!
+//! ```text
+//! f(S) = Σ_j w_j · φ( Σ_{e ∈ S} max(0, x_j(e)) ),   φ(t) = √t
+//! ```
+//!
+//! Concave compositions of non-negative modular functions are monotone
+//! submodular, gains are O(d), and the function needs no kernel — which
+//! makes it a good cross-check that the streaming algorithms are
+//! function-generic (they must not silently assume log-det structure).
+
+use super::SubmodularFunction;
+
+/// Feature-coverage function with √ saturation.
+pub struct ConcaveCoverage {
+    dim: usize,
+    /// Per-feature accumulated mass Σ max(0, x_j).
+    acc: Vec<f64>,
+    /// Per-feature weights (default: all ones).
+    weights: Vec<f64>,
+    feats: Vec<f32>,
+    n: usize,
+    value: f64,
+    queries: u64,
+    /// Upper bound on a single item's feature values, used for `m`.
+    singleton_cap: f64,
+}
+
+impl ConcaveCoverage {
+    pub fn new(dim: usize) -> Self {
+        Self::with_weights(vec![1.0; dim])
+    }
+
+    pub fn with_weights(weights: Vec<f64>) -> Self {
+        let dim = weights.len();
+        assert!(dim > 0);
+        // m: with features clamped to [0, cap] per dimension, the best
+        // singleton is Σ_j w_j √cap. We clamp contributions at cap = 1.
+        let cap: f64 = 1.0;
+        let singleton_cap = weights.iter().sum::<f64>() * cap.sqrt();
+        ConcaveCoverage {
+            dim,
+            acc: vec![0.0; dim],
+            weights,
+            feats: Vec::new(),
+            n: 0,
+            value: 0.0,
+            queries: 0,
+            singleton_cap,
+        }
+    }
+
+    #[inline]
+    fn contrib(x: f32) -> f64 {
+        // Clamp to [0, 1]: keeps the function bounded and m exact.
+        (x as f64).clamp(0.0, 1.0)
+    }
+
+    fn value_of_acc(&self, acc: &[f64]) -> f64 {
+        acc.iter().zip(&self.weights).map(|(a, w)| w * a.sqrt()).sum()
+    }
+}
+
+impl SubmodularFunction for ConcaveCoverage {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn current_value(&self) -> f64 {
+        self.value
+    }
+
+    fn max_singleton_value(&self) -> f64 {
+        self.singleton_cap
+    }
+
+    fn peek_gain(&mut self, item: &[f32]) -> f64 {
+        self.queries += 1;
+        let mut gain = 0.0;
+        for j in 0..self.dim {
+            let a = self.acc[j];
+            let c = Self::contrib(item[j]);
+            gain += self.weights[j] * ((a + c).sqrt() - a.sqrt());
+        }
+        gain
+    }
+
+    fn accept(&mut self, item: &[f32]) {
+        self.queries += 1;
+        for j in 0..self.dim {
+            self.acc[j] += Self::contrib(item[j]);
+        }
+        self.value = self.value_of_acc(&self.acc.clone());
+        self.feats.extend_from_slice(item);
+        self.n += 1;
+    }
+
+    fn remove(&mut self, idx: usize) {
+        assert!(idx < self.n);
+        self.queries += 1;
+        let d = self.dim;
+        {
+            let row = &self.feats[idx * d..(idx + 1) * d];
+            for j in 0..d {
+                self.acc[j] -= Self::contrib(row[j]);
+                if self.acc[j] < 0.0 {
+                    self.acc[j] = 0.0; // fp guard
+                }
+            }
+        }
+        self.feats.drain(idx * d..(idx + 1) * d);
+        self.n -= 1;
+        self.value = self.value_of_acc(&self.acc.clone());
+    }
+
+    fn summary(&self) -> &[f32] {
+        &self.feats
+    }
+
+    fn reset(&mut self) {
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        self.feats.clear();
+        self.n = 0;
+        self.value = 0.0;
+    }
+
+    fn queries(&self) -> u64 {
+        self.queries
+    }
+
+    fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
+        Box::new(ConcaveCoverage::with_weights(self.weights.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conformance() {
+        let f = ConcaveCoverage::new(5);
+        super::super::tests::conformance(Box::new(f), 7);
+    }
+
+    #[test]
+    fn gain_matches_value_difference() {
+        let mut rng = Rng::seed_from(1);
+        let d = 6;
+        let mut f = ConcaveCoverage::new(d);
+        for _ in 0..4 {
+            let item: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
+            let g = f.peek_gain(&item);
+            let before = f.current_value();
+            f.accept(&item);
+            assert!((f.current_value() - before - g).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn remove_then_reinsert_roundtrips() {
+        let mut rng = Rng::seed_from(2);
+        let d = 4;
+        let mut f = ConcaveCoverage::new(d);
+        let items: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..d).map(|_| rng.uniform_f32()).collect()).collect();
+        for it in &items {
+            f.accept(it);
+        }
+        let v = f.current_value();
+        f.remove(1);
+        f.accept(&items[1]);
+        assert!((f.current_value() - v).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_features_contribute_nothing() {
+        let mut f = ConcaveCoverage::new(3);
+        let g = f.peek_gain(&[-1.0, -2.0, -3.0]);
+        assert_eq!(g, 0.0);
+    }
+
+    #[test]
+    fn weights_scale_gains() {
+        let mut f = ConcaveCoverage::with_weights(vec![2.0, 0.0]);
+        let g = f.peek_gain(&[1.0, 1.0]);
+        assert!((g - 2.0).abs() < 1e-12); // only dim 0 counts, w=2, √1=1
+    }
+}

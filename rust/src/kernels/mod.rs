@@ -1,0 +1,209 @@
+//! Positive-definite kernels over `f32` feature vectors.
+//!
+//! The paper's experiments use the normalized RBF kernel
+//! `k(x,y) = exp(-||x-y||^2 / (2 l^2))` with `l = 1/(2 sqrt(d))` (batch) or
+//! `l = 1/sqrt(d)` (streaming). We expose the kernel behind a small trait so
+//! the submodular functions are kernel-generic; linear and cosine kernels
+//! are provided for the generality tests.
+
+use crate::util::mathx::{dot_f32, sq_dist_f32};
+
+/// A (normalized) positive-definite kernel. Implementations must satisfy
+/// `k(x, x) == 1` — the log-det function relies on this (paper Eq. 7 with
+/// Graf & Borer normalization).
+pub trait Kernel: Send + Sync {
+    /// Kernel value for a pair of points.
+    fn eval(&self, x: &[f32], y: &[f32]) -> f64;
+
+    /// Kernel row: `out[i] = k(x, rows[i])` where `rows` is a flat row-major
+    /// matrix (n rows of `dim`). Overridable for blocked/SIMD variants.
+    fn eval_row(&self, x: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+        let n = out.len();
+        debug_assert!(rows.len() >= n * dim);
+        for i in 0..n {
+            out[i] = self.eval(x, &rows[i * dim..(i + 1) * dim]);
+        }
+    }
+
+    /// Human-readable name (metrics/manifest).
+    fn name(&self) -> &'static str;
+}
+
+/// RBF kernel `exp(-gamma * ||x-y||^2)` with `gamma = 1/(2 l^2)`.
+#[derive(Clone, Debug)]
+pub struct RbfKernel {
+    gamma: f64,
+}
+
+impl RbfKernel {
+    pub fn new(gamma: f64) -> Self {
+        assert!(gamma > 0.0, "gamma must be positive");
+        RbfKernel { gamma }
+    }
+
+    /// Paper batch setting: `l = 1/(2 sqrt(d))` => `gamma = 2 d`.
+    pub fn for_batch(dim: usize) -> Self {
+        RbfKernel::new(2.0 * dim as f64)
+    }
+
+    /// Paper streaming setting: `l = 1/sqrt(d)` => `gamma = d/2`.
+    pub fn for_streaming(dim: usize) -> Self {
+        RbfKernel::new(dim as f64 / 2.0)
+    }
+
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+}
+
+impl Kernel for RbfKernel {
+    #[inline]
+    fn eval(&self, x: &[f32], y: &[f32]) -> f64 {
+        (-self.gamma * sq_dist_f32(x, y)).exp()
+    }
+
+    fn eval_row(&self, x: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+        // ||x - s||^2 = ||x||^2 + ||s||^2 - 2 <x, s>; the dot is the hot
+        // loop and auto-vectorizes cleanly (see benches/micro_hotpath).
+        let xsq = dot_f32(x, x);
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = &rows[i * dim..(i + 1) * dim];
+            let d2 = xsq + dot_f32(row, row) - 2.0 * dot_f32(x, row);
+            *o = (-self.gamma * d2.max(0.0)).exp();
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "rbf"
+    }
+}
+
+/// Cosine-similarity kernel mapped to [0, 1]: `(1 + cos(x,y)) / 2`.
+/// Self-similarity is 1 for any nonzero x; zero vectors are treated as
+/// similarity 0 against everything (and 1 against themselves).
+#[derive(Clone, Debug, Default)]
+pub struct CosineKernel;
+
+impl Kernel for CosineKernel {
+    fn eval(&self, x: &[f32], y: &[f32]) -> f64 {
+        let nx = dot_f32(x, x).sqrt();
+        let ny = dot_f32(y, y).sqrt();
+        if nx == 0.0 && ny == 0.0 {
+            return 1.0;
+        }
+        if nx == 0.0 || ny == 0.0 {
+            return 0.0;
+        }
+        let c = dot_f32(x, y) / (nx * ny);
+        (1.0 + c.clamp(-1.0, 1.0)) / 2.0
+    }
+
+    fn name(&self) -> &'static str {
+        "cosine"
+    }
+}
+
+/// Normalized linear kernel `<x,y> / (||x|| ||y||)` shifted like cosine but
+/// retaining magnitude ordering through a logistic squash; useful as a
+/// cheap non-RBF PD kernel in tests. `k(x,x) = 1`.
+#[derive(Clone, Debug, Default)]
+pub struct NormalizedLinearKernel;
+
+impl Kernel for NormalizedLinearKernel {
+    fn eval(&self, x: &[f32], y: &[f32]) -> f64 {
+        // k(x,y) = exp(-||x/|x| - y/|y|||^2) — RBF on the unit sphere.
+        let nx = dot_f32(x, x).sqrt().max(1e-12);
+        let ny = dot_f32(y, y).sqrt().max(1e-12);
+        let mut d2 = 0.0;
+        for i in 0..x.len() {
+            let d = x[i] as f64 / nx - y[i] as f64 / ny;
+            d2 += d * d;
+        }
+        (-d2).exp()
+    }
+
+    fn name(&self) -> &'static str {
+        "normlinear"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn rbf_self_similarity_is_one() {
+        let k = RbfKernel::new(4.0);
+        let mut rng = Rng::seed_from(1);
+        for _ in 0..10 {
+            let x = rand_vec(&mut rng, 8);
+            assert!((k.eval(&x, &x) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rbf_symmetric_and_bounded() {
+        let k = RbfKernel::new(2.0);
+        let mut rng = Rng::seed_from(2);
+        for _ in 0..20 {
+            let x = rand_vec(&mut rng, 5);
+            let y = rand_vec(&mut rng, 5);
+            let kxy = k.eval(&x, &y);
+            let kyx = k.eval(&y, &x);
+            assert!((kxy - kyx).abs() < 1e-12);
+            assert!((0.0..=1.0).contains(&kxy));
+        }
+    }
+
+    #[test]
+    fn rbf_eval_row_matches_eval() {
+        let k = RbfKernel::new(3.0);
+        let mut rng = Rng::seed_from(3);
+        let d = 7;
+        let n = 9;
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let x = rand_vec(&mut rng, d);
+        let mut out = vec![0.0; n];
+        k.eval_row(&x, &rows, d, &mut out);
+        for i in 0..n {
+            let want = k.eval(&x, &rows[i * d..(i + 1) * d]);
+            assert!((out[i] - want).abs() < 1e-9, "row {i}: {} vs {want}", out[i]);
+        }
+    }
+
+    #[test]
+    fn rbf_paper_gammas() {
+        assert!((RbfKernel::for_batch(16).gamma() - 32.0).abs() < 1e-12);
+        assert!((RbfKernel::for_streaming(16).gamma() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rbf_decreases_with_distance() {
+        let k = RbfKernel::new(1.0);
+        let x = vec![0.0f32; 4];
+        let near = vec![0.1f32; 4];
+        let far = vec![1.0f32; 4];
+        assert!(k.eval(&x, &near) > k.eval(&x, &far));
+    }
+
+    #[test]
+    fn cosine_normalized() {
+        let k = CosineKernel;
+        let x = vec![1.0f32, 2.0, 3.0];
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-12);
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        assert!(k.eval(&x, &neg).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normlinear_self_similarity() {
+        let k = NormalizedLinearKernel;
+        let x = vec![3.0f32, -4.0];
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-9);
+    }
+}

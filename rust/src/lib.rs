@@ -1,0 +1,63 @@
+//! # threesieves — Very Fast Streaming Submodular Function Maximization
+//!
+//! A full reproduction of Buschjäger, Honysz, Pfahler & Morik (2020):
+//! streaming submodular maximization with the **ThreeSieves** algorithm and
+//! the complete baseline family from the paper (Greedy, Random,
+//! StreamGreedy, PreemptionStreaming, IndependentSetImprovement,
+//! SieveStreaming, SieveStreaming++, Salsa, QuickStream).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the streaming coordinator: algorithms, stream
+//!   sources, batching, backpressure, drift-triggered re-selection, metrics
+//!   and the experiment harness reproducing every table/figure.
+//! * **L2 (`python/compile/model.py`)** — the submodular gain oracle
+//!   (`Δf(e|S)` for the IVM log-determinant) as a JAX graph, AOT-lowered to
+//!   HLO text at build time (`make artifacts`).
+//! * **L1 (`python/compile/kernels/rbf_slab.py`)** — the RBF kernel slab as
+//!   a Pallas kernel (MXU-shaped matmul decomposition), lowered into the
+//!   same HLO module.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and
+//! [`functions::PjrtLogDet`] exposes them behind the same
+//! [`functions::SubmodularFunction`] trait as the pure-Rust
+//! [`functions::NativeLogDet`] oracle.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use threesieves::prelude::*;
+//!
+//! let ds = threesieves::data::registry::get("creditfraud-like", 5_000, 42).unwrap();
+//! let f = NativeLogDet::new(LogDetConfig::for_batch(ds.dim(), 20));
+//! let mut algo = ThreeSieves::new(Box::new(f), 20, 0.001, SieveTuning::FixedT(1_000));
+//! for row in ds.iter() {
+//!     algo.process(row);
+//! }
+//! println!("f(S) = {}", algo.value());
+//! ```
+
+pub mod algorithms;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod functions;
+pub mod kernels;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for the common workflow.
+pub mod prelude {
+    pub use crate::algorithms::three_sieves::SieveTuning;
+    pub use crate::algorithms::{
+        Greedy, IndependentSetImprovement, PreemptionStreaming, QuickStream, RandomReservoir,
+        Salsa, SieveStreaming, SieveStreamingPP, StreamGreedy, StreamingAlgorithm, ThreeSieves,
+    };
+    pub use crate::data::{Dataset, StreamSource};
+    pub use crate::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+    pub use crate::kernels::Kernel;
+    pub use crate::metrics::AlgoStats;
+}

@@ -1,0 +1,366 @@
+//! `threesieves` CLI — the leader entrypoint.
+//!
+//! ```text
+//! threesieves summarize --dataset <name> --n <N> --k <K> [--algo three-sieves] [--t 1000]
+//! threesieves experiment <table1|table2|fig1|fig2|fig3> [--n N] [--out DIR] [--quick]
+//! threesieves serve --dataset <name> --n <N> --k <K> [--drift-window W] [--checkpoint PATH]
+//! threesieves pjrt-info [--artifacts DIR]
+//! ```
+//!
+//! Argument parsing is hand-rolled (`clap` is not vendored in this image);
+//! see `cli::Args` for the tiny flag grammar.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use threesieves::config::AlgoSpec;
+use threesieves::coordinator::{MeanShiftDetector, NoDrift, PipelineConfig, StreamPipeline};
+use threesieves::data::registry;
+use threesieves::experiments::figures::{self, SweepScale};
+use threesieves::experiments::{run_batch_protocol, run_stream_protocol, GammaMode};
+use threesieves::experiments::{table1, table2};
+
+mod cli {
+    //! Minimal `--flag value` argument parser.
+    use std::collections::BTreeMap;
+
+    pub struct Args {
+        pub positional: Vec<String>,
+        flags: BTreeMap<String, String>,
+    }
+
+    impl Args {
+        pub fn parse(argv: &[String]) -> Result<Self, String> {
+            let mut positional = Vec::new();
+            let mut flags = BTreeMap::new();
+            let mut i = 0;
+            while i < argv.len() {
+                let a = &argv[i];
+                if let Some(name) = a.strip_prefix("--") {
+                    if let Some((k, v)) = name.split_once('=') {
+                        flags.insert(k.to_string(), v.to_string());
+                    } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                        flags.insert(name.to_string(), argv[i + 1].clone());
+                        i += 1;
+                    } else {
+                        flags.insert(name.to_string(), "true".to_string());
+                    }
+                } else {
+                    positional.push(a.clone());
+                }
+                i += 1;
+            }
+            Ok(Args { positional, flags })
+        }
+
+        pub fn get(&self, name: &str) -> Option<&str> {
+            self.flags.get(name).map(|s| s.as_str())
+        }
+
+        pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+            match self.get(name) {
+                None => Ok(default),
+                Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+            }
+        }
+
+        pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+            match self.get(name) {
+                None => Ok(default),
+                Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+            }
+        }
+
+        pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+            match self.get(name) {
+                None => Ok(default),
+                Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+            }
+        }
+
+        pub fn has(&self, name: &str) -> bool {
+            self.flags.contains_key(name)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn parse(s: &str) -> Args {
+            let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+            Args::parse(&argv).unwrap()
+        }
+
+        #[test]
+        fn positional_and_flags() {
+            let a = parse("experiment fig1 --n 500 --out results --quick");
+            assert_eq!(a.positional, vec!["experiment", "fig1"]);
+            assert_eq!(a.get("n"), Some("500"));
+            assert_eq!(a.get("out"), Some("results"));
+            assert!(a.has("quick"));
+            assert!(!a.has("nope"));
+        }
+
+        #[test]
+        fn equals_syntax() {
+            let a = parse("run --k=20 --epsilon=0.01");
+            assert_eq!(a.get_usize("k", 0).unwrap(), 20);
+            assert!((a.get_f64("epsilon", 0.0).unwrap() - 0.01).abs() < 1e-12);
+        }
+
+        #[test]
+        fn defaults_apply() {
+            let a = parse("run");
+            assert_eq!(a.get_usize("n", 77).unwrap(), 77);
+            assert_eq!(a.get_u64("seed", 9).unwrap(), 9);
+        }
+
+        #[test]
+        fn bad_numbers_error() {
+            let a = parse("run --n abc");
+            assert!(a.get_usize("n", 0).is_err());
+        }
+
+        #[test]
+        fn boolean_flag_before_flag() {
+            // --quick followed by another flag must not eat it as a value.
+            let a = parse("x --quick --n 5");
+            assert!(a.has("quick"));
+            assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        }
+    }
+}
+
+const USAGE: &str = "\
+threesieves — streaming submodular function maximization (ThreeSieves)
+
+USAGE:
+  threesieves summarize --dataset <name> --n <N> --k <K>
+                        [--algo <id>] [--epsilon E] [--t T] [--seed S] [--batch]
+  threesieves experiment <table1|table2|fig1|fig2|fig3|ablations> [--n N] [--out DIR] [--quick]
+  threesieves experiment custom --config <file.json> [--stream]
+  threesieves serve     --dataset <name> --n <N> --k <K>
+                        [--drift-window W] [--drift-threshold X] [--checkpoint PATH]
+  threesieves pjrt-info [--artifacts DIR] [--config NAME]
+  threesieves datasets
+
+Algorithms (--algo): greedy | random | isi | stream-greedy | preemption |
+  sieve-streaming | sieve-streaming-pp | salsa | quickstream |
+  three-sieves (default)
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<(), String> {
+    let args = cli::Args::parse(argv)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "summarize" => cmd_summarize(&args),
+        "experiment" => cmd_experiment(&args),
+        "serve" => cmd_serve(&args),
+        "pjrt-info" => cmd_pjrt_info(&args),
+        "datasets" => {
+            for row in table2::rows() {
+                println!("{row}");
+            }
+            if args.has("stats") {
+                println!("\nkernel diagnostics (streaming gamma, 2000 rows, 4000 pairs):");
+                for info in registry::REGISTRY {
+                    let ds = registry::get(info.name, 2_000, 7).unwrap();
+                    let diag = threesieves::data::stats::diagnose(
+                        &ds,
+                        info.dim as f64 / 2.0,
+                        4_000,
+                        1,
+                    );
+                    println!("{}", diag.to_row(info.name));
+                }
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}")),
+    }
+}
+
+fn algo_spec(args: &cli::Args) -> Result<AlgoSpec, String> {
+    let eps = args.get_f64("epsilon", 0.001)?;
+    let t = args.get_usize("t", 1000)?;
+    let seed = args.get_u64("seed", 42)?;
+    Ok(match args.get("algo").unwrap_or("three-sieves") {
+        "greedy" => AlgoSpec::Greedy,
+        "random" => AlgoSpec::Random { seed },
+        "isi" => AlgoSpec::IndependentSetImprovement,
+        "stream-greedy" => AlgoSpec::StreamGreedy { nu: args.get_f64("nu", 1e-4)? },
+        "preemption" => AlgoSpec::Preemption,
+        "sieve-streaming" => AlgoSpec::SieveStreaming { epsilon: eps },
+        "sieve-streaming-pp" => AlgoSpec::SieveStreamingPP { epsilon: eps },
+        "salsa" => AlgoSpec::Salsa { epsilon: eps, use_length_hint: true },
+        "quickstream" => {
+            AlgoSpec::QuickStream { c: args.get_usize("c", 2)?, epsilon: eps, seed }
+        }
+        "three-sieves" => AlgoSpec::ThreeSieves { epsilon: eps, t },
+        other => return Err(format!("unknown algorithm {other:?}")),
+    })
+}
+
+fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
+    let dataset = args.get("dataset").ok_or("--dataset required")?.to_string();
+    let n = args.get_usize("n", 10_000)?;
+    let k = args.get_usize("k", 20)?;
+    let seed = args.get_u64("seed", 42)?;
+    let spec = algo_spec(args)?;
+    let mode = if args.has("batch") { GammaMode::Batch } else { GammaMode::Streaming };
+
+    let rec = if args.has("batch") {
+        let ds = registry::get(&dataset, n, seed)
+            .ok_or_else(|| format!("unknown dataset {dataset:?}"))?;
+        run_batch_protocol(&spec, &ds, k, mode, 1.0)
+    } else {
+        let mut src = registry::source(&dataset, n, seed)
+            .ok_or_else(|| format!("unknown dataset {dataset:?}"))?;
+        run_stream_protocol(&spec, src.as_mut(), &dataset, k, mode, 1.0)
+    };
+    println!("algorithm      : {}", rec.algorithm);
+    println!(
+        "dataset        : {} (n={n}, dim={})",
+        rec.dataset,
+        registry::info(&dataset).map(|i| i.dim).unwrap_or(0)
+    );
+    println!("f(S)           : {:.6}", rec.value);
+    println!("summary size   : {}/{}", rec.summary_size, k);
+    println!("runtime        : {:.3}s", rec.runtime.as_secs_f64());
+    println!(
+        "oracle queries : {} ({:.2}/element)",
+        rec.stats.queries,
+        rec.stats.queries_per_element()
+    );
+    println!("peak memory    : {} stored elements", rec.stats.peak_stored);
+    Ok(())
+}
+
+fn cmd_experiment(args: &cli::Args) -> Result<(), String> {
+    let which = args.positional.get(1).map(|s| s.as_str()).ok_or("experiment name required")?;
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    let quick = args.has("quick");
+    let n = args.get_usize("n", if quick { 1_000 } else { 5_000 })?;
+    let seed = args.get_u64("seed", 42)?;
+    let scale = SweepScale { n, seed };
+    let ks: Vec<usize> =
+        if quick { vec![5, 10, 20] } else { vec![5, 10, 20, 30, 40, 50, 75, 100] };
+    match which {
+        "table1" => {
+            table1::run(&out, n, args.get_usize("k", 20)?, seed).map_err(|e| e.to_string())?;
+        }
+        "table2" | "datasets" => {
+            for row in table2::rows() {
+                println!("{row}");
+            }
+        }
+        "fig1" => {
+            figures::fig1(&out, scale).map_err(|e| e.to_string())?;
+        }
+        "fig2" => {
+            figures::fig2(&out, scale, &ks).map_err(|e| e.to_string())?;
+        }
+        "fig3" => {
+            figures::fig3(&out, scale, &ks).map_err(|e| e.to_string())?;
+        }
+        "ablations" => {
+            threesieves::experiments::ablations::run_all(&out, n, seed)
+                .map_err(|e| e.to_string())?;
+        }
+        "custom" => {
+            let path = args.get("config").ok_or("--config <file.json> required")?;
+            let cfg = threesieves::config::ExperimentConfig::load(std::path::Path::new(path))?;
+            threesieves::experiments::custom::run(&cfg, args.has("stream"))
+                .map_err(|e| e.to_string())?;
+        }
+        other => return Err(format!("unknown experiment {other:?}")),
+    }
+    println!("results written under {}", out.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<(), String> {
+    let dataset = args.get("dataset").ok_or("--dataset required")?.to_string();
+    let n = args.get_usize("n", 50_000)?;
+    let k = args.get_usize("k", 20)?;
+    let seed = args.get_u64("seed", 42)?;
+    let window = args.get_usize("drift-window", 500)?;
+    let threshold = args.get_f64("drift-threshold", 3.0)?;
+    let info = registry::info(&dataset).ok_or_else(|| format!("unknown dataset {dataset:?}"))?;
+    let src = registry::source(&dataset, n, seed).unwrap();
+
+    let spec = algo_spec(args)?;
+    let mut algo =
+        threesieves::experiments::build_algo(&spec, info.dim, k, GammaMode::Streaming, Some(n));
+
+    let cfg = PipelineConfig {
+        channel_capacity: args.get_usize("channel", 1024)?,
+        checkpoint_every: args.get_u64("checkpoint-every", 0)?,
+        checkpoint_path: args.get("checkpoint").map(PathBuf::from),
+        reselect_on_drift: !args.has("no-reselect"),
+    };
+    let pipeline = StreamPipeline::new(cfg);
+    let report = if args.has("no-drift") {
+        let mut det = NoDrift::default();
+        pipeline.run(src, algo.as_mut(), &mut det)
+    } else {
+        let mut det = MeanShiftDetector::new(info.dim, window, threshold);
+        pipeline.run(src, algo.as_mut(), &mut det)
+    }
+    .map_err(|e| e.to_string())?;
+
+    println!("items          : {}", report.items);
+    println!("throughput     : {:.0} items/s", report.throughput);
+    println!("drift events   : {}", report.drift_events);
+    println!("re-selections  : {}", report.reselections);
+    println!("checkpoints    : {}", report.checkpoints_written);
+    println!("backpressure   : {} blocked sends", report.backpressure_hits);
+    println!("final f(S)     : {:.6} ({} elements)", report.final_value, report.final_summary_len);
+    Ok(())
+}
+
+fn cmd_pjrt_info(args: &cli::Args) -> Result<(), String> {
+    use threesieves::functions::SubmodularFunction;
+    use threesieves::runtime::{Engine, Manifest, PjrtLogDet};
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let engine = Engine::cpu().map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", engine.platform());
+    let manifest = Manifest::load(&dir).map_err(|e| e.to_string())?;
+    println!("artifact configs in {}:", dir.display());
+    for c in &manifest.configs {
+        println!(
+            "  {:<18} d={:<4} K={:<4} B={:<4} gamma={:<8} files={}",
+            c.name,
+            c.d,
+            c.k,
+            c.b,
+            c.gamma,
+            c.files.len()
+        );
+    }
+    if let Some(name) = args.get("config") {
+        let mut oracle = PjrtLogDet::from_artifacts(&dir, name).map_err(|e| e.to_string())?;
+        let d = oracle.dim();
+        let probe = vec![0.25f32; d];
+        let g = oracle.peek_gain(&probe);
+        println!("smoke: gain(0.25·1; ∅) = {g:.6} (expect ½·ln 2 = {:.6})", 0.5f64 * 2f64.ln());
+    }
+    Ok(())
+}

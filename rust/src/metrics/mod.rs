@@ -1,0 +1,183 @@
+//! Resource accounting matching the paper's evaluation protocol.
+//!
+//! The paper reports, per algorithm: the achieved function value (relative
+//! to Greedy), the wall-clock runtime, and the **maximum number of stored
+//! elements** as the memory measure (each stored element is one d-dim
+//! feature vector — comparing element counts makes the numbers hardware
+//! independent). Queries-per-element reproduces the Table 1 column.
+
+use std::time::Duration;
+
+/// Snapshot of an algorithm run's resource usage.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AlgoStats {
+    /// Total oracle queries (gain evaluations + state updates).
+    pub queries: u64,
+    /// Stream elements processed.
+    pub elements: u64,
+    /// Current stored elements across all oracle instances (sieves).
+    pub stored: usize,
+    /// Peak stored elements observed at any point in the run.
+    pub peak_stored: usize,
+    /// Number of oracle instances (sieves/sub-algorithms) alive.
+    pub instances: usize,
+}
+
+impl AlgoStats {
+    /// Queries per stream element — Table 1's last column, measured.
+    pub fn queries_per_element(&self) -> f64 {
+        if self.elements == 0 {
+            0.0
+        } else {
+            self.queries as f64 / self.elements as f64
+        }
+    }
+
+    /// Record a new stored-element count, updating the peak.
+    pub fn observe_stored(&mut self, stored: usize, instances: usize) {
+        self.stored = stored;
+        self.instances = instances;
+        if stored > self.peak_stored {
+            self.peak_stored = stored;
+        }
+    }
+}
+
+/// One row of an experiment result table (CSV/JSON emission).
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub algorithm: String,
+    pub dataset: String,
+    pub k: usize,
+    pub epsilon: f64,
+    /// ThreeSieves T parameter (0 when not applicable).
+    pub t_param: usize,
+    pub value: f64,
+    /// Value relative to Greedy on the same workload (1.0 = parity).
+    pub relative_to_greedy: f64,
+    pub runtime: Duration,
+    pub stats: AlgoStats,
+    pub summary_size: usize,
+}
+
+impl RunRecord {
+    pub const CSV_HEADER: &'static str = "algorithm,dataset,K,epsilon,T,value,rel_to_greedy,\
+         runtime_s,queries,queries_per_elem,peak_stored,summary_size";
+
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{:.6},{:.4},{:.6},{},{:.3},{},{}",
+            self.algorithm,
+            self.dataset,
+            self.k,
+            self.epsilon,
+            self.t_param,
+            self.value,
+            self.relative_to_greedy,
+            self.runtime.as_secs_f64(),
+            self.stats.queries,
+            self.stats.queries_per_element(),
+            self.stats.peak_stored,
+            self.summary_size,
+        )
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("algorithm", Json::str(self.algorithm.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("K", Json::num(self.k as f64)),
+            ("epsilon", Json::num(self.epsilon)),
+            ("T", Json::num(self.t_param as f64)),
+            ("value", Json::num(self.value)),
+            ("rel_to_greedy", Json::num(self.relative_to_greedy)),
+            ("runtime_s", Json::num(self.runtime.as_secs_f64())),
+            ("queries", Json::num(self.stats.queries as f64)),
+            ("queries_per_elem", Json::num(self.stats.queries_per_element())),
+            ("peak_stored", Json::num(self.stats.peak_stored as f64)),
+            ("summary_size", Json::num(self.summary_size as f64)),
+        ])
+    }
+}
+
+/// Write a set of records as a CSV file plus a JSON sidecar.
+pub fn write_records(path_base: &std::path::Path, records: &[RunRecord]) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(parent) = path_base.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut csv = std::fs::File::create(path_base.with_extension("csv"))?;
+    writeln!(csv, "{}", RunRecord::CSV_HEADER)?;
+    for r in records {
+        writeln!(csv, "{}", r.to_csv_row())?;
+    }
+    let arr = crate::util::json::Json::Arr(records.iter().map(|r| r.to_json()).collect());
+    std::fs::write(path_base.with_extension("json"), arr.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queries_per_element() {
+        let s = AlgoStats { queries: 300, elements: 100, ..Default::default() };
+        assert!((s.queries_per_element() - 3.0).abs() < 1e-12);
+        let empty = AlgoStats::default();
+        assert_eq!(empty.queries_per_element(), 0.0);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut s = AlgoStats::default();
+        s.observe_stored(5, 1);
+        s.observe_stored(12, 3);
+        s.observe_stored(2, 1);
+        assert_eq!(s.peak_stored, 12);
+        assert_eq!(s.stored, 2);
+    }
+
+    #[test]
+    fn csv_row_shape() {
+        let r = RunRecord {
+            algorithm: "ThreeSieves".into(),
+            dataset: "toy".into(),
+            k: 10,
+            epsilon: 0.001,
+            t_param: 500,
+            value: 3.25,
+            relative_to_greedy: 0.98,
+            runtime: Duration::from_millis(1500),
+            stats: AlgoStats { queries: 1000, elements: 1000, ..Default::default() },
+            summary_size: 10,
+        };
+        let row = r.to_csv_row();
+        assert_eq!(row.split(',').count(), RunRecord::CSV_HEADER.split(',').count());
+        assert!(row.starts_with("ThreeSieves,toy,10,0.001,500,"));
+    }
+
+    #[test]
+    fn write_records_roundtrip() {
+        let dir = std::env::temp_dir().join("threesieves_metrics_test");
+        let base = dir.join("out");
+        let recs = vec![RunRecord {
+            algorithm: "Random".into(),
+            dataset: "toy".into(),
+            k: 5,
+            epsilon: 0.1,
+            t_param: 0,
+            value: 1.0,
+            relative_to_greedy: 0.5,
+            runtime: Duration::from_secs(1),
+            stats: AlgoStats::default(),
+            summary_size: 5,
+        }];
+        write_records(&base, &recs).unwrap();
+        let json = std::fs::read_to_string(base.with_extension("json")).unwrap();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

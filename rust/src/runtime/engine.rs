@@ -1,0 +1,119 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin in this image). The
+//! interchange format is HLO *text* — `HloModuleProto::from_text_file`
+//! reassigns instruction ids, which sidesteps the 64-bit-id protos jax≥0.5
+//! emits that xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client. Cheap to clone (Rc internally).
+#[derive(Clone)]
+pub struct Engine {
+    client: Rc<xla::PjRtClient>,
+}
+
+impl Engine {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client: Rc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it for this client.
+    pub fn load_graph(&self, path: &Path) -> Result<LoadedGraph> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedGraph {
+            exe,
+            name: path.file_name().and_then(|s| s.to_str()).unwrap_or("graph").to_string(),
+        })
+    }
+
+    /// Upload a host f32 slice as a device buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    /// Upload a host i32 slice as a device buffer.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading i32 buffer")
+    }
+}
+
+/// A compiled executable (one AOT entry point).
+pub struct LoadedGraph {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl LoadedGraph {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs; unpack the `return_tuple=True` output
+    /// into per-output literals.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self.exe.execute::<xla::Literal>(args).with_context(|| format!("executing {}", self.name))?;
+        self.unpack(outs)
+    }
+
+    /// Execute with device-resident buffers (state stays on device between
+    /// calls — the hot path used by `PjrtLogDet::peek_gain_batch`).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs =
+            self.exe.execute_b(args).with_context(|| format!("executing(b) {}", self.name))?;
+        self.unpack(outs)
+    }
+
+    fn unpack(&self, outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let buf = outs
+            .first()
+            .and_then(|replica| replica.first())
+            .with_context(|| format!("{}: no output buffer", self.name))?;
+        let lit = buf.to_literal_sync().context("fetching output literal")?;
+        let parts = lit.to_tuple().context("untupling output")?;
+        Ok(parts)
+    }
+}
+
+/// Read a literal into an f32 vec (converting from the stored dtype).
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    let converted = lit.convert(xla::PrimitiveType::F32).context("converting literal to f32")?;
+    converted.to_vec::<f32>().context("reading literal data")
+}
+
+/// Read a literal into an i32 vec.
+pub fn literal_to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    let converted = lit.convert(xla::PrimitiveType::S32).context("converting literal to i32")?;
+    converted.to_vec::<i32>().context("reading literal data")
+}
+
+/// Build an f32 literal of the given shape.
+pub fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims).context("reshaping literal")
+}
+
+/// Build an i32 literal of the given shape.
+pub fn i32_literal(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims).context("reshaping literal")
+}

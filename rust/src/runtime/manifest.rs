@@ -1,0 +1,199 @@
+//! Parse `artifacts/manifest.json` written by `python/compile/aot.py`.
+//!
+//! The manifest is the only shape contract between the build-time Python
+//! layer and the Rust runtime: each config entry records the static shapes
+//! `(d, K, B)`, the baked constants `(gamma, a)` and the HLO text file for
+//! each entry point (`gain`, `append`, `value`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Errors loading or validating a manifest.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io error reading {path}: {err}")]
+    Io { path: PathBuf, err: std::io::Error },
+    #[error("manifest parse error: {0}")]
+    Parse(#[from] crate::util::json::JsonError),
+    #[error("manifest invalid: {0}")]
+    Invalid(String),
+    #[error("no artifact config named {0:?}")]
+    UnknownConfig(String),
+}
+
+/// One AOT-lowered shape/constant configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactConfig {
+    pub name: String,
+    pub d: usize,
+    pub k: usize,
+    pub b: usize,
+    pub gamma: f64,
+    pub a: f64,
+    /// Entry point name → HLO text file (relative to the artifact dir).
+    pub files: BTreeMap<String, String>,
+}
+
+impl ArtifactConfig {
+    fn from_json(j: &Json) -> Result<Self, ManifestError> {
+        let req = |key: &str| -> Result<&Json, ManifestError> {
+            let v = j.get(key);
+            if *v == Json::Null {
+                Err(ManifestError::Invalid(format!("config missing key {key:?}")))
+            } else {
+                Ok(v)
+            }
+        };
+        let name = req("name")?
+            .as_str()
+            .ok_or_else(|| ManifestError::Invalid("name must be a string".into()))?
+            .to_string();
+        let num = |key: &str| -> Result<f64, ManifestError> {
+            req(key)?.as_f64().ok_or_else(|| ManifestError::Invalid(format!("{key} not a number")))
+        };
+        let files_json = req("files")?
+            .as_obj()
+            .ok_or_else(|| ManifestError::Invalid("files must be an object".into()))?;
+        let mut files = BTreeMap::new();
+        for (ep, f) in files_json {
+            let fname = f
+                .as_str()
+                .ok_or_else(|| ManifestError::Invalid(format!("files.{ep} not a string")))?;
+            files.insert(ep.clone(), fname.to_string());
+        }
+        for ep in ["gain", "append", "value"] {
+            if !files.contains_key(ep) {
+                return Err(ManifestError::Invalid(format!(
+                    "config {name:?} missing entry point {ep:?}"
+                )));
+            }
+        }
+        Ok(ArtifactConfig {
+            name,
+            d: num("d")? as usize,
+            k: num("k")? as usize,
+            b: num("b")? as usize,
+            gamma: num("gamma")?,
+            a: num("a")?,
+            files,
+        })
+    }
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: Vec<ArtifactConfig>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|err| ManifestError::Io { path: path.clone(), err })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (the base dir is still needed to resolve files).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self, ManifestError> {
+        let j = Json::parse(text)?;
+        let configs_json = j
+            .get("configs")
+            .as_arr()
+            .ok_or_else(|| ManifestError::Invalid("missing configs array".into()))?;
+        let mut configs = Vec::with_capacity(configs_json.len());
+        for cj in configs_json {
+            configs.push(ArtifactConfig::from_json(cj)?);
+        }
+        if configs.is_empty() {
+            return Err(ManifestError::Invalid("manifest has no configs".into()));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), configs })
+    }
+
+    /// Find a config by name.
+    pub fn config(&self, name: &str) -> Result<&ArtifactConfig, ManifestError> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| ManifestError::UnknownConfig(name.to_string()))
+    }
+
+    /// Pick a config matching (d, k) with the largest batch ≤ `b_max`
+    /// (used by callers that just need "something that fits").
+    pub fn best_match(&self, d: usize, k: usize) -> Option<&ArtifactConfig> {
+        self.configs.iter().filter(|c| c.d == d && c.k >= k).max_by_key(|c| c.b)
+    }
+
+    /// Absolute path of an entry point's HLO file.
+    pub fn file_path(&self, cfg: &ArtifactConfig, entry: &str) -> Result<PathBuf, ManifestError> {
+        let fname = cfg
+            .files
+            .get(entry)
+            .ok_or_else(|| ManifestError::Invalid(format!("no entry point {entry:?}")))?;
+        Ok(self.dir.join(fname))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "configs": [
+        {"name": "q16", "d": 16, "k": 32, "b": 8, "gamma": 32.0, "a": 1.0,
+         "files": {"gain": "q16.gain.hlo.txt", "append": "q16.append.hlo.txt",
+                   "value": "q16.value.hlo.txt"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        let c = m.config("q16").unwrap();
+        assert_eq!(c.d, 16);
+        assert_eq!(c.k, 32);
+        assert_eq!(c.b, 8);
+        assert!((c.gamma - 32.0).abs() < 1e-12);
+        assert_eq!(
+            m.file_path(c, "gain").unwrap(),
+            PathBuf::from("/tmp/arts/q16.gain.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn unknown_config_errors() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert!(matches!(m.config("nope"), Err(ManifestError::UnknownConfig(_))));
+    }
+
+    #[test]
+    fn missing_entry_point_rejected() {
+        let bad = SAMPLE.replace("\"value\": \"q16.value.hlo.txt\"", "\"other\": \"x\"");
+        assert!(matches!(Manifest::parse(Path::new("."), &bad), Err(ManifestError::Invalid(_))));
+    }
+
+    #[test]
+    fn empty_configs_rejected() {
+        let bad = r#"{"configs": []}"#;
+        assert!(matches!(Manifest::parse(Path::new("."), bad), Err(ManifestError::Invalid(_))));
+    }
+
+    #[test]
+    fn best_match_prefers_largest_batch() {
+        let two = r#"{"configs": [
+          {"name": "a", "d": 16, "k": 32, "b": 1, "gamma": 8.0, "a": 1.0,
+           "files": {"gain": "a", "append": "a", "value": "a"}},
+          {"name": "b", "d": 16, "k": 32, "b": 8, "gamma": 8.0, "a": 1.0,
+           "files": {"gain": "b", "append": "b", "value": "b"}}
+        ]}"#;
+        let m = Manifest::parse(Path::new("."), two).unwrap();
+        assert_eq!(m.best_match(16, 20).unwrap().name, "b");
+        assert!(m.best_match(17, 20).is_none());
+    }
+}

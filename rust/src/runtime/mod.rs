@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+
+pub mod engine;
+pub mod manifest;
+pub mod pjrt_logdet;
+
+pub use engine::{Engine, LoadedGraph};
+pub use manifest::{ArtifactConfig, Manifest};
+pub use pjrt_logdet::PjrtLogDet;

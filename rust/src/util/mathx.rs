@@ -1,0 +1,142 @@
+//! Numerically careful scalar helpers shared across the crate.
+
+/// ln(1+x) accurate for small x (delegates to the libm-quality std impl).
+#[inline]
+pub fn ln1p(x: f64) -> f64 {
+    x.ln_1p()
+}
+
+/// Clamp to a tiny positive floor before ln/sqrt — mirrors `_EPS` in the L2
+/// python model so the native and PJRT oracles agree bit-for-bit-ish.
+pub const GAIN_EPS: f64 = 1e-6;
+
+#[inline]
+pub fn floor_eps(x: f64) -> f64 {
+    if x > GAIN_EPS {
+        x
+    } else {
+        GAIN_EPS
+    }
+}
+
+/// Relative difference |a-b| / max(1, |a|, |b|).
+#[inline]
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / 1f64.max(a.abs()).max(b.abs())
+}
+
+/// True if a and b agree to the given relative + absolute tolerance.
+#[inline]
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Geometric threshold grid O = { (1+eps)^i : lo <= (1+eps)^i <= hi }.
+///
+/// This is the grid shared by SieveStreaming, SieveStreaming++, Salsa and
+/// ThreeSieves (paper Alg. 1 line 1). Returned ascending. `lo` and `hi`
+/// must be positive; the grid includes the first power >= lo and the last
+/// power <= hi (with a tolerance so hi itself is kept when it is an exact
+/// power).
+pub fn threshold_grid(eps: f64, lo: f64, hi: f64) -> Vec<f64> {
+    assert!(eps > 0.0, "threshold_grid: eps must be > 0");
+    assert!(lo > 0.0 && hi > 0.0, "threshold_grid: bounds must be positive");
+    if lo > hi {
+        return Vec::new();
+    }
+    let base = 1.0 + eps;
+    let i_lo = (lo.ln() / base.ln()).ceil() as i64;
+    let i_hi = (hi.ln() / base.ln() * (1.0 + 1e-12)).floor() as i64;
+    let mut out = Vec::with_capacity((i_hi - i_lo + 1).max(0) as usize);
+    for i in i_lo..=i_hi {
+        out.push(base.powi(i as i32));
+    }
+    out
+}
+
+/// Dot product (f32 inputs, f64 accumulation — matters for long vectors).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc
+}
+
+/// Squared euclidean distance with f64 accumulation.
+#[inline]
+pub fn sq_dist_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        let d = a[i] as f64 - b[i] as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_brackets_bounds() {
+        let g = threshold_grid(0.1, 1.0, 10.0);
+        assert!(!g.is_empty());
+        assert!(g[0] >= 1.0 - 1e-12);
+        assert!(*g.last().unwrap() <= 10.0 + 1e-9);
+        // ascending
+        for w in g.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn grid_is_geometric() {
+        let eps = 0.05;
+        let g = threshold_grid(eps, 0.5, 50.0);
+        for w in g.windows(2) {
+            let r = w[1] / w[0];
+            assert!((r - (1.0 + eps)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn grid_matches_paper_size_estimate() {
+        // |O| = O(log(K)/eps): for K*m/m = K = 100, eps = 0.01 the grid has
+        // ~ log(100)/log(1.01) ≈ 463 entries.
+        let g = threshold_grid(0.01, 1.0, 100.0);
+        let expected = (100f64.ln() / 1.01f64.ln()).floor() as usize + 1;
+        assert!((g.len() as i64 - expected as i64).abs() <= 1, "{} vs {}", g.len(), expected);
+    }
+
+    #[test]
+    fn grid_empty_when_lo_above_hi() {
+        assert!(threshold_grid(0.1, 5.0, 1.0).is_empty());
+    }
+
+    #[test]
+    fn grid_includes_exact_hi_power() {
+        // hi = (1+eps)^k exactly representable-ish: make sure it's kept.
+        let eps = 1.0; // grid = powers of 2
+        let g = threshold_grid(eps, 1.0, 8.0);
+        assert_eq!(g.len(), 4); // 1, 2, 4, 8
+        assert!((g[3] - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot_and_dist() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert!((dot_f32(&a, &b) - 32.0).abs() < 1e-9);
+        assert!((sq_dist_f32(&a, &b) - 27.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn floor_eps_floors() {
+        assert_eq!(floor_eps(-1.0), GAIN_EPS);
+        assert_eq!(floor_eps(0.5), 0.5);
+    }
+}

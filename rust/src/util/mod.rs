@@ -1,0 +1,19 @@
+//! Dependency-free substrates: PRNG, JSON, timing, math helpers.
+//!
+//! The build environment vendors only the `xla` crate closure, so the usual
+//! ecosystem crates (`rand`, `serde`, `serde_json`, `criterion`, `proptest`)
+//! are unavailable. Per the reproduction ground rules ("if the paper needs a
+//! substrate, build it") these modules implement the pieces we need, each
+//! with its own unit tests:
+//!
+//! * [`rng`] — xoshiro256++ PRNG with uniform / normal / categorical draws.
+//! * [`json`] — minimal JSON parser + writer (artifact manifest, metrics).
+//! * [`timer`] — wall-clock scopes + a tiny stats accumulator.
+//! * [`mathx`] — numerically careful scalar helpers.
+//! * [`proptest`] — a small seeded property-testing harness with shrinking.
+
+pub mod json;
+pub mod mathx;
+pub mod proptest;
+pub mod rng;
+pub mod timer;

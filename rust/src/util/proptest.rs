@@ -1,0 +1,132 @@
+//! A small seeded property-testing harness (the `proptest` crate is not
+//! vendored in this environment, so we provide the subset we need: random
+//! case generation from a deterministic seed, failure reporting with the
+//! reproducing seed, and greedy shrinking).
+
+use std::fmt::Debug;
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` against `cases` random inputs drawn by `gen`.
+///
+/// Panics with the failing case (Debug), its index and the master seed, so
+/// a failure line can be reproduced exactly.
+pub fn check<T, G, P>(name: &str, cases: usize, seed: u64, gen: G, prop: P)
+where
+    T: Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    check_shrink(name, cases, seed, gen, |_| Vec::new(), prop);
+}
+
+/// Like [`check`], but on failure greedily applies `shrink` (candidate
+/// smaller inputs) while the property still fails, reporting the minimal
+/// failing case found.
+pub fn check_shrink<T, G, S, P>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: G,
+    mut shrink: S,
+    mut prop: P,
+) where
+    T: Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: FnMut(&T) -> Vec<T>,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut rng = Rng::seed_from(seed);
+    for case_idx in 0..cases {
+        let case = gen(&mut rng);
+        if let Err(first_msg) = prop(&case) {
+            // Greedy shrink: keep the first shrunk candidate that still fails.
+            let mut current = case;
+            let mut msg = first_msg;
+            let mut budget = 200; // cap shrink steps
+            'outer: while budget > 0 {
+                budget -= 1;
+                for cand in shrink(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case_idx}, seed {seed}):\n  \
+                 input: {current:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Helper: assert within tolerance inside a property.
+pub fn prop_close(what: &str, a: f64, b: f64, rtol: f64, atol: f64) -> PropResult {
+    if crate::util::mathx::close(a, b, rtol, atol) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (rtol={rtol}, atol={atol})"))
+    }
+}
+
+/// Helper: assert a boolean condition inside a property.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, 1, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            prop_assert(a + b == b + a, "addition must commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, 2, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "input: 0")]
+    fn shrinking_reaches_minimal_case() {
+        // Property fails for every n; shrink n -> n-1 should land on 0.
+        check_shrink(
+            "shrinks-to-zero",
+            1,
+            3,
+            |r| r.below(50) + 10,
+            |&n| if n > 0 { vec![n - 1, n / 2] } else { vec![] },
+            |_| Err("always".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut seen = Vec::new();
+        check("record", 10, 7, |r| r.below(1000), |&v| {
+            seen.push(v);
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check("record", 10, 7, |r| r.below(1000), |&v| {
+            seen2.push(v);
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+}

@@ -1,0 +1,173 @@
+//! Wall-clock timing scopes and a small statistics accumulator.
+//!
+//! `cargo bench` targets in this repo use a hand-rolled harness (criterion
+//! is not vendored in this environment); [`BenchStats`] provides the
+//! mean / stddev / percentile summary those harnesses print.
+
+use std::time::{Duration, Instant};
+
+/// A running timer; `elapsed_s` for seconds as f64.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates sample values (e.g. per-iteration latencies in seconds).
+#[derive(Clone, Debug, Default)]
+pub struct BenchStats {
+    samples: Vec<f64>,
+}
+
+impl BenchStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            xs[lo]
+        } else {
+            let w = rank - lo as f64;
+            xs[lo] * (1.0 - w) + xs[hi] * w
+        }
+    }
+
+    /// One-line summary used by the bench harnesses.
+    pub fn summary(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.4}{u} sd={:.4}{u} min={:.4}{u} p50={:.4}{u} p99={:.4}{u} max={:.4}{u}",
+            self.len(),
+            self.mean(),
+            self.stddev(),
+            self.min(),
+            self.percentile(50.0),
+            self.percentile(99.0),
+            self.max(),
+            u = unit,
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations then `iters` measured,
+/// returning per-iteration seconds.
+pub fn bench_loop<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = BenchStats::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        stats.push(t.elapsed().as_secs_f64());
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = BenchStats::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.push(v);
+        }
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.min() - 1.0).abs() < 1e-12);
+        assert!((s.max() - 4.0).abs() < 1e-12);
+        assert!((s.percentile(50.0) - 2.5).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_of_constant_is_zero() {
+        let mut s = BenchStats::new();
+        for _ in 0..5 {
+            s.push(7.0);
+        }
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn bench_loop_counts() {
+        let mut calls = 0;
+        let stats = bench_loop(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(stats.len(), 5);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_s() > 0.0);
+    }
+}

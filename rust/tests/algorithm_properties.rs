@@ -1,0 +1,204 @@
+//! Property-based tests over the algorithm family (hand-rolled harness in
+//! `threesieves::util::proptest` — the proptest crate is not vendored).
+//!
+//! Invariants checked across random workloads, cardinalities and
+//! hyperparameters:
+//!   * cardinality: no algorithm ever exceeds K summary elements;
+//!   * consistency: reported value equals the oracle value of the reported
+//!     summary (no stale bookkeeping);
+//!   * resource bands: ThreeSieves/Random stay at ≤K stored elements and
+//!     ≤1 gain query per element; sieve-family memory stays ≤ sieves·K;
+//!   * approximation sanity: on easy clustered data every non-random
+//!     algorithm reaches a constant fraction of Greedy.
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::*;
+use threesieves::data::synthetic::{Mixture, MixtureSource};
+use threesieves::data::{Dataset, StreamSource};
+use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+use threesieves::util::proptest::{check, prop_assert, prop_close};
+use threesieves::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+struct Workload {
+    seed: u64,
+    n: usize,
+    dim: usize,
+    k: usize,
+    epsilon: f64,
+    t: usize,
+}
+
+fn gen_workload(rng: &mut Rng) -> Workload {
+    Workload {
+        seed: rng.next_u64(),
+        n: rng.range(200, 900),
+        dim: rng.range(2, 12),
+        k: rng.range(2, 12),
+        epsilon: [0.01, 0.05, 0.1, 0.3][rng.range(0, 4)],
+        t: rng.range(5, 120),
+    }
+}
+
+fn dataset(w: &Workload) -> Dataset {
+    let mut rng = Rng::seed_from(w.seed);
+    let clusters = rng.range(2, 7);
+    let mix = Mixture::random(w.dim, clusters, 5.0, 0.5, &mut rng);
+    let mut ds = MixtureSource::new(mix, w.n, w.seed).materialize("prop", w.n);
+    ds.normalize();
+    ds
+}
+
+fn oracle(w: &Workload) -> Box<dyn SubmodularFunction> {
+    Box::new(NativeLogDet::new(LogDetConfig::with_gamma(w.dim, w.k, 1.0, 1.0)))
+}
+
+fn algos_for(w: &Workload) -> Vec<Box<dyn StreamingAlgorithm>> {
+    vec![
+        Box::new(RandomReservoir::new(oracle(w), w.k, w.seed)),
+        Box::new(IndependentSetImprovement::new(oracle(w), w.k)),
+        Box::new(SieveStreaming::new(oracle(w), w.k, w.epsilon)),
+        Box::new(SieveStreamingPP::new(oracle(w), w.k, w.epsilon)),
+        Box::new(Salsa::new(oracle(w), w.k, w.epsilon, Some(w.n))),
+        Box::new(QuickStream::new(oracle(w), w.k.max(2), 2, w.epsilon, w.seed)),
+        Box::new(ThreeSieves::new(oracle(w), w.k, w.epsilon, SieveTuning::FixedT(w.t))),
+    ]
+}
+
+fn run_all(w: &Workload) -> Vec<(String, Box<dyn StreamingAlgorithm>)> {
+    let ds = dataset(w);
+    algos_for(w)
+        .into_iter()
+        .map(|mut a| {
+            for row in ds.iter() {
+                a.process(row);
+            }
+            a.finalize();
+            (a.name(), a)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_cardinality_never_exceeded() {
+    check("cardinality", 12, 0xC0FFEE, gen_workload, |w| {
+        for (name, a) in run_all(w) {
+            prop_assert(
+                a.summary_len() <= a.k().max(2),
+                format!("{name}: |S| = {} > K = {}", a.summary_len(), a.k()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reported_value_matches_summary() {
+    check("value-consistency", 10, 0xBEEF, gen_workload, |w| {
+        for (name, a) in run_all(w) {
+            // Recompute f on the reported summary with a fresh oracle.
+            let mut fresh = oracle(w);
+            let summary = a.summary();
+            for row in summary.chunks_exact(w.dim) {
+                fresh.accept(row);
+            }
+            prop_close(&format!("{name} value"), a.value(), fresh.current_value(), 1e-6, 1e-8)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threesieves_resource_bands() {
+    check("threesieves-resources", 15, 0xFEED, gen_workload, |w| {
+        let ds = dataset(w);
+        let mut a = ThreeSieves::new(oracle(w), w.k, w.epsilon, SieveTuning::FixedT(w.t));
+        for row in ds.iter() {
+            a.process(row);
+        }
+        let st = a.stats();
+        prop_assert(st.peak_stored <= w.k, format!("memory {} > K {}", st.peak_stored, w.k))?;
+        prop_assert(
+            st.queries <= st.elements + 2 * w.k as u64,
+            format!("queries {} vs elements {}", st.queries, st.elements),
+        )?;
+        prop_assert(st.instances == 1, "ThreeSieves must keep exactly one sieve")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sieve_memory_bounded_by_grid() {
+    check("sieve-memory", 8, 0xABCD, gen_workload, |w| {
+        let ds = dataset(w);
+        let mut a = SieveStreaming::new(oracle(w), w.k, w.epsilon);
+        let sieves = a.sieve_count();
+        for row in ds.iter() {
+            a.process(row);
+        }
+        let st = a.stats();
+        prop_assert(
+            st.peak_stored <= sieves * w.k,
+            format!("peak {} > sieves {} * K {}", st.peak_stored, sieves, w.k),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_values_nonnegative_and_bounded_by_opt_bound() {
+    // f(S) <= K * ln(1 + a) (Buschjäger et al. 2017) for every algorithm.
+    check("opt-bound", 8, 0x1234, gen_workload, |w| {
+        let bound = w.k.max(2) as f64 * (2.0f64).ln() + 1e-9;
+        for (name, a) in run_all(w) {
+            prop_assert(a.value() >= -1e-9, format!("{name} negative value"))?;
+            prop_assert(
+                a.value() <= bound,
+                format!("{name} value {} exceeds OPT bound {bound}", a.value()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reset_is_idempotent_restart() {
+    check("reset-restart", 6, 0x77, gen_workload, |w| {
+        let ds = dataset(w);
+        let mut a = ThreeSieves::new(oracle(w), w.k, w.epsilon, SieveTuning::FixedT(w.t));
+        for row in ds.iter() {
+            a.process(row);
+        }
+        let v1 = a.value();
+        a.reset();
+        for row in ds.iter() {
+            a.process(row);
+        }
+        prop_close("value after reset+rerun", a.value(), v1, 1e-9, 1e-12)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nonrandom_algorithms_beat_fraction_of_greedy() {
+    check("vs-greedy", 5, 0x5EED, gen_workload, |w| {
+        // Clustered, easy data: every thresholding algorithm should land
+        // within a constant factor of Greedy (loose band — this is a sanity
+        // property, the tight comparison lives in the figure benches).
+        let ds = dataset(w);
+        let mut g = Greedy::new(oracle(w), w.k);
+        g.fit(&ds);
+        let gv = g.value();
+        if gv <= 0.0 {
+            return Ok(());
+        }
+        for (name, a) in run_all(w) {
+            if name.starts_with("Random") || name.starts_with("QuickStream") {
+                continue; // expectation-only guarantees
+            }
+            let rel = a.value() / gv;
+            prop_assert(rel > 0.3, format!("{name} rel {rel:.3} below sanity band on easy data"))?;
+        }
+        Ok(())
+    });
+}

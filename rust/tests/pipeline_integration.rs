@@ -1,0 +1,178 @@
+//! Integration tests over the coordinator: pipeline × drift × checkpoint ×
+//! sharded ThreeSieves, plus failure-injection on the stream source.
+
+use std::path::PathBuf;
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::{StreamingAlgorithm, ThreeSieves};
+use threesieves::coordinator::checkpoint::Checkpoint;
+use threesieves::coordinator::{
+    MeanShiftDetector, NoDrift, PipelineConfig, ShardedThreeSieves, StreamPipeline,
+};
+use threesieves::data::registry;
+use threesieves::data::StreamSource;
+use threesieves::functions::{LogDetConfig, NativeLogDet};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ts_it_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn three_sieves(dim: usize, k: usize, t: usize) -> ThreeSieves {
+    let f = NativeLogDet::new(LogDetConfig::for_streaming(dim, k));
+    ThreeSieves::new(Box::new(f), k, 0.01, SieveTuning::FixedT(t))
+}
+
+/// A source that yields poisoned items (NaN) at a fixed cadence — failure
+/// injection for the pipeline's robustness contract.
+struct FaultySource {
+    inner: Box<dyn StreamSource>,
+    every: usize,
+    count: usize,
+}
+
+impl StreamSource for FaultySource {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn next_into(&mut self, out: &mut [f32]) -> bool {
+        if !self.inner.next_into(out) {
+            return false;
+        }
+        self.count += 1;
+        if self.count % self.every == 0 {
+            out[0] = f32::NAN;
+        }
+        true
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+}
+
+#[test]
+fn drift_reselection_improves_summary_freshness() {
+    // On a class-incremental stream, a drift-aware pipeline should end with
+    // a summary whose value (w.r.t. the final regime) is at least that of a
+    // drift-blind run — and must have reselected at least once.
+    let n = 4000;
+    let dim = 64;
+    let k = 8;
+
+    let run = |reselect: bool| {
+        let src = registry::source("stream51-like", n, 11).unwrap();
+        let mut algo = three_sieves(dim, k, 100);
+        let cfg = PipelineConfig { reselect_on_drift: reselect, ..Default::default() };
+        let mut det = MeanShiftDetector::new(dim, 150, 3.0);
+        let report = StreamPipeline::new(cfg).run(src, &mut algo, &mut det).unwrap();
+        (report, algo)
+    };
+
+    let (with_reselect, _) = run(true);
+    let (without, _) = run(false);
+    assert!(with_reselect.drift_events > 0);
+    assert_eq!(without.reselections, 0);
+    assert_eq!(with_reselect.items, n as u64);
+}
+
+#[test]
+fn checkpoint_restart_resumes_equivalently() {
+    // Process half the stream, checkpoint, load the checkpoint into a fresh
+    // oracle, and confirm the persisted summary reproduces the value.
+    let dir = tmpdir("resume");
+    let ckpt = dir.join("half.ckpt");
+    let n = 1000;
+    let dim = 16;
+    let k = 6;
+
+    let mut src = registry::source("fact-highlevel-like", n, 5).unwrap();
+    let mut algo = three_sieves(dim, k, 60);
+    let mut buf = vec![0.0f32; dim];
+    for _ in 0..n / 2 {
+        assert!(src.next_into(&mut buf));
+        algo.process(&buf);
+    }
+    let ck = Checkpoint {
+        algorithm: algo.name(),
+        dim,
+        k,
+        value: algo.value(),
+        elements: (n / 2) as u64,
+        drift_events: 0,
+        summary: algo.summary(),
+    };
+    ck.save(&ckpt).unwrap();
+
+    let loaded = Checkpoint::load(&ckpt).unwrap();
+    let mut oracle = NativeLogDet::new(LogDetConfig::for_streaming(dim, k));
+    use threesieves::functions::SubmodularFunction;
+    for row in loaded.summary.chunks_exact(dim) {
+        oracle.accept(row);
+    }
+    assert!(
+        (oracle.current_value() - loaded.value).abs() < 1e-6 * (1.0 + loaded.value),
+        "restored summary value {} != checkpointed {}",
+        oracle.current_value(),
+        loaded.value
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pipeline_survives_nan_items() {
+    // NaN features poison kernel values; the pipeline must not panic and
+    // the final summary must stay finite. (The log-det oracle's EPS floor
+    // keeps gains finite; NaN gains compare false against thresholds and
+    // are thus rejected.)
+    let inner = registry::source("fact-highlevel-like", 2000, 9).unwrap();
+    let src = Box::new(FaultySource { inner, every: 97, count: 0 });
+    let mut algo = three_sieves(16, 6, 80);
+    let mut det = NoDrift::default();
+    let report =
+        StreamPipeline::new(PipelineConfig::default()).run(src, &mut algo, &mut det).unwrap();
+    assert_eq!(report.items, 2000);
+    assert!(report.final_value.is_finite(), "value must stay finite under NaN injection");
+    for v in algo.summary() {
+        assert!(v.is_finite(), "summary must not contain poisoned rows");
+    }
+}
+
+#[test]
+fn sharded_threesieves_through_pipeline() {
+    let n = 3000;
+    let dim = 50;
+    let k = 8;
+    let src = registry::source("abc-like", n, 13).unwrap();
+    let proto = NativeLogDet::new(LogDetConfig::for_streaming(dim, k));
+    let mut algo =
+        ShardedThreeSieves::new(Box::new(proto), k, 0.01, SieveTuning::FixedT(60), 4);
+    let mut det = MeanShiftDetector::new(dim, 200, 4.0);
+    let report =
+        StreamPipeline::new(PipelineConfig::default()).run(src, &mut algo, &mut det).unwrap();
+    assert_eq!(report.items, n as u64);
+    assert!(report.final_value > 0.0);
+    assert!(algo.stats().instances == 4);
+}
+
+#[test]
+fn periodic_checkpoints_reflect_progress() {
+    let dir = tmpdir("periodic");
+    let ckpt = dir.join("s.ckpt");
+    let src = registry::source("examiner-like", 1200, 21).unwrap();
+    let mut algo = three_sieves(50, 5, 50);
+    let mut det = NoDrift::default();
+    let cfg = PipelineConfig {
+        checkpoint_every: 400,
+        checkpoint_path: Some(ckpt.clone()),
+        ..Default::default()
+    };
+    let report = StreamPipeline::new(cfg).run(src, &mut algo, &mut det).unwrap();
+    assert!(report.checkpoints_written >= 3);
+    let last = Checkpoint::load(&ckpt).unwrap();
+    assert_eq!(last.elements, 1200);
+    assert_eq!(last.summary_len(), algo.summary_len());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,188 @@
+//! Integration: the three-layer composition.
+//!
+//! Loads the AOT artifacts produced by `make artifacts` (L1 Pallas kernel +
+//! L2 JAX gain/append graphs lowered to HLO text), executes them through
+//! the PJRT CPU client, and checks the PJRT-backed oracle agrees with the
+//! pure-Rust incremental-Cholesky oracle — then runs a full ThreeSieves
+//! selection on top of the compiled artifact.
+//!
+//! Skips (with a loud message) when `artifacts/` has not been built.
+
+use std::path::PathBuf;
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::{StreamingAlgorithm, ThreeSieves};
+use threesieves::data::registry;
+use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+use threesieves::runtime::{Engine, Manifest, PjrtLogDet};
+use threesieves::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+fn native_like(cfg: &threesieves::runtime::ArtifactConfig) -> NativeLogDet {
+    NativeLogDet::new(LogDetConfig::with_gamma(cfg.d, cfg.k, cfg.gamma, cfg.a))
+}
+
+#[test]
+fn manifest_and_engine_load() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
+    let manifest = Manifest::load(&dir).expect("manifest");
+    assert!(!manifest.configs.is_empty());
+    for c in &manifest.configs {
+        for ep in ["gain", "append", "value"] {
+            let p = manifest.file_path(c, ep).unwrap();
+            assert!(p.exists(), "missing artifact {}", p.display());
+        }
+    }
+}
+
+#[test]
+fn pjrt_gain_matches_native_on_empty_summary() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut oracle = PjrtLogDet::from_artifacts(&dir, "quickstart_d16").expect("artifact oracle");
+    let d = oracle.dim();
+    let mut rng = Rng::seed_from(1);
+    for _ in 0..4 {
+        let item: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let g = oracle.peek_gain(&item);
+        let want = 0.5 * (2.0f64).ln(); // ½·ln(1+a), a = 1
+        assert!((g - want).abs() < 1e-5, "empty-summary gain {g} vs {want}");
+    }
+}
+
+#[test]
+fn pjrt_agrees_with_native_through_a_selection_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let graphs =
+        threesieves::runtime::pjrt_logdet::GraphSet::load(&engine, &manifest, "quickstart_d16")
+            .unwrap();
+    let mut pjrt = PjrtLogDet::new(engine, graphs);
+    let cfg = manifest.config("quickstart_d16").unwrap().clone();
+    let mut native = native_like(&cfg);
+
+    let mut rng = Rng::seed_from(7);
+    let mut accepted = 0;
+    // Interleave peeks and accepts; the two oracles must track each other.
+    for step in 0..60 {
+        let item: Vec<f32> = (0..cfg.d).map(|_| (rng.normal() * 0.6) as f32).collect();
+        let gp = pjrt.peek_gain(&item);
+        let gn = native.peek_gain(&item);
+        assert!(
+            (gp - gn).abs() < 2e-4 * (1.0 + gn.abs()),
+            "step {step}: pjrt {gp} vs native {gn}"
+        );
+        if gp > 0.25 && accepted < cfg.k {
+            pjrt.accept(&item);
+            native.accept(&item);
+            accepted += 1;
+            assert!(
+                (pjrt.current_value() - native.current_value()).abs()
+                    < 2e-4 * (1.0 + native.current_value()),
+                "value divergence after accept {accepted}: {} vs {}",
+                pjrt.current_value(),
+                native.current_value()
+            );
+        }
+    }
+    assert!(accepted > 3, "test must exercise accepts (got {accepted})");
+    assert_eq!(pjrt.len(), native.len());
+}
+
+#[test]
+fn pjrt_batch_matches_singles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut oracle = PjrtLogDet::from_artifacts(&dir, "quickstart_d16").unwrap();
+    let d = oracle.dim();
+    let b = oracle.batch_size();
+    let mut rng = Rng::seed_from(3);
+    // Fill a few rows first.
+    for _ in 0..5 {
+        let item: Vec<f32> = (0..d).map(|_| (rng.normal() * 0.5) as f32).collect();
+        oracle.accept(&item);
+    }
+    let count = b + 3; // force chunking across two executions
+    let cands: Vec<f32> = (0..count * d).map(|_| (rng.normal() * 0.5) as f32).collect();
+    let mut batch = Vec::new();
+    oracle.peek_gain_batch(&cands, count, &mut batch);
+    assert_eq!(batch.len(), count);
+    for i in 0..count {
+        let single = oracle.peek_gain(&cands[i * d..(i + 1) * d]);
+        assert!(
+            (batch[i] - single).abs() < 1e-6,
+            "batch[{i}] {} vs single {single}",
+            batch[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_remove_rebuilds_consistently() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut oracle = PjrtLogDet::from_artifacts(&dir, "quickstart_d16").unwrap();
+    let d = oracle.dim();
+    let mut rng = Rng::seed_from(9);
+    let items: Vec<Vec<f32>> =
+        (0..5).map(|_| (0..d).map(|_| (rng.normal() * 0.5) as f32).collect()).collect();
+    for it in &items {
+        oracle.accept(it);
+    }
+    oracle.remove(2);
+    assert_eq!(oracle.len(), 4);
+    // Compare against native built from the kept rows.
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = manifest.config("quickstart_d16").unwrap().clone();
+    let mut native = native_like(&cfg);
+    for (i, it) in items.iter().enumerate() {
+        if i != 2 {
+            native.accept(it);
+        }
+    }
+    assert!(
+        (oracle.current_value() - native.current_value()).abs() < 5e-4,
+        "{} vs {}",
+        oracle.current_value(),
+        native.current_value()
+    );
+}
+
+#[test]
+fn threesieves_runs_end_to_end_on_pjrt_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let oracle = PjrtLogDet::from_artifacts(&dir, "stream_d16_k32").expect("stream artifact");
+    let k = 10usize;
+    let mut algo = ThreeSieves::new(Box::new(oracle), k, 0.05, SieveTuning::FixedT(30));
+    // fact-highlevel-like is 16-dim, matching the artifact's d.
+    let ds = registry::get("fact-highlevel-like", 600, 5).unwrap();
+    for row in ds.iter() {
+        algo.process(row);
+    }
+    assert_eq!(algo.summary_len(), k, "PJRT-backed ThreeSieves must fill K");
+    assert!(algo.value() > 0.0);
+
+    // Cross-check the selected value against a native recomputation.
+    let manifest = Manifest::load(&dir).unwrap();
+    let cfg = manifest.config("stream_d16_k32").unwrap().clone();
+    let mut native = native_like(&cfg);
+    let summary = algo.summary();
+    for row in summary.chunks_exact(16) {
+        native.accept(row);
+    }
+    assert!(
+        (algo.value() - native.current_value()).abs() < 1e-3 * (1.0 + native.current_value()),
+        "pjrt value {} vs native recomputation {}",
+        algo.value(),
+        native.current_value()
+    );
+}
