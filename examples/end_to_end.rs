@@ -41,43 +41,50 @@ fn main() {
     let info = registry::info(dataset).unwrap();
     println!("=== Stage 1: three-layer composition (PJRT oracle on the request path) ===");
 
-    let pjrt_oracle =
-        PjrtLogDet::from_artifacts(&artifacts, "stream_d16_k32").expect("load artifacts");
-    println!(
-        "loaded artifact stream_d16_k32 (d={}, K≤{}, gamma baked at build time)",
-        pjrt_oracle.dim(),
-        32
-    );
-    let mut pjrt_algo =
-        ThreeSieves::new(Box::new(pjrt_oracle), k, 0.01, SieveTuning::FixedT(500));
-    let mut det = MeanShiftDetector::new(info.dim, 1000, 4.0);
-    let src = registry::source(dataset, n, 99).unwrap();
-    let sw = Stopwatch::start();
-    let report = StreamPipeline::new(PipelineConfig::default())
-        .run(src, &mut pjrt_algo, &mut det)
-        .unwrap();
-    println!(
-        "pipeline: {} items in {:.2}s ({:.0} items/s), drift events: {}, f(S) = {:.4} ({} exemplars)",
-        report.items,
-        sw.elapsed_s(),
-        report.throughput,
-        report.drift_events,
-        report.final_value,
-        report.final_summary_len
-    );
+    // Degrade gracefully in default (stubbed-PJRT) builds: stage 1 needs
+    // the real engine, stage 2 is pure native Rust either way.
+    match PjrtLogDet::from_artifacts(&artifacts, "stream_d16_k32") {
+        Ok(pjrt_oracle) => {
+            println!(
+                "loaded artifact stream_d16_k32 (d={}, K≤{}, gamma baked at build time)",
+                pjrt_oracle.dim(),
+                32
+            );
+            let mut pjrt_algo =
+                ThreeSieves::new(Box::new(pjrt_oracle), k, 0.01, SieveTuning::FixedT(500));
+            let mut det = MeanShiftDetector::new(info.dim, 1000, 4.0);
+            let src = registry::source(dataset, n, 99).unwrap();
+            let sw = Stopwatch::start();
+            let report = StreamPipeline::new(PipelineConfig::default())
+                .run(src, &mut pjrt_algo, &mut det)
+                .unwrap();
+            println!(
+                "pipeline: {} items in {:.2}s ({:.0} items/s), drift events: {}, f(S) = {:.4} ({} exemplars)",
+                report.items,
+                sw.elapsed_s(),
+                report.throughput,
+                report.drift_events,
+                report.final_value,
+                report.final_summary_len
+            );
 
-    // Cross-check the compiled stack against the native oracle.
-    let mut native = NativeLogDet::new(LogDetConfig::for_streaming(info.dim, k));
-    for row in pjrt_algo.summary().chunks_exact(info.dim) {
-        native.accept(row);
+            // Cross-check the compiled stack against the native oracle.
+            let mut native = NativeLogDet::new(LogDetConfig::for_streaming(info.dim, k));
+            for row in pjrt_algo.summary().chunks_exact(info.dim) {
+                native.accept(row);
+            }
+            let diff = (report.final_value - native.current_value()).abs();
+            println!(
+                "cross-check: PJRT value {:.6} vs native recomputation {:.6} (|Δ| = {diff:.2e})",
+                report.final_value,
+                native.current_value()
+            );
+            assert!(diff < 1e-3 * (1.0 + native.current_value()), "layer disagreement!");
+        }
+        Err(e) => {
+            println!("stage 1 skipped ({e}); continuing with the native-oracle comparison");
+        }
     }
-    let diff = (report.final_value - native.current_value()).abs();
-    println!(
-        "cross-check: PJRT value {:.6} vs native recomputation {:.6} (|Δ| = {diff:.2e})",
-        report.final_value,
-        native.current_value()
-    );
-    assert!(diff < 1e-3 * (1.0 + native.current_value()), "layer disagreement!");
 
     println!("\n=== Stage 2: paper headline comparison (native oracle, same stream) ===");
     let ds = registry::get(dataset, n, 99).unwrap();

@@ -104,7 +104,12 @@ fn main() {
     println!("  drift-blind : {blind_cov:.4}");
 
     if let Ok(ck) = Checkpoint::load(&ckpt) {
-        println!("\nlatest checkpoint: {} rows @ {} items, f = {:.4}", ck.summary_len(), ck.elements, ck.value);
+        println!(
+            "\nlatest checkpoint: {} rows @ {} items, f = {:.4}",
+            ck.summary_len(),
+            ck.elements,
+            ck.value
+        );
     }
     std::fs::remove_dir_all(&ckpt_dir).ok();
 }

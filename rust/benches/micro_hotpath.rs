@@ -1,13 +1,18 @@
 //! Micro-benchmarks of the per-element hot path — the §Perf work surface.
 //!
 //! * native log-det gain query: kernel row (O(nd)) + forward solve (O(n²))
+//! * batched gain panel: `peek_gain_batch` vs a scalar `peek_gain` loop —
+//!   the batched-ingestion speedup (issue #1 pins ≥1.5× at n=K=64, d=128)
 //! * Cholesky append and delete
 //! * PJRT gain query (single + batched) for the compiled artifact, showing
 //!   the dispatch overhead the native path avoids and the batch
 //!   amortization the artifact path relies on
-//! * ThreeSieves end-to-end items/second
+//! * ThreeSieves end-to-end items/second, per-item vs chunked ingestion
 //!
-//! Run: `cargo bench --bench micro_hotpath`.
+//! Run: `cargo bench --bench micro_hotpath [-- [--quick] [--json PATH]]`.
+//! `--quick` shrinks iteration counts to CI-smoke scale; `--json PATH`
+//! writes the headline numbers as a JSON object (the CI bench job uploads
+//! it as an artifact so the BENCH_* trajectory populates).
 
 use std::path::PathBuf;
 
@@ -16,14 +21,31 @@ use threesieves::algorithms::{StreamingAlgorithm, ThreeSieves};
 use threesieves::data::registry;
 use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
 use threesieves::runtime::PjrtLogDet;
+use threesieves::util::json::Json;
 use threesieves::util::rng::Rng;
 use threesieves::util::timer::bench_loop;
+
+/// Headline metrics accumulated for `--json`.
+struct Report {
+    entries: Vec<(&'static str, f64)>,
+}
+
+impl Report {
+    fn push(&mut self, key: &'static str, value: f64) {
+        self.entries.push((key, value));
+    }
+
+    fn write(&self, path: &str) -> std::io::Result<()> {
+        let obj = Json::obj(self.entries.iter().map(|(k, v)| (*k, Json::num(*v))).collect());
+        std::fs::write(path, obj.to_string())
+    }
+}
 
 fn rand_rows(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
     (0..n * d).map(|_| rng.normal() as f32).collect()
 }
 
-fn bench_native_gain(d: usize, n_summary: usize) {
+fn bench_native_gain(d: usize, n_summary: usize, iters: usize) {
     let mut rng = Rng::seed_from(1);
     let rows = rand_rows(&mut rng, n_summary, d);
     let mut f = NativeLogDet::new(LogDetConfig::with_gamma(d, n_summary, 2.0 * d as f64, 1.0));
@@ -32,7 +54,7 @@ fn bench_native_gain(d: usize, n_summary: usize) {
     }
     let probe = rand_rows(&mut rng, 1, d);
     let mut sink = 0.0;
-    let stats = bench_loop(200, 2000, || {
+    let stats = bench_loop(iters / 10, iters, || {
         sink += f.peek_gain(&probe);
     });
     println!(
@@ -44,10 +66,48 @@ fn bench_native_gain(d: usize, n_summary: usize) {
     std::hint::black_box(sink);
 }
 
-fn bench_native_append_remove(d: usize, k: usize) {
+/// The tentpole measurement: scalar peek_gain loop vs one peek_gain_batch
+/// panel over the same B candidates, at the paper-scale working point.
+/// Returns the throughput ratio (batched / scalar).
+fn bench_batched_gain(d: usize, n_summary: usize, b: usize, iters: usize, rep: &mut Report) -> f64 {
+    let mut rng = Rng::seed_from(4);
+    let rows = rand_rows(&mut rng, n_summary, d);
+    let mut f = NativeLogDet::new(LogDetConfig::with_gamma(d, n_summary, 2.0 * d as f64, 1.0));
+    for i in 0..n_summary {
+        f.accept(&rows[i * d..(i + 1) * d]);
+    }
+    let cands = rand_rows(&mut rng, b, d);
+    let mut sink = 0.0;
+    let scalar = bench_loop(iters / 10, iters, || {
+        for i in 0..b {
+            sink += f.peek_gain(&cands[i * d..(i + 1) * d]);
+        }
+    });
+    let mut out = Vec::new();
+    let batched = bench_loop(iters / 10, iters, || {
+        f.peek_gain_batch(&cands, b, &mut out);
+        sink += out[0];
+    });
+    std::hint::black_box(sink);
+    let scalar_ns = scalar.mean() * 1e9 / b as f64;
+    let batched_ns = batched.mean() * 1e9 / b as f64;
+    let speedup = scalar_ns / batched_ns;
+    println!(
+        "batched gain     d={d:<4} |S|={n_summary:<4} B={b:<4}: scalar {scalar_ns:>8.1} ns/q  \
+         batched {batched_ns:>8.1} ns/q  speedup {speedup:.2}x"
+    );
+    if n_summary == 64 && d == 128 && b == 64 {
+        rep.push("batched_gain_n64_d128_scalar_ns_per_query", scalar_ns);
+        rep.push("batched_gain_n64_d128_batched_ns_per_query", batched_ns);
+        rep.push("batched_gain_n64_d128_speedup", speedup);
+    }
+    speedup
+}
+
+fn bench_native_append_remove(d: usize, k: usize, iters: usize) {
     let mut rng = Rng::seed_from(2);
     let rows = rand_rows(&mut rng, k, d);
-    let stats = bench_loop(5, 50, || {
+    let stats = bench_loop(iters / 10 + 1, iters, || {
         let mut f = NativeLogDet::new(LogDetConfig::with_gamma(d, k, 2.0 * d as f64, 1.0));
         for i in 0..k {
             f.accept(&rows[i * d..(i + 1) * d]);
@@ -62,9 +122,9 @@ fn bench_native_append_remove(d: usize, k: usize) {
     );
 }
 
-fn bench_pjrt_gain(artifacts: &PathBuf) {
+fn bench_pjrt_gain(artifacts: &PathBuf, iters: usize) {
     let Ok(mut oracle) = PjrtLogDet::from_artifacts(artifacts, "quickstart_d16") else {
-        println!("pjrt gain        : SKIP (artifacts not built)");
+        println!("pjrt gain        : SKIP (artifacts not built or pjrt feature off)");
         return;
     };
     let d = oracle.dim();
@@ -76,7 +136,7 @@ fn bench_pjrt_gain(artifacts: &PathBuf) {
     }
     let probe = rand_rows(&mut rng, 1, d);
     let mut sink = 0.0;
-    let stats = bench_loop(20, 200, || {
+    let stats = bench_loop(iters / 10, iters, || {
         sink += oracle.peek_gain(&probe);
     });
     println!(
@@ -86,7 +146,7 @@ fn bench_pjrt_gain(artifacts: &PathBuf) {
     );
     let cands = rand_rows(&mut rng, b, d);
     let mut out = Vec::new();
-    let stats = bench_loop(20, 200, || {
+    let stats = bench_loop(iters / 10, iters, || {
         oracle.peek_gain_batch(&cands, b, &mut out);
     });
     println!(
@@ -98,39 +158,78 @@ fn bench_pjrt_gain(artifacts: &PathBuf) {
     std::hint::black_box(sink);
 }
 
-fn bench_threesieves_throughput() {
+fn bench_threesieves_throughput(n: usize, iters: usize, rep: &mut Report) {
     let dataset = "fact-highlevel-like";
-    let n = 20_000;
     let info = registry::info(dataset).unwrap();
     let ds = registry::get(dataset, n, 7).unwrap();
     for k in [10usize, 50] {
-        let stats = bench_loop(1, 5, || {
-            let f = NativeLogDet::new(LogDetConfig::for_streaming(info.dim, k));
-            let mut algo =
-                ThreeSieves::new(Box::new(f), k, 0.001, SieveTuning::FixedT(1000));
-            for row in ds.iter() {
-                algo.process(row);
+        for batch in [1usize, 64] {
+            let stats = bench_loop(1, iters, || {
+                let f = NativeLogDet::new(LogDetConfig::for_streaming(info.dim, k));
+                let mut algo =
+                    ThreeSieves::new(Box::new(f), k, 0.001, SieveTuning::FixedT(1000));
+                if batch == 1 {
+                    for row in ds.iter() {
+                        algo.process(row);
+                    }
+                } else {
+                    for chunk in ds.raw().chunks(batch * info.dim) {
+                        algo.process_batch(chunk);
+                    }
+                }
+                std::hint::black_box(algo.value());
+            });
+            let items_per_s = n as f64 / stats.mean();
+            println!(
+                "threesieves e2e  d={:<4} K={k:<4} B={batch:<3}: {:>9.2} ms/{n} items = \
+                 {items_per_s:>8.0} items/s [{}]",
+                info.dim,
+                stats.mean() * 1e3,
+                stats.summary("s")
+            );
+            if k == 50 {
+                let key = if batch == 1 {
+                    "threesieves_e2e_k50_scalar_items_per_s"
+                } else {
+                    "threesieves_e2e_k50_batched_items_per_s"
+                };
+                rep.push(key, items_per_s);
             }
-            std::hint::black_box(algo.value());
-        });
-        println!(
-            "threesieves e2e  d={:<4} K={k:<4}: {:>9.2} ms/20k items = {:>8.0} items/s [{}]",
-            info.dim,
-            stats.mean() * 1e3,
-            n as f64 / stats.mean(),
-            stats.summary("s")
-        );
+        }
     }
 }
 
 fn main() {
-    println!("== micro hot-path benchmarks ==");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut rep = Report { entries: Vec::new() };
+
+    println!("== micro hot-path benchmarks{} ==", if quick { " (quick)" } else { "" });
+    let gain_iters = if quick { 200 } else { 2000 };
     for (d, n) in [(16usize, 10usize), (16, 50), (64, 50), (256, 100)] {
-        bench_native_gain(d, n);
+        bench_native_gain(d, n, gain_iters);
     }
-    bench_native_append_remove(16, 50);
-    bench_native_append_remove(64, 100);
+    // The issue-#1 acceptance point: n = K = 64, d = 128, chunk of 64.
+    let panel_iters = if quick { 50 } else { 500 };
+    bench_batched_gain(128, 64, 64, panel_iters, &mut rep);
+    bench_batched_gain(128, 64, 256, panel_iters, &mut rep);
+    bench_batched_gain(32, 16, 64, panel_iters, &mut rep);
+    bench_native_append_remove(16, 50, if quick { 10 } else { 50 });
+    bench_native_append_remove(64, 100, if quick { 10 } else { 50 });
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    bench_pjrt_gain(&artifacts);
-    bench_threesieves_throughput();
+    bench_pjrt_gain(&artifacts, if quick { 40 } else { 200 });
+    let (e2e_n, e2e_iters) = if quick { (4_000, 2) } else { (20_000, 5) };
+    bench_threesieves_throughput(e2e_n, e2e_iters, &mut rep);
+
+    if let Some(path) = json_path {
+        match rep.write(&path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
 }

@@ -56,6 +56,26 @@ pub trait StreamingAlgorithm {
     /// Observe one stream element.
     fn process(&mut self, item: &[f32]);
 
+    /// Observe a chunk of stream elements, flat row-major `count × dim()`.
+    ///
+    /// Contract: semantically identical to calling
+    /// [`process`](Self::process) on each row in order — same summary, same
+    /// value, same resource accounting (`rust/tests/batch_parity.rs` pins
+    /// this). The default does exactly that; the threshold family overrides
+    /// it to evaluate gains for the whole chunk against the current summary
+    /// in one oracle call (`SubmodularFunction::peek_gain_batch`), which is
+    /// where the batched-ingestion throughput comes from. Speculative gain
+    /// evaluations past the point where the summary changes are tracked by
+    /// the overrides and subtracted from the reported query stats, so
+    /// `stats().queries` keeps the paper's per-element accounting.
+    fn process_batch(&mut self, chunk: &[f32]) {
+        let d = self.dim();
+        debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
+        for row in chunk.chunks_exact(d) {
+            self.process(row);
+        }
+    }
+
     /// Called once after the stream ends (QuickStream flushes its buffer,
     /// others are no-ops).
     fn finalize(&mut self) {}
@@ -122,6 +142,49 @@ impl Sieve {
         } else {
             false
         }
+    }
+
+    /// Batched [`offer`](Self::offer) over a whole chunk (row-major
+    /// `count × dim`): evaluate the remaining items' gains against the
+    /// current summary in one oracle call, accept the first item that
+    /// passes the sieve rule, then re-batch from the next item (gains
+    /// computed before an accept are stale after it).
+    ///
+    /// Bit-identical to offering each row in order: within a rejection run
+    /// the threshold is constant (`v`, `f(S)` and `|S|` only move on
+    /// accept), so the first passing index is the same item the scalar
+    /// loop would accept. Returns the number of *speculative* gain
+    /// evaluations — gains the scalar path would not have computed because
+    /// they lie past an acceptance — which the caller subtracts from its
+    /// query stats to keep the paper's per-element accounting.
+    pub fn offer_batch(
+        &mut self,
+        chunk: &[f32],
+        dim: usize,
+        k: usize,
+        scratch: &mut Vec<f64>,
+    ) -> u64 {
+        let total = chunk.len() / dim;
+        let mut pos = 0usize;
+        let mut wasted = 0u64;
+        while pos < total {
+            if self.oracle.len() >= k {
+                return wasted; // full: the scalar path stops querying too
+            }
+            let remaining = total - pos;
+            self.oracle.peek_gain_batch(&chunk[pos * dim..], remaining, scratch);
+            let len = self.oracle.len();
+            let thresh = sieve_threshold(self.v, self.oracle.current_value(), k, len);
+            match scratch.iter().position(|&g| g >= thresh) {
+                Some(j) => {
+                    self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
+                    wasted += (remaining - (j + 1)) as u64;
+                    pos += j + 1;
+                }
+                None => return wasted,
+            }
+        }
+        wasted
     }
 }
 

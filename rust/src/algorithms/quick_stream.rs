@@ -31,7 +31,13 @@ pub struct QuickStream {
 }
 
 impl QuickStream {
-    pub fn new(proto: Box<dyn SubmodularFunction>, k: usize, c: usize, epsilon: f64, seed: u64) -> Self {
+    pub fn new(
+        proto: Box<dyn SubmodularFunction>,
+        k: usize,
+        c: usize,
+        epsilon: f64,
+        seed: u64,
+    ) -> Self {
         assert!(k >= 2, "QuickStream requires K >= 2");
         assert!(c >= 1);
         assert!(epsilon > 0.0);

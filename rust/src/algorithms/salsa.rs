@@ -48,6 +48,11 @@ pub struct Salsa {
     stream_len: Option<usize>,
     sieves: Vec<RuleSieve>,
     elements: u64,
+    /// Speculative batch gains past a sieve's acceptance (see
+    /// `process_batch`); excluded from reported query stats.
+    speculative_queries: u64,
+    /// Scratch for `process_batch` gain panels.
+    gain_buf: Vec<f64>,
     peak_stored: usize,
 }
 
@@ -68,6 +73,8 @@ impl Salsa {
             stream_len,
             sieves: Vec::new(),
             elements: 0,
+            speculative_queries: 0,
+            gain_buf: Vec::new(),
             peak_stored: 0,
         };
         s.build_sieves();
@@ -90,12 +97,20 @@ impl Salsa {
     }
 
     fn threshold(&self, s: &RuleSieve) -> f64 {
+        self.threshold_at(s, self.elements)
+    }
+
+    /// Rule threshold as of stream position `elements` (1-based count of
+    /// the item being considered). Factored out of [`threshold`] so the
+    /// batched path can replay the adaptive rule's position dependence
+    /// exactly for items inside a chunk.
+    fn threshold_at(&self, s: &RuleSieve, elements: u64) -> f64 {
         match s.rule {
             Rule::Sieve => sieve_threshold(s.v, s.oracle.current_value(), self.k, s.oracle.len()),
             Rule::Dense => s.v / (2.0 * self.k as f64),
             Rule::Adaptive => {
                 let n = self.stream_len.unwrap_or(1).max(1);
-                let pos = (self.elements as f64 / n as f64).min(1.0);
+                let pos = (elements as f64 / n as f64).min(1.0);
                 let beta = 0.7 - 0.45 * pos; // 0.7 → 0.25 across the stream
                 beta * s.v / self.k as f64
             }
@@ -138,6 +153,60 @@ impl StreamingAlgorithm for Salsa {
         }
     }
 
+    /// Batched ingestion: (rule, v) sieves are independent, so each one
+    /// consumes the chunk on its own — one gain panel per rejection run.
+    /// The scan recomputes the rule threshold per item from the chunk-start
+    /// stream position, which reproduces the adaptive rule's position
+    /// dependence exactly; an acceptance ends the scan (the sieve rule's
+    /// threshold and the capacity check depend on the new summary) and the
+    /// remainder re-batches. Speculative gains past an acceptance are
+    /// excluded from the reported query stats.
+    fn process_batch(&mut self, chunk: &[f32]) {
+        let d = self.proto.dim();
+        debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
+        let total = chunk.len() / d;
+        let start_elements = self.elements;
+        self.elements += total as u64;
+        let k = self.k;
+        let mut scratch = std::mem::take(&mut self.gain_buf);
+        for si in 0..self.sieves.len() {
+            let mut pos = 0usize;
+            while pos < total {
+                if self.sieves[si].oracle.len() >= k {
+                    break; // full: the scalar path stops querying too
+                }
+                let remaining = total - pos;
+                let sieve = &mut self.sieves[si];
+                sieve.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut scratch);
+                let mut hit = None;
+                for (j, &g) in scratch.iter().enumerate() {
+                    let elem = start_elements + (pos + j) as u64 + 1;
+                    let thresh = self.threshold_at(&self.sieves[si], elem);
+                    if g >= thresh {
+                        hit = Some(j);
+                        break;
+                    }
+                }
+                match hit {
+                    Some(j) => {
+                        let item = &chunk[(pos + j) * d..(pos + j + 1) * d];
+                        self.sieves[si].oracle.accept(item);
+                        self.speculative_queries += (remaining - (j + 1)) as u64;
+                        pos += j + 1;
+                    }
+                    None => {
+                        pos = total;
+                    }
+                }
+            }
+        }
+        self.gain_buf = scratch;
+        let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
+        if stored > self.peak_stored {
+            self.peak_stored = stored;
+        }
+    }
+
     fn value(&self) -> f64 {
         self.best().map(|s| s.oracle.current_value()).unwrap_or(0.0)
     }
@@ -160,8 +229,9 @@ impl StreamingAlgorithm for Salsa {
 
     fn stats(&self) -> AlgoStats {
         let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
+        let charged: u64 = self.sieves.iter().map(|s| s.oracle.queries()).sum();
         AlgoStats {
-            queries: self.sieves.iter().map(|s| s.oracle.queries()).sum(),
+            queries: charged.saturating_sub(self.speculative_queries),
             elements: self.elements,
             stored,
             peak_stored: self.peak_stored.max(stored),
@@ -171,6 +241,7 @@ impl StreamingAlgorithm for Salsa {
 
     fn reset(&mut self) {
         self.elements = 0;
+        self.speculative_queries = 0;
         self.peak_stored = 0;
         self.build_sieves();
     }

@@ -20,6 +20,11 @@ pub struct SieveStreaming {
     m: f64,
     elements: u64,
     extra_queries: u64,
+    /// Speculative batch gains past a sieve's acceptance (see
+    /// `Sieve::offer_batch`); excluded from reported query stats.
+    speculative_queries: u64,
+    /// Scratch for `process_batch` gain panels.
+    gain_buf: Vec<f64>,
     peak_stored: usize,
 }
 
@@ -41,6 +46,8 @@ impl SieveStreaming {
             m,
             elements: 0,
             extra_queries: 0,
+            speculative_queries: 0,
+            gain_buf: Vec::new(),
             peak_stored: 0,
         }
     }
@@ -108,6 +115,35 @@ impl StreamingAlgorithm for SieveStreaming {
         }
     }
 
+    /// Batched ingestion: the sieves are fully independent (no cross-sieve
+    /// coupling outside m estimation), so each sieve consumes the whole
+    /// chunk through [`Sieve::offer_batch`] — one gain panel per rejection
+    /// run instead of one oracle call per item. Stored elements only grow
+    /// within a chunk, so the end-of-chunk peak equals the scalar per-item
+    /// peak.
+    fn process_batch(&mut self, chunk: &[f32]) {
+        let d = self.proto.dim();
+        debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
+        if self.estimate_m {
+            // m estimation rebuilds the sieve set mid-stream; replay.
+            for row in chunk.chunks_exact(d) {
+                self.process(row);
+            }
+            return;
+        }
+        self.elements += (chunk.len() / d) as u64;
+        let mut scratch = std::mem::take(&mut self.gain_buf);
+        let k = self.k;
+        for s in self.sieves.iter_mut() {
+            self.speculative_queries += s.offer_batch(chunk, d, k, &mut scratch);
+        }
+        self.gain_buf = scratch;
+        let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
+        if stored > self.peak_stored {
+            self.peak_stored = stored;
+        }
+    }
+
     fn value(&self) -> f64 {
         self.best_sieve().map(|s| s.oracle.current_value()).unwrap_or(0.0)
     }
@@ -130,13 +166,17 @@ impl StreamingAlgorithm for SieveStreaming {
 
     fn stats(&self) -> AlgoStats {
         let mut peak = self.peak_stored;
-        let st = sieve_stats(&self.sieves, self.elements, self.extra_queries, &mut peak);
+        let mut st = sieve_stats(&self.sieves, self.elements, self.extra_queries, &mut peak);
+        st.queries = st.queries.saturating_sub(self.speculative_queries);
         st
     }
 
     fn reset(&mut self) {
         self.elements = 0;
         self.extra_queries = 0;
+        // The sieve oracles (and their query counters) are rebuilt below,
+        // so their speculative share resets with them.
+        self.speculative_queries = 0;
         self.peak_stored = 0;
         if self.estimate_m {
             self.m = 0.0;

@@ -8,7 +8,29 @@ use crate::functions::SubmodularFunction;
 use crate::metrics::AlgoStats;
 use crate::util::mathx::threshold_grid;
 
-use super::{sieve_stats, Sieve, StreamingAlgorithm};
+use super::{sieve_stats, sieve_threshold, Sieve, StreamingAlgorithm};
+
+/// Post-accept bookkeeping shared by the scalar and batched paths: fold the
+/// sieve's new value into the OPT lower bound and the champion snapshot.
+/// One definition keeps `process` and `process_batch` from drifting apart —
+/// the parity contract forbids any divergence between them.
+fn record_accept(
+    oracle: &dyn SubmodularFunction,
+    lb: &mut f64,
+    lb_improved: &mut bool,
+    best_value: &mut f64,
+    best_summary: &mut Vec<f32>,
+) {
+    let v = oracle.current_value();
+    if v > *lb {
+        *lb = v;
+        *lb_improved = true;
+    }
+    if v > *best_value {
+        *best_value = v;
+        *best_summary = oracle.summary().to_vec();
+    }
+}
 
 /// Dynamic-window multi-sieve thresholding.
 pub struct SieveStreamingPP {
@@ -23,6 +45,11 @@ pub struct SieveStreamingPP {
     peak_stored: usize,
     /// Cumulative queries of sieves that were pruned (so totals stay true).
     retired_queries: u64,
+    /// Speculative batch gains past a round's earliest acceptance
+    /// (see `process_batch`); excluded from reported query stats.
+    speculative_queries: u64,
+    /// Scratch for `process_batch` gain panels.
+    gain_buf: Vec<f64>,
     /// Snapshot of the best summary ever observed. Pruning deletes sieves
     /// whose OPT guess fell below LB — which can include the sieve that
     /// *produced* LB. The guarantee says a surviving sieve catches up given
@@ -46,6 +73,8 @@ impl SieveStreamingPP {
             elements: 0,
             peak_stored: 0,
             retired_queries: 0,
+            speculative_queries: 0,
+            gain_buf: Vec::new(),
             best_value: 0.0,
             best_summary: Vec::new(),
         };
@@ -105,15 +134,13 @@ impl StreamingAlgorithm for SieveStreamingPP {
         let mut lb_improved = false;
         for s in self.sieves.iter_mut() {
             if s.offer(item, self.k) {
-                let v = s.oracle.current_value();
-                if v > self.lb {
-                    self.lb = v;
-                    lb_improved = true;
-                }
-                if v > self.best_value {
-                    self.best_value = v;
-                    self.best_summary = s.oracle.summary().to_vec();
-                }
+                record_accept(
+                    s.oracle.as_ref(),
+                    &mut self.lb,
+                    &mut lb_improved,
+                    &mut self.best_value,
+                    &mut self.best_summary,
+                );
             }
         }
         if lb_improved {
@@ -123,6 +150,87 @@ impl StreamingAlgorithm for SieveStreamingPP {
         if stored > self.peak_stored {
             self.peak_stored = stored;
         }
+    }
+
+    /// Batched ingestion. Unlike plain SieveStreaming, ++ couples sieves
+    /// through the LB refresh (an acceptance can prune sieves and spawn new
+    /// ones that must see the *rest* of the stream), so a sieve cannot
+    /// consume the whole chunk on its own. Instead each round batch-scans
+    /// every live sieve for its first would-accept position, advances all
+    /// of them to the earliest such position p* (items before p* are pure
+    /// rejections for every sieve — identical to the scalar order), applies
+    /// the acceptances at p* in sieve order, refreshes if LB improved, and
+    /// restarts from p*+1 with the refreshed sieve set. Gains computed past
+    /// p* are speculative and excluded from the reported query stats.
+    ///
+    /// Cost note: every acceptance round re-panels all live sieves from
+    /// p*+1, discarding still-valid gains of non-accepting sieves. Rounds
+    /// are bounded by total acceptances (≤ sieves·K per stream), so this
+    /// is a bounded warm-up overhead, not per-element asymptotics; reusing
+    /// unaffected sieves' panels across rounds is a ROADMAP item (it needs
+    /// hit-cache invalidation across the refresh's prune/spawn/sort).
+    fn process_batch(&mut self, chunk: &[f32]) {
+        let d = self.proto.dim();
+        debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
+        let total = chunk.len() / d;
+        self.elements += total as u64;
+        let k = self.k;
+        let mut scratch = std::mem::take(&mut self.gain_buf);
+        let mut pos = 0usize;
+        while pos < total {
+            let remaining = total - pos;
+            // Round 1: per live sieve, the first index that would accept.
+            // Within a rejection run each sieve's threshold is constant
+            // (its own f(S)/|S| only move on its own accept).
+            let mut hits: Vec<Option<usize>> = Vec::with_capacity(self.sieves.len());
+            for s in self.sieves.iter_mut() {
+                if s.oracle.len() >= k {
+                    hits.push(None); // full: no queries, same as scalar
+                    continue;
+                }
+                s.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut scratch);
+                let thresh = sieve_threshold(s.v, s.oracle.current_value(), k, s.oracle.len());
+                hits.push(scratch.iter().position(|&g| g >= thresh));
+            }
+            let p_star = hits.iter().filter_map(|h| *h).min();
+            let Some(j) = p_star else {
+                // No sieve accepts anywhere in the chunk: all gains were
+                // consumed, nothing is speculative.
+                pos = total;
+                continue;
+            };
+            // Items pos..pos+j are rejections everywhere; item pos+j is
+            // accepted by every sieve whose first hit is exactly j.
+            let item = &chunk[(pos + j) * d..(pos + j + 1) * d];
+            let mut lb_improved = false;
+            for (s, hit) in self.sieves.iter_mut().zip(&hits) {
+                if s.oracle.len() >= k {
+                    continue;
+                }
+                self.speculative_queries += (remaining - (j + 1)) as u64;
+                if *hit == Some(j) {
+                    s.oracle.accept(item);
+                    record_accept(
+                        s.oracle.as_ref(),
+                        &mut self.lb,
+                        &mut lb_improved,
+                        &mut self.best_value,
+                        &mut self.best_summary,
+                    );
+                }
+            }
+            if lb_improved {
+                self.refresh_sieves();
+            }
+            let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
+            if stored > self.peak_stored {
+                self.peak_stored = stored;
+            }
+            pos += j + 1;
+        }
+        // No trailing stored/peak update: stored only changes at the
+        // accept+refresh points above, each already recorded in-loop.
+        self.gain_buf = scratch;
     }
 
     fn value(&self) -> f64 {
@@ -154,6 +262,7 @@ impl StreamingAlgorithm for SieveStreamingPP {
     fn stats(&self) -> AlgoStats {
         let mut peak = self.peak_stored;
         let mut st = sieve_stats(&self.sieves, self.elements, self.retired_queries, &mut peak);
+        st.queries = st.queries.saturating_sub(self.speculative_queries);
         st.peak_stored = peak.max(self.peak_stored);
         st
     }
@@ -164,6 +273,7 @@ impl StreamingAlgorithm for SieveStreamingPP {
         self.elements = 0;
         self.peak_stored = 0;
         self.retired_queries = 0;
+        self.speculative_queries = 0;
         self.best_value = 0.0;
         self.best_summary.clear();
         self.refresh_sieves();

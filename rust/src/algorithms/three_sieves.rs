@@ -60,12 +60,23 @@ pub struct ThreeSieves {
     hi_scale: f64,
     elements: u64,
     extra_queries: u64,
+    /// Gain evaluations charged by `peek_gain_batch` past the point where
+    /// the batch scan diverged — work the scalar path would not have done.
+    /// Subtracted from reported query stats (see `process_batch`).
+    speculative_queries: u64,
+    /// Scratch for `process_batch` gain panels.
+    gain_buf: Vec<f64>,
     peak_stored: usize,
 }
 
 impl ThreeSieves {
     /// ThreeSieves with the oracle's exact `m = max_e f({e})`.
-    pub fn new(oracle: Box<dyn SubmodularFunction>, k: usize, epsilon: f64, tuning: SieveTuning) -> Self {
+    pub fn new(
+        oracle: Box<dyn SubmodularFunction>,
+        k: usize,
+        epsilon: f64,
+        tuning: SieveTuning,
+    ) -> Self {
         Self::with_grid_scale(oracle, k, epsilon, tuning, 1.0)
     }
 
@@ -106,6 +117,8 @@ impl ThreeSieves {
             hi_scale,
             elements: 0,
             extra_queries: 0,
+            speculative_queries: 0,
+            gain_buf: Vec::new(),
             peak_stored: 0,
         };
         ts.pop_threshold();
@@ -154,6 +167,13 @@ impl ThreeSieves {
     pub fn t_budget(&self) -> usize {
         self.t_budget
     }
+
+    /// Speculative gain evaluations paid by the batched path beyond what
+    /// the scalar path would have queried (telemetry; excluded from
+    /// [`StreamingAlgorithm::stats`]).
+    pub fn speculative_queries(&self) -> u64 {
+        self.speculative_queries
+    }
 }
 
 impl StreamingAlgorithm for ThreeSieves {
@@ -164,15 +184,16 @@ impl StreamingAlgorithm for ThreeSieves {
     fn process(&mut self, item: &[f32]) {
         self.elements += 1;
 
+        // When the summary is empty the main gain query *is* the singleton
+        // value f({e}) (Δf(e|∅) = f({e})), so m estimation rides along for
+        // free; only a non-empty summary pays the extra probe query on a
+        // scratch oracle.
+        let mut precomputed: Option<f64> = None;
         if self.estimate_m {
-            // Singleton value f({e}) via an empty-summary probe: when the
-            // summary is empty the gain *is* the singleton value, otherwise
-            // we pay one extra query on a scratch oracle.
             let singleton = if self.oracle.is_empty() {
-                // Reuse the main query below — just peek now.
-                self.extra_queries += 1;
-                let mut probe = self.oracle.clone_empty();
-                probe.peek_gain(item)
+                let g = self.oracle.peek_gain(item);
+                precomputed = Some(g);
+                g
             } else {
                 self.extra_queries += 1;
                 let mut probe = self.oracle.clone_empty();
@@ -180,8 +201,11 @@ impl StreamingAlgorithm for ThreeSieves {
             };
             if singleton > self.m {
                 // New maximum invalidates the running estimate: restart.
+                // The reset empties the summary, so the pending gain query
+                // below is again exactly the singleton value — reuse it.
                 self.oracle.reset();
                 self.rebuild_grid(singleton);
+                precomputed = Some(singleton);
             }
         }
 
@@ -194,7 +218,10 @@ impl StreamingAlgorithm for ThreeSieves {
         }
 
         let thresh = sieve_threshold(self.v, self.oracle.current_value(), self.k, len);
-        let gain = self.oracle.peek_gain(item);
+        let gain = match precomputed {
+            Some(g) => g,
+            None => self.oracle.peek_gain(item),
+        };
         if gain >= thresh {
             self.oracle.accept(item);
             self.t = 0;
@@ -212,6 +239,85 @@ impl StreamingAlgorithm for ThreeSieves {
         }
         if self.oracle.len() > self.peak_stored {
             self.peak_stored = self.oracle.len();
+        }
+    }
+
+    /// Batched ingestion (the tentpole path): evaluate the whole chunk's
+    /// gains against the *current* summary in one
+    /// [`peek_gain_batch`](SubmodularFunction::peek_gain_batch) call and
+    /// scan for the first acceptance. Gains depend only on the summary, so
+    /// a T-exhaustion threshold drop mid-scan just recomputes the
+    /// threshold and keeps consuming the same panel; only an acceptance
+    /// invalidates the remaining gains, after which the rest of the chunk
+    /// replays per item. The scan reproduces the scalar decisions exactly;
+    /// speculative gains past an acceptance are tracked and excluded from
+    /// `stats().queries`.
+    fn process_batch(&mut self, chunk: &[f32]) {
+        let d = self.oracle.dim();
+        debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
+        let total = chunk.len() / d;
+        if self.estimate_m {
+            // m estimation needs its per-item singleton handling; replay.
+            for row in chunk.chunks_exact(d) {
+                self.process(row);
+            }
+            return;
+        }
+        if total == 0 {
+            return;
+        }
+        if self.oracle.len() >= self.k {
+            // Full summary: the scalar path only counts the elements.
+            self.elements += total as u64;
+            return;
+        }
+        // One panel, one scan, optional per-item replay — straight-line by
+        // construction: the first acceptance hands the remainder to the
+        // scalar path; threshold pops keep the scan going.
+        let mut gains = std::mem::take(&mut self.gain_buf);
+        self.oracle.peek_gain_batch(chunk, total, &mut gains);
+        let mut thresh = sieve_threshold(
+            self.v,
+            self.oracle.current_value(),
+            self.k,
+            self.oracle.len(),
+        );
+        let mut consumed = 0usize;
+        let mut accepted = false;
+        for (j, &gain) in gains.iter().enumerate() {
+            self.elements += 1;
+            consumed = j + 1;
+            if gain >= thresh {
+                self.oracle.accept(&chunk[j * d..(j + 1) * d]);
+                self.t = 0;
+                if self.oracle.len() > self.peak_stored {
+                    self.peak_stored = self.oracle.len();
+                }
+                accepted = true;
+                break;
+            }
+            self.t += 1;
+            if self.t >= self.t_budget {
+                if self.grid.is_empty() {
+                    self.t = 0;
+                } else {
+                    self.pop_threshold();
+                    thresh = sieve_threshold(
+                        self.v,
+                        self.oracle.current_value(),
+                        self.k,
+                        self.oracle.len(),
+                    );
+                }
+            }
+        }
+        self.speculative_queries += (total - consumed) as u64;
+        self.gain_buf = gains;
+        if accepted {
+            // Per-item replay for the remainder of the chunk.
+            for row in chunk[consumed * d..].chunks_exact(d) {
+                self.process(row);
+            }
         }
     }
 
@@ -237,7 +343,8 @@ impl StreamingAlgorithm for ThreeSieves {
 
     fn stats(&self) -> AlgoStats {
         AlgoStats {
-            queries: self.oracle.queries() + self.extra_queries,
+            queries: (self.oracle.queries() + self.extra_queries)
+                .saturating_sub(self.speculative_queries),
             elements: self.elements,
             stored: self.oracle.len(),
             peak_stored: self.peak_stored,
@@ -249,6 +356,8 @@ impl StreamingAlgorithm for ThreeSieves {
         self.oracle.reset();
         self.elements = 0;
         self.extra_queries = 0;
+        // speculative_queries stays cumulative: the oracle's query counter
+        // survives reset, so its speculative share must keep matching.
         self.peak_stored = 0;
         self.t = 0;
         if self.estimate_m {
@@ -362,6 +471,40 @@ mod tests {
         testkit::run(&mut est, &ds);
         assert!((known.value() - est.value()).abs() < 1e-9);
         assert_eq!(known.summary_len(), est.summary_len());
+    }
+
+    #[test]
+    fn m_estimation_empty_summary_probe_is_free() {
+        // With an empty summary the main gain query doubles as the
+        // singleton probe, so the first element costs exactly one gain
+        // query plus the accept — no scratch-oracle probe.
+        let k = 4;
+        let mut algo =
+            ThreeSieves::with_m_estimation(testkit::oracle(k), k, 0.1, SieveTuning::FixedT(10));
+        let item = vec![0.2f32; testkit::DIM];
+        algo.process(&item);
+        // Grid starts at K·m, thresh = (K·m/2)/K = m/2 ≤ singleton: accept.
+        assert_eq!(algo.summary_len(), 1, "first element must be accepted");
+        let st = algo.stats();
+        assert_eq!(st.queries, 2, "peek + accept only, no extra probe: {st:?}");
+    }
+
+    #[test]
+    fn m_estimation_nonempty_summary_still_pays_one_probe() {
+        let k = 4;
+        let mut algo =
+            ThreeSieves::with_m_estimation(testkit::oracle(k), k, 0.1, SieveTuning::FixedT(10));
+        let a = vec![0.2f32; testkit::DIM];
+        let mut b = vec![0.0f32; testkit::DIM];
+        b[0] = 1.5;
+        algo.process(&a); // 2 queries (peek + accept), summary non-empty
+        let q_before = algo.stats().queries;
+        algo.process(&b); // probe (1) + main peek (1) [+ accept if taken]
+        let spent = algo.stats().queries - q_before;
+        assert!(
+            (2..=3).contains(&spent),
+            "non-empty path pays probe + peek (+accept), got {spent}"
+        );
     }
 
     #[test]

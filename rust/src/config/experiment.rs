@@ -82,6 +82,9 @@ pub struct ExperimentConfig {
     pub ts: Vec<usize>,
     pub seed: u64,
     pub algos: Vec<AlgoSpec>,
+    /// Stream chunk size for batched ingestion (1 = per-item processing).
+    /// Semantics-preserving — see `StreamingAlgorithm::process_batch`.
+    pub batch_size: usize,
     /// Output directory for CSV/JSON results.
     pub out_dir: String,
 }
@@ -114,6 +117,7 @@ impl ExperimentConfig {
             ts: nums("ts").into_iter().map(|v| v as usize).collect(),
             seed: j.get("seed").as_f64().unwrap_or(42.0) as u64,
             algos,
+            batch_size: j.get("batch_size").as_usize().unwrap_or(1).max(1),
             out_dir: j.get("out_dir").as_str().unwrap_or("results").to_string(),
         })
     }
@@ -172,6 +176,15 @@ mod tests {
         assert_eq!(cfg.n, 10_000);
         assert_eq!(cfg.seed, 42);
         assert!(cfg.algos.is_empty());
+        assert_eq!(cfg.batch_size, 1);
+    }
+
+    #[test]
+    fn batch_size_parses_and_floors_at_one() {
+        let cfg = ExperimentConfig::from_json_text(r#"{"batch_size": 64}"#).unwrap();
+        assert_eq!(cfg.batch_size, 64);
+        let cfg = ExperimentConfig::from_json_text(r#"{"batch_size": 0}"#).unwrap();
+        assert_eq!(cfg.batch_size, 1);
     }
 
     #[test]

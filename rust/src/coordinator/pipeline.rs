@@ -21,6 +21,14 @@ use crate::data::StreamSource;
 pub struct PipelineConfig {
     /// Bounded channel capacity (items) — the backpressure window.
     pub channel_capacity: usize,
+    /// Items handed to the algorithm per [`StreamingAlgorithm::process_batch`]
+    /// call (1 = the scalar per-item path). Batching is semantically
+    /// identical to per-item processing — same summary, value and query
+    /// accounting — but amortizes the oracle's kernel work across the
+    /// chunk. Drift checks still run per item: a drift event flushes the
+    /// pending chunk before the reset, so batching never reorders the
+    /// observe → checkpoint → reset → process sequence.
+    pub batch_size: usize,
     /// Checkpoint the summary every this many items (0 = never).
     pub checkpoint_every: u64,
     /// Checkpoint path (required if checkpoint_every > 0).
@@ -33,6 +41,7 @@ impl Default for PipelineConfig {
     fn default() -> Self {
         PipelineConfig {
             channel_capacity: 1024,
+            batch_size: 1,
             checkpoint_every: 0,
             checkpoint_path: None,
             reselect_on_drift: true,
@@ -108,9 +117,22 @@ impl StreamPipeline {
         let mut items = 0u64;
         let mut reselections = 0usize;
         let mut checkpoints = 0usize;
+        // Chunked ingestion: items accumulate into `chunk` and reach the
+        // algorithm through process_batch (batch_size 1 keeps the direct
+        // per-item call — no buffering overhead on the default path).
+        // Drift is still observed per item *before* the item joins the
+        // chunk; a drift event flushes the pending chunk (all pre-drift
+        // items) so the epoch checkpoint and reset see exactly the same
+        // state as the per-item path.
+        let batch = self.cfg.batch_size.max(1);
+        let mut chunk: Vec<f32> = Vec::with_capacity(batch * dim);
         for item in rx.iter() {
             items += 1;
             if drift.observe(&item) && self.cfg.reselect_on_drift {
+                if !chunk.is_empty() {
+                    algo.process_batch(&chunk);
+                    chunk.clear();
+                }
                 // Epoch boundary: persist the outgoing summary, then restart.
                 if let Some(path) = &self.cfg.checkpoint_path {
                     let epoch_path =
@@ -121,13 +143,27 @@ impl StreamPipeline {
                 algo.reset();
                 reselections += 1;
             }
-            algo.process(&item);
-            if self.cfg.checkpoint_every > 0 && items % self.cfg.checkpoint_every == 0 {
+            let every = self.cfg.checkpoint_every;
+            let boundary = every > 0 && items % every == 0;
+            if batch == 1 {
+                algo.process(&item);
+            } else {
+                chunk.extend_from_slice(&item);
+                if chunk.len() >= batch * dim || boundary {
+                    algo.process_batch(&chunk);
+                    chunk.clear();
+                }
+            }
+            if boundary {
                 if let Some(path) = &self.cfg.checkpoint_path {
                     self.write_checkpoint(algo, drift, items, path)?;
                     checkpoints += 1;
                 }
             }
+        }
+        if !chunk.is_empty() {
+            algo.process_batch(&chunk);
+            chunk.clear();
         }
         algo.finalize();
         let backpressure_hits = producer.join().unwrap_or(0);
@@ -208,6 +244,56 @@ mod tests {
         let report = StreamPipeline::new(cfg).run(src, &mut a, &mut det).unwrap();
         assert_eq!(report.items, 2000);
         assert!(report.backpressure_hits > 0, "capacity-1 channel must block");
+    }
+
+    #[test]
+    fn batched_ingestion_matches_per_item() {
+        // Same source/seed through batch_size 1 and 32: identical summary
+        // state and item counts (process_batch is semantics-preserving).
+        let mut reports = Vec::new();
+        for batch_size in [1usize, 32] {
+            let src = registry::source("fact-highlevel-like", 1200, 6).unwrap();
+            let mut a = algo(16, 6);
+            let mut det = NoDrift::default();
+            let cfg = PipelineConfig { batch_size, ..Default::default() };
+            reports.push((
+                StreamPipeline::new(cfg).run(src, &mut a, &mut det).unwrap(),
+                a.stats(),
+                a.summary(),
+            ));
+        }
+        let (r1, s1, sum1) = &reports[0];
+        let (r2, s2, sum2) = &reports[1];
+        assert_eq!(r1.items, r2.items);
+        assert_eq!(r1.final_summary_len, r2.final_summary_len);
+        assert_eq!(r1.final_value.to_bits(), r2.final_value.to_bits());
+        assert_eq!(s1.queries, s2.queries);
+        assert_eq!(sum1, sum2);
+    }
+
+    #[test]
+    fn batched_ingestion_with_drift_matches_per_item() {
+        // Drift resets interleave with chunk flushes; the flush-before-
+        // reset ordering must keep the batched run identical to per-item.
+        let mut runs = Vec::new();
+        for batch_size in [1usize, 17] {
+            let src = registry::source("stream51-like", 2000, 8).unwrap();
+            let mut a = algo(64, 6);
+            let mut det = MeanShiftDetector::new(64, 100, 3.0);
+            let cfg = PipelineConfig { batch_size, ..Default::default() };
+            let report = StreamPipeline::new(cfg).run(src, &mut a, &mut det).unwrap();
+            assert_eq!(report.items, 2000);
+            assert_eq!(report.reselections, report.drift_events);
+            runs.push((report, a.stats(), a.summary()));
+        }
+        let (r1, s1, sum1) = &runs[0];
+        let (r2, s2, sum2) = &runs[1];
+        assert!(r1.drift_events > 0, "stream51-like must drift");
+        assert_eq!(r1.drift_events, r2.drift_events);
+        assert_eq!(r1.final_value.to_bits(), r2.final_value.to_bits());
+        assert_eq!(r1.final_summary_len, r2.final_summary_len);
+        assert_eq!(s1.queries, s2.queries);
+        assert_eq!(sum1, sum2);
     }
 
     #[test]

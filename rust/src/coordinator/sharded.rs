@@ -50,6 +50,65 @@ impl Shard {
             }
         }
     }
+
+    /// Batched [`process`](Self::process) over a whole chunk: one gain
+    /// panel per rejection run against the shard's current summary. Gains
+    /// depend only on the summary, so a threshold pop mid-scan just
+    /// recomputes the threshold and keeps consuming the same panel; only
+    /// an acceptance invalidates the remaining gains and forces a
+    /// re-batch. Returns the speculative gain evaluations (past an
+    /// acceptance) for the caller to exclude from query stats.
+    fn process_batch(
+        &mut self,
+        chunk: &[f32],
+        dim: usize,
+        k: usize,
+        t_budget: usize,
+        scratch: &mut Vec<f64>,
+    ) -> u64 {
+        let total = chunk.len() / dim;
+        let mut pos = 0usize;
+        let mut wasted = 0u64;
+        while pos < total {
+            if self.oracle.len() >= k {
+                return wasted; // full: the scalar path stops querying too
+            }
+            let remaining = total - pos;
+            self.oracle.peek_gain_batch(&chunk[pos * dim..], remaining, scratch);
+            let mut thresh =
+                sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
+            let mut accepted_at = None;
+            for (j, &gain) in scratch.iter().enumerate() {
+                if gain >= thresh {
+                    self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
+                    self.t = 0;
+                    accepted_at = Some(j);
+                    break;
+                }
+                self.t += 1;
+                if self.t >= t_budget {
+                    self.t = 0;
+                    if let Some(v) = self.grid.pop() {
+                        self.v = v;
+                        thresh = sieve_threshold(
+                            self.v,
+                            self.oracle.current_value(),
+                            k,
+                            self.oracle.len(),
+                        );
+                    }
+                }
+            }
+            match accepted_at {
+                Some(j) => {
+                    wasted += (remaining - (j + 1)) as u64;
+                    pos += j + 1;
+                }
+                None => return wasted,
+            }
+        }
+        wasted
+    }
 }
 
 /// Parallel-threshold ThreeSieves.
@@ -60,6 +119,11 @@ pub struct ShardedThreeSieves {
     t_budget: usize,
     dim: usize,
     elements: u64,
+    /// Speculative batch gains past a shard's acceptance (see
+    /// `Shard::process_batch`); excluded from reported query stats.
+    speculative_queries: u64,
+    /// Scratch for `process_batch` gain panels.
+    gain_buf: Vec<f64>,
     peak_stored: usize,
 }
 
@@ -88,6 +152,8 @@ impl ShardedThreeSieves {
             t_budget: tuning.t(),
             dim: proto.dim(),
             elements: 0,
+            speculative_queries: 0,
+            gain_buf: Vec::new(),
             peak_stored: 0,
         }
     }
@@ -122,6 +188,27 @@ impl StreamingAlgorithm for ShardedThreeSieves {
         }
     }
 
+    /// Batched ingestion: shards are fully independent, so each consumes
+    /// the chunk through [`Shard::process_batch`]. Stored elements only
+    /// grow within a chunk, so the end-of-chunk peak equals the scalar
+    /// per-item peak.
+    fn process_batch(&mut self, chunk: &[f32]) {
+        let d = self.dim;
+        debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
+        self.elements += (chunk.len() / d) as u64;
+        let k = self.k;
+        let t_budget = self.t_budget;
+        let mut scratch = std::mem::take(&mut self.gain_buf);
+        for s in self.shards.iter_mut() {
+            self.speculative_queries += s.process_batch(chunk, d, k, t_budget, &mut scratch);
+        }
+        self.gain_buf = scratch;
+        let stored: usize = self.shards.iter().map(|s| s.oracle.len()).sum();
+        if stored > self.peak_stored {
+            self.peak_stored = stored;
+        }
+    }
+
     fn value(&self) -> f64 {
         self.best().oracle.current_value()
     }
@@ -144,8 +231,9 @@ impl StreamingAlgorithm for ShardedThreeSieves {
 
     fn stats(&self) -> AlgoStats {
         let stored: usize = self.shards.iter().map(|s| s.oracle.len()).sum();
+        let charged: u64 = self.shards.iter().map(|s| s.oracle.queries()).sum();
         AlgoStats {
-            queries: self.shards.iter().map(|s| s.oracle.queries()).sum(),
+            queries: charged.saturating_sub(self.speculative_queries),
             elements: self.elements,
             stored,
             peak_stored: self.peak_stored.max(stored),
@@ -163,6 +251,7 @@ impl StreamingAlgorithm for ShardedThreeSieves {
         self.shards =
             grid.chunks(chunk).map(|part| Shard::new(part.to_vec(), proto.as_ref())).collect();
         self.elements = 0;
+        self.speculative_queries = 0;
         self.peak_stored = 0;
     }
 }

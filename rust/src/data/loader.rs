@@ -8,18 +8,43 @@ use std::path::Path;
 use crate::data::Dataset;
 
 /// Errors from dataset loading.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LoadError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error at line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
-    #[error("inconsistent row width at line {line}: got {got}, expected {expected}")]
     Ragged { line: usize, got: usize, expected: usize },
-    #[error("empty dataset")]
     Empty,
-    #[error("corrupt binary file: {0}")]
     Corrupt(String),
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::Io(e) => write!(f, "io error: {e}"),
+            LoadError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            LoadError::Ragged { line, got, expected } => write!(
+                f,
+                "inconsistent row width at line {line}: got {got}, expected {expected}"
+            ),
+            LoadError::Empty => write!(f, "empty dataset"),
+            LoadError::Corrupt(msg) => write!(f, "corrupt binary file: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LoadError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LoadError {
+    fn from(e: std::io::Error) -> Self {
+        LoadError::Io(e)
+    }
 }
 
 /// Load a headerless numeric CSV. Empty lines and `#` comments are skipped.

@@ -8,7 +8,9 @@ use crate::config::{AlgoSpec, ExperimentConfig};
 use crate::data::registry;
 use crate::metrics::{write_records, RunRecord};
 
-use super::runner::{run_batch_protocol, run_stream_protocol, GammaMode};
+use super::runner::{
+    run_batch_protocol, run_batch_protocol_chunked, run_stream_protocol_chunked, GammaMode,
+};
 
 /// Expand the config's grid into runs and execute them.
 ///
@@ -29,9 +31,17 @@ pub fn run(cfg: &ExperimentConfig, stream: bool) -> std::io::Result<Vec<RunRecor
             for spec in expand(cfg, &cfg.algos) {
                 let rec = if stream {
                     let mut src = registry::source(dataset, cfg.n, cfg.seed).unwrap();
-                    run_stream_protocol(&spec, src.as_mut(), dataset, k, mode, greedy)
+                    run_stream_protocol_chunked(
+                        &spec,
+                        src.as_mut(),
+                        dataset,
+                        k,
+                        mode,
+                        greedy,
+                        cfg.batch_size,
+                    )
                 } else {
-                    run_batch_protocol(&spec, &ds, k, mode, greedy)
+                    run_batch_protocol_chunked(&spec, &ds, k, mode, greedy, cfg.batch_size)
                 };
                 println!(
                     "[{}] {:<26} {:<22} K={:<4} rel={:.3} t={:.3}s mem={}",

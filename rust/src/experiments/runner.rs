@@ -100,6 +100,21 @@ pub fn run_batch_protocol(
     mode: GammaMode,
     greedy_value: f64,
 ) -> RunRecord {
+    run_batch_protocol_chunked(spec, ds, k, mode, greedy_value, 1)
+}
+
+/// [`run_batch_protocol`] with chunked ingestion: each pass hands the
+/// dataset to the algorithm in `batch_size`-item chunks through
+/// [`StreamingAlgorithm::process_batch`] (semantics-preserving; 1 = the
+/// per-item path).
+pub fn run_batch_protocol_chunked(
+    spec: &AlgoSpec,
+    ds: &Dataset,
+    k: usize,
+    mode: GammaMode,
+    greedy_value: f64,
+    batch_size: usize,
+) -> RunRecord {
     if matches!(spec, AlgoSpec::Greedy) {
         // Offline reference does its native multi-pass (lazy) fit.
         let mut g = Greedy::new(make_oracle(ds.dim(), k, mode), k);
@@ -108,12 +123,21 @@ pub fn run_batch_protocol(
         let runtime = start.elapsed();
         return record(spec, ds.name(), k, &g, runtime, greedy_value);
     }
+    let b = batch_size.max(1);
     let mut algo = build_algo(spec, ds.dim(), k, mode, Some(ds.len()));
     let start = Instant::now();
     let mut passes = 0;
     while !algo.is_full() && passes < k {
-        for row in ds.iter() {
-            algo.process(row);
+        if b == 1 {
+            for row in ds.iter() {
+                algo.process(row);
+            }
+        } else {
+            // The dataset is contiguous row-major storage, so chunks are
+            // just row-aligned slices (the tail chunk may be short).
+            for chunk in ds.raw().chunks(b * ds.dim()) {
+                algo.process_batch(chunk);
+            }
         }
         algo.finalize();
         passes += 1;
@@ -131,12 +155,48 @@ pub fn run_stream_protocol(
     mode: GammaMode,
     greedy_value: f64,
 ) -> RunRecord {
+    run_stream_protocol_chunked(spec, source, dataset_name, k, mode, greedy_value, 1)
+}
+
+/// [`run_stream_protocol`] with chunked ingestion: pull up to `batch_size`
+/// items from the source, then hand the chunk to
+/// [`StreamingAlgorithm::process_batch`] (semantics-preserving; 1 = the
+/// per-item path).
+pub fn run_stream_protocol_chunked(
+    spec: &AlgoSpec,
+    source: &mut dyn StreamSource,
+    dataset_name: &str,
+    k: usize,
+    mode: GammaMode,
+    greedy_value: f64,
+    batch_size: usize,
+) -> RunRecord {
+    let b = batch_size.max(1);
+    let d = source.dim();
     let len_hint = source.len_hint();
-    let mut algo = build_algo(spec, source.dim(), k, mode, len_hint);
-    let mut buf = vec![0.0f32; source.dim()];
+    let mut algo = build_algo(spec, d, k, mode, len_hint);
+    let mut buf = vec![0.0f32; d];
     let start = Instant::now();
-    while source.next_into(&mut buf) {
-        algo.process(&buf);
+    if b == 1 {
+        while source.next_into(&mut buf) {
+            algo.process(&buf);
+        }
+    } else {
+        let mut chunk: Vec<f32> = Vec::with_capacity(b * d);
+        loop {
+            chunk.clear();
+            while chunk.len() < b * d && source.next_into(&mut buf) {
+                chunk.extend_from_slice(&buf);
+            }
+            if chunk.is_empty() {
+                break;
+            }
+            let exhausted = chunk.len() < b * d;
+            algo.process_batch(&chunk);
+            if exhausted {
+                break;
+            }
+        }
     }
     algo.finalize();
     let runtime = start.elapsed();
@@ -213,6 +273,28 @@ mod tests {
         assert_eq!(rec.stats.elements, 500);
         assert!(rec.value > 0.0);
         assert_eq!(rec.t_param, 50);
+    }
+
+    #[test]
+    fn chunked_stream_protocol_matches_per_item() {
+        let spec = AlgoSpec::ThreeSieves { epsilon: 0.01, t: 50 };
+        let mut records = Vec::new();
+        for batch_size in [1usize, 33] {
+            let mut src = registry::source("fact-highlevel-like", 700, 5).unwrap();
+            records.push(run_stream_protocol_chunked(
+                &spec,
+                src.as_mut(),
+                "fact-highlevel-like",
+                6,
+                GammaMode::Streaming,
+                1.0,
+                batch_size,
+            ));
+        }
+        assert_eq!(records[0].value.to_bits(), records[1].value.to_bits());
+        assert_eq!(records[0].stats.queries, records[1].stats.queries);
+        assert_eq!(records[0].stats.elements, records[1].stats.elements);
+        assert_eq!(records[0].summary_size, records[1].summary_size);
     }
 
     #[test]

@@ -179,6 +179,29 @@ mod tests {
     }
 
     #[test]
+    fn default_peek_gain_batch_matches_scalar() {
+        // ConcaveCoverage relies on the trait's default per-item fallback;
+        // peek_gain is pure w.r.t. the accumulator, so the fallback is
+        // exact (and must charge one query per item).
+        let mut rng = Rng::seed_from(3);
+        let d = 5;
+        let mut f = ConcaveCoverage::new(d);
+        for _ in 0..3 {
+            let item: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
+            f.accept(&item);
+        }
+        let cands: Vec<f32> = (0..4 * d).map(|_| rng.uniform_f32() - 0.3).collect();
+        let q0 = f.queries();
+        let mut batch = Vec::new();
+        f.peek_gain_batch(&cands, 4, &mut batch);
+        assert_eq!(f.queries(), q0 + 4);
+        for (i, &g) in batch.iter().enumerate() {
+            let single = f.peek_gain(&cands[i * d..(i + 1) * d]);
+            assert_eq!(g.to_bits(), single.to_bits(), "item {i}");
+        }
+    }
+
+    #[test]
     fn negative_features_contribute_nothing() {
         let mut f = ConcaveCoverage::new(3);
         let g = f.peek_gain(&[-1.0, -2.0, -3.0]);

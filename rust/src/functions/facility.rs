@@ -203,6 +203,29 @@ mod tests {
     }
 
     #[test]
+    fn default_peek_gain_batch_matches_scalar() {
+        // FacilityLocation relies on the trait's default per-item fallback;
+        // peek_gain only reads `best` (the scratch swap restores itself),
+        // so the fallback is exact and charges one query per item.
+        let mut rng = Rng::seed_from(9);
+        let d = 4;
+        let mut f = make(d, 20, 9);
+        for _ in 0..3 {
+            let item: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            f.accept(&item);
+        }
+        let cands: Vec<f32> = (0..5 * d).map(|_| rng.normal() as f32).collect();
+        let q0 = f.queries();
+        let mut batch = Vec::new();
+        f.peek_gain_batch(&cands, 5, &mut batch);
+        assert_eq!(f.queries(), q0 + 5);
+        for (i, &g) in batch.iter().enumerate() {
+            let single = f.peek_gain(&cands[i * d..(i + 1) * d]);
+            assert_eq!(g.to_bits(), single.to_bits(), "item {i}");
+        }
+    }
+
+    #[test]
     fn remove_then_reaccept_roundtrips() {
         let mut rng = Rng::seed_from(3);
         let mut f = make(4, 25, 3);

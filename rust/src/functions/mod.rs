@@ -55,7 +55,14 @@ pub trait SubmodularFunction {
     fn peek_gain(&mut self, item: &[f32]) -> f64;
 
     /// Marginal gains for `count` items packed row-major in `items`.
-    /// Default: per-item loop; backends may batch (PJRT does).
+    ///
+    /// Contract: element `i` of `out` must equal `peek_gain(items[i])`
+    /// evaluated against the *current* summary, and the call must charge
+    /// exactly `count` queries — batch evaluation amortizes work, it never
+    /// changes semantics or accounting (`rust/tests/batch_parity.rs` pins
+    /// this for every implementation). Default: per-item loop, which
+    /// satisfies the contract trivially; `NativeLogDet` overrides with a
+    /// blocked kernel-panel implementation and PJRT batches on device.
     fn peek_gain_batch(&mut self, items: &[f32], count: usize, out: &mut Vec<f64>) {
         let d = self.dim();
         out.clear();

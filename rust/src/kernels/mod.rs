@@ -20,8 +20,34 @@ pub trait Kernel: Send + Sync {
     fn eval_row(&self, x: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
         let n = out.len();
         debug_assert!(rows.len() >= n * dim);
-        for i in 0..n {
-            out[i] = self.eval(x, &rows[i * dim..(i + 1) * dim]);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.eval(x, &rows[i * dim..(i + 1) * dim]);
+        }
+    }
+
+    /// Kernel panel: `out[b * n + i] = k(xs[b], rows[i])` for a block of
+    /// `B = xs.len() / dim` query points against `n = rows.len() / dim`
+    /// summary rows, both flat row-major. `out` must hold `B * n` values.
+    ///
+    /// This is the trait-level batched API for kernel-generic consumers
+    /// (facility-location panels, future PJRT/SIMD backends): one B×n
+    /// panel turns per-element kernel rows into cache-friendly
+    /// matrix-panel work. The default delegates to
+    /// [`eval_row`](Self::eval_row) per query point; [`RbfKernel`]
+    /// overrides it with a norm-caching blocked variant. Note
+    /// `NativeLogDet` keeps its own fused private panel
+    /// (`kernel_panel`) instead of calling this — it additionally needs
+    /// the exp-underflow cutoff and exact `dot_lanes` arithmetic that its
+    /// bitwise batch/scalar parity contract pins.
+    fn eval_block(&self, xs: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+        assert!(dim > 0, "eval_block: dim must be positive");
+        debug_assert_eq!(xs.len() % dim, 0);
+        debug_assert_eq!(rows.len() % dim, 0);
+        let b = xs.len() / dim;
+        let n = rows.len() / dim;
+        debug_assert!(out.len() >= b * n);
+        for (q, x) in xs.chunks_exact(dim).enumerate() {
+            self.eval_row(x, rows, dim, &mut out[q * n..(q + 1) * n]);
         }
     }
 
@@ -70,6 +96,29 @@ impl Kernel for RbfKernel {
             let row = &rows[i * dim..(i + 1) * dim];
             let d2 = xsq + dot_f32(row, row) - 2.0 * dot_f32(x, row);
             *o = (-self.gamma * d2.max(0.0)).exp();
+        }
+    }
+
+    fn eval_block(&self, xs: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+        // Same norm-caching decomposition as eval_row, but the summary row
+        // norms are computed once for the whole panel instead of once per
+        // query point, and rows stream through the cache once per query
+        // rather than once per (query, row) pair of independent calls.
+        assert!(dim > 0, "eval_block: dim must be positive");
+        debug_assert_eq!(xs.len() % dim, 0);
+        debug_assert_eq!(rows.len() % dim, 0);
+        let n = rows.len() / dim;
+        let b = xs.len() / dim;
+        debug_assert!(out.len() >= b * n);
+        let row_norms: Vec<f64> = rows.chunks_exact(dim).map(|r| dot_f32(r, r)).collect();
+        for (q, x) in xs.chunks_exact(dim).enumerate() {
+            let xsq = dot_f32(x, x);
+            let panel = &mut out[q * n..(q + 1) * n];
+            for (i, o) in panel.iter_mut().enumerate() {
+                let row = &rows[i * dim..(i + 1) * dim];
+                let d2 = xsq + row_norms[i] - 2.0 * dot_f32(x, row);
+                *o = (-self.gamma * d2.max(0.0)).exp();
+            }
         }
     }
 
@@ -174,6 +223,44 @@ mod tests {
             let want = k.eval(&x, &rows[i * d..(i + 1) * d]);
             assert!((out[i] - want).abs() < 1e-9, "row {i}: {} vs {want}", out[i]);
         }
+    }
+
+    #[test]
+    fn eval_block_matches_eval_for_every_kernel() {
+        let kernels: Vec<Box<dyn Kernel>> = vec![
+            Box::new(RbfKernel::new(2.5)),
+            Box::new(CosineKernel),
+            Box::new(NormalizedLinearKernel),
+        ];
+        let mut rng = Rng::seed_from(11);
+        let (d, n, b) = (9, 7, 5);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let xs: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        for k in &kernels {
+            let mut out = vec![0.0; b * n];
+            k.eval_block(&xs, &rows, d, &mut out);
+            for q in 0..b {
+                for i in 0..n {
+                    let want = k.eval(&xs[q * d..(q + 1) * d], &rows[i * d..(i + 1) * d]);
+                    let got = out[q * n + i];
+                    assert!(
+                        (got - want).abs() < 1e-9,
+                        "{} panel ({q},{i}): {got} vs {want}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_block_handles_empty_block() {
+        let k = RbfKernel::new(1.0);
+        let rows = [0.5f32; 8];
+        let mut out = [0.0f64; 0];
+        k.eval_block(&[], &rows, 4, &mut out);
+        let k2 = CosineKernel;
+        k2.eval_block(&[], &rows, 4, &mut out);
     }
 
     #[test]

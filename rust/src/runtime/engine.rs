@@ -71,7 +71,10 @@ impl LoadedGraph {
     /// Execute with literal inputs; unpack the `return_tuple=True` output
     /// into per-output literals.
     pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let outs = self.exe.execute::<xla::Literal>(args).with_context(|| format!("executing {}", self.name))?;
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
         self.unpack(outs)
     }
 

@@ -11,16 +11,41 @@ use std::path::{Path, PathBuf};
 use crate::util::json::Json;
 
 /// Errors loading or validating a manifest.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io error reading {path}: {err}")]
     Io { path: PathBuf, err: std::io::Error },
-    #[error("manifest parse error: {0}")]
-    Parse(#[from] crate::util::json::JsonError),
-    #[error("manifest invalid: {0}")]
+    Parse(crate::util::json::JsonError),
     Invalid(String),
-    #[error("no artifact config named {0:?}")]
     UnknownConfig(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io { path, err } => {
+                write!(f, "io error reading {}: {err}", path.display())
+            }
+            ManifestError::Parse(e) => write!(f, "manifest parse error: {e}"),
+            ManifestError::Invalid(msg) => write!(f, "manifest invalid: {msg}"),
+            ManifestError::UnknownConfig(name) => write!(f, "no artifact config named {name:?}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io { err, .. } => Some(err),
+            ManifestError::Parse(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for ManifestError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        ManifestError::Parse(e)
+    }
 }
 
 /// One AOT-lowered shape/constant configuration.
@@ -160,10 +185,7 @@ mod tests {
         assert_eq!(c.k, 32);
         assert_eq!(c.b, 8);
         assert!((c.gamma - 32.0).abs() < 1e-12);
-        assert_eq!(
-            m.file_path(c, "gain").unwrap(),
-            PathBuf::from("/tmp/arts/q16.gain.hlo.txt")
-        );
+        assert_eq!(m.file_path(c, "gain").unwrap(), PathBuf::from("/tmp/arts/q16.gain.hlo.txt"));
     }
 
     #[test]

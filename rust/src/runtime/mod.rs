@@ -1,9 +1,26 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The real engine ([`engine`], [`pjrt_logdet`]) wraps the `xla` crate's
+//! PJRT C-API bindings, which exist only inside the accelerator image, so
+//! both modules sit behind the `pjrt` cargo feature. The default build
+//! swaps in [`stub`]: same public surface, constructors return a
+//! "disabled" error, and callers (CLI `pjrt-info`, the micro benches)
+//! degrade to a skip message. The [`manifest`] parser is dependency-free
+//! and always available.
 
-pub mod engine;
 pub mod manifest;
-pub mod pjrt_logdet;
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod pjrt_logdet;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, LoadedGraph};
 pub use manifest::{ArtifactConfig, Manifest};
+#[cfg(feature = "pjrt")]
 pub use pjrt_logdet::PjrtLogDet;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, PjrtLogDet};

@@ -1,0 +1,107 @@
+//! Dependency-free stand-ins for the PJRT runtime (`pjrt` feature off).
+//!
+//! The real engine executes AOT-compiled HLO artifacts through the `xla`
+//! crate's PJRT bindings, which are only available inside the accelerator
+//! image. These stubs keep the public surface compiling in hermetic builds:
+//! every constructor returns [`PjrtDisabled`], so the CLI's `pjrt-info`
+//! command and the micro benches print a skip message instead of failing
+//! to link. The types are never constructible — trait methods are
+//! `unreachable!` by design, not placeholders.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::functions::SubmodularFunction;
+
+/// Error returned by every stub constructor.
+#[derive(Debug, Clone)]
+pub struct PjrtDisabled;
+
+impl fmt::Display for PjrtDisabled {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "PJRT runtime disabled: rebuild with --features pjrt inside the accelerator image"
+        )
+    }
+}
+
+impl std::error::Error for PjrtDisabled {}
+
+/// Stub PJRT client handle (never constructible).
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    /// Always fails: the PJRT plugin is not linked into this build.
+    pub fn cpu() -> Result<Self, PjrtDisabled> {
+        Err(PjrtDisabled)
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Engine cannot be constructed")
+    }
+}
+
+/// Stub PJRT-backed oracle (never constructible).
+pub struct PjrtLogDet {
+    _private: (),
+}
+
+impl PjrtLogDet {
+    /// Always fails: the PJRT plugin is not linked into this build.
+    pub fn from_artifacts(_dir: &Path, _cfg_name: &str) -> Result<Self, PjrtDisabled> {
+        Err(PjrtDisabled)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+}
+
+impl SubmodularFunction for PjrtLogDet {
+    fn dim(&self) -> usize {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn len(&self) -> usize {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn current_value(&self) -> f64 {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn max_singleton_value(&self) -> f64 {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn peek_gain(&mut self, _item: &[f32]) -> f64 {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn accept(&mut self, _item: &[f32]) {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn remove(&mut self, _idx: usize) {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn summary(&self) -> &[f32] {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn reset(&mut self) {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn queries(&self) -> u64 {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+
+    fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
+}

@@ -1,0 +1,255 @@
+//! Batch-vs-scalar parity: the batched ingestion path must be
+//! *semantically invisible*.
+//!
+//! Three layers are pinned here (issue #1 acceptance criteria):
+//! * kernels — `Kernel::eval_block` matches `Kernel::eval` to 1e-9;
+//! * oracles — `NativeLogDet::peek_gain_batch` matches `peek_gain`
+//!   element-wise (bitwise, in fact) with identical query accounting;
+//! * algorithms — for every `process_batch` override, a randomized stream
+//!   processed in chunks yields the identical summary, value and resource
+//!   stats as the per-item path, across several chunk sizes.
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::{
+    RandomReservoir, Salsa, SieveStreaming, SieveStreamingPP, StreamingAlgorithm, ThreeSieves,
+};
+use threesieves::coordinator::ShardedThreeSieves;
+use threesieves::data::synthetic::{Mixture, MixtureSource};
+use threesieves::data::{Dataset, StreamSource};
+use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+use threesieves::kernels::{CosineKernel, Kernel, NormalizedLinearKernel, RbfKernel};
+use threesieves::util::rng::Rng;
+
+const DIM: usize = 8;
+
+fn stream(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from(seed);
+    let mix = Mixture::random(DIM, 4, 5.0, 0.5, &mut rng);
+    let mut ds = MixtureSource::new(mix, n, seed).materialize("parity", n);
+    ds.normalize();
+    ds
+}
+
+fn oracle(k: usize) -> Box<dyn SubmodularFunction> {
+    Box::new(NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0)))
+}
+
+/// Drive `algo` over `ds` per item and `twin` over the same rows in
+/// `chunk`-item blocks, then assert both ended in the same state.
+fn assert_parity(
+    algo: &mut dyn StreamingAlgorithm,
+    twin: &mut dyn StreamingAlgorithm,
+    ds: &Dataset,
+    chunk: usize,
+) {
+    for row in ds.iter() {
+        algo.process(row);
+    }
+    for block in ds.raw().chunks(chunk * DIM) {
+        twin.process_batch(block);
+    }
+    algo.finalize();
+    twin.finalize();
+    let label = format!("{} chunk={chunk}", algo.name());
+    assert_eq!(
+        algo.value().to_bits(),
+        twin.value().to_bits(),
+        "{label}: value {} vs {}",
+        algo.value(),
+        twin.value()
+    );
+    assert_eq!(algo.summary(), twin.summary(), "{label}: summary rows differ");
+    assert_eq!(algo.summary_len(), twin.summary_len(), "{label}: summary len");
+    let (a, b) = (algo.stats(), twin.stats());
+    assert_eq!(a.queries, b.queries, "{label}: queries {a:?} vs {b:?}");
+    assert_eq!(a.elements, b.elements, "{label}: elements");
+    assert_eq!(a.peak_stored, b.peak_stored, "{label}: peak_stored");
+    assert_eq!(a.stored, b.stored, "{label}: stored");
+    assert_eq!(a.instances, b.instances, "{label}: instances");
+}
+
+const CHUNKS: [usize; 4] = [1, 7, 64, 1000];
+
+#[test]
+fn kernels_eval_block_matches_eval() {
+    let kernels: Vec<Box<dyn Kernel>> = vec![
+        Box::new(RbfKernel::new(0.7)),
+        Box::new(RbfKernel::for_batch(DIM)),
+        Box::new(RbfKernel::for_streaming(DIM)),
+        Box::new(CosineKernel),
+        Box::new(NormalizedLinearKernel),
+    ];
+    let mut rng = Rng::seed_from(1);
+    let (n, b) = (13, 9);
+    let rows: Vec<f32> = (0..n * DIM).map(|_| rng.normal() as f32).collect();
+    let xs: Vec<f32> = (0..b * DIM).map(|_| rng.normal() as f32).collect();
+    for k in &kernels {
+        let mut out = vec![0.0; b * n];
+        k.eval_block(&xs, &rows, DIM, &mut out);
+        for q in 0..b {
+            for i in 0..n {
+                let want = k.eval(&xs[q * DIM..(q + 1) * DIM], &rows[i * DIM..(i + 1) * DIM]);
+                assert!(
+                    (out[q * n + i] - want).abs() < 1e-9,
+                    "{} ({q},{i}): {} vs {want}",
+                    k.name(),
+                    out[q * n + i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn logdet_batch_gains_match_scalar_elementwise() {
+    let mut rng = Rng::seed_from(2);
+    for &summary_n in &[0usize, 1, 5, 12] {
+        let mut batch_oracle = NativeLogDet::new(LogDetConfig::with_gamma(DIM, 16, 0.8, 1.0));
+        let mut scalar_oracle = NativeLogDet::new(LogDetConfig::with_gamma(DIM, 16, 0.8, 1.0));
+        for _ in 0..summary_n {
+            let item: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+            batch_oracle.accept(&item);
+            scalar_oracle.accept(&item);
+        }
+        for &count in &[1usize, 3, 4, 8, 11] {
+            let cands: Vec<f32> = (0..count * DIM).map(|_| rng.normal() as f32).collect();
+            let mut gains = Vec::new();
+            batch_oracle.peek_gain_batch(&cands, count, &mut gains);
+            assert_eq!(gains.len(), count);
+            for (i, &g) in gains.iter().enumerate() {
+                let single = scalar_oracle.peek_gain(&cands[i * DIM..(i + 1) * DIM]);
+                assert_eq!(
+                    g.to_bits(),
+                    single.to_bits(),
+                    "|S|={summary_n} count={count} item {i}: {g} vs {single}"
+                );
+            }
+            assert_eq!(batch_oracle.queries(), scalar_oracle.queries());
+        }
+    }
+}
+
+#[test]
+fn three_sieves_batch_parity() {
+    let ds = stream(2500, 10);
+    let k = 8;
+    for chunk in CHUNKS {
+        let mut a = ThreeSieves::new(oracle(k), k, 0.01, SieveTuning::FixedT(40));
+        let mut b = ThreeSieves::new(oracle(k), k, 0.01, SieveTuning::FixedT(40));
+        assert_parity(&mut a, &mut b, &ds, chunk);
+        assert!(
+            b.stats().queries_per_element() <= 1.02,
+            "batched ThreeSieves must keep ≤1 query/element: {}",
+            b.stats().queries_per_element()
+        );
+    }
+}
+
+#[test]
+fn three_sieves_small_t_batch_parity() {
+    // T smaller than the chunk: the scan hits threshold drops constantly,
+    // exercising the replay path.
+    let ds = stream(1500, 11);
+    let k = 12;
+    for chunk in CHUNKS {
+        let mut a = ThreeSieves::new(oracle(k), k, 0.2, SieveTuning::FixedT(3));
+        let mut b = ThreeSieves::new(oracle(k), k, 0.2, SieveTuning::FixedT(3));
+        assert_parity(&mut a, &mut b, &ds, chunk);
+    }
+}
+
+#[test]
+fn three_sieves_m_estimation_batch_parity() {
+    // estimate-m replays per item inside process_batch; parity must still
+    // hold exactly.
+    let ds = stream(1200, 12);
+    let k = 6;
+    for chunk in [7usize, 64] {
+        let mut a = ThreeSieves::with_m_estimation(oracle(k), k, 0.05, SieveTuning::FixedT(25));
+        let mut b = ThreeSieves::with_m_estimation(oracle(k), k, 0.05, SieveTuning::FixedT(25));
+        assert_parity(&mut a, &mut b, &ds, chunk);
+    }
+}
+
+#[test]
+fn sieve_streaming_batch_parity() {
+    let ds = stream(1500, 13);
+    let k = 6;
+    for chunk in CHUNKS {
+        let mut a = SieveStreaming::new(oracle(k), k, 0.1);
+        let mut b = SieveStreaming::new(oracle(k), k, 0.1);
+        assert_parity(&mut a, &mut b, &ds, chunk);
+    }
+}
+
+#[test]
+fn sieve_streaming_pp_batch_parity() {
+    // ++ prunes and spawns sieves on LB growth mid-stream — the hardest
+    // coupling for the batched path.
+    let ds = stream(1800, 14);
+    let k = 6;
+    for chunk in CHUNKS {
+        let mut a = SieveStreamingPP::new(oracle(k), k, 0.1);
+        let mut b = SieveStreamingPP::new(oracle(k), k, 0.1);
+        assert_parity(&mut a, &mut b, &ds, chunk);
+    }
+}
+
+#[test]
+fn salsa_batch_parity() {
+    // Length hint on: includes the position-adaptive rule whose threshold
+    // moves *within* a chunk.
+    let ds = stream(1200, 15);
+    let k = 5;
+    for chunk in CHUNKS {
+        let mut a = Salsa::new(oracle(k), k, 0.2, Some(ds.len()));
+        let mut b = Salsa::new(oracle(k), k, 0.2, Some(ds.len()));
+        assert_parity(&mut a, &mut b, &ds, chunk);
+    }
+}
+
+#[test]
+fn sharded_three_sieves_batch_parity() {
+    let ds = stream(1500, 16);
+    let k = 6;
+    for chunk in CHUNKS {
+        let mut a = ShardedThreeSieves::new(oracle(k), k, 0.05, SieveTuning::FixedT(20), 3);
+        let mut b = ShardedThreeSieves::new(oracle(k), k, 0.05, SieveTuning::FixedT(20), 3);
+        assert_parity(&mut a, &mut b, &ds, chunk);
+    }
+}
+
+#[test]
+fn default_process_batch_matches_for_non_overriding_algorithms() {
+    // RandomReservoir has no override; the trait default must be exact.
+    let ds = stream(800, 17);
+    let k = 5;
+    let mut a = RandomReservoir::new(oracle(k), k, 99);
+    let mut b = RandomReservoir::new(oracle(k), k, 99);
+    assert_parity(&mut a, &mut b, &ds, 13);
+}
+
+#[test]
+fn batch_parity_survives_reset() {
+    // Drift-style reset mid-stream: both paths reset at the same element
+    // and must still agree afterwards (cumulative query accounting).
+    let ds = stream(1600, 18);
+    let k = 6;
+    let half = ds.raw().len() / (2 * DIM) * DIM;
+    let mut a = ThreeSieves::new(oracle(k), k, 0.01, SieveTuning::FixedT(30));
+    let mut b = ThreeSieves::new(oracle(k), k, 0.01, SieveTuning::FixedT(30));
+    for row in ds.raw()[..half].chunks_exact(DIM) {
+        a.process(row);
+    }
+    b.process_batch(&ds.raw()[..half]);
+    a.reset();
+    b.reset();
+    for row in ds.raw()[half..].chunks_exact(DIM) {
+        a.process(row);
+    }
+    b.process_batch(&ds.raw()[half..]);
+    assert_eq!(a.value().to_bits(), b.value().to_bits());
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.stats().queries, b.stats().queries);
+    assert_eq!(a.stats().elements, b.stats().elements);
+}

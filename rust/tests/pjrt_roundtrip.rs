@@ -8,6 +8,10 @@
 //!
 //! Skips (with a loud message) when `artifacts/` has not been built.
 
+// The whole suite needs the real PJRT engine; the default build links the
+// dependency-free stub instead (see `runtime::stub`).
+#![cfg(feature = "pjrt")]
+
 use std::path::PathBuf;
 
 use threesieves::algorithms::three_sieves::SieveTuning;
