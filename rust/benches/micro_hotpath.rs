@@ -8,17 +8,23 @@
 //!   the dispatch overhead the native path avoids and the batch
 //!   amortization the artifact path relies on
 //! * ThreeSieves end-to-end items/second, per-item vs chunked ingestion
+//! * ShardedThreeSieves scaling across the exec pool (1/2/4/8 threads) —
+//!   the issue-#2 acceptance point (>1.5× at 4 threads)
 //!
-//! Run: `cargo bench --bench micro_hotpath [-- [--quick] [--json PATH]]`.
-//! `--quick` shrinks iteration counts to CI-smoke scale; `--json PATH`
-//! writes the headline numbers as a JSON object (the CI bench job uploads
-//! it as an artifact so the BENCH_* trajectory populates).
+//! Run: `cargo bench --bench micro_hotpath [-- [--quick] [--json PATH]
+//! [--scaling-json PATH]]`. `--quick` shrinks iteration counts to
+//! CI-smoke scale; `--json PATH` writes the headline numbers as a JSON
+//! object (the CI bench job uploads it as an artifact so the BENCH_*
+//! trajectory populates); `--scaling-json PATH` writes just the
+//! thread-scaling numbers as their own artifact.
 
 use std::path::PathBuf;
 
 use threesieves::algorithms::three_sieves::SieveTuning;
 use threesieves::algorithms::{StreamingAlgorithm, ThreeSieves};
+use threesieves::coordinator::ShardedThreeSieves;
 use threesieves::data::registry;
+use threesieves::exec::{ExecContext, Parallelism};
 use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
 use threesieves::runtime::PjrtLogDet;
 use threesieves::util::json::Json;
@@ -27,16 +33,17 @@ use threesieves::util::timer::bench_loop;
 
 /// Headline metrics accumulated for `--json`.
 struct Report {
-    entries: Vec<(&'static str, f64)>,
+    entries: Vec<(String, f64)>,
 }
 
 impl Report {
-    fn push(&mut self, key: &'static str, value: f64) {
-        self.entries.push((key, value));
+    fn push(&mut self, key: impl Into<String>, value: f64) {
+        self.entries.push((key.into(), value));
     }
 
     fn write(&self, path: &str) -> std::io::Result<()> {
-        let obj = Json::obj(self.entries.iter().map(|(k, v)| (*k, Json::num(*v))).collect());
+        let obj =
+            Json::obj(self.entries.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect());
         std::fs::write(path, obj.to_string())
     }
 }
@@ -199,6 +206,58 @@ fn bench_threesieves_throughput(n: usize, iters: usize, rep: &mut Report) {
     }
 }
 
+/// The issue-#2 acceptance point: ShardedThreeSieves chunked ingestion,
+/// shards fanned out across the exec pool at 1/2/4/8 threads. The shard
+/// count (8) and small-ish T keep every shard busy walking its threshold
+/// partition, so per-chunk work is coarse (one B×n gain panel per shard
+/// per rejection run) and the pool's speedup reflects the real serving
+/// path. Thread count 1 is `Parallelism::Off` — the sequential baseline.
+/// Results are bit-identical across thread counts (exec_parity pins it);
+/// only the wall clock moves.
+fn bench_sharded_scaling(n: usize, iters: usize, rep: &mut Report, scaling: &mut Report) {
+    let dataset = "abc-like";
+    let info = registry::info(dataset).unwrap();
+    let ds = registry::get(dataset, n, 7).unwrap();
+    let (k, shards, t, eps, batch) = (32usize, 8usize, 200usize, 0.002f64, 256usize);
+    let mut baseline_items_per_s = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let par = if threads == 1 { Parallelism::Off } else { Parallelism::Threads(threads) };
+        // One pool per thread count, reused across iterations — steady
+        // state, not spawn cost.
+        let exec = ExecContext::new(par);
+        let stats = bench_loop(1, iters, || {
+            let f = NativeLogDet::new(LogDetConfig::for_streaming(info.dim, k));
+            let mut algo =
+                ShardedThreeSieves::new(Box::new(f), k, eps, SieveTuning::FixedT(t), shards);
+            algo.set_exec(exec.clone());
+            for chunk in ds.raw().chunks(batch * info.dim) {
+                algo.process_batch(chunk);
+            }
+            std::hint::black_box(algo.value());
+        });
+        let items_per_s = n as f64 / stats.mean();
+        let speedup = if baseline_items_per_s > 0.0 {
+            items_per_s / baseline_items_per_s
+        } else {
+            baseline_items_per_s = items_per_s;
+            1.0
+        };
+        println!(
+            "sharded scaling  d={:<4} K={k:<4} p={shards} threads={threads}: \
+             {:>9.2} ms/{n} items = {items_per_s:>8.0} items/s  speedup {speedup:.2}x [{}]",
+            info.dim,
+            stats.mean() * 1e3,
+            stats.summary("s")
+        );
+        let key_tp = format!("sharded_scaling_t{threads}_items_per_s");
+        let key_sp = format!("sharded_scaling_t{threads}_speedup");
+        rep.push(key_tp.clone(), items_per_s);
+        rep.push(key_sp.clone(), speedup);
+        scaling.push(key_tp, items_per_s);
+        scaling.push(key_sp, speedup);
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -207,7 +266,13 @@ fn main() {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let scaling_json_path = args
+        .iter()
+        .position(|a| a == "--scaling-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let mut rep = Report { entries: Vec::new() };
+    let mut scaling = Report { entries: Vec::new() };
 
     println!("== micro hot-path benchmarks{} ==", if quick { " (quick)" } else { "" });
     let gain_iters = if quick { 200 } else { 2000 };
@@ -225,9 +290,17 @@ fn main() {
     bench_pjrt_gain(&artifacts, if quick { 40 } else { 200 });
     let (e2e_n, e2e_iters) = if quick { (4_000, 2) } else { (20_000, 5) };
     bench_threesieves_throughput(e2e_n, e2e_iters, &mut rep);
+    let (scale_n, scale_iters) = if quick { (4_000, 2) } else { (16_000, 3) };
+    bench_sharded_scaling(scale_n, scale_iters, &mut rep, &mut scaling);
 
     if let Some(path) = json_path {
         match rep.write(&path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+    if let Some(path) = scaling_json_path {
+        match scaling.write(&path) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("failed to write {path}: {e}"),
         }

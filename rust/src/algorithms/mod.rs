@@ -42,6 +42,7 @@ pub use sieve_streaming_pp::SieveStreamingPP;
 pub use stream_greedy::StreamGreedy;
 pub use three_sieves::ThreeSieves;
 
+use crate::exec::ExecContext;
 use crate::functions::SubmodularFunction;
 use crate::metrics::AlgoStats;
 
@@ -79,6 +80,20 @@ pub trait StreamingAlgorithm {
     /// Called once after the stream ends (QuickStream flushes its buffer,
     /// others are no-ops).
     fn finalize(&mut self) {}
+
+    /// Install a parallel execution context (see [`crate::exec`]).
+    ///
+    /// Algorithms whose batched work decomposes into independent coarse
+    /// units — ShardedThreeSieves shards, SieveStreaming/Salsa sieves —
+    /// override this to fan [`process_batch`](Self::process_batch) out
+    /// across the context's worker pool. Overrides must (a) keep results
+    /// bit-identical to sequential execution at every thread count
+    /// (`rust/tests/exec_parity.rs`) and (b) ignore the pool unless their
+    /// oracle reports
+    /// [`parallel_safe`](crate::functions::SubmodularFunction::parallel_safe).
+    /// The default ignores the context (scalar algorithms have no units
+    /// to fan out).
+    fn set_exec(&mut self, _exec: ExecContext) {}
 
     /// Current best function value f(S).
     fn value(&self) -> f64;
@@ -121,11 +136,15 @@ pub(crate) fn sieve_threshold(v: f64, f_s: f64, k: usize, len: usize) -> f64 {
 pub(crate) struct Sieve {
     pub v: f64,
     pub oracle: Box<dyn SubmodularFunction>,
+    /// Gain-panel scratch for [`offer_batch`](Self::offer_batch) — owned
+    /// per sieve so the exec pool's fan-out needs no shared buffers and
+    /// the hot path allocates once, not once per chunk.
+    scratch: Vec<f64>,
 }
 
 impl Sieve {
     pub fn new(v: f64, proto: &dyn SubmodularFunction) -> Self {
-        Sieve { v, oracle: proto.clone_empty() }
+        Sieve { v, oracle: proto.clone_empty(), scratch: Vec::new() }
     }
 
     /// Apply the sieve rule; returns true if the item was accepted.
@@ -157,13 +176,7 @@ impl Sieve {
     /// evaluations — gains the scalar path would not have computed because
     /// they lie past an acceptance — which the caller subtracts from its
     /// query stats to keep the paper's per-element accounting.
-    pub fn offer_batch(
-        &mut self,
-        chunk: &[f32],
-        dim: usize,
-        k: usize,
-        scratch: &mut Vec<f64>,
-    ) -> u64 {
+    pub fn offer_batch(&mut self, chunk: &[f32], dim: usize, k: usize) -> u64 {
         let total = chunk.len() / dim;
         let mut pos = 0usize;
         let mut wasted = 0u64;
@@ -172,10 +185,10 @@ impl Sieve {
                 return wasted; // full: the scalar path stops querying too
             }
             let remaining = total - pos;
-            self.oracle.peek_gain_batch(&chunk[pos * dim..], remaining, scratch);
+            self.oracle.peek_gain_batch(&chunk[pos * dim..], remaining, &mut self.scratch);
             let len = self.oracle.len();
             let thresh = sieve_threshold(self.v, self.oracle.current_value(), k, len);
-            match scratch.iter().position(|&g| g >= thresh) {
+            match self.scratch.iter().position(|&g| g >= thresh) {
                 Some(j) => {
                     self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
                     wasted += (remaining - (j + 1)) as u64;

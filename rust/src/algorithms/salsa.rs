@@ -19,6 +19,7 @@
 //!   threshold schedule collapsed into one pass and is the component that
 //!   needs the stream length hint — the paper's stated limitation of Salsa.
 
+use crate::exec::ExecContext;
 use crate::functions::SubmodularFunction;
 use crate::metrics::AlgoStats;
 use crate::util::mathx::threshold_grid;
@@ -37,6 +38,74 @@ struct RuleSieve {
     rule: Rule,
     v: f64,
     oracle: Box<dyn SubmodularFunction>,
+    /// Gain-panel scratch for [`consume_chunk`] — owned per sieve so the
+    /// exec pool's fan-out needs no shared buffers and the hot path
+    /// allocates once, not once per chunk.
+    scratch: Vec<f64>,
+}
+
+/// Rule threshold as of stream position `elem` (1-based count of the item
+/// being considered). A free function (rather than a `Salsa` method) so
+/// the batched path — sequential or fanned out on the exec pool — shares
+/// one definition with the scalar path and cannot drift from it.
+fn rule_threshold(s: &RuleSieve, k: usize, stream_len: Option<usize>, elem: u64) -> f64 {
+    match s.rule {
+        Rule::Sieve => sieve_threshold(s.v, s.oracle.current_value(), k, s.oracle.len()),
+        Rule::Dense => s.v / (2.0 * k as f64),
+        Rule::Adaptive => {
+            let n = stream_len.unwrap_or(1).max(1);
+            let pos = (elem as f64 / n as f64).min(1.0);
+            let beta = 0.7 - 0.45 * pos; // 0.7 → 0.25 across the stream
+            beta * s.v / k as f64
+        }
+    }
+}
+
+/// One (rule, v) sieve consumes a whole chunk: one gain panel per
+/// rejection run, thresholds recomputed per item from the chunk-start
+/// stream position (the adaptive rule's position dependence), an
+/// acceptance re-batches from the next item. Returns the speculative gain
+/// evaluations past acceptances (see `Sieve::offer_batch` for the
+/// accounting argument). The unit of work the exec pool fans out.
+fn consume_chunk(
+    s: &mut RuleSieve,
+    chunk: &[f32],
+    d: usize,
+    k: usize,
+    stream_len: Option<usize>,
+    start_elements: u64,
+) -> u64 {
+    let total = chunk.len() / d;
+    let mut pos = 0usize;
+    let mut wasted = 0u64;
+    while pos < total {
+        if s.oracle.len() >= k {
+            break; // full: the scalar path stops querying too
+        }
+        let remaining = total - pos;
+        s.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut s.scratch);
+        let mut hit = None;
+        for (j, &g) in s.scratch.iter().enumerate() {
+            let elem = start_elements + (pos + j) as u64 + 1;
+            let thresh = rule_threshold(s, k, stream_len, elem);
+            if g >= thresh {
+                hit = Some(j);
+                break;
+            }
+        }
+        match hit {
+            Some(j) => {
+                let item = &chunk[(pos + j) * d..(pos + j + 1) * d];
+                s.oracle.accept(item);
+                wasted += (remaining - (j + 1)) as u64;
+                pos += j + 1;
+            }
+            None => {
+                pos = total;
+            }
+        }
+    }
+    wasted
 }
 
 /// The Salsa meta-algorithm.
@@ -51,9 +120,10 @@ pub struct Salsa {
     /// Speculative batch gains past a sieve's acceptance (see
     /// `process_batch`); excluded from reported query stats.
     speculative_queries: u64,
-    /// Scratch for `process_batch` gain panels.
-    gain_buf: Vec<f64>,
     peak_stored: usize,
+    /// Parallel execution context: (rule, v) sieves fan out across its
+    /// pool when one is attached (see [`StreamingAlgorithm::set_exec`]).
+    exec: ExecContext,
 }
 
 impl Salsa {
@@ -74,8 +144,8 @@ impl Salsa {
             sieves: Vec::new(),
             elements: 0,
             speculative_queries: 0,
-            gain_buf: Vec::new(),
             peak_stored: 0,
+            exec: ExecContext::sequential(),
         };
         s.build_sieves();
         s
@@ -91,7 +161,12 @@ impl Salsa {
         self.sieves.clear();
         for rule in rules {
             for &v in &grid {
-                self.sieves.push(RuleSieve { rule, v, oracle: self.proto.clone_empty() });
+                self.sieves.push(RuleSieve {
+                    rule,
+                    v,
+                    oracle: self.proto.clone_empty(),
+                    scratch: Vec::new(),
+                });
             }
         }
     }
@@ -100,21 +175,10 @@ impl Salsa {
         self.threshold_at(s, self.elements)
     }
 
-    /// Rule threshold as of stream position `elements` (1-based count of
-    /// the item being considered). Factored out of [`threshold`] so the
-    /// batched path can replay the adaptive rule's position dependence
-    /// exactly for items inside a chunk.
+    /// Rule threshold as of stream position `elements` — delegates to the
+    /// free [`rule_threshold`] shared with the batched path.
     fn threshold_at(&self, s: &RuleSieve, elements: u64) -> f64 {
-        match s.rule {
-            Rule::Sieve => sieve_threshold(s.v, s.oracle.current_value(), self.k, s.oracle.len()),
-            Rule::Dense => s.v / (2.0 * self.k as f64),
-            Rule::Adaptive => {
-                let n = self.stream_len.unwrap_or(1).max(1);
-                let pos = (elements as f64 / n as f64).min(1.0);
-                let beta = 0.7 - 0.45 * pos; // 0.7 → 0.25 across the stream
-                beta * s.v / self.k as f64
-            }
-        }
+        rule_threshold(s, self.k, self.stream_len, elements)
     }
 
     fn best(&self) -> Option<&RuleSieve> {
@@ -154,13 +218,16 @@ impl StreamingAlgorithm for Salsa {
     }
 
     /// Batched ingestion: (rule, v) sieves are independent, so each one
-    /// consumes the chunk on its own — one gain panel per rejection run.
-    /// The scan recomputes the rule threshold per item from the chunk-start
-    /// stream position, which reproduces the adaptive rule's position
-    /// dependence exactly; an acceptance ends the scan (the sieve rule's
-    /// threshold and the capacity check depend on the new summary) and the
-    /// remainder re-batches. Speculative gains past an acceptance are
-    /// excluded from the reported query stats.
+    /// consumes the chunk on its own through [`consume_chunk`] — one gain
+    /// panel per rejection run — sequentially, or fanned out on the exec
+    /// pool's worker threads when a context is attached. The scan
+    /// recomputes the rule threshold per item from the chunk-start stream
+    /// position, which reproduces the adaptive rule's position dependence
+    /// exactly; an acceptance ends the scan (the sieve rule's threshold
+    /// and the capacity check depend on the new summary) and the remainder
+    /// re-batches. Speculative gains past an acceptance are excluded from
+    /// the reported query stats; they fold in sieve order, so results are
+    /// bit-identical at every thread count.
     fn process_batch(&mut self, chunk: &[f32]) {
         let d = self.proto.dim();
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
@@ -168,43 +235,22 @@ impl StreamingAlgorithm for Salsa {
         let start_elements = self.elements;
         self.elements += total as u64;
         let k = self.k;
-        let mut scratch = std::mem::take(&mut self.gain_buf);
-        for si in 0..self.sieves.len() {
-            let mut pos = 0usize;
-            while pos < total {
-                if self.sieves[si].oracle.len() >= k {
-                    break; // full: the scalar path stops querying too
-                }
-                let remaining = total - pos;
-                let sieve = &mut self.sieves[si];
-                sieve.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut scratch);
-                let mut hit = None;
-                for (j, &g) in scratch.iter().enumerate() {
-                    let elem = start_elements + (pos + j) as u64 + 1;
-                    let thresh = self.threshold_at(&self.sieves[si], elem);
-                    if g >= thresh {
-                        hit = Some(j);
-                        break;
-                    }
-                }
-                match hit {
-                    Some(j) => {
-                        let item = &chunk[(pos + j) * d..(pos + j + 1) * d];
-                        self.sieves[si].oracle.accept(item);
-                        self.speculative_queries += (remaining - (j + 1)) as u64;
-                        pos += j + 1;
-                    }
-                    None => {
-                        pos = total;
-                    }
-                }
-            }
-        }
-        self.gain_buf = scratch;
+        let stream_len = self.stream_len;
+        // Inline when sequential, worker threads when a pool is attached
+        // (`set_exec` gated it on `parallel_safe()`); identical results
+        // either way, speculative counts folded in sieve order.
+        let wasted = self.exec.map_units(&mut self.sieves, |s| {
+            consume_chunk(s, chunk, d, k, stream_len, start_elements)
+        });
+        self.speculative_queries += wasted.iter().sum::<u64>();
         let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
         if stored > self.peak_stored {
             self.peak_stored = stored;
         }
+    }
+
+    fn set_exec(&mut self, exec: ExecContext) {
+        self.exec = exec.gated(self.proto.as_ref());
     }
 
     fn value(&self) -> f64 {

@@ -3,6 +3,7 @@
 //! each sieve applies the threshold rule. The best sieve is the output.
 //! ½−ε approximation, O(K log K / ε) memory, O(log K / ε) queries/element.
 
+use crate::exec::ExecContext;
 use crate::functions::SubmodularFunction;
 use crate::metrics::AlgoStats;
 use crate::util::mathx::threshold_grid;
@@ -23,9 +24,10 @@ pub struct SieveStreaming {
     /// Speculative batch gains past a sieve's acceptance (see
     /// `Sieve::offer_batch`); excluded from reported query stats.
     speculative_queries: u64,
-    /// Scratch for `process_batch` gain panels.
-    gain_buf: Vec<f64>,
     peak_stored: usize,
+    /// Parallel execution context: sieves fan out across its pool when
+    /// one is attached (see [`StreamingAlgorithm::set_exec`]).
+    exec: ExecContext,
 }
 
 impl SieveStreaming {
@@ -47,8 +49,8 @@ impl SieveStreaming {
             elements: 0,
             extra_queries: 0,
             speculative_queries: 0,
-            gain_buf: Vec::new(),
             peak_stored: 0,
+            exec: ExecContext::sequential(),
         }
     }
 
@@ -118,7 +120,11 @@ impl StreamingAlgorithm for SieveStreaming {
     /// Batched ingestion: the sieves are fully independent (no cross-sieve
     /// coupling outside m estimation), so each sieve consumes the whole
     /// chunk through [`Sieve::offer_batch`] — one gain panel per rejection
-    /// run instead of one oracle call per item. Stored elements only grow
+    /// run instead of one oracle call per item — either sequentially or on
+    /// the exec pool's worker threads when a context is attached. Each
+    /// sieve runs the identical instruction sequence on state it owns and
+    /// the speculative counts fold in sieve order, so results are
+    /// bit-identical at every thread count. Stored elements only grow
     /// within a chunk, so the end-of-chunk peak equals the scalar per-item
     /// peak.
     fn process_batch(&mut self, chunk: &[f32]) {
@@ -132,16 +138,20 @@ impl StreamingAlgorithm for SieveStreaming {
             return;
         }
         self.elements += (chunk.len() / d) as u64;
-        let mut scratch = std::mem::take(&mut self.gain_buf);
         let k = self.k;
-        for s in self.sieves.iter_mut() {
-            self.speculative_queries += s.offer_batch(chunk, d, k, &mut scratch);
-        }
-        self.gain_buf = scratch;
+        // Inline when sequential, worker threads when a pool is attached
+        // (`set_exec` gated it on `parallel_safe()`); identical results
+        // either way, speculative counts folded in sieve order.
+        let wasted = self.exec.map_units(&mut self.sieves, |s| s.offer_batch(chunk, d, k));
+        self.speculative_queries += wasted.iter().sum::<u64>();
         let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
         if stored > self.peak_stored {
             self.peak_stored = stored;
         }
+    }
+
+    fn set_exec(&mut self, exec: ExecContext) {
+        self.exec = exec.gated(self.proto.as_ref());
     }
 
     fn value(&self) -> f64 {

@@ -155,20 +155,29 @@ impl StreamingAlgorithm for SieveStreamingPP {
     /// Batched ingestion. Unlike plain SieveStreaming, ++ couples sieves
     /// through the LB refresh (an acceptance can prune sieves and spawn new
     /// ones that must see the *rest* of the stream), so a sieve cannot
-    /// consume the whole chunk on its own. Instead each round batch-scans
-    /// every live sieve for its first would-accept position, advances all
-    /// of them to the earliest such position p* (items before p* are pure
+    /// consume the whole chunk on its own. Instead each round scans every
+    /// live sieve for its first would-accept position, advances all of
+    /// them to the earliest such position p* (items before p* are pure
     /// rejections for every sieve — identical to the scalar order), applies
     /// the acceptances at p* in sieve order, refreshes if LB improved, and
-    /// restarts from p*+1 with the refreshed sieve set. Gains computed past
-    /// p* are speculative and excluded from the reported query stats.
+    /// restarts from p*+1.
     ///
-    /// Cost note: every acceptance round re-panels all live sieves from
-    /// p*+1, discarding still-valid gains of non-accepting sieves. Rounds
-    /// are bounded by total acceptances (≤ sieves·K per stream), so this
-    /// is a bounded warm-up overhead, not per-element asymptotics; reusing
-    /// unaffected sieves' panels across rounds is a ROADMAP item (it needs
-    /// hit-cache invalidation across the refresh's prune/spawn/sort).
+    /// Non-accepting sieves **reuse** their gain panel's hit position
+    /// across acceptance rounds: a sieve whose summary did not change at
+    /// p* has an unchanged threshold and gains, so its cached first hit
+    /// (strictly past p*, by p*'s minimality) is still its first hit from
+    /// p*+1 — no re-panel. The cache is invalidated per sieve by its own
+    /// acceptance, and wholesale across the LB refresh's prune/spawn/sort
+    /// (summaries survive a refresh but indices don't, and spawned sieves
+    /// must scan the remainder from scratch).
+    ///
+    /// Query accounting stays scalar-exact through a telescoping
+    /// invariant: a panel taken at position `p` charges `total - p` raw
+    /// queries; when it is invalidated after consuming through item `q-1`
+    /// its unused tail `total - q` is added to `speculative_queries`, so
+    /// its net charge is `q - p` — exactly the scalar path's evaluations
+    /// over `[p, q)`. A panel that survives to the chunk end has consumed
+    /// everything it charged (`rust/tests/batch_parity.rs` pins this).
     fn process_batch(&mut self, chunk: &[f32]) {
         let d = self.proto.dim();
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
@@ -177,56 +186,76 @@ impl StreamingAlgorithm for SieveStreamingPP {
         let k = self.k;
         let mut scratch = std::mem::take(&mut self.gain_buf);
         let mut pos = 0usize;
+        // Hit cache, indexed like `self.sieves`: `None` = needs a panel;
+        // `Some(h)` = valid panel whose first would-accept position is the
+        // absolute chunk index `h` (`Some(None)` = rejects through chunk
+        // end). Full sieves stay `None` and are skipped — they neither
+        // query nor accept, same as the scalar path.
+        let mut hits: Vec<Option<Option<usize>>> = vec![None; self.sieves.len()];
         while pos < total {
             let remaining = total - pos;
-            // Round 1: per live sieve, the first index that would accept.
+            // (Re-)panel only the sieves whose cache was invalidated.
             // Within a rejection run each sieve's threshold is constant
             // (its own f(S)/|S| only move on its own accept).
-            let mut hits: Vec<Option<usize>> = Vec::with_capacity(self.sieves.len());
-            for s in self.sieves.iter_mut() {
-                if s.oracle.len() >= k {
-                    hits.push(None); // full: no queries, same as scalar
+            for (s, hit) in self.sieves.iter_mut().zip(hits.iter_mut()) {
+                if s.oracle.len() >= k || hit.is_some() {
                     continue;
                 }
                 s.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut scratch);
                 let thresh = sieve_threshold(s.v, s.oracle.current_value(), k, s.oracle.len());
-                hits.push(scratch.iter().position(|&g| g >= thresh));
+                *hit = Some(scratch.iter().position(|&g| g >= thresh).map(|j| pos + j));
             }
-            let p_star = hits.iter().filter_map(|h| *h).min();
+            let p_star = self
+                .sieves
+                .iter()
+                .zip(&hits)
+                .filter(|(s, _)| s.oracle.len() < k)
+                .filter_map(|(_, hit)| (*hit).flatten())
+                .min();
             let Some(j) = p_star else {
-                // No sieve accepts anywhere in the chunk: all gains were
-                // consumed, nothing is speculative.
+                // No sieve accepts anywhere in the rest of the chunk:
+                // every live panel is consumed exactly to its scalar
+                // extent — nothing is speculative.
                 pos = total;
                 continue;
             };
-            // Items pos..pos+j are rejections everywhere; item pos+j is
-            // accepted by every sieve whose first hit is exactly j.
-            let item = &chunk[(pos + j) * d..(pos + j + 1) * d];
+            // Items pos..j are rejections everywhere; item j is accepted
+            // by every sieve whose first hit is exactly j.
+            let item = &chunk[j * d..(j + 1) * d];
             let mut lb_improved = false;
-            for (s, hit) in self.sieves.iter_mut().zip(&hits) {
-                if s.oracle.len() >= k {
+            for (s, hit) in self.sieves.iter_mut().zip(hits.iter_mut()) {
+                if s.oracle.len() >= k || *hit != Some(Some(j)) {
                     continue;
                 }
-                self.speculative_queries += (remaining - (j + 1)) as u64;
-                if *hit == Some(j) {
-                    s.oracle.accept(item);
-                    record_accept(
-                        s.oracle.as_ref(),
-                        &mut self.lb,
-                        &mut lb_improved,
-                        &mut self.best_value,
-                        &mut self.best_summary,
-                    );
-                }
+                s.oracle.accept(item);
+                // The accept invalidates this sieve's panel; its unused
+                // tail is work the scalar path never did.
+                self.speculative_queries += (total - (j + 1)) as u64;
+                *hit = None;
+                record_accept(
+                    s.oracle.as_ref(),
+                    &mut self.lb,
+                    &mut lb_improved,
+                    &mut self.best_value,
+                    &mut self.best_summary,
+                );
             }
             if lb_improved {
+                // Invalidate the whole cache across the prune/spawn/sort:
+                // account every surviving panel's unused tail first (for
+                // sieves about to be pruned this is also their scalar
+                // extent — they stop being offered items after j).
+                let live_panels = hits.iter().filter(|h| h.is_some()).count() as u64;
+                self.speculative_queries += live_panels * (total - (j + 1)) as u64;
                 self.refresh_sieves();
+                hits.clear();
+                hits.resize(self.sieves.len(), None);
             }
             let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
             if stored > self.peak_stored {
                 self.peak_stored = stored;
             }
-            pos += j + 1;
+            pos = j + 1;
         }
         // No trailing stored/peak update: stored only changes at the
         // accept+refresh points above, each already recorded in-loop.

@@ -4,6 +4,7 @@
 
 use std::path::Path;
 
+use crate::exec::Parallelism;
 use crate::util::json::{Json, JsonError};
 
 /// Which algorithm to instantiate, with its hyperparameters.
@@ -19,6 +20,9 @@ pub enum AlgoSpec {
     Salsa { epsilon: f64, use_length_hint: bool },
     QuickStream { c: usize, epsilon: f64, seed: u64 },
     ThreeSieves { epsilon: f64, t: usize },
+    /// Paper §3 scale-out: parallel ThreeSieves instances over disjoint
+    /// threshold partitions — the unit of work the exec pool fans out.
+    ShardedThreeSieves { epsilon: f64, t: usize, shards: usize },
 }
 
 impl AlgoSpec {
@@ -35,6 +39,9 @@ impl AlgoSpec {
             AlgoSpec::Salsa { .. } => "salsa".into(),
             AlgoSpec::QuickStream { c, .. } => format!("quickstream-c{c}"),
             AlgoSpec::ThreeSieves { t, .. } => format!("three-sieves-t{t}"),
+            AlgoSpec::ShardedThreeSieves { t, shards, .. } => {
+                format!("sharded-three-sieves-t{t}-p{shards}")
+            }
         }
     }
 
@@ -65,6 +72,11 @@ impl AlgoSpec {
                 epsilon: eps(),
                 t: j.get("t").as_usize().unwrap_or(1000),
             },
+            "sharded-three-sieves" => AlgoSpec::ShardedThreeSieves {
+                epsilon: eps(),
+                t: j.get("t").as_usize().unwrap_or(1000),
+                shards: j.get("shards").as_usize().unwrap_or(4).max(1),
+            },
             other => return Err(format!("unknown algo {other:?}")),
         })
     }
@@ -85,6 +97,9 @@ pub struct ExperimentConfig {
     /// Stream chunk size for batched ingestion (1 = per-item processing).
     /// Semantics-preserving — see `StreamingAlgorithm::process_batch`.
     pub batch_size: usize,
+    /// Worker threads for shard/sieve fan-out (`"off"` | `"auto"` | n).
+    /// Results are bit-identical at every setting — see [`crate::exec`].
+    pub parallelism: Parallelism,
     /// Output directory for CSV/JSON results.
     pub out_dir: String,
 }
@@ -108,6 +123,15 @@ impl ExperimentConfig {
             Some(arr) => arr.iter().map(AlgoSpec::from_json).collect::<Result<Vec<_>, _>>()?,
             None => Vec::new(),
         };
+        // "parallelism": "off" | "auto" | "4" | 4 (number form accepted).
+        let pj = j.get("parallelism");
+        let parallelism = if let Some(s) = pj.as_str() {
+            Parallelism::parse(s)?
+        } else if let Some(n) = pj.as_usize() {
+            Parallelism::parse(&n.to_string())?
+        } else {
+            Parallelism::Off
+        };
         Ok(ExperimentConfig {
             name: j.get("name").as_str().unwrap_or("experiment").to_string(),
             datasets: strs("datasets"),
@@ -118,6 +142,7 @@ impl ExperimentConfig {
             seed: j.get("seed").as_f64().unwrap_or(42.0) as u64,
             algos,
             batch_size: j.get("batch_size").as_usize().unwrap_or(1).max(1),
+            parallelism,
             out_dir: j.get("out_dir").as_str().unwrap_or("results").to_string(),
         })
     }
@@ -177,6 +202,21 @@ mod tests {
         assert_eq!(cfg.seed, 42);
         assert!(cfg.algos.is_empty());
         assert_eq!(cfg.batch_size, 1);
+    }
+
+    #[test]
+    fn parallelism_parses_all_forms() {
+        let cfg = ExperimentConfig::from_json_text(r#"{"parallelism": "auto"}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Auto);
+        let cfg = ExperimentConfig::from_json_text(r#"{"parallelism": "4"}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Threads(4));
+        let cfg = ExperimentConfig::from_json_text(r#"{"parallelism": 4}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Threads(4));
+        let cfg = ExperimentConfig::from_json_text(r#"{"parallelism": "off"}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Off);
+        let cfg = ExperimentConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Off);
+        assert!(ExperimentConfig::from_json_text(r#"{"parallelism": "many"}"#).is_err());
     }
 
     #[test]

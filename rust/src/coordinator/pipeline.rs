@@ -15,6 +15,7 @@ use crate::algorithms::StreamingAlgorithm;
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::drift::DriftDetector;
 use crate::data::StreamSource;
+use crate::exec::{ExecContext, Parallelism};
 
 /// Pipeline tuning knobs.
 #[derive(Clone, Debug)]
@@ -35,6 +36,13 @@ pub struct PipelineConfig {
     pub checkpoint_path: Option<PathBuf>,
     /// On drift: reset the algorithm and start a fresh summary.
     pub reselect_on_drift: bool,
+    /// Worker threads for algorithms whose batched work decomposes into
+    /// independent units (ShardedThreeSieves shards, SieveStreaming/Salsa
+    /// sieves). The pool is built once per [`StreamPipeline::run`] and
+    /// reused across chunks; results are bit-identical at every setting
+    /// (see [`crate::exec`]). Most effective with `batch_size > 1` —
+    /// per-item processing leaves no coarse units to fan out.
+    pub parallelism: Parallelism,
 }
 
 impl Default for PipelineConfig {
@@ -45,6 +53,7 @@ impl Default for PipelineConfig {
             checkpoint_every: 0,
             checkpoint_path: None,
             reselect_on_drift: true,
+            parallelism: Parallelism::Off,
         }
     }
 }
@@ -90,6 +99,9 @@ impl StreamPipeline {
     ) -> std::io::Result<PipelineReport> {
         let dim = source.dim();
         assert_eq!(dim, algo.dim(), "source dim {} != algorithm dim {}", dim, algo.dim());
+        // One pool for the whole run, reused chunk after chunk (the
+        // algorithm holds the handle; a sequential context is a no-op).
+        algo.set_exec(ExecContext::new(self.cfg.parallelism));
         let (tx, rx): (SyncSender<Vec<f32>>, Receiver<Vec<f32>>) =
             sync_channel(self.cfg.channel_capacity.max(1));
 

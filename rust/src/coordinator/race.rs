@@ -8,13 +8,18 @@
 //! receive *factory closures* and construct their algorithm on-thread. The
 //! stream is fanned out by a broadcaster thread through one bounded channel
 //! per worker (slowest worker applies backpressure to the source, keeping
-//! every algorithm on the identical stream prefix).
+//! every algorithm on the identical stream prefix) — per item, or in
+//! `batch_size` chunks consumed through `process_batch`. On top of the
+//! one-thread-per-lane concurrency, a [`RaceConfig::parallelism`] pool is
+//! shared across lanes so shard/sieve algorithms also fan out *within*
+//! their lane (see [`crate::exec`]).
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::Instant;
 
 use crate::algorithms::StreamingAlgorithm;
 use crate::data::StreamSource;
+use crate::exec::{ExecContext, Parallelism};
 use crate::metrics::AlgoStats;
 
 /// Result of one lane of the race.
@@ -35,11 +40,22 @@ pub type AlgoFactory = Box<dyn FnOnce() -> Box<dyn StreamingAlgorithm> + Send>;
 pub struct RaceConfig {
     /// Per-lane channel capacity (backpressure window).
     pub channel_capacity: usize,
+    /// Items broadcast per message (1 = per-item). Larger chunks reach the
+    /// lanes through [`StreamingAlgorithm::process_batch`] —
+    /// semantics-preserving, amortizing both channel traffic and the
+    /// oracle's kernel work.
+    pub batch_size: usize,
+    /// Worker pool **shared by all lanes** for algorithms whose batched
+    /// work fans out (shards/sieves). Lanes always get a dedicated thread
+    /// each (the bounded-channel broadcast requires every lane to drain
+    /// concurrently); this adds intra-lane parallelism on top. Results are
+    /// bit-identical at every setting (see [`crate::exec`]).
+    pub parallelism: Parallelism,
 }
 
 impl Default for RaceConfig {
     fn default() -> Self {
-        RaceConfig { channel_capacity: 4096 }
+        RaceConfig { channel_capacity: 4096, batch_size: 1, parallelism: Parallelism::Off }
     }
 }
 
@@ -51,6 +67,10 @@ pub fn race(
 ) -> Vec<LaneReport> {
     assert!(!factories.is_empty(), "race needs at least one lane");
     let dim = source.dim();
+    let batch = cfg.batch_size.max(1);
+    // One pool shared by every lane (sequential context when `off`); the
+    // pool's scoped calls interleave lanes' jobs safely.
+    let exec = ExecContext::new(cfg.parallelism);
 
     let mut senders: Vec<SyncSender<Vec<f32>>> = Vec::with_capacity(factories.len());
     let mut handles = Vec::with_capacity(factories.len());
@@ -58,12 +78,20 @@ pub fn race(
         let (tx, rx): (SyncSender<Vec<f32>>, Receiver<Vec<f32>>) =
             sync_channel(cfg.channel_capacity.max(1));
         senders.push(tx);
+        let exec = exec.clone();
         handles.push(std::thread::spawn(move || -> LaneReport {
             let mut algo = factory();
             assert_eq!(algo.dim(), dim, "lane {label}: dim mismatch");
+            algo.set_exec(exec);
             let start = Instant::now();
-            for item in rx.iter() {
-                algo.process(&item);
+            if batch == 1 {
+                for item in rx.iter() {
+                    algo.process(&item);
+                }
+            } else {
+                for chunk in rx.iter() {
+                    algo.process_batch(&chunk);
+                }
             }
             algo.finalize();
             LaneReport {
@@ -77,12 +105,34 @@ pub fn race(
         }));
     }
 
-    // Broadcast loop: one allocation per item, cloned per lane.
+    // Broadcast loop: one allocation per message, cloned per lane.
     let mut buf = vec![0.0f32; dim];
-    while source.next_into(&mut buf) {
-        for tx in &senders {
-            if tx.send(buf.clone()).is_err() {
-                // A worker panicked; drop out, join below will surface it.
+    if batch == 1 {
+        while source.next_into(&mut buf) {
+            for tx in &senders {
+                if tx.send(buf.clone()).is_err() {
+                    // A worker panicked; drop out, join below will surface it.
+                    break;
+                }
+            }
+        }
+    } else {
+        let mut chunk: Vec<f32> = Vec::with_capacity(batch * dim);
+        loop {
+            chunk.clear();
+            while chunk.len() < batch * dim && source.next_into(&mut buf) {
+                chunk.extend_from_slice(&buf);
+            }
+            if chunk.is_empty() {
+                break;
+            }
+            let exhausted = chunk.len() < batch * dim;
+            for tx in &senders {
+                if tx.send(chunk.clone()).is_err() {
+                    break;
+                }
+            }
+            if exhausted {
                 break;
             }
         }
@@ -160,7 +210,7 @@ mod tests {
     fn tiny_channel_still_completes() {
         let src = registry::source("fact-highlevel-like", 1000, 3).unwrap();
         let lanes = vec![("t".to_string(), ts_factory(16, 4, 50))];
-        let reports = race(src, lanes, RaceConfig { channel_capacity: 1 });
+        let reports = race(src, lanes, RaceConfig { channel_capacity: 1, ..Default::default() });
         assert_eq!(reports[0].stats.elements, 1000);
     }
 

@@ -12,22 +12,30 @@
 
 use crate::algorithms::three_sieves::SieveTuning;
 use crate::algorithms::{sieve_threshold, StreamingAlgorithm};
+use crate::exec::ExecContext;
 use crate::functions::SubmodularFunction;
 use crate::metrics::AlgoStats;
 use crate::util::mathx::threshold_grid;
 
 /// One shard: a threshold partition walked top-down, ThreeSieves-style.
+///
+/// A shard is fully self-contained (its own oracle, threshold walk and
+/// gain-panel scratch), which is what lets the exec pool run shards on
+/// worker threads with nothing to merge afterwards but counters.
 struct Shard {
     grid: Vec<f64>, // ascending; active popped from the back
     v: f64,
     t: usize,
     oracle: Box<dyn SubmodularFunction>,
+    /// Per-shard gain-panel scratch (each shard owns its own so the
+    /// parallel path needs no shared buffers).
+    scratch: Vec<f64>,
 }
 
 impl Shard {
     fn new(mut grid: Vec<f64>, proto: &dyn SubmodularFunction) -> Self {
         let v = grid.pop().expect("non-empty shard partition");
-        Shard { grid, v, t: 0, oracle: proto.clone_empty() }
+        Shard { grid, v, t: 0, oracle: proto.clone_empty(), scratch: Vec::new() }
     }
 
     fn process(&mut self, item: &[f32], k: usize, t_budget: usize) {
@@ -58,14 +66,7 @@ impl Shard {
     /// an acceptance invalidates the remaining gains and forces a
     /// re-batch. Returns the speculative gain evaluations (past an
     /// acceptance) for the caller to exclude from query stats.
-    fn process_batch(
-        &mut self,
-        chunk: &[f32],
-        dim: usize,
-        k: usize,
-        t_budget: usize,
-        scratch: &mut Vec<f64>,
-    ) -> u64 {
+    fn process_batch(&mut self, chunk: &[f32], dim: usize, k: usize, t_budget: usize) -> u64 {
         let total = chunk.len() / dim;
         let mut pos = 0usize;
         let mut wasted = 0u64;
@@ -74,11 +75,11 @@ impl Shard {
                 return wasted; // full: the scalar path stops querying too
             }
             let remaining = total - pos;
-            self.oracle.peek_gain_batch(&chunk[pos * dim..], remaining, scratch);
+            self.oracle.peek_gain_batch(&chunk[pos * dim..], remaining, &mut self.scratch);
             let mut thresh =
                 sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
             let mut accepted_at = None;
-            for (j, &gain) in scratch.iter().enumerate() {
+            for (j, &gain) in self.scratch.iter().enumerate() {
                 if gain >= thresh {
                     self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
                     self.t = 0;
@@ -122,9 +123,10 @@ pub struct ShardedThreeSieves {
     /// Speculative batch gains past a shard's acceptance (see
     /// `Shard::process_batch`); excluded from reported query stats.
     speculative_queries: u64,
-    /// Scratch for `process_batch` gain panels.
-    gain_buf: Vec<f64>,
     peak_stored: usize,
+    /// Parallel execution context: shards fan out across its pool when one
+    /// is attached (see [`StreamingAlgorithm::set_exec`]).
+    exec: ExecContext,
 }
 
 impl ShardedThreeSieves {
@@ -153,8 +155,26 @@ impl ShardedThreeSieves {
             dim: proto.dim(),
             elements: 0,
             speculative_queries: 0,
-            gain_buf: Vec::new(),
             peak_stored: 0,
+            exec: ExecContext::sequential(),
+        }
+    }
+
+    /// Fold per-shard chunk outcomes back into coordinator-level
+    /// accounting. Per-shard speculative counts arrive **in shard order**
+    /// from both the sequential loop and the pool's order-preserving map,
+    /// and each shard owns its oracle outright, so this merge is the only
+    /// cross-shard state — which is why query accounting stays
+    /// bit-identical to sequential execution at every thread count.
+    fn merge_stats(&mut self, speculative_per_shard: &[u64]) {
+        for &wasted in speculative_per_shard {
+            self.speculative_queries += wasted;
+        }
+        // Stored elements only grow within a chunk, so the end-of-chunk
+        // peak equals the scalar per-item peak.
+        let stored: usize = self.shards.iter().map(|s| s.oracle.len()).sum();
+        if stored > self.peak_stored {
+            self.peak_stored = stored;
         }
     }
 
@@ -189,24 +209,28 @@ impl StreamingAlgorithm for ShardedThreeSieves {
     }
 
     /// Batched ingestion: shards are fully independent, so each consumes
-    /// the chunk through [`Shard::process_batch`]. Stored elements only
-    /// grow within a chunk, so the end-of-chunk peak equals the scalar
-    /// per-item peak.
+    /// the chunk through [`Shard::process_batch`] — sequentially, or on
+    /// the exec pool's worker threads when a context is attached. Either
+    /// way each shard runs the identical instruction sequence on the
+    /// state it owns and [`Self::merge_stats`] folds the per-shard
+    /// outcomes in shard order, so summaries, objective values and query
+    /// counts are bit-identical at every thread count
+    /// (`rust/tests/exec_parity.rs`).
     fn process_batch(&mut self, chunk: &[f32]) {
         let d = self.dim;
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
         self.elements += (chunk.len() / d) as u64;
         let k = self.k;
         let t_budget = self.t_budget;
-        let mut scratch = std::mem::take(&mut self.gain_buf);
-        for s in self.shards.iter_mut() {
-            self.speculative_queries += s.process_batch(chunk, d, k, t_budget, &mut scratch);
-        }
-        self.gain_buf = scratch;
-        let stored: usize = self.shards.iter().map(|s| s.oracle.len()).sum();
-        if stored > self.peak_stored {
-            self.peak_stored = stored;
-        }
+        // Inline when sequential, worker threads when a pool is attached
+        // (`set_exec` gated it on `parallel_safe()`).
+        let wasted =
+            self.exec.map_units(&mut self.shards, |s| s.process_batch(chunk, d, k, t_budget));
+        self.merge_stats(&wasted);
+    }
+
+    fn set_exec(&mut self, exec: ExecContext) {
+        self.exec = exec.gated(self.shards[0].oracle.as_ref());
     }
 
     fn value(&self) -> f64 {
@@ -328,6 +352,26 @@ mod tests {
         );
         assert!(algo.shard_count() <= 1000);
         assert!(algo.shard_count() >= 1);
+    }
+
+    #[test]
+    fn pool_driven_batches_match_sequential_bitwise() {
+        use crate::exec::{ExecContext, Parallelism};
+        let ds = testkit::clustered(1200, 10);
+        let k = 6;
+        let build = || {
+            ShardedThreeSieves::new(testkit::oracle(k), k, 0.05, SieveTuning::FixedT(20), 4)
+        };
+        let mut seq = build();
+        let mut par = build();
+        par.set_exec(ExecContext::new(Parallelism::Threads(3)));
+        for chunk in ds.raw().chunks(37 * testkit::DIM) {
+            seq.process_batch(chunk);
+            par.process_batch(chunk);
+        }
+        assert_eq!(seq.value().to_bits(), par.value().to_bits());
+        assert_eq!(seq.summary(), par.summary());
+        assert_eq!(seq.stats(), par.stats());
     }
 
     #[test]

@@ -1,0 +1,341 @@
+//! Parallel execution subsystem: a dependency-free (std `thread` +
+//! channels) persistent worker pool driving the layers whose work
+//! decomposes into independent coarse units — ShardedThreeSieves shards,
+//! SieveStreaming/Salsa sieves, race lanes.
+//!
+//! ## Determinism contract
+//!
+//! The pool only changes *where* a unit of work runs, never *what* it
+//! computes or in what per-unit order results are folded:
+//!
+//! * [`WorkerPool::map`] / [`WorkerPool::for_each_mut`] hand each slice
+//!   index to exactly one task and return results **in index order**,
+//!   regardless of which worker finished first.
+//! * Each unit (one shard, one sieve) evolves exactly the state it owns,
+//!   with the same floating-point instruction sequence as the sequential
+//!   loop — so summaries, objective values and per-element query counts
+//!   are bit-identical at every thread count, including `off`
+//!   (`rust/tests/exec_parity.rs` pins this).
+//!
+//! ## Thread-safety contract
+//!
+//! [`SubmodularFunction`](crate::functions::SubmodularFunction) is
+//! deliberately not `Send` (the PJRT oracle shares an `Rc`'d engine
+//! between clones). Algorithms therefore gate the parallel path on
+//! [`SubmodularFunction::parallel_safe`](crate::functions::SubmodularFunction::parallel_safe)
+//! — a per-implementation promise that instances may be *moved* between
+//! threads for the duration of a scoped pool call, enforced once in
+//! [`ExecContext::gated`] — and cross the `Send` boundary only inside
+//! [`ExecContext::map_units`], the crate's single audited erasure site
+//! (the private `AssertThreadSafe` wrapper). Oracles that cannot make
+//! the promise (PJRT) simply keep the sequential path; no configuration
+//! can force them onto the pool.
+
+pub mod pool;
+
+pub use pool::WorkerPool;
+
+use std::sync::Arc;
+
+use crate::functions::SubmodularFunction;
+
+/// How many worker threads the execution layer may use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// Sequential execution on the calling thread (the default).
+    #[default]
+    Off,
+    /// One worker per available hardware thread.
+    Auto,
+    /// Exactly `n` workers (`0` and `1` degrade to [`Parallelism::Off`]).
+    Threads(usize),
+}
+
+impl Parallelism {
+    /// The worker-thread count this setting resolves to (`<= 1` means no
+    /// pool is built and everything runs inline).
+    pub fn resolve(&self) -> usize {
+        match *self {
+            Parallelism::Off => 1,
+            Parallelism::Auto => {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+            Parallelism::Threads(n) => n.max(1),
+        }
+    }
+
+    /// Parse a CLI/config value: `off` | `auto` | a thread count.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim() {
+            "off" | "0" | "1" => Ok(Parallelism::Off),
+            "auto" => Ok(Parallelism::Auto),
+            n => n
+                .parse::<usize>()
+                .map(|n| if n <= 1 { Parallelism::Off } else { Parallelism::Threads(n) })
+                .map_err(|_| format!("bad parallelism {s:?}: expected off|auto|<threads>")),
+        }
+    }
+}
+
+impl std::str::FromStr for Parallelism {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Parallelism::parse(s)
+    }
+}
+
+impl std::fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Parallelism::Off => write!(f, "off"),
+            Parallelism::Auto => write!(f, "auto"),
+            Parallelism::Threads(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// A shareable handle to the execution layer: either sequential or a
+/// reference-counted [`WorkerPool`] that persists across chunks (and is
+/// shared between race lanes). Cloning shares the same pool.
+#[derive(Clone, Default)]
+pub struct ExecContext {
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl ExecContext {
+    /// Sequential execution (no pool, no threads).
+    pub fn sequential() -> Self {
+        ExecContext { pool: None }
+    }
+
+    /// Build a context for `par`; `off`/1 thread stays sequential.
+    pub fn new(par: Parallelism) -> Self {
+        let threads = par.resolve();
+        if threads <= 1 {
+            Self::sequential()
+        } else {
+            ExecContext { pool: Some(Arc::new(WorkerPool::new(threads))) }
+        }
+    }
+
+    /// This context, demoted to sequential unless `oracle` promises
+    /// [`parallel_safe`](SubmodularFunction::parallel_safe).
+    ///
+    /// The single implementation of the thread-safety gate the pool's
+    /// `Send` erasure depends on: every
+    /// [`StreamingAlgorithm::set_exec`](crate::algorithms::StreamingAlgorithm::set_exec)
+    /// override routes the incoming context through this before storing
+    /// it, so an algorithm holding a pool-backed context is proof its
+    /// oracle family opted in (native oracles do; PJRT does not and stays
+    /// sequential regardless of configuration).
+    #[must_use]
+    pub fn gated(self, oracle: &dyn SubmodularFunction) -> ExecContext {
+        if oracle.parallel_safe() {
+            self
+        } else {
+            ExecContext::sequential()
+        }
+    }
+
+    /// The pool, if parallel execution is on *and* there are at least two
+    /// units to fan out (a single unit always runs inline).
+    pub fn pool(&self, units: usize) -> Option<&WorkerPool> {
+        if units < 2 {
+            return None;
+        }
+        self.pool.as_deref()
+    }
+
+    /// Run `f` over every unit — on the pool's worker threads when one is
+    /// attached (and there are at least two units), inline otherwise —
+    /// returning the results **in unit order** either way.
+    ///
+    /// This is the crate's single audited `Send`-erasure site: units are
+    /// wrapped in the private `AssertThreadSafe` here and nowhere else,
+    /// and the method is deliberately `pub(crate)` so external code
+    /// cannot reach it with units that were never vetted. The contract is
+    /// that a context holding a pool was routed through
+    /// [`gated`](Self::gated) — every `set_exec` override does — so the
+    /// units being moved hold only oracles that promised
+    /// [`parallel_safe`](SubmodularFunction::parallel_safe).
+    pub(crate) fn map_units<T, R, F>(&self, units: &mut [T], f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(&mut T) -> R + Sync,
+    {
+        match self.pool(units.len()) {
+            Some(pool) => {
+                let mut work: Vec<AssertThreadSafe<&mut T>> =
+                    units.iter_mut().map(AssertThreadSafe).collect();
+                pool.map(&mut work, |_, unit| f(&mut *unit.0))
+            }
+            None => units.iter_mut().map(f).collect(),
+        }
+    }
+
+    /// Worker-thread count (1 = sequential).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.threads()).unwrap_or(1)
+    }
+
+    /// True when a pool is attached.
+    pub fn is_parallel(&self) -> bool {
+        self.pool.is_some()
+    }
+}
+
+impl std::fmt::Debug for ExecContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ExecContext(threads={})", self.threads())
+    }
+}
+
+/// Asserts that the wrapped value may cross a thread boundary for the
+/// duration of one scoped pool call even though its type is not `Send`.
+///
+/// Private on purpose: [`ExecContext::map_units`] is the only
+/// construction site, so the soundness argument lives in exactly one
+/// audited place. Algorithm sub-units (shards, sieves) hold
+/// `Box<dyn SubmodularFunction>`, which is not `Send` because the PJRT
+/// oracle shares `Rc`'d state between clones; wrapping is sound only for
+/// units whose oracle returned
+/// [`parallel_safe()`](SubmodularFunction::parallel_safe) `== true` —
+/// i.e. plain owned data that tolerates being *used* from another thread
+/// while no other thread touches it — which [`ExecContext::gated`]
+/// enforces before a pool ever reaches an algorithm. The scoped pool
+/// calls guarantee exclusive access per task and completion before
+/// returning, so no wrapped value ever outlives its borrow or is aliased.
+struct AssertThreadSafe<T>(T);
+
+// SAFETY: see the type-level docs — `map_units` only runs over units
+// vetted by the `gated`/`parallel_safe` contract, and the pool's scoped
+// calls give each wrapped value to exactly one task at a time.
+unsafe impl<T> Send for AssertThreadSafe<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_parses() {
+        assert_eq!(Parallelism::parse("off").unwrap(), Parallelism::Off);
+        assert_eq!(Parallelism::parse("auto").unwrap(), Parallelism::Auto);
+        assert_eq!(Parallelism::parse("4").unwrap(), Parallelism::Threads(4));
+        assert_eq!(Parallelism::parse("1").unwrap(), Parallelism::Off);
+        assert_eq!(Parallelism::parse("0").unwrap(), Parallelism::Off);
+        assert!(Parallelism::parse("lots").is_err());
+    }
+
+    #[test]
+    fn resolve_floors_at_one() {
+        assert_eq!(Parallelism::Off.resolve(), 1);
+        assert_eq!(Parallelism::Threads(0).resolve(), 1);
+        assert_eq!(Parallelism::Threads(3).resolve(), 3);
+        assert!(Parallelism::Auto.resolve() >= 1);
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        for p in [Parallelism::Off, Parallelism::Auto, Parallelism::Threads(8)] {
+            assert_eq!(Parallelism::parse(&p.to_string()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn sequential_context_has_no_pool() {
+        let ctx = ExecContext::sequential();
+        assert!(!ctx.is_parallel());
+        assert_eq!(ctx.threads(), 1);
+        assert!(ctx.pool(100).is_none());
+        let ctx = ExecContext::new(Parallelism::Off);
+        assert!(!ctx.is_parallel());
+    }
+
+    #[test]
+    fn parallel_context_gates_on_unit_count() {
+        let ctx = ExecContext::new(Parallelism::Threads(2));
+        assert!(ctx.is_parallel());
+        assert_eq!(ctx.threads(), 2);
+        assert!(ctx.pool(0).is_none(), "no units, no fan-out");
+        assert!(ctx.pool(1).is_none(), "one unit runs inline");
+        assert!(ctx.pool(2).is_some());
+    }
+
+    /// Minimal oracle that leaves `parallel_safe` at the trait default
+    /// (`false`) — stands in for thread-confined backends like PJRT.
+    struct SequentialOnly;
+
+    impl SubmodularFunction for SequentialOnly {
+        fn dim(&self) -> usize {
+            1
+        }
+
+        fn len(&self) -> usize {
+            0
+        }
+
+        fn current_value(&self) -> f64 {
+            0.0
+        }
+
+        fn max_singleton_value(&self) -> f64 {
+            0.0
+        }
+
+        fn peek_gain(&mut self, _item: &[f32]) -> f64 {
+            0.0
+        }
+
+        fn accept(&mut self, _item: &[f32]) {}
+
+        fn remove(&mut self, _idx: usize) {}
+
+        fn summary(&self) -> &[f32] {
+            &[]
+        }
+
+        fn reset(&mut self) {}
+
+        fn queries(&self) -> u64 {
+            0
+        }
+
+        fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
+            Box::new(SequentialOnly)
+        }
+    }
+
+    #[test]
+    fn gated_demotes_unless_oracle_opts_in() {
+        use crate::functions::{LogDetConfig, NativeLogDet};
+        let native = NativeLogDet::new(LogDetConfig::with_gamma(2, 2, 1.0, 1.0));
+        let kept = ExecContext::new(Parallelism::Threads(2)).gated(&native);
+        assert!(kept.is_parallel(), "native oracle opts in");
+        let demoted = ExecContext::new(Parallelism::Threads(2)).gated(&SequentialOnly);
+        assert!(!demoted.is_parallel(), "trait-default parallel_safe=false must demote");
+    }
+
+    #[test]
+    fn map_units_parallel_matches_inline() {
+        let seq = ExecContext::sequential();
+        let par = ExecContext::new(Parallelism::Threads(3));
+        let mut a: Vec<u64> = (0..20).collect();
+        let mut b = a.clone();
+        let f = |v: &mut u64| {
+            *v += 1;
+            *v * 2
+        };
+        let ra = seq.map_units(&mut a, f);
+        let rb = par.map_units(&mut b, f);
+        assert_eq!(ra, rb, "results in unit order on both paths");
+        assert_eq!(a, b, "mutations applied on both paths");
+    }
+
+    #[test]
+    fn clones_share_the_pool() {
+        let ctx = ExecContext::new(Parallelism::Threads(2));
+        let clone = ctx.clone();
+        assert!(std::ptr::eq(ctx.pool(2).unwrap(), clone.pool(2).unwrap()));
+    }
+}

@@ -1,0 +1,307 @@
+//! The persistent worker pool: std `thread` + `mpsc` only, scoped
+//! fork-join calls with deterministic result ordering.
+//!
+//! Workers are spawned once and live for the pool's lifetime; every
+//! scoped call ([`WorkerPool::map`], [`WorkerPool::for_each_mut`],
+//! [`WorkerPool::run_tasks`]) injects up to `threads` jobs that drain a
+//! shared atomic index counter, then blocks the caller until every job
+//! has finished — so borrowed data never outlives the call, and chunk
+//! after chunk reuses the same threads (no per-chunk spawn cost).
+//!
+//! The pool is `Sync`: multiple threads (e.g. race lanes) may issue
+//! scoped calls concurrently; jobs from different scopes interleave on
+//! the workers and each scope waits only on its own completion latch.
+//!
+//! Worker panics are caught, forwarded to the scope's caller and
+//! re-raised there (`resume_unwind`), after the latch has been released —
+//! a panicking task never deadlocks or poisons the pool.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of queued work (lifetime-erased; see [`WorkerPool::run_tasks`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch + panic slot for one scoped call.
+struct Scope {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// Persistent worker pool (see module docs).
+pub struct WorkerPool {
+    injector: Sender<Job>,
+    threads: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` persistent workers (floored at 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("ts-exec-{i}"))
+                    .spawn(move || loop {
+                        // Take the next job with the receiver lock released
+                        // before running it, so long jobs don't serialize
+                        // the queue.
+                        let job = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break, // a worker panicked holding the lock
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool { injector: tx, threads, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..tasks)` across the pool and block until all calls have
+    /// returned. Each index is claimed by exactly one worker; at most
+    /// `threads` run concurrently. Panics inside `f` are re-raised here
+    /// after every in-flight call has finished.
+    ///
+    /// This is the scoped core: `f` may borrow from the caller's stack
+    /// because the call does not return while any job still references it.
+    pub fn run_tasks<F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        if self.threads <= 1 || tasks == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let jobs = self.threads.min(tasks);
+        let scope = Arc::new(Scope {
+            remaining: Mutex::new(jobs),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let next = Arc::new(AtomicUsize::new(0));
+        // Lifetime erasure: ship `&f` as an address. Sound because this
+        // function blocks on the latch below until every job that could
+        // dereference it has completed (panics included — the latch is
+        // decremented outside the catch).
+        let f_addr = &f as *const F as usize;
+        for _ in 0..jobs {
+            let scope = Arc::clone(&scope);
+            let next = Arc::clone(&next);
+            let job: Job = Box::new(move || {
+                let f = unsafe { &*(f_addr as *const F) };
+                let outcome = catch_unwind(AssertUnwindSafe(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= tasks {
+                        break;
+                    }
+                    f(i);
+                }));
+                if let Err(payload) = outcome {
+                    if let Ok(mut slot) = scope.panic.lock() {
+                        slot.get_or_insert(payload);
+                    }
+                }
+                let mut remaining = scope.remaining.lock().expect("latch mutex");
+                *remaining -= 1;
+                if *remaining == 0 {
+                    scope.done.notify_all();
+                }
+            });
+            self.injector.send(job).expect("worker pool has shut down");
+        }
+        let mut remaining = scope.remaining.lock().expect("latch mutex");
+        while *remaining > 0 {
+            remaining = scope.done.wait(remaining).expect("latch wait");
+        }
+        drop(remaining);
+        if let Some(payload) = scope.panic.lock().expect("panic slot").take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Apply `f` to every item of `items` in parallel and return the
+    /// results **in item order** (deterministic regardless of completion
+    /// order). Each item is handed to exactly one task, which gets
+    /// exclusive `&mut` access.
+    pub fn map<T, R, F>(&self, items: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let n = items.len();
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let items_addr = items.as_mut_ptr() as usize;
+        let out_addr = out.as_mut_ptr() as usize;
+        self.run_tasks(n, |i| {
+            // SAFETY: run_tasks hands each index to exactly one task, so
+            // the `&mut` derived from base+offset is exclusive; both
+            // buffers outlive the blocking run_tasks call.
+            let item = unsafe { &mut *(items_addr as *mut T).add(i) };
+            let slot = unsafe { &mut *(out_addr as *mut Option<R>).add(i) };
+            *slot = Some(f(i, item));
+        });
+        out.into_iter().map(|r| r.expect("every index ran")).collect()
+    }
+
+    /// [`map`](Self::map) without results: mutate every item in place.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let items_addr = items.as_mut_ptr() as usize;
+        self.run_tasks(items.len(), |i| {
+            // SAFETY: as in `map` — exclusive index, outlived borrow.
+            let item = unsafe { &mut *(items_addr as *mut T).add(i) };
+            f(i, item);
+        });
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Replace the injector with a dead channel so workers' `recv`
+        // errors out, then join them.
+        let (dead, _) = channel();
+        self.injector = dead;
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = WorkerPool::new(4);
+        let mut items: Vec<usize> = (0..100).collect();
+        let out = pool.map(&mut items, |i, v| {
+            assert_eq!(i, *v);
+            *v * 2
+        });
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn for_each_mut_mutates_every_item() {
+        let pool = WorkerPool::new(3);
+        let mut items = vec![0u64; 57];
+        pool.for_each_mut(&mut items, |i, v| *v = i as u64 + 1);
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_across_calls() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run_tasks(8, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 400);
+        assert_eq!(pool.threads(), 2);
+    }
+
+    #[test]
+    fn zero_and_one_tasks_run_inline() {
+        let pool = WorkerPool::new(4);
+        pool.run_tasks(0, |_| panic!("must not run"));
+        let mut ran = vec![false];
+        pool.for_each_mut(&mut ran, |_, v| *v = true);
+        assert!(ran[0]);
+    }
+
+    #[test]
+    fn single_thread_pool_degrades_to_inline() {
+        let pool = WorkerPool::new(1);
+        let mut items = vec![1u32, 2, 3];
+        let out = pool.map(&mut items, |_, v| *v + 10);
+        assert_eq!(out, vec![11, 12, 13]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tasks(4, |i| {
+                if i == 2 {
+                    panic!("task 2 exploded");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // The pool keeps working after a panicked scope.
+        let mut items = vec![0usize; 8];
+        pool.for_each_mut(&mut items, |i, v| *v = i);
+        assert_eq!(items[7], 7);
+    }
+
+    #[test]
+    fn concurrent_scopes_from_multiple_threads() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let total = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        pool.run_tasks(5, |i| {
+                            total.fetch_add(i as u64, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 3 threads × 20 scopes × (0+1+2+3+4)
+        assert_eq!(total.load(Ordering::Relaxed), 3 * 20 * 10);
+    }
+
+    #[test]
+    fn borrowed_state_is_safe_across_the_scope() {
+        // The scoped contract: tasks may borrow caller-stack data.
+        let pool = WorkerPool::new(4);
+        let base: Vec<u64> = (0..64).collect();
+        let mut sums = vec![0u64; 16];
+        pool.for_each_mut(&mut sums, |i, out| {
+            *out = base[i * 4..(i + 1) * 4].iter().sum();
+        });
+        let total: u64 = sums.iter().sum();
+        assert_eq!(total, (0..64).sum::<u64>());
+    }
+}

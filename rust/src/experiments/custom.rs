@@ -6,6 +6,7 @@ use std::path::Path;
 
 use crate::config::{AlgoSpec, ExperimentConfig};
 use crate::data::registry;
+use crate::exec::ExecContext;
 use crate::metrics::{write_records, RunRecord};
 
 use super::runner::{
@@ -19,6 +20,8 @@ use super::runner::{
 /// grid (ThreeSieves only). `stream=true` uses the single-pass protocol.
 pub fn run(cfg: &ExperimentConfig, stream: bool) -> std::io::Result<Vec<RunRecord>> {
     let mode = if stream { GammaMode::Streaming } else { GammaMode::Batch };
+    // One pool for the whole sweep (a sequential context when `off`).
+    let exec = ExecContext::new(cfg.parallelism);
     let mut records = Vec::new();
     for dataset in &cfg.datasets {
         let Some(info) = registry::info(dataset) else {
@@ -39,9 +42,10 @@ pub fn run(cfg: &ExperimentConfig, stream: bool) -> std::io::Result<Vec<RunRecor
                         mode,
                         greedy,
                         cfg.batch_size,
+                        &exec,
                     )
                 } else {
-                    run_batch_protocol_chunked(&spec, &ds, k, mode, greedy, cfg.batch_size)
+                    run_batch_protocol_chunked(&spec, &ds, k, mode, greedy, cfg.batch_size, &exec)
                 };
                 println!(
                     "[{}] {:<26} {:<22} K={:<4} rel={:.3} t={:.3}s mem={}",
@@ -73,6 +77,17 @@ fn expand(cfg: &ExperimentConfig, specs: &[AlgoSpec]) -> Vec<AlgoSpec> {
                 for &eps in &eps_grid {
                     for &t in &t_grid {
                         out.push(AlgoSpec::ThreeSieves { epsilon: eps, t });
+                    }
+                }
+            }
+            AlgoSpec::ShardedThreeSieves { shards, .. } => {
+                for &eps in &eps_grid {
+                    for &t in &t_grid {
+                        out.push(AlgoSpec::ShardedThreeSieves {
+                            epsilon: eps,
+                            t,
+                            shards: *shards,
+                        });
                     }
                 }
             }

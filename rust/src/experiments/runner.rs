@@ -7,6 +7,7 @@ use crate::algorithms::three_sieves::SieveTuning;
 use crate::algorithms::*;
 use crate::config::AlgoSpec;
 use crate::data::{Dataset, StreamSource};
+use crate::exec::ExecContext;
 use crate::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
 use crate::metrics::{AlgoStats, RunRecord};
 
@@ -68,13 +69,22 @@ pub fn build_algo(
         AlgoSpec::ThreeSieves { epsilon, t } => {
             Box::new(ThreeSieves::new(oracle(), k, epsilon, SieveTuning::FixedT(t)))
         }
+        AlgoSpec::ShardedThreeSieves { epsilon, t, shards } => {
+            Box::new(crate::coordinator::ShardedThreeSieves::new(
+                oracle(),
+                k,
+                epsilon,
+                SieveTuning::FixedT(t),
+                shards,
+            ))
+        }
     }
 }
 
 /// T parameter for the record (0 when not applicable).
 fn t_of(spec: &AlgoSpec) -> usize {
     match *spec {
-        AlgoSpec::ThreeSieves { t, .. } => t,
+        AlgoSpec::ThreeSieves { t, .. } | AlgoSpec::ShardedThreeSieves { t, .. } => t,
         _ => 0,
     }
 }
@@ -85,7 +95,8 @@ fn eps_of(spec: &AlgoSpec) -> f64 {
         | AlgoSpec::SieveStreamingPP { epsilon }
         | AlgoSpec::Salsa { epsilon, .. }
         | AlgoSpec::QuickStream { epsilon, .. }
-        | AlgoSpec::ThreeSieves { epsilon, .. } => epsilon,
+        | AlgoSpec::ThreeSieves { epsilon, .. }
+        | AlgoSpec::ShardedThreeSieves { epsilon, .. } => epsilon,
         _ => 0.0,
     }
 }
@@ -100,13 +111,15 @@ pub fn run_batch_protocol(
     mode: GammaMode,
     greedy_value: f64,
 ) -> RunRecord {
-    run_batch_protocol_chunked(spec, ds, k, mode, greedy_value, 1)
+    run_batch_protocol_chunked(spec, ds, k, mode, greedy_value, 1, &ExecContext::sequential())
 }
 
 /// [`run_batch_protocol`] with chunked ingestion: each pass hands the
 /// dataset to the algorithm in `batch_size`-item chunks through
 /// [`StreamingAlgorithm::process_batch`] (semantics-preserving; 1 = the
-/// per-item path).
+/// per-item path). `exec` fans shard/sieve work out across its pool
+/// (bit-identical results at every thread count — see [`crate::exec`]).
+#[allow(clippy::too_many_arguments)]
 pub fn run_batch_protocol_chunked(
     spec: &AlgoSpec,
     ds: &Dataset,
@@ -114,6 +127,7 @@ pub fn run_batch_protocol_chunked(
     mode: GammaMode,
     greedy_value: f64,
     batch_size: usize,
+    exec: &ExecContext,
 ) -> RunRecord {
     if matches!(spec, AlgoSpec::Greedy) {
         // Offline reference does its native multi-pass (lazy) fit.
@@ -125,6 +139,7 @@ pub fn run_batch_protocol_chunked(
     }
     let b = batch_size.max(1);
     let mut algo = build_algo(spec, ds.dim(), k, mode, Some(ds.len()));
+    algo.set_exec(exec.clone());
     let start = Instant::now();
     let mut passes = 0;
     while !algo.is_full() && passes < k {
@@ -155,13 +170,24 @@ pub fn run_stream_protocol(
     mode: GammaMode,
     greedy_value: f64,
 ) -> RunRecord {
-    run_stream_protocol_chunked(spec, source, dataset_name, k, mode, greedy_value, 1)
+    run_stream_protocol_chunked(
+        spec,
+        source,
+        dataset_name,
+        k,
+        mode,
+        greedy_value,
+        1,
+        &ExecContext::sequential(),
+    )
 }
 
 /// [`run_stream_protocol`] with chunked ingestion: pull up to `batch_size`
 /// items from the source, then hand the chunk to
 /// [`StreamingAlgorithm::process_batch`] (semantics-preserving; 1 = the
-/// per-item path).
+/// per-item path). `exec` fans shard/sieve work out across its pool
+/// (bit-identical results at every thread count — see [`crate::exec`]).
+#[allow(clippy::too_many_arguments)]
 pub fn run_stream_protocol_chunked(
     spec: &AlgoSpec,
     source: &mut dyn StreamSource,
@@ -170,11 +196,13 @@ pub fn run_stream_protocol_chunked(
     mode: GammaMode,
     greedy_value: f64,
     batch_size: usize,
+    exec: &ExecContext,
 ) -> RunRecord {
     let b = batch_size.max(1);
     let d = source.dim();
     let len_hint = source.len_hint();
     let mut algo = build_algo(spec, d, k, mode, len_hint);
+    algo.set_exec(exec.clone());
     let mut buf = vec![0.0f32; d];
     let start = Instant::now();
     if b == 1 {
@@ -244,6 +272,7 @@ mod tests {
             AlgoSpec::Salsa { epsilon: 0.1, use_length_hint: true },
             AlgoSpec::QuickStream { c: 2, epsilon: 0.1, seed: 1 },
             AlgoSpec::ThreeSieves { epsilon: 0.1, t: 100 },
+            AlgoSpec::ShardedThreeSieves { epsilon: 0.1, t: 100, shards: 3 },
         ];
         for spec in &specs {
             let algo = build_algo(spec, 8, 5, GammaMode::Batch, Some(100));
@@ -289,6 +318,7 @@ mod tests {
                 GammaMode::Streaming,
                 1.0,
                 batch_size,
+                &ExecContext::sequential(),
             ));
         }
         assert_eq!(records[0].value.to_bits(), records[1].value.to_bits());

@@ -135,6 +135,10 @@ impl SubmodularFunction for ConcaveCoverage {
     fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
         Box::new(ConcaveCoverage::with_weights(self.weights.clone()))
     }
+
+    fn parallel_safe(&self) -> bool {
+        true // plain owned Vec/f64 state, nothing shared between clones
+    }
 }
 
 #[cfg(test)]

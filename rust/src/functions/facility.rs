@@ -160,6 +160,10 @@ impl SubmodularFunction for FacilityLocation {
     fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
         Box::new(FacilityLocation::new(self.dim, self.kernel.gamma(), self.refs.clone()))
     }
+
+    fn parallel_safe(&self) -> bool {
+        true // plain owned Vec/f64 state, nothing shared between clones
+    }
 }
 
 #[cfg(test)]

@@ -462,6 +462,10 @@ impl SubmodularFunction for NativeLogDet {
     fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
         Box::new(NativeLogDet::new(self.cfg.clone()))
     }
+
+    fn parallel_safe(&self) -> bool {
+        true // plain owned Vec/f64 state, nothing shared between clones
+    }
 }
 
 #[cfg(test)]

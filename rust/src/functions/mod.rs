@@ -90,6 +90,23 @@ pub trait SubmodularFunction {
     /// A fresh, empty oracle of the same configuration. Sieve-family
     /// algorithms use this to spawn one oracle per sieve.
     fn clone_empty(&self) -> Box<dyn SubmodularFunction>;
+
+    /// May this oracle — and every oracle produced by
+    /// [`clone_empty`](Self::clone_empty) from it — be driven from a
+    /// worker thread other than the one that built it, given that no two
+    /// threads ever touch the same instance concurrently?
+    ///
+    /// The [`exec`](crate::exec) pool moves algorithm sub-units (shards,
+    /// sieves) across threads for the duration of a scoped call, which is
+    /// only sound when the oracle is self-contained owned data. Returning
+    /// `true` is that promise. Implementations that share non-thread-safe
+    /// state between clones (the PJRT oracle's `Rc`'d engine and graph
+    /// set) must keep the default `false`, which pins every algorithm
+    /// using them to the sequential path regardless of the configured
+    /// parallelism.
+    fn parallel_safe(&self) -> bool {
+        false
+    }
 }
 
 /// Convenience: gain of swapping summary element `idx` for `item`,

@@ -42,6 +42,7 @@ pub mod algorithms;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod experiments;
 pub mod functions;
 pub mod kernels;

@@ -16,6 +16,7 @@ use std::process::ExitCode;
 use threesieves::config::AlgoSpec;
 use threesieves::coordinator::{MeanShiftDetector, NoDrift, PipelineConfig, StreamPipeline};
 use threesieves::data::registry;
+use threesieves::exec::{ExecContext, Parallelism};
 use threesieves::experiments::figures::{self, SweepScale};
 use threesieves::experiments::runner::{run_batch_protocol_chunked, run_stream_protocol_chunked};
 use threesieves::experiments::GammaMode;
@@ -139,18 +140,22 @@ threesieves — streaming submodular function maximization (ThreeSieves)
 USAGE:
   threesieves summarize --dataset <name> --n <N> --k <K>
                         [--algo <id>] [--epsilon E] [--t T] [--seed S] [--batch]
-                        [--batch-size B]
+                        [--batch-size B] [--threads off|auto|N]
   threesieves experiment <table1|table2|fig1|fig2|fig3|ablations> [--n N] [--out DIR] [--quick]
   threesieves experiment custom --config <file.json> [--stream]
   threesieves serve     --dataset <name> --n <N> --k <K>
                         [--drift-window W] [--drift-threshold X] [--checkpoint PATH]
-                        [--batch-size B]
+                        [--batch-size B] [--threads off|auto|N]
   threesieves pjrt-info [--artifacts DIR] [--config NAME]
   threesieves datasets
 
 Algorithms (--algo): greedy | random | isi | stream-greedy | preemption |
   sieve-streaming | sieve-streaming-pp | salsa | quickstream |
-  three-sieves (default)
+  sharded-three-sieves [--shards P] | three-sieves (default)
+
+--threads fans shard/sieve work out across a worker pool (pair with
+--batch-size); summaries, values and query counts are identical at every
+thread count.
 ";
 
 fn main() -> ExitCode {
@@ -217,8 +222,21 @@ fn algo_spec(args: &cli::Args) -> Result<AlgoSpec, String> {
             AlgoSpec::QuickStream { c: args.get_usize("c", 2)?, epsilon: eps, seed }
         }
         "three-sieves" => AlgoSpec::ThreeSieves { epsilon: eps, t },
+        "sharded-three-sieves" => AlgoSpec::ShardedThreeSieves {
+            epsilon: eps,
+            t,
+            shards: args.get_usize("shards", 4)?.max(1),
+        },
         other => return Err(format!("unknown algorithm {other:?}")),
     })
+}
+
+/// Parse `--threads off|auto|N` (default off).
+fn parallelism_arg(args: &cli::Args) -> Result<Parallelism, String> {
+    match args.get("threads") {
+        None => Ok(Parallelism::Off),
+        Some(v) => Parallelism::parse(v),
+    }
 }
 
 fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
@@ -231,15 +249,17 @@ fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
     // Chunked ingestion width (1 = per-item). Semantics-preserving; larger
     // chunks amortize the oracle's kernel work (see process_batch).
     let batch_size = args.get_usize("batch-size", 1)?.max(1);
+    // Shard/sieve fan-out pool; results are identical at every setting.
+    let exec = ExecContext::new(parallelism_arg(args)?);
 
     let rec = if args.has("batch") {
         let ds = registry::get(&dataset, n, seed)
             .ok_or_else(|| format!("unknown dataset {dataset:?}"))?;
-        run_batch_protocol_chunked(&spec, &ds, k, mode, 1.0, batch_size)
+        run_batch_protocol_chunked(&spec, &ds, k, mode, 1.0, batch_size, &exec)
     } else {
         let mut src = registry::source(&dataset, n, seed)
             .ok_or_else(|| format!("unknown dataset {dataset:?}"))?;
-        run_stream_protocol_chunked(&spec, src.as_mut(), &dataset, k, mode, 1.0, batch_size)
+        run_stream_protocol_chunked(&spec, src.as_mut(), &dataset, k, mode, 1.0, batch_size, &exec)
     };
     println!("algorithm      : {}", rec.algorithm);
     println!(
@@ -324,6 +344,7 @@ fn cmd_serve(args: &cli::Args) -> Result<(), String> {
         checkpoint_every: args.get_u64("checkpoint-every", 0)?,
         checkpoint_path: args.get("checkpoint").map(PathBuf::from),
         reselect_on_drift: !args.has("no-reselect"),
+        parallelism: parallelism_arg(args)?,
     };
     let pipeline = StreamPipeline::new(cfg);
     let report = if args.has("no-drift") {

@@ -252,4 +252,11 @@ impl SubmodularFunction for PjrtLogDet {
     fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
         Box::new(PjrtLogDet::new(self.engine.clone(), self.graphs.clone()))
     }
+
+    fn parallel_safe(&self) -> bool {
+        // Clones share the `Rc`'d engine + graph set and PJRT device
+        // buffers are thread-confined: this oracle must stay on the
+        // thread that built it (the trait default, restated explicitly).
+        false
+    }
 }

@@ -104,4 +104,8 @@ impl SubmodularFunction for PjrtLogDet {
     fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
         unreachable!("stub PjrtLogDet cannot be constructed")
     }
+
+    fn parallel_safe(&self) -> bool {
+        unreachable!("stub PjrtLogDet cannot be constructed")
+    }
 }

@@ -1,0 +1,232 @@
+//! Thread-count invariance: the exec pool must be *semantically
+//! invisible*. For every algorithm that fans work out across the pool
+//! (ShardedThreeSieves shards, SieveStreaming/Salsa sieves) and for the
+//! race coordinator, running the identical stream with parallelism `off`,
+//! 2 and 8 threads must produce bit-identical objective values, identical
+//! summaries and identical resource stats — queries, elements, stored,
+//! peak — because the pool only relocates each unit's computation, never
+//! reorders or splits it (see `rust/src/exec/`).
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::{Salsa, SieveStreaming, StreamingAlgorithm};
+use threesieves::coordinator::checkpoint::Checkpoint;
+use threesieves::coordinator::{race, AlgoFactory, RaceConfig, ShardedThreeSieves};
+use threesieves::data::synthetic::{Mixture, MixtureSource};
+use threesieves::data::{registry, Dataset, StreamSource};
+use threesieves::exec::{ExecContext, Parallelism};
+use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+use threesieves::metrics::AlgoStats;
+use threesieves::util::rng::Rng;
+
+const DIM: usize = 8;
+const CHUNK: usize = 64;
+
+fn stream(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from(seed);
+    let mix = Mixture::random(DIM, 4, 5.0, 0.5, &mut rng);
+    let mut ds = MixtureSource::new(mix, n, seed).materialize("exec-parity", n);
+    ds.normalize();
+    ds
+}
+
+fn oracle(k: usize) -> Box<dyn SubmodularFunction> {
+    Box::new(NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0)))
+}
+
+/// Chunk `ds` through `algo` under `par` and capture the final state.
+fn run_under(
+    mut algo: Box<dyn StreamingAlgorithm>,
+    ds: &Dataset,
+    par: Parallelism,
+) -> (u64, Vec<f32>, AlgoStats) {
+    algo.set_exec(ExecContext::new(par));
+    for block in ds.raw().chunks(CHUNK * DIM) {
+        algo.process_batch(block);
+    }
+    algo.finalize();
+    (algo.value().to_bits(), algo.summary(), algo.stats())
+}
+
+/// The invariance contract for one algorithm family.
+fn assert_thread_invariant(build: &dyn Fn() -> Box<dyn StreamingAlgorithm>, ds: &Dataset) {
+    let (value_off, summary_off, stats_off) = run_under(build(), ds, Parallelism::Off);
+    for threads in [2usize, 8] {
+        let (value, summary, stats) = run_under(build(), ds, Parallelism::Threads(threads));
+        let label = format!("{} threads={threads}", build().name());
+        assert_eq!(value_off, value, "{label}: value bits");
+        assert_eq!(summary_off, summary, "{label}: summary rows");
+        assert_eq!(stats_off, stats, "{label}: stats {stats_off:?} vs {stats:?}");
+    }
+    assert!(stats_off.queries > 0, "workload must exercise the oracle");
+}
+
+#[test]
+fn sharded_three_sieves_thread_invariance() {
+    let ds = stream(2000, 31);
+    let k = 6;
+    let build = || -> Box<dyn StreamingAlgorithm> {
+        Box::new(ShardedThreeSieves::new(oracle(k), k, 0.05, SieveTuning::FixedT(20), 4))
+    };
+    assert_thread_invariant(&build, &ds);
+}
+
+#[test]
+fn sieve_streaming_thread_invariance() {
+    let ds = stream(1500, 32);
+    let k = 6;
+    let build =
+        || -> Box<dyn StreamingAlgorithm> { Box::new(SieveStreaming::new(oracle(k), k, 0.1)) };
+    assert_thread_invariant(&build, &ds);
+}
+
+#[test]
+fn salsa_thread_invariance() {
+    // Length hint on: includes the position-adaptive rule, whose
+    // threshold moves *within* a chunk — the fan-out must replay the
+    // per-item position dependence identically on worker threads.
+    let ds = stream(1500, 33);
+    let k = 5;
+    let n = ds.len();
+    let build =
+        || -> Box<dyn StreamingAlgorithm> { Box::new(Salsa::new(oracle(k), k, 0.2, Some(n))) };
+    assert_thread_invariant(&build, &ds);
+}
+
+#[test]
+fn sharded_thread_invariance_with_tiny_t() {
+    // T far smaller than the chunk: shards pop thresholds constantly, so
+    // the scan's threshold-drop path runs on the workers too.
+    let ds = stream(1200, 34);
+    let k = 8;
+    let build = || -> Box<dyn StreamingAlgorithm> {
+        Box::new(ShardedThreeSieves::new(oracle(k), k, 0.2, SieveTuning::FixedT(3), 6))
+    };
+    assert_thread_invariant(&build, &ds);
+}
+
+/// The race coordinator: identical factories under `off` and a shared
+/// 4-thread pool (chunked broadcast) must produce identical lane reports.
+#[test]
+fn race_thread_invariance() {
+    let lanes = |dim: usize| -> Vec<(String, AlgoFactory)> {
+        vec![
+            (
+                "sharded".to_string(),
+                Box::new(move || {
+                    let f = NativeLogDet::new(LogDetConfig::for_streaming(dim, 6));
+                    Box::new(ShardedThreeSieves::new(
+                        Box::new(f),
+                        6,
+                        0.05,
+                        SieveTuning::FixedT(40),
+                        4,
+                    )) as Box<dyn StreamingAlgorithm>
+                }) as AlgoFactory,
+            ),
+            (
+                "sieves".to_string(),
+                Box::new(move || {
+                    let f = NativeLogDet::new(LogDetConfig::for_streaming(dim, 6));
+                    Box::new(SieveStreaming::new(Box::new(f), 6, 0.1))
+                        as Box<dyn StreamingAlgorithm>
+                }) as AlgoFactory,
+            ),
+        ]
+    };
+    let run = |par: Parallelism, batch: usize| {
+        let src = registry::source("fact-highlevel-like", 1200, 9).unwrap();
+        race(
+            src,
+            lanes(16),
+            RaceConfig { batch_size: batch, parallelism: par, ..Default::default() },
+        )
+    };
+    let base = run(Parallelism::Off, 1);
+    for (par, batch) in [(Parallelism::Off, 32), (Parallelism::Threads(4), 32)] {
+        let got = run(par, batch);
+        assert_eq!(base.len(), got.len());
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "lane {}: value", a.name);
+            assert_eq!(a.summary, b.summary, "lane {}: summary", a.name);
+            assert_eq!(a.stats, b.stats, "lane {}: stats", a.name);
+        }
+    }
+}
+
+/// Checkpoint roundtrip under the pool: a ShardedThreeSieves driven by the
+/// pool checkpoints identically to a sequential twin at mid-stream, the
+/// persisted summary reproduces the value in a fresh oracle, and both
+/// resume over the second half to the identical final state.
+#[test]
+fn sharded_checkpoint_roundtrip_resumes_identically_under_pool() {
+    let dir = std::env::temp_dir().join(format!("ts_exec_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = stream(1600, 35);
+    let k = 6;
+    let half = ds.len() / 2 * DIM;
+
+    let build = || ShardedThreeSieves::new(oracle(k), k, 0.05, SieveTuning::FixedT(25), 4);
+    let mut seq = build();
+    let mut par = build();
+    par.set_exec(ExecContext::new(Parallelism::Threads(4)));
+
+    let drive = |algo: &mut ShardedThreeSieves, raw: &[f32]| {
+        for block in raw.chunks(CHUNK * DIM) {
+            algo.process_batch(block);
+        }
+    };
+    drive(&mut seq, &ds.raw()[..half]);
+    drive(&mut par, &ds.raw()[..half]);
+
+    let snapshot = |algo: &ShardedThreeSieves| Checkpoint {
+        algorithm: algo.name(),
+        dim: DIM,
+        k,
+        value: algo.value(),
+        elements: (ds.len() / 2) as u64,
+        drift_events: 0,
+        summary: algo.summary(),
+    };
+    let (p_seq, p_par) = (dir.join("seq.ckpt"), dir.join("par.ckpt"));
+    snapshot(&seq).save(&p_seq).unwrap();
+    snapshot(&par).save(&p_par).unwrap();
+    let ck_seq = Checkpoint::load(&p_seq).unwrap();
+    let ck_par = Checkpoint::load(&p_par).unwrap();
+    assert_eq!(ck_seq, ck_par, "mid-stream checkpoints must match bit for bit");
+
+    // The persisted summary reproduces the value in a fresh oracle.
+    let mut restored = oracle(k);
+    for row in ck_par.summary.chunks_exact(DIM) {
+        restored.accept(row);
+    }
+    assert!(
+        (restored.current_value() - ck_par.value).abs() < 1e-6 * (1.0 + ck_par.value.abs()),
+        "restored value {} != checkpointed {}",
+        restored.current_value(),
+        ck_par.value
+    );
+
+    // Both runs resume over the second half to the identical final state.
+    drive(&mut seq, &ds.raw()[half..]);
+    drive(&mut par, &ds.raw()[half..]);
+    assert_eq!(seq.value().to_bits(), par.value().to_bits());
+    assert_eq!(seq.summary(), par.summary());
+    assert_eq!(seq.stats(), par.stats());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `auto` parallelism is just a thread count — still invariant.
+#[test]
+fn auto_parallelism_matches_off() {
+    let ds = stream(900, 36);
+    let k = 5;
+    let build = || -> Box<dyn StreamingAlgorithm> {
+        Box::new(ShardedThreeSieves::new(oracle(k), k, 0.1, SieveTuning::FixedT(15), 3))
+    };
+    let (v_off, s_off, st_off) = run_under(build(), &ds, Parallelism::Off);
+    let (v_auto, s_auto, st_auto) = run_under(build(), &ds, Parallelism::Auto);
+    assert_eq!(v_off, v_auto);
+    assert_eq!(s_off, s_auto);
+    assert_eq!(st_off, st_auto);
+}
