@@ -10,13 +10,17 @@
 //! * ThreeSieves end-to-end items/second, per-item vs chunked ingestion
 //! * ShardedThreeSieves scaling across the exec pool (1/2/4/8 threads) —
 //!   the issue-#2 acceptance point (>1.5× at 4 threads)
+//! * Multi-tenant service throughput: 8 concurrent TCP sessions driven by
+//!   the in-process client against a loopback server (the issue-#3
+//!   serving path, protocol + session manager included)
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- [--quick] [--json PATH]
-//! [--scaling-json PATH]]`. `--quick` shrinks iteration counts to
-//! CI-smoke scale; `--json PATH` writes the headline numbers as a JSON
-//! object (the CI bench job uploads it as an artifact so the BENCH_*
-//! trajectory populates); `--scaling-json PATH` writes just the
-//! thread-scaling numbers as their own artifact.
+//! [--scaling-json PATH] [--service-json PATH]]`. `--quick` shrinks
+//! iteration counts to CI-smoke scale; `--json PATH` writes the headline
+//! numbers as a JSON object (the CI bench job uploads it as an artifact so
+//! the BENCH_* trajectory populates); `--scaling-json PATH` /
+//! `--service-json PATH` write the thread-scaling and service-throughput
+//! numbers as their own artifacts.
 
 use std::path::PathBuf;
 
@@ -258,6 +262,76 @@ fn bench_sharded_scaling(n: usize, iters: usize, rep: &mut Report, scaling: &mut
     }
 }
 
+/// Multi-tenant serving throughput: `sessions` concurrent tenants over
+/// loopback TCP, each streaming `n_per_session` items in 64-row packed
+/// chunks through its own connection. Measures the full serving path —
+/// protocol encode/decode, session-manager locking, per-tenant algorithm
+/// work — not just the algorithm kernel.
+fn bench_service_sessions(
+    n_per_session: usize,
+    sessions: usize,
+    iters: usize,
+    rep: &mut Report,
+    svc: &mut Report,
+) {
+    use threesieves::config::ServiceConfig;
+    use threesieves::service::{Client, Server, SessionSpec};
+
+    let dataset = "fact-highlevel-like";
+    let info = registry::info(dataset).unwrap();
+    let k = 8usize;
+    let data: Vec<_> = (0..sessions)
+        .map(|i| registry::get(dataset, n_per_session, 40 + i as u64).unwrap())
+        .collect();
+    let stats = bench_loop(1, iters, || {
+        let cfg = ServiceConfig {
+            idle_timeout: std::time::Duration::ZERO,
+            parallelism: Parallelism::Threads(sessions + 2),
+            ..ServiceConfig::default()
+        };
+        let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+        let addr = handle.addr();
+        let workers: Vec<_> = data
+            .iter()
+            .enumerate()
+            .map(|(i, ds)| {
+                let raw = ds.raw().to_vec();
+                let dim = ds.dim();
+                std::thread::spawn(move || {
+                    let id = format!("bench-{i}");
+                    let spec = SessionSpec::three_sieves(dim, k, 0.01, 500);
+                    let mut client = Client::connect(addr).unwrap();
+                    client.open(&id, &spec).unwrap();
+                    for chunk in raw.chunks(64 * dim) {
+                        client.push_packed(&id, chunk).unwrap();
+                    }
+                    client.close(&id, true).unwrap();
+                    client.quit().unwrap();
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        handle.shutdown();
+    });
+    let total_items = (sessions * n_per_session) as f64;
+    let items_per_s = total_items / stats.mean();
+    println!(
+        "service sessions d={:<4} K={k:<4} tenants={sessions}: {:>9.2} ms/{} items = \
+         {items_per_s:>8.0} items/s [{}]",
+        info.dim,
+        stats.mean() * 1e3,
+        sessions * n_per_session,
+        stats.summary("s")
+    );
+    let key = format!("service_{sessions}sessions_items_per_s");
+    rep.push(key.clone(), items_per_s);
+    svc.push(key, items_per_s);
+    svc.push("service_sessions", sessions as f64);
+    svc.push("service_items_per_session", n_per_session as f64);
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -271,8 +345,14 @@ fn main() {
         .position(|a| a == "--scaling-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let service_json_path = args
+        .iter()
+        .position(|a| a == "--service-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let mut rep = Report { entries: Vec::new() };
     let mut scaling = Report { entries: Vec::new() };
+    let mut service = Report { entries: Vec::new() };
 
     println!("== micro hot-path benchmarks{} ==", if quick { " (quick)" } else { "" });
     let gain_iters = if quick { 200 } else { 2000 };
@@ -292,6 +372,8 @@ fn main() {
     bench_threesieves_throughput(e2e_n, e2e_iters, &mut rep);
     let (scale_n, scale_iters) = if quick { (4_000, 2) } else { (16_000, 3) };
     bench_sharded_scaling(scale_n, scale_iters, &mut rep, &mut scaling);
+    let (svc_n, svc_iters) = if quick { (2_000, 2) } else { (8_000, 3) };
+    bench_service_sessions(svc_n, 8, svc_iters, &mut rep, &mut service);
 
     if let Some(path) = json_path {
         match rep.write(&path) {
@@ -301,6 +383,12 @@ fn main() {
     }
     if let Some(path) = scaling_json_path {
         match scaling.write(&path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+    if let Some(path) = service_json_path {
+        match service.write(&path) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("failed to write {path}: {e}"),
         }

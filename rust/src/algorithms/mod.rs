@@ -45,6 +45,7 @@ pub use three_sieves::ThreeSieves;
 use crate::exec::ExecContext;
 use crate::functions::SubmodularFunction;
 use crate::metrics::AlgoStats;
+use crate::util::json::Json;
 
 /// A single-pass streaming summary-selection algorithm.
 ///
@@ -119,6 +120,34 @@ pub trait StreamingAlgorithm {
     /// True once the best summary holds K elements.
     fn is_full(&self) -> bool {
         self.summary_len() >= self.k()
+    }
+
+    /// Opaque, JSON-serializable snapshot of every piece of run state the
+    /// summary itself does not capture (active threshold, rejection
+    /// counter, element/query accounting, …), or `None` when the algorithm
+    /// cannot be resumed from a checkpoint.
+    ///
+    /// Contract: feeding the snapshot and the matching summary back through
+    /// [`restore_state`](Self::restore_state) on a freshly built instance
+    /// of the same configuration must reproduce the exact pre-snapshot
+    /// state — continuing the stream afterwards yields **bit-identical**
+    /// summaries, values and [`stats`](Self::stats) to a run that never
+    /// paused (`rust/tests/service_integration.rs` pins this for the
+    /// session manager's evict → re-`OPEN` path). The default returns
+    /// `None`: algorithms are summary-only checkpointable unless they opt
+    /// in. All f64 fields survive the JSON text roundtrip bit-for-bit
+    /// (shortest-roundtrip formatting), so implementations may store raw
+    /// threshold values directly.
+    fn snapshot_state(&self) -> Option<Json> {
+        None
+    }
+
+    /// Restore from a [`snapshot_state`](Self::snapshot_state) blob plus
+    /// the checkpointed summary rows (row-major, acceptance order). Must
+    /// reject mismatched configurations (k, dim, hyperparameters) with a
+    /// descriptive error rather than resuming into a different run.
+    fn restore_state(&mut self, _state: &Json, _summary: &[f32]) -> Result<(), String> {
+        Err(format!("{} does not support checkpoint resume", self.name()))
     }
 }
 

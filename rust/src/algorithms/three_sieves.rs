@@ -12,6 +12,7 @@
 
 use crate::functions::SubmodularFunction;
 use crate::metrics::AlgoStats;
+use crate::util::json::Json;
 use crate::util::mathx::threshold_grid;
 
 use super::{sieve_threshold, StreamingAlgorithm};
@@ -64,6 +65,12 @@ pub struct ThreeSieves {
     /// the batch scan diverged — work the scalar path would not have done.
     /// Subtracted from reported query stats (see `process_batch`).
     speculative_queries: u64,
+    /// Query total carried over by [`StreamingAlgorithm::restore_state`]:
+    /// the resumed-from run's reported queries. Added to stats and — like
+    /// the oracle's own counter — deliberately *not* cleared by `reset`,
+    /// so accounting stays identical to a run that never paused even when
+    /// a drift re-selection follows a resume.
+    restored_queries: u64,
     /// Scratch for `process_batch` gain panels.
     gain_buf: Vec<f64>,
     peak_stored: usize,
@@ -118,6 +125,7 @@ impl ThreeSieves {
             elements: 0,
             extra_queries: 0,
             speculative_queries: 0,
+            restored_queries: 0,
             gain_buf: Vec::new(),
             peak_stored: 0,
         };
@@ -343,7 +351,7 @@ impl StreamingAlgorithm for ThreeSieves {
 
     fn stats(&self) -> AlgoStats {
         AlgoStats {
-            queries: (self.oracle.queries() + self.extra_queries)
+            queries: (self.oracle.queries() + self.extra_queries + self.restored_queries)
                 .saturating_sub(self.speculative_queries),
             elements: self.elements,
             stored: self.oracle.len(),
@@ -368,6 +376,116 @@ impl StreamingAlgorithm for ThreeSieves {
             let m = self.oracle.max_singleton_value();
             self.rebuild_grid(m);
         }
+    }
+
+    /// The full resumable state beyond the summary, in O(1) space: the
+    /// remaining grid is always a *prefix* of `threshold_grid(ε, m,
+    /// hi_scale·K·m)` (thresholds pop from the back and only whole-grid
+    /// rebuilds replace it), so its length plus the grid inputs — all of
+    /// which survive the JSON text roundtrip bit-for-bit — reconstruct it
+    /// exactly. `queries` stores the *reported* stat; `restore_state`
+    /// rebases the oracle's counter against it so accounting continues
+    /// seamlessly across the pause.
+    fn snapshot_state(&self) -> Option<Json> {
+        if !self.v.is_finite() {
+            // m estimation before the first element: nothing to resume yet
+            // (and infinity does not survive JSON).
+            return None;
+        }
+        Some(Json::obj(vec![
+            ("algo", Json::str("three-sieves")),
+            ("k", Json::num(self.k as f64)),
+            ("dim", Json::num(self.oracle.dim() as f64)),
+            ("epsilon", Json::num(self.epsilon)),
+            ("hi_scale", Json::num(self.hi_scale)),
+            ("t_budget", Json::num(self.t_budget as f64)),
+            ("estimate_m", Json::Bool(self.estimate_m)),
+            ("m", Json::num(self.m)),
+            ("grid_len", Json::num(self.grid.len() as f64)),
+            ("v", Json::num(self.v)),
+            ("t", Json::num(self.t as f64)),
+            ("elements", Json::num(self.elements as f64)),
+            ("queries", Json::num(self.stats().queries as f64)),
+            ("peak_stored", Json::num(self.peak_stored as f64)),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json, summary: &[f32]) -> Result<(), String> {
+        let field = |name: &str| {
+            state.get(name).as_f64().ok_or_else(|| format!("checkpoint state missing {name:?}"))
+        };
+        if state.get("algo").as_str() != Some("three-sieves") {
+            return Err(format!(
+                "checkpoint state is for {:?}, not three-sieves",
+                state.get("algo").as_str().unwrap_or("?")
+            ));
+        }
+        let same = |name: &str, mine: f64| -> Result<(), String> {
+            let theirs = field(name)?;
+            if theirs.to_bits() != mine.to_bits() {
+                return Err(format!("checkpoint {name} = {theirs} != configured {mine}"));
+            }
+            Ok(())
+        };
+        same("k", self.k as f64)?;
+        same("dim", self.oracle.dim() as f64)?;
+        same("epsilon", self.epsilon)?;
+        same("hi_scale", self.hi_scale)?;
+        same("t_budget", self.t_budget as f64)?;
+        if state.get("estimate_m").as_bool() != Some(self.estimate_m) {
+            return Err("checkpoint m-estimation mode differs from configured".into());
+        }
+        let d = self.oracle.dim();
+        if summary.len() % d != 0 || summary.len() / d > self.k {
+            return Err(format!(
+                "checkpoint summary has {} floats, not <= {}x{d} rows",
+                summary.len(),
+                self.k
+            ));
+        }
+        // Extract and validate EVERY field before touching any state: a
+        // blob that fails mid-way (truncated, version-skewed) must leave
+        // this instance exactly as it was, so callers can fall back to a
+        // fresh start without inheriting a half-restored algorithm.
+        let m = field("m")?;
+        if !(m.is_finite() && m > 0.0) {
+            return Err(format!("checkpoint m = {m} is not a positive finite value"));
+        }
+        let grid_len = field("grid_len")? as usize;
+        let v = field("v")?;
+        let t = field("t")? as usize;
+        let elements = field("elements")? as u64;
+        let peak_stored = field("peak_stored")? as usize;
+        let queries = field("queries")? as u64;
+        let mut grid = threshold_grid(self.epsilon, m, self.hi_scale * self.k as f64 * m);
+        if grid_len > grid.len() {
+            return Err(format!("checkpoint grid_len {grid_len} exceeds full grid {}", grid.len()));
+        }
+        grid.truncate(grid_len);
+
+        // Replay the summary through a fresh oracle: accepting the same
+        // rows in the same (insertion) order reproduces the incremental
+        // Cholesky state bit-for-bit.
+        self.oracle.reset();
+        for row in summary.chunks_exact(d) {
+            self.oracle.accept(row);
+        }
+        self.m = m;
+        self.grid = grid;
+        self.v = v;
+        self.t = t;
+        self.elements = elements;
+        self.peak_stored = peak_stored.max(self.oracle.len());
+        // Rebase accounting: reported queries = oracle + extra + restored −
+        // speculative. Cancel the replay's oracle charges and carry the
+        // checkpointed total in `restored_queries` (NOT `extra_queries`,
+        // which a drift `reset` clears), so stats() continues exactly
+        // where the paused run left off — including across later resets.
+        self.speculative_queries = self.oracle.queries();
+        self.extra_queries = 0;
+        self.restored_queries = queries;
+        self.gain_buf.clear();
+        Ok(())
     }
 }
 
@@ -526,5 +644,143 @@ mod tests {
     fn name_includes_t() {
         let algo = ThreeSieves::new(testkit::oracle(3), 3, 0.1, SieveTuning::FixedT(42));
         assert_eq!(algo.name(), "ThreeSieves(T=42)");
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        let ds = testkit::clustered(2000, 11);
+        let k = 6;
+        let build = || ThreeSieves::new(testkit::oracle(k), k, 0.01, SieveTuning::FixedT(80));
+        let mut whole = build();
+        let mut first = build();
+        let half = ds.len() / 2;
+        for i in 0..half {
+            whole.process(ds.row(i));
+            first.process(ds.row(i));
+        }
+        // Snapshot → JSON text → parse → restore into a fresh instance:
+        // the same roundtrip a checkpoint file performs.
+        let state = first.snapshot_state().expect("exact-m ThreeSieves is resumable");
+        let text = state.to_string();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let summary = first.summary();
+        let mut resumed = build();
+        resumed.restore_state(&parsed, &summary).unwrap();
+        assert_eq!(resumed.value().to_bits(), first.value().to_bits());
+        assert_eq!(resumed.stats(), first.stats());
+        assert_eq!(resumed.active_threshold().to_bits(), first.active_threshold().to_bits());
+        assert_eq!(resumed.grid_remaining(), first.grid_remaining());
+        for i in half..ds.len() {
+            whole.process(ds.row(i));
+            resumed.process(ds.row(i));
+        }
+        assert_eq!(resumed.value().to_bits(), whole.value().to_bits());
+        assert_eq!(resumed.summary(), whole.summary());
+        assert_eq!(resumed.stats(), whole.stats());
+    }
+
+    #[test]
+    fn snapshot_restore_survives_batched_continuation() {
+        let ds = testkit::clustered(1600, 12);
+        let k = 5;
+        let build = || ThreeSieves::new(testkit::oracle(k), k, 0.02, SieveTuning::FixedT(60));
+        let d = testkit::DIM;
+        let half = ds.len() / 2 * d;
+        let mut whole = build();
+        let mut first = build();
+        for chunk in ds.raw()[..half].chunks(37 * d) {
+            whole.process_batch(chunk);
+            first.process_batch(chunk);
+        }
+        let state = first.snapshot_state().unwrap();
+        let mut resumed = build();
+        resumed.restore_state(&state, &first.summary()).unwrap();
+        for chunk in ds.raw()[half..].chunks(37 * d) {
+            whole.process_batch(chunk);
+            resumed.process_batch(chunk);
+        }
+        assert_eq!(resumed.value().to_bits(), whole.value().to_bits());
+        assert_eq!(resumed.summary(), whole.summary());
+        assert_eq!(resumed.stats(), whole.stats());
+    }
+
+    #[test]
+    fn resume_then_reset_keeps_query_accounting() {
+        // A drift re-selection after a resume must not drop the pre-pause
+        // query count: the restored baseline survives reset() exactly like
+        // the oracle's own cumulative counter does.
+        let ds = testkit::clustered(1200, 14);
+        let k = 5;
+        let build = || ThreeSieves::new(testkit::oracle(k), k, 0.02, SieveTuning::FixedT(40));
+        let mut whole = build();
+        let mut first = build();
+        let half = ds.len() / 2;
+        for i in 0..half {
+            whole.process(ds.row(i));
+            first.process(ds.row(i));
+        }
+        let mut resumed = build();
+        resumed.restore_state(&first.snapshot_state().unwrap(), &first.summary()).unwrap();
+        // Drift fires on both timelines right after the pause point.
+        whole.reset();
+        resumed.reset();
+        for i in half..ds.len() {
+            whole.process(ds.row(i));
+            resumed.process(ds.row(i));
+        }
+        assert_eq!(resumed.value().to_bits(), whole.value().to_bits());
+        assert_eq!(resumed.summary(), whole.summary());
+        assert_eq!(resumed.stats(), whole.stats(), "query accounting must survive reset");
+    }
+
+    #[test]
+    fn failed_restore_leaves_state_untouched() {
+        let ds = testkit::clustered(400, 13);
+        let k = 4;
+        let mut algo = ThreeSieves::new(testkit::oracle(k), k, 0.05, SieveTuning::FixedT(20));
+        for i in 0..ds.len() {
+            algo.process(ds.row(i));
+        }
+        let before_value = algo.value().to_bits();
+        let before_stats = algo.stats();
+        let before_thresh = algo.active_threshold().to_bits();
+        // A blob that passes the config checks but is missing "v" (e.g.
+        // version skew) must fail cleanly, not half-restore.
+        let text = algo.snapshot_state().unwrap().to_string().replace("\"v\":", "\"v_gone\":");
+        let broken = crate::util::json::Json::parse(&text).unwrap();
+        let summary = algo.summary();
+        assert!(algo.restore_state(&broken, &summary).is_err());
+        assert_eq!(algo.value().to_bits(), before_value, "value must be untouched");
+        assert_eq!(algo.stats(), before_stats, "accounting must be untouched");
+        assert_eq!(algo.active_threshold().to_bits(), before_thresh);
+        // And the instance still works.
+        algo.process(ds.row(0));
+        assert_eq!(algo.stats().elements, before_stats.elements + 1);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_configuration() {
+        let k = 4;
+        let mut donor = ThreeSieves::new(testkit::oracle(k), k, 0.1, SieveTuning::FixedT(10));
+        let item = vec![0.3f32; testkit::DIM];
+        donor.process(&item);
+        let state = donor.snapshot_state().unwrap();
+        let summary = donor.summary();
+        // Different K.
+        let mut other = ThreeSieves::new(testkit::oracle(5), 5, 0.1, SieveTuning::FixedT(10));
+        assert!(other.restore_state(&state, &summary).is_err());
+        // Different epsilon.
+        let mut other = ThreeSieves::new(testkit::oracle(k), k, 0.2, SieveTuning::FixedT(10));
+        assert!(other.restore_state(&state, &summary).is_err());
+        // Different T budget.
+        let mut other = ThreeSieves::new(testkit::oracle(k), k, 0.1, SieveTuning::FixedT(11));
+        assert!(other.restore_state(&state, &summary).is_err());
+        // Ragged summary payload.
+        let mut other = ThreeSieves::new(testkit::oracle(k), k, 0.1, SieveTuning::FixedT(10));
+        assert!(other.restore_state(&state, &summary[..testkit::DIM - 1]).is_err());
+        // Matching configuration still restores.
+        let mut ok = ThreeSieves::new(testkit::oracle(k), k, 0.1, SieveTuning::FixedT(10));
+        ok.restore_state(&state, &summary).unwrap();
+        assert_eq!(ok.value().to_bits(), donor.value().to_bits());
     }
 }

@@ -104,6 +104,79 @@ pub struct ExperimentConfig {
     pub out_dir: String,
 }
 
+/// Multi-tenant streaming service limits and knobs (see
+/// [`crate::service`]). JSON-loadable alongside [`ExperimentConfig`] so a
+/// deployment can be checked into `configs/` and passed to `serve`.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Admission control: maximum concurrently open sessions.
+    pub max_sessions: usize,
+    /// Admission control: cap on the total stored-element *reservation*,
+    /// Σ K over open sessions — each session's memory contract is at most
+    /// `K` stored elements (`K·d` f32s), so this bounds worst-case service
+    /// memory regardless of how full individual summaries are.
+    pub max_total_stored: usize,
+    /// Sessions idle longer than this are checkpoint-evicted by the LRU
+    /// sweep (zero disables idle eviction).
+    pub idle_timeout: std::time::Duration,
+    /// Where evicted/closed sessions persist their checkpoints (`<id>.ckpt`
+    /// per session); `None` disables persistence — eviction then discards.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Connection-handler fan-out: the accept loop dispatches each
+    /// connection onto this worker pool (`off` = one dedicated thread per
+    /// connection instead).
+    pub parallelism: Parallelism,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_sessions: 1024,
+            max_total_stored: 1 << 20,
+            idle_timeout: std::time::Duration::from_secs(300),
+            checkpoint_dir: None,
+            parallelism: Parallelism::Off,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn from_json_text(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text).map_err(|e: JsonError| e.to_string())?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let d = ServiceConfig::default();
+        let idle_timeout = match j.get("idle_timeout_s").as_f64() {
+            // try_from_secs_f64 rejects negative/NaN/overflowing values
+            // instead of panicking like from_secs_f64 does.
+            Some(s) => std::time::Duration::try_from_secs_f64(s)
+                .map_err(|e| format!("idle_timeout_s = {s}: {e}"))?,
+            None => d.idle_timeout,
+        };
+        let pj = j.get("parallelism");
+        let parallelism = if let Some(s) = pj.as_str() {
+            Parallelism::parse(s)?
+        } else if let Some(n) = pj.as_usize() {
+            Parallelism::parse(&n.to_string())?
+        } else {
+            d.parallelism
+        };
+        Ok(ServiceConfig {
+            max_sessions: j.get("max_sessions").as_usize().unwrap_or(d.max_sessions).max(1),
+            max_total_stored: j
+                .get("max_total_stored")
+                .as_usize()
+                .unwrap_or(d.max_total_stored)
+                .max(1),
+            idle_timeout,
+            checkpoint_dir: j.get("checkpoint_dir").as_str().map(std::path::PathBuf::from),
+            parallelism,
+        })
+    }
+}
+
 impl ExperimentConfig {
     pub fn from_json_text(text: &str) -> Result<Self, String> {
         let j = Json::parse(text).map_err(|e: JsonError| e.to_string())?;
@@ -225,6 +298,35 @@ mod tests {
         assert_eq!(cfg.batch_size, 64);
         let cfg = ExperimentConfig::from_json_text(r#"{"batch_size": 0}"#).unwrap();
         assert_eq!(cfg.batch_size, 1);
+    }
+
+    #[test]
+    fn service_config_defaults_and_parsing() {
+        let d = ServiceConfig::default();
+        assert_eq!(d.max_sessions, 1024);
+        assert!(d.checkpoint_dir.is_none());
+        let cfg = ServiceConfig::from_json_text(
+            r#"{
+              "max_sessions": 8,
+              "max_total_stored": 256,
+              "idle_timeout_s": 1.5,
+              "checkpoint_dir": "/tmp/svc",
+              "parallelism": 4
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.max_sessions, 8);
+        assert_eq!(cfg.max_total_stored, 256);
+        assert!((cfg.idle_timeout.as_secs_f64() - 1.5).abs() < 1e-9);
+        assert_eq!(cfg.checkpoint_dir.as_deref(), Some(std::path::Path::new("/tmp/svc")));
+        assert_eq!(cfg.parallelism, Parallelism::Threads(4));
+        assert!(ServiceConfig::from_json_text(r#"{"idle_timeout_s": -1}"#).is_err());
+        // Finite-but-overflowing values must error, not panic.
+        assert!(ServiceConfig::from_json_text(r#"{"idle_timeout_s": 1e30}"#).is_err());
+        // Zero caps floor at one (a service with no admissible session is
+        // a config error, not a valid deployment).
+        let cfg = ServiceConfig::from_json_text(r#"{"max_sessions": 0}"#).unwrap();
+        assert_eq!(cfg.max_sessions, 1);
     }
 
     #[test]

@@ -3,6 +3,11 @@
 //! services) can load the latest summary without touching the pipeline.
 //!
 //! Format: a small JSON header line, then row-major little-endian f32s.
+//!
+//! Saves are **atomic**: the bytes go to a `<path>.tmp` sibling first and
+//! are renamed over the target only after a successful `sync_all`, so a
+//! crash or eviction mid-write can never leave a torn checkpoint for a
+//! reader (or the service's re-`OPEN` resume path) to trip over.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -20,6 +25,11 @@ pub struct Checkpoint {
     pub elements: u64,
     /// Drift events observed so far.
     pub drift_events: usize,
+    /// Opaque resumable-algorithm state
+    /// ([`StreamingAlgorithm::snapshot_state`](crate::algorithms::StreamingAlgorithm::snapshot_state)),
+    /// or [`Json::Null`] when the algorithm is not resumable — the summary
+    /// alone still loads everywhere a plain summary artifact is expected.
+    pub state: Json,
     /// Row-major `n × dim` summary features.
     pub summary: Vec<f32>,
 }
@@ -76,10 +86,23 @@ impl Checkpoint {
             ("value", Json::num(self.value)),
             ("elements", Json::num(self.elements as f64)),
             ("drift_events", Json::num(self.drift_events as f64)),
+            ("state", self.state.clone()),
             ("rows", Json::num(self.summary_len() as f64)),
         ])
         .to_string();
-        let tmp = path.with_extension("tmp");
+        // Append `.tmp` to the *whole* file name rather than replacing the
+        // extension: `with_extension` would map both `a.1.ckpt` and
+        // `a.2.ckpt` onto `a.tmp`, so two concurrent saves of *different*
+        // checkpoints (the service evicts many sessions into one
+        // directory) could clobber each other's staging file.
+        let tmp = match path.file_name() {
+            Some(name) => {
+                let mut tmp_name = name.to_os_string();
+                tmp_name.push(".tmp");
+                path.with_file_name(tmp_name)
+            }
+            None => path.with_extension("tmp"),
+        };
         {
             let mut f = std::fs::File::create(&tmp)?;
             f.write_all(MAGIC)?;
@@ -134,6 +157,8 @@ impl Checkpoint {
             value: j.get("value").as_f64().unwrap_or(0.0),
             elements: j.get("elements").as_f64().unwrap_or(0.0) as u64,
             drift_events: j.get("drift_events").as_usize().unwrap_or(0),
+            // Absent in pre-state checkpoints; Null = summary-only.
+            state: j.get("state").clone(),
             summary,
         })
     }
@@ -155,6 +180,7 @@ mod tests {
             value: 2.5,
             elements: 1000,
             drift_events: 2,
+            state: Json::Null,
             summary: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
         }
     }
@@ -201,5 +227,45 @@ mod tests {
         let back = Checkpoint::load(&p).unwrap();
         assert_eq!(back.summary_len(), 0);
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn state_blob_roundtrips_exactly() {
+        let p = tmp("state");
+        let mut ck = sample();
+        // Non-integral f64s must survive bit-for-bit (resume depends on it).
+        ck.state = Json::obj(vec![
+            ("v", Json::num(0.123456789012345678)),
+            ("grid_len", Json::num(1234.0)),
+            ("m", Json::num(std::f64::consts::LN_2 / 2.0)),
+        ]);
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, ck);
+        let (a, b) = (back.state.get("v").as_f64().unwrap(), ck.state.get("v").as_f64().unwrap());
+        assert_eq!(a.to_bits(), b.to_bits());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn stateless_checkpoint_loads_with_null_state() {
+        let p = tmp("nullstate");
+        sample().save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap().state, Json::Null);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn staging_file_appends_tmp_to_full_name() {
+        // Dotted file names must not collide on a shared `.tmp` stem: the
+        // staging path is `<full name>.tmp`, and it is gone after save.
+        let dir = std::env::temp_dir().join(format!("ts_ckpt_tmpdir_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = dir.join("sess.a.ckpt");
+        sample().save(&a).unwrap();
+        assert!(a.exists());
+        assert!(!dir.join("sess.a.ckpt.tmp").exists(), "staging file must be renamed away");
+        assert!(!dir.join("sess.tmp").exists(), "must not use with_extension-style staging");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

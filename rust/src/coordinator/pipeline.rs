@@ -213,6 +213,10 @@ impl StreamPipeline {
             value: algo.value(),
             elements: items,
             drift_events: drift.events(),
+            // Resumable algorithms (ThreeSieves) embed their full run
+            // state so a restart can continue bit-identically; for the
+            // rest the checkpoint stays a summary artifact.
+            state: algo.snapshot_state().unwrap_or(crate::util::json::Json::Null),
             summary: algo.summary(),
         };
         ck.save(path).map_err(|e| std::io::Error::other(e.to_string()))

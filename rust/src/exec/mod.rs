@@ -174,6 +174,14 @@ impl ExecContext {
         }
     }
 
+    /// A shared handle to the underlying pool, if one is attached. The
+    /// service's accept loop uses this to [`WorkerPool::spawn`] detached
+    /// connection handlers; `None` means the caller should fall back to
+    /// dedicated threads (or inline execution).
+    pub fn pool_handle(&self) -> Option<Arc<WorkerPool>> {
+        self.pool.clone()
+    }
+
     /// Worker-thread count (1 = sequential).
     pub fn threads(&self) -> usize {
         self.pool.as_ref().map(|p| p.threads()).unwrap_or(1)

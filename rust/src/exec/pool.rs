@@ -75,6 +75,27 @@ impl WorkerPool {
         self.threads
     }
 
+    /// Fire-and-forget: queue `job` for execution on a pool worker and
+    /// return immediately. Unlike the scoped calls there is no completion
+    /// latch — the job must own its data (`'static`) and the caller learns
+    /// about completion through whatever channel the job itself provides.
+    ///
+    /// This is the service's connection-dispatch primitive: each accepted
+    /// TCP connection becomes one queued job, so at most `threads()`
+    /// connections are served concurrently and the rest wait in the
+    /// injector queue (admission control by pool size). Panics inside the
+    /// job are caught and discarded so a misbehaving connection can never
+    /// kill a worker thread out from under the scoped calls.
+    pub fn spawn<F>(&self, job: F)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let guarded: Job = Box::new(move || {
+            let _ = catch_unwind(AssertUnwindSafe(job));
+        });
+        self.injector.send(guarded).expect("worker pool has shut down");
+    }
+
     /// Run `f(0..tasks)` across the pool and block until all calls have
     /// returned. Each index is claimed by exactly one worker; at most
     /// `threads` run concurrently. Panics inside `f` are re-raised here
@@ -266,6 +287,26 @@ mod tests {
         let mut items = vec![0usize; 8];
         pool.for_each_mut(&mut items, |i, v| *v = i);
         assert_eq!(items[7], 7);
+    }
+
+    #[test]
+    fn spawn_runs_detached_jobs_and_survives_panics() {
+        use std::sync::mpsc::channel;
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = channel();
+        // A panicking detached job must not take a worker down...
+        pool.spawn(|| panic!("connection handler exploded"));
+        for i in 0..8 {
+            let tx = tx.clone();
+            pool.spawn(move || tx.send(i).unwrap());
+        }
+        let mut got: Vec<i32> = (0..8).map(|_| rx.recv().unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+        // ...and the scoped calls still work afterwards.
+        let mut items = vec![0usize; 4];
+        pool.for_each_mut(&mut items, |i, v| *v = i + 1);
+        assert_eq!(items, vec![1, 2, 3, 4]);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the streaming coordinator: algorithms, stream
-//!   sources, batching, backpressure, drift-triggered re-selection, metrics
-//!   and the experiment harness reproducing every table/figure.
+//!   sources, batching, backpressure, drift-triggered re-selection, metrics,
+//!   the experiment harness reproducing every table/figure, and the
+//!   multi-tenant [`service`] (session manager + line-protocol TCP server)
+//!   that hosts many independent streams per process.
 //! * **L2 (`python/compile/model.py`)** — the submodular gain oracle
 //!   (`Δf(e|S)` for the IVM log-determinant) as a JAX graph, AOT-lowered to
 //!   HLO text at build time (`make artifacts`).
@@ -48,6 +50,7 @@ pub mod functions;
 pub mod kernels;
 pub mod metrics;
 pub mod runtime;
+pub mod service;
 pub mod util;
 
 /// Convenience re-exports for the common workflow.

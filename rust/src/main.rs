@@ -23,8 +23,64 @@ use threesieves::experiments::GammaMode;
 use threesieves::experiments::{table1, table2};
 
 mod cli {
-    //! Minimal `--flag value` argument parser.
+    //! Minimal `--flag value` argument parser with a per-command flag
+    //! registry: unknown flags are rejected with a "did you mean" hint
+    //! (typos like `--bacth-size` used to pass silently), and value flags
+    //! consume the next token when it is not `--`-prefixed — so negative
+    //! numbers (`--drift-threshold -3.0`) parse as values, while any
+    //! `--` token in value position is caught as a missing value.
     use std::collections::BTreeMap;
+
+    /// One legal flag: a `--name <value>` pair or a bare `--name` switch.
+    #[derive(Clone, Copy)]
+    pub struct FlagDef {
+        pub name: &'static str,
+        pub takes_value: bool,
+    }
+
+    /// A value-taking flag.
+    pub const fn val(name: &'static str) -> FlagDef {
+        FlagDef { name, takes_value: true }
+    }
+
+    /// A boolean switch.
+    pub const fn switch(name: &'static str) -> FlagDef {
+        FlagDef { name, takes_value: false }
+    }
+
+    /// Edit distance for the "did you mean" hint.
+    fn levenshtein(a: &str, b: &str) -> usize {
+        let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+        let mut prev: Vec<usize> = (0..=b.len()).collect();
+        let mut cur = vec![0usize; b.len() + 1];
+        for (i, &ca) in a.iter().enumerate() {
+            cur[0] = i + 1;
+            for (j, &cb) in b.iter().enumerate() {
+                let sub = prev[j] + usize::from(ca != cb);
+                cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        prev[b.len()]
+    }
+
+    fn unknown_flag(name: &str, spec: &[FlagDef]) -> String {
+        let best = spec
+            .iter()
+            .map(|d| (levenshtein(name, d.name), d.name))
+            .min()
+            .filter(|&(dist, _)| dist <= 2.max(name.len() / 3));
+        match best {
+            Some((_, suggestion)) => {
+                format!("unknown flag --{name}; did you mean --{suggestion}?")
+            }
+            None => {
+                let known: Vec<String> =
+                    spec.iter().map(|d| format!("--{}", d.name)).collect();
+                format!("unknown flag --{name} (expected one of: {})", known.join(" "))
+            }
+        }
+    }
 
     pub struct Args {
         pub positional: Vec<String>,
@@ -32,20 +88,48 @@ mod cli {
     }
 
     impl Args {
-        pub fn parse(argv: &[String]) -> Result<Self, String> {
+        pub fn parse(argv: &[String], spec: &[FlagDef]) -> Result<Self, String> {
             let mut positional = Vec::new();
             let mut flags = BTreeMap::new();
             let mut i = 0;
             while i < argv.len() {
                 let a = &argv[i];
                 if let Some(name) = a.strip_prefix("--") {
-                    if let Some((k, v)) = name.split_once('=') {
-                        flags.insert(k.to_string(), v.to_string());
-                    } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                        flags.insert(name.to_string(), argv[i + 1].clone());
-                        i += 1;
-                    } else {
-                        flags.insert(name.to_string(), "true".to_string());
+                    let (key, inline) = match name.split_once('=') {
+                        Some((k, v)) => (k, Some(v.to_string())),
+                        None => (name, None),
+                    };
+                    let def = spec
+                        .iter()
+                        .find(|d| d.name == key)
+                        .ok_or_else(|| unknown_flag(key, spec))?;
+                    let value = match (def.takes_value, inline) {
+                        (true, Some(v)) => v,
+                        (true, None) => {
+                            // A value flag consumes the next token even when
+                            // it starts with a single '-' (negative numbers).
+                            // Any '--'-prefixed token in value position means
+                            // the value was forgotten — including typo'd
+                            // flags, which must hit the did-you-mean path,
+                            // not become a directory called "--qick".
+                            let next = argv.get(i + 1).ok_or_else(|| {
+                                format!("flag --{key} requires a value")
+                            })?;
+                            if next.starts_with("--") {
+                                return Err(format!(
+                                    "flag --{key} requires a value (got flag {next})"
+                                ));
+                            }
+                            i += 1;
+                            next.clone()
+                        }
+                        (false, Some(_)) => {
+                            return Err(format!("flag --{key} does not take a value"))
+                        }
+                        (false, None) => "true".to_string(),
+                    };
+                    if flags.insert(key.to_string(), value).is_some() {
+                        return Err(format!("flag --{key} given twice"));
                     }
                 } else {
                     positional.push(a.clone());
@@ -89,14 +173,25 @@ mod cli {
     mod tests {
         use super::*;
 
-        fn parse(s: &str) -> Args {
+        const SPEC: &[FlagDef] = &[
+            val("n"),
+            val("out"),
+            val("k"),
+            val("epsilon"),
+            val("seed"),
+            val("batch-size"),
+            val("drift-threshold"),
+            switch("quick"),
+        ];
+
+        fn parse(s: &str) -> Result<Args, String> {
             let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
-            Args::parse(&argv).unwrap()
+            Args::parse(&argv, SPEC)
         }
 
         #[test]
         fn positional_and_flags() {
-            let a = parse("experiment fig1 --n 500 --out results --quick");
+            let a = parse("experiment fig1 --n 500 --out results --quick").unwrap();
             assert_eq!(a.positional, vec!["experiment", "fig1"]);
             assert_eq!(a.get("n"), Some("500"));
             assert_eq!(a.get("out"), Some("results"));
@@ -106,30 +201,70 @@ mod cli {
 
         #[test]
         fn equals_syntax() {
-            let a = parse("run --k=20 --epsilon=0.01");
+            let a = parse("run --k=20 --epsilon=0.01").unwrap();
             assert_eq!(a.get_usize("k", 0).unwrap(), 20);
             assert!((a.get_f64("epsilon", 0.0).unwrap() - 0.01).abs() < 1e-12);
         }
 
         #[test]
         fn defaults_apply() {
-            let a = parse("run");
+            let a = parse("run").unwrap();
             assert_eq!(a.get_usize("n", 77).unwrap(), 77);
             assert_eq!(a.get_u64("seed", 9).unwrap(), 9);
         }
 
         #[test]
         fn bad_numbers_error() {
-            let a = parse("run --n abc");
+            let a = parse("run --n abc").unwrap();
             assert!(a.get_usize("n", 0).is_err());
         }
 
         #[test]
         fn boolean_flag_before_flag() {
             // --quick followed by another flag must not eat it as a value.
-            let a = parse("x --quick --n 5");
+            let a = parse("x --quick --n 5").unwrap();
             assert!(a.has("quick"));
             assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        }
+
+        #[test]
+        fn unknown_flag_suggests_nearest() {
+            let err = parse("run --bacth-size 64").unwrap_err();
+            assert!(err.contains("did you mean --batch-size"), "{err}");
+            let err = parse("run --zzzzzzzz 1").unwrap_err();
+            assert!(err.contains("expected one of"), "{err}");
+        }
+
+        #[test]
+        fn negative_numbers_are_values() {
+            let a = parse("serve --drift-threshold -3.0").unwrap();
+            assert!((a.get_f64("drift-threshold", 0.0).unwrap() + 3.0).abs() < 1e-12);
+            let a = parse("serve --drift-threshold=-3.0").unwrap();
+            assert!((a.get_f64("drift-threshold", 0.0).unwrap() + 3.0).abs() < 1e-12);
+        }
+
+        #[test]
+        fn missing_values_are_caught() {
+            let err = parse("run --n").unwrap_err();
+            assert!(err.contains("requires a value"), "{err}");
+            // Any '--' token in value position means the value was
+            // forgotten — known flag or typo alike.
+            let err = parse("run --out --quick").unwrap_err();
+            assert!(err.contains("requires a value"), "{err}");
+            let err = parse("run --out --qick").unwrap_err();
+            assert!(err.contains("requires a value"), "{err}");
+        }
+
+        #[test]
+        fn switch_with_value_rejected() {
+            let err = parse("run --quick=yes").unwrap_err();
+            assert!(err.contains("does not take a value"), "{err}");
+        }
+
+        #[test]
+        fn duplicate_flags_rejected() {
+            let err = parse("run --n 1 --n 2").unwrap_err();
+            assert!(err.contains("given twice"), "{err}");
         }
     }
 }
@@ -143,9 +278,13 @@ USAGE:
                         [--batch-size B] [--threads off|auto|N]
   threesieves experiment <table1|table2|fig1|fig2|fig3|ablations> [--n N] [--out DIR] [--quick]
   threesieves experiment custom --config <file.json> [--stream]
-  threesieves serve     --dataset <name> --n <N> --k <K>
+  threesieves serve     --listen ADDR[:PORT]          (multi-tenant network service)
+                        [--config FILE] [--max-sessions N] [--max-stored N]
+                        [--idle-timeout SECS] [--checkpoint-dir DIR]
+                        [--checkpoint-secs S] [--threads off|auto|N] [--max-seconds S]
+  threesieves serve     --local --dataset <name> --n <N> --k <K>
                         [--drift-window W] [--drift-threshold X] [--checkpoint PATH]
-                        [--batch-size B] [--threads off|auto|N]
+                        [--batch-size B] [--threads off|auto|N]   (single-stream demo)
   threesieves pjrt-info [--artifacts DIR] [--config NAME]
   threesieves datasets
 
@@ -155,7 +294,11 @@ Algorithms (--algo): greedy | random | isi | stream-greedy | preemption |
 
 --threads fans shard/sieve work out across a worker pool (pair with
 --batch-size); summaries, values and query counts are identical at every
-thread count.
+thread count. In network serve mode it sizes the connection-handler pool.
+
+The network service speaks a newline-delimited protocol (OPEN/PUSH/SUMMARY/
+STATS/CLOSE/METRICS) — see docs/protocol.md, or try:
+  printf 'PING\\n' | nc 127.0.0.1 7777
 ";
 
 fn main() -> ExitCode {
@@ -170,9 +313,89 @@ fn main() -> ExitCode {
     }
 }
 
+use cli::{switch, val, FlagDef};
+
+const SUMMARIZE_FLAGS: &[FlagDef] = &[
+    val("dataset"),
+    val("n"),
+    val("k"),
+    val("algo"),
+    val("epsilon"),
+    val("t"),
+    val("seed"),
+    val("nu"),
+    val("c"),
+    val("shards"),
+    switch("batch"),
+    val("batch-size"),
+    val("threads"),
+];
+
+const EXPERIMENT_FLAGS: &[FlagDef] = &[
+    val("n"),
+    val("out"),
+    val("k"),
+    val("seed"),
+    val("config"),
+    switch("quick"),
+    switch("stream"),
+];
+
+const SERVE_FLAGS: &[FlagDef] = &[
+    // Network service mode.
+    val("listen"),
+    val("config"),
+    val("max-sessions"),
+    val("max-stored"),
+    val("idle-timeout"),
+    val("checkpoint-dir"),
+    val("checkpoint-secs"),
+    val("max-seconds"),
+    // Single-stream demo mode.
+    switch("local"),
+    val("dataset"),
+    val("n"),
+    val("k"),
+    val("algo"),
+    val("epsilon"),
+    val("t"),
+    val("seed"),
+    val("nu"),
+    val("c"),
+    val("shards"),
+    val("drift-window"),
+    val("drift-threshold"),
+    val("checkpoint"),
+    val("checkpoint-every"),
+    val("channel"),
+    val("batch-size"),
+    switch("no-drift"),
+    switch("no-reselect"),
+    // Shared.
+    val("threads"),
+];
+
+const PJRT_FLAGS: &[FlagDef] = &[val("artifacts"), val("config")];
+const DATASETS_FLAGS: &[FlagDef] = &[switch("stats")];
+
 fn run(argv: &[String]) -> Result<(), String> {
-    let args = cli::Args::parse(argv)?;
-    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    if matches!(cmd, "help" | "--help" | "-h") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    if cmd.starts_with("--") {
+        return Err(format!("expected a command before flags, got {cmd:?}"));
+    }
+    let spec: &[FlagDef] = match cmd {
+        "summarize" => SUMMARIZE_FLAGS,
+        "experiment" => EXPERIMENT_FLAGS,
+        "serve" => SERVE_FLAGS,
+        "pjrt-info" => PJRT_FLAGS,
+        "datasets" => DATASETS_FLAGS,
+        other => return Err(format!("unknown command {other:?}")),
+    };
+    let args = cli::Args::parse(argv, spec)?;
     match cmd {
         "summarize" => cmd_summarize(&args),
         "experiment" => cmd_experiment(&args),
@@ -197,11 +420,7 @@ fn run(argv: &[String]) -> Result<(), String> {
             }
             Ok(())
         }
-        "help" | "--help" | "-h" => {
-            println!("{USAGE}");
-            Ok(())
-        }
-        other => Err(format!("unknown command {other:?}")),
+        _ => unreachable!("command validated when selecting its flag spec"),
     }
 }
 
@@ -323,6 +542,106 @@ fn cmd_experiment(args: &cli::Args) -> Result<(), String> {
 }
 
 fn cmd_serve(args: &cli::Args) -> Result<(), String> {
+    if let Some(listen) = args.get("listen") {
+        let listen = listen.to_string();
+        return cmd_serve_network(args, &listen);
+    }
+    if !args.has("local") && args.get("dataset").is_none() {
+        return Err("serve needs --listen ADDR (multi-tenant network service) or \
+                    --local --dataset NAME (single-stream demo)"
+            .into());
+    }
+    cmd_serve_local(args)
+}
+
+/// The multi-tenant network service: session manager + line-protocol TCP
+/// server (see `docs/protocol.md`). Runs until `--max-seconds` elapses or
+/// the process is killed; prints a metrics snapshot every 30s.
+fn cmd_serve_network(args: &cli::Args, listen: &str) -> Result<(), String> {
+    use threesieves::config::ServiceConfig;
+    use threesieves::service::Server;
+
+    // Limits come from `--config FILE` (JSON, see ServiceConfig::from_json)
+    // when given, defaults otherwise; explicit CLI flags override either.
+    let base = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("--config {path}: {e}"))?;
+            ServiceConfig::from_json_text(&text)?
+        }
+        None => ServiceConfig::default(),
+    };
+    let idle = args.get_f64("idle-timeout", base.idle_timeout.as_secs_f64())?;
+    let idle_timeout = std::time::Duration::try_from_secs_f64(idle)
+        .map_err(|e| format!("--idle-timeout {idle}: {e}"))?;
+    let cfg = ServiceConfig {
+        max_sessions: args.get_usize("max-sessions", base.max_sessions)?.max(1),
+        max_total_stored: args.get_usize("max-stored", base.max_total_stored)?.max(1),
+        idle_timeout,
+        checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from).or(base.checkpoint_dir),
+        parallelism: match args.get("threads") {
+            Some(v) => Parallelism::parse(v)?,
+            None => base.parallelism,
+        },
+    };
+    let max_seconds = args.get_f64("max-seconds", 0.0)?;
+    // Crash insurance: with persistence on, periodically checkpoint every
+    // live session in place (0 disables). A SIGKILL then loses at most
+    // this window — std has no signal handling, so a graceful Ctrl-C
+    // path cannot be promised; prefer --max-seconds for bounded runs.
+    let checkpoint_secs = args.get_f64("checkpoint-secs", 60.0)?;
+    let handle = Server::start(cfg.clone(), listen).map_err(|e| e.to_string())?;
+    println!("service listening on {}", handle.addr());
+    println!(
+        "limits: max-sessions={} max-stored={} idle-timeout={:.0}s checkpoint-dir={} threads={}",
+        cfg.max_sessions,
+        cfg.max_total_stored,
+        cfg.idle_timeout.as_secs_f64(),
+        cfg.checkpoint_dir
+            .as_deref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|| "off".into()),
+        cfg.parallelism,
+    );
+    let manager = handle.manager();
+    let started = std::time::Instant::now();
+    let mut last_report = std::time::Instant::now();
+    let mut last_checkpoint = std::time::Instant::now();
+    let sweep_checkpoints = cfg.checkpoint_dir.is_some()
+        && checkpoint_secs.is_finite()
+        && checkpoint_secs > 0.0;
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        if max_seconds > 0.0 && started.elapsed().as_secs_f64() >= max_seconds {
+            break;
+        }
+        if sweep_checkpoints && last_checkpoint.elapsed().as_secs_f64() >= checkpoint_secs {
+            manager.checkpoint_all();
+            last_checkpoint = std::time::Instant::now();
+        }
+        if last_report.elapsed().as_secs() >= 30 {
+            let m = manager.metrics();
+            println!(
+                "[{:>6.0}s] sessions={} stored={} items_total={} ({:.0} items/s) \
+                 evictions={} checkpoints={}",
+                m.uptime_s, m.sessions, m.stored, m.items_total, m.items_per_s, m.evictions,
+                m.checkpoints
+            );
+            last_report = std::time::Instant::now();
+        }
+    }
+    let m = handle.shutdown();
+    println!(
+        "shutdown: sessions={} items_total={} pushes={} opens={} resumes={} evictions={} \
+         checkpoints={}",
+        m.sessions, m.items_total, m.pushes, m.opens, m.resumes, m.evictions, m.checkpoints
+    );
+    Ok(())
+}
+
+/// The original single-stream serving demo (`--local`): one hard-coded
+/// dataset stream through one pipeline.
+fn cmd_serve_local(args: &cli::Args) -> Result<(), String> {
     let dataset = args.get("dataset").ok_or("--dataset required")?.to_string();
     let n = args.get_usize("n", 50_000)?;
     let k = args.get_usize("k", 20)?;

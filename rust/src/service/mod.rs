@@ -1,0 +1,31 @@
+//! The multi-tenant streaming service: thousands of independent
+//! summarization sessions in one process, each on the paper's fixed
+//! per-stream memory budget (at most `K` stored elements — `K·d` f32s —
+//! regardless of stream length), multiplexed behind a dependency-free
+//! newline-delimited TCP protocol.
+//!
+//! * [`sessions::SessionManager`] — tenant map, admission control, LRU
+//!   idle eviction with atomic checkpoint persistence, bit-identical
+//!   resume on re-`OPEN`, service-wide metrics.
+//! * [`protocol`] — the typed line protocol (`OPEN` / `PUSH` / `SUMMARY` /
+//!   `STATS` / `CLOSE` / `METRICS`), CSV or base64-packed f32 rows, `ERR`
+//!   replies with machine-readable codes. Grammar: `docs/protocol.md`.
+//! * [`server`] — std-only `TcpListener` accept loop dispatching
+//!   connections onto the [`exec`](crate::exec) worker pool, graceful
+//!   shutdown, plus the in-process [`server::Client`].
+//!
+//! Wire-level floats use shortest-roundtrip formatting, so summaries and
+//! values cross the network **bit-identically** — the integration suite
+//! (`rust/tests/service_integration.rs`) compares TCP tenants against
+//! standalone runs with exact equality.
+
+pub mod protocol;
+pub mod server;
+pub mod sessions;
+
+pub use protocol::{
+    ErrorCode, MetricsSnapshot, PushBody, PushReply, Request, Response, SessionSpec, StatsReply,
+    SummaryReply,
+};
+pub use server::{Client, ClientError, Server, ServerHandle};
+pub use sessions::{ServiceError, SessionManager};

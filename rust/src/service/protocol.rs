@@ -1,0 +1,961 @@
+//! The service's newline-delimited request/response protocol.
+//!
+//! Every request and every response is exactly one line of UTF-8 text —
+//! `nc`-friendly, dependency-free, and trivially framed. The full grammar
+//! lives in `docs/protocol.md`; the shape is:
+//!
+//! ```text
+//! OPEN <id> k=<K> dim=<D> [algo=<name>] [epsilon=<E>] [t=<T>] ... [drift=<W>:<TH>]
+//! PUSH <id> rows=<f32,..>[;<f32,..>...]          (CSV form)
+//! PUSH <id> raw=<base64 of little-endian f32s>   (packed form)
+//! SUMMARY <id> | STATS <id> | CLOSE <id> [discard] | METRICS | PING | QUIT
+//! ```
+//!
+//! Replies start with `OK <VERB>` or `ERR <code> <message>`. All floats are
+//! printed with Rust's shortest-roundtrip formatting, so a value crosses
+//! the wire **bit-identically** — the integration suite compares summaries
+//! fetched over TCP against in-process runs with exact equality.
+
+use crate::config::AlgoSpec;
+use crate::metrics::AlgoStats;
+
+/// Hard cap on one protocol line (requests and responses). The server
+/// closes connections that exceed it mid-line; at the default `dim`s this
+/// allows pushes of tens of thousands of rows per line.
+pub const MAX_LINE_BYTES: usize = 8 * 1024 * 1024;
+
+/// Machine-readable error class carried by `ERR` replies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed request line (unknown key, bad number, missing field).
+    BadRequest,
+    /// First token is not a known verb.
+    UnknownCommand,
+    /// Session id is not open.
+    NoSession,
+    /// Session id is already open.
+    Exists,
+    /// Admission refused: the session-count cap is reached.
+    SessionLimit,
+    /// Admission refused: the stored-element reservation cap is reached.
+    Capacity,
+    /// Pushed rows do not match the session's feature dimensionality.
+    DimMismatch,
+    /// Row payload failed to decode (CSV/base64).
+    BadRow,
+    /// Filesystem/network failure on the server side.
+    Io,
+    /// Server-side invariant failure.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad-request",
+            ErrorCode::UnknownCommand => "unknown-command",
+            ErrorCode::NoSession => "no-session",
+            ErrorCode::Exists => "exists",
+            ErrorCode::SessionLimit => "session-limit",
+            ErrorCode::Capacity => "capacity",
+            ErrorCode::DimMismatch => "dim-mismatch",
+            ErrorCode::BadRow => "bad-row",
+            ErrorCode::Io => "io",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> ErrorCode {
+        match s {
+            "bad-request" => ErrorCode::BadRequest,
+            "unknown-command" => ErrorCode::UnknownCommand,
+            "no-session" => ErrorCode::NoSession,
+            "exists" => ErrorCode::Exists,
+            "session-limit" => ErrorCode::SessionLimit,
+            "capacity" => ErrorCode::Capacity,
+            "dim-mismatch" => ErrorCode::DimMismatch,
+            "bad-row" => ErrorCode::BadRow,
+            "io" => ErrorCode::Io,
+            _ => ErrorCode::Internal,
+        }
+    }
+}
+
+/// What a tenant asks for at `OPEN` time: the algorithm family plus its
+/// per-session resource contract (`K` summary slots of `dim` f32s).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSpec {
+    pub algo: AlgoSpec,
+    pub dim: usize,
+    pub k: usize,
+    /// Optional per-session mean-shift drift detection `(window, threshold)`
+    /// — on a detected shift the session's summary is re-selected, exactly
+    /// like the single-stream pipeline.
+    pub drift: Option<(usize, f64)>,
+}
+
+impl SessionSpec {
+    /// A `three-sieves` session — the paper's O(K)-memory flagship and the
+    /// service default.
+    pub fn three_sieves(dim: usize, k: usize, epsilon: f64, t: usize) -> Self {
+        SessionSpec { algo: AlgoSpec::ThreeSieves { epsilon, t }, dim, k, drift: None }
+    }
+}
+
+/// Row payload of a `PUSH`, preserving how the client framed it so
+/// validation can distinguish "ragged CSV row" from "non-row-aligned blob".
+#[derive(Clone, Debug, PartialEq)]
+pub enum PushBody {
+    /// CSV form: one `Vec<f32>` per row; every row must match the session
+    /// `dim` exactly.
+    Rows(Vec<Vec<f32>>),
+    /// Packed form: a flat little-endian f32 blob; its length must be a
+    /// multiple of the session `dim`.
+    Packed(Vec<f32>),
+}
+
+impl PushBody {
+    /// Total f32 count (before dim validation).
+    pub fn floats(&self) -> usize {
+        match self {
+            PushBody::Rows(rows) => rows.iter().map(Vec::len).sum(),
+            PushBody::Packed(flat) => flat.len(),
+        }
+    }
+}
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Open { id: String, spec: SessionSpec },
+    Push { id: String, body: PushBody },
+    Summary { id: String },
+    Stats { id: String },
+    Close { id: String, discard: bool },
+    Metrics,
+    Ping,
+    Quit,
+}
+
+/// `PUSH` acknowledgment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PushReply {
+    pub rows: u64,
+    pub len: usize,
+    pub value: f64,
+    pub drift_events: usize,
+}
+
+/// `SUMMARY` payload: the session's current summary, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SummaryReply {
+    pub dim: usize,
+    pub value: f64,
+    pub data: Vec<f32>,
+}
+
+/// `STATS` payload: the paper's per-run resource accounting for one tenant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsReply {
+    pub stats: AlgoStats,
+    pub value: f64,
+    pub len: usize,
+    pub drift_events: usize,
+}
+
+/// `METRICS` payload: the service-wide snapshot. `items`/`queries`/`stored`
+/// aggregate the *live* sessions' [`AlgoStats`] (the acceptance invariant:
+/// they equal the sum of per-session `STATS`); the `*_total` counters are
+/// lifetime counts that survive session close/eviction.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub sessions: usize,
+    pub stored: usize,
+    pub items: u64,
+    pub queries: u64,
+    pub opens: u64,
+    pub resumes: u64,
+    pub pushes: u64,
+    pub items_total: u64,
+    pub evictions: u64,
+    pub closes: u64,
+    pub checkpoints: u64,
+    pub uptime_s: f64,
+    pub items_per_s: f64,
+}
+
+/// One response line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Opened { id: String, resumed: bool },
+    Pushed { id: String, reply: PushReply },
+    SummaryData { id: String, reply: SummaryReply },
+    StatsData { id: String, reply: StatsReply },
+    Closed { id: String, checkpointed: bool },
+    MetricsData(MetricsSnapshot),
+    Pong,
+    Bye,
+    Error { code: ErrorCode, message: String },
+}
+
+/// A session id: 1–64 chars of `[A-Za-z0-9._-]`. The charset keeps ids
+/// token-safe on the wire *and* path-safe as `<id>.ckpt` file names (no
+/// separators, no traversal).
+pub fn valid_id(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= 64
+        && s.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-'))
+}
+
+type ParseErr = (ErrorCode, String);
+
+fn bad(msg: impl Into<String>) -> ParseErr {
+    (ErrorCode::BadRequest, msg.into())
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T, ParseErr>
+where
+    T::Err: std::fmt::Display,
+{
+    v.parse().map_err(|e| bad(format!("{key}={v:?}: {e}")))
+}
+
+/// Key=value tail of an `OPEN` line.
+struct Params<'a> {
+    pairs: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> Params<'a> {
+    fn parse(tokens: &[&'a str], allowed: &[&str]) -> Result<Params<'a>, ParseErr> {
+        let mut pairs = Vec::with_capacity(tokens.len());
+        for tok in tokens {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| bad(format!("expected key=value, got {tok:?}")))?;
+            if !allowed.contains(&k) {
+                return Err(bad(format!("unknown parameter {k:?} (allowed: {allowed:?})")));
+            }
+            if pairs.iter().any(|&(seen, _)| seen == k) {
+                return Err(bad(format!("duplicate parameter {k:?}")));
+            }
+            pairs.push((k, v));
+        }
+        Ok(Params { pairs })
+    }
+
+    fn get(&self, key: &str) -> Option<&'a str> {
+        self.pairs.iter().find(|&&(k, _)| k == key).map(|&(_, v)| v)
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ParseErr>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => parse_num(key, v),
+        }
+    }
+
+    fn required<T: std::str::FromStr>(&self, key: &str) -> Result<T, ParseErr>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self.get(key).ok_or_else(|| bad(format!("missing required {key}=")))?;
+        parse_num(key, v)
+    }
+}
+
+const OPEN_KEYS: &[&str] =
+    &["k", "dim", "algo", "epsilon", "t", "seed", "shards", "nu", "c", "drift"];
+
+fn parse_open_spec(params: &Params<'_>) -> Result<SessionSpec, ParseErr> {
+    let dim: usize = params.required("dim")?;
+    let k: usize = params.required("k")?;
+    if dim == 0 || k == 0 {
+        return Err(bad("k and dim must be positive"));
+    }
+    let eps: f64 = params.num("epsilon", 0.001)?;
+    let t: usize = params.num("t", 1000)?;
+    let seed: u64 = params.num("seed", 42)?;
+    let algo = match params.get("algo").unwrap_or("three-sieves") {
+        "three-sieves" => AlgoSpec::ThreeSieves { epsilon: eps, t },
+        "sharded-three-sieves" => AlgoSpec::ShardedThreeSieves {
+            epsilon: eps,
+            t,
+            shards: params.num("shards", 4usize)?.max(1),
+        },
+        "sieve-streaming" => AlgoSpec::SieveStreaming { epsilon: eps },
+        "sieve-streaming-pp" => AlgoSpec::SieveStreamingPP { epsilon: eps },
+        // The service cannot know a tenant's stream length up front, so
+        // Salsa's length-hint rule is always off here.
+        "salsa" => AlgoSpec::Salsa { epsilon: eps, use_length_hint: false },
+        "quickstream" => {
+            AlgoSpec::QuickStream { c: params.num("c", 2usize)?, epsilon: eps, seed }
+        }
+        "stream-greedy" => AlgoSpec::StreamGreedy { nu: params.num("nu", 1e-4)? },
+        "preemption" => AlgoSpec::Preemption,
+        "isi" => AlgoSpec::IndependentSetImprovement,
+        "random" => AlgoSpec::Random { seed },
+        other => return Err(bad(format!("unknown algo {other:?}"))),
+    };
+    let drift = match params.get("drift") {
+        None => None,
+        Some(v) => {
+            let (w, th) = v
+                .split_once(':')
+                .ok_or_else(|| bad(format!("drift={v:?}: expected <window>:<threshold>")))?;
+            let w: usize = parse_num("drift window", w)?;
+            let th: f64 = parse_num("drift threshold", th)?;
+            let th_ok = th.is_finite() && th > 0.0;
+            if w == 0 || !th_ok {
+                return Err(bad("drift window and threshold must be positive"));
+            }
+            Some((w, th))
+        }
+    };
+    Ok(SessionSpec { algo, dim, k, drift })
+}
+
+fn spec_params(spec: &SessionSpec) -> String {
+    use std::fmt::Write;
+    let mut s = format!("k={} dim={}", spec.k, spec.dim);
+    match &spec.algo {
+        AlgoSpec::ThreeSieves { epsilon, t } => {
+            let _ = write!(s, " algo=three-sieves epsilon={epsilon} t={t}");
+        }
+        AlgoSpec::ShardedThreeSieves { epsilon, t, shards } => {
+            let _ = write!(s, " algo=sharded-three-sieves epsilon={epsilon} t={t} shards={shards}");
+        }
+        AlgoSpec::SieveStreaming { epsilon } => {
+            let _ = write!(s, " algo=sieve-streaming epsilon={epsilon}");
+        }
+        AlgoSpec::SieveStreamingPP { epsilon } => {
+            let _ = write!(s, " algo=sieve-streaming-pp epsilon={epsilon}");
+        }
+        AlgoSpec::Salsa { epsilon, .. } => {
+            let _ = write!(s, " algo=salsa epsilon={epsilon}");
+        }
+        AlgoSpec::QuickStream { c, epsilon, seed } => {
+            let _ = write!(s, " algo=quickstream c={c} epsilon={epsilon} seed={seed}");
+        }
+        AlgoSpec::StreamGreedy { nu } => {
+            let _ = write!(s, " algo=stream-greedy nu={nu}");
+        }
+        AlgoSpec::Preemption => s.push_str(" algo=preemption"),
+        AlgoSpec::IndependentSetImprovement => s.push_str(" algo=isi"),
+        AlgoSpec::Random { seed } => {
+            let _ = write!(s, " algo=random seed={seed}");
+        }
+        AlgoSpec::Greedy => s.push_str(" algo=greedy"),
+    }
+    if let Some((w, th)) = spec.drift {
+        let _ = write!(s, " drift={w}:{th}");
+    }
+    s
+}
+
+fn parse_csv_rows(v: &str) -> Result<Vec<Vec<f32>>, ParseErr> {
+    let mut rows = Vec::new();
+    for (i, row) in v.split(';').enumerate() {
+        let mut out = Vec::new();
+        for cell in row.split(',') {
+            let x: f32 = cell
+                .parse()
+                .map_err(|e| (ErrorCode::BadRow, format!("row {i}, cell {cell:?}: {e}")))?;
+            out.push(x);
+        }
+        rows.push(out);
+    }
+    Ok(rows)
+}
+
+fn csv_rows(data: &[f32], dim: usize) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    for (r, row) in data.chunks_exact(dim).enumerate() {
+        if r > 0 {
+            s.push(';');
+        }
+        for (c, v) in row.iter().enumerate() {
+            if c > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{v}");
+        }
+    }
+    s
+}
+
+fn packed_to_floats(bytes: &[u8]) -> Result<Vec<f32>, ParseErr> {
+    if bytes.len() % 4 != 0 {
+        return Err((
+            ErrorCode::BadRow,
+            format!("packed payload is {} bytes, not a multiple of 4", bytes.len()),
+        ));
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn floats_to_packed(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+impl Request {
+    /// Parse one request line (no trailing newline). Errors come back as
+    /// `(code, message)` ready to serialize as an `ERR` reply.
+    pub fn parse(line: &str) -> Result<Request, ParseErr> {
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        let verb = *tokens.first().ok_or_else(|| bad("empty request"))?;
+        let session_id = |idx: usize| -> Result<String, ParseErr> {
+            let id = *tokens
+                .get(idx)
+                .ok_or_else(|| bad(format!("{verb} requires a session id")))?;
+            if !valid_id(id) {
+                return Err(bad(format!(
+                    "invalid session id {id:?} (1-64 chars of [A-Za-z0-9._-])"
+                )));
+            }
+            Ok(id.to_string())
+        };
+        match verb.to_ascii_uppercase().as_str() {
+            "OPEN" => {
+                let id = session_id(1)?;
+                let params = Params::parse(&tokens[2..], OPEN_KEYS)?;
+                Ok(Request::Open { id, spec: parse_open_spec(&params)? })
+            }
+            "PUSH" => {
+                let id = session_id(1)?;
+                let payload = *tokens
+                    .get(2)
+                    .ok_or_else(|| bad("PUSH requires rows=<csv> or raw=<base64>"))?;
+                if tokens.len() > 3 {
+                    return Err(bad("PUSH takes exactly one payload token"));
+                }
+                let body = if let Some(v) = payload.strip_prefix("rows=") {
+                    PushBody::Rows(parse_csv_rows(v)?)
+                } else if let Some(v) = payload.strip_prefix("raw=") {
+                    let bytes =
+                        b64_decode(v).map_err(|e| (ErrorCode::BadRow, format!("base64: {e}")))?;
+                    PushBody::Packed(packed_to_floats(&bytes)?)
+                } else {
+                    return Err(bad("PUSH payload must start with rows= or raw="));
+                };
+                Ok(Request::Push { id, body })
+            }
+            "SUMMARY" => Ok(Request::Summary { id: session_id(1)? }),
+            "STATS" => Ok(Request::Stats { id: session_id(1)? }),
+            "CLOSE" => {
+                let id = session_id(1)?;
+                let discard = match tokens.get(2) {
+                    None => false,
+                    Some(&"discard") => true,
+                    Some(other) => {
+                        return Err(bad(format!("CLOSE: unexpected token {other:?}")))
+                    }
+                };
+                Ok(Request::Close { id, discard })
+            }
+            "METRICS" => Ok(Request::Metrics),
+            "PING" => Ok(Request::Ping),
+            "QUIT" => Ok(Request::Quit),
+            other => Err((ErrorCode::UnknownCommand, format!("unknown command {other:?}"))),
+        }
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Open { id, spec } => format!("OPEN {id} {}", spec_params(spec)),
+            Request::Push { id, body: PushBody::Rows(rows) } => {
+                let flat: Vec<String> = rows
+                    .iter()
+                    .map(|r| {
+                        r.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+                    })
+                    .collect();
+                format!("PUSH {id} rows={}", flat.join(";"))
+            }
+            Request::Push { id, body: PushBody::Packed(flat) } => {
+                format!("PUSH {id} raw={}", b64_encode(&floats_to_packed(flat)))
+            }
+            Request::Summary { id } => format!("SUMMARY {id}"),
+            Request::Stats { id } => format!("STATS {id}"),
+            Request::Close { id, discard } => {
+                if *discard {
+                    format!("CLOSE {id} discard")
+                } else {
+                    format!("CLOSE {id}")
+                }
+            }
+            Request::Metrics => "METRICS".into(),
+            Request::Ping => "PING".into(),
+            Request::Quit => "QUIT".into(),
+        }
+    }
+}
+
+impl Response {
+    pub fn error(code: ErrorCode, message: impl Into<String>) -> Response {
+        // Responses are single-line by construction; scrub any newline an
+        // inner error message might smuggle in.
+        let message: String = message
+            .into()
+            .chars()
+            .map(|c| if c == '\n' || c == '\r' { ' ' } else { c })
+            .collect();
+        Response::Error { code, message }
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Opened { id, resumed } => {
+                format!("OK OPEN id={id} resumed={}", u8::from(*resumed))
+            }
+            Response::Pushed { id, reply } => format!(
+                "OK PUSH id={id} rows={} len={} value={} drift={}",
+                reply.rows, reply.len, reply.value, reply.drift_events
+            ),
+            Response::SummaryData { id, reply } => {
+                let rows = if reply.dim == 0 { 0 } else { reply.data.len() / reply.dim };
+                let mut s = format!(
+                    "OK SUMMARY id={id} dim={} rows={rows} value={}",
+                    reply.dim, reply.value
+                );
+                if rows > 0 {
+                    s.push_str(" data=");
+                    s.push_str(&csv_rows(&reply.data, reply.dim));
+                }
+                s
+            }
+            Response::StatsData { id, reply } => format!(
+                "OK STATS id={id} elements={} queries={} stored={} peak={} instances={} \
+                 len={} value={} drift={}",
+                reply.stats.elements,
+                reply.stats.queries,
+                reply.stats.stored,
+                reply.stats.peak_stored,
+                reply.stats.instances,
+                reply.len,
+                reply.value,
+                reply.drift_events
+            ),
+            Response::Closed { id, checkpointed } => {
+                format!("OK CLOSE id={id} checkpointed={}", u8::from(*checkpointed))
+            }
+            Response::MetricsData(m) => format!(
+                "OK METRICS sessions={} stored={} items={} queries={} opens={} resumes={} \
+                 pushes={} items_total={} evictions={} closes={} checkpoints={} uptime_s={} \
+                 items_per_s={}",
+                m.sessions,
+                m.stored,
+                m.items,
+                m.queries,
+                m.opens,
+                m.resumes,
+                m.pushes,
+                m.items_total,
+                m.evictions,
+                m.closes,
+                m.checkpoints,
+                m.uptime_s,
+                m.items_per_s
+            ),
+            Response::Pong => "OK PONG".into(),
+            Response::Bye => "OK BYE".into(),
+            Response::Error { code, message } => format!("ERR {} {message}", code.as_str()),
+        }
+    }
+
+    /// Parse one response line — the client half of the protocol.
+    pub fn parse(line: &str) -> Result<Response, String> {
+        let line = line.trim_end_matches(['\r', '\n']);
+        if let Some(rest) = line.strip_prefix("ERR ") {
+            let (code, message) = rest.split_once(' ').unwrap_or((rest, ""));
+            return Ok(Response::Error {
+                code: ErrorCode::parse(code),
+                message: message.to_string(),
+            });
+        }
+        let rest = line.strip_prefix("OK ").ok_or_else(|| format!("bad reply {line:?}"))?;
+        let tokens: Vec<&str> = rest.split(' ').filter(|t| !t.is_empty()).collect();
+        let verb = *tokens.first().ok_or("empty OK reply")?;
+        let fields: Vec<(&str, &str)> =
+            tokens[1..].iter().filter_map(|t| t.split_once('=')).collect();
+        let field = |key: &str| -> Result<&str, String> {
+            fields
+                .iter()
+                .find(|&&(k, _)| k == key)
+                .map(|&(_, v)| v)
+                .ok_or_else(|| format!("{verb} reply missing {key}="))
+        };
+        let num = |key: &str| -> Result<f64, String> {
+            field(key)?.parse().map_err(|e| format!("{verb} reply {key}: {e}"))
+        };
+        match verb {
+            "OPEN" => Ok(Response::Opened {
+                id: field("id")?.to_string(),
+                resumed: field("resumed")? == "1",
+            }),
+            "PUSH" => Ok(Response::Pushed {
+                id: field("id")?.to_string(),
+                reply: PushReply {
+                    rows: num("rows")? as u64,
+                    len: num("len")? as usize,
+                    value: num("value")?,
+                    drift_events: num("drift")? as usize,
+                },
+            }),
+            "SUMMARY" => {
+                let dim = num("dim")? as usize;
+                let rows = num("rows")? as usize;
+                let data = if rows == 0 {
+                    Vec::new()
+                } else {
+                    let parsed = parse_csv_rows(field("data")?).map_err(|(_, m)| m)?;
+                    let mut flat = Vec::with_capacity(rows * dim);
+                    for row in &parsed {
+                        flat.extend_from_slice(row);
+                    }
+                    if flat.len() != rows * dim {
+                        return Err(format!(
+                            "SUMMARY reply: {} floats, expected {rows}x{dim}",
+                            flat.len()
+                        ));
+                    }
+                    flat
+                };
+                Ok(Response::SummaryData {
+                    id: field("id")?.to_string(),
+                    reply: SummaryReply { dim, value: num("value")?, data },
+                })
+            }
+            "STATS" => Ok(Response::StatsData {
+                id: field("id")?.to_string(),
+                reply: StatsReply {
+                    stats: AlgoStats {
+                        queries: num("queries")? as u64,
+                        elements: num("elements")? as u64,
+                        stored: num("stored")? as usize,
+                        peak_stored: num("peak")? as usize,
+                        instances: num("instances")? as usize,
+                    },
+                    value: num("value")?,
+                    len: num("len")? as usize,
+                    drift_events: num("drift")? as usize,
+                },
+            }),
+            "CLOSE" => Ok(Response::Closed {
+                id: field("id")?.to_string(),
+                checkpointed: field("checkpointed")? == "1",
+            }),
+            "METRICS" => Ok(Response::MetricsData(MetricsSnapshot {
+                sessions: num("sessions")? as usize,
+                stored: num("stored")? as usize,
+                items: num("items")? as u64,
+                queries: num("queries")? as u64,
+                opens: num("opens")? as u64,
+                resumes: num("resumes")? as u64,
+                pushes: num("pushes")? as u64,
+                items_total: num("items_total")? as u64,
+                evictions: num("evictions")? as u64,
+                closes: num("closes")? as u64,
+                checkpoints: num("checkpoints")? as u64,
+                uptime_s: num("uptime_s")?,
+                items_per_s: num("items_per_s")?,
+            })),
+            "PONG" => Ok(Response::Pong),
+            "BYE" => Ok(Response::Bye),
+            other => Err(format!("unknown reply verb {other:?}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// base64 (standard alphabet, padded) — hand-rolled, the crate has no deps.
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes as standard padded base64.
+pub fn b64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = (u32::from(b[0]) << 16) | (u32::from(b[1]) << 8) | u32::from(b[2]);
+        out.push(B64_ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64_ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64_ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Decode standard padded base64.
+pub fn b64_decode(s: &str) -> Result<Vec<u8>, String> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(format!("length {} is not a multiple of 4", bytes.len()));
+    }
+    let val = |c: u8| -> Result<u32, String> {
+        match c {
+            b'A'..=b'Z' => Ok(u32::from(c - b'A')),
+            b'a'..=b'z' => Ok(u32::from(c - b'a') + 26),
+            b'0'..=b'9' => Ok(u32::from(c - b'0') + 52),
+            b'+' => Ok(62),
+            b'/' => Ok(63),
+            _ => Err(format!("invalid base64 byte {:?}", c as char)),
+        }
+    };
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (i, quad) in bytes.chunks_exact(4).enumerate() {
+        let last = (i + 1) * 4 == bytes.len();
+        let pad = if last { quad.iter().rev().take_while(|&&c| c == b'=').count() } else { 0 };
+        if pad > 2 || (!last && quad.contains(&b'=')) {
+            return Err("misplaced padding".into());
+        }
+        let mut n = 0u32;
+        for &c in &quad[..4 - pad] {
+            n = (n << 6) | val(c)?;
+        }
+        n <<= 6 * pad as u32;
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b64_known_vectors() {
+        assert_eq!(b64_encode(b""), "");
+        assert_eq!(b64_encode(b"f"), "Zg==");
+        assert_eq!(b64_encode(b"fo"), "Zm8=");
+        assert_eq!(b64_encode(b"foo"), "Zm9v");
+        assert_eq!(b64_encode(b"foobar"), "Zm9vYmFy");
+        assert_eq!(b64_decode("Zm9vYmFy").unwrap(), b"foobar");
+        assert_eq!(b64_decode("Zg==").unwrap(), b"f");
+        assert_eq!(b64_decode("").unwrap(), b"");
+        assert!(b64_decode("Zg=").is_err(), "bad length");
+        assert!(b64_decode("Zg=a").is_err(), "misplaced padding");
+        assert!(b64_decode("Z!==").is_err(), "bad alphabet");
+    }
+
+    #[test]
+    fn b64_roundtrips_arbitrary_bytes() {
+        let data: Vec<u8> = (0u16..=255).map(|b| b as u8).collect();
+        for len in [0usize, 1, 2, 3, 4, 63, 255] {
+            let slice = &data[..len];
+            assert_eq!(b64_decode(&b64_encode(slice)).unwrap(), slice, "len {len}");
+        }
+    }
+
+    #[test]
+    fn open_roundtrip_all_algos() {
+        let specs = [
+            SessionSpec::three_sieves(16, 8, 0.001, 500),
+            SessionSpec {
+                algo: AlgoSpec::ShardedThreeSieves { epsilon: 0.01, t: 100, shards: 4 },
+                dim: 8,
+                k: 5,
+                drift: Some((200, 3.5)),
+            },
+            SessionSpec {
+                algo: AlgoSpec::SieveStreamingPP { epsilon: 0.05 },
+                dim: 4,
+                k: 3,
+                drift: None,
+            },
+            SessionSpec {
+                algo: AlgoSpec::Salsa { epsilon: 0.1, use_length_hint: false },
+                dim: 4,
+                k: 3,
+                drift: None,
+            },
+            SessionSpec {
+                algo: AlgoSpec::QuickStream { c: 3, epsilon: 0.1, seed: 7 },
+                dim: 4,
+                k: 3,
+                drift: None,
+            },
+        ];
+        for spec in specs {
+            let req = Request::Open { id: "tenant-1.a".into(), spec };
+            let back = Request::parse(&req.to_line()).unwrap();
+            assert_eq!(back, req, "line: {}", req.to_line());
+        }
+    }
+
+    #[test]
+    fn push_csv_and_packed_roundtrip_exact_bits() {
+        // Values chosen to stress shortest-roundtrip printing.
+        let rows = vec![
+            vec![0.1f32, -3.0, 1.5e-8],
+            vec![f32::MIN_POSITIVE, 123456.78, -0.0],
+        ];
+        let req = Request::Push { id: "t".into(), body: PushBody::Rows(rows.clone()) };
+        match Request::parse(&req.to_line()).unwrap() {
+            Request::Push { body: PushBody::Rows(back), .. } => {
+                for (a, b) in rows.iter().flatten().zip(back.iter().flatten()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        let flat: Vec<f32> = rows.into_iter().flatten().collect();
+        let req = Request::Push { id: "t".into(), body: PushBody::Packed(flat.clone()) };
+        match Request::parse(&req.to_line()).unwrap() {
+            Request::Push { body: PushBody::Packed(back), .. } => {
+                assert_eq!(flat.len(), back.len());
+                for (a, b) in flat.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_requests_roundtrip() {
+        for req in [
+            Request::Summary { id: "a".into() },
+            Request::Stats { id: "b-2".into() },
+            Request::Close { id: "c".into(), discard: false },
+            Request::Close { id: "c".into(), discard: true },
+            Request::Metrics,
+            Request::Ping,
+            Request::Quit,
+        ] {
+            assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_requests() {
+        let cases = [
+            ("", ErrorCode::BadRequest),
+            ("FROB x", ErrorCode::UnknownCommand),
+            ("OPEN", ErrorCode::BadRequest),
+            ("OPEN bad/id k=2 dim=2", ErrorCode::BadRequest),
+            ("OPEN t dim=2", ErrorCode::BadRequest),          // missing k
+            ("OPEN t k=2 dim=2 bogus=1", ErrorCode::BadRequest), // unknown key
+            ("OPEN t k=2 dim=2 k=3", ErrorCode::BadRequest),  // duplicate key
+            ("OPEN t k=2 dim=2 algo=magic", ErrorCode::BadRequest),
+            ("OPEN t k=0 dim=2", ErrorCode::BadRequest),
+            ("OPEN t k=2 dim=2 drift=5", ErrorCode::BadRequest),
+            ("PUSH t", ErrorCode::BadRequest),
+            ("PUSH t rows=1,x", ErrorCode::BadRow),
+            ("PUSH t raw=!!!!", ErrorCode::BadRow),
+            ("PUSH t rows=1 rows=2", ErrorCode::BadRequest),
+            ("CLOSE t keep", ErrorCode::BadRequest),
+        ];
+        for (line, code) in cases {
+            match Request::parse(line) {
+                Err((got, _)) => assert_eq!(got, code, "line {line:?}"),
+                Ok(req) => panic!("line {line:?} parsed as {req:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn negative_and_exotic_floats_parse_in_push() {
+        let req = Request::parse("PUSH t rows=-3.0,2.5e-4;-0.0,inf").unwrap();
+        match req {
+            Request::Push { body: PushBody::Rows(rows), .. } => {
+                assert_eq!(rows[0][0], -3.0);
+                assert!((rows[0][1] - 2.5e-4).abs() < 1e-12);
+                assert!(rows[1][1].is_infinite());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let cases = [
+            Response::Opened { id: "t".into(), resumed: true },
+            Response::Pushed {
+                id: "t".into(),
+                reply: PushReply { rows: 64, len: 9, value: 3.125678901234, drift_events: 2 },
+            },
+            Response::SummaryData {
+                id: "t".into(),
+                reply: SummaryReply {
+                    dim: 2,
+                    value: 1.75,
+                    data: vec![0.25, -1.5, 3.0e-7, 42.0],
+                },
+            },
+            Response::SummaryData {
+                id: "t".into(),
+                reply: SummaryReply { dim: 2, value: 0.0, data: vec![] },
+            },
+            Response::StatsData {
+                id: "t".into(),
+                reply: StatsReply {
+                    stats: AlgoStats {
+                        queries: 123,
+                        elements: 456,
+                        stored: 7,
+                        peak_stored: 8,
+                        instances: 1,
+                    },
+                    value: 2.5,
+                    len: 7,
+                    drift_events: 0,
+                },
+            },
+            Response::Closed { id: "t".into(), checkpointed: true },
+            Response::MetricsData(MetricsSnapshot {
+                sessions: 3,
+                stored: 21,
+                items: 900,
+                queries: 950,
+                opens: 4,
+                resumes: 1,
+                pushes: 30,
+                items_total: 1200,
+                evictions: 1,
+                closes: 1,
+                checkpoints: 2,
+                uptime_s: 1.5,
+                items_per_s: 800.0,
+            }),
+            Response::Pong,
+            Response::Bye,
+            Response::Error { code: ErrorCode::NoSession, message: "unknown session".into() },
+        ];
+        for resp in cases {
+            let line = resp.to_line();
+            assert_eq!(Response::parse(&line).unwrap(), resp, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn error_messages_are_single_line() {
+        let r = Response::error(ErrorCode::Io, "disk\nfull\r\n");
+        assert!(!r.to_line().contains('\n'));
+    }
+
+    #[test]
+    fn id_validation() {
+        assert!(valid_id("tenant-1.a_B"));
+        assert!(!valid_id(""));
+        assert!(!valid_id("a b"));
+        assert!(!valid_id("a/b"));
+        assert!(!valid_id(&"x".repeat(65)));
+    }
+}

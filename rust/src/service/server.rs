@@ -1,0 +1,507 @@
+//! The std-only TCP front end: an accept loop that dispatches connections
+//! onto the exec worker pool, plus the in-process [`Client`] used by
+//! tests, benches and the CLI smoke path.
+//!
+//! ## Concurrency model
+//!
+//! * The accept thread owns the listener (non-blocking, polled) and runs
+//!   the idle-eviction sweep between accepts.
+//! * Each connection becomes one [`WorkerPool::spawn`]ed job when the
+//!   service is configured with a pool (`parallelism != off`) — so at most
+//!   `threads` connections are served concurrently and the rest queue,
+//!   which is the connection-level admission control. With `off`, each
+//!   connection gets a dedicated thread instead.
+//! * Handlers poll with a short read timeout and re-check the shutdown
+//!   flag, so [`ServerHandle::shutdown`] quiesces in bounded time:
+//!   flag → accept loop exits → pool drops → workers drain → remaining
+//!   sessions checkpoint.
+//!
+//! [`WorkerPool::spawn`]: crate::exec::WorkerPool::spawn
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServiceConfig;
+use crate::exec::ExecContext;
+
+use super::protocol::{
+    ErrorCode, MetricsSnapshot, PushBody, PushReply, Request, Response, SessionSpec, StatsReply,
+    SummaryReply, MAX_LINE_BYTES,
+};
+use super::sessions::SessionManager;
+
+const READ_POLL: Duration = Duration::from_millis(100);
+const SWEEP_EVERY: Duration = Duration::from_millis(250);
+
+/// Entry point for the network service.
+pub struct Server;
+
+impl Server {
+    /// Bind `listen` (e.g. `127.0.0.1:7777`, port 0 for ephemeral) and
+    /// start accepting. Returns immediately; the accept loop runs on its
+    /// own thread until [`ServerHandle::shutdown`].
+    pub fn start(cfg: ServiceConfig, listen: &str) -> std::io::Result<ServerHandle> {
+        let listener = TcpListener::bind(listen)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let manager = Arc::new(SessionManager::new(cfg.clone()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let exec = ExecContext::new(cfg.parallelism);
+        let accept = {
+            let manager = Arc::clone(&manager);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("ts-accept".into())
+                .spawn(move || accept_loop(listener, exec, manager, shutdown))?
+        };
+        Ok(ServerHandle { addr, manager, shutdown, accept: Some(accept) })
+    }
+}
+
+/// A running service instance.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    manager: Arc<SessionManager>,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Direct handle to the session manager (in-process harnesses and the
+    /// CLI's periodic metrics print).
+    pub fn manager(&self) -> Arc<SessionManager> {
+        Arc::clone(&self.manager)
+    }
+
+    /// Graceful shutdown: stop accepting, drain pool-dispatched handlers,
+    /// checkpoint every remaining session, and return the final metrics
+    /// snapshot (taken before the sessions close).
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(accept) = self.accept.take() {
+            // Joining the accept thread also drops its ExecContext, which
+            // (as the last pool reference) joins the workers and with them
+            // every pool-dispatched connection handler.
+            let _ = accept.join();
+        }
+        let snapshot = self.manager.metrics();
+        self.manager.shutdown();
+        snapshot
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    exec: ExecContext,
+    manager: Arc<SessionManager>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut last_sweep = Instant::now();
+    // Handlers running on dedicated threads (no pool) are tracked so the
+    // shutdown path can join them — otherwise an in-flight PUSH could race
+    // the final session checkpoints. Pool-dispatched handlers need no
+    // tracking: dropping `exec` below joins the workers.
+    let mut detached: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if last_sweep.elapsed() >= SWEEP_EVERY {
+            manager.evict_idle();
+            detached.retain(|h| !h.is_finished());
+            last_sweep = Instant::now();
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let manager = Arc::clone(&manager);
+                let shutdown = Arc::clone(&shutdown);
+                let job = move || handle_conn(stream, &manager, &shutdown);
+                match exec.pool_handle() {
+                    Some(pool) => pool.spawn(job),
+                    None => {
+                        if let Ok(handle) =
+                            std::thread::Builder::new().name("ts-conn".into()).spawn(job)
+                        {
+                            detached.push(handle);
+                        }
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    // Shutdown: handlers observe the flag within one read-timeout; joining
+    // them (and, via `exec`'s drop, the pool workers) guarantees no PUSH
+    // is still mutating a session when the manager checkpoints.
+    for handle in detached {
+        let _ = handle.join();
+    }
+    drop(exec);
+}
+
+enum LineStatus {
+    /// A complete line is in the buffer.
+    Line,
+    /// Peer closed the connection cleanly.
+    Eof,
+    /// Shutdown flag observed while idle.
+    ShutDown,
+    /// Line exceeded [`MAX_LINE_BYTES`].
+    TooLong,
+}
+
+/// Read one `\n`-terminated line into `buf` (delimiter stripped), bounded
+/// by [`MAX_LINE_BYTES`] and interruptible by the shutdown flag. Partial
+/// data survives read timeouts — unlike `read_line`, which discards
+/// buffered bytes when the underlying read errors.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    shutdown: &AtomicBool,
+) -> std::io::Result<LineStatus> {
+    loop {
+        let consumed = {
+            let available = match reader.fill_buf() {
+                Ok(available) => available,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return Ok(LineStatus::ShutDown);
+                    }
+                    continue;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if available.is_empty() {
+                // EOF: a final unterminated line still counts.
+                return Ok(if buf.is_empty() { LineStatus::Eof } else { LineStatus::Line });
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    buf.extend_from_slice(&available[..pos]);
+                    reader.consume(pos + 1);
+                    return Ok(LineStatus::Line);
+                }
+                None => {
+                    buf.extend_from_slice(available);
+                    available.len()
+                }
+            }
+        };
+        reader.consume(consumed);
+        if buf.len() > MAX_LINE_BYTES {
+            return Ok(LineStatus::TooLong);
+        }
+    }
+}
+
+fn write_reply(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let mut line = resp.to_line();
+    line.push('\n');
+    stream.write_all(line.as_bytes())
+}
+
+/// Serve one connection to completion (EOF, `QUIT`, IO error or service
+/// shutdown). Never panics on malformed input — every parse failure turns
+/// into an `ERR` reply.
+fn handle_conn(stream: TcpStream, manager: &Arc<SessionManager>, shutdown: &Arc<AtomicBool>) {
+    let _ = serve_conn(stream, manager, shutdown);
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    manager: &Arc<SessionManager>,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(READ_POLL))?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        match read_line_bounded(&mut reader, &mut buf, shutdown)? {
+            LineStatus::Eof | LineStatus::ShutDown => return Ok(()),
+            LineStatus::TooLong => {
+                let resp = Response::error(
+                    ErrorCode::BadRequest,
+                    format!("line exceeds {MAX_LINE_BYTES} bytes"),
+                );
+                write_reply(&mut writer, &resp)?;
+                return Ok(()); // framing is unrecoverable mid-line
+            }
+            LineStatus::Line => {}
+        }
+        let text = String::from_utf8_lossy(&buf);
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let resp = match Request::parse(line) {
+            Ok(req) => {
+                let resp = manager.execute(&req);
+                if matches!(req, Request::Quit) {
+                    write_reply(&mut writer, &resp)?;
+                    return Ok(());
+                }
+                resp
+            }
+            Err((code, msg)) => Response::error(code, msg),
+        };
+        write_reply(&mut writer, &resp)?;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+
+/// Client-side failure.
+#[derive(Debug)]
+pub enum ClientError {
+    Io(std::io::Error),
+    /// The reply line did not parse.
+    Protocol(String),
+    /// The server answered with an `ERR` reply.
+    Server { code: ErrorCode, message: String },
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Protocol(msg) => write!(f, "protocol: {msg}"),
+            ClientError::Server { code, message } => {
+                write!(f, "server error [{}]: {message}", code.as_str())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// Blocking line-protocol client — one TCP connection, synchronous
+/// request/response. Used by the integration suite, the throughput bench
+/// and the CI smoke job; doubles as the reference protocol implementation
+/// for external clients.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request and read its reply. `ERR` replies come back as
+    /// `Ok(Response::Error { .. })`; use the typed helpers to get them as
+    /// [`ClientError::Server`].
+    pub fn request(&mut self, req: &Request) -> Result<Response, ClientError> {
+        let mut line = req.to_line();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        let mut buf = Vec::new();
+        self.reader.read_until(b'\n', &mut buf)?;
+        if buf.is_empty() {
+            return Err(ClientError::Protocol("connection closed by server".into()));
+        }
+        let text = String::from_utf8_lossy(&buf);
+        Response::parse(text.trim_end_matches(['\r', '\n'])).map_err(ClientError::Protocol)
+    }
+
+    fn expect<T>(
+        &mut self,
+        req: &Request,
+        extract: impl FnOnce(Response) -> Result<T, Response>,
+    ) -> Result<T, ClientError> {
+        match self.request(req)? {
+            Response::Error { code, message } => Err(ClientError::Server { code, message }),
+            other => extract(other)
+                .map_err(|resp| ClientError::Protocol(format!("unexpected reply {resp:?}"))),
+        }
+    }
+
+    /// `OPEN`; returns whether the session resumed from a checkpoint.
+    pub fn open(&mut self, id: &str, spec: &SessionSpec) -> Result<bool, ClientError> {
+        self.expect(&Request::Open { id: id.into(), spec: spec.clone() }, |r| match r {
+            Response::Opened { resumed, .. } => Ok(resumed),
+            other => Err(other),
+        })
+    }
+
+    /// `PUSH` in CSV form: `rows` is flat row-major `count × dim`.
+    pub fn push_rows(
+        &mut self,
+        id: &str,
+        rows: &[f32],
+        dim: usize,
+    ) -> Result<PushReply, ClientError> {
+        let body = PushBody::Rows(rows.chunks(dim).map(<[f32]>::to_vec).collect());
+        self.push(id, body)
+    }
+
+    /// `PUSH` in packed (base64) form: `rows` is flat row-major.
+    pub fn push_packed(&mut self, id: &str, rows: &[f32]) -> Result<PushReply, ClientError> {
+        self.push(id, PushBody::Packed(rows.to_vec()))
+    }
+
+    pub fn push(&mut self, id: &str, body: PushBody) -> Result<PushReply, ClientError> {
+        self.expect(&Request::Push { id: id.into(), body }, |r| match r {
+            Response::Pushed { reply, .. } => Ok(reply),
+            other => Err(other),
+        })
+    }
+
+    pub fn summary(&mut self, id: &str) -> Result<SummaryReply, ClientError> {
+        self.expect(&Request::Summary { id: id.into() }, |r| match r {
+            Response::SummaryData { reply, .. } => Ok(reply),
+            other => Err(other),
+        })
+    }
+
+    pub fn stats(&mut self, id: &str) -> Result<StatsReply, ClientError> {
+        self.expect(&Request::Stats { id: id.into() }, |r| match r {
+            Response::StatsData { reply, .. } => Ok(reply),
+            other => Err(other),
+        })
+    }
+
+    /// `CLOSE`; returns whether a checkpoint was written.
+    pub fn close(&mut self, id: &str, discard: bool) -> Result<bool, ClientError> {
+        self.expect(&Request::Close { id: id.into(), discard }, |r| match r {
+            Response::Closed { checkpointed, .. } => Ok(checkpointed),
+            other => Err(other),
+        })
+    }
+
+    pub fn metrics(&mut self) -> Result<MetricsSnapshot, ClientError> {
+        self.expect(&Request::Metrics, |r| match r {
+            Response::MetricsData(m) => Ok(m),
+            other => Err(other),
+        })
+    }
+
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        self.expect(&Request::Ping, |r| match r {
+            Response::Pong => Ok(()),
+            other => Err(other),
+        })
+    }
+
+    /// `QUIT`: ask the server to close this connection.
+    pub fn quit(&mut self) -> Result<(), ClientError> {
+        self.expect(&Request::Quit, |r| match r {
+            Response::Bye => Ok(()),
+            other => Err(other),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Parallelism;
+    use std::time::Duration;
+
+    fn test_cfg(par: Parallelism) -> ServiceConfig {
+        ServiceConfig {
+            idle_timeout: Duration::ZERO,
+            parallelism: par,
+            ..ServiceConfig::default()
+        }
+    }
+
+    #[test]
+    fn start_ping_shutdown() {
+        let handle = Server::start(test_cfg(Parallelism::Off), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.ping().unwrap();
+        client.quit().unwrap();
+        let m = handle.shutdown();
+        assert_eq!(m.sessions, 0);
+    }
+
+    #[test]
+    fn open_push_summary_over_tcp() {
+        let handle = Server::start(test_cfg(Parallelism::Threads(2)), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        let spec = SessionSpec::three_sieves(4, 3, 0.05, 20);
+        assert!(!client.open("t1", &spec).unwrap());
+        let rows: Vec<f32> = (0..32).map(|i| (i as f32 * 0.17).sin()).collect();
+        let reply = client.push_rows("t1", &rows, 4).unwrap();
+        assert_eq!(reply.rows, 8);
+        let got = client.summary("t1").unwrap();
+        assert_eq!(got.dim, 4);
+        assert_eq!(got.data.len(), got.dim * client.stats("t1").unwrap().len);
+        let m = client.metrics().unwrap();
+        assert_eq!(m.sessions, 1);
+        assert_eq!(m.items, 8);
+        client.close("t1", true).unwrap();
+        handle.shutdown();
+    }
+
+    #[test]
+    fn malformed_lines_get_err_replies_not_disconnects() {
+        let handle = Server::start(test_cfg(Parallelism::Off), "127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(handle.addr()).unwrap();
+        stream.write_all(b"FROBNICATE now\nPUSH nosuch rows=1,2\n  \nPING\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut lines = Vec::new();
+        for _ in 0..3 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            lines.push(line);
+        }
+        assert!(lines[0].starts_with("ERR unknown-command"), "{lines:?}");
+        assert!(lines[1].starts_with("ERR no-session"), "{lines:?}");
+        assert!(lines[2].starts_with("OK PONG"), "{lines:?}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shutdown_with_connected_idle_client_completes() {
+        let handle = Server::start(test_cfg(Parallelism::Threads(2)), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.ping().unwrap();
+        // Client stays connected and idle; shutdown must still return
+        // (handlers poll the flag on their read timeout).
+        let start = std::time::Instant::now();
+        handle.shutdown();
+        assert!(start.elapsed() < Duration::from_secs(5), "shutdown wedged");
+    }
+}

@@ -1,0 +1,885 @@
+//! Multi-tenant session management: many independent `(algorithm, drift
+//! detector, stats)` sessions in one process, each on the paper's fixed
+//! per-stream memory budget (at most `K` stored elements = `K·d` f32s).
+//!
+//! The [`SessionManager`] owns the tenant map and enforces the service's
+//! resource contract:
+//!
+//! * **Admission control** — `OPEN` is refused once `max_sessions` tenants
+//!   are live or the stored-element reservation `Σ K` would exceed
+//!   `max_total_stored`.
+//! * **LRU idle eviction** — sessions untouched for `idle_timeout` are
+//!   checkpointed to `<checkpoint_dir>/<id>.ckpt` (atomic save) and
+//!   dropped, oldest first.
+//! * **Resume** — a re-`OPEN` of an evicted/closed id with the same spec
+//!   restores the algorithm from its checkpoint's state blob and continues
+//!   **bit-identically** to a session that was never evicted
+//!   (`rust/tests/service_integration.rs` pins this).
+//!
+//! ## Thread-safety
+//!
+//! Sessions are reached from whichever connection-handler thread carries
+//! the tenant's TCP connection, so they must cross thread boundaries even
+//! though [`StreamingAlgorithm`] is not `Send` (its oracle box is not —
+//! see [`crate::functions::SubmodularFunction`]). The crate's second and
+//! final audited `Send` erasure site lives here: [`SessionCell`] wraps
+//! each session in a `Mutex` and asserts `Send + Sync`, which is sound
+//! because (a) [`build_session_algo`] refuses any oracle family that does
+//! not promise
+//! [`parallel_safe`](crate::functions::SubmodularFunction::parallel_safe)
+//! — the same contract the exec pool's `AssertThreadSafe` rests on — and
+//! (b) the mutex guarantees no two threads ever touch a session
+//! concurrently.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::algorithms::StreamingAlgorithm;
+use crate::config::{AlgoSpec, ServiceConfig};
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::drift::{DriftDetector, MeanShiftDetector, NoDrift};
+use crate::experiments::runner::make_oracle;
+use crate::experiments::{build_algo, GammaMode};
+use crate::util::json::Json;
+
+use super::protocol::{
+    valid_id, ErrorCode, MetricsSnapshot, PushBody, PushReply, Request, Response, SessionSpec,
+    StatsReply, SummaryReply,
+};
+
+/// Typed service failure, mapped 1:1 onto wire [`ErrorCode`]s.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServiceError {
+    NoSession(String),
+    Exists(String),
+    SessionLimit { max: usize },
+    Capacity { reserved: usize, requested: usize, max: usize },
+    DimMismatch { expected: usize, got: usize },
+    Invalid(String),
+    Io(String),
+}
+
+impl ServiceError {
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            ServiceError::NoSession(_) => ErrorCode::NoSession,
+            ServiceError::Exists(_) => ErrorCode::Exists,
+            ServiceError::SessionLimit { .. } => ErrorCode::SessionLimit,
+            ServiceError::Capacity { .. } => ErrorCode::Capacity,
+            ServiceError::DimMismatch { .. } => ErrorCode::DimMismatch,
+            ServiceError::Invalid(_) => ErrorCode::BadRequest,
+            ServiceError::Io(_) => ErrorCode::Io,
+        }
+    }
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::NoSession(id) => write!(f, "unknown session {id:?}"),
+            ServiceError::Exists(id) => write!(f, "session {id:?} is already open"),
+            ServiceError::SessionLimit { max } => {
+                write!(f, "session limit reached ({max} open)")
+            }
+            ServiceError::Capacity { reserved, requested, max } => write!(
+                f,
+                "stored-element capacity exceeded: {reserved} reserved + {requested} \
+                 requested > {max}"
+            ),
+            ServiceError::DimMismatch { expected, got } => {
+                write!(f, "row has {got} features, session dim is {expected}")
+            }
+            ServiceError::Invalid(msg) => write!(f, "{msg}"),
+            ServiceError::Io(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// One tenant's state: the streaming algorithm, its drift detector, and
+/// the drift-event base carried over from a resumed checkpoint.
+struct Session {
+    spec: SessionSpec,
+    algo: Box<dyn StreamingAlgorithm>,
+    drift: Box<dyn DriftDetector>,
+    /// Drift events recorded before the last resume (the detector itself
+    /// restarts cold — its window is deliberately not persisted).
+    drift_base: usize,
+}
+
+impl Session {
+    fn drift_events(&self) -> usize {
+        self.drift_base + self.drift.events()
+    }
+
+    /// Ingest validated, row-aligned data. Without drift detection this is
+    /// one `process_batch` call — exactly what a standalone run over the
+    /// same chunks executes, so results stay bit-identical. With drift
+    /// enabled the pipeline's ordering is reproduced: every row is
+    /// observed *before* it reaches the algorithm, and a firing flushes
+    /// the pending prefix, resets the summary, then lets the firing row
+    /// start the next batch.
+    fn push(&mut self, rows: &[f32]) -> PushReply {
+        let d = self.spec.dim;
+        let n = rows.len() / d;
+        if self.spec.drift.is_none() {
+            if n > 0 {
+                self.algo.process_batch(rows);
+            }
+        } else {
+            let mut start = 0usize;
+            for i in 0..n {
+                if self.drift.observe(&rows[i * d..(i + 1) * d]) {
+                    if start < i {
+                        self.algo.process_batch(&rows[start * d..i * d]);
+                    }
+                    self.algo.reset();
+                    start = i;
+                }
+            }
+            if start < n {
+                self.algo.process_batch(&rows[start * d..]);
+            }
+        }
+        PushReply {
+            rows: n as u64,
+            len: self.algo.summary_len(),
+            value: self.algo.value(),
+            drift_events: self.drift_events(),
+        }
+    }
+
+    fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            algorithm: self.algo.name(),
+            dim: self.spec.dim,
+            k: self.spec.k,
+            value: self.algo.value(),
+            elements: self.algo.stats().elements,
+            drift_events: self.drift_events(),
+            state: self.algo.snapshot_state().unwrap_or(Json::Null),
+            summary: self.algo.summary(),
+        }
+    }
+}
+
+/// Shared per-session slot: the LRU stamp lives outside the mutex so the
+/// eviction sweep never blocks behind an in-flight push.
+///
+/// # Safety
+///
+/// `Session` is not `Send`/`Sync` only because its algorithm owns
+/// `Box<dyn SubmodularFunction>` trait objects. Asserting both here is
+/// sound because [`build_session_algo`] is the sole construction path and
+/// it refuses oracle families whose
+/// [`parallel_safe`](crate::functions::SubmodularFunction::parallel_safe)
+/// is false — the per-implementation promise that instances are
+/// self-contained owned data which may be *used* from any thread as long
+/// as no two threads touch one concurrently. The `Mutex` provides exactly
+/// that exclusion, and the manager never leaks `&Session` outside a
+/// guard. This mirrors `exec::AssertThreadSafe`, the crate's other
+/// audited erasure site.
+struct SessionCell {
+    /// The session's stored-element reservation (its `K`), readable
+    /// without locking for admission accounting.
+    k: usize,
+    /// Milliseconds since manager start at last access.
+    touched_ms: AtomicU64,
+    /// Set by `close`/`shutdown` before the final checkpoint is written:
+    /// new lookups are refused, and a straggler `push` that fetched the
+    /// cell earlier re-checks this *after* acquiring the session lock —
+    /// so no push is ever acknowledged without being covered by the
+    /// closing checkpoint.
+    closing: std::sync::atomic::AtomicBool,
+    session: Mutex<Session>,
+}
+
+unsafe impl Send for SessionCell {}
+unsafe impl Sync for SessionCell {}
+
+impl SessionCell {
+    /// Lock the session, riding through poisoning: a panicking handler is
+    /// caught at the pool boundary and must not wedge the tenant forever.
+    fn lock(&self) -> MutexGuard<'_, Session> {
+        self.session.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    opens: AtomicU64,
+    resumes: AtomicU64,
+    pushes: AtomicU64,
+    items: AtomicU64,
+    evictions: AtomicU64,
+    closes: AtomicU64,
+    checkpoints: AtomicU64,
+    checkpoint_failures: AtomicU64,
+}
+
+/// Construct a session's algorithm, enforcing the service's two
+/// constraints: streaming-capable specs only, and thread-safe oracle
+/// families only (see [`SessionCell`] safety docs).
+fn build_session_algo(spec: &SessionSpec) -> Result<Box<dyn StreamingAlgorithm>, ServiceError> {
+    if spec.dim == 0 || spec.k == 0 {
+        return Err(ServiceError::Invalid("k and dim must be positive".into()));
+    }
+    if matches!(spec.algo, AlgoSpec::Greedy) {
+        return Err(ServiceError::Invalid(
+            "greedy is an offline algorithm; pick a streaming one".into(),
+        ));
+    }
+    // Thread-safety gate: `build_algo` constructs every oracle through
+    // `make_oracle`, so probing one instance vouches for the family the
+    // session will hold. A non-parallel_safe oracle (e.g. PJRT) must never
+    // enter a SessionCell.
+    let probe = make_oracle(spec.dim, spec.k, GammaMode::Streaming);
+    if !probe.parallel_safe() {
+        return Err(ServiceError::Invalid(
+            "session oracle family is not thread-safe; cannot host it multi-tenant".into(),
+        ));
+    }
+    Ok(build_algo(&spec.algo, spec.dim, spec.k, GammaMode::Streaming, None))
+}
+
+/// The tenant map plus service-wide accounting. All methods take `&self`
+/// and are safe to call from any number of threads.
+pub struct SessionManager {
+    cfg: ServiceConfig,
+    started: Instant,
+    sessions: Mutex<HashMap<String, Arc<SessionCell>>>,
+    counters: Counters,
+}
+
+impl SessionManager {
+    pub fn new(cfg: ServiceConfig) -> Self {
+        SessionManager {
+            cfg,
+            started: Instant::now(),
+            sessions: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    fn map(&self) -> MutexGuard<'_, HashMap<String, Arc<SessionCell>>> {
+        self.sessions.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The admission rules, judged against one view of the map: id free,
+    /// session count under the cap, Σ K reservation within budget.
+    fn admit(
+        &self,
+        map: &HashMap<String, Arc<SessionCell>>,
+        id: &str,
+        k: usize,
+    ) -> Result<(), ServiceError> {
+        if map.contains_key(id) {
+            return Err(ServiceError::Exists(id.to_string()));
+        }
+        if map.len() >= self.cfg.max_sessions {
+            return Err(ServiceError::SessionLimit { max: self.cfg.max_sessions });
+        }
+        let reserved: usize = map.values().map(|c| c.k).sum();
+        if reserved + k > self.cfg.max_total_stored {
+            return Err(ServiceError::Capacity {
+                reserved,
+                requested: k,
+                max: self.cfg.max_total_stored,
+            });
+        }
+        Ok(())
+    }
+
+    /// Open (or resume) a session. Returns whether it resumed from a
+    /// checkpoint.
+    pub fn open(&self, id: &str, spec: &SessionSpec) -> Result<bool, ServiceError> {
+        if !valid_id(id) {
+            return Err(ServiceError::Invalid(format!("invalid session id {id:?}")));
+        }
+        // Expired tenants release their slots before admission is judged.
+        self.evict_idle();
+        // Cheap pre-flight admission BEFORE paying for oracle construction
+        // or checkpoint replay — a retry loop hammering a full service must
+        // cost O(map) per refusal, not a Cholesky build plus disk I/O. The
+        // authoritative re-check happens under the lock again right before
+        // the insert.
+        self.admit(&self.map(), id, spec.k)?;
+        let mut algo = build_session_algo(spec)?;
+        // Resume path, done WITHOUT holding the map lock (checkpoint load
+        // is disk I/O and restore replays the summary through the oracle —
+        // no reason to stall every other tenant behind it): a matching
+        // checkpoint with a state blob restores the algorithm exactly;
+        // anything else (absent, summary-only, mismatched spec, corrupt)
+        // starts fresh with resumed=0. A concurrent OPEN of the same id
+        // only wastes this work — the insert below still decides the
+        // winner and the loser gets `Exists`.
+        let mut resumed = false;
+        let mut drift_base = 0usize;
+        if let Some(dir) = &self.cfg.checkpoint_dir {
+            let path = dir.join(format!("{id}.ckpt"));
+            if let Ok(ck) = Checkpoint::load(&path) {
+                if ck.state != Json::Null
+                    && ck.dim == spec.dim
+                    && ck.k == spec.k
+                    && algo.restore_state(&ck.state, &ck.summary).is_ok()
+                {
+                    resumed = true;
+                    drift_base = ck.drift_events;
+                }
+            }
+        }
+        let mut map = self.map();
+        self.admit(&map, id, spec.k)?;
+        let drift: Box<dyn DriftDetector> = match spec.drift {
+            Some((w, th)) => Box::new(MeanShiftDetector::new(spec.dim, w, th)),
+            None => Box::new(NoDrift::default()),
+        };
+        let session = Session { spec: spec.clone(), algo, drift, drift_base };
+        map.insert(
+            id.to_string(),
+            Arc::new(SessionCell {
+                k: spec.k,
+                touched_ms: AtomicU64::new(self.now_ms()),
+                closing: std::sync::atomic::AtomicBool::new(false),
+                session: Mutex::new(session),
+            }),
+        );
+        self.counters.opens.fetch_add(1, Ordering::Relaxed);
+        if resumed {
+            self.counters.resumes.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(resumed)
+    }
+
+    /// Fetch a live cell, refreshing its LRU stamp.
+    fn cell(&self, id: &str) -> Result<Arc<SessionCell>, ServiceError> {
+        let map = self.map();
+        let cell = map.get(id).ok_or_else(|| ServiceError::NoSession(id.to_string()))?;
+        if cell.closing.load(Ordering::SeqCst) {
+            return Err(ServiceError::NoSession(id.to_string()));
+        }
+        cell.touched_ms.store(self.now_ms(), Ordering::Relaxed);
+        Ok(Arc::clone(cell))
+    }
+
+    pub fn push(&self, id: &str, body: &PushBody) -> Result<PushReply, ServiceError> {
+        let cell = self.cell(id)?;
+        let mut session = cell.lock();
+        // Straggler guard: if a close/shutdown marked the cell after we
+        // fetched it, its final checkpoint is (or is about to be) on disk
+        // without these rows — refuse rather than acknowledge data that
+        // would silently miss the persisted state.
+        if cell.closing.load(Ordering::SeqCst) {
+            return Err(ServiceError::NoSession(id.to_string()));
+        }
+        let d = session.spec.dim;
+        // CSV rows must be flattened (they arrive as separate Vecs); the
+        // packed form is already row-major and feeds the algorithm
+        // directly — no copy on the high-throughput path.
+        let reply = match body {
+            PushBody::Rows(rows) => {
+                let mut flat = Vec::with_capacity(rows.iter().map(Vec::len).sum());
+                for row in rows {
+                    if row.len() != d {
+                        return Err(ServiceError::DimMismatch { expected: d, got: row.len() });
+                    }
+                    flat.extend_from_slice(row);
+                }
+                session.push(&flat)
+            }
+            PushBody::Packed(flat) => {
+                if flat.len() % d != 0 {
+                    return Err(ServiceError::DimMismatch { expected: d, got: flat.len() % d });
+                }
+                session.push(flat)
+            }
+        };
+        self.counters.pushes.fetch_add(1, Ordering::Relaxed);
+        self.counters.items.fetch_add(reply.rows, Ordering::Relaxed);
+        Ok(reply)
+    }
+
+    pub fn summary(&self, id: &str) -> Result<SummaryReply, ServiceError> {
+        let cell = self.cell(id)?;
+        let session = cell.lock();
+        Ok(SummaryReply {
+            dim: session.spec.dim,
+            value: session.algo.value(),
+            data: session.algo.summary(),
+        })
+    }
+
+    pub fn stats(&self, id: &str) -> Result<StatsReply, ServiceError> {
+        let cell = self.cell(id)?;
+        let session = cell.lock();
+        Ok(StatsReply {
+            stats: session.algo.stats(),
+            value: session.algo.value(),
+            len: session.algo.summary_len(),
+            drift_events: session.drift_events(),
+        })
+    }
+
+    /// Close a session, checkpointing it first unless `discard` is set (or
+    /// no checkpoint dir is configured). Returns whether a checkpoint was
+    /// written.
+    ///
+    /// The session leaves the map only *after* its checkpoint is safely on
+    /// disk — a failed write returns the error with the session still
+    /// live, and there is no remove-then-reinsert window during which a
+    /// concurrent re-`OPEN` could silently displace the original state.
+    /// `discard` also deletes any on-disk `<id>.ckpt`, so a later
+    /// re-`OPEN` really does start fresh instead of resuming stale state.
+    pub fn close(&self, id: &str, discard: bool) -> Result<bool, ServiceError> {
+        let cell = {
+            let map = self.map();
+            map.get(id).cloned().ok_or_else(|| ServiceError::NoSession(id.to_string()))?
+        };
+        // Mark closing first: new lookups are refused and any push that
+        // already fetched the cell re-checks the flag under the session
+        // lock, so the checkpoint below cannot miss an acknowledged row.
+        if cell.closing.swap(true, Ordering::SeqCst) {
+            return Err(ServiceError::NoSession(id.to_string())); // concurrent close won
+        }
+        let checkpointed = if discard {
+            if let Some(dir) = &self.cfg.checkpoint_dir {
+                std::fs::remove_file(dir.join(format!("{id}.ckpt"))).ok();
+            }
+            false
+        } else {
+            match self.persist(id, &cell) {
+                Ok(written) => written,
+                Err(e) => {
+                    self.counters.checkpoint_failures.fetch_add(1, Ordering::Relaxed);
+                    cell.closing.store(false, Ordering::SeqCst); // keep the session live
+                    return Err(e);
+                }
+            }
+        };
+        if self.map().remove(id).is_some() {
+            self.counters.closes.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(checkpointed)
+    }
+
+    /// Write `<id>.ckpt` into the checkpoint dir (atomic tmp+rename).
+    /// `Ok(false)` means persistence is disabled.
+    fn persist(&self, id: &str, cell: &SessionCell) -> Result<bool, ServiceError> {
+        let Some(dir) = &self.cfg.checkpoint_dir else {
+            return Ok(false);
+        };
+        let ck = cell.lock().checkpoint();
+        ck.save(&dir.join(format!("{id}.ckpt")))
+            .map_err(|e| ServiceError::Io(format!("checkpoint {id}: {e}")))?;
+        self.counters.checkpoints.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Checkpoint-evict every session idle longer than the configured
+    /// timeout, oldest (LRU) first. Returns the number evicted. A session
+    /// whose checkpoint fails to write is kept alive instead of dropped.
+    pub fn evict_idle(&self) -> usize {
+        let timeout = self.cfg.idle_timeout;
+        if timeout.is_zero() {
+            return 0;
+        }
+        let Some(cutoff) = self.now_ms().checked_sub(timeout.as_millis() as u64) else {
+            return 0;
+        };
+        let mut expired: Vec<(String, Arc<SessionCell>)> = {
+            let map = self.map();
+            map.iter()
+                .filter(|(_, c)| c.touched_ms.load(Ordering::Relaxed) <= cutoff)
+                .map(|(id, c)| (id.clone(), Arc::clone(c)))
+                .collect()
+        };
+        expired.sort_by_key(|(_, c)| c.touched_ms.load(Ordering::Relaxed));
+        let mut evicted = 0usize;
+        for (id, cell) in expired {
+            if cell.touched_ms.load(Ordering::Relaxed) > cutoff {
+                continue; // touched since the scan
+            }
+            // Checkpoint FIRST, remove second: a failed write keeps the
+            // tenant live (no state loss, no remove-then-reinsert window),
+            // and a touch that lands between the write and the re-check
+            // below simply cancels the eviction — the extra checkpoint
+            // file is harmless because resume only consults it once the
+            // session is gone from the map.
+            if self.persist(&id, &cell).is_err() {
+                self.counters.checkpoint_failures.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let mut map = self.map();
+            let still_expired = match map.get(&id) {
+                Some(c) => {
+                    Arc::ptr_eq(c, &cell) && c.touched_ms.load(Ordering::Relaxed) <= cutoff
+                }
+                None => false,
+            };
+            if still_expired {
+                map.remove(&id);
+                evicted += 1;
+                self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        evicted
+    }
+
+    /// Checkpoint every live session in place without evicting it —
+    /// crash insurance for deployments that can only be stopped with a
+    /// hard kill. Returns the number of checkpoints written; 0 when
+    /// persistence is disabled.
+    pub fn checkpoint_all(&self) -> usize {
+        if self.cfg.checkpoint_dir.is_none() {
+            return 0;
+        }
+        let cells: Vec<(String, Arc<SessionCell>)> =
+            self.map().iter().map(|(id, c)| (id.clone(), Arc::clone(c))).collect();
+        let mut written = 0usize;
+        for (id, cell) in cells {
+            match self.persist(&id, &cell) {
+                Ok(true) => written += 1,
+                Ok(false) => {}
+                Err(_) => {
+                    self.counters.checkpoint_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        written
+    }
+
+    /// Checkpoint and drop every live session (service shutdown). Returns
+    /// the number of checkpoints written.
+    pub fn shutdown(&self) -> usize {
+        let cells: Vec<(String, Arc<SessionCell>)> = self.map().drain().collect();
+        // Refuse straggler pushes that fetched a cell before the drain —
+        // they must not be acknowledged after the final checkpoint.
+        for (_, cell) in &cells {
+            cell.closing.store(true, Ordering::SeqCst);
+        }
+        let mut written = 0usize;
+        for (id, cell) in cells {
+            match self.persist(&id, &cell) {
+                Ok(true) => written += 1,
+                Ok(false) => {}
+                Err(_) => {
+                    self.counters.checkpoint_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        written
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.map().len()
+    }
+
+    /// Service-wide snapshot. `items`/`queries`/`stored` aggregate the
+    /// live sessions' [`crate::metrics::AlgoStats`] — by construction they
+    /// equal the sum of per-session `STATS` replies taken at the same
+    /// moment.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        // Snapshot the cell handles first, then aggregate without the map
+        // lock — METRICS behind one busy tenant must not freeze session
+        // lookup for everyone else.
+        let cells: Vec<Arc<SessionCell>> = self.map().values().cloned().collect();
+        let sessions = cells.len();
+        let mut stored = 0usize;
+        let mut items = 0u64;
+        let mut queries = 0u64;
+        for cell in &cells {
+            let s = cell.lock();
+            let st = s.algo.stats();
+            stored += st.stored;
+            items += st.elements;
+            queries += st.queries;
+        }
+        let uptime_s = self.started.elapsed().as_secs_f64();
+        let items_total = self.counters.items.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            sessions,
+            stored,
+            items,
+            queries,
+            opens: self.counters.opens.load(Ordering::Relaxed),
+            resumes: self.counters.resumes.load(Ordering::Relaxed),
+            pushes: self.counters.pushes.load(Ordering::Relaxed),
+            items_total,
+            evictions: self.counters.evictions.load(Ordering::Relaxed),
+            closes: self.counters.closes.load(Ordering::Relaxed),
+            checkpoints: self.counters.checkpoints.load(Ordering::Relaxed),
+            uptime_s,
+            items_per_s: if uptime_s > 0.0 { items_total as f64 / uptime_s } else { 0.0 },
+        }
+    }
+
+    /// Execute one parsed request — the single dispatch point shared by
+    /// the TCP server and in-process harnesses.
+    pub fn execute(&self, req: &Request) -> Response {
+        let err = |e: ServiceError| Response::error(e.code(), e.to_string());
+        match req {
+            Request::Open { id, spec } => match self.open(id, spec) {
+                Ok(resumed) => Response::Opened { id: id.clone(), resumed },
+                Err(e) => err(e),
+            },
+            Request::Push { id, body } => match self.push(id, body) {
+                Ok(reply) => Response::Pushed { id: id.clone(), reply },
+                Err(e) => err(e),
+            },
+            Request::Summary { id } => match self.summary(id) {
+                Ok(reply) => Response::SummaryData { id: id.clone(), reply },
+                Err(e) => err(e),
+            },
+            Request::Stats { id } => match self.stats(id) {
+                Ok(reply) => Response::StatsData { id: id.clone(), reply },
+                Err(e) => err(e),
+            },
+            Request::Close { id, discard } => match self.close(id, *discard) {
+                Ok(checkpointed) => Response::Closed { id: id.clone(), checkpointed },
+                Err(e) => err(e),
+            },
+            Request::Metrics => Response::MetricsData(self.metrics()),
+            Request::Ping => Response::Pong,
+            Request::Quit => Response::Bye,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+    use std::time::Duration;
+
+    fn cfg() -> ServiceConfig {
+        ServiceConfig { idle_timeout: Duration::ZERO, ..ServiceConfig::default() }
+    }
+
+    fn spec(dim: usize, k: usize) -> SessionSpec {
+        SessionSpec::three_sieves(dim, k, 0.01, 50)
+    }
+
+    fn stream(n: usize, seed: u64) -> crate::data::Dataset {
+        registry::get("fact-highlevel-like", n, seed).unwrap()
+    }
+
+    #[test]
+    fn push_matches_standalone_run() {
+        let mgr = SessionManager::new(cfg());
+        let ds = stream(400, 3);
+        let sp = spec(ds.dim(), 6);
+        assert!(!mgr.open("t1", &sp).unwrap());
+        let d = ds.dim();
+        let mut standalone = build_algo(&sp.algo, d, sp.k, GammaMode::Streaming, None);
+        for chunk in ds.raw().chunks(64 * d) {
+            let reply =
+                mgr.push("t1", &PushBody::Packed(chunk.to_vec())).unwrap();
+            standalone.process_batch(chunk);
+            assert_eq!(reply.value.to_bits(), standalone.value().to_bits());
+        }
+        let summary = mgr.summary("t1").unwrap();
+        assert_eq!(summary.data, standalone.summary());
+        let stats = mgr.stats("t1").unwrap();
+        assert_eq!(stats.stats, standalone.stats());
+    }
+
+    #[test]
+    fn admission_control_refuses_over_caps() {
+        let mut c = cfg();
+        c.max_sessions = 2;
+        c.max_total_stored = 10;
+        let mgr = SessionManager::new(c);
+        mgr.open("a", &spec(4, 4)).unwrap();
+        mgr.open("b", &spec(4, 4)).unwrap();
+        // Session cap first.
+        match mgr.open("c", &spec(4, 1)) {
+            Err(ServiceError::SessionLimit { max }) => assert_eq!(max, 2),
+            other => panic!("{other:?}"),
+        }
+        mgr.close("b", true).unwrap();
+        // Now the Σ K reservation cap: 4 + 7 > 10.
+        match mgr.open("c", &spec(4, 7)) {
+            Err(ServiceError::Capacity { reserved, requested, max }) => {
+                assert_eq!((reserved, requested, max), (4, 7, 10));
+            }
+            other => panic!("{other:?}"),
+        }
+        // Within budget is fine: 4 + 6 = 10.
+        mgr.open("c", &spec(4, 6)).unwrap();
+    }
+
+    #[test]
+    fn session_errors_are_typed() {
+        let mgr = SessionManager::new(cfg());
+        let missing = mgr.push("nope", &PushBody::Packed(vec![]));
+        assert!(matches!(missing, Err(ServiceError::NoSession(_))));
+        mgr.open("t", &spec(4, 3)).unwrap();
+        assert!(matches!(mgr.open("t", &spec(4, 3)), Err(ServiceError::Exists(_))));
+        assert!(matches!(
+            mgr.push("t", &PushBody::Rows(vec![vec![1.0; 3]])),
+            Err(ServiceError::DimMismatch { expected: 4, got: 3 })
+        ));
+        assert!(matches!(
+            mgr.push("t", &PushBody::Packed(vec![0.0; 7])),
+            Err(ServiceError::DimMismatch { .. })
+        ));
+        assert!(matches!(
+            mgr.open("u", &SessionSpec { algo: AlgoSpec::Greedy, dim: 4, k: 3, drift: None }),
+            Err(ServiceError::Invalid(_))
+        ));
+        assert!(matches!(mgr.open("bad id", &spec(4, 3)), Err(ServiceError::Invalid(_))));
+    }
+
+    #[test]
+    fn idle_eviction_checkpoints_and_reopen_resumes() {
+        let dir = std::env::temp_dir().join(format!("ts_svc_evict_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = ServiceConfig {
+            idle_timeout: Duration::from_millis(5),
+            checkpoint_dir: Some(dir.clone()),
+            ..ServiceConfig::default()
+        };
+        let mgr = SessionManager::new(c);
+        let ds = stream(600, 9);
+        let sp = spec(ds.dim(), 5);
+        let d = ds.dim();
+        let half = ds.len() / 2 * d;
+        mgr.open("ev", &sp).unwrap();
+        mgr.push("ev", &PushBody::Packed(ds.raw()[..half].to_vec())).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(mgr.evict_idle(), 1);
+        assert_eq!(mgr.session_count(), 0);
+        let ck = Checkpoint::load(&dir.join("ev.ckpt")).unwrap();
+        assert_eq!(ck.dim, d);
+        assert_ne!(ck.state, Json::Null, "ThreeSieves checkpoints must carry state");
+        // Re-open resumes and finishes bit-identically to an uninterrupted run.
+        assert!(mgr.open("ev", &sp).unwrap(), "must resume from the eviction checkpoint");
+        mgr.push("ev", &PushBody::Packed(ds.raw()[half..].to_vec())).unwrap();
+        let mut whole = build_algo(&sp.algo, d, sp.k, GammaMode::Streaming, None);
+        whole.process_batch(&ds.raw()[..half]);
+        whole.process_batch(&ds.raw()[half..]);
+        let got = mgr.summary("ev").unwrap();
+        assert_eq!(got.value.to_bits(), whole.value().to_bits());
+        assert_eq!(got.data, whole.summary());
+        assert_eq!(mgr.stats("ev").unwrap().stats, whole.stats());
+        let m = mgr.metrics();
+        assert_eq!(m.evictions, 1);
+        assert_eq!(m.resumes, 1);
+        // Discarding close also forgets the on-disk state.
+        mgr.close("ev", true).unwrap();
+        assert!(!dir.join("ev.ckpt").exists(), "discard close must delete the checkpoint");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metrics_aggregate_live_session_stats() {
+        let mgr = SessionManager::new(cfg());
+        let mut want_items = 0u64;
+        let mut want_queries = 0u64;
+        let mut want_stored = 0usize;
+        for (i, n) in [200usize, 300, 250].iter().enumerate() {
+            let ds = stream(*n, i as u64 + 1);
+            let id = format!("m{i}");
+            mgr.open(&id, &spec(ds.dim(), 4)).unwrap();
+            mgr.push(&id, &PushBody::Packed(ds.raw().to_vec())).unwrap();
+            let st = mgr.stats(&id).unwrap().stats;
+            want_items += st.elements;
+            want_queries += st.queries;
+            want_stored += st.stored;
+        }
+        let m = mgr.metrics();
+        assert_eq!(m.sessions, 3);
+        assert_eq!(m.items, want_items);
+        assert_eq!(m.queries, want_queries);
+        assert_eq!(m.stored, want_stored);
+        assert_eq!(m.items_total, want_items, "no closes yet, totals match live");
+        assert_eq!(m.opens, 3);
+        assert_eq!(m.pushes, 3);
+    }
+
+    #[test]
+    fn drift_session_reselects_like_the_pipeline() {
+        let mgr = SessionManager::new(cfg());
+        let ds = registry::get("stream51-like", 2000, 8).unwrap();
+        let d = ds.dim();
+        let sp = SessionSpec { drift: Some((100, 3.0)), ..spec(d, 6) };
+        mgr.open("dr", &sp).unwrap();
+        for chunk in ds.raw().chunks(64 * d) {
+            mgr.push("dr", &PushBody::Packed(chunk.to_vec())).unwrap();
+        }
+        let st = mgr.stats("dr").unwrap();
+        assert!(st.drift_events > 0, "stream51-like must drift");
+        // Mirror of the pipeline's flush-before-reset ordering.
+        let mut algo = build_algo(&sp.algo, d, sp.k, GammaMode::Streaming, None);
+        let mut det = MeanShiftDetector::new(d, 100, 3.0);
+        let mut pending: Vec<f32> = Vec::new();
+        for row in ds.iter() {
+            if det.observe(row) {
+                if !pending.is_empty() {
+                    algo.process_batch(&pending);
+                    pending.clear();
+                }
+                algo.reset();
+            }
+            pending.extend_from_slice(row);
+            if pending.len() >= 64 * d {
+                algo.process_batch(&pending);
+                pending.clear();
+            }
+        }
+        if !pending.is_empty() {
+            algo.process_batch(&pending);
+        }
+        assert_eq!(st.drift_events, det.events());
+        let got = mgr.summary("dr").unwrap();
+        assert_eq!(got.value.to_bits(), algo.value().to_bits());
+        assert_eq!(got.data, algo.summary());
+    }
+
+    #[test]
+    fn concurrent_pushes_from_threads_match_sequential_replay() {
+        let mgr = Arc::new(SessionManager::new(cfg()));
+        let n_sessions = 6;
+        let handles: Vec<_> = (0..n_sessions)
+            .map(|i| {
+                let mgr = Arc::clone(&mgr);
+                std::thread::spawn(move || {
+                    let ds = stream(300 + 40 * i, 100 + i as u64);
+                    let d = ds.dim();
+                    let sp = spec(d, 5);
+                    let id = format!("c{i}");
+                    mgr.open(&id, &sp).unwrap();
+                    for chunk in ds.raw().chunks(48 * d) {
+                        mgr.push(&id, &PushBody::Packed(chunk.to_vec())).unwrap();
+                    }
+                    let got = mgr.summary(&id).unwrap();
+                    let stats = mgr.stats(&id).unwrap().stats;
+                    (ds, sp, got, stats)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (ds, sp, got, stats) = h.join().unwrap();
+            let d = ds.dim();
+            let mut solo = build_algo(&sp.algo, d, sp.k, GammaMode::Streaming, None);
+            for chunk in ds.raw().chunks(48 * d) {
+                solo.process_batch(chunk);
+            }
+            assert_eq!(got.value.to_bits(), solo.value().to_bits());
+            assert_eq!(got.data, solo.summary());
+            assert_eq!(stats, solo.stats());
+        }
+        assert_eq!(mgr.metrics().sessions, n_sessions);
+    }
+}

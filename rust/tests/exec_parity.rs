@@ -186,6 +186,7 @@ fn sharded_checkpoint_roundtrip_resumes_identically_under_pool() {
         value: algo.value(),
         elements: (ds.len() / 2) as u64,
         drift_events: 0,
+        state: threesieves::util::json::Json::Null,
         summary: algo.summary(),
     };
     let (p_seq, p_par) = (dir.join("seq.ckpt"), dir.join("par.ckpt"));

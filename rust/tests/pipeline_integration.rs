@@ -102,6 +102,7 @@ fn checkpoint_restart_resumes_equivalently() {
         value: algo.value(),
         elements: (n / 2) as u64,
         drift_events: 0,
+        state: algo.snapshot_state().unwrap_or(threesieves::util::json::Json::Null),
         summary: algo.summary(),
     };
     ck.save(&ckpt).unwrap();

@@ -1,0 +1,247 @@
+//! Service integration: the multi-tenant acceptance gate.
+//!
+//! * 8 concurrent tenants over real TCP (loopback), heterogeneous
+//!   algorithms/dims, CSV and packed encodings — every per-session summary,
+//!   value and stat must be **bit-identical** to running the same stream
+//!   standalone in-process.
+//! * The `METRICS` snapshot's aggregate item/query counts must equal the
+//!   sum of the per-session `STATS` replies.
+//! * Close → re-`OPEN` resumes from the checkpoint and finishes
+//!   bit-identically to a never-interrupted run.
+//! * Admission control refuses over-cap `OPEN`s with typed error codes.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use threesieves::algorithms::StreamingAlgorithm;
+use threesieves::config::{AlgoSpec, ServiceConfig};
+use threesieves::coordinator::checkpoint::Checkpoint;
+use threesieves::data::registry;
+use threesieves::exec::Parallelism;
+use threesieves::experiments::{build_algo, GammaMode};
+use threesieves::metrics::AlgoStats;
+use threesieves::service::{Client, ClientError, ErrorCode, Server, SessionSpec};
+use threesieves::util::json::Json;
+
+const CHUNK_ROWS: usize = 64;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ts_svc_it_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Standalone replay: the same chunks through the same spec, no service.
+fn standalone(spec: &SessionSpec, raw: &[f32]) -> (f64, Vec<f32>, AlgoStats) {
+    let mut algo = build_algo(&spec.algo, spec.dim, spec.k, GammaMode::Streaming, None);
+    for chunk in raw.chunks(CHUNK_ROWS * spec.dim) {
+        algo.process_batch(chunk);
+    }
+    (algo.value(), algo.summary(), algo.stats())
+}
+
+/// One tenant's workload: dataset surrogate + session spec.
+fn tenant(i: usize) -> (&'static str, usize, u64, SessionSpec) {
+    let ts = |eps: f64, t: usize| AlgoSpec::ThreeSieves { epsilon: eps, t };
+    let spec = |algo: AlgoSpec, dim: usize, k: usize| SessionSpec { algo, dim, k, drift: None };
+    match i {
+        0 => ("fact-highlevel-like", 400, 1, spec(ts(0.01, 80), 16, 6)),
+        1 => ("forestcover-like", 500, 2, spec(ts(0.005, 50), 10, 5)),
+        2 => ("abc-like", 300, 3, spec(AlgoSpec::SieveStreaming { epsilon: 0.1 }, 50, 4)),
+        3 => {
+            ("creditfraud-like", 350, 4, spec(AlgoSpec::SieveStreamingPP { epsilon: 0.1 }, 29, 4))
+        }
+        4 => {
+            let algo = AlgoSpec::Salsa { epsilon: 0.1, use_length_hint: false };
+            ("kddcup-like", 300, 5, spec(algo, 41, 4))
+        }
+        5 => {
+            let algo = AlgoSpec::QuickStream { c: 2, epsilon: 0.1, seed: 7 };
+            ("fact-highlevel-like", 450, 6, spec(algo, 16, 5))
+        }
+        6 => ("stream51-like", 400, 7, spec(ts(0.02, 60), 64, 6)),
+        _ => {
+            let algo = AlgoSpec::ShardedThreeSieves { epsilon: 0.02, t: 60, shards: 3 };
+            ("examiner-like", 350, 8, spec(algo, 50, 5))
+        }
+    }
+}
+
+#[test]
+fn eight_concurrent_tenants_over_tcp_match_standalone() {
+    let cfg = ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        parallelism: Parallelism::Threads(10),
+        ..ServiceConfig::default()
+    };
+    let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+    let addr = handle.addr();
+
+    let workers: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let (dataset, n, seed, spec) = tenant(i);
+                let ds = registry::get(dataset, n, seed).unwrap();
+                assert_eq!(ds.dim(), spec.dim, "tenant {i} dim");
+                let id = format!("tenant-{i}");
+                let mut client = Client::connect(addr).unwrap();
+                assert!(!client.open(&id, &spec).unwrap(), "tenant {i}: fresh open");
+                let (want_value, want_summary, want_stats) = standalone(&spec, ds.raw());
+                let mut last = None;
+                for chunk in ds.raw().chunks(CHUNK_ROWS * spec.dim) {
+                    // Alternate encodings: both must be bit-exact on the wire.
+                    let reply = if i % 2 == 0 {
+                        client.push_packed(&id, chunk).unwrap()
+                    } else {
+                        client.push_rows(&id, chunk, spec.dim).unwrap()
+                    };
+                    last = Some(reply);
+                }
+                let last = last.unwrap();
+                assert_eq!(last.value.to_bits(), want_value.to_bits(), "tenant {i}: value");
+                let got = client.summary(&id).unwrap();
+                assert_eq!(got.dim, spec.dim);
+                assert_eq!(got.data, want_summary, "tenant {i}: summary bits");
+                let stats = client.stats(&id).unwrap();
+                assert_eq!(stats.stats, want_stats, "tenant {i}: stats");
+                assert_eq!(stats.stats.elements, n as u64);
+                // Session stays open so the metrics check below can
+                // aggregate it; the connection closes politely.
+                client.quit().unwrap();
+                stats.stats
+            })
+        })
+        .collect();
+
+    let mut sum = AlgoStats::default();
+    let mut stored_sum = 0usize;
+    for w in workers {
+        let st = w.join().unwrap();
+        sum.queries += st.queries;
+        sum.elements += st.elements;
+        stored_sum += st.stored;
+    }
+
+    // The acceptance invariant: service-wide aggregates equal the sum of
+    // per-session AlgoStats.
+    let mut client = Client::connect(addr).unwrap();
+    let m = client.metrics().unwrap();
+    assert_eq!(m.sessions, 8);
+    assert_eq!(m.items, sum.elements, "metrics items != sum of session elements");
+    assert_eq!(m.queries, sum.queries, "metrics queries != sum of session queries");
+    assert_eq!(m.stored, stored_sum);
+    assert_eq!(m.items_total, sum.elements);
+    assert_eq!(m.opens, 8);
+    for i in 0..8 {
+        assert!(!client.close(&format!("tenant-{i}"), true).unwrap());
+    }
+    assert_eq!(client.metrics().unwrap().sessions, 0);
+    client.quit().unwrap();
+    handle.shutdown();
+}
+
+#[test]
+fn close_reopen_resumes_bit_identically_over_tcp() {
+    let dir = tmpdir("resume");
+    let cfg = ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        checkpoint_dir: Some(dir.clone()),
+        parallelism: Parallelism::Threads(2),
+        ..ServiceConfig::default()
+    };
+    let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+    let spec = SessionSpec::three_sieves(16, 6, 0.01, 70);
+    let ds = registry::get("fact-highlevel-like", 800, 21).unwrap();
+    let half = ds.len() / 2 * ds.dim();
+
+    let mut client = Client::connect(handle.addr()).unwrap();
+    assert!(!client.open("res", &spec).unwrap());
+    for chunk in ds.raw()[..half].chunks(CHUNK_ROWS * spec.dim) {
+        client.push_packed("res", chunk).unwrap();
+    }
+    assert!(client.close("res", false).unwrap(), "close must checkpoint");
+    let ckpt_path = dir.join("res.ckpt");
+    let ck = Checkpoint::load(&ckpt_path).unwrap();
+    assert_ne!(ck.state, Json::Null, "resumable state must be persisted");
+    assert_eq!(ck.elements, (ds.len() / 2) as u64);
+    assert!(!dir.join("res.ckpt.tmp").exists(), "atomic save leaves no staging file");
+
+    // Re-OPEN resumes and the continued run is bit-identical to one that
+    // never paused.
+    assert!(client.open("res", &spec).unwrap(), "must resume from checkpoint");
+    for chunk in ds.raw()[half..].chunks(CHUNK_ROWS * spec.dim) {
+        client.push_packed("res", chunk).unwrap();
+    }
+    let (want_value, want_summary, want_stats) = standalone(&spec, ds.raw());
+    let got = client.summary("res").unwrap();
+    assert_eq!(got.value.to_bits(), want_value.to_bits());
+    assert_eq!(got.data, want_summary);
+    let stats = client.stats("res").unwrap();
+    assert_eq!(stats.stats, want_stats, "accounting must continue across the pause");
+    client.quit().unwrap();
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shutdown_checkpoints_open_sessions() {
+    let dir = tmpdir("shutdown");
+    let cfg = ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        checkpoint_dir: Some(dir.clone()),
+        ..ServiceConfig::default()
+    };
+    let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+    let spec = SessionSpec::three_sieves(16, 5, 0.02, 40);
+    let ds = registry::get("fact-highlevel-like", 300, 33).unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    client.open("sd", &spec).unwrap();
+    client.push_packed("sd", ds.raw()).unwrap();
+    client.quit().unwrap();
+    let m = handle.shutdown();
+    assert_eq!(m.sessions, 1, "snapshot taken before sessions close");
+    let ck = Checkpoint::load(&dir.join("sd.ckpt")).unwrap();
+    assert_eq!(ck.elements, ds.len() as u64);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn admission_and_validation_errors_over_tcp() {
+    let cfg = ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        max_sessions: 2,
+        max_total_stored: 10,
+        ..ServiceConfig::default()
+    };
+    let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    let small = SessionSpec::three_sieves(4, 4, 0.05, 20);
+    client.open("a", &small).unwrap();
+    client.open("b", &small).unwrap();
+    // Session cap.
+    match client.open("c", &small) {
+        Err(ClientError::Server { code: ErrorCode::SessionLimit, .. }) => {}
+        other => panic!("expected session-limit, got {other:?}"),
+    }
+    // Reservation cap: 4 + 4 + 7 > 10 even under the session cap.
+    client.close("b", true).unwrap();
+    match client.open("c", &SessionSpec::three_sieves(4, 7, 0.05, 20)) {
+        Err(ClientError::Server { code: ErrorCode::Capacity, .. }) => {}
+        other => panic!("expected capacity, got {other:?}"),
+    }
+    // Dim mismatch and unknown session are typed too.
+    match client.push_rows("a", &[1.0, 2.0, 3.0], 3) {
+        Err(ClientError::Server { code: ErrorCode::DimMismatch, .. }) => {}
+        other => panic!("expected dim-mismatch, got {other:?}"),
+    }
+    match client.stats("ghost") {
+        Err(ClientError::Server { code: ErrorCode::NoSession, .. }) => {}
+        other => panic!("expected no-session, got {other:?}"),
+    }
+    match client.open("a", &small) {
+        Err(ClientError::Server { code: ErrorCode::Exists, .. }) => {}
+        other => panic!("expected exists, got {other:?}"),
+    }
+    client.quit().unwrap();
+    handle.shutdown();
+}
