@@ -13,19 +13,23 @@
 //! * Multi-tenant service throughput: 8 concurrent TCP sessions driven by
 //!   the in-process client against a loopback server (the issue-#3
 //!   serving path, protocol + session manager included)
+//! * Shared kernel-panel broker: multi-sieve SieveStreaming with
+//!   per-sieve panels vs the cross-sieve shared panel at ε ∈ {0.1, 0.01}
+//!   — measured kernel evals + wall time (the issue-#4 acceptance point:
+//!   ≥2× fewer kernel evals at ε = 0.01)
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- [--quick] [--json PATH]
-//! [--scaling-json PATH] [--service-json PATH]]`. `--quick` shrinks
-//! iteration counts to CI-smoke scale; `--json PATH` writes the headline
-//! numbers as a JSON object (the CI bench job uploads it as an artifact so
-//! the BENCH_* trajectory populates); `--scaling-json PATH` /
-//! `--service-json PATH` write the thread-scaling and service-throughput
-//! numbers as their own artifacts.
+//! [--scaling-json PATH] [--service-json PATH] [--panel-json PATH]]`.
+//! `--quick` shrinks iteration counts to CI-smoke scale; `--json PATH`
+//! writes the headline numbers as a JSON object (the CI bench job uploads
+//! it as an artifact so the BENCH_* trajectory populates); the other
+//! `--*-json` flags write the thread-scaling, service-throughput and
+//! panel-sharing numbers as their own artifacts.
 
 use std::path::PathBuf;
 
 use threesieves::algorithms::three_sieves::SieveTuning;
-use threesieves::algorithms::{StreamingAlgorithm, ThreeSieves};
+use threesieves::algorithms::{SieveStreaming, StreamingAlgorithm, ThreeSieves};
 use threesieves::coordinator::ShardedThreeSieves;
 use threesieves::data::registry;
 use threesieves::exec::{ExecContext, Parallelism};
@@ -262,6 +266,64 @@ fn bench_sharded_scaling(n: usize, iters: usize, rep: &mut Report, scaling: &mut
     }
 }
 
+/// The shared kernel-panel broker head-to-head: a multi-sieve
+/// SieveStreaming ingesting the same chunked stream with per-sieve B×n
+/// panels vs the shared broker panel (one U×B panel per chunk across all
+/// sieves), at ε ∈ {0.1, 0.01}. Reports measured kernel-entry
+/// evaluations and wall time; the dense ε = 0.01 grid is the acceptance
+/// point (kernel evals must drop ≥2× — `panel_sharing_parity` pins the
+/// bit-identical summaries/queries, this row tracks the measured ratio).
+fn bench_panel_sharing(n: usize, iters: usize, rep: &mut Report, panel: &mut Report) {
+    let dataset = "fact-highlevel-like";
+    let info = registry::info(dataset).unwrap();
+    let ds = registry::get(dataset, n, 7).unwrap();
+    let (k, batch) = (32usize, 64usize);
+    for eps in [0.1f64, 0.01] {
+        let mut evals = [0u64; 2]; // [per-sieve, shared]
+        let mut secs = [0f64; 2];
+        for (mode, shared) in [false, true].into_iter().enumerate() {
+            let mut kernel_evals = 0u64;
+            let stats = bench_loop(1, iters, || {
+                let f = NativeLogDet::new(LogDetConfig::for_streaming(info.dim, k));
+                let mut algo = SieveStreaming::new(Box::new(f), k, eps);
+                algo.set_panel_sharing(shared);
+                for chunk in ds.raw().chunks(batch * info.dim) {
+                    algo.process_batch(chunk);
+                }
+                kernel_evals = algo.stats().kernel_evals;
+                std::hint::black_box(algo.value());
+            });
+            evals[mode] = kernel_evals;
+            secs[mode] = stats.mean();
+            let label = if shared { "shared " } else { "per-sieve" };
+            println!(
+                "panel sharing    d={:<4} K={k:<4} eps={eps:<5} {label:<9}: \
+                 {:>9.2} ms/{n} items  kernel_evals={kernel_evals} [{}]",
+                info.dim,
+                stats.mean() * 1e3,
+                stats.summary("s")
+            );
+        }
+        let eval_ratio = evals[0] as f64 / evals[1].max(1) as f64;
+        let speedup = secs[0] / secs[1];
+        println!(
+            "panel sharing    d={:<4} K={k:<4} eps={eps:<5} ratio    : \
+             kernel evals {eval_ratio:.2}x fewer, wall {speedup:.2}x faster",
+            info.dim
+        );
+        let tag = if eps == 0.1 { "eps01" } else { "eps001" };
+        for (key, val) in [
+            (format!("panel_sharing_{tag}_per_sieve_kernel_evals"), evals[0] as f64),
+            (format!("panel_sharing_{tag}_shared_kernel_evals"), evals[1] as f64),
+            (format!("panel_sharing_{tag}_kernel_eval_ratio"), eval_ratio),
+            (format!("panel_sharing_{tag}_wall_speedup"), speedup),
+        ] {
+            rep.push(key.clone(), val);
+            panel.push(key, val);
+        }
+    }
+}
+
 /// Multi-tenant serving throughput: `sessions` concurrent tenants over
 /// loopback TCP, each streaming `n_per_session` items in 64-row packed
 /// chunks through its own connection. Measures the full serving path —
@@ -350,9 +412,15 @@ fn main() {
         .position(|a| a == "--service-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let panel_json_path = args
+        .iter()
+        .position(|a| a == "--panel-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let mut rep = Report { entries: Vec::new() };
     let mut scaling = Report { entries: Vec::new() };
     let mut service = Report { entries: Vec::new() };
+    let mut panel = Report { entries: Vec::new() };
 
     println!("== micro hot-path benchmarks{} ==", if quick { " (quick)" } else { "" });
     let gain_iters = if quick { 200 } else { 2000 };
@@ -372,6 +440,8 @@ fn main() {
     bench_threesieves_throughput(e2e_n, e2e_iters, &mut rep);
     let (scale_n, scale_iters) = if quick { (4_000, 2) } else { (16_000, 3) };
     bench_sharded_scaling(scale_n, scale_iters, &mut rep, &mut scaling);
+    let (panel_n, panel_iters) = if quick { (3_000, 2) } else { (10_000, 3) };
+    bench_panel_sharing(panel_n, panel_iters, &mut rep, &mut panel);
     let (svc_n, svc_iters) = if quick { (2_000, 2) } else { (8_000, 3) };
     bench_service_sessions(svc_n, 8, svc_iters, &mut rep, &mut service);
 
@@ -389,6 +459,12 @@ fn main() {
     }
     if let Some(path) = service_json_path {
         match service.write(&path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+    if let Some(path) = panel_json_path {
+        match panel.write(&path) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("failed to write {path}: {e}"),
         }

@@ -43,7 +43,7 @@ pub use stream_greedy::StreamGreedy;
 pub use three_sieves::ThreeSieves;
 
 use crate::exec::ExecContext;
-use crate::functions::SubmodularFunction;
+use crate::functions::{ChunkPanel, SubmodularFunction};
 use crate::metrics::AlgoStats;
 use crate::util::json::Json;
 
@@ -161,19 +161,47 @@ pub(crate) fn sieve_threshold(v: f64, f_s: f64, k: usize, len: usize) -> f64 {
     (v / 2.0 - f_s) / (k - len) as f64
 }
 
+/// Where one summary row's kernel entries for the current chunk live:
+/// a slot of the shared [`ChunkPanel`](crate::functions::ChunkPanel), or a
+/// chunk-local row the sieve computed itself after a mid-chunk accept.
+#[derive(Clone, Copy)]
+pub(crate) enum KvSrc {
+    Shared(u32),
+    Local(u32),
+}
+
 /// One sieve: a candidate OPT estimate `v` plus its own oracle.
 pub(crate) struct Sieve {
     pub v: f64,
     pub oracle: Box<dyn SubmodularFunction>,
     /// Gain-panel scratch for [`offer_batch`](Self::offer_batch) — owned
     /// per sieve so the exec pool's fan-out needs no shared buffers and
-    /// the hot path allocates once, not once per chunk.
-    scratch: Vec<f64>,
+    /// the hot path allocates once, not once per chunk. The shared-panel
+    /// path reuses it for its gathered gains.
+    pub(crate) scratch: Vec<f64>,
+    /// Chunk-scoped gather plan under the shared panel: one entry per
+    /// summary row (in acceptance order).
+    kv_src: Vec<KvSrc>,
+    /// Chunk-local kernel rows (rows this sieve accepted mid-chunk whose
+    /// entries the chunk-start panel cannot have), row-major with the
+    /// chunk width.
+    local: Vec<f64>,
+    /// Interned id per chunk-local row — lets a post-refresh rebind (see
+    /// SieveStreaming++) find a surviving row's entries again, and lets a
+    /// duplicate acceptance reuse an already computed row.
+    local_ids: Vec<u32>,
 }
 
 impl Sieve {
     pub fn new(v: f64, proto: &dyn SubmodularFunction) -> Self {
-        Sieve { v, oracle: proto.clone_empty(), scratch: Vec::new() }
+        Sieve {
+            v,
+            oracle: proto.clone_empty(),
+            scratch: Vec::new(),
+            kv_src: Vec::new(),
+            local: Vec::new(),
+            local_ids: Vec::new(),
+        }
     }
 
     /// Apply the sieve rule; returns true if the item was accepted.
@@ -228,6 +256,177 @@ impl Sieve {
         }
         wasted
     }
+
+    /// [`offer_batch`](Self::offer_batch) under the shared kernel-panel
+    /// broker: identical decisions and query accounting, but every
+    /// rejection run's gains are *gathered* from the chunk panel instead
+    /// of paying a fresh B×n kernel panel per run. Falls back to
+    /// `offer_batch` if this sieve cannot bind to the panel (defensive —
+    /// the union covers every live sieve by construction).
+    pub fn offer_batch_shared(
+        &mut self,
+        panel: &ChunkPanel,
+        chunk: &[f32],
+        dim: usize,
+        k: usize,
+    ) -> u64 {
+        if self.oracle.len() >= k {
+            return 0; // full: neither path queries
+        }
+        if !self.begin_shared_chunk(panel) {
+            return self.offer_batch(chunk, dim, k);
+        }
+        let total = chunk.len() / dim;
+        let mut pos = 0usize;
+        let mut wasted = 0u64;
+        while pos < total {
+            if self.oracle.len() >= k {
+                return wasted;
+            }
+            let remaining = total - pos;
+            self.gains_shared(panel, pos, remaining);
+            let len = self.oracle.len();
+            let thresh = sieve_threshold(self.v, self.oracle.current_value(), k, len);
+            match self.scratch.iter().position(|&g| g >= thresh) {
+                Some(j) => {
+                    self.accept_shared(panel, chunk, dim, pos + j);
+                    wasted += (remaining - (j + 1)) as u64;
+                    pos += j + 1;
+                }
+                None => return wasted,
+            }
+        }
+        wasted
+    }
+
+    /// Start a new chunk under the shared panel: drop the previous chunk's
+    /// local rows and (re)build the gather plan. `false` means the sieve
+    /// cannot use the panel (no capability, or a row the panel lacks) and
+    /// the caller must keep the per-sieve path.
+    pub fn begin_shared_chunk(&mut self, panel: &ChunkPanel) -> bool {
+        self.local.clear();
+        self.local_ids.clear();
+        self.rebind_shared(panel)
+    }
+
+    /// Rebuild the gather plan mid-chunk (after SieveStreaming++'s
+    /// prune/spawn/sort rebuilt the sieve set), keeping the chunk-local
+    /// rows already computed this chunk.
+    pub fn rebind_shared(&mut self, panel: &ChunkPanel) -> bool {
+        let Sieve { oracle, kv_src, local_ids, .. } = self;
+        kv_src.clear();
+        let n = oracle.len();
+        let Some(ps) = oracle.panel_sharing() else {
+            return false;
+        };
+        let ids = ps.summary_row_ids();
+        if ids.len() != n {
+            return false; // rows predate the store — per-sieve path only
+        }
+        for &id in ids {
+            if let Some(s) = panel.slot(id) {
+                kv_src.push(KvSrc::Shared(s));
+            } else if let Some(l) = local_ids.iter().position(|&x| x == id) {
+                kv_src.push(KvSrc::Local(l as u32));
+            } else {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Gains for chunk candidates `pos..pos+count`, gathered from the
+    /// shared panel (and this sieve's local rows) into `self.scratch`.
+    /// Charges exactly `count` queries — bitwise identical to
+    /// `peek_gain_batch` over the same candidates.
+    pub fn gains_shared(&mut self, panel: &ChunkPanel, pos: usize, count: usize) {
+        let Sieve { oracle, scratch, kv_src, local, .. } = self;
+        let width = panel.width();
+        let ps = oracle.panel_sharing().expect("gains_shared: bound by begin_shared_chunk");
+        ps.peek_gain_batch_gathered(
+            count,
+            &mut |t, kv| {
+                let b = pos + t;
+                for (i, src) in kv_src.iter().enumerate() {
+                    kv[i] = match *src {
+                        KvSrc::Shared(s) => panel.at(s, b),
+                        KvSrc::Local(l) => local[l as usize * width + b],
+                    };
+                }
+            },
+            scratch,
+        );
+    }
+
+    /// Accept chunk row `j` under the shared panel. The oracle accepts
+    /// (and interns) the row; its kernel entries for the rest of the chunk
+    /// are then bound — from the panel when the row's bits were already
+    /// interned there (duplicate acceptance), from an existing local row,
+    /// or as a freshly computed chunk-local row (the only kernel work the
+    /// shared path adds, `B − j − 1` entries per accept).
+    pub fn accept_shared(&mut self, panel: &ChunkPanel, chunk: &[f32], dim: usize, j: usize) {
+        let item = &chunk[j * dim..(j + 1) * dim];
+        self.oracle.accept(item);
+        let width = panel.width();
+        let Sieve { oracle, kv_src, local, local_ids, .. } = self;
+        let ps = oracle.panel_sharing().expect("accept_shared: bound by begin_shared_chunk");
+        let id = *ps.summary_row_ids().last().expect("accept interned a row");
+        if let Some(s) = panel.slot(id) {
+            kv_src.push(KvSrc::Shared(s));
+            return;
+        }
+        if let Some(l) = local_ids.iter().position(|&x| x == id) {
+            kv_src.push(KvSrc::Local(l as u32));
+            return;
+        }
+        let start = local.len();
+        local.resize(start + width, 0.0);
+        ps.chunk_kernel_row(item, chunk, j + 1, &mut local[start..]);
+        local_ids.push(id);
+        kv_src.push(KvSrc::Local((start / width) as u32));
+    }
+}
+
+/// Union of the interned summary-row ids across the sieve oracles that can
+/// still query this chunk (non-full), ascending and deduped — the rows the
+/// shared chunk panel must cover. `None` when any oracle lacks the
+/// panel-sharing capability or holds rows the store never saw (the caller
+/// keeps per-sieve panels).
+pub(crate) fn union_row_ids<'a, I>(oracles: I, k: usize) -> Option<Vec<u32>>
+where
+    I: Iterator<Item = &'a mut Box<dyn SubmodularFunction>>,
+{
+    let mut ids: Vec<u32> = Vec::new();
+    for oracle in oracles {
+        let n = oracle.len();
+        if n >= k {
+            continue; // full sieves neither query nor accept
+        }
+        let ps = oracle.panel_sharing()?;
+        let rid = ps.summary_row_ids();
+        if rid.len() != n {
+            return None;
+        }
+        ids.extend_from_slice(rid);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    Some(ids)
+}
+
+/// Build the shared chunk panel from an already collected id union:
+/// `None` when the prototype lacks the [`PanelSharing`] capability or no
+/// store is attached (callers then keep per-sieve panels). The one
+/// definition behind every algorithm's `build_shared_panel`.
+pub(crate) fn build_union_panel(
+    proto: &mut Box<dyn SubmodularFunction>,
+    ids: &[u32],
+    chunk: &[f32],
+    exec: &ExecContext,
+) -> Option<ChunkPanel> {
+    let ps = proto.panel_sharing()?;
+    ps.row_store()?;
+    Some(ps.build_chunk_panel(ids, chunk, exec))
 }
 
 /// Aggregate stats over a set of sieves (+ the element counter the caller
@@ -245,6 +444,9 @@ pub(crate) fn sieve_stats(
     }
     AlgoStats {
         queries: sieves.iter().map(|s| s.oracle.queries()).sum::<u64>() + extra_queries,
+        // Per-sieve kernel work only; callers add their shared-panel and
+        // retired-sieve contributions on top.
+        kernel_evals: sieves.iter().map(|s| s.oracle.kernel_evals()).sum::<u64>(),
         elements,
         stored,
         peak_stored: *peak,

@@ -173,6 +173,8 @@ impl StreamingAlgorithm for QuickStream {
         AlgoStats {
             queries: self.work.queries()
                 + self.chosen.as_ref().map(|c| c.queries()).unwrap_or(0),
+            kernel_evals: self.work.kernel_evals()
+                + self.chosen.as_ref().map(|c| c.kernel_evals()).unwrap_or(0),
             elements: self.elements,
             stored,
             peak_stored: self.peak_stored.max(stored),

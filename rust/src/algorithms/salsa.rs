@@ -20,11 +20,11 @@
 //!   needs the stream length hint — the paper's stated limitation of Salsa.
 
 use crate::exec::ExecContext;
-use crate::functions::SubmodularFunction;
+use crate::functions::{ChunkPanel, SharedRowStore, SubmodularFunction};
 use crate::metrics::AlgoStats;
 use crate::util::mathx::threshold_grid;
 
-use super::{sieve_threshold, StreamingAlgorithm};
+use super::{build_union_panel, sieve_threshold, union_row_ids, Sieve, StreamingAlgorithm};
 
 /// Thresholding rule families.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,14 +34,13 @@ enum Rule {
     Adaptive,
 }
 
+/// One (rule, v) unit: a rule family wrapped around the shared [`Sieve`]
+/// chassis (oracle + OPT guess + gain scratch + broker gather state). The
+/// composition keeps the broker plumbing in one place — Salsa only adds
+/// the per-item threshold schedule on top.
 struct RuleSieve {
     rule: Rule,
-    v: f64,
-    oracle: Box<dyn SubmodularFunction>,
-    /// Gain-panel scratch for [`consume_chunk`] — owned per sieve so the
-    /// exec pool's fan-out needs no shared buffers and the hot path
-    /// allocates once, not once per chunk.
-    scratch: Vec<f64>,
+    sieve: Sieve,
 }
 
 /// Rule threshold as of stream position `elem` (1-based count of the item
@@ -50,13 +49,15 @@ struct RuleSieve {
 /// one definition with the scalar path and cannot drift from it.
 fn rule_threshold(s: &RuleSieve, k: usize, stream_len: Option<usize>, elem: u64) -> f64 {
     match s.rule {
-        Rule::Sieve => sieve_threshold(s.v, s.oracle.current_value(), k, s.oracle.len()),
-        Rule::Dense => s.v / (2.0 * k as f64),
+        Rule::Sieve => {
+            sieve_threshold(s.sieve.v, s.sieve.oracle.current_value(), k, s.sieve.oracle.len())
+        }
+        Rule::Dense => s.sieve.v / (2.0 * k as f64),
         Rule::Adaptive => {
             let n = stream_len.unwrap_or(1).max(1);
             let pos = (elem as f64 / n as f64).min(1.0);
             let beta = 0.7 - 0.45 * pos; // 0.7 → 0.25 across the stream
-            beta * s.v / k as f64
+            beta * s.sieve.v / k as f64
         }
     }
 }
@@ -79,13 +80,13 @@ fn consume_chunk(
     let mut pos = 0usize;
     let mut wasted = 0u64;
     while pos < total {
-        if s.oracle.len() >= k {
+        if s.sieve.oracle.len() >= k {
             break; // full: the scalar path stops querying too
         }
         let remaining = total - pos;
-        s.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut s.scratch);
+        s.sieve.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut s.sieve.scratch);
         let mut hit = None;
-        for (j, &g) in s.scratch.iter().enumerate() {
+        for (j, &g) in s.sieve.scratch.iter().enumerate() {
             let elem = start_elements + (pos + j) as u64 + 1;
             let thresh = rule_threshold(s, k, stream_len, elem);
             if g >= thresh {
@@ -96,7 +97,59 @@ fn consume_chunk(
         match hit {
             Some(j) => {
                 let item = &chunk[(pos + j) * d..(pos + j + 1) * d];
-                s.oracle.accept(item);
+                s.sieve.oracle.accept(item);
+                wasted += (remaining - (j + 1)) as u64;
+                pos += j + 1;
+            }
+            None => {
+                pos = total;
+            }
+        }
+    }
+    wasted
+}
+
+/// [`consume_chunk`] under the shared kernel-panel broker: identical
+/// decisions and query accounting, gains gathered from the chunk panel
+/// instead of a fresh per-run kernel panel. Falls back to the per-sieve
+/// path if the sieve cannot bind (defensive — the union covers every
+/// live sieve by construction).
+fn consume_chunk_shared(
+    s: &mut RuleSieve,
+    panel: &ChunkPanel,
+    chunk: &[f32],
+    d: usize,
+    k: usize,
+    stream_len: Option<usize>,
+    start_elements: u64,
+) -> u64 {
+    if s.sieve.oracle.len() >= k {
+        return 0; // full: neither path queries
+    }
+    if !s.sieve.begin_shared_chunk(panel) {
+        return consume_chunk(s, chunk, d, k, stream_len, start_elements);
+    }
+    let total = chunk.len() / d;
+    let mut pos = 0usize;
+    let mut wasted = 0u64;
+    while pos < total {
+        if s.sieve.oracle.len() >= k {
+            break;
+        }
+        let remaining = total - pos;
+        s.sieve.gains_shared(panel, pos, remaining);
+        let mut hit = None;
+        for (j, &g) in s.sieve.scratch.iter().enumerate() {
+            let elem = start_elements + (pos + j) as u64 + 1;
+            let thresh = rule_threshold(s, k, stream_len, elem);
+            if g >= thresh {
+                hit = Some(j);
+                break;
+            }
+        }
+        match hit {
+            Some(j) => {
+                s.sieve.accept_shared(panel, chunk, d, pos + j);
                 wasted += (remaining - (j + 1)) as u64;
                 pos += j + 1;
             }
@@ -120,6 +173,10 @@ pub struct Salsa {
     /// Speculative batch gains past a sieve's acceptance (see
     /// `process_batch`); excluded from reported query stats.
     speculative_queries: u64,
+    /// Kernel entries spent on shared chunk panels (once per chunk).
+    panel_evals: u64,
+    /// Cross-sieve panel sharing toggle (bench/parity hook).
+    share_panels: bool,
     peak_stored: usize,
     /// Parallel execution context: (rule, v) sieves fan out across its
     /// pool when one is attached (see [`StreamingAlgorithm::set_exec`]).
@@ -130,12 +187,19 @@ impl Salsa {
     /// `stream_len`: the length hint required by the adaptive rule; pass
     /// `None` when unknown (Salsa then runs only the first two families).
     pub fn new(
-        proto: Box<dyn SubmodularFunction>,
+        mut proto: Box<dyn SubmodularFunction>,
         k: usize,
         epsilon: f64,
         stream_len: Option<usize>,
     ) -> Self {
         assert!(k > 0 && epsilon > 0.0);
+        let dim = proto.dim();
+        if let Some(ps) = proto.panel_sharing() {
+            // The broker's row store, shared by every (rule, v) sieve —
+            // Salsa's rule families overlap the most of the whole family
+            // (three rules share each grid point's acceptances).
+            ps.attach_row_store(SharedRowStore::new(dim));
+        }
         let mut s = Salsa {
             proto,
             k,
@@ -144,11 +208,20 @@ impl Salsa {
             sieves: Vec::new(),
             elements: 0,
             speculative_queries: 0,
+            panel_evals: 0,
+            share_panels: true,
             peak_stored: 0,
             exec: ExecContext::sequential(),
         };
         s.build_sieves();
         s
+    }
+
+    /// Force the per-sieve panel path (`false`) or restore the default
+    /// shared-broker path (`true`). Both are bit-identical in summaries,
+    /// values and reported queries — only `kernel_evals` moves.
+    pub fn set_panel_sharing(&mut self, on: bool) {
+        self.share_panels = on;
     }
 
     fn build_sieves(&mut self) {
@@ -161,12 +234,7 @@ impl Salsa {
         self.sieves.clear();
         for rule in rules {
             for &v in &grid {
-                self.sieves.push(RuleSieve {
-                    rule,
-                    v,
-                    oracle: self.proto.clone_empty(),
-                    scratch: Vec::new(),
-                });
+                self.sieves.push(RuleSieve { rule, sieve: Sieve::new(v, self.proto.as_ref()) });
             }
         }
     }
@@ -182,13 +250,25 @@ impl Salsa {
     }
 
     fn best(&self) -> Option<&RuleSieve> {
-        self.sieves
-            .iter()
-            .max_by(|a, b| a.oracle.current_value().partial_cmp(&b.oracle.current_value()).unwrap())
+        // total_cmp, not partial_cmp().unwrap(): a NaN objective must not
+        // panic mid-stream (it sorts above every real and surfaces as a
+        // visibly broken best instead).
+        let value = |s: &RuleSieve| s.sieve.oracle.current_value();
+        self.sieves.iter().max_by(|a, b| value(a).total_cmp(&value(b)))
     }
 
     pub fn sieve_count(&self) -> usize {
         self.sieves.len()
+    }
+
+    /// One chunk panel across the union of the live (rule, v) sieves'
+    /// interned summary rows (see `SieveStreaming::build_shared_panel`).
+    fn build_shared_panel(&mut self, chunk: &[f32]) -> Option<ChunkPanel> {
+        if !self.share_panels || chunk.is_empty() {
+            return None;
+        }
+        let ids = union_row_ids(self.sieves.iter_mut().map(|s| &mut s.sieve.oracle), self.k)?;
+        build_union_panel(&mut self.proto, &ids, chunk, &self.exec)
     }
 }
 
@@ -201,17 +281,17 @@ impl StreamingAlgorithm for Salsa {
         self.elements += 1;
         let k = self.k;
         for i in 0..self.sieves.len() {
-            if self.sieves[i].oracle.len() >= k {
+            if self.sieves[i].sieve.oracle.len() >= k {
                 continue;
             }
             let thresh = self.threshold(&self.sieves[i]);
             let s = &mut self.sieves[i];
-            let gain = s.oracle.peek_gain(item);
+            let gain = s.sieve.oracle.peek_gain(item);
             if gain >= thresh {
-                s.oracle.accept(item);
+                s.sieve.oracle.accept(item);
             }
         }
-        let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
+        let stored: usize = self.sieves.iter().map(|s| s.sieve.oracle.len()).sum();
         if stored > self.peak_stored {
             self.peak_stored = stored;
         }
@@ -228,6 +308,12 @@ impl StreamingAlgorithm for Salsa {
     /// re-batches. Speculative gains past an acceptance are excluded from
     /// the reported query stats; they fold in sieve order, so results are
     /// bit-identical at every thread count.
+    ///
+    /// Under the shared kernel-panel broker ([`consume_chunk_shared`]) the
+    /// chunk's kernel rows are computed once across all rule sieves and
+    /// each rejection run gathers from the panel — same decisions, same
+    /// queries, `kernel_evals` collapses from Σ-per-sieve to
+    /// once-per-chunk.
     fn process_batch(&mut self, chunk: &[f32]) {
         let d = self.proto.dim();
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
@@ -236,14 +322,23 @@ impl StreamingAlgorithm for Salsa {
         self.elements += total as u64;
         let k = self.k;
         let stream_len = self.stream_len;
+        let shared = self.build_shared_panel(chunk);
         // Inline when sequential, worker threads when a pool is attached
         // (`set_exec` gated it on `parallel_safe()`); identical results
         // either way, speculative counts folded in sieve order.
-        let wasted = self.exec.map_units(&mut self.sieves, |s| {
-            consume_chunk(s, chunk, d, k, stream_len, start_elements)
-        });
+        let wasted = match &shared {
+            Some(panel) => self.exec.map_units(&mut self.sieves, |s| {
+                consume_chunk_shared(s, panel, chunk, d, k, stream_len, start_elements)
+            }),
+            None => self.exec.map_units(&mut self.sieves, |s| {
+                consume_chunk(s, chunk, d, k, stream_len, start_elements)
+            }),
+        };
+        if let Some(panel) = &shared {
+            self.panel_evals += panel.evals();
+        }
         self.speculative_queries += wasted.iter().sum::<u64>();
-        let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
+        let stored: usize = self.sieves.iter().map(|s| s.sieve.oracle.len()).sum();
         if stored > self.peak_stored {
             self.peak_stored = stored;
         }
@@ -254,15 +349,15 @@ impl StreamingAlgorithm for Salsa {
     }
 
     fn value(&self) -> f64 {
-        self.best().map(|s| s.oracle.current_value()).unwrap_or(0.0)
+        self.best().map(|s| s.sieve.oracle.current_value()).unwrap_or(0.0)
     }
 
     fn summary(&self) -> Vec<f32> {
-        self.best().map(|s| s.oracle.summary().to_vec()).unwrap_or_default()
+        self.best().map(|s| s.sieve.oracle.summary().to_vec()).unwrap_or_default()
     }
 
     fn summary_len(&self) -> usize {
-        self.best().map(|s| s.oracle.len()).unwrap_or(0)
+        self.best().map(|s| s.sieve.oracle.len()).unwrap_or(0)
     }
 
     fn dim(&self) -> usize {
@@ -274,10 +369,12 @@ impl StreamingAlgorithm for Salsa {
     }
 
     fn stats(&self) -> AlgoStats {
-        let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
-        let charged: u64 = self.sieves.iter().map(|s| s.oracle.queries()).sum();
+        let stored: usize = self.sieves.iter().map(|s| s.sieve.oracle.len()).sum();
+        let charged: u64 = self.sieves.iter().map(|s| s.sieve.oracle.queries()).sum();
+        let per_sieve_evals: u64 = self.sieves.iter().map(|s| s.sieve.oracle.kernel_evals()).sum();
         AlgoStats {
             queries: charged.saturating_sub(self.speculative_queries),
+            kernel_evals: per_sieve_evals + self.panel_evals,
             elements: self.elements,
             stored,
             peak_stored: self.peak_stored.max(stored),
@@ -288,7 +385,14 @@ impl StreamingAlgorithm for Salsa {
     fn reset(&mut self) {
         self.elements = 0;
         self.speculative_queries = 0;
+        self.panel_evals = 0;
         self.peak_stored = 0;
+        // Fresh row store (dropped sieves' rows would otherwise pin
+        // memory), then rebuild every (rule, v) pair from the prototype.
+        let dim = self.proto.dim();
+        if let Some(ps) = self.proto.panel_sharing() {
+            ps.attach_row_store(SharedRowStore::new(dim));
+        }
         self.build_sieves();
     }
 }
@@ -341,6 +445,34 @@ mod tests {
         testkit::run(&mut ss, &ds);
         testkit::run(&mut salsa, &ds);
         assert!(salsa.stats().peak_stored >= ss.stats().peak_stored);
+    }
+
+    #[test]
+    fn shared_panels_match_per_sieve_batches_bitwise() {
+        // The broker under the three rule families (adaptive included):
+        // same summaries, values and reported queries; only kernel_evals
+        // may drop.
+        let ds = testkit::clustered(1200, 6);
+        let k = 6;
+        let d = testkit::DIM;
+        let mut shared = Salsa::new(testkit::oracle(k), k, 0.1, Some(ds.len()));
+        let mut plain = Salsa::new(testkit::oracle(k), k, 0.1, Some(ds.len()));
+        plain.set_panel_sharing(false);
+        for chunk in ds.raw().chunks(64 * d) {
+            shared.process_batch(chunk);
+            plain.process_batch(chunk);
+        }
+        assert_eq!(shared.value().to_bits(), plain.value().to_bits());
+        assert_eq!(shared.summary(), plain.summary());
+        let (a, b) = (shared.stats(), plain.stats());
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.peak_stored, b.peak_stored);
+        assert!(
+            a.kernel_evals <= b.kernel_evals,
+            "shared panels must never evaluate more kernel entries: {} vs {}",
+            a.kernel_evals,
+            b.kernel_evals
+        );
     }
 
     #[test]

@@ -4,11 +4,12 @@
 //! ½−ε approximation, O(K log K / ε) memory, O(log K / ε) queries/element.
 
 use crate::exec::ExecContext;
-use crate::functions::SubmodularFunction;
+use crate::functions::{ChunkPanel, SharedRowStore, SubmodularFunction};
 use crate::metrics::AlgoStats;
+use crate::util::json::Json;
 use crate::util::mathx::threshold_grid;
 
-use super::{sieve_stats, Sieve, StreamingAlgorithm};
+use super::{build_union_panel, sieve_stats, union_row_ids, Sieve, StreamingAlgorithm};
 
 /// Multi-sieve thresholding with a known (or estimated) `m`.
 pub struct SieveStreaming {
@@ -24,6 +25,20 @@ pub struct SieveStreaming {
     /// Speculative batch gains past a sieve's acceptance (see
     /// `Sieve::offer_batch`); excluded from reported query stats.
     speculative_queries: u64,
+    /// Kernel entries spent on shared chunk panels (charged once per
+    /// chunk, not once per sieve — the broker's whole point).
+    panel_evals: u64,
+    /// Cross-sieve kernel-panel sharing (on whenever the oracle supports
+    /// it; the bench/parity hook [`Self::set_panel_sharing`] can force the
+    /// per-sieve path).
+    share_panels: bool,
+    /// Accounting carried over by [`StreamingAlgorithm::restore_state`]
+    /// (the ThreeSieves resume pattern): the checkpointed totals, minus
+    /// the replay's charges. Cleared by `reset` — this algorithm rebuilds
+    /// its oracles (and their counters) wholesale there.
+    restored_queries: u64,
+    restored_kernel_evals: u64,
+    discounted_kernel_evals: u64,
     peak_stored: usize,
     /// Parallel execution context: sieves fan out across its pool when
     /// one is attached (see [`StreamingAlgorithm::set_exec`]).
@@ -32,8 +47,14 @@ pub struct SieveStreaming {
 
 impl SieveStreaming {
     /// With `m = max_e f({e})` known exactly (our log-det case).
-    pub fn new(proto: Box<dyn SubmodularFunction>, k: usize, epsilon: f64) -> Self {
+    pub fn new(mut proto: Box<dyn SubmodularFunction>, k: usize, epsilon: f64) -> Self {
         assert!(k > 0 && epsilon > 0.0);
+        let dim = proto.dim();
+        if let Some(ps) = proto.panel_sharing() {
+            // The broker's row store: sieves spawned below (and on m
+            // refreshes) share it through `clone_empty`.
+            ps.attach_row_store(SharedRowStore::new(dim));
+        }
         let m = proto.max_singleton_value();
         let sieves = threshold_grid(epsilon, m, k as f64 * m)
             .into_iter()
@@ -49,6 +70,11 @@ impl SieveStreaming {
             elements: 0,
             extra_queries: 0,
             speculative_queries: 0,
+            panel_evals: 0,
+            share_panels: true,
+            restored_queries: 0,
+            restored_kernel_evals: 0,
+            discounted_kernel_evals: 0,
             peak_stored: 0,
             exec: ExecContext::sequential(),
         }
@@ -65,6 +91,14 @@ impl SieveStreaming {
         s
     }
 
+    /// Force the per-sieve panel path (`false`) or restore the default
+    /// shared-broker path (`true`). Bench/parity hook: both paths are
+    /// bit-identical in summaries, values and reported queries — only
+    /// [`AlgoStats::kernel_evals`] moves.
+    pub fn set_panel_sharing(&mut self, on: bool) {
+        self.share_panels = on;
+    }
+
     fn refresh_sieves_for_m(&mut self, m_new: f64) {
         self.m = m_new;
         let lo = m_new;
@@ -78,18 +112,33 @@ impl SieveStreaming {
                 self.sieves.push(Sieve::new(v, self.proto.as_ref()));
             }
         }
-        self.sieves.sort_by(|a, b| a.v.partial_cmp(&b.v).unwrap());
+        self.sieves.sort_by(|a, b| a.v.total_cmp(&b.v));
     }
 
     fn best_sieve(&self) -> Option<&Sieve> {
+        // total_cmp, not partial_cmp().unwrap(): a NaN objective from a
+        // pathological oracle must not panic the stream mid-serve. NaN
+        // sorts above every real in the total order, so it surfaces as a
+        // (visibly broken) best value instead of a crash.
         self.sieves
             .iter()
-            .max_by(|a, b| a.oracle.current_value().partial_cmp(&b.oracle.current_value()).unwrap())
+            .max_by(|a, b| a.oracle.current_value().total_cmp(&b.oracle.current_value()))
     }
 
     /// Number of live sieves (tests / telemetry).
     pub fn sieve_count(&self) -> usize {
         self.sieves.len()
+    }
+
+    /// One chunk panel across the union of the live sieves' interned
+    /// summary rows — `None` when sharing is disabled, the oracle lacks
+    /// the capability (no kernel/solve split), or the chunk is empty.
+    fn build_shared_panel(&mut self, chunk: &[f32]) -> Option<ChunkPanel> {
+        if !self.share_panels || chunk.is_empty() {
+            return None;
+        }
+        let ids = union_row_ids(self.sieves.iter_mut().map(|s| &mut s.oracle), self.k)?;
+        build_union_panel(&mut self.proto, &ids, chunk, &self.exec)
     }
 }
 
@@ -119,14 +168,20 @@ impl StreamingAlgorithm for SieveStreaming {
 
     /// Batched ingestion: the sieves are fully independent (no cross-sieve
     /// coupling outside m estimation), so each sieve consumes the whole
-    /// chunk through [`Sieve::offer_batch`] — one gain panel per rejection
-    /// run instead of one oracle call per item — either sequentially or on
-    /// the exec pool's worker threads when a context is attached. Each
-    /// sieve runs the identical instruction sequence on state it owns and
-    /// the speculative counts fold in sieve order, so results are
-    /// bit-identical at every thread count. Stored elements only grow
-    /// within a chunk, so the end-of-chunk peak equals the scalar per-item
-    /// peak.
+    /// chunk — one gain panel per rejection run instead of one oracle call
+    /// per item — either sequentially or on the exec pool's worker threads
+    /// when a context is attached. Each sieve runs the identical
+    /// instruction sequence on state it owns and the speculative counts
+    /// fold in sieve order, so results are bit-identical at every thread
+    /// count. Stored elements only grow within a chunk, so the
+    /// end-of-chunk peak equals the scalar per-item peak.
+    ///
+    /// When the oracle exposes [`crate::functions::PanelSharing`], the
+    /// chunk's kernel rows are computed **once** against the union of all
+    /// distinct summary rows (the broker panel, built on the exec pool by
+    /// row-range) and every sieve's rejection runs *gather* from it via
+    /// [`Sieve::offer_batch_shared`] — same decisions, same queries,
+    /// `kernel_evals` collapses from Σ-per-sieve to once-per-chunk.
     fn process_batch(&mut self, chunk: &[f32]) {
         let d = self.proto.dim();
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
@@ -139,10 +194,19 @@ impl StreamingAlgorithm for SieveStreaming {
         }
         self.elements += (chunk.len() / d) as u64;
         let k = self.k;
+        let shared = self.build_shared_panel(chunk);
         // Inline when sequential, worker threads when a pool is attached
         // (`set_exec` gated it on `parallel_safe()`); identical results
         // either way, speculative counts folded in sieve order.
-        let wasted = self.exec.map_units(&mut self.sieves, |s| s.offer_batch(chunk, d, k));
+        let wasted = match &shared {
+            Some(panel) => {
+                self.exec.map_units(&mut self.sieves, |s| s.offer_batch_shared(panel, chunk, d, k))
+            }
+            None => self.exec.map_units(&mut self.sieves, |s| s.offer_batch(chunk, d, k)),
+        };
+        if let Some(panel) = &shared {
+            self.panel_evals += panel.evals();
+        }
         self.speculative_queries += wasted.iter().sum::<u64>();
         let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
         if stored > self.peak_stored {
@@ -177,17 +241,30 @@ impl StreamingAlgorithm for SieveStreaming {
     fn stats(&self) -> AlgoStats {
         let mut peak = self.peak_stored;
         let mut st = sieve_stats(&self.sieves, self.elements, self.extra_queries, &mut peak);
-        st.queries = st.queries.saturating_sub(self.speculative_queries);
+        st.queries = (st.queries + self.restored_queries).saturating_sub(self.speculative_queries);
+        st.kernel_evals = (st.kernel_evals + self.panel_evals + self.restored_kernel_evals)
+            .saturating_sub(self.discounted_kernel_evals);
         st
     }
 
     fn reset(&mut self) {
         self.elements = 0;
         self.extra_queries = 0;
-        // The sieve oracles (and their query counters) are rebuilt below,
-        // so their speculative share resets with them.
+        // The sieve oracles (and their query/eval counters) are rebuilt
+        // below, so the speculative, panel and restored shares reset with
+        // them.
         self.speculative_queries = 0;
+        self.panel_evals = 0;
+        self.restored_queries = 0;
+        self.restored_kernel_evals = 0;
+        self.discounted_kernel_evals = 0;
         self.peak_stored = 0;
+        // Fresh row store: the dropped sieves' interned rows would
+        // otherwise pin memory across drift resets.
+        let dim = self.proto.dim();
+        if let Some(ps) = self.proto.panel_sharing() {
+            ps.attach_row_store(SharedRowStore::new(dim));
+        }
         if self.estimate_m {
             self.m = 0.0;
             self.sieves.clear();
@@ -198,6 +275,147 @@ impl StreamingAlgorithm for SieveStreaming {
                 .map(|v| Sieve::new(v, self.proto.as_ref()))
                 .collect();
         }
+    }
+
+    /// Full resumable state: the grid is deterministic from `(ε, m, K)`,
+    /// so per-sieve state is exactly each sieve's summary rows in
+    /// acceptance order — replaying them through `accept` reproduces the
+    /// incremental Cholesky (and the broker's interned row ids)
+    /// bit-for-bit. The reported accounting rides along and is rebased on
+    /// restore. `None` in m-estimation mode: there the sieve set depends
+    /// on the stream prefix, not just the configuration.
+    fn snapshot_state(&self) -> Option<Json> {
+        if self.estimate_m {
+            return None;
+        }
+        let st = self.stats();
+        let sieves = Json::Arr(
+            self.sieves
+                .iter()
+                .map(|s| {
+                    Json::Arr(s.oracle.summary().iter().map(|&x| Json::num(x as f64)).collect())
+                })
+                .collect(),
+        );
+        Some(Json::obj(vec![
+            ("algo", Json::str("sieve-streaming")),
+            ("k", Json::num(self.k as f64)),
+            ("dim", Json::num(self.proto.dim() as f64)),
+            ("epsilon", Json::num(self.epsilon)),
+            ("elements", Json::num(self.elements as f64)),
+            ("queries", Json::num(st.queries as f64)),
+            ("kernel_evals", Json::num(st.kernel_evals as f64)),
+            ("peak_stored", Json::num(st.peak_stored as f64)),
+            ("sieves", sieves),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json, summary: &[f32]) -> Result<(), String> {
+        if self.estimate_m {
+            return Err("m-estimation SieveStreaming does not support checkpoint resume".into());
+        }
+        if state.get("algo").as_str() != Some("sieve-streaming") {
+            return Err(format!(
+                "checkpoint state is for {:?}, not sieve-streaming",
+                state.get("algo").as_str().unwrap_or("?")
+            ));
+        }
+        let field = |name: &str| {
+            state.get(name).as_f64().ok_or_else(|| format!("checkpoint state missing {name:?}"))
+        };
+        let same = |name: &str, mine: f64| -> Result<(), String> {
+            let theirs = field(name)?;
+            if theirs.to_bits() != mine.to_bits() {
+                return Err(format!("checkpoint {name} = {theirs} != configured {mine}"));
+            }
+            Ok(())
+        };
+        let d = self.proto.dim();
+        same("k", self.k as f64)?;
+        same("dim", d as f64)?;
+        same("epsilon", self.epsilon)?;
+        let elements = field("elements")? as u64;
+        let queries = field("queries")? as u64;
+        let kernel_evals = field("kernel_evals")? as u64;
+        let peak_stored = field("peak_stored")? as usize;
+        if summary.len() % d != 0 || summary.len() / d > self.k {
+            return Err(format!(
+                "checkpoint summary has {} floats, not <= {}x{d} rows",
+                summary.len(),
+                self.k
+            ));
+        }
+        let sieves_json = state
+            .get("sieves")
+            .as_arr()
+            .ok_or_else(|| "checkpoint state missing \"sieves\" array".to_string())?;
+        let m = self.proto.max_singleton_value();
+        let grid = threshold_grid(self.epsilon, m, self.k as f64 * m);
+        if sieves_json.len() != grid.len() {
+            return Err(format!(
+                "checkpoint has {} sieves, the (ε, m, K) grid expects {}",
+                sieves_json.len(),
+                grid.len()
+            ));
+        }
+        // Decode every sieve's rows before touching any state: a blob
+        // that fails mid-way must leave this instance exactly as it was.
+        let mut rows_per_sieve: Vec<Vec<f32>> = Vec::with_capacity(sieves_json.len());
+        for (i, sj) in sieves_json.iter().enumerate() {
+            let arr = sj.as_arr().ok_or_else(|| format!("checkpoint sieve {i}: not an array"))?;
+            if arr.len() % d != 0 || arr.len() / d > self.k {
+                return Err(format!(
+                    "checkpoint sieve {i}: {} floats, not <= {}x{d} rows",
+                    arr.len(),
+                    self.k
+                ));
+            }
+            let mut rows = Vec::with_capacity(arr.len());
+            for v in arr {
+                let x =
+                    v.as_f64().ok_or_else(|| format!("checkpoint sieve {i}: non-numeric row"))?;
+                rows.push(x as f32);
+            }
+            rows_per_sieve.push(rows);
+        }
+        // Rebuild off to the side — fresh prototype, fresh row store — and
+        // only then commit, so a failed restore cannot half-apply.
+        let mut proto = self.proto.clone_empty();
+        if let Some(ps) = proto.panel_sharing() {
+            ps.attach_row_store(SharedRowStore::new(d));
+        }
+        let mut sieves: Vec<Sieve> =
+            grid.into_iter().map(|v| Sieve::new(v, proto.as_ref())).collect();
+        for (s, rows) in sieves.iter_mut().zip(&rows_per_sieve) {
+            for row in rows.chunks_exact(d) {
+                s.oracle.accept(row);
+            }
+        }
+        let best = sieves
+            .iter()
+            .max_by(|a, b| a.oracle.current_value().total_cmp(&b.oracle.current_value()));
+        let best_summary = best.map(|s| s.oracle.summary().to_vec()).unwrap_or_default();
+        if best_summary != summary {
+            return Err("checkpoint summary does not match the rebuilt sieves".into());
+        }
+        // Commit + rebase accounting: cancel the replay's oracle charges
+        // and carry the checkpointed totals (the ThreeSieves pattern), so
+        // stats() continues exactly where the paused run left off.
+        let replayed_q: u64 = sieves.iter().map(|s| s.oracle.queries()).sum();
+        let replayed_e: u64 = sieves.iter().map(|s| s.oracle.kernel_evals()).sum();
+        let stored: usize = sieves.iter().map(|s| s.oracle.len()).sum();
+        self.proto = proto;
+        self.sieves = sieves;
+        self.m = m;
+        self.elements = elements;
+        self.peak_stored = peak_stored.max(stored);
+        self.extra_queries = 0;
+        self.speculative_queries = replayed_q;
+        self.restored_queries = queries;
+        self.panel_evals = 0;
+        self.discounted_kernel_evals = replayed_e;
+        self.restored_kernel_evals = kernel_evals;
+        Ok(())
     }
 }
 
@@ -284,5 +502,97 @@ mod tests {
         algo.reset();
         assert_eq!(algo.sieve_count(), n0);
         assert_eq!(algo.value(), 0.0);
+    }
+
+    #[test]
+    fn shared_panels_match_per_sieve_batches_bitwise() {
+        // The broker acceptance point in miniature: same summaries, same
+        // values, same reported queries; only kernel_evals may drop.
+        let ds = testkit::clustered(1200, 6);
+        let k = 6;
+        let d = testkit::DIM;
+        let mut shared = SieveStreaming::new(testkit::oracle(k), k, 0.05);
+        let mut plain = SieveStreaming::new(testkit::oracle(k), k, 0.05);
+        plain.set_panel_sharing(false);
+        for chunk in ds.raw().chunks(64 * d) {
+            shared.process_batch(chunk);
+            plain.process_batch(chunk);
+        }
+        assert_eq!(shared.value().to_bits(), plain.value().to_bits());
+        assert_eq!(shared.summary(), plain.summary());
+        let (a, b) = (shared.stats(), plain.stats());
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.peak_stored, b.peak_stored);
+        assert!(
+            a.kernel_evals <= b.kernel_evals,
+            "shared panels must never evaluate more kernel entries: {} vs {}",
+            a.kernel_evals,
+            b.kernel_evals
+        );
+        assert!(b.kernel_evals > 0, "workload must exercise the kernel");
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically_batched() {
+        let ds = testkit::clustered(1600, 7);
+        let k = 5;
+        let d = testkit::DIM;
+        let build = || SieveStreaming::new(testkit::oracle(k), k, 0.1);
+        let half = ds.len() / 2 * d;
+        let mut whole = build();
+        let mut first = build();
+        for chunk in ds.raw()[..half].chunks(41 * d) {
+            whole.process_batch(chunk);
+            first.process_batch(chunk);
+        }
+        // Snapshot → JSON text → parse → restore: the checkpoint-file
+        // roundtrip, with the broker active on both timelines.
+        let state = first.snapshot_state().expect("exact-m SieveStreaming is resumable");
+        let text = state.to_string();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let mut resumed = build();
+        resumed.restore_state(&parsed, &first.summary()).unwrap();
+        assert_eq!(resumed.value().to_bits(), first.value().to_bits());
+        assert_eq!(resumed.stats(), first.stats());
+        for chunk in ds.raw()[half..].chunks(41 * d) {
+            whole.process_batch(chunk);
+            resumed.process_batch(chunk);
+        }
+        assert_eq!(resumed.value().to_bits(), whole.value().to_bits());
+        assert_eq!(resumed.summary(), whole.summary());
+        assert_eq!(resumed.stats(), whole.stats());
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_configuration() {
+        let ds = testkit::clustered(300, 8);
+        let k = 4;
+        let mut donor = SieveStreaming::new(testkit::oracle(k), k, 0.1);
+        testkit::run(&mut donor, &ds);
+        let state = donor.snapshot_state().unwrap();
+        let summary = donor.summary();
+        // Different K.
+        let mut other = SieveStreaming::new(testkit::oracle(5), 5, 0.1);
+        assert!(other.restore_state(&state, &summary).is_err());
+        // Different epsilon (different grid).
+        let mut other = SieveStreaming::new(testkit::oracle(k), k, 0.2);
+        assert!(other.restore_state(&state, &summary).is_err());
+        // m-estimation mode cannot resume.
+        let mut other = SieveStreaming::with_m_estimation(testkit::oracle(k), k, 0.1);
+        assert!(other.restore_state(&state, &summary).is_err());
+        // Tampered summary: must be rejected, donor state untouched.
+        let mut other = SieveStreaming::new(testkit::oracle(k), k, 0.1);
+        let before = other.stats();
+        let mut bad = summary.clone();
+        if let Some(x) = bad.first_mut() {
+            *x += 1.0;
+        }
+        assert!(other.restore_state(&state, &bad).is_err());
+        assert_eq!(other.stats(), before, "failed restore must leave state untouched");
+        // Matching configuration restores.
+        let mut ok = SieveStreaming::new(testkit::oracle(k), k, 0.1);
+        ok.restore_state(&state, &summary).unwrap();
+        assert_eq!(ok.value().to_bits(), donor.value().to_bits());
+        assert_eq!(ok.stats(), donor.stats());
     }
 }

@@ -4,11 +4,14 @@
 //! are deleted and new ones are spawned as the window `[max(LB,m), K·m]`
 //! tightens. Same ½−ε guarantee, memory drops to O(K/ε).
 
-use crate::functions::SubmodularFunction;
+use crate::exec::ExecContext;
+use crate::functions::{ChunkPanel, SharedRowStore, SubmodularFunction};
 use crate::metrics::AlgoStats;
 use crate::util::mathx::threshold_grid;
 
-use super::{sieve_stats, sieve_threshold, Sieve, StreamingAlgorithm};
+use super::{
+    build_union_panel, sieve_stats, sieve_threshold, union_row_ids, Sieve, StreamingAlgorithm,
+};
 
 /// Post-accept bookkeeping shared by the scalar and batched paths: fold the
 /// sieve's new value into the OPT lower bound and the champion snapshot.
@@ -45,10 +48,17 @@ pub struct SieveStreamingPP {
     peak_stored: usize,
     /// Cumulative queries of sieves that were pruned (so totals stay true).
     retired_queries: u64,
+    /// Cumulative kernel evals of pruned sieves (same preservation for
+    /// the measured [`AlgoStats::kernel_evals`] counter).
+    retired_kernel_evals: u64,
     /// Speculative batch gains past a round's earliest acceptance
     /// (see `process_batch`); excluded from reported query stats.
     speculative_queries: u64,
-    /// Scratch for `process_batch` gain panels.
+    /// Kernel entries spent on shared chunk panels (once per chunk).
+    panel_evals: u64,
+    /// Cross-sieve panel sharing toggle (bench/parity hook).
+    share_panels: bool,
+    /// Scratch for `process_batch` gain panels (per-sieve fallback path).
     gain_buf: Vec<f64>,
     /// Snapshot of the best summary ever observed. Pruning deletes sieves
     /// whose OPT guess fell below LB — which can include the sieve that
@@ -57,11 +67,21 @@ pub struct SieveStreamingPP {
     /// must never regress, so we keep the champion's summary here.
     best_value: f64,
     best_summary: Vec<f32>,
+    /// Execution context: ++'s chunk consumption is inherently coordinated
+    /// (the LB refresh couples sieves), so the pool only accelerates the
+    /// broker's panel build — see [`StreamingAlgorithm::set_exec`].
+    exec: ExecContext,
 }
 
 impl SieveStreamingPP {
-    pub fn new(proto: Box<dyn SubmodularFunction>, k: usize, epsilon: f64) -> Self {
+    pub fn new(mut proto: Box<dyn SubmodularFunction>, k: usize, epsilon: f64) -> Self {
         assert!(k > 0 && epsilon > 0.0);
+        let dim = proto.dim();
+        if let Some(ps) = proto.panel_sharing() {
+            // The broker's row store — shared by every sieve the window
+            // spawns, across all prune/spawn refreshes.
+            ps.attach_row_store(SharedRowStore::new(dim));
+        }
         let m = proto.max_singleton_value();
         let mut s = SieveStreamingPP {
             proto,
@@ -73,13 +93,24 @@ impl SieveStreamingPP {
             elements: 0,
             peak_stored: 0,
             retired_queries: 0,
+            retired_kernel_evals: 0,
             speculative_queries: 0,
+            panel_evals: 0,
+            share_panels: true,
             gain_buf: Vec::new(),
             best_value: 0.0,
             best_summary: Vec::new(),
+            exec: ExecContext::sequential(),
         };
         s.refresh_sieves();
         s
+    }
+
+    /// Force the per-sieve panel path (`false`) or restore the default
+    /// shared-broker path (`true`). Both are bit-identical in summaries,
+    /// values and reported queries — only `kernel_evals` moves.
+    pub fn set_panel_sharing(&mut self, on: bool) {
+        self.share_panels = on;
     }
 
     /// Prune dominated sieves and spawn the grid over the live window
@@ -91,13 +122,14 @@ impl SieveStreamingPP {
         // removes v once v/(2K)-style thresholds fall below τ_min; in grid
         // terms: v < lo (their summaries can never beat the LB).
         let eps = 1e-12;
-        let retired: u64 = self
-            .sieves
-            .iter()
-            .filter(|s| s.v < lo * (1.0 - eps))
-            .map(|s| s.oracle.queries())
-            .sum();
-        self.retired_queries += retired;
+        let mut retired_q = 0u64;
+        let mut retired_e = 0u64;
+        for s in self.sieves.iter().filter(|s| s.v < lo * (1.0 - eps)) {
+            retired_q += s.oracle.queries();
+            retired_e += s.oracle.kernel_evals();
+        }
+        self.retired_queries += retired_q;
+        self.retired_kernel_evals += retired_e;
         self.sieves.retain(|s| s.v >= lo * (1.0 - eps));
         for v in threshold_grid(self.epsilon, lo, hi) {
             let exists = self.sieves.iter().any(|s| (s.v / v - 1.0).abs() < 1e-9);
@@ -105,13 +137,16 @@ impl SieveStreamingPP {
                 self.sieves.push(Sieve::new(v, self.proto.as_ref()));
             }
         }
-        self.sieves.sort_by(|a, b| a.v.partial_cmp(&b.v).unwrap());
+        self.sieves.sort_by(|a, b| a.v.total_cmp(&b.v));
     }
 
     fn best_sieve(&self) -> Option<&Sieve> {
+        // total_cmp, not partial_cmp().unwrap(): a NaN objective must not
+        // panic mid-stream (it sorts above every real and surfaces as a
+        // visibly broken best instead).
         self.sieves
             .iter()
-            .max_by(|a, b| a.oracle.current_value().partial_cmp(&b.oracle.current_value()).unwrap())
+            .max_by(|a, b| a.oracle.current_value().total_cmp(&b.oracle.current_value()))
     }
 
     pub fn sieve_count(&self) -> usize {
@@ -121,6 +156,16 @@ impl SieveStreamingPP {
     /// Current OPT lower bound (telemetry).
     pub fn lower_bound(&self) -> f64 {
         self.lb
+    }
+
+    /// One chunk panel across the union of the live sieves' interned
+    /// summary rows (see `SieveStreaming::build_shared_panel`).
+    fn build_shared_panel(&mut self, chunk: &[f32]) -> Option<ChunkPanel> {
+        if !self.share_panels || chunk.is_empty() {
+            return None;
+        }
+        let ids = union_row_ids(self.sieves.iter_mut().map(|s| &mut s.oracle), self.k)?;
+        build_union_panel(&mut self.proto, &ids, chunk, &self.exec)
     }
 }
 
@@ -171,6 +216,15 @@ impl StreamingAlgorithm for SieveStreamingPP {
     /// (summaries survive a refresh but indices don't, and spawned sieves
     /// must scan the remainder from scratch).
     ///
+    /// Under the shared kernel-panel broker the chunk's kernel rows are
+    /// computed once up front (union of all live sieves' rows) and every
+    /// (re-)scan *gathers* from that panel — the gains, the hit cache and
+    /// the accounting below are unchanged, only `kernel_evals` drops.
+    /// Sieves spawned by a mid-chunk refresh start empty, so the
+    /// chunk-start panel still covers every row they can reference; rows
+    /// accepted mid-chunk bind to sieve-local kernel rows
+    /// ([`Sieve::accept_shared`]).
+    ///
     /// Query accounting stays scalar-exact through a telescoping
     /// invariant: a panel taken at position `p` charges `total - p` raw
     /// queries; when it is invalidated after consuming through item `q-1`
@@ -184,6 +238,17 @@ impl StreamingAlgorithm for SieveStreamingPP {
         let total = chunk.len() / d;
         self.elements += total as u64;
         let k = self.k;
+        let mut panel = self.build_shared_panel(chunk);
+        let bound = match &panel {
+            Some(p) => {
+                self.panel_evals += p.evals();
+                self.sieves.iter_mut().all(|s| s.oracle.len() >= k || s.begin_shared_chunk(p))
+            }
+            None => true,
+        };
+        if !bound {
+            panel = None; // defensive: keep the per-sieve path
+        }
         let mut scratch = std::mem::take(&mut self.gain_buf);
         let mut pos = 0usize;
         // Hit cache, indexed like `self.sieves`: `None` = needs a panel;
@@ -201,9 +266,18 @@ impl StreamingAlgorithm for SieveStreamingPP {
                 if s.oracle.len() >= k || hit.is_some() {
                     continue;
                 }
-                s.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut scratch);
+                let gains: &[f64] = match &panel {
+                    Some(p) => {
+                        s.gains_shared(p, pos, remaining);
+                        &s.scratch
+                    }
+                    None => {
+                        s.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut scratch);
+                        &scratch
+                    }
+                };
                 let thresh = sieve_threshold(s.v, s.oracle.current_value(), k, s.oracle.len());
-                *hit = Some(scratch.iter().position(|&g| g >= thresh).map(|j| pos + j));
+                *hit = Some(gains.iter().position(|&g| g >= thresh).map(|j| pos + j));
             }
             let p_star = self
                 .sieves
@@ -227,7 +301,10 @@ impl StreamingAlgorithm for SieveStreamingPP {
                 if s.oracle.len() >= k || *hit != Some(Some(j)) {
                     continue;
                 }
-                s.oracle.accept(item);
+                match &panel {
+                    Some(p) => s.accept_shared(p, chunk, d, j),
+                    None => s.oracle.accept(item),
+                }
                 // The accept invalidates this sieve's panel; its unused
                 // tail is work the scalar path never did.
                 self.speculative_queries += (total - (j + 1)) as u64;
@@ -248,6 +325,19 @@ impl StreamingAlgorithm for SieveStreamingPP {
                 let live_panels = hits.iter().filter(|h| h.is_some()).count() as u64;
                 self.speculative_queries += live_panels * (total - (j + 1)) as u64;
                 self.refresh_sieves();
+                // Re-bind the rebuilt sieve set to the chunk panel:
+                // survivors keep their chunk-local rows, spawned sieves
+                // start empty.
+                let bound = match &panel {
+                    Some(p) => self
+                        .sieves
+                        .iter_mut()
+                        .all(|s| s.oracle.len() >= k || s.rebind_shared(p)),
+                    None => true,
+                };
+                if !bound {
+                    panel = None;
+                }
                 hits.clear();
                 hits.resize(self.sieves.len(), None);
             }
@@ -260,6 +350,10 @@ impl StreamingAlgorithm for SieveStreamingPP {
         // No trailing stored/peak update: stored only changes at the
         // accept+refresh points above, each already recorded in-loop.
         self.gain_buf = scratch;
+    }
+
+    fn set_exec(&mut self, exec: ExecContext) {
+        self.exec = exec.gated(self.proto.as_ref());
     }
 
     fn value(&self) -> f64 {
@@ -292,6 +386,7 @@ impl StreamingAlgorithm for SieveStreamingPP {
         let mut peak = self.peak_stored;
         let mut st = sieve_stats(&self.sieves, self.elements, self.retired_queries, &mut peak);
         st.queries = st.queries.saturating_sub(self.speculative_queries);
+        st.kernel_evals += self.retired_kernel_evals + self.panel_evals;
         st.peak_stored = peak.max(self.peak_stored);
         st
     }
@@ -302,9 +397,17 @@ impl StreamingAlgorithm for SieveStreamingPP {
         self.elements = 0;
         self.peak_stored = 0;
         self.retired_queries = 0;
+        self.retired_kernel_evals = 0;
         self.speculative_queries = 0;
+        self.panel_evals = 0;
         self.best_value = 0.0;
         self.best_summary.clear();
+        // Fresh row store (pruned rows would otherwise pin memory), then
+        // respawn the initial window from the prototype.
+        let dim = self.proto.dim();
+        if let Some(ps) = self.proto.panel_sharing() {
+            ps.attach_row_store(SharedRowStore::new(dim));
+        }
         self.refresh_sieves();
     }
 }
@@ -374,6 +477,35 @@ mod tests {
         assert!(st.queries > 0, "{st:?}");
         let live: u64 = st.queries; // includes retired_queries by contract
         assert!(live >= st.stored as u64, "{st:?}");
+        assert!(st.kernel_evals > 0, "retired kernel evals must be preserved too: {st:?}");
+    }
+
+    #[test]
+    fn shared_panels_match_per_sieve_batches_bitwise() {
+        // The broker under ++'s prune/spawn coupling: same summaries,
+        // values and reported queries; only kernel_evals may drop.
+        let ds = testkit::clustered(1400, 6);
+        let k = 6;
+        let d = testkit::DIM;
+        let mut shared = SieveStreamingPP::new(testkit::oracle(k), k, 0.05);
+        let mut plain = SieveStreamingPP::new(testkit::oracle(k), k, 0.05);
+        plain.set_panel_sharing(false);
+        for chunk in ds.raw().chunks(53 * d) {
+            shared.process_batch(chunk);
+            plain.process_batch(chunk);
+        }
+        assert_eq!(shared.value().to_bits(), plain.value().to_bits());
+        assert_eq!(shared.summary(), plain.summary());
+        let (a, b) = (shared.stats(), plain.stats());
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.peak_stored, b.peak_stored);
+        assert_eq!(a.instances, b.instances);
+        assert!(
+            a.kernel_evals <= b.kernel_evals,
+            "shared panels must never evaluate more kernel entries: {} vs {}",
+            a.kernel_evals,
+            b.kernel_evals
+        );
     }
 
     #[test]

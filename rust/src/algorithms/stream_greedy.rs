@@ -81,6 +81,7 @@ impl StreamingAlgorithm for StreamGreedy {
     fn stats(&self) -> AlgoStats {
         AlgoStats {
             queries: self.oracle.queries(),
+            kernel_evals: self.oracle.kernel_evals(),
             elements: self.elements,
             stored: self.oracle.len(),
             peak_stored: self.peak_stored,

@@ -71,6 +71,14 @@ pub struct ThreeSieves {
     /// so accounting stays identical to a run that never paused even when
     /// a drift re-selection follows a resume.
     restored_queries: u64,
+    /// Kernel-eval total carried over by `restore_state` (same rebase
+    /// pattern as `restored_queries`, for the measured
+    /// [`AlgoStats::kernel_evals`] counter).
+    restored_kernel_evals: u64,
+    /// Kernel evals the restore replay charged on the oracle — subtracted
+    /// from stats so a resumed run reports exactly what the uninterrupted
+    /// run would.
+    discounted_kernel_evals: u64,
     /// Scratch for `process_batch` gain panels.
     gain_buf: Vec<f64>,
     peak_stored: usize,
@@ -126,6 +134,8 @@ impl ThreeSieves {
             extra_queries: 0,
             speculative_queries: 0,
             restored_queries: 0,
+            restored_kernel_evals: 0,
+            discounted_kernel_evals: 0,
             gain_buf: Vec::new(),
             peak_stored: 0,
         };
@@ -353,6 +363,8 @@ impl StreamingAlgorithm for ThreeSieves {
         AlgoStats {
             queries: (self.oracle.queries() + self.extra_queries + self.restored_queries)
                 .saturating_sub(self.speculative_queries),
+            kernel_evals: (self.oracle.kernel_evals() + self.restored_kernel_evals)
+                .saturating_sub(self.discounted_kernel_evals),
             elements: self.elements,
             stored: self.oracle.len(),
             peak_stored: self.peak_stored,
@@ -406,6 +418,7 @@ impl StreamingAlgorithm for ThreeSieves {
             ("t", Json::num(self.t as f64)),
             ("elements", Json::num(self.elements as f64)),
             ("queries", Json::num(self.stats().queries as f64)),
+            ("kernel_evals", Json::num(self.stats().kernel_evals as f64)),
             ("peak_stored", Json::num(self.peak_stored as f64)),
         ]))
     }
@@ -457,6 +470,10 @@ impl StreamingAlgorithm for ThreeSieves {
         let elements = field("elements")? as u64;
         let peak_stored = field("peak_stored")? as usize;
         let queries = field("queries")? as u64;
+        // Absent in checkpoints written before the kernel_evals counter
+        // existed — default to 0 so old sessions still resume (the
+        // measured counter restarts, the paper accounting is intact).
+        let kernel_evals = state.get("kernel_evals").as_f64().unwrap_or(0.0) as u64;
         let mut grid = threshold_grid(self.epsilon, m, self.hi_scale * self.k as f64 * m);
         if grid_len > grid.len() {
             return Err(format!("checkpoint grid_len {grid_len} exceeds full grid {}", grid.len()));
@@ -484,6 +501,10 @@ impl StreamingAlgorithm for ThreeSieves {
         self.speculative_queries = self.oracle.queries();
         self.extra_queries = 0;
         self.restored_queries = queries;
+        // Same rebase for the measured kernel-eval counter: cancel the
+        // replay's kernel rows and carry the checkpointed total.
+        self.discounted_kernel_evals = self.oracle.kernel_evals();
+        self.restored_kernel_evals = kernel_evals;
         self.gain_buf.clear();
         Ok(())
     }

@@ -149,7 +149,7 @@ pub fn race(
 pub fn winner(reports: &[LaneReport]) -> &LaneReport {
     reports
         .iter()
-        .max_by(|a, b| a.value.partial_cmp(&b.value).unwrap())
+        .max_by(|a, b| a.value.total_cmp(&b.value))
         .expect("non-empty race")
 }
 

@@ -182,7 +182,8 @@ impl ShardedThreeSieves {
         self.shards
             .iter()
             .max_by(|a, b| {
-                a.oracle.current_value().partial_cmp(&b.oracle.current_value()).unwrap()
+                // total_cmp: NaN must surface as a broken best, not a panic
+                a.oracle.current_value().total_cmp(&b.oracle.current_value())
             })
             .expect("at least one shard")
     }
@@ -258,6 +259,7 @@ impl StreamingAlgorithm for ShardedThreeSieves {
         let charged: u64 = self.shards.iter().map(|s| s.oracle.queries()).sum();
         AlgoStats {
             queries: charged.saturating_sub(self.speculative_queries),
+            kernel_evals: self.shards.iter().map(|s| s.oracle.kernel_evals()).sum(),
             elements: self.elements,
             stored,
             peak_stored: self.peak_stored.max(stored),

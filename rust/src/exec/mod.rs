@@ -1,7 +1,11 @@
 //! Parallel execution subsystem: a dependency-free (std `thread` +
 //! channels) persistent worker pool driving the layers whose work
 //! decomposes into independent coarse units — ShardedThreeSieves shards,
-//! SieveStreaming/Salsa sieves, race lanes.
+//! SieveStreaming/Salsa sieves, race lanes, and the shared kernel-panel
+//! broker's row-ranges (`NativeLogDet::build_chunk_panel` splits each
+//! chunk panel into several ranges per worker — finer than the
+//! one-chunk×unit granularity of the sieve fan-out, so fast workers pick
+//! up the tail instead of idling).
 //!
 //! ## Determinism contract
 //!

@@ -147,6 +147,7 @@ pub fn walk_direction(dataset: &str, n: usize, k: usize, seed: u64) -> Vec<Ablat
         summary_len: bottom.oracle.len(),
         stats: AlgoStats {
             queries: bottom.oracle.queries(),
+            kernel_evals: bottom.oracle.kernel_evals(),
             elements: bottom.elements,
             stored: bottom.oracle.len(),
             peak_stored: bottom.oracle.len(),

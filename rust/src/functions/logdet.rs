@@ -20,10 +20,24 @@
 //! This is the same math the L2 JAX model (`python/compile/model.py`)
 //! implements on padded arrays; `rust/tests/pjrt_roundtrip.rs` checks the
 //! two agree through the compiled artifact.
+//!
+//! §Perf iteration 6 (shared kernel-panel broker): the kernel stage is
+//! now separable from the Cholesky state — [`PanelSharing`] builds one
+//! U×B chunk panel over the *union* of all sieves' interned summary rows
+//! and the per-sieve forward solves gather their `kv` rows from it, so
+//! multi-sieve algorithms stop re-evaluating the same `k(x, s)` entries
+//! once per sieve. Measured via the new `kernel_evals` counter:
+//! `rust/tests/panel_sharing_parity.rs` pins shared ≤ per-sieve with a
+//! ≥2× floor at ε = 0.01 (dense grids measure far higher — the per-sieve
+//! path pays Σ|S_sieve| entries per candidate where the broker pays the
+//! number of *distinct* rows), and `benches/micro_hotpath.rs` tracks the
+//! ratio per run in CI (`bench_panel_sharing.json`).
 
+use crate::exec::ExecContext;
 use crate::kernels::RbfKernel;
 use crate::util::mathx::floor_eps;
 
+use super::panel::{ChunkPanel, PanelSharing, RowStore, SharedRowStore};
 use super::SubmodularFunction;
 
 /// 4-lane f32 dot product with f64 lane-sum accumulation.
@@ -106,6 +120,48 @@ fn dot_lanes_f64(a: &[f64], b: &[f64]) -> f64 {
     sum
 }
 
+/// One RBF kernel entry from a squared distance: `exp(-gamma*max(d2,0))`
+/// with the §Perf-iteration-4 underflow cutoff (`exp()` is ~20ns and most
+/// pairs are far apart under the paper's gammas — skip it when the value
+/// underflows our tolerance anyway, e^-32 ≈ 1e-14).
+///
+/// The single definition every kernel-entry site in this file funnels
+/// through — scalar row, per-sieve panel, broker panel, chunk-local rows —
+/// so the broker's bitwise shared-vs-per-sieve parity holds by
+/// construction rather than by six hand-synced copies.
+#[inline]
+fn rbf_entry(gamma: f64, d2: f64) -> f64 {
+    let e = gamma * d2.max(0.0);
+    if e > 32.0 {
+        0.0
+    } else {
+        (-e).exp()
+    }
+}
+
+/// Forward substitution `z = L⁻¹(a·kv)` against a packed lower-triangular
+/// factor, returning `‖z‖²` with `z` left in place. One definition for
+/// the scalar ([`NativeLogDet::solve_for`]), batched
+/// (`peek_gain_batch`) and broker-gathered (`peek_gain_batch_gathered`)
+/// gain paths — their bitwise agreement is the parity contract, so the
+/// loop exists exactly once.
+#[inline]
+fn forward_solve(chol: &[f64], z: &mut [f64], kv: &[f64], a: f64) -> f64 {
+    let n = kv.len();
+    let mut znorm2 = 0.0;
+    for i in 0..n {
+        let row = &chol[tri(i)..tri(i) + i + 1];
+        // acc = a·kv_i − Σ_{j<i} L_ij z_j, with the dot in 4 independent
+        // lanes (§Perf iteration 3 — the solve dominates once the kernel
+        // row is cached).
+        let acc = a * kv[i] - dot_lanes_f64(&row[..i], &z[..i]);
+        let zi = acc / row[i];
+        z[i] = zi;
+        znorm2 += zi * zi;
+    }
+    znorm2
+}
+
 /// Configuration for the log-det objective.
 #[derive(Clone, Debug)]
 pub struct LogDetConfig {
@@ -157,6 +213,23 @@ pub struct NativeLogDet {
     row_norms: Vec<f64>,
     /// B×n kernel panel scratch for `peek_gain_batch`.
     panel: Vec<f64>,
+    /// Measured kernel-entry evaluations (see
+    /// [`SubmodularFunction::kernel_evals`]). §Perf iteration 6: this is
+    /// the counter the shared-panel broker exists to shrink — multi-sieve
+    /// algorithms re-evaluated the same `k(x, s)` entries once per sieve;
+    /// with the broker the union panel is computed once per chunk and
+    /// every sieve's solve *gathers* from it (`rust/src/functions/
+    /// panel.rs`). The parity suite pins shared ≤ per-sieve and the
+    /// `micro_hotpath` panel-sharing rows track the measured ratio in CI
+    /// (`bench_panel_sharing.json`; acceptance: ≥2× fewer at ε = 0.01 on
+    /// the multi-sieve scenario).
+    kernel_evals: u64,
+    /// Shared row store for the panel broker (attached by multi-sieve
+    /// algorithms; `clone_empty` propagates the handle to every sieve).
+    store: Option<SharedRowStore>,
+    /// Interned id per summary row, parallel to `feats` rows — only
+    /// maintained while a store is attached.
+    row_ids: Vec<u32>,
 }
 
 #[inline]
@@ -179,6 +252,9 @@ impl NativeLogDet {
             z: vec![0.0; cap],
             row_norms: Vec::with_capacity(cap),
             panel: Vec::new(),
+            kernel_evals: 0,
+            store: None,
+            row_ids: Vec::new(),
             cfg,
         }
     }
@@ -208,19 +284,7 @@ impl NativeLogDet {
             self.z.resize(n, 0.0);
         }
         self.kernel_row(item);
-        let a = self.cfg.a;
-        let mut znorm2 = 0.0;
-        for i in 0..n {
-            let row = &self.chol[tri(i)..tri(i) + i + 1];
-            // Forward substitution: acc = a·kv_i − Σ_{j<i} L_ij z_j, with
-            // the dot in 4 independent lanes (§Perf iteration 3 — the
-            // solve dominates once the kernel row is cached).
-            let acc = a * self.kv[i] - dot_lanes_f64(&row[..i], &self.z[..i]);
-            let zi = acc / row[i];
-            self.z[i] = zi;
-            znorm2 += zi * zi;
-        }
-        znorm2
+        forward_solve(&self.chol, &mut self.z, &self.kv[..n], self.cfg.a)
     }
 
     /// RBF kernel row against the summary into `self.kv[..n]`.
@@ -231,15 +295,12 @@ impl NativeLogDet {
     fn kernel_row(&mut self, item: &[f32]) {
         let d = self.cfg.dim;
         let gamma = self.cfg.gamma;
+        self.kernel_evals += self.n as u64;
         let xsq = dot_lanes(item, item);
         for i in 0..self.n {
             let row = &self.feats[i * d..(i + 1) * d];
             let d2 = xsq + self.row_norms[i] - 2.0 * dot_lanes(item, row);
-            let e = gamma * d2.max(0.0);
-            // §Perf iteration 4: exp() is ~20ns and most pairs are far
-            // apart under the paper's gammas — skip it when the kernel
-            // value underflows our tolerance anyway (e^-32 ≈ 1e-14).
-            self.kv[i] = if e > 32.0 { 0.0 } else { (-e).exp() };
+            self.kv[i] = rbf_entry(gamma, d2);
         }
     }
 
@@ -261,6 +322,7 @@ impl NativeLogDet {
         let d = self.cfg.dim;
         let n = self.n;
         let gamma = self.cfg.gamma;
+        self.kernel_evals += (count * n) as u64;
         if self.panel.len() < count * n {
             self.panel.resize(count * n, 0.0);
         }
@@ -285,8 +347,7 @@ impl NativeLogDet {
                 let dots = dot_lanes_x4(&xs, row);
                 for q in 0..4 {
                     let d2 = xsq[q] + rn - 2.0 * dots[q];
-                    let e = gamma * d2.max(0.0);
-                    self.panel[(b0 + q) * n + i] = if e > 32.0 { 0.0 } else { (-e).exp() };
+                    self.panel[(b0 + q) * n + i] = rbf_entry(gamma, d2);
                 }
             }
         }
@@ -297,8 +358,7 @@ impl NativeLogDet {
             for i in 0..n {
                 let row = &self.feats[i * d..(i + 1) * d];
                 let d2 = xsq + self.row_norms[i] - 2.0 * dot_lanes(x, row);
-                let e = gamma * d2.max(0.0);
-                self.panel[b * n + i] = if e > 32.0 { 0.0 } else { (-e).exp() };
+                self.panel[b * n + i] = rbf_entry(gamma, d2);
             }
         }
     }
@@ -345,8 +405,9 @@ impl SubmodularFunction for NativeLogDet {
             out.resize(count, g);
             return;
         }
+        // Only `z` backs the forward solves here — the panel plays the
+        // role `kv` has on the scalar path, so `kv` stays untouched.
         if self.z.len() < n {
-            self.kv.resize(n, 0.0);
             self.z.resize(n, 0.0);
         }
         self.kernel_panel(items, count);
@@ -356,14 +417,7 @@ impl SubmodularFunction for NativeLogDet {
         let panel = std::mem::take(&mut self.panel);
         for b in 0..count {
             let kv = &panel[b * n..(b + 1) * n];
-            let mut znorm2 = 0.0;
-            for i in 0..n {
-                let row = &self.chol[tri(i)..tri(i) + i + 1];
-                let acc = a * kv[i] - dot_lanes_f64(&row[..i], &self.z[..i]);
-                let zi = acc / row[i];
-                self.z[i] = zi;
-                znorm2 += zi * zi;
-            }
+            let znorm2 = forward_solve(&self.chol, &mut self.z, kv, a);
             out.push(self.gain_from_znorm2(znorm2));
         }
         self.panel = panel;
@@ -380,6 +434,12 @@ impl SubmodularFunction for NativeLogDet {
         self.chol.push(dval);
         self.feats.extend_from_slice(item);
         self.row_norms.push(dot_lanes(item, item));
+        if let Some(store) = &self.store {
+            // Intern with the locally cached norm so the store's copy is
+            // bit-identical to `row_norms` (panel entries must match the
+            // scalar kernel row exactly).
+            self.row_ids.push(store.intern(item, self.row_norms[n]));
+        }
         self.value += dval.ln();
         self.n += 1;
     }
@@ -440,6 +500,9 @@ impl SubmodularFunction for NativeLogDet {
         let d = self.cfg.dim;
         self.feats.drain(idx * d..(idx + 1) * d);
         self.row_norms.remove(idx);
+        if self.store.is_some() {
+            self.row_ids.remove(idx);
+        }
         self.n -= 1;
     }
 
@@ -451,6 +514,7 @@ impl SubmodularFunction for NativeLogDet {
         self.feats.clear();
         self.chol.clear();
         self.row_norms.clear();
+        self.row_ids.clear();
         self.value = 0.0;
         self.n = 0;
     }
@@ -459,12 +523,179 @@ impl SubmodularFunction for NativeLogDet {
         self.queries
     }
 
+    fn kernel_evals(&self) -> u64 {
+        self.kernel_evals
+    }
+
+    fn panel_sharing(&mut self) -> Option<&mut dyn PanelSharing> {
+        Some(self)
+    }
+
     fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
-        Box::new(NativeLogDet::new(self.cfg.clone()))
+        let mut f = NativeLogDet::new(self.cfg.clone());
+        // Sieves spawned from an attached prototype share its store — the
+        // whole point of interning (panel rows are deduped across sieves).
+        f.store.clone_from(&self.store);
+        Box::new(f)
     }
 
     fn parallel_safe(&self) -> bool {
-        true // plain owned Vec/f64 state, nothing shared between clones
+        // Plain owned Vec/f64 state; the one shared piece — the optional
+        // row store — is behind an `Arc<Mutex>` and therefore safe to
+        // touch from whichever worker thread currently owns the instance.
+        true
+    }
+}
+
+/// One shared-panel row: `out[c] = k(chunk[c], row)` for all candidates,
+/// candidate-blocked 4-wide — the exact arithmetic of the per-sieve
+/// [`NativeLogDet::kernel_panel`] (and therefore of the scalar
+/// `kernel_row`), transposed to row-major so the broker can split the
+/// panel by row-range across the exec pool.
+fn panel_row(
+    chunk: &[f32],
+    d: usize,
+    gamma: f64,
+    xsq: &[f64],
+    row: &[f32],
+    rn: f64,
+    out: &mut [f64],
+) {
+    let b = out.len();
+    let blocks = b / 4;
+    for blk in 0..blocks {
+        let c0 = blk * 4;
+        let xs: [&[f32]; 4] = [
+            &chunk[c0 * d..(c0 + 1) * d],
+            &chunk[(c0 + 1) * d..(c0 + 2) * d],
+            &chunk[(c0 + 2) * d..(c0 + 3) * d],
+            &chunk[(c0 + 3) * d..(c0 + 4) * d],
+        ];
+        let dots = dot_lanes_x4(&xs, row);
+        for q in 0..4 {
+            let d2 = xsq[c0 + q] + rn - 2.0 * dots[q];
+            out[c0 + q] = rbf_entry(gamma, d2);
+        }
+    }
+    for c in blocks * 4..b {
+        let x = &chunk[c * d..(c + 1) * d];
+        let d2 = xsq[c] + rn - 2.0 * dot_lanes(x, row);
+        out[c] = rbf_entry(gamma, d2);
+    }
+}
+
+/// A contiguous slot-range of a chunk panel under construction — the unit
+/// of work the exec pool fans out in [`NativeLogDet::build_chunk_panel`].
+struct PanelRange<'a> {
+    ids: &'a [u32],
+    out: &'a mut [f64],
+}
+
+impl PanelSharing for NativeLogDet {
+    fn attach_row_store(&mut self, store: SharedRowStore) {
+        assert_eq!(store.lock().dim(), self.cfg.dim, "row store dim mismatch");
+        assert_eq!(self.n, 0, "attach_row_store must precede the first accept");
+        self.store = Some(store);
+        self.row_ids.clear();
+    }
+
+    fn row_store(&self) -> Option<&SharedRowStore> {
+        self.store.as_ref()
+    }
+
+    fn summary_row_ids(&self) -> &[u32] {
+        &self.row_ids
+    }
+
+    fn build_chunk_panel(&self, ids: &[u32], chunk: &[f32], exec: &ExecContext) -> ChunkPanel {
+        let d = self.cfg.dim;
+        debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
+        let b = chunk.len() / d;
+        let slots = ids.iter().enumerate().map(|(i, &id)| (id, i as u32)).collect();
+        if ids.is_empty() || b == 0 {
+            return ChunkPanel { slots, data: Vec::new(), width: b, evals: 0 };
+        }
+        let gamma = self.cfg.gamma;
+        let guard =
+            self.store.as_ref().expect("build_chunk_panel requires an attached row store").lock();
+        let store: &RowStore = &guard;
+        // Candidate norms once per chunk — shared by every panel row, and
+        // bit-identical to the per-query `dot_lanes(x, x)` of the scalar
+        // path.
+        let xsq: Vec<f64> = chunk.chunks_exact(d).map(|x| dot_lanes(x, x)).collect();
+        let mut data = vec![0.0f64; ids.len() * b];
+        // Row-range fan-out, several ranges per worker so fast threads
+        // pick up the tail (the ROADMAP "work-stealing granularity"
+        // lever: the kernel panel now shares the pool with the sieves).
+        let per = ids.len().div_ceil(exec.threads().max(1) * 4).max(8);
+        let mut units: Vec<PanelRange<'_>> = data
+            .chunks_mut(per * b)
+            .zip(ids.chunks(per))
+            .map(|(out, ids)| PanelRange { ids, out })
+            .collect();
+        exec.map_units(&mut units, |range| {
+            for (r, &id) in range.ids.iter().enumerate() {
+                let row = store.row(id);
+                let rn = store.norm(id);
+                panel_row(chunk, d, gamma, &xsq, row, rn, &mut range.out[r * b..(r + 1) * b]);
+            }
+        });
+        drop(guard);
+        ChunkPanel { slots, data, width: b, evals: (ids.len() * b) as u64 }
+    }
+
+    fn chunk_kernel_row(&mut self, row: &[f32], chunk: &[f32], from: usize, out: &mut [f64]) {
+        let d = self.cfg.dim;
+        debug_assert_eq!(row.len(), d);
+        let b = chunk.len() / d;
+        debug_assert!(out.len() >= b);
+        debug_assert!(from <= b);
+        let gamma = self.cfg.gamma;
+        // Same bits the accepting oracle cached in `row_norms`: dot_lanes
+        // is deterministic in its inputs.
+        let rn = dot_lanes(row, row);
+        for c in from..b {
+            let x = &chunk[c * d..(c + 1) * d];
+            let d2 = dot_lanes(x, x) + rn - 2.0 * dot_lanes(x, row);
+            out[c] = rbf_entry(gamma, d2);
+        }
+        self.kernel_evals += (b - from) as u64;
+    }
+
+    /// The gather-fed twin of [`SubmodularFunction::peek_gain_batch`]: the
+    /// same forward-solve loop, but each candidate's `kv` row is written
+    /// by `fill` (a broker gather) instead of a locally computed kernel
+    /// panel. Charges `count` queries, performs zero kernel evaluations —
+    /// that is the entire saving.
+    fn peek_gain_batch_gathered(
+        &mut self,
+        count: usize,
+        fill: &mut dyn FnMut(usize, &mut [f64]),
+        out: &mut Vec<f64>,
+    ) {
+        self.queries += count as u64;
+        out.clear();
+        let n = self.n;
+        if n == 0 {
+            // Empty summary: the gain is item-independent (k(e,e) = 1).
+            let g = self.gain_from_znorm2(0.0);
+            out.resize(count, g);
+            return;
+        }
+        if self.kv.len() < n {
+            self.kv.resize(n, 0.0);
+        }
+        if self.z.len() < n {
+            self.z.resize(n, 0.0);
+        }
+        let a = self.cfg.a;
+        let mut kv = std::mem::take(&mut self.kv);
+        for t in 0..count {
+            fill(t, &mut kv[..n]);
+            let znorm2 = forward_solve(&self.chol, &mut self.z, &kv[..n], a);
+            out.push(self.gain_from_znorm2(znorm2));
+        }
+        self.kv = kv;
     }
 }
 
@@ -684,6 +915,132 @@ mod tests {
             assert!((g - f.max_singleton_value()).abs() < 1e-12);
         }
         assert_eq!(f.queries(), 2);
+    }
+
+    #[test]
+    fn kernel_evals_counts_scalar_and_panel_work() {
+        let mut rng = Rng::seed_from(21);
+        let d = 5;
+        let items = rand_items(&mut rng, 3, d);
+        let mut f = NativeLogDet::new(LogDetConfig::with_gamma(d, 4, 1.0, A));
+        assert_eq!(f.kernel_evals(), 0);
+        f.accept(&items[..d]); // |S|=0: kernel row over 0 rows
+        assert_eq!(f.kernel_evals(), 0);
+        f.accept(&items[d..2 * d]); // kernel row over 1 row
+        assert_eq!(f.kernel_evals(), 1);
+        f.peek_gain(&items[2 * d..3 * d]); // row over 2 rows
+        assert_eq!(f.kernel_evals(), 3);
+        let mut out = Vec::new();
+        f.peek_gain_batch(&items, 3, &mut out); // 3×2 panel
+        assert_eq!(f.kernel_evals(), 9);
+    }
+
+    /// The broker panel must be bitwise identical to the scalar kernel
+    /// row — entries, not just gains.
+    #[test]
+    fn chunk_panel_is_bitwise_identical_to_kernel_row() {
+        use crate::exec::Parallelism;
+        let mut rng = Rng::seed_from(22);
+        let d = 7;
+        let rows = rand_items(&mut rng, 6, d);
+        let chunk = rand_items(&mut rng, 9, d); // two 4-blocks + tail
+        let mut f = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 1.3, A));
+        f.attach_row_store(SharedRowStore::new(d));
+        for i in 0..6 {
+            f.accept(&rows[i * d..(i + 1) * d]);
+        }
+        let ids: Vec<u32> = f.summary_row_ids().to_vec();
+        assert_eq!(ids.len(), 6);
+        for exec in [ExecContext::sequential(), ExecContext::new(Parallelism::Threads(3))] {
+            let panel = f.build_chunk_panel(&ids, &chunk, &exec);
+            assert_eq!(panel.rows(), 6);
+            assert_eq!(panel.evals(), 6 * 9);
+            // Reference: the scalar kernel row of an identical twin.
+            let mut twin = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 1.3, A));
+            for i in 0..6 {
+                twin.accept(&rows[i * d..(i + 1) * d]);
+            }
+            for b in 0..9 {
+                twin.kernel_row(&chunk[b * d..(b + 1) * d]);
+                for (i, &id) in ids.iter().enumerate() {
+                    let slot = panel.slot(id).unwrap();
+                    assert_eq!(
+                        panel.at(slot, b).to_bits(),
+                        twin.kv[i].to_bits(),
+                        "panel ({b},{i}) diverges from scalar kernel row"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Gather-fed solves (kv rows read from a panel) must be bitwise
+    /// identical to `peek_gain_batch` — gains and query accounting.
+    #[test]
+    fn gathered_gains_match_batch_bitwise() {
+        let mut rng = Rng::seed_from(23);
+        let d = 6;
+        let rows = rand_items(&mut rng, 5, d);
+        let chunk = rand_items(&mut rng, 7, d);
+        let mut shared = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 0.9, A));
+        shared.attach_row_store(SharedRowStore::new(d));
+        let mut plain = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 0.9, A));
+        for i in 0..5 {
+            shared.accept(&rows[i * d..(i + 1) * d]);
+            plain.accept(&rows[i * d..(i + 1) * d]);
+        }
+        let ids: Vec<u32> = shared.summary_row_ids().to_vec();
+        let panel = shared.build_chunk_panel(&ids, &chunk, &ExecContext::sequential());
+        let (q0, e0) = (shared.queries(), shared.kernel_evals());
+        let mut gathered = Vec::new();
+        let slots: Vec<u32> = ids.iter().map(|&id| panel.slot(id).unwrap()).collect();
+        shared.peek_gain_batch_gathered(
+            7,
+            &mut |t, kv| {
+                for (i, &s) in slots.iter().enumerate() {
+                    kv[i] = panel.at(s, t);
+                }
+            },
+            &mut gathered,
+        );
+        assert_eq!(shared.queries(), q0 + 7, "gathered must charge one query per item");
+        assert_eq!(shared.kernel_evals(), e0, "gathering performs no kernel evaluations");
+        let mut batch = Vec::new();
+        plain.peek_gain_batch(&chunk, 7, &mut batch);
+        for (i, (&g, &b)) in gathered.iter().zip(&batch).enumerate() {
+            assert_eq!(g.to_bits(), b.to_bits(), "item {i}: {g} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gathered_on_empty_summary_matches_batch() {
+        let mut f = NativeLogDet::new(LogDetConfig::with_gamma(3, 4, 1.0, A));
+        f.attach_row_store(SharedRowStore::new(3));
+        let mut out = Vec::new();
+        f.peek_gain_batch_gathered(2, &mut |_, _| unreachable!("no rows to fill"), &mut out);
+        assert_eq!(out.len(), 2);
+        for g in &out {
+            assert!((g - f.max_singleton_value()).abs() < 1e-12);
+        }
+        assert_eq!(f.queries(), 2);
+    }
+
+    #[test]
+    fn accept_interns_rows_and_clone_shares_the_store() {
+        let mut rng = Rng::seed_from(24);
+        let d = 4;
+        let item = rand_items(&mut rng, 1, d);
+        let mut proto = NativeLogDet::new(LogDetConfig::with_gamma(d, 4, 1.0, A));
+        proto.attach_row_store(SharedRowStore::new(d));
+        let mut a = proto.clone_empty();
+        let mut b = proto.clone_empty();
+        a.accept(&item);
+        b.accept(&item);
+        let ia = a.panel_sharing().unwrap().summary_row_ids().to_vec();
+        let ib = b.panel_sharing().unwrap().summary_row_ids().to_vec();
+        assert_eq!(ia, ib, "identical rows must intern to the same id across sieves");
+        let store = proto.row_store().unwrap();
+        assert_eq!(store.len(), 1, "dedup: one store entry for two sieves");
     }
 
     #[test]

@@ -18,10 +18,12 @@
 pub mod coverage;
 pub mod facility;
 pub mod logdet;
+pub mod panel;
 
 pub use coverage::ConcaveCoverage;
 pub use facility::FacilityLocation;
 pub use logdet::{LogDetConfig, NativeLogDet};
+pub use panel::{ChunkPanel, PanelSharing, RowStore, SharedRowStore};
 
 /// Stateful oracle for a non-negative monotone submodular function.
 ///
@@ -90,6 +92,27 @@ pub trait SubmodularFunction {
     /// A fresh, empty oracle of the same configuration. Sieve-family
     /// algorithms use this to spawn one oracle per sieve.
     fn clone_empty(&self) -> Box<dyn SubmodularFunction>;
+
+    /// Total kernel-entry evaluations performed so far — the measured
+    /// implementation cost behind the paper's query accounting (one gain
+    /// query hides an O(n·d) kernel row). Unlike
+    /// [`queries`](Self::queries) this is *not* a modeled cost: batched
+    /// and shared-panel paths report fewer evaluations for the same
+    /// queries, which is exactly what
+    /// [`AlgoStats::kernel_evals`](crate::metrics::AlgoStats::kernel_evals)
+    /// makes observable. Default 0 for oracles without an explicit kernel
+    /// row (coverage, PJRT — the device does its own counting).
+    fn kernel_evals(&self) -> u64 {
+        0
+    }
+
+    /// The cross-sieve kernel-panel-sharing capability
+    /// ([`panel::PanelSharing`]), if this oracle separates kernel
+    /// evaluation from its solve state. Default `None`: algorithms fall
+    /// back to per-sieve panels.
+    fn panel_sharing(&mut self) -> Option<&mut dyn panel::PanelSharing> {
+        None
+    }
 
     /// May this oracle — and every oracle produced by
     /// [`clone_empty`](Self::clone_empty) from it — be driven from a

@@ -1,0 +1,311 @@
+//! Shared kernel-panel infrastructure: the interned row store and the
+//! per-chunk kernel panel the broker hands to sieves.
+//!
+//! Multi-sieve algorithms (SieveStreaming, SieveStreaming++, Salsa) hold
+//! dozens of sieves whose summaries overlap heavily — the same accepted
+//! element appears in many sieves at once. Before this layer existed, every
+//! sieve's batched gain oracle computed its *own* B×n kernel panel per
+//! chunk, re-evaluating the identical `k(x, s)` entries once per sieve.
+//!
+//! The broker decouples kernel evaluation from Cholesky state:
+//!
+//! * [`RowStore`] — every accepted summary row is *interned* once (deduped
+//!   by exact f32 bit pattern) and receives a stable id. Sieves reference
+//!   rows by id; the store holds the canonical feature bits and the cached
+//!   `‖s‖²` norm.
+//! * [`ChunkPanel`] — one U×B panel per chunk, computed **once** against
+//!   the union of all distinct summary rows across the live sieves (U
+//!   rows, B chunk candidates) instead of one B×n panel per sieve. Each
+//!   sieve's forward solve then *gathers* its `kv` row by id.
+//! * [`PanelSharing`] — the oracle capability the algorithms drive:
+//!   attach/lookup the store, report summary-row ids, build the panel
+//!   (fanned out by row-range on the exec pool) and run gather-fed batched
+//!   gain solves. [`crate::functions::NativeLogDet`] implements it with
+//!   arithmetic bitwise-identical to its scalar `kernel_row`, so
+//!   summaries, objective values and query accounting are unchanged
+//!   (`rust/tests/panel_sharing_parity.rs` pins this).
+//!
+//! Interning happens at `accept` time, under a mutex — accepts are rare
+//! (at most K per sieve over the whole stream), so the lock never sits on
+//! the per-candidate hot path. Panel reads take the lock once per chunk,
+//! on the coordinating thread, before the sieves fan out.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::exec::ExecContext;
+
+/// Interned summary-row storage shared by every oracle clone of one
+/// algorithm instance (the prototype and all its sieves).
+pub struct RowStore {
+    dim: usize,
+    /// Canonical row features, id-major (`id * dim ..`).
+    feats: Vec<f32>,
+    /// Cached `‖s‖²` per id, computed by the *accepting* oracle with its
+    /// own dot kernel — stored verbatim so panel entries reuse the exact
+    /// bits the scalar path caches in its local `row_norms`.
+    norms: Vec<f64>,
+    /// FNV-1a over the row's f32 bit pattern → candidate ids. Buckets are
+    /// compared bit-exactly, so interning never conflates distinct rows;
+    /// the map is only consulted at accept time.
+    index: HashMap<u64, Vec<u32>>,
+}
+
+impl RowStore {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "RowStore: dim must be positive");
+        RowStore { dim, feats: Vec::new(), norms: Vec::new(), index: HashMap::new() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of distinct interned rows.
+    pub fn len(&self) -> usize {
+        self.norms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.norms.is_empty()
+    }
+
+    /// Canonical feature bits of row `id`.
+    #[inline]
+    pub fn row(&self, id: u32) -> &[f32] {
+        let i = id as usize * self.dim;
+        &self.feats[i..i + self.dim]
+    }
+
+    /// Cached `‖s‖²` of row `id`.
+    #[inline]
+    pub fn norm(&self, id: u32) -> f64 {
+        self.norms[id as usize]
+    }
+
+    /// Intern a row, returning its stable id. Rows are deduplicated by
+    /// exact bit pattern: the same element accepted by thirty sieves costs
+    /// one store entry and one panel row. `norm` must be the accepting
+    /// oracle's own `‖item‖²` so the stored value is bit-identical to its
+    /// local cache.
+    pub fn intern(&mut self, item: &[f32], norm: f64) -> u32 {
+        debug_assert_eq!(item.len(), self.dim);
+        let key = fnv1a_row(item);
+        if let Some(bucket) = self.index.get(&key) {
+            for &id in bucket {
+                if bits_equal(self.row(id), item) {
+                    return id;
+                }
+            }
+        }
+        let id = self.norms.len() as u32;
+        self.feats.extend_from_slice(item);
+        self.norms.push(norm);
+        self.index.entry(key).or_default().push(id);
+        id
+    }
+}
+
+/// FNV-1a over the f32 bit pattern (deterministic across runs — the store
+/// must never depend on `RandomState`).
+fn fnv1a_row(row: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &x in row {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[inline]
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// A shareable handle to a [`RowStore`]. Cloning shares the same store;
+/// the mutex makes accept-time interning safe from the exec pool's worker
+/// threads (the only writers — panel builds read on the coordinator).
+#[derive(Clone)]
+pub struct SharedRowStore {
+    inner: Arc<Mutex<RowStore>>,
+}
+
+impl SharedRowStore {
+    pub fn new(dim: usize) -> Self {
+        SharedRowStore { inner: Arc::new(Mutex::new(RowStore::new(dim))) }
+    }
+
+    /// Intern under the lock (see [`RowStore::intern`]).
+    pub fn intern(&self, item: &[f32], norm: f64) -> u32 {
+        self.inner.lock().expect("row store poisoned").intern(item, norm)
+    }
+
+    /// Lock for bulk reads (panel builds hold this once per chunk).
+    pub fn lock(&self) -> MutexGuard<'_, RowStore> {
+        self.inner.lock().expect("row store poisoned")
+    }
+
+    /// Distinct interned rows.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+}
+
+impl std::fmt::Debug for SharedRowStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SharedRowStore(rows={})", self.len())
+    }
+}
+
+/// One chunk's shared kernel panel: `at(slot, b) = k(chunk[b], row_slot)`
+/// for every distinct summary row in the union the broker was built over.
+///
+/// Slot-major layout (`data[slot · width + b]`) so a sieve's gather for
+/// candidate `b` strides across rows exactly like the per-sieve panel's
+/// `kv` row did, and the builder can hand disjoint row-ranges to the exec
+/// pool's workers.
+pub struct ChunkPanel {
+    /// Row id → panel slot.
+    pub(crate) slots: HashMap<u32, u32>,
+    /// Slot-major entries, `rows × width`.
+    pub(crate) data: Vec<f64>,
+    /// Chunk candidate count B.
+    pub(crate) width: usize,
+    /// Kernel-entry evaluations this panel cost (rows × width).
+    pub(crate) evals: u64,
+}
+
+impl ChunkPanel {
+    /// Panel slot of row `id`, if the id was in the union at build time.
+    #[inline]
+    pub fn slot(&self, id: u32) -> Option<u32> {
+        self.slots.get(&id).copied()
+    }
+
+    /// Kernel entry for (panel slot, chunk candidate).
+    #[inline]
+    pub fn at(&self, slot: u32, b: usize) -> f64 {
+        self.data[slot as usize * self.width + b]
+    }
+
+    /// Chunk candidate count B.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Distinct summary rows covered.
+    pub fn rows(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Kernel-entry evaluations spent building this panel. The algorithms
+    /// fold this into [`crate::metrics::AlgoStats::kernel_evals`] — it is
+    /// charged once per chunk, not once per sieve.
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// Oracle capability for cross-sieve kernel-panel sharing.
+///
+/// Implementations must keep every number bitwise identical to their
+/// scalar path: a gather-fed solve over panel entries must return exactly
+/// the gains `peek_gain` would, and charge exactly the same queries.
+/// Oracles without a separable kernel stage (coverage, PJRT) simply never
+/// expose this — [`crate::functions::SubmodularFunction::panel_sharing`]
+/// returns `None` and the algorithms keep their per-sieve panels.
+pub trait PanelSharing {
+    /// Attach a shared row store. Must be called before the first accept;
+    /// [`clone_empty`](crate::functions::SubmodularFunction::clone_empty)
+    /// propagates the handle so all sieves of one algorithm share it.
+    fn attach_row_store(&mut self, store: SharedRowStore);
+
+    /// The attached store, if any.
+    fn row_store(&self) -> Option<&SharedRowStore>;
+
+    /// Interned ids of the current summary rows, in acceptance order
+    /// (empty when no store is attached).
+    fn summary_row_ids(&self) -> &[u32];
+
+    /// Build the chunk panel for `ids` (all interned in the attached
+    /// store) against `chunk`, fanned out by row-range on `exec`'s pool.
+    /// Entries must be bitwise identical to the scalar kernel row.
+    fn build_chunk_panel(&self, ids: &[u32], chunk: &[f32], exec: &ExecContext) -> ChunkPanel;
+
+    /// Scalar-exact kernel row for a mid-chunk accepted summary row:
+    /// `out[b] = k(chunk[b], row)` for `b ∈ from..B` (`out[..from]` is
+    /// left untouched — those candidates were consumed before the row
+    /// existed). Counts the evaluated entries as kernel evals.
+    fn chunk_kernel_row(&mut self, row: &[f32], chunk: &[f32], from: usize, out: &mut [f64]);
+
+    /// Batched gains whose kernel rows are *supplied* by `fill(t, kv)`
+    /// (the broker gather) instead of computed locally. Charges exactly
+    /// `count` queries and performs no kernel evaluations; otherwise
+    /// bitwise identical to
+    /// [`peek_gain_batch`](crate::functions::SubmodularFunction::peek_gain_batch).
+    fn peek_gain_batch_gathered(
+        &mut self,
+        count: usize,
+        fill: &mut dyn FnMut(usize, &mut [f64]),
+        out: &mut Vec<f64>,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_dedups_by_bits() {
+        let mut store = RowStore::new(3);
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 3.5];
+        let ia = store.intern(&a, 14.0);
+        let ib = store.intern(&b, 17.25);
+        assert_ne!(ia, ib);
+        assert_eq!(store.intern(&a, 14.0), ia, "same bits must intern to the same id");
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.row(ib), &b);
+        assert_eq!(store.norm(ia), 14.0);
+    }
+
+    #[test]
+    fn shared_store_clones_share_rows() {
+        let s1 = SharedRowStore::new(2);
+        let s2 = s1.clone();
+        let id = s1.intern(&[0.5, -0.5], 0.5);
+        assert_eq!(s2.intern(&[0.5, -0.5], 0.5), id);
+        assert_eq!(s2.len(), 1);
+    }
+
+    #[test]
+    fn negative_zero_is_a_distinct_row() {
+        // Bit-exact interning: -0.0 and 0.0 differ in bits. Both rows
+        // produce identical kernel entries, so correctness is unaffected —
+        // the store just keeps two slots.
+        let mut store = RowStore::new(1);
+        let a = store.intern(&[0.0f32], 0.0);
+        let b = store.intern(&[-0.0f32], 0.0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn panel_lookup() {
+        let mut slots = HashMap::new();
+        slots.insert(7u32, 0u32);
+        slots.insert(3u32, 1u32);
+        let panel = ChunkPanel { slots, data: vec![1.0, 2.0, 3.0, 4.0], width: 2, evals: 4 };
+        assert_eq!(panel.slot(7), Some(0));
+        assert_eq!(panel.slot(4), None);
+        assert_eq!(panel.at(1, 0), 3.0);
+        assert_eq!(panel.rows(), 2);
+        assert_eq!(panel.width(), 2);
+        assert_eq!(panel.evals(), 4);
+    }
+}

@@ -29,6 +29,13 @@ pub trait Kernel: Send + Sync {
     /// `B = xs.len() / dim` query points against `n = rows.len() / dim`
     /// summary rows, both flat row-major. `out` must hold `B * n` values.
     ///
+    /// `scratch` is caller-owned working memory reused across calls so the
+    /// block path is allocation-free per chunk: [`RbfKernel`] caches the
+    /// summary row norms in it (resizing only on the first call or a
+    /// summary-size change); kernels with no cacheable intermediate ignore
+    /// it. Pass the same buffer every chunk — contents are overwritten,
+    /// never read across calls.
+    ///
     /// This is the trait-level batched API for kernel-generic consumers
     /// (facility-location panels, future PJRT/SIMD backends): one B×n
     /// panel turns per-element kernel rows into cache-friendly
@@ -39,7 +46,15 @@ pub trait Kernel: Send + Sync {
     /// (`kernel_panel`) instead of calling this — it additionally needs
     /// the exp-underflow cutoff and exact `dot_lanes` arithmetic that its
     /// bitwise batch/scalar parity contract pins.
-    fn eval_block(&self, xs: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+    fn eval_block(
+        &self,
+        xs: &[f32],
+        rows: &[f32],
+        dim: usize,
+        out: &mut [f64],
+        scratch: &mut Vec<f64>,
+    ) {
+        let _ = scratch;
         assert!(dim > 0, "eval_block: dim must be positive");
         debug_assert_eq!(xs.len() % dim, 0);
         debug_assert_eq!(rows.len() % dim, 0);
@@ -99,18 +114,29 @@ impl Kernel for RbfKernel {
         }
     }
 
-    fn eval_block(&self, xs: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+    fn eval_block(
+        &self,
+        xs: &[f32],
+        rows: &[f32],
+        dim: usize,
+        out: &mut [f64],
+        scratch: &mut Vec<f64>,
+    ) {
         // Same norm-caching decomposition as eval_row, but the summary row
         // norms are computed once for the whole panel instead of once per
         // query point, and rows stream through the cache once per query
-        // rather than once per (query, row) pair of independent calls.
+        // rather than once per (query, row) pair of independent calls. The
+        // norms live in the caller's scratch so a chunked ingestion loop
+        // pays one allocation per run, not one per chunk.
         assert!(dim > 0, "eval_block: dim must be positive");
         debug_assert_eq!(xs.len() % dim, 0);
         debug_assert_eq!(rows.len() % dim, 0);
         let n = rows.len() / dim;
         let b = xs.len() / dim;
         debug_assert!(out.len() >= b * n);
-        let row_norms: Vec<f64> = rows.chunks_exact(dim).map(|r| dot_f32(r, r)).collect();
+        scratch.clear();
+        scratch.extend(rows.chunks_exact(dim).map(|r| dot_f32(r, r)));
+        let row_norms: &[f64] = scratch;
         for (q, x) in xs.chunks_exact(dim).enumerate() {
             let xsq = dot_f32(x, x);
             let panel = &mut out[q * n..(q + 1) * n];
@@ -238,7 +264,8 @@ mod tests {
         let xs: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
         for k in &kernels {
             let mut out = vec![0.0; b * n];
-            k.eval_block(&xs, &rows, d, &mut out);
+            let mut scratch = Vec::new();
+            k.eval_block(&xs, &rows, d, &mut out, &mut scratch);
             for q in 0..b {
                 for i in 0..n {
                     let want = k.eval(&xs[q * d..(q + 1) * d], &rows[i * d..(i + 1) * d]);
@@ -258,9 +285,10 @@ mod tests {
         let k = RbfKernel::new(1.0);
         let rows = [0.5f32; 8];
         let mut out = [0.0f64; 0];
-        k.eval_block(&[], &rows, 4, &mut out);
+        let mut scratch = Vec::new();
+        k.eval_block(&[], &rows, 4, &mut out, &mut scratch);
         let k2 = CosineKernel;
-        k2.eval_block(&[], &rows, 4, &mut out);
+        k2.eval_block(&[], &rows, 4, &mut out, &mut scratch);
     }
 
     #[test]

@@ -494,6 +494,7 @@ fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
         rec.stats.queries,
         rec.stats.queries_per_element()
     );
+    println!("kernel evals   : {}", rec.stats.kernel_evals);
     println!("peak memory    : {} stored elements", rec.stats.peak_stored);
     Ok(())
 }

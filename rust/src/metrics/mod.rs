@@ -13,6 +13,16 @@ use std::time::Duration;
 pub struct AlgoStats {
     /// Total oracle queries (gain evaluations + state updates).
     pub queries: u64,
+    /// Measured kernel-entry evaluations behind those queries. `queries`
+    /// models the paper's cost (one unit per gain evaluation, whatever it
+    /// cost); this counts what the implementation actually computed — a
+    /// scalar gain query pays an O(n·d) kernel row, the batched panel
+    /// amortizes memory traffic but not entries, and the shared
+    /// kernel-panel broker (`rust/src/functions/panel.rs`) computes each
+    /// chunk's entries once *across* sieves, which is the drop this
+    /// counter makes observable end-to-end (stats → service METRICS →
+    /// bench JSON).
+    pub kernel_evals: u64,
     /// Stream elements processed.
     pub elements: u64,
     /// Current stored elements across all oracle instances (sieves).
@@ -62,11 +72,11 @@ pub struct RunRecord {
 
 impl RunRecord {
     pub const CSV_HEADER: &'static str = "algorithm,dataset,K,epsilon,T,value,rel_to_greedy,\
-         runtime_s,queries,queries_per_elem,peak_stored,summary_size";
+         runtime_s,queries,queries_per_elem,kernel_evals,peak_stored,summary_size";
 
     pub fn to_csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{:.6},{:.4},{:.6},{},{:.3},{},{}",
+            "{},{},{},{},{},{:.6},{:.4},{:.6},{},{:.3},{},{},{}",
             self.algorithm,
             self.dataset,
             self.k,
@@ -77,6 +87,7 @@ impl RunRecord {
             self.runtime.as_secs_f64(),
             self.stats.queries,
             self.stats.queries_per_element(),
+            self.stats.kernel_evals,
             self.stats.peak_stored,
             self.summary_size,
         )
@@ -95,6 +106,7 @@ impl RunRecord {
             ("runtime_s", Json::num(self.runtime.as_secs_f64())),
             ("queries", Json::num(self.stats.queries as f64)),
             ("queries_per_elem", Json::num(self.stats.queries_per_element())),
+            ("kernel_evals", Json::num(self.stats.kernel_evals as f64)),
             ("peak_stored", Json::num(self.stats.peak_stored as f64)),
             ("summary_size", Json::num(self.summary_size as f64)),
         ])

@@ -173,6 +173,10 @@ pub struct MetricsSnapshot {
     pub stored: usize,
     pub items: u64,
     pub queries: u64,
+    /// Measured kernel-entry evaluations across live sessions — the
+    /// shared-panel broker's saving, observable per service (see
+    /// [`AlgoStats::kernel_evals`]).
+    pub kernel_evals: u64,
     pub opens: u64,
     pub resumes: u64,
     pub pushes: u64,
@@ -534,10 +538,11 @@ impl Response {
                 s
             }
             Response::StatsData { id, reply } => format!(
-                "OK STATS id={id} elements={} queries={} stored={} peak={} instances={} \
-                 len={} value={} drift={}",
+                "OK STATS id={id} elements={} queries={} kernel_evals={} stored={} peak={} \
+                 instances={} len={} value={} drift={}",
                 reply.stats.elements,
                 reply.stats.queries,
+                reply.stats.kernel_evals,
                 reply.stats.stored,
                 reply.stats.peak_stored,
                 reply.stats.instances,
@@ -549,13 +554,14 @@ impl Response {
                 format!("OK CLOSE id={id} checkpointed={}", u8::from(*checkpointed))
             }
             Response::MetricsData(m) => format!(
-                "OK METRICS sessions={} stored={} items={} queries={} opens={} resumes={} \
-                 pushes={} items_total={} evictions={} closes={} checkpoints={} uptime_s={} \
-                 items_per_s={}",
+                "OK METRICS sessions={} stored={} items={} queries={} kernel_evals={} opens={} \
+                 resumes={} pushes={} items_total={} evictions={} closes={} checkpoints={} \
+                 uptime_s={} items_per_s={}",
                 m.sessions,
                 m.stored,
                 m.items,
                 m.queries,
+                m.kernel_evals,
                 m.opens,
                 m.resumes,
                 m.pushes,
@@ -640,6 +646,9 @@ impl Response {
                 reply: StatsReply {
                     stats: AlgoStats {
                         queries: num("queries")? as u64,
+                        // Absent in pre-broker server replies; tolerate
+                        // the skew like the checkpoint loader does.
+                        kernel_evals: num("kernel_evals").unwrap_or(0.0) as u64,
                         elements: num("elements")? as u64,
                         stored: num("stored")? as usize,
                         peak_stored: num("peak")? as usize,
@@ -659,6 +668,7 @@ impl Response {
                 stored: num("stored")? as usize,
                 items: num("items")? as u64,
                 queries: num("queries")? as u64,
+                kernel_evals: num("kernel_evals").unwrap_or(0.0) as u64,
                 opens: num("opens")? as u64,
                 resumes: num("resumes")? as u64,
                 pushes: num("pushes")? as u64,
@@ -908,6 +918,7 @@ mod tests {
                 reply: StatsReply {
                     stats: AlgoStats {
                         queries: 123,
+                        kernel_evals: 4321,
                         elements: 456,
                         stored: 7,
                         peak_stored: 8,
@@ -924,6 +935,7 @@ mod tests {
                 stored: 21,
                 items: 900,
                 queries: 950,
+                kernel_evals: 12345,
                 opens: 4,
                 resumes: 1,
                 pushes: 30,

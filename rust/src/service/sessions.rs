@@ -598,12 +598,14 @@ impl SessionManager {
         let mut stored = 0usize;
         let mut items = 0u64;
         let mut queries = 0u64;
+        let mut kernel_evals = 0u64;
         for cell in &cells {
             let s = cell.lock();
             let st = s.algo.stats();
             stored += st.stored;
             items += st.elements;
             queries += st.queries;
+            kernel_evals += st.kernel_evals;
         }
         let uptime_s = self.started.elapsed().as_secs_f64();
         let items_total = self.counters.items.load(Ordering::Relaxed);
@@ -612,6 +614,7 @@ impl SessionManager {
             stored,
             items,
             queries,
+            kernel_evals,
             opens: self.counters.opens.load(Ordering::Relaxed),
             resumes: self.counters.resumes.load(Ordering::Relaxed),
             pushes: self.counters.pushes.load(Ordering::Relaxed),

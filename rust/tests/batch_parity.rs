@@ -85,7 +85,8 @@ fn kernels_eval_block_matches_eval() {
     let xs: Vec<f32> = (0..b * DIM).map(|_| rng.normal() as f32).collect();
     for k in &kernels {
         let mut out = vec![0.0; b * n];
-        k.eval_block(&xs, &rows, DIM, &mut out);
+        let mut scratch = Vec::new();
+        k.eval_block(&xs, &rows, DIM, &mut out, &mut scratch);
         for q in 0..b {
             for i in 0..n {
                 let want = k.eval(&xs[q * DIM..(q + 1) * DIM], &rows[i * DIM..(i + 1) * DIM]);

@@ -149,7 +149,16 @@ fn race_thread_invariance() {
             assert_eq!(a.name, b.name);
             assert_eq!(a.value.to_bits(), b.value.to_bits(), "lane {}: value", a.name);
             assert_eq!(a.summary, b.summary, "lane {}: summary", a.name);
-            assert_eq!(a.stats, b.stats, "lane {}: stats", a.name);
+            // Reported accounting is batch-size-invariant by contract;
+            // `kernel_evals` is measured work and moves with the batch
+            // size (bigger panels, more speculative entries), so it is
+            // excluded from this cross-batch comparison (the
+            // panel_sharing_parity suite pins it at fixed batching).
+            assert_eq!(a.stats.queries, b.stats.queries, "lane {}: queries", a.name);
+            assert_eq!(a.stats.elements, b.stats.elements, "lane {}: elements", a.name);
+            assert_eq!(a.stats.stored, b.stats.stored, "lane {}: stored", a.name);
+            assert_eq!(a.stats.peak_stored, b.stats.peak_stored, "lane {}: peak", a.name);
+            assert_eq!(a.stats.instances, b.stats.instances, "lane {}: instances", a.name);
         }
     }
 }

@@ -1,0 +1,249 @@
+//! Shared kernel-panel broker parity: the broker must be *semantically
+//! invisible* and *strictly cheaper*.
+//!
+//! For every multi-sieve algorithm wired through the broker
+//! (SieveStreaming, SieveStreaming++, Salsa), running the identical
+//! stream through (a) the per-item scalar path, (b) the per-sieve batched
+//! panels, and (c) the shared broker panels — at `--threads off`, 2 and
+//! 8 — must produce bit-identical objective values, identical summaries
+//! and identical *reported* resource stats (queries, elements, stored,
+//! peak, instances). Only the measured `kernel_evals` may differ, and
+//! only downward: shared ≤ per-sieve, with a ≥2× drop on the multi-sieve
+//! working point the benches track (ε = 0.01).
+//!
+//! A checkpoint/resume roundtrip under the broker is pinned too: pausing
+//! a broker-driven SieveStreaming mid-stream and resuming into a fresh
+//! instance (fresh row store, replayed interning) must continue
+//! bit-identically to the run that never paused.
+
+use threesieves::algorithms::{Salsa, SieveStreaming, SieveStreamingPP, StreamingAlgorithm};
+use threesieves::data::synthetic::{Mixture, MixtureSource};
+use threesieves::data::{Dataset, StreamSource};
+use threesieves::exec::{ExecContext, Parallelism};
+use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+use threesieves::metrics::AlgoStats;
+use threesieves::util::rng::Rng;
+
+const DIM: usize = 8;
+const CHUNK: usize = 64;
+
+fn stream(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from(seed);
+    let mix = Mixture::random(DIM, 4, 5.0, 0.5, &mut rng);
+    let mut ds = MixtureSource::new(mix, n, seed).materialize("panel-parity", n);
+    ds.normalize();
+    ds
+}
+
+fn oracle(k: usize) -> Box<dyn SubmodularFunction> {
+    Box::new(NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0)))
+}
+
+/// Drive `algo` over `ds` in `CHUNK`-row blocks under `par`.
+fn run_batched(
+    mut algo: Box<dyn StreamingAlgorithm>,
+    ds: &Dataset,
+    par: Parallelism,
+) -> (u64, Vec<f32>, AlgoStats) {
+    algo.set_exec(ExecContext::new(par));
+    for block in ds.raw().chunks(CHUNK * DIM) {
+        algo.process_batch(block);
+    }
+    algo.finalize();
+    (algo.value().to_bits(), algo.summary(), algo.stats())
+}
+
+/// Drive `algo` per item (the scalar reference).
+fn run_scalar(mut algo: Box<dyn StreamingAlgorithm>, ds: &Dataset) -> (u64, Vec<f32>, AlgoStats) {
+    for row in ds.iter() {
+        algo.process(row);
+    }
+    algo.finalize();
+    (algo.value().to_bits(), algo.summary(), algo.stats())
+}
+
+/// Everything except `kernel_evals` must match exactly; `kernel_evals`
+/// is compared by the caller (it is *supposed* to move between paths).
+type RunOutcome = (u64, Vec<f32>, AlgoStats);
+
+fn assert_same_semantics(label: &str, a: &RunOutcome, b: &RunOutcome) {
+    assert_eq!(a.0, b.0, "{label}: value bits");
+    assert_eq!(a.1, b.1, "{label}: summary rows");
+    assert_eq!(a.2.queries, b.2.queries, "{label}: queries");
+    assert_eq!(a.2.elements, b.2.elements, "{label}: elements");
+    assert_eq!(a.2.stored, b.2.stored, "{label}: stored");
+    assert_eq!(a.2.peak_stored, b.2.peak_stored, "{label}: peak_stored");
+    assert_eq!(a.2.instances, b.2.instances, "{label}: instances");
+}
+
+/// The full parity contract for one algorithm family: scalar vs shared vs
+/// per-sieve, across thread counts; kernel evals monotone (shared ≤
+/// per-sieve) and thread-count invariant.
+fn assert_panel_sharing_parity(
+    shared: &dyn Fn() -> Box<dyn StreamingAlgorithm>,
+    per_sieve: &dyn Fn() -> Box<dyn StreamingAlgorithm>,
+    ds: &Dataset,
+) {
+    let name = shared().name();
+    let scalar = run_scalar(shared(), ds);
+    let plain_off = run_batched(per_sieve(), ds, Parallelism::Off);
+    let shared_off = run_batched(shared(), ds, Parallelism::Off);
+    assert_same_semantics(&format!("{name} shared vs scalar"), &shared_off, &scalar);
+    assert_same_semantics(&format!("{name} shared vs per-sieve"), &shared_off, &plain_off);
+    assert!(
+        shared_off.2.kernel_evals <= plain_off.2.kernel_evals,
+        "{name}: shared panels must never evaluate more kernel entries: {} vs {}",
+        shared_off.2.kernel_evals,
+        plain_off.2.kernel_evals
+    );
+    assert!(plain_off.2.kernel_evals > 0, "{name}: workload must exercise the kernel");
+    for threads in [2usize, 8] {
+        let got = run_batched(shared(), ds, Parallelism::Threads(threads));
+        let label = format!("{name} shared threads={threads}");
+        assert_eq!(shared_off.0, got.0, "{label}: value bits");
+        assert_eq!(shared_off.1, got.1, "{label}: summary rows");
+        assert_eq!(shared_off.2, got.2, "{label}: stats (incl. kernel_evals)");
+    }
+}
+
+#[test]
+fn sieve_streaming_panel_sharing_parity() {
+    let ds = stream(1500, 41);
+    let k = 6;
+    let shared =
+        || -> Box<dyn StreamingAlgorithm> { Box::new(SieveStreaming::new(oracle(k), k, 0.1)) };
+    let per_sieve = || -> Box<dyn StreamingAlgorithm> {
+        let mut a = SieveStreaming::new(oracle(k), k, 0.1);
+        a.set_panel_sharing(false);
+        Box::new(a)
+    };
+    assert_panel_sharing_parity(&shared, &per_sieve, &ds);
+}
+
+#[test]
+fn sieve_streaming_pp_panel_sharing_parity() {
+    // ++ prunes and spawns sieves on LB growth mid-chunk — the broker
+    // must survive the rebind (survivors keep chunk-local rows, spawned
+    // sieves scan the remainder from scratch).
+    let ds = stream(1800, 42);
+    let k = 6;
+    let shared =
+        || -> Box<dyn StreamingAlgorithm> { Box::new(SieveStreamingPP::new(oracle(k), k, 0.1)) };
+    let per_sieve = || -> Box<dyn StreamingAlgorithm> {
+        let mut a = SieveStreamingPP::new(oracle(k), k, 0.1);
+        a.set_panel_sharing(false);
+        Box::new(a)
+    };
+    assert_panel_sharing_parity(&shared, &per_sieve, &ds);
+}
+
+#[test]
+fn salsa_panel_sharing_parity() {
+    // Length hint on: includes the position-adaptive rule, whose
+    // threshold moves *within* a chunk.
+    let ds = stream(1500, 43);
+    let k = 5;
+    let n = ds.len();
+    let shared =
+        || -> Box<dyn StreamingAlgorithm> { Box::new(Salsa::new(oracle(k), k, 0.2, Some(n))) };
+    let per_sieve = || -> Box<dyn StreamingAlgorithm> {
+        let mut a = Salsa::new(oracle(k), k, 0.2, Some(n));
+        a.set_panel_sharing(false);
+        Box::new(a)
+    };
+    assert_panel_sharing_parity(&shared, &per_sieve, &ds);
+}
+
+/// The acceptance working point: a dense multi-sieve grid (ε = 0.01) is
+/// exactly where per-sieve panels redo the most work, so the broker must
+/// cut measured kernel evaluations by at least 2× — in practice far more,
+/// since U ≪ Σ per-sieve summary sizes.
+#[test]
+fn shared_panels_halve_kernel_evals_at_eps_001() {
+    let ds = stream(1500, 44);
+    let k = 16;
+    let mut shared = SieveStreaming::new(oracle(k), k, 0.01);
+    let mut plain = SieveStreaming::new(oracle(k), k, 0.01);
+    plain.set_panel_sharing(false);
+    for block in ds.raw().chunks(CHUNK * DIM) {
+        shared.process_batch(block);
+        plain.process_batch(block);
+    }
+    let (se, pe) = (shared.stats().kernel_evals, plain.stats().kernel_evals);
+    assert_eq!(shared.value().to_bits(), plain.value().to_bits());
+    assert_eq!(shared.stats().queries, plain.stats().queries);
+    assert!(
+        se * 2 <= pe,
+        "broker must cut kernel evals ≥2× at ε=0.01: shared {se} vs per-sieve {pe}"
+    );
+}
+
+/// Mixed ingestion: scalar and batched calls interleaved on the same
+/// instance — the broker's interned ids must stay coherent across both
+/// paths (scalar accepts intern too).
+#[test]
+fn mixed_scalar_and_batched_ingestion_stays_coherent() {
+    let ds = stream(1200, 45);
+    let k = 6;
+    let mut mixed = SieveStreaming::new(oracle(k), k, 0.1);
+    let mut scalar = SieveStreaming::new(oracle(k), k, 0.1);
+    let rows = ds.len();
+    let third = rows / 3;
+    for row in ds.raw()[..third * DIM].chunks_exact(DIM) {
+        mixed.process(row);
+        scalar.process(row);
+    }
+    for block in ds.raw()[third * DIM..2 * third * DIM].chunks(17 * DIM) {
+        mixed.process_batch(block);
+    }
+    for row in ds.raw()[third * DIM..2 * third * DIM].chunks_exact(DIM) {
+        scalar.process(row);
+    }
+    for row in ds.raw()[2 * third * DIM..].chunks_exact(DIM) {
+        mixed.process(row);
+        scalar.process(row);
+    }
+    assert_eq!(mixed.value().to_bits(), scalar.value().to_bits());
+    assert_eq!(mixed.summary(), scalar.summary());
+    assert_eq!(mixed.stats().queries, scalar.stats().queries);
+}
+
+/// Checkpoint → JSON text → restore → continue, with the broker active on
+/// both timelines and the continuation running on the exec pool: the
+/// resumed run must be bit-identical to the run that never paused —
+/// values, summaries and the full stats struct, kernel evals included.
+#[test]
+fn checkpoint_resume_roundtrip_under_the_broker() {
+    let ds = stream(1600, 46);
+    let k = 6;
+    let build = || SieveStreaming::new(oracle(k), k, 0.1);
+    let half = ds.len() / 2 * DIM;
+    let exec = ExecContext::new(Parallelism::Threads(2));
+
+    let mut whole = build();
+    let mut first = build();
+    whole.set_exec(exec.clone());
+    first.set_exec(exec.clone());
+    for block in ds.raw()[..half].chunks(CHUNK * DIM) {
+        whole.process_batch(block);
+        first.process_batch(block);
+    }
+    let state = first.snapshot_state().expect("SieveStreaming snapshots under the broker");
+    let text = state.to_string();
+    let parsed = threesieves::util::json::Json::parse(&text).unwrap();
+    let summary = first.summary();
+
+    let mut resumed = build();
+    resumed.restore_state(&parsed, &summary).unwrap();
+    resumed.set_exec(exec.clone());
+    assert_eq!(resumed.value().to_bits(), first.value().to_bits());
+    assert_eq!(resumed.stats(), first.stats(), "restore must reproduce the reported stats");
+
+    for block in ds.raw()[half..].chunks(CHUNK * DIM) {
+        whole.process_batch(block);
+        resumed.process_batch(block);
+    }
+    assert_eq!(resumed.value().to_bits(), whole.value().to_bits());
+    assert_eq!(resumed.summary(), whole.summary());
+    assert_eq!(resumed.stats(), whole.stats(), "kernel-eval accounting must survive the pause");
+}

@@ -118,6 +118,7 @@ fn eight_concurrent_tenants_over_tcp_match_standalone() {
     for w in workers {
         let st = w.join().unwrap();
         sum.queries += st.queries;
+        sum.kernel_evals += st.kernel_evals;
         sum.elements += st.elements;
         stored_sum += st.stored;
     }
@@ -129,6 +130,7 @@ fn eight_concurrent_tenants_over_tcp_match_standalone() {
     assert_eq!(m.sessions, 8);
     assert_eq!(m.items, sum.elements, "metrics items != sum of session elements");
     assert_eq!(m.queries, sum.queries, "metrics queries != sum of session queries");
+    assert_eq!(m.kernel_evals, sum.kernel_evals, "metrics kernel_evals != session sum");
     assert_eq!(m.stored, stored_sum);
     assert_eq!(m.items_total, sum.elements);
     assert_eq!(m.opens, 8);
@@ -177,7 +179,16 @@ fn close_reopen_resumes_bit_identically_over_tcp() {
     assert_eq!(got.value.to_bits(), want_value.to_bits());
     assert_eq!(got.data, want_summary);
     let stats = client.stats("res").unwrap();
-    assert_eq!(stats.stats, want_stats, "accounting must continue across the pause");
+    // Everything the paper accounts is chunking-invariant and must match
+    // the never-paused run exactly. `kernel_evals` is *measured* work and
+    // legitimately depends on chunk boundaries, which differ across the
+    // pause point - assert it separately.
+    assert_eq!(stats.stats.queries, want_stats.queries, "queries must continue across the pause");
+    assert_eq!(stats.stats.elements, want_stats.elements);
+    assert_eq!(stats.stats.stored, want_stats.stored);
+    assert_eq!(stats.stats.peak_stored, want_stats.peak_stored);
+    assert_eq!(stats.stats.instances, want_stats.instances);
+    assert!(stats.stats.kernel_evals > 0, "resumed accounting must keep counting kernel work");
     client.quit().unwrap();
     handle.shutdown();
     std::fs::remove_dir_all(&dir).ok();
