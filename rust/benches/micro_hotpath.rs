@@ -17,9 +17,14 @@
 //!   per-sieve panels vs the cross-sieve shared panel at ε ∈ {0.1, 0.01}
 //!   — measured kernel evals + wall time (the issue-#4 acceptance point:
 //!   ≥2× fewer kernel evals at ε = 0.01)
+//! * Blocked multi-RHS solve panel: per-candidate vs blocked forward
+//!   solve inside `peek_gain_batch` at n ∈ {32, 128}, B ∈ {16, 64} on a
+//!   solve-dominated configuration (the issue-#5 acceptance point:
+//!   blocked wall ≤ per-candidate at n = 128)
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- [--quick] [--json PATH]
-//! [--scaling-json PATH] [--service-json PATH] [--panel-json PATH]]`.
+//! [--scaling-json PATH] [--service-json PATH] [--panel-json PATH]
+//! [--solve-json PATH]]`.
 //! `--quick` shrinks iteration counts to CI-smoke scale; `--json PATH`
 //! writes the headline numbers as a JSON object (the CI bench job uploads
 //! it as an artifact so the BENCH_* trajectory populates); the other
@@ -266,6 +271,56 @@ fn bench_sharded_scaling(n: usize, iters: usize, rep: &mut Report, scaling: &mut
     }
 }
 
+/// The issue-#5 acceptance rows: per-candidate vs blocked multi-RHS
+/// forward solve inside `peek_gain_batch`, at solve-dominated working
+/// points (d = 16 keeps the kernel panel O(n·d) well below the solve's
+/// O(n²) at n = 128). Both paths are bitwise identical
+/// (`set_blocked_solve` only moves the factor's memory traffic); the
+/// wall-clock ratio is the whole point, tracked in CI via `--solve-json`
+/// (`bench_solve_panel.json`).
+fn bench_solve_panel(iters: usize, rep: &mut Report, solve: &mut Report) {
+    let d = 16usize;
+    let mut rng = Rng::seed_from(9);
+    for n in [32usize, 128] {
+        let rows = rand_rows(&mut rng, n, d);
+        for b in [16usize, 64] {
+            let cands = rand_rows(&mut rng, b, d);
+            let mut secs = [0f64; 2]; // [per-candidate, blocked]
+            for (mode, blocked) in [false, true].into_iter().enumerate() {
+                let mut f =
+                    NativeLogDet::new(LogDetConfig::with_gamma(d, n, 2.0 * d as f64, 1.0));
+                f.set_blocked_solve(blocked);
+                for i in 0..n {
+                    f.accept(&rows[i * d..(i + 1) * d]);
+                }
+                let mut out = Vec::new();
+                let mut sink = 0.0;
+                let stats = bench_loop(iters / 10, iters, || {
+                    f.peek_gain_batch(&cands, b, &mut out);
+                    sink += out[0];
+                });
+                std::hint::black_box(sink);
+                secs[mode] = stats.mean();
+            }
+            let per_ns = secs[0] * 1e9 / b as f64;
+            let blk_ns = secs[1] * 1e9 / b as f64;
+            let speedup = per_ns / blk_ns;
+            println!(
+                "solve panel      d={d:<4} |S|={n:<4} B={b:<4}: per-cand {per_ns:>8.1} ns/q  \
+                 blocked {blk_ns:>8.1} ns/q  speedup {speedup:.2}x"
+            );
+            for (key, val) in [
+                (format!("solve_panel_n{n}_b{b}_per_candidate_ns_per_query"), per_ns),
+                (format!("solve_panel_n{n}_b{b}_blocked_ns_per_query"), blk_ns),
+                (format!("solve_panel_n{n}_b{b}_speedup"), speedup),
+            ] {
+                rep.push(key.clone(), val);
+                solve.push(key, val);
+            }
+        }
+    }
+}
+
 /// The shared kernel-panel broker head-to-head: a multi-sieve
 /// SieveStreaming ingesting the same chunked stream with per-sieve B×n
 /// panels vs the shared broker panel (one U×B panel per chunk across all
@@ -417,10 +472,16 @@ fn main() {
         .position(|a| a == "--panel-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let solve_json_path = args
+        .iter()
+        .position(|a| a == "--solve-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let mut rep = Report { entries: Vec::new() };
     let mut scaling = Report { entries: Vec::new() };
     let mut service = Report { entries: Vec::new() };
     let mut panel = Report { entries: Vec::new() };
+    let mut solve = Report { entries: Vec::new() };
 
     println!("== micro hot-path benchmarks{} ==", if quick { " (quick)" } else { "" });
     let gain_iters = if quick { 200 } else { 2000 };
@@ -432,6 +493,9 @@ fn main() {
     bench_batched_gain(128, 64, 64, panel_iters, &mut rep);
     bench_batched_gain(128, 64, 256, panel_iters, &mut rep);
     bench_batched_gain(32, 16, 64, panel_iters, &mut rep);
+    // The issue-#5 acceptance point: blocked vs per-candidate solve wall
+    // on the solve-dominated scenarios.
+    bench_solve_panel(gain_iters, &mut rep, &mut solve);
     bench_native_append_remove(16, 50, if quick { 10 } else { 50 });
     bench_native_append_remove(64, 100, if quick { 10 } else { 50 });
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -465,6 +529,12 @@ fn main() {
     }
     if let Some(path) = panel_json_path {
         match panel.write(&path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+    if let Some(path) = solve_json_path {
+        match solve.write(&path) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("failed to write {path}: {e}"),
         }

@@ -43,7 +43,7 @@ pub use stream_greedy::StreamGreedy;
 pub use three_sieves::ThreeSieves;
 
 use crate::exec::ExecContext;
-use crate::functions::{ChunkPanel, SubmodularFunction};
+use crate::functions::{ChunkPanel, PanelScratch, PanelSharing, SolveScratch, SubmodularFunction};
 use crate::metrics::AlgoStats;
 use crate::util::json::Json;
 
@@ -161,6 +161,42 @@ pub(crate) fn sieve_threshold(v: f64, f_s: f64, k: usize, len: usize) -> f64 {
     (v / 2.0 - f_s) / (k - len) as f64
 }
 
+/// First would-accept position in a rejection run's gains under the sieve
+/// rule (the threshold is constant within a run — `v`, `f(S)` and `|S|`
+/// only move on accept). The single scan definition shared by the
+/// unit-serial batch paths and the 2-D grid's Phase B, so the two can
+/// never drift.
+#[inline]
+pub(crate) fn sieve_first_hit(
+    v: f64,
+    oracle: &dyn SubmodularFunction,
+    k: usize,
+    gains: &[f64],
+) -> Option<usize> {
+    let thresh = sieve_threshold(v, oracle.current_value(), k, oracle.len());
+    gains.iter().position(|&g| g >= thresh)
+}
+
+/// Gather one candidate's kv row for a sieve from the shared chunk panel
+/// and the sieve's chunk-local rows — the single gather definition behind
+/// [`Sieve::gains_shared`] and the 2-D grid's tasks.
+#[inline]
+pub(crate) fn gather_kv(
+    panel: &ChunkPanel,
+    kv_src: &[KvSrc],
+    local: &[f64],
+    b: usize,
+    kv: &mut [f64],
+) {
+    let width = panel.width();
+    for (i, src) in kv_src.iter().enumerate() {
+        kv[i] = match *src {
+            KvSrc::Shared(s) => panel.at(s, b),
+            KvSrc::Local(l) => local[l as usize * width + b],
+        };
+    }
+}
+
 /// Where one summary row's kernel entries for the current chunk live:
 /// a slot of the shared [`ChunkPanel`](crate::functions::ChunkPanel), or a
 /// chunk-local row the sieve computed itself after a mid-chunk accept.
@@ -243,9 +279,7 @@ impl Sieve {
             }
             let remaining = total - pos;
             self.oracle.peek_gain_batch(&chunk[pos * dim..], remaining, &mut self.scratch);
-            let len = self.oracle.len();
-            let thresh = sieve_threshold(self.v, self.oracle.current_value(), k, len);
-            match self.scratch.iter().position(|&g| g >= thresh) {
+            match sieve_first_hit(self.v, self.oracle.as_ref(), k, &self.scratch[..remaining]) {
                 Some(j) => {
                     self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
                     wasted += (remaining - (j + 1)) as u64;
@@ -285,9 +319,7 @@ impl Sieve {
             }
             let remaining = total - pos;
             self.gains_shared(panel, pos, remaining);
-            let len = self.oracle.len();
-            let thresh = sieve_threshold(self.v, self.oracle.current_value(), k, len);
-            match self.scratch.iter().position(|&g| g >= thresh) {
+            match sieve_first_hit(self.v, self.oracle.as_ref(), k, &self.scratch[..remaining]) {
                 Some(j) => {
                     self.accept_shared(panel, chunk, dim, pos + j);
                     wasted += (remaining - (j + 1)) as u64;
@@ -341,19 +373,10 @@ impl Sieve {
     /// `peek_gain_batch` over the same candidates.
     pub fn gains_shared(&mut self, panel: &ChunkPanel, pos: usize, count: usize) {
         let Sieve { oracle, scratch, kv_src, local, .. } = self;
-        let width = panel.width();
         let ps = oracle.panel_sharing().expect("gains_shared: bound by begin_shared_chunk");
         ps.peek_gain_batch_gathered(
             count,
-            &mut |t, kv| {
-                let b = pos + t;
-                for (i, src) in kv_src.iter().enumerate() {
-                    kv[i] = match *src {
-                        KvSrc::Shared(s) => panel.at(s, b),
-                        KvSrc::Local(l) => local[l as usize * width + b],
-                    };
-                }
-            },
+            &mut |t, kv| gather_kv(panel, kv_src, local, pos + t, kv),
             scratch,
         );
     }
@@ -417,16 +440,254 @@ where
 /// Build the shared chunk panel from an already collected id union:
 /// `None` when the prototype lacks the [`PanelSharing`] capability or no
 /// store is attached (callers then keep per-sieve panels). The one
-/// definition behind every algorithm's `build_shared_panel`.
+/// definition behind every algorithm's `build_shared_panel`. `scratch`
+/// recycles the previous chunk's panel storage (the algorithms hand each
+/// spent panel back via [`PanelScratch::recycle`]).
 pub(crate) fn build_union_panel(
     proto: &mut Box<dyn SubmodularFunction>,
     ids: &[u32],
     chunk: &[f32],
     exec: &ExecContext,
+    scratch: &mut PanelScratch,
 ) -> Option<ChunkPanel> {
     let ps = proto.panel_sharing()?;
     ps.row_store()?;
-    Some(ps.build_chunk_panel(ids, chunk, exec))
+    Some(ps.build_chunk_panel(ids, chunk, exec, scratch))
+}
+
+/// Where one solve task's kv rows come from. `Copy`: only shared
+/// references and offsets, so the dispatch match can take it by value.
+#[derive(Clone, Copy)]
+pub(crate) enum SolveSrc<'a> {
+    /// Gather from the shared chunk panel + the unit's chunk-local rows;
+    /// `from` is the absolute chunk position of `out[0]`.
+    Gather { panel: &'a ChunkPanel, kv_src: &'a [KvSrc], local: &'a [f64], from: usize },
+    /// Compute kernel rows directly for `items` (`out.len() × dim`,
+    /// already offset to the range) — the shard path without a broker.
+    Kernel { items: &'a [f32] },
+}
+
+/// One (unit × candidate-range) task of the 2-D solve grid: a pure range
+/// solve against one unit's factor, writing that range's gains. Disjoint
+/// ranges of the same unit share `ps` by `&` — the range solves take
+/// `&self` and all mutable state is the task-owned scratch — so the exec
+/// pool can schedule them independently and solve work no longer
+/// serializes behind the widest unit.
+pub(crate) struct SolveTask<'a> {
+    pub(crate) ps: &'a dyn PanelSharing,
+    pub(crate) src: SolveSrc<'a>,
+    pub(crate) out: &'a mut [f64],
+    pub(crate) scratch: &'a mut SolveScratch,
+}
+
+/// Run a built task grid on the pool (inline when sequential). Gains are
+/// range-split-invariant — every candidate's solve reads only shared
+/// state — so the split policy moves wall time, never bits.
+pub(crate) fn run_solve_tasks(exec: &ExecContext, tasks: &mut [SolveTask<'_>]) {
+    exec.map_units(tasks, |t| {
+        let count = t.out.len();
+        match t.src {
+            SolveSrc::Gather { panel, kv_src, local, from } => t.ps.solve_gathered_range(
+                count,
+                &mut |i, kv| gather_kv(panel, kv_src, local, from + i, kv),
+                t.scratch,
+                t.out,
+            ),
+            SolveSrc::Kernel { items } => t.ps.solve_batch_range(items, count, t.scratch, t.out),
+        }
+    });
+}
+
+/// Reusable per-algorithm scratch pool for the 2-D solve grid: one
+/// [`SolveScratch`] per in-flight task, grown once and reused across
+/// chunks so the grid allocates nothing per chunk beyond its task list.
+#[derive(Default)]
+pub(crate) struct SolveGrid {
+    scratches: Vec<SolveScratch>,
+}
+
+impl SolveGrid {
+    /// Grow the pool to at least `n` scratches and hand out an iterator.
+    pub(crate) fn reserve(&mut self, n: usize) -> std::slice::IterMut<'_, SolveScratch> {
+        if self.scratches.len() < n {
+            self.scratches.resize_with(n, SolveScratch::default);
+        }
+        self.scratches.iter_mut()
+    }
+}
+
+/// Candidate-range length for one unit's run in the 2-D grid: enough
+/// ranges that `units` live units can keep `threads` workers busy (~2
+/// tasks per worker), floored so per-task overhead stays negligible.
+/// When units already outnumber the workers the grain degenerates to one
+/// range per unit (the coarse fan-out). Results never depend on the
+/// grain — only wall time does.
+pub(crate) fn solve_grain(count: usize, units: usize, threads: usize) -> usize {
+    if threads <= 1 || count == 0 {
+        return count.max(1);
+    }
+    let ranges_per_unit = (threads * 2).div_ceil(units.max(1)).max(1);
+    count.div_ceil(ranges_per_unit).max(16)
+}
+
+/// Number of candidate-range tasks one run of `count` candidates splits
+/// into under [`solve_grain`] — the precount both grid drivers use to
+/// size the scratch pool before building tasks.
+pub(crate) fn count_range_tasks(count: usize, units: usize, threads: usize) -> usize {
+    count.div_ceil(solve_grain(count, units, threads))
+}
+
+/// Split one run's gains buffer into candidate-range tasks and push them
+/// onto the grid — the single task-building definition behind
+/// [`gather_gains_grid`] and the sharded driver. `src(from, len)` builds
+/// the range's kv source (gather or kernel) for the `len` candidates
+/// starting at chunk-absolute `from`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn push_range_tasks<'a>(
+    tasks: &mut Vec<SolveTask<'a>>,
+    scratches: &mut std::slice::IterMut<'a, SolveScratch>,
+    ps: &'a dyn PanelSharing,
+    gains: &'a mut [f64],
+    pos: usize,
+    units: usize,
+    threads: usize,
+    src: impl Fn(usize, usize) -> SolveSrc<'a>,
+) {
+    let count = gains.len();
+    let grain = solve_grain(count, units, threads);
+    let mut from = pos;
+    for out in gains.chunks_mut(grain) {
+        let src = src(from, out.len());
+        from += out.len();
+        tasks.push(SolveTask { ps, src, out, scratch: scratches.next().expect("pool sized") });
+    }
+}
+
+/// Phase A of the 2-D solve grid: compute each run's gathered gains
+/// (chunk positions `pos..total`) into the run's sieve `scratch`, fanned
+/// out as (sieve × candidate-range) tasks on `exec`, then charge each
+/// oracle the run's `total − pos` queries — exactly what
+/// [`Sieve::gains_shared`] charges, with the solves distributed instead
+/// of unit-serial. Callers guarantee every listed sieve is bound to
+/// `panel` (gather plan built) and its oracle exposes
+/// [`SubmodularFunction::panel_sharing_ref`].
+pub(crate) fn gather_gains_grid(
+    runs: &mut [(usize, &mut Sieve)],
+    panel: &ChunkPanel,
+    total: usize,
+    exec: &ExecContext,
+    pool: &mut SolveGrid,
+) {
+    let threads = exec.threads();
+    let units = runs.len();
+    let mut n_tasks = 0usize;
+    for (pos, _) in runs.iter() {
+        n_tasks += count_range_tasks(total - *pos, units, threads);
+    }
+    let mut scratches = pool.reserve(n_tasks);
+    let mut tasks: Vec<SolveTask<'_>> = Vec::with_capacity(n_tasks);
+    for (pos, s) in runs.iter_mut() {
+        let count = total - *pos;
+        if s.scratch.len() < count {
+            s.scratch.resize(count, 0.0);
+        }
+        let Sieve { oracle, scratch, kv_src, local, .. } = &mut **s;
+        let ps = oracle.panel_sharing_ref().expect("grid runs over panel-sharing oracles");
+        let (kv_src, local): (&[KvSrc], &[f64]) = (kv_src, local);
+        push_range_tasks(
+            &mut tasks,
+            &mut scratches,
+            ps,
+            &mut scratch[..count],
+            *pos,
+            units,
+            threads,
+            |from, _| SolveSrc::Gather { panel, kv_src, local, from },
+        );
+    }
+    run_solve_tasks(exec, &mut tasks);
+    drop(tasks);
+    for (pos, s) in runs.iter_mut() {
+        let queries = (total - *pos) as u64;
+        s.oracle.panel_sharing().expect("checked above").charge(queries, 0);
+    }
+}
+
+/// The 2-D (sieve × candidate-range) chunk driver for independent-sieve
+/// algorithms (SieveStreaming, Salsa): round-synchronized rejection runs
+/// whose gains fan out through [`gather_gains_grid`], with each sieve's
+/// sequence of runs — gains, first-hit scan, accept, speculative
+/// accounting — identical to [`Sieve::offer_batch_shared`] by
+/// construction (the gains are range-split-invariant and the scan is the
+/// shared `first_hit` closure). Where the coarse fan-out hands one whole
+/// chunk×sieve to a worker and serializes behind the widest sieve, the
+/// grid keeps every worker busy even when live sieves ≪ threads.
+///
+/// `first_hit(si, v, oracle, gains, pos)` returns the first would-accept
+/// index *relative* to `pos` (chunk-absolute position of `gains[0]`).
+/// Returns the speculative query count, or `None` if a live sieve cannot
+/// bind to the panel or lacks the shared-borrow capability — the caller
+/// then keeps the unit-serial path (no oracle state has been touched:
+/// binding only rebuilds chunk-scoped gather plans, exactly like
+/// `offer_batch_shared`'s own bind).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn offer_chunk_grid(
+    sieves: &mut [&mut Sieve],
+    panel: &ChunkPanel,
+    chunk: &[f32],
+    dim: usize,
+    k: usize,
+    exec: &ExecContext,
+    pool: &mut SolveGrid,
+    first_hit: impl Fn(usize, f64, &dyn SubmodularFunction, &[f64], usize) -> Option<usize>,
+) -> Option<u64> {
+    let total = chunk.len() / dim;
+    if total == 0 {
+        return Some(0);
+    }
+    let mut need: Vec<bool> = Vec::with_capacity(sieves.len());
+    for s in sieves.iter_mut() {
+        let live = s.oracle.len() < k;
+        if live && (s.oracle.panel_sharing_ref().is_none() || !s.begin_shared_chunk(panel)) {
+            return None;
+        }
+        need.push(live);
+    }
+    let mut pos = vec![0usize; sieves.len()];
+    let mut wasted = 0u64;
+    loop {
+        // Phase A: fan the invalidated runs out as one task grid.
+        let mut runs: Vec<(usize, &mut Sieve)> = sieves
+            .iter_mut()
+            .enumerate()
+            .filter(|(si, _)| need[*si])
+            .map(|(si, s)| (pos[si], &mut **s))
+            .collect();
+        if runs.is_empty() {
+            return Some(wasted);
+        }
+        gather_gains_grid(&mut runs, panel, total, exec, pool);
+        drop(runs);
+        // Phase B: scan + accept sequentially, in sieve order — the same
+        // decisions and accounting as the unit-serial loop.
+        for si in 0..sieves.len() {
+            if !need[si] {
+                continue;
+            }
+            let count = total - pos[si];
+            let s: &mut Sieve = &mut *sieves[si];
+            match first_hit(si, s.v, s.oracle.as_ref(), &s.scratch[..count], pos[si]) {
+                Some(j_rel) => {
+                    let j = pos[si] + j_rel;
+                    s.accept_shared(panel, chunk, dim, j);
+                    wasted += (count - (j_rel + 1)) as u64;
+                    pos[si] = j + 1;
+                    need[si] = s.oracle.len() < k && pos[si] < total;
+                }
+                None => need[si] = false,
+            }
+        }
+    }
 }
 
 /// Aggregate stats over a set of sieves (+ the element counter the caller

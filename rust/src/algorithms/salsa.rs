@@ -20,11 +20,14 @@
 //!   needs the stream length hint — the paper's stated limitation of Salsa.
 
 use crate::exec::ExecContext;
-use crate::functions::{ChunkPanel, SharedRowStore, SubmodularFunction};
+use crate::functions::{ChunkPanel, PanelScratch, SharedRowStore, SubmodularFunction};
 use crate::metrics::AlgoStats;
 use crate::util::mathx::threshold_grid;
 
-use super::{build_union_panel, sieve_threshold, union_row_ids, Sieve, StreamingAlgorithm};
+use super::{
+    build_union_panel, offer_chunk_grid, sieve_threshold, union_row_ids, Sieve, SolveGrid,
+    StreamingAlgorithm,
+};
 
 /// Thresholding rule families.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,22 +47,52 @@ struct RuleSieve {
 }
 
 /// Rule threshold as of stream position `elem` (1-based count of the item
-/// being considered). A free function (rather than a `Salsa` method) so
-/// the batched path — sequential or fanned out on the exec pool — shares
-/// one definition with the scalar path and cannot drift from it.
-fn rule_threshold(s: &RuleSieve, k: usize, stream_len: Option<usize>, elem: u64) -> f64 {
-    match s.rule {
-        Rule::Sieve => {
-            sieve_threshold(s.sieve.v, s.sieve.oracle.current_value(), k, s.sieve.oracle.len())
-        }
-        Rule::Dense => s.sieve.v / (2.0 * k as f64),
+/// being considered). A free function over the rule and the sieve pieces
+/// (rather than a `Salsa` or `RuleSieve` method) so the scalar path, the
+/// unit-serial batched path and the 2-D solve grid's scan all share one
+/// definition and cannot drift.
+fn rule_threshold(
+    rule: Rule,
+    v: f64,
+    oracle: &dyn SubmodularFunction,
+    k: usize,
+    stream_len: Option<usize>,
+    elem: u64,
+) -> f64 {
+    match rule {
+        Rule::Sieve => sieve_threshold(v, oracle.current_value(), k, oracle.len()),
+        Rule::Dense => v / (2.0 * k as f64),
         Rule::Adaptive => {
             let n = stream_len.unwrap_or(1).max(1);
             let pos = (elem as f64 / n as f64).min(1.0);
             let beta = 0.7 - 0.45 * pos; // 0.7 → 0.25 across the stream
-            beta * s.sieve.v / k as f64
+            beta * v / k as f64
         }
     }
+}
+
+/// First would-accept position (relative to `gains[0]`, which sits at
+/// chunk-absolute `pos`) under a rule's per-item threshold schedule — the
+/// single scan shared by [`consume_chunk`], [`consume_chunk_shared`] and
+/// the grid driver's Phase B.
+#[allow(clippy::too_many_arguments)]
+fn rule_first_hit(
+    rule: Rule,
+    v: f64,
+    oracle: &dyn SubmodularFunction,
+    gains: &[f64],
+    pos: usize,
+    k: usize,
+    stream_len: Option<usize>,
+    start_elements: u64,
+) -> Option<usize> {
+    for (j, &g) in gains.iter().enumerate() {
+        let elem = start_elements + (pos + j) as u64 + 1;
+        if g >= rule_threshold(rule, v, oracle, k, stream_len, elem) {
+            return Some(j);
+        }
+    }
+    None
 }
 
 /// One (rule, v) sieve consumes a whole chunk: one gain panel per
@@ -85,15 +118,16 @@ fn consume_chunk(
         }
         let remaining = total - pos;
         s.sieve.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut s.sieve.scratch);
-        let mut hit = None;
-        for (j, &g) in s.sieve.scratch.iter().enumerate() {
-            let elem = start_elements + (pos + j) as u64 + 1;
-            let thresh = rule_threshold(s, k, stream_len, elem);
-            if g >= thresh {
-                hit = Some(j);
-                break;
-            }
-        }
+        let hit = rule_first_hit(
+            s.rule,
+            s.sieve.v,
+            s.sieve.oracle.as_ref(),
+            &s.sieve.scratch[..remaining],
+            pos,
+            k,
+            stream_len,
+            start_elements,
+        );
         match hit {
             Some(j) => {
                 let item = &chunk[(pos + j) * d..(pos + j + 1) * d];
@@ -138,15 +172,16 @@ fn consume_chunk_shared(
         }
         let remaining = total - pos;
         s.sieve.gains_shared(panel, pos, remaining);
-        let mut hit = None;
-        for (j, &g) in s.sieve.scratch.iter().enumerate() {
-            let elem = start_elements + (pos + j) as u64 + 1;
-            let thresh = rule_threshold(s, k, stream_len, elem);
-            if g >= thresh {
-                hit = Some(j);
-                break;
-            }
-        }
+        let hit = rule_first_hit(
+            s.rule,
+            s.sieve.v,
+            s.sieve.oracle.as_ref(),
+            &s.sieve.scratch[..remaining],
+            pos,
+            k,
+            stream_len,
+            start_elements,
+        );
         match hit {
             Some(j) => {
                 s.sieve.accept_shared(panel, chunk, d, pos + j);
@@ -178,6 +213,10 @@ pub struct Salsa {
     /// Cross-sieve panel sharing toggle (bench/parity hook).
     share_panels: bool,
     peak_stored: usize,
+    /// Recycled chunk-panel storage (allocation-free broker path).
+    panel_scratch: PanelScratch,
+    /// Scratch pool for the 2-D (sieve × candidate-range) solve grid.
+    solve_pool: SolveGrid,
     /// Parallel execution context: (rule, v) sieves fan out across its
     /// pool when one is attached (see [`StreamingAlgorithm::set_exec`]).
     exec: ExecContext,
@@ -211,6 +250,8 @@ impl Salsa {
             panel_evals: 0,
             share_panels: true,
             peak_stored: 0,
+            panel_scratch: PanelScratch::default(),
+            solve_pool: SolveGrid::default(),
             exec: ExecContext::sequential(),
         };
         s.build_sieves();
@@ -246,7 +287,8 @@ impl Salsa {
     /// Rule threshold as of stream position `elements` — delegates to the
     /// free [`rule_threshold`] shared with the batched path.
     fn threshold_at(&self, s: &RuleSieve, elements: u64) -> f64 {
-        rule_threshold(s, self.k, self.stream_len, elements)
+        let oracle = s.sieve.oracle.as_ref();
+        rule_threshold(s.rule, s.sieve.v, oracle, self.k, self.stream_len, elements)
     }
 
     fn best(&self) -> Option<&RuleSieve> {
@@ -268,7 +310,7 @@ impl Salsa {
             return None;
         }
         let ids = union_row_ids(self.sieves.iter_mut().map(|s| &mut s.sieve.oracle), self.k)?;
-        build_union_panel(&mut self.proto, &ids, chunk, &self.exec)
+        build_union_panel(&mut self.proto, &ids, chunk, &self.exec, &mut self.panel_scratch)
     }
 }
 
@@ -313,7 +355,10 @@ impl StreamingAlgorithm for Salsa {
     /// chunk's kernel rows are computed once across all rule sieves and
     /// each rejection run gathers from the panel — same decisions, same
     /// queries, `kernel_evals` collapses from Σ-per-sieve to
-    /// once-per-chunk.
+    /// once-per-chunk. When live sieves cannot occupy the pool, the runs
+    /// further split into the 2-D (sieve × candidate-range) solve grid
+    /// ([`super::offer_chunk_grid`]) — bits unchanged, solves
+    /// distributed.
     fn process_batch(&mut self, chunk: &[f32]) {
         let d = self.proto.dim();
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
@@ -325,19 +370,70 @@ impl StreamingAlgorithm for Salsa {
         let shared = self.build_shared_panel(chunk);
         // Inline when sequential, worker threads when a pool is attached
         // (`set_exec` gated it on `parallel_safe()`); identical results
-        // either way, speculative counts folded in sieve order.
-        let wasted = match &shared {
-            Some(panel) => self.exec.map_units(&mut self.sieves, |s| {
-                consume_chunk_shared(s, panel, chunk, d, k, stream_len, start_elements)
-            }),
-            None => self.exec.map_units(&mut self.sieves, |s| {
-                consume_chunk(s, chunk, d, k, stream_len, start_elements)
-            }),
+        // either way, speculative counts folded in sieve order. With
+        // workers to spare, the broker path runs the 2-D
+        // (sieve × candidate-range) solve grid instead of one coarse
+        // chunk×sieve unit per worker — same decisions and accounting
+        // (the scan is the shared `rule_first_hit`), distributed solves.
+        let live = self.sieves.iter().filter(|s| s.sieve.oracle.len() < k).count();
+        let use_grid = self.exec.is_parallel() && self.exec.threads() * 2 > live;
+        let wasted: u64 = match &shared {
+            Some(panel) => {
+                let grid = if use_grid {
+                    let mut rules: Vec<Rule> = Vec::with_capacity(self.sieves.len());
+                    let mut refs: Vec<&mut Sieve> = Vec::with_capacity(self.sieves.len());
+                    for rs in self.sieves.iter_mut() {
+                        rules.push(rs.rule);
+                        refs.push(&mut rs.sieve);
+                    }
+                    offer_chunk_grid(
+                        &mut refs,
+                        panel,
+                        chunk,
+                        d,
+                        k,
+                        &self.exec,
+                        &mut self.solve_pool,
+                        |si, v, oracle, gains, pos| {
+                            rule_first_hit(
+                                rules[si],
+                                v,
+                                oracle,
+                                gains,
+                                pos,
+                                k,
+                                stream_len,
+                                start_elements,
+                            )
+                        },
+                    )
+                } else {
+                    None
+                };
+                match grid {
+                    Some(w) => w,
+                    None => self
+                        .exec
+                        .map_units(&mut self.sieves, |s| {
+                            consume_chunk_shared(s, panel, chunk, d, k, stream_len, start_elements)
+                        })
+                        .iter()
+                        .sum(),
+                }
+            }
+            None => self
+                .exec
+                .map_units(&mut self.sieves, |s| {
+                    consume_chunk(s, chunk, d, k, stream_len, start_elements)
+                })
+                .iter()
+                .sum(),
         };
-        if let Some(panel) = &shared {
+        if let Some(panel) = shared {
             self.panel_evals += panel.evals();
+            self.panel_scratch.recycle(panel);
         }
-        self.speculative_queries += wasted.iter().sum::<u64>();
+        self.speculative_queries += wasted;
         let stored: usize = self.sieves.iter().map(|s| s.sieve.oracle.len()).sum();
         if stored > self.peak_stored {
             self.peak_stored = stored;

@@ -4,12 +4,15 @@
 //! ½−ε approximation, O(K log K / ε) memory, O(log K / ε) queries/element.
 
 use crate::exec::ExecContext;
-use crate::functions::{ChunkPanel, SharedRowStore, SubmodularFunction};
+use crate::functions::{ChunkPanel, PanelScratch, SharedRowStore, SubmodularFunction};
 use crate::metrics::AlgoStats;
 use crate::util::json::Json;
 use crate::util::mathx::threshold_grid;
 
-use super::{build_union_panel, sieve_stats, union_row_ids, Sieve, StreamingAlgorithm};
+use super::{
+    build_union_panel, offer_chunk_grid, sieve_first_hit, sieve_stats, union_row_ids, Sieve,
+    SolveGrid, StreamingAlgorithm,
+};
 
 /// Multi-sieve thresholding with a known (or estimated) `m`.
 pub struct SieveStreaming {
@@ -40,6 +43,11 @@ pub struct SieveStreaming {
     restored_kernel_evals: u64,
     discounted_kernel_evals: u64,
     peak_stored: usize,
+    /// Recycled chunk-panel storage (slot map, entries, candidate norms)
+    /// — the broker path allocates nothing per chunk once warm.
+    panel_scratch: PanelScratch,
+    /// Scratch pool for the 2-D (sieve × candidate-range) solve grid.
+    solve_pool: SolveGrid,
     /// Parallel execution context: sieves fan out across its pool when
     /// one is attached (see [`StreamingAlgorithm::set_exec`]).
     exec: ExecContext,
@@ -76,6 +84,8 @@ impl SieveStreaming {
             restored_kernel_evals: 0,
             discounted_kernel_evals: 0,
             peak_stored: 0,
+            panel_scratch: PanelScratch::default(),
+            solve_pool: SolveGrid::default(),
             exec: ExecContext::sequential(),
         }
     }
@@ -138,7 +148,7 @@ impl SieveStreaming {
             return None;
         }
         let ids = union_row_ids(self.sieves.iter_mut().map(|s| &mut s.oracle), self.k)?;
-        build_union_panel(&mut self.proto, &ids, chunk, &self.exec)
+        build_union_panel(&mut self.proto, &ids, chunk, &self.exec, &mut self.panel_scratch)
     }
 }
 
@@ -182,6 +192,14 @@ impl StreamingAlgorithm for SieveStreaming {
     /// row-range) and every sieve's rejection runs *gather* from it via
     /// [`Sieve::offer_batch_shared`] — same decisions, same queries,
     /// `kernel_evals` collapses from Σ-per-sieve to once-per-chunk.
+    ///
+    /// When the pool has more workers than live sieves can occupy, the
+    /// per-sieve fan-out switches to the 2-D (sieve × candidate-range)
+    /// solve grid ([`super::offer_chunk_grid`]): each rejection run's
+    /// blocked solves split into candidate ranges that any worker can
+    /// pick up, so a lone wide sieve no longer pins the chunk's critical
+    /// path to a single thread. Bits, queries and kernel evals are
+    /// unchanged — only where the solves run.
     fn process_batch(&mut self, chunk: &[f32]) {
         let d = self.proto.dim();
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
@@ -197,17 +215,49 @@ impl StreamingAlgorithm for SieveStreaming {
         let shared = self.build_shared_panel(chunk);
         // Inline when sequential, worker threads when a pool is attached
         // (`set_exec` gated it on `parallel_safe()`); identical results
-        // either way, speculative counts folded in sieve order.
-        let wasted = match &shared {
+        // either way, speculative counts folded in sieve order. Under the
+        // broker with live sieves too few to keep the workers busy, the
+        // coarse one-chunk×sieve fan-out gives way to the 2-D
+        // (sieve × candidate-range) solve grid — same gains, same scan,
+        // same accounting (`offer_chunk_grid` documents the argument),
+        // but solve work no longer serializes behind the widest sieve.
+        let live = self.sieves.iter().filter(|s| s.oracle.len() < k).count();
+        let use_grid = self.exec.is_parallel() && self.exec.threads() * 2 > live;
+        let wasted: u64 = match &shared {
             Some(panel) => {
-                self.exec.map_units(&mut self.sieves, |s| s.offer_batch_shared(panel, chunk, d, k))
+                let grid = if use_grid {
+                    let mut refs: Vec<&mut Sieve> = self.sieves.iter_mut().collect();
+                    offer_chunk_grid(
+                        &mut refs,
+                        panel,
+                        chunk,
+                        d,
+                        k,
+                        &self.exec,
+                        &mut self.solve_pool,
+                        |_, v, oracle, gains, _| sieve_first_hit(v, oracle, k, gains),
+                    )
+                } else {
+                    None
+                };
+                match grid {
+                    Some(w) => w,
+                    None => self
+                        .exec
+                        .map_units(&mut self.sieves, |s| s.offer_batch_shared(panel, chunk, d, k))
+                        .iter()
+                        .sum(),
+                }
             }
-            None => self.exec.map_units(&mut self.sieves, |s| s.offer_batch(chunk, d, k)),
+            None => {
+                self.exec.map_units(&mut self.sieves, |s| s.offer_batch(chunk, d, k)).iter().sum()
+            }
         };
-        if let Some(panel) = &shared {
+        if let Some(panel) = shared {
             self.panel_evals += panel.evals();
+            self.panel_scratch.recycle(panel);
         }
-        self.speculative_queries += wasted.iter().sum::<u64>();
+        self.speculative_queries += wasted;
         let stored: usize = self.sieves.iter().map(|s| s.oracle.len()).sum();
         if stored > self.peak_stored {
             self.peak_stored = stored;

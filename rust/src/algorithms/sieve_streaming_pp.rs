@@ -5,12 +5,13 @@
 //! tightens. Same ½−ε guarantee, memory drops to O(K/ε).
 
 use crate::exec::ExecContext;
-use crate::functions::{ChunkPanel, SharedRowStore, SubmodularFunction};
+use crate::functions::{ChunkPanel, PanelScratch, SharedRowStore, SubmodularFunction};
 use crate::metrics::AlgoStats;
 use crate::util::mathx::threshold_grid;
 
 use super::{
-    build_union_panel, sieve_stats, sieve_threshold, union_row_ids, Sieve, StreamingAlgorithm,
+    build_union_panel, gather_gains_grid, sieve_first_hit, sieve_stats, union_row_ids, Sieve,
+    SolveGrid, StreamingAlgorithm,
 };
 
 /// Post-accept bookkeeping shared by the scalar and batched paths: fold the
@@ -60,6 +61,10 @@ pub struct SieveStreamingPP {
     share_panels: bool,
     /// Scratch for `process_batch` gain panels (per-sieve fallback path).
     gain_buf: Vec<f64>,
+    /// Recycled chunk-panel storage (allocation-free broker path).
+    panel_scratch: PanelScratch,
+    /// Scratch pool for the 2-D (sieve × candidate-range) solve grid.
+    solve_pool: SolveGrid,
     /// Snapshot of the best summary ever observed. Pruning deletes sieves
     /// whose OPT guess fell below LB — which can include the sieve that
     /// *produced* LB. The guarantee says a surviving sieve catches up given
@@ -98,6 +103,8 @@ impl SieveStreamingPP {
             panel_evals: 0,
             share_panels: true,
             gain_buf: Vec::new(),
+            panel_scratch: PanelScratch::default(),
+            solve_pool: SolveGrid::default(),
             best_value: 0.0,
             best_summary: Vec::new(),
             exec: ExecContext::sequential(),
@@ -165,7 +172,7 @@ impl SieveStreamingPP {
             return None;
         }
         let ids = union_row_ids(self.sieves.iter_mut().map(|s| &mut s.oracle), self.k)?;
-        build_union_panel(&mut self.proto, &ids, chunk, &self.exec)
+        build_union_panel(&mut self.proto, &ids, chunk, &self.exec, &mut self.panel_scratch)
     }
 }
 
@@ -223,7 +230,10 @@ impl StreamingAlgorithm for SieveStreamingPP {
     /// Sieves spawned by a mid-chunk refresh start empty, so the
     /// chunk-start panel still covers every row they can reference; rows
     /// accepted mid-chunk bind to sieve-local kernel rows
-    /// ([`Sieve::accept_shared`]).
+    /// ([`Sieve::accept_shared`]). With a pool attached, each round's
+    /// (re-)scans fan out as a 2-D (sieve × candidate-range) task grid
+    /// ([`super::gather_gains_grid`]) before the serial hit computation —
+    /// previously only the panel build used the pool here.
     ///
     /// Query accounting stays scalar-exact through a telescoping
     /// invariant: a panel taken at position `p` charges `total - p` raw
@@ -261,23 +271,52 @@ impl StreamingAlgorithm for SieveStreamingPP {
             let remaining = total - pos;
             // (Re-)panel only the sieves whose cache was invalidated.
             // Within a rejection run each sieve's threshold is constant
-            // (its own f(S)/|S| only move on its own accept).
+            // (its own f(S)/|S| only move on its own accept). Under a
+            // parallel context the invalidated sieves' gathered solves
+            // fan out first as one 2-D (sieve × candidate-range) task
+            // grid — ++'s chunk consumption is otherwise
+            // coordinator-serial (the LB refresh couples sieves), so the
+            // grid is where its solve parallelism comes from. Gains and
+            // query charges are identical to `gains_shared`
+            // (`gather_gains_grid` documents the argument); the serial
+            // loop below fills whatever the grid did not.
+            let mut grid_filled = false;
+            if let Some(p) = &panel {
+                if self.exec.is_parallel() {
+                    let mut runs: Vec<(usize, &mut Sieve)> = self
+                        .sieves
+                        .iter_mut()
+                        .zip(hits.iter())
+                        .filter(|(s, hit)| {
+                            hit.is_none()
+                                && s.oracle.len() < k
+                                && s.oracle.panel_sharing_ref().is_some()
+                        })
+                        .map(|(s, _)| (pos, s))
+                        .collect();
+                    if !runs.is_empty() {
+                        gather_gains_grid(&mut runs, p, total, &self.exec, &mut self.solve_pool);
+                        grid_filled = true;
+                    }
+                }
+            }
             for (s, hit) in self.sieves.iter_mut().zip(hits.iter_mut()) {
                 if s.oracle.len() >= k || hit.is_some() {
                     continue;
                 }
                 let gains: &[f64] = match &panel {
                     Some(p) => {
-                        s.gains_shared(p, pos, remaining);
-                        &s.scratch
+                        if !(grid_filled && s.oracle.panel_sharing_ref().is_some()) {
+                            s.gains_shared(p, pos, remaining);
+                        }
+                        &s.scratch[..remaining]
                     }
                     None => {
                         s.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut scratch);
                         &scratch
                     }
                 };
-                let thresh = sieve_threshold(s.v, s.oracle.current_value(), k, s.oracle.len());
-                *hit = Some(gains.iter().position(|&g| g >= thresh).map(|j| pos + j));
+                *hit = Some(sieve_first_hit(s.v, s.oracle.as_ref(), k, gains).map(|j| pos + j));
             }
             let p_star = self
                 .sieves
@@ -350,6 +389,9 @@ impl StreamingAlgorithm for SieveStreamingPP {
         // No trailing stored/peak update: stored only changes at the
         // accept+refresh points above, each already recorded in-loop.
         self.gain_buf = scratch;
+        if let Some(p) = panel {
+            self.panel_scratch.recycle(p);
+        }
     }
 
     fn set_exec(&mut self, exec: ExecContext) {

@@ -262,8 +262,11 @@ impl StreamingAlgorithm for ThreeSieves {
 
     /// Batched ingestion (the tentpole path): evaluate the whole chunk's
     /// gains against the *current* summary in one
-    /// [`peek_gain_batch`](SubmodularFunction::peek_gain_batch) call and
-    /// scan for the first acceptance. Gains depend only on the summary, so
+    /// [`peek_gain_batch`](SubmodularFunction::peek_gain_batch) call —
+    /// which, since §Perf iteration 7, runs one blocked multi-RHS forward
+    /// substitution for the whole chunk instead of per-candidate
+    /// factor-streaming solves — and scan for the first acceptance.
+    /// Gains depend only on the summary, so
     /// a T-exhaustion threshold drop mid-scan just recomputes the
     /// threshold and keeps consuming the same panel; only an acceptance
     /// invalidates the remaining gains, after which the rest of the chunk

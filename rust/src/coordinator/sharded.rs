@@ -11,7 +11,10 @@
 //! single instance walks the whole grid, improving small-T robustness.
 
 use crate::algorithms::three_sieves::SieveTuning;
-use crate::algorithms::{sieve_threshold, StreamingAlgorithm};
+use crate::algorithms::{
+    count_range_tasks, push_range_tasks, run_solve_tasks, sieve_threshold, SolveGrid, SolveSrc,
+    SolveTask, StreamingAlgorithm,
+};
 use crate::exec::ExecContext;
 use crate::functions::SubmodularFunction;
 use crate::metrics::AlgoStats;
@@ -76,31 +79,7 @@ impl Shard {
             }
             let remaining = total - pos;
             self.oracle.peek_gain_batch(&chunk[pos * dim..], remaining, &mut self.scratch);
-            let mut thresh =
-                sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
-            let mut accepted_at = None;
-            for (j, &gain) in self.scratch.iter().enumerate() {
-                if gain >= thresh {
-                    self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
-                    self.t = 0;
-                    accepted_at = Some(j);
-                    break;
-                }
-                self.t += 1;
-                if self.t >= t_budget {
-                    self.t = 0;
-                    if let Some(v) = self.grid.pop() {
-                        self.v = v;
-                        thresh = sieve_threshold(
-                            self.v,
-                            self.oracle.current_value(),
-                            k,
-                            self.oracle.len(),
-                        );
-                    }
-                }
-            }
-            match accepted_at {
+            match self.consume_gains(chunk, dim, k, t_budget, pos, remaining) {
                 Some(j) => {
                     wasted += (remaining - (j + 1)) as u64;
                     pos += j + 1;
@@ -109,6 +88,41 @@ impl Shard {
             }
         }
         wasted
+    }
+
+    /// Scan one rejection run's gains (`self.scratch[..count]`, chunk
+    /// positions `pos..pos+count`) with the T-budget threshold walk and
+    /// accept the first passing item. Returns the accepted index relative
+    /// to `pos`, or `None` when the whole run rejects. The single scan
+    /// definition shared by the coarse per-shard path and the 2-D
+    /// (shard × candidate-range) grid, so the two can never drift.
+    fn consume_gains(
+        &mut self,
+        chunk: &[f32],
+        dim: usize,
+        k: usize,
+        t_budget: usize,
+        pos: usize,
+        count: usize,
+    ) -> Option<usize> {
+        let mut thresh = sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
+        for (j, &gain) in self.scratch[..count].iter().enumerate() {
+            if gain >= thresh {
+                self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
+                self.t = 0;
+                return Some(j);
+            }
+            self.t += 1;
+            if self.t >= t_budget {
+                self.t = 0;
+                if let Some(v) = self.grid.pop() {
+                    self.v = v;
+                    thresh =
+                        sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
+                }
+            }
+        }
+        None
     }
 }
 
@@ -124,6 +138,8 @@ pub struct ShardedThreeSieves {
     /// `Shard::process_batch`); excluded from reported query stats.
     speculative_queries: u64,
     peak_stored: usize,
+    /// Scratch pool for the 2-D (shard × candidate-range) solve grid.
+    solve_pool: SolveGrid,
     /// Parallel execution context: shards fan out across its pool when one
     /// is attached (see [`StreamingAlgorithm::set_exec`]).
     exec: ExecContext,
@@ -156,6 +172,7 @@ impl ShardedThreeSieves {
             elements: 0,
             speculative_queries: 0,
             peak_stored: 0,
+            solve_pool: SolveGrid::default(),
             exec: ExecContext::sequential(),
         }
     }
@@ -191,6 +208,83 @@ impl ShardedThreeSieves {
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
+
+    /// The 2-D (shard × candidate-range) chunk driver: round-synchronized
+    /// rejection runs whose kernel+solve work fans out as pure range
+    /// tasks on the pool, with each shard's decisions and accounting
+    /// identical to [`Shard::process_batch`] by construction — the gains
+    /// are range-split-invariant, the scan is the shared
+    /// [`Shard::consume_gains`], and the coordinator charges each run's
+    /// `count` queries and `count × |S|` kernel evals exactly as
+    /// `peek_gain_batch` would. Returns the chunk's speculative gain
+    /// evaluations.
+    fn process_batch_grid(&mut self, chunk: &[f32], d: usize, k: usize, t_budget: usize) -> u64 {
+        let total = chunk.len() / d;
+        if total == 0 {
+            return 0;
+        }
+        let threads = self.exec.threads();
+        let mut pos = vec![0usize; self.shards.len()];
+        let mut need: Vec<bool> = self.shards.iter().map(|s| s.oracle.len() < k).collect();
+        let mut wasted = 0u64;
+        loop {
+            let units = need.iter().filter(|&&x| x).count();
+            if units == 0 {
+                return wasted;
+            }
+            // Phase A: one pure kernel+solve task per (shard, range).
+            let mut n_tasks = 0usize;
+            for (si, live) in need.iter().enumerate() {
+                if *live {
+                    n_tasks += count_range_tasks(total - pos[si], units, threads);
+                }
+            }
+            let mut scratches = self.solve_pool.reserve(n_tasks);
+            let mut tasks: Vec<SolveTask<'_>> = Vec::with_capacity(n_tasks);
+            for (si, s) in self.shards.iter_mut().enumerate() {
+                if !need[si] {
+                    continue;
+                }
+                let count = total - pos[si];
+                if s.scratch.len() < count {
+                    s.scratch.resize(count, 0.0);
+                }
+                let Shard { oracle, scratch, .. } = s;
+                let ps = oracle.panel_sharing_ref().expect("grid gated on the capability");
+                push_range_tasks(
+                    &mut tasks,
+                    &mut scratches,
+                    ps,
+                    &mut scratch[..count],
+                    pos[si],
+                    units,
+                    threads,
+                    |from, len| SolveSrc::Kernel { items: &chunk[from * d..(from + len) * d] },
+                );
+            }
+            run_solve_tasks(&self.exec, &mut tasks);
+            drop(tasks);
+            // Charge + Phase B: scan/accept sequentially in shard order —
+            // bit-identical decisions and counters to the coarse path.
+            for si in 0..self.shards.len() {
+                if !need[si] {
+                    continue;
+                }
+                let count = total - pos[si];
+                let s = &mut self.shards[si];
+                let evals = count as u64 * s.oracle.len() as u64;
+                s.oracle.panel_sharing().expect("capability checked").charge(count as u64, evals);
+                match s.consume_gains(chunk, d, k, t_budget, pos[si], count) {
+                    Some(j) => {
+                        wasted += (count - (j + 1)) as u64;
+                        pos[si] += j + 1;
+                        need[si] = s.oracle.len() < k && pos[si] < total;
+                    }
+                    None => need[si] = false,
+                }
+            }
+        }
+    }
 }
 
 impl StreamingAlgorithm for ShardedThreeSieves {
@@ -217,12 +311,29 @@ impl StreamingAlgorithm for ShardedThreeSieves {
     /// outcomes in shard order, so summaries, objective values and query
     /// counts are bit-identical at every thread count
     /// (`rust/tests/exec_parity.rs`).
+    ///
+    /// When the pool has more workers than shards can occupy (the ROADMAP
+    /// work-stealing-granularity item), each shard's rejection runs split
+    /// into candidate sub-ranges instead: one 2-D (shard ×
+    /// candidate-range) task grid of pure kernel+solve range tasks
+    /// ([`crate::functions::PanelSharing::solve_batch_range`]) per round,
+    /// with the T-budget scan ([`Shard::consume_gains`]) and all
+    /// accounting unchanged — the coordinator charges each run's queries
+    /// and kernel evals exactly as `peek_gain_batch` would.
     fn process_batch(&mut self, chunk: &[f32]) {
         let d = self.dim;
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
         self.elements += (chunk.len() / d) as u64;
         let k = self.k;
         let t_budget = self.t_budget;
+        let use_grid = self.exec.is_parallel()
+            && self.exec.threads() * 2 > self.shards.len()
+            && self.shards.iter().all(|s| s.oracle.panel_sharing_ref().is_some());
+        if use_grid {
+            let wasted = self.process_batch_grid(chunk, d, k, t_budget);
+            self.merge_stats(&[wasted]);
+            return;
+        }
         // Inline when sequential, worker threads when a pool is attached
         // (`set_exec` gated it on `parallel_safe()`).
         let wasted =

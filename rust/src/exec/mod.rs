@@ -1,11 +1,14 @@
 //! Parallel execution subsystem: a dependency-free (std `thread` +
 //! channels) persistent worker pool driving the layers whose work
 //! decomposes into independent coarse units — ShardedThreeSieves shards,
-//! SieveStreaming/Salsa sieves, race lanes, and the shared kernel-panel
+//! SieveStreaming/Salsa sieves, race lanes, the shared kernel-panel
 //! broker's row-ranges (`NativeLogDet::build_chunk_panel` splits each
 //! chunk panel into several ranges per worker — finer than the
 //! one-chunk×unit granularity of the sieve fan-out, so fast workers pick
-//! up the tail instead of idling).
+//! up the tail instead of idling), and the 2-D (unit × candidate-range)
+//! solve grid (`crate::algorithms::offer_chunk_grid` and friends split
+//! each rejection run's blocked solves into candidate ranges when live
+//! units cannot occupy the pool).
 //!
 //! ## Determinism contract
 //!
@@ -214,10 +217,19 @@ impl std::fmt::Debug for ExecContext {
 /// units whose oracle returned
 /// [`parallel_safe()`](SubmodularFunction::parallel_safe) `== true` —
 /// i.e. plain owned data that tolerates being *used* from another thread
-/// while no other thread touches it — which [`ExecContext::gated`]
+/// while no other thread mutates it — which [`ExecContext::gated`]
 /// enforces before a pool ever reaches an algorithm. The scoped pool
-/// calls guarantee exclusive access per task and completion before
-/// returning, so no wrapped value ever outlives its borrow or is aliased.
+/// calls guarantee exclusive `&mut` access per task and completion
+/// before returning, so no wrapped value ever outlives its borrow.
+///
+/// Two aliasing regimes ride on this one argument: the coarse unit
+/// fan-out (each task exclusively owns its unit, nothing is shared) and
+/// the 2-D solve grid, whose tasks share one unit's oracle by `&`
+/// (several candidate-ranges read the same factor concurrently through
+/// the pure `solve_*_range` methods) while every `&mut` — gains slice,
+/// solve scratch — is disjoint per task. Shared `&` reads of a
+/// `parallel_safe` oracle are race-free by the same promise: plain owned
+/// data with no interior mutability outside the row store's `Mutex`.
 struct AssertThreadSafe<T>(T);
 
 // SAFETY: see the type-level docs — `map_units` only runs over units

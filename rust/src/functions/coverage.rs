@@ -55,10 +55,14 @@ impl ConcaveCoverage {
         // Clamp to [0, 1]: keeps the function bounded and m exact.
         (x as f64).clamp(0.0, 1.0)
     }
+}
 
-    fn value_of_acc(&self, acc: &[f64]) -> f64 {
-        acc.iter().zip(&self.weights).map(|(a, w)| w * a.sqrt()).sum()
-    }
+/// `Σ_j w_j √acc_j` — a free function over the two slices so `accept` /
+/// `remove` can fold the accumulator they just updated without cloning it
+/// (the old `&self` method forced an O(d) allocation per accept, the one
+/// per-element allocation the batched-path audit found on this oracle).
+fn weighted_value(acc: &[f64], weights: &[f64]) -> f64 {
+    acc.iter().zip(weights).map(|(a, w)| w * a.sqrt()).sum()
 }
 
 impl SubmodularFunction for ConcaveCoverage {
@@ -94,7 +98,7 @@ impl SubmodularFunction for ConcaveCoverage {
         for j in 0..self.dim {
             self.acc[j] += Self::contrib(item[j]);
         }
-        self.value = self.value_of_acc(&self.acc.clone());
+        self.value = weighted_value(&self.acc, &self.weights);
         self.feats.extend_from_slice(item);
         self.n += 1;
     }
@@ -114,7 +118,7 @@ impl SubmodularFunction for ConcaveCoverage {
         }
         self.feats.drain(idx * d..(idx + 1) * d);
         self.n -= 1;
-        self.value = self.value_of_acc(&self.acc.clone());
+        self.value = weighted_value(&self.acc, &self.weights);
     }
 
     fn summary(&self) -> &[f32] {

@@ -104,6 +104,33 @@ impl SubmodularFunction for FacilityLocation {
         gain / self.n_refs as f64
     }
 
+    /// Batched gains on the owned similarity scratch: one take/restore
+    /// for the whole chunk instead of one per item, no per-chunk
+    /// allocation — the non-logdet oracles keep pace with
+    /// `process_batch`. Per candidate this runs exactly the
+    /// [`peek_gain`](Self::peek_gain) accumulation over the same `best`
+    /// array (which only `accept` moves), so it is bitwise identical to
+    /// the trait's per-item fallback and charges the same `count`
+    /// queries.
+    fn peek_gain_batch(&mut self, items: &[f32], count: usize, out: &mut Vec<f64>) {
+        let d = self.dim;
+        debug_assert!(items.len() >= count * d);
+        self.queries += count as u64;
+        out.clear();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        for item in items.chunks_exact(d).take(count) {
+            self.sims_into(item, &mut scratch);
+            let mut gain = 0.0;
+            for (s, b) in scratch.iter().zip(&self.best) {
+                if *s > *b {
+                    gain += s - b;
+                }
+            }
+            out.push(gain / self.n_refs as f64);
+        }
+        self.scratch = scratch;
+    }
+
     fn accept(&mut self, item: &[f32]) {
         self.queries += 1;
         let mut scratch = std::mem::take(&mut self.scratch);
@@ -207,10 +234,10 @@ mod tests {
     }
 
     #[test]
-    fn default_peek_gain_batch_matches_scalar() {
-        // FacilityLocation relies on the trait's default per-item fallback;
-        // peek_gain only reads `best` (the scratch swap restores itself),
-        // so the fallback is exact and charges one query per item.
+    fn peek_gain_batch_matches_scalar() {
+        // The batched override shares `peek_gain`'s accumulation over the
+        // same `best` array (one scratch take/restore per chunk instead
+        // of per item), so it is exact and charges one query per item.
         let mut rng = Rng::seed_from(9);
         let d = 4;
         let mut f = make(d, 20, 9);

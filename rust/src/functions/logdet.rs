@@ -32,12 +32,31 @@
 //! path pays Σ|S_sieve| entries per candidate where the broker pays the
 //! number of *distinct* rows), and `benches/micro_hotpath.rs` tracks the
 //! ratio per run in CI (`bench_panel_sharing.json`).
+//!
+//! §Perf iteration 7 (blocked multi-RHS solve panel): with kernel rows
+//! cached (batched path) or gathered (broker path), the per-candidate
+//! forward solve became the dominant per-candidate cost — each of B
+//! candidates independently re-streamed the packed factor, an O(B·n²)
+//! memory-bound pass per sieve per chunk. Every batched gain path now
+//! runs one loop-interchanged [`forward_solve_panel`]: packed row `i` is
+//! loaded once and applied to all B candidates' z-columns (slot-major z
+//! panel in owned scratch), with the per-`i` recurrence single-sourced in
+//! [`solve_step`] so the blocked pass is bitwise identical to the scalar
+//! loop by construction. The capability layer grew *pure* range solves
+//! (`solve_gathered_range`/`solve_batch_range` over caller-owned
+//! [`SolveScratch`], accounting recorded separately via `charge`), which
+//! lets the algorithms fan solve work out as a 2-D
+//! (unit × candidate-range) task grid on the exec pool instead of one
+//! coarse unit per worker — solve work no longer serializes behind the
+//! widest sieve. `set_blocked_solve(false)` keeps the per-candidate loop
+//! as the bench/parity baseline; `benches/micro_hotpath.rs` tracks the
+//! blocked-vs-per-candidate wall ratio in CI (`bench_solve_panel.json`).
 
 use crate::exec::ExecContext;
 use crate::kernels::RbfKernel;
 use crate::util::mathx::floor_eps;
 
-use super::panel::{ChunkPanel, PanelSharing, RowStore, SharedRowStore};
+use super::panel::{ChunkPanel, PanelScratch, PanelSharing, RowStore, SharedRowStore, SolveScratch};
 use super::SubmodularFunction;
 
 /// 4-lane f32 dot product with f64 lane-sum accumulation.
@@ -139,27 +158,76 @@ fn rbf_entry(gamma: f64, d2: f64) -> f64 {
     }
 }
 
+/// One forward-substitution step against packed row `i` of the factor:
+/// `z_i = (a·kv_i − Σ_{j<i} L_ij z_j) / L_ii`, with the dot in 4
+/// independent lanes (§Perf iteration 3 — the solve dominates once the
+/// kernel row is cached). The single definition of the per-`i` recurrence
+/// shared by the scalar loop ([`forward_solve`]) and the blocked
+/// multi-RHS pass ([`forward_solve_panel`]) — both issue exactly this
+/// `dot_lanes_f64` call on the same operands in the same order, so their
+/// bitwise agreement holds by construction, like `rbf_entry` for kernel
+/// entries.
+#[inline]
+fn solve_step(row: &[f64], z: &mut [f64], i: usize, kvi: f64, a: f64) -> f64 {
+    let acc = a * kvi - dot_lanes_f64(&row[..i], &z[..i]);
+    let zi = acc / row[i];
+    z[i] = zi;
+    zi
+}
+
 /// Forward substitution `z = L⁻¹(a·kv)` against a packed lower-triangular
-/// factor, returning `‖z‖²` with `z` left in place. One definition for
-/// the scalar ([`NativeLogDet::solve_for`]), batched
-/// (`peek_gain_batch`) and broker-gathered (`peek_gain_batch_gathered`)
-/// gain paths — their bitwise agreement is the parity contract, so the
-/// loop exists exactly once.
+/// factor, returning `‖z‖²` with `z` left in place. Drives the scalar
+/// gain path ([`NativeLogDet::solve_for`]) and the per-candidate solve
+/// fallback (`set_blocked_solve(false)` — the bench/parity baseline).
 #[inline]
 fn forward_solve(chol: &[f64], z: &mut [f64], kv: &[f64], a: f64) -> f64 {
     let n = kv.len();
     let mut znorm2 = 0.0;
     for i in 0..n {
         let row = &chol[tri(i)..tri(i) + i + 1];
-        // acc = a·kv_i − Σ_{j<i} L_ij z_j, with the dot in 4 independent
-        // lanes (§Perf iteration 3 — the solve dominates once the kernel
-        // row is cached).
-        let acc = a * kv[i] - dot_lanes_f64(&row[..i], &z[..i]);
-        let zi = acc / row[i];
-        z[i] = zi;
+        let zi = solve_step(row, z, i, kv[i], a);
         znorm2 += zi * zi;
     }
     znorm2
+}
+
+/// Blocked multi-RHS forward substitution (§Perf iteration 7): solve
+/// `Z = L⁻¹(a·KV)` for every candidate of a kv panel in one
+/// loop-interchanged pass. The factor is the memory-bound stream — per
+/// candidate the scalar loop re-reads all `n(n+1)/2` packed entries, an
+/// O(B·n²) traffic pattern that dominates batched gains once the kernel
+/// rows are cached or gathered. Here each packed row `i` is loaded once
+/// and applied to all candidates' z-columns before moving on, so the
+/// factor streams through the cache once per *panel* instead of once per
+/// candidate.
+///
+/// `kv` and `z` are candidate-major (`count × n`, each candidate's
+/// column contiguous) and `norm2` receives the per-candidate `‖z‖²`.
+/// Every candidate runs the identical [`solve_step`] recurrence on the
+/// identical operands in the identical order as [`forward_solve`], and
+/// `‖z‖²` accumulates over `i` ascending exactly as the scalar loop
+/// does — so the blocked pass is bitwise identical to `count`
+/// independent solves, which the parity suites pin.
+fn forward_solve_panel(
+    chol: &[f64],
+    n: usize,
+    kv: &[f64],
+    z: &mut [f64],
+    norm2: &mut [f64],
+    a: f64,
+) {
+    let count = norm2.len();
+    debug_assert!(kv.len() == count * n && z.len() == count * n);
+    for m in norm2.iter_mut() {
+        *m = 0.0;
+    }
+    for i in 0..n {
+        let row = &chol[tri(i)..tri(i) + i + 1];
+        for ((z, kv), m) in z.chunks_exact_mut(n).zip(kv.chunks_exact(n)).zip(norm2.iter_mut()) {
+            let zi = solve_step(row, z, i, kv[i], a);
+            *m += zi * zi;
+        }
+    }
 }
 
 /// Configuration for the log-det objective.
@@ -211,8 +279,16 @@ pub struct NativeLogDet {
     /// Cached ‖s_i‖² per summary row (§Perf: recomputing row norms on
     /// every gain query was ~35% of the kernel-row cost).
     row_norms: Vec<f64>,
-    /// B×n kernel panel scratch for `peek_gain_batch`.
+    /// B×n kernel panel scratch for `peek_gain_batch` (doubles as the
+    /// gather destination of `peek_gain_batch_gathered`).
     panel: Vec<f64>,
+    /// Blocked multi-RHS solve scratch (z panel + per-candidate norms).
+    solve: SolveScratch,
+    /// §Perf iteration 7 toggle: `true` (default) runs every batched gain
+    /// path through the blocked [`forward_solve_panel`]; `false` keeps the
+    /// per-candidate [`forward_solve`] loop. Both are bitwise identical —
+    /// the flag exists so benches and parity tests can compare them.
+    blocked_solve: bool,
     /// Measured kernel-entry evaluations (see
     /// [`SubmodularFunction::kernel_evals`]). §Perf iteration 6: this is
     /// the counter the shared-panel broker exists to shrink — multi-sieve
@@ -252,6 +328,8 @@ impl NativeLogDet {
             z: vec![0.0; cap],
             row_norms: Vec::with_capacity(cap),
             panel: Vec::new(),
+            solve: SolveScratch::default(),
+            blocked_solve: true,
             kernel_evals: 0,
             store: None,
             row_ids: Vec::new(),
@@ -261,6 +339,16 @@ impl NativeLogDet {
 
     pub fn config(&self) -> &LogDetConfig {
         &self.cfg
+    }
+
+    /// Force the per-candidate forward-solve loop (`false`) or restore
+    /// the default blocked multi-RHS pass (`true`). Bench/parity hook:
+    /// the two are bitwise identical in every output — only the factor's
+    /// memory traffic (and therefore wall time) moves. Propagated through
+    /// [`clone_empty`](SubmodularFunction::clone_empty) so an algorithm
+    /// built from a toggled prototype keeps the setting in every sieve.
+    pub fn set_blocked_solve(&mut self, on: bool) {
+        self.blocked_solve = on;
     }
 
     /// Dense `n × n` copy of the Cholesky factor (tests / PJRT state sync).
@@ -310,56 +398,127 @@ impl NativeLogDet {
     }
 
     /// Blocked kernel panel: `panel[b·n + i] = k(items[b], s_i)` for all
-    /// `count` candidates, candidates processed four at a time so each
-    /// summary row (and its cached norm) streams through the cache once per
-    /// four candidates instead of once per candidate.
-    ///
-    /// Entry arithmetic is identical to [`kernel_row`](Self::kernel_row) —
-    /// same norm-caching decomposition, same lane structure (via
-    /// [`dot_lanes_x4`]), same exp underflow cutoff — so the panel is
-    /// bitwise equal to `count` scalar kernel rows.
+    /// `count` candidates — [`kernel_panel_into`] over the owned panel
+    /// scratch, plus the kernel-eval accounting.
     fn kernel_panel(&mut self, items: &[f32], count: usize) {
-        let d = self.cfg.dim;
         let n = self.n;
-        let gamma = self.cfg.gamma;
         self.kernel_evals += (count * n) as u64;
         if self.panel.len() < count * n {
             self.panel.resize(count * n, 0.0);
         }
-        let blocks = count / 4;
-        for blk in 0..blocks {
-            let b0 = blk * 4;
-            let xs: [&[f32]; 4] = [
-                &items[b0 * d..(b0 + 1) * d],
-                &items[(b0 + 1) * d..(b0 + 2) * d],
-                &items[(b0 + 2) * d..(b0 + 3) * d],
-                &items[(b0 + 3) * d..(b0 + 4) * d],
-            ];
-            let xsq = [
-                dot_lanes(xs[0], xs[0]),
-                dot_lanes(xs[1], xs[1]),
-                dot_lanes(xs[2], xs[2]),
-                dot_lanes(xs[3], xs[3]),
-            ];
-            for i in 0..n {
-                let row = &self.feats[i * d..(i + 1) * d];
-                let rn = self.row_norms[i];
-                let dots = dot_lanes_x4(&xs, row);
-                for q in 0..4 {
-                    let d2 = xsq[q] + rn - 2.0 * dots[q];
-                    self.panel[(b0 + q) * n + i] = rbf_entry(gamma, d2);
-                }
+        kernel_panel_into(
+            &self.feats,
+            &self.row_norms,
+            self.cfg.dim,
+            n,
+            self.cfg.gamma,
+            items,
+            count,
+            &mut self.panel,
+        );
+    }
+
+    /// The blocked-vs-per-candidate dispatch behind **every** batched
+    /// gain path — `peek_gain_batch`, `peek_gain_batch_gathered` and the
+    /// pure range solves all funnel their kv panel (`count × n`) through
+    /// this one function, so the solve-mode choice (and its bitwise
+    /// contract) exists exactly once. `&self` on purpose — all mutable
+    /// state is the caller's z/norm scratch, so disjoint ranges of one
+    /// oracle can run on different worker threads.
+    fn solve_kv_panel(
+        &self,
+        count: usize,
+        kv: &[f64],
+        z: &mut [f64],
+        norm2: &mut [f64],
+        out: &mut [f64],
+    ) {
+        let n = self.n;
+        debug_assert!(kv.len() == count * n && out.len() >= count);
+        let a = self.cfg.a;
+        if self.blocked_solve {
+            forward_solve_panel(&self.chol, n, kv, &mut z[..count * n], &mut norm2[..count], a);
+            for (o, &m) in out[..count].iter_mut().zip(&norm2[..count]) {
+                *o = self.gain_from_znorm2(m);
+            }
+        } else {
+            // Per-candidate fallback (bench/parity baseline): the same
+            // `solve_step` recurrence, factor re-streamed per candidate,
+            // one z column reused.
+            for (o, kv) in out[..count].iter_mut().zip(kv.chunks_exact(n)) {
+                let znorm2 = forward_solve(&self.chol, z, kv, a);
+                *o = self.gain_from_znorm2(znorm2);
             }
         }
-        // Tail candidates (count % 4): the scalar kernel-row loop.
-        for b in blocks * 4..count {
-            let x = &items[b * d..(b + 1) * d];
-            let xsq = dot_lanes(x, x);
-            for i in 0..n {
-                let row = &self.feats[i * d..(i + 1) * d];
-                let d2 = xsq + self.row_norms[i] - 2.0 * dot_lanes(x, row);
-                self.panel[b * n + i] = rbf_entry(gamma, d2);
+    }
+
+    /// [`solve_kv_panel`](Self::solve_kv_panel) over a [`SolveScratch`]
+    /// whose kv panel the caller just filled — the tail of the pure range
+    /// solves.
+    fn solve_scratch_kv(&self, count: usize, scratch: &mut SolveScratch, out: &mut [f64]) {
+        let n = self.n;
+        let SolveScratch { kv, z, norm2 } = scratch;
+        self.solve_kv_panel(count, &kv[..count * n], z, norm2, out);
+    }
+}
+
+/// Blocked kernel panel into a caller-provided buffer: `out[b·n + i] =
+/// k(items[b], s_i)` for `count` candidates, candidates processed four at
+/// a time so each summary row (and its cached norm) streams through the
+/// cache once per four candidates instead of once per candidate.
+///
+/// Entry arithmetic is identical to [`NativeLogDet::kernel_row`] — same
+/// norm-caching decomposition, same lane structure (via [`dot_lanes_x4`]),
+/// same exp underflow cutoff — so the panel is bitwise equal to `count`
+/// scalar kernel rows. The single definition behind the
+/// accounting-carrying [`NativeLogDet::kernel_panel`] and the pure
+/// [`PanelSharing::solve_batch_range`] (which does its own accounting via
+/// `charge`), so the two can never drift.
+#[allow(clippy::too_many_arguments)]
+fn kernel_panel_into(
+    feats: &[f32],
+    row_norms: &[f64],
+    d: usize,
+    n: usize,
+    gamma: f64,
+    items: &[f32],
+    count: usize,
+    out: &mut [f64],
+) {
+    debug_assert!(out.len() >= count * n);
+    let blocks = count / 4;
+    for blk in 0..blocks {
+        let b0 = blk * 4;
+        let xs: [&[f32]; 4] = [
+            &items[b0 * d..(b0 + 1) * d],
+            &items[(b0 + 1) * d..(b0 + 2) * d],
+            &items[(b0 + 2) * d..(b0 + 3) * d],
+            &items[(b0 + 3) * d..(b0 + 4) * d],
+        ];
+        let xsq = [
+            dot_lanes(xs[0], xs[0]),
+            dot_lanes(xs[1], xs[1]),
+            dot_lanes(xs[2], xs[2]),
+            dot_lanes(xs[3], xs[3]),
+        ];
+        for i in 0..n {
+            let row = &feats[i * d..(i + 1) * d];
+            let rn = row_norms[i];
+            let dots = dot_lanes_x4(&xs, row);
+            for q in 0..4 {
+                let d2 = xsq[q] + rn - 2.0 * dots[q];
+                out[(b0 + q) * n + i] = rbf_entry(gamma, d2);
             }
+        }
+    }
+    // Tail candidates (count % 4): the scalar kernel-row loop.
+    for b in blocks * 4..count {
+        let x = &items[b * d..(b + 1) * d];
+        let xsq = dot_lanes(x, x);
+        for i in 0..n {
+            let row = &feats[i * d..(i + 1) * d];
+            let d2 = xsq + row_norms[i] - 2.0 * dot_lanes(x, row);
+            out[b * n + i] = rbf_entry(gamma, d2);
         }
     }
 }
@@ -388,11 +547,14 @@ impl SubmodularFunction for NativeLogDet {
     }
 
     /// Blocked batch gain: one B×n kernel panel ([`Self::kernel_panel`])
-    /// plus `count` forward solves against the shared Cholesky factor.
+    /// plus one blocked multi-RHS forward substitution
+    /// ([`forward_solve_panel`]) against the shared Cholesky factor.
     /// Bitwise identical to `count` scalar [`peek_gain`](Self::peek_gain)
     /// calls — including query accounting — but the panel streams the
-    /// summary once per four candidates, which is where the batched
-    /// ingestion throughput comes from (benches/micro_hotpath).
+    /// summary once per four candidates and the solve streams the factor
+    /// once per panel instead of once per candidate (§Perf iterations 5
+    /// and 7; benches/micro_hotpath `batched gain` and `solve panel`
+    /// rows).
     fn peek_gain_batch(&mut self, items: &[f32], count: usize, out: &mut Vec<f64>) {
         let d = self.cfg.dim;
         debug_assert!(items.len() >= count * d);
@@ -405,21 +567,16 @@ impl SubmodularFunction for NativeLogDet {
             out.resize(count, g);
             return;
         }
-        // Only `z` backs the forward solves here — the panel plays the
-        // role `kv` has on the scalar path, so `kv` stays untouched.
-        if self.z.len() < n {
-            self.z.resize(n, 0.0);
-        }
         self.kernel_panel(items, count);
-        // Forward solves: the same loop as `solve_for`, reading each kv row
-        // from the panel.
-        let a = self.cfg.a;
+        // The panel plays the role `kv` has on the scalar path, so `kv`
+        // stays untouched; z/norm scratch comes from the owned
+        // SolveScratch either way (the single `solve_kv_panel` dispatch).
         let panel = std::mem::take(&mut self.panel);
-        for b in 0..count {
-            let kv = &panel[b * n..(b + 1) * n];
-            let znorm2 = forward_solve(&self.chol, &mut self.z, kv, a);
-            out.push(self.gain_from_znorm2(znorm2));
-        }
+        let mut solve = std::mem::take(&mut self.solve);
+        solve.ensure_z(count, n);
+        out.resize(count, 0.0);
+        self.solve_kv_panel(count, &panel[..count * n], &mut solve.z, &mut solve.norm2, out);
+        self.solve = solve;
         self.panel = panel;
     }
 
@@ -531,11 +688,18 @@ impl SubmodularFunction for NativeLogDet {
         Some(self)
     }
 
+    fn panel_sharing_ref(&self) -> Option<&dyn PanelSharing> {
+        Some(self)
+    }
+
     fn clone_empty(&self) -> Box<dyn SubmodularFunction> {
         let mut f = NativeLogDet::new(self.cfg.clone());
         // Sieves spawned from an attached prototype share its store — the
         // whole point of interning (panel rows are deduped across sieves).
         f.store.clone_from(&self.store);
+        // The solve-path toggle rides along so a per-candidate prototype
+        // (bench/parity baseline) spawns per-candidate sieves.
+        f.blocked_solve = self.blocked_solve;
         Box::new(f)
     }
 
@@ -607,28 +771,44 @@ impl PanelSharing for NativeLogDet {
         &self.row_ids
     }
 
-    fn build_chunk_panel(&self, ids: &[u32], chunk: &[f32], exec: &ExecContext) -> ChunkPanel {
+    fn build_chunk_panel(
+        &self,
+        ids: &[u32],
+        chunk: &[f32],
+        exec: &ExecContext,
+        scratch: &mut PanelScratch,
+    ) -> ChunkPanel {
         let d = self.cfg.dim;
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
         let b = chunk.len() / d;
-        let slots = ids.iter().enumerate().map(|(i, &id)| (id, i as u32)).collect();
+        // Recycled storage: the slot map and entry buffer come back from
+        // the previous chunk's panel (`PanelScratch::recycle`), so the
+        // broker path allocates nothing per chunk once warm.
+        let mut panel = scratch.fresh(b);
+        panel.slots.extend(ids.iter().enumerate().map(|(i, &id)| (id, i as u32)));
         if ids.is_empty() || b == 0 {
-            return ChunkPanel { slots, data: Vec::new(), width: b, evals: 0 };
+            panel.data.clear();
+            return panel;
         }
+        panel.evals = (ids.len() * b) as u64;
+        // No clear first: every entry is overwritten by `panel_row` below.
+        panel.data.resize(ids.len() * b, 0.0);
         let gamma = self.cfg.gamma;
         let guard =
             self.store.as_ref().expect("build_chunk_panel requires an attached row store").lock();
         let store: &RowStore = &guard;
         // Candidate norms once per chunk — shared by every panel row, and
         // bit-identical to the per-query `dot_lanes(x, x)` of the scalar
-        // path.
-        let xsq: Vec<f64> = chunk.chunks_exact(d).map(|x| dot_lanes(x, x)).collect();
-        let mut data = vec![0.0f64; ids.len() * b];
+        // path. The buffer is reused across chunks.
+        scratch.xsq.clear();
+        scratch.xsq.extend(chunk.chunks_exact(d).map(|x| dot_lanes(x, x)));
+        let xsq: &[f64] = &scratch.xsq;
         // Row-range fan-out, several ranges per worker so fast threads
         // pick up the tail (the ROADMAP "work-stealing granularity"
         // lever: the kernel panel now shares the pool with the sieves).
         let per = ids.len().div_ceil(exec.threads().max(1) * 4).max(8);
-        let mut units: Vec<PanelRange<'_>> = data
+        let mut units: Vec<PanelRange<'_>> = panel
+            .data
             .chunks_mut(per * b)
             .zip(ids.chunks(per))
             .map(|(out, ids)| PanelRange { ids, out })
@@ -637,11 +817,11 @@ impl PanelSharing for NativeLogDet {
             for (r, &id) in range.ids.iter().enumerate() {
                 let row = store.row(id);
                 let rn = store.norm(id);
-                panel_row(chunk, d, gamma, &xsq, row, rn, &mut range.out[r * b..(r + 1) * b]);
+                panel_row(chunk, d, gamma, xsq, row, rn, &mut range.out[r * b..(r + 1) * b]);
             }
         });
         drop(guard);
-        ChunkPanel { slots, data, width: b, evals: (ids.len() * b) as u64 }
+        panel
     }
 
     fn chunk_kernel_row(&mut self, row: &[f32], chunk: &[f32], from: usize, out: &mut [f64]) {
@@ -662,11 +842,11 @@ impl PanelSharing for NativeLogDet {
         self.kernel_evals += (b - from) as u64;
     }
 
-    /// The gather-fed twin of [`SubmodularFunction::peek_gain_batch`]: the
-    /// same forward-solve loop, but each candidate's `kv` row is written
-    /// by `fill` (a broker gather) instead of a locally computed kernel
-    /// panel. Charges `count` queries, performs zero kernel evaluations —
-    /// that is the entire saving.
+    /// The gather-fed twin of [`SubmodularFunction::peek_gain_batch`]:
+    /// the same blocked solve, but the kv panel is written by `fill` (a
+    /// broker gather) instead of computed kernel rows. Charges `count`
+    /// queries, performs zero kernel evaluations — that is the entire
+    /// saving.
     fn peek_gain_batch_gathered(
         &mut self,
         count: usize,
@@ -682,20 +862,69 @@ impl PanelSharing for NativeLogDet {
             out.resize(count, g);
             return;
         }
-        if self.kv.len() < n {
-            self.kv.resize(n, 0.0);
+        // Gather the whole kv panel, then the single `solve_kv_panel`
+        // dispatch (blocked by default, per-candidate under the toggle).
+        let mut solve = std::mem::take(&mut self.solve);
+        solve.ensure(count, n);
+        for (t, kv) in solve.kv[..count * n].chunks_exact_mut(n).enumerate() {
+            fill(t, kv);
         }
-        if self.z.len() < n {
-            self.z.resize(n, 0.0);
+        out.resize(count, 0.0);
+        self.solve_kv_panel(count, &solve.kv[..count * n], &mut solve.z, &mut solve.norm2, out);
+        self.solve = solve;
+    }
+
+    fn solve_gathered_range(
+        &self,
+        count: usize,
+        fill: &mut dyn FnMut(usize, &mut [f64]),
+        scratch: &mut SolveScratch,
+        out: &mut [f64],
+    ) {
+        debug_assert!(out.len() >= count);
+        let n = self.n;
+        if n == 0 {
+            // Empty summary: the gain is item-independent (k(e,e) = 1).
+            out[..count].fill(self.gain_from_znorm2(0.0));
+            return;
         }
-        let a = self.cfg.a;
-        let mut kv = std::mem::take(&mut self.kv);
-        for t in 0..count {
-            fill(t, &mut kv[..n]);
-            let znorm2 = forward_solve(&self.chol, &mut self.z, &kv[..n], a);
-            out.push(self.gain_from_znorm2(znorm2));
+        scratch.ensure(count, n);
+        for (t, kv) in scratch.kv[..count * n].chunks_exact_mut(n).enumerate() {
+            fill(t, kv);
         }
-        self.kv = kv;
+        self.solve_scratch_kv(count, scratch, out);
+    }
+
+    fn solve_batch_range(
+        &self,
+        items: &[f32],
+        count: usize,
+        scratch: &mut SolveScratch,
+        out: &mut [f64],
+    ) {
+        debug_assert!(out.len() >= count);
+        let n = self.n;
+        if n == 0 {
+            out[..count].fill(self.gain_from_znorm2(0.0));
+            return;
+        }
+        scratch.ensure(count, n);
+        kernel_panel_into(
+            &self.feats,
+            &self.row_norms,
+            self.cfg.dim,
+            n,
+            self.cfg.gamma,
+            items,
+            count,
+            &mut scratch.kv,
+        );
+        self.solve_scratch_kv(count, scratch, out);
+    }
+
+    fn charge(&mut self, queries: u64, kernel_evals: u64) {
+        self.queries += queries;
+        self.kernel_evals += kernel_evals;
     }
 }
 
@@ -952,7 +1181,7 @@ mod tests {
         let ids: Vec<u32> = f.summary_row_ids().to_vec();
         assert_eq!(ids.len(), 6);
         for exec in [ExecContext::sequential(), ExecContext::new(Parallelism::Threads(3))] {
-            let panel = f.build_chunk_panel(&ids, &chunk, &exec);
+            let panel = f.build_chunk_panel(&ids, &chunk, &exec, &mut PanelScratch::default());
             assert_eq!(panel.rows(), 6);
             assert_eq!(panel.evals(), 6 * 9);
             // Reference: the scalar kernel row of an identical twin.
@@ -990,7 +1219,12 @@ mod tests {
             plain.accept(&rows[i * d..(i + 1) * d]);
         }
         let ids: Vec<u32> = shared.summary_row_ids().to_vec();
-        let panel = shared.build_chunk_panel(&ids, &chunk, &ExecContext::sequential());
+        let panel = shared.build_chunk_panel(
+            &ids,
+            &chunk,
+            &ExecContext::sequential(),
+            &mut PanelScratch::default(),
+        );
         let (q0, e0) = (shared.queries(), shared.kernel_evals());
         let mut gathered = Vec::new();
         let slots: Vec<u32> = ids.iter().map(|&id| panel.slot(id).unwrap()).collect();
@@ -1023,6 +1257,162 @@ mod tests {
             assert!((g - f.max_singleton_value()).abs() < 1e-12);
         }
         assert_eq!(f.queries(), 2);
+    }
+
+    /// §Perf iteration 7 contract: the blocked multi-RHS pass must equal
+    /// the per-candidate loop bit for bit — gains and query accounting —
+    /// on both the batched and the gather-fed path.
+    #[test]
+    fn blocked_solve_matches_per_candidate_bitwise() {
+        let mut rng = Rng::seed_from(25);
+        let d = 6;
+        let rows = rand_items(&mut rng, 7, d);
+        let cands = rand_items(&mut rng, 9, d); // two 4-blocks + tail
+        let mut blocked = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 1.1, A));
+        let mut percand = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 1.1, A));
+        percand.set_blocked_solve(false);
+        for i in 0..7 {
+            blocked.accept(&rows[i * d..(i + 1) * d]);
+            percand.accept(&rows[i * d..(i + 1) * d]);
+        }
+        let (mut gb, mut gp) = (Vec::new(), Vec::new());
+        blocked.peek_gain_batch(&cands, 9, &mut gb);
+        percand.peek_gain_batch(&cands, 9, &mut gp);
+        for (i, (&b, &p)) in gb.iter().zip(&gp).enumerate() {
+            assert_eq!(b.to_bits(), p.to_bits(), "batched item {i}: {b} vs {p}");
+        }
+        assert_eq!(blocked.queries(), percand.queries());
+        assert_eq!(blocked.kernel_evals(), percand.kernel_evals());
+        // Gather-fed path: feed both the same kv rows.
+        let mut kv_rows = vec![0.0f64; 9 * 7];
+        for (t, kv) in kv_rows.chunks_exact_mut(7).enumerate() {
+            blocked.kernel_row(&cands[t * d..(t + 1) * d]);
+            kv.copy_from_slice(&blocked.kv[..7]);
+        }
+        blocked.peek_gain_batch_gathered(
+            9,
+            &mut |t, kv| kv.copy_from_slice(&kv_rows[t * 7..(t + 1) * 7]),
+            &mut gb,
+        );
+        percand.peek_gain_batch_gathered(
+            9,
+            &mut |t, kv| kv.copy_from_slice(&kv_rows[t * 7..(t + 1) * 7]),
+            &mut gp,
+        );
+        for (i, (&b, &p)) in gb.iter().zip(&gp).enumerate() {
+            assert_eq!(b.to_bits(), p.to_bits(), "gathered item {i}: {b} vs {p}");
+        }
+    }
+
+    /// The pure range solves feeding the 2-D grid: split candidate ranges
+    /// must reproduce the one-call batch bitwise, and `charge` must land
+    /// the counters exactly where the accounting-carrying calls would.
+    #[test]
+    fn pure_range_solves_match_batch_and_charge() {
+        let mut rng = Rng::seed_from(26);
+        let d = 5;
+        let rows = rand_items(&mut rng, 6, d);
+        let cands = rand_items(&mut rng, 10, d);
+        let mut whole = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 0.9, A));
+        let mut ranged = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 0.9, A));
+        for i in 0..6 {
+            whole.accept(&rows[i * d..(i + 1) * d]);
+            ranged.accept(&rows[i * d..(i + 1) * d]);
+        }
+        let mut batch = Vec::new();
+        whole.peek_gain_batch(&cands, 10, &mut batch);
+        // Three uneven ranges, each with its own scratch — the task shape
+        // the exec pool fans out.
+        let mut out = vec![0.0f64; 10];
+        for (from, to) in [(0usize, 3usize), (3, 7), (7, 10)] {
+            let mut scratch = SolveScratch::default();
+            ranged.solve_batch_range(
+                &cands[from * d..to * d],
+                to - from,
+                &mut scratch,
+                &mut out[from..to],
+            );
+        }
+        for (i, (&r, &b)) in out.iter().zip(&batch).enumerate() {
+            assert_eq!(r.to_bits(), b.to_bits(), "range item {i}: {r} vs {b}");
+        }
+        // The pure solves did no accounting; one charge per run restores
+        // exactly the batch call's totals.
+        let n = ranged.len() as u64;
+        ranged.charge(10, 10 * n);
+        assert_eq!(ranged.queries(), whole.queries());
+        assert_eq!(ranged.kernel_evals(), whole.kernel_evals());
+        // Gather-fed ranges against a chunk panel, same contract.
+        let mut shared = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 0.9, A));
+        shared.attach_row_store(SharedRowStore::new(d));
+        for i in 0..6 {
+            shared.accept(&rows[i * d..(i + 1) * d]);
+        }
+        let ids: Vec<u32> = shared.summary_row_ids().to_vec();
+        let panel = shared.build_chunk_panel(
+            &ids,
+            &cands,
+            &ExecContext::sequential(),
+            &mut PanelScratch::default(),
+        );
+        let slots: Vec<u32> = ids.iter().map(|&id| panel.slot(id).unwrap()).collect();
+        let mut gathered = vec![0.0f64; 10];
+        for (from, to) in [(0usize, 4usize), (4, 10)] {
+            let mut scratch = SolveScratch::default();
+            shared.solve_gathered_range(
+                to - from,
+                &mut |t, kv| {
+                    for (i, &s) in slots.iter().enumerate() {
+                        kv[i] = panel.at(s, from + t);
+                    }
+                },
+                &mut scratch,
+                &mut gathered[from..to],
+            );
+        }
+        for (i, (&g, &b)) in gathered.iter().zip(&batch).enumerate() {
+            assert_eq!(g.to_bits(), b.to_bits(), "gathered range item {i}: {g} vs {b}");
+        }
+    }
+
+    /// PanelScratch recycling must be invisible: a panel built from a
+    /// recycled (dirtied, differently sized) scratch equals a fresh one.
+    #[test]
+    fn recycled_panel_scratch_builds_identical_panels() {
+        let mut rng = Rng::seed_from(27);
+        let d = 4;
+        let rows = rand_items(&mut rng, 5, d);
+        let chunk_a = rand_items(&mut rng, 11, d);
+        let chunk_b = rand_items(&mut rng, 6, d); // narrower: data shrinks
+        let mut f = NativeLogDet::new(LogDetConfig::with_gamma(d, 8, 1.0, A));
+        f.attach_row_store(SharedRowStore::new(d));
+        for i in 0..5 {
+            f.accept(&rows[i * d..(i + 1) * d]);
+        }
+        let ids: Vec<u32> = f.summary_row_ids().to_vec();
+        let exec = ExecContext::sequential();
+        let mut scratch = PanelScratch::default();
+        let first = f.build_chunk_panel(&ids, &chunk_a, &exec, &mut scratch);
+        scratch.recycle(first);
+        for chunk in [&chunk_a, &chunk_b] {
+            let recycled = f.build_chunk_panel(&ids, chunk, &exec, &mut scratch);
+            let fresh = f.build_chunk_panel(&ids, chunk, &exec, &mut PanelScratch::default());
+            assert_eq!(recycled.width(), fresh.width());
+            assert_eq!(recycled.rows(), fresh.rows());
+            assert_eq!(recycled.evals(), fresh.evals());
+            for &id in &ids {
+                let (rs, fs) = (recycled.slot(id).unwrap(), fresh.slot(id).unwrap());
+                assert_eq!(rs, fs, "slot assignment must be deterministic");
+                for b in 0..recycled.width() {
+                    assert_eq!(
+                        recycled.at(rs, b).to_bits(),
+                        fresh.at(fs, b).to_bits(),
+                        "recycled panel entry ({id},{b}) diverges"
+                    );
+                }
+            }
+            scratch.recycle(recycled);
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod panel;
 pub use coverage::ConcaveCoverage;
 pub use facility::FacilityLocation;
 pub use logdet::{LogDetConfig, NativeLogDet};
-pub use panel::{ChunkPanel, PanelSharing, RowStore, SharedRowStore};
+pub use panel::{ChunkPanel, PanelScratch, PanelSharing, RowStore, SharedRowStore, SolveScratch};
 
 /// Stateful oracle for a non-negative monotone submodular function.
 ///
@@ -111,6 +111,17 @@ pub trait SubmodularFunction {
     /// evaluation from its solve state. Default `None`: algorithms fall
     /// back to per-sieve panels.
     fn panel_sharing(&mut self) -> Option<&mut dyn panel::PanelSharing> {
+        None
+    }
+
+    /// Shared-borrow view of the same capability, used by the 2-D
+    /// (unit × candidate-range) solve grid: the pure range solves
+    /// ([`panel::PanelSharing::solve_gathered_range`] /
+    /// [`panel::PanelSharing::solve_batch_range`]) take `&self`, so the
+    /// exec pool can run disjoint candidate ranges of one unit
+    /// concurrently. Must return `Some` exactly when
+    /// [`panel_sharing`](Self::panel_sharing) does.
+    fn panel_sharing_ref(&self) -> Option<&dyn panel::PanelSharing> {
         None
     }
 

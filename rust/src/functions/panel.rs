@@ -25,6 +25,14 @@
 //!   summaries, objective values and query accounting are unchanged
 //!   (`rust/tests/panel_sharing_parity.rs` pins this).
 //!
+//! Since the blocked multi-RHS solve pass (§Perf iteration 7 in
+//! `logdet.rs`), the capability also exposes *pure* range solves
+//! ([`PanelSharing::solve_gathered_range`] /
+//! [`PanelSharing::solve_batch_range`] over caller-owned
+//! [`SolveScratch`]) so the algorithms can fan one unit's solve work out
+//! as a 2-D (unit × candidate-range) task grid on the exec pool, with
+//! the run's accounting recorded once via [`PanelSharing::charge`].
+//!
 //! Interning happens at `accept` time, under a mutex — accepts are rare
 //! (at most K per sieve over the whole stream), so the lock never sits on
 //! the per-candidate hot path. Panel reads take the lock once per chunk,
@@ -122,6 +130,92 @@ fn fnv1a_row(row: &[f32]) -> u64 {
 #[inline]
 fn bits_equal(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Owned scratch for one blocked multi-RHS solve task: the gathered (or
+/// freshly computed) `count × n` kv panel, the matching slot-major z
+/// panel, and the per-candidate `‖z‖²` accumulators.
+///
+/// The oracle's pure range solves
+/// ([`PanelSharing::solve_gathered_range`] /
+/// [`PanelSharing::solve_batch_range`]) take `&self` so disjoint
+/// candidate ranges of one unit can run on different worker threads; all
+/// mutable state lives here, owned by the caller and reused across
+/// chunks, so the 2-D solve grid stays allocation-free once warm.
+#[derive(Default)]
+pub struct SolveScratch {
+    /// Candidate-major kv panel (`kv[b·n + i] = a-unscaled k(x_b, s_i)`).
+    pub(crate) kv: Vec<f64>,
+    /// Candidate-major z panel — each candidate's z-column contiguous, so
+    /// the blocked solve's inner dot runs over the exact operands the
+    /// scalar forward substitution reads.
+    pub(crate) z: Vec<f64>,
+    /// Per-candidate `‖z‖²`.
+    pub(crate) norm2: Vec<f64>,
+}
+
+impl SolveScratch {
+    /// Grow every buffer to cover `count` candidates against an `n`-row
+    /// factor (never shrinks — the buffers amortize across chunks).
+    pub(crate) fn ensure(&mut self, count: usize, n: usize) {
+        if self.kv.len() < count * n {
+            self.kv.resize(count * n, 0.0);
+        }
+        self.ensure_z(count, n);
+    }
+
+    /// [`ensure`](Self::ensure) minus the kv panel, for callers that
+    /// bring their own kv buffer (`peek_gain_batch` solves straight from
+    /// its kernel-panel scratch).
+    pub(crate) fn ensure_z(&mut self, count: usize, n: usize) {
+        if self.z.len() < count * n {
+            self.z.resize(count * n, 0.0);
+        }
+        if self.norm2.len() < count {
+            self.norm2.resize(count, 0.0);
+        }
+    }
+}
+
+/// Recyclable storage for the broker's chunk panels (the ROADMAP
+/// `PanelScratch` item): the algorithm hands each spent [`ChunkPanel`]
+/// back after the chunk, and the next
+/// [`PanelSharing::build_chunk_panel`] reuses its slot map and entry
+/// buffer (plus the candidate-norm buffer kept here) instead of
+/// allocating fresh — the broker path is then allocation-free per chunk
+/// like the per-sieve path, modulo the pool's tiny per-range task list.
+#[derive(Default)]
+pub struct PanelScratch {
+    /// Spent panel from the previous chunk (slot map + entry buffer keep
+    /// their capacity across the handoff).
+    retired: Option<ChunkPanel>,
+    /// `‖x‖²` per chunk candidate, shared by every panel row.
+    pub(crate) xsq: Vec<f64>,
+}
+
+impl PanelScratch {
+    /// Hand a spent panel back for the next chunk's build to reuse.
+    pub fn recycle(&mut self, panel: ChunkPanel) {
+        self.retired = Some(panel);
+    }
+
+    /// The recycled panel (or an empty one), with its slot map cleared
+    /// and width/evals reset for the new chunk.
+    pub(crate) fn fresh(&mut self, width: usize) -> ChunkPanel {
+        let mut panel = self.retired.take().unwrap_or_else(|| ChunkPanel {
+            slots: HashMap::new(),
+            data: Vec::new(),
+            width: 0,
+            evals: 0,
+        });
+        panel.slots.clear();
+        // `data` is deliberately NOT cleared: the builder resizes it to
+        // the new panel's extent and overwrites every entry, so zeroing
+        // here would be a wasted O(U·B) pass.
+        panel.width = width;
+        panel.evals = 0;
+        panel
+    }
 }
 
 /// A shareable handle to a [`RowStore`]. Cloning shares the same store;
@@ -236,7 +330,16 @@ pub trait PanelSharing {
     /// Build the chunk panel for `ids` (all interned in the attached
     /// store) against `chunk`, fanned out by row-range on `exec`'s pool.
     /// Entries must be bitwise identical to the scalar kernel row.
-    fn build_chunk_panel(&self, ids: &[u32], chunk: &[f32], exec: &ExecContext) -> ChunkPanel;
+    /// `scratch` recycles the previous chunk's panel storage (see
+    /// [`PanelScratch`]); algorithms hand the spent panel back through
+    /// [`PanelScratch::recycle`] after the chunk.
+    fn build_chunk_panel(
+        &self,
+        ids: &[u32],
+        chunk: &[f32],
+        exec: &ExecContext,
+        scratch: &mut PanelScratch,
+    ) -> ChunkPanel;
 
     /// Scalar-exact kernel row for a mid-chunk accepted summary row:
     /// `out[b] = k(chunk[b], row)` for `b ∈ from..B` (`out[..from]` is
@@ -255,6 +358,48 @@ pub trait PanelSharing {
         fill: &mut dyn FnMut(usize, &mut [f64]),
         out: &mut Vec<f64>,
     );
+
+    /// Pure gather-fed blocked solve over one candidate range of the 2-D
+    /// (unit × candidate-range) solve grid: gains for `count` candidates
+    /// whose kv rows `fill` supplies, written into `out[..count]` using
+    /// caller-owned `scratch`. Takes `&self` and performs **no**
+    /// query/kernel-eval accounting, so disjoint ranges of one unit can
+    /// run concurrently on worker threads; the coordinator records the
+    /// run's accounting once through [`charge`](Self::charge). Gains must
+    /// be bitwise identical to
+    /// [`peek_gain_batch_gathered`](Self::peek_gain_batch_gathered) over
+    /// the same candidates.
+    fn solve_gathered_range(
+        &self,
+        count: usize,
+        fill: &mut dyn FnMut(usize, &mut [f64]),
+        scratch: &mut SolveScratch,
+        out: &mut [f64],
+    );
+
+    /// Pure kernel-fed twin of
+    /// [`solve_gathered_range`](Self::solve_gathered_range) for units
+    /// without a shared panel (ShardedThreeSieves shards): computes the
+    /// range's kernel rows itself — `count` candidates row-major in
+    /// `items` — then runs the same blocked solve. The coordinator
+    /// charges `count` queries and `count × len()` kernel evals per run
+    /// through [`charge`](Self::charge), matching
+    /// [`peek_gain_batch`](crate::functions::SubmodularFunction::peek_gain_batch)
+    /// exactly.
+    fn solve_batch_range(
+        &self,
+        items: &[f32],
+        count: usize,
+        scratch: &mut SolveScratch,
+        out: &mut [f64],
+    );
+
+    /// Record `queries` gain queries and `kernel_evals` kernel-entry
+    /// evaluations performed on this oracle's behalf by the pure range
+    /// solves above (which do no accounting themselves so they can take
+    /// `&self`). Totals must end up exactly where the accounting-carrying
+    /// batch calls would have left them.
+    fn charge(&mut self, queries: u64, kernel_evals: u64);
 }
 
 #[cfg(test)]

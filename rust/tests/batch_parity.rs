@@ -34,6 +34,15 @@ fn oracle(k: usize) -> Box<dyn SubmodularFunction> {
     Box::new(NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0)))
 }
 
+/// Same oracle with the §Perf-iteration-7 blocked multi-RHS solve
+/// disabled — the per-candidate forward-solve baseline. `clone_empty`
+/// propagates the toggle into every sieve an algorithm spawns.
+fn percand_oracle(k: usize) -> Box<dyn SubmodularFunction> {
+    let mut f = NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0));
+    f.set_blocked_solve(false);
+    Box::new(f)
+}
+
 /// Drive `algo` over `ds` per item and `twin` over the same rows in
 /// `chunk`-item blocks, then assert both ended in the same state.
 fn assert_parity(
@@ -217,6 +226,54 @@ fn sharded_three_sieves_batch_parity() {
         let mut a = ShardedThreeSieves::new(oracle(k), k, 0.05, SieveTuning::FixedT(20), 3);
         let mut b = ShardedThreeSieves::new(oracle(k), k, 0.05, SieveTuning::FixedT(20), 3);
         assert_parity(&mut a, &mut b, &ds, chunk);
+    }
+}
+
+/// §Perf iteration 7: the blocked multi-RHS solve must be bitwise
+/// invisible across every batch-capable algorithm — summaries, objective
+/// values, queries AND kernel_evals (the solve touches no kernel
+/// entries, so the measured counter must not move either). Each
+/// algorithm runs once on the default blocked oracle and once on the
+/// per-candidate baseline, over the same chunked stream.
+#[test]
+fn blocked_solve_matches_per_candidate_across_algorithms() {
+    let ds = stream(1500, 19);
+    let k = 6;
+    let n = ds.len();
+    type Build<'a> = &'a dyn Fn(Box<dyn SubmodularFunction>) -> Box<dyn StreamingAlgorithm>;
+    let three = |o: Box<dyn SubmodularFunction>| -> Box<dyn StreamingAlgorithm> {
+        Box::new(ThreeSieves::new(o, k, 0.05, SieveTuning::FixedT(25)))
+    };
+    let sharded = |o: Box<dyn SubmodularFunction>| -> Box<dyn StreamingAlgorithm> {
+        Box::new(ShardedThreeSieves::new(o, k, 0.05, SieveTuning::FixedT(20), 3))
+    };
+    let ss = |o: Box<dyn SubmodularFunction>| -> Box<dyn StreamingAlgorithm> {
+        Box::new(SieveStreaming::new(o, k, 0.1))
+    };
+    let pp = |o: Box<dyn SubmodularFunction>| -> Box<dyn StreamingAlgorithm> {
+        Box::new(SieveStreamingPP::new(o, k, 0.1))
+    };
+    let salsa = |o: Box<dyn SubmodularFunction>| -> Box<dyn StreamingAlgorithm> {
+        Box::new(Salsa::new(o, k, 0.2, Some(n)))
+    };
+    let builds: [(&str, Build<'_>); 5] = [
+        ("ThreeSieves", &three),
+        ("ShardedThreeSieves", &sharded),
+        ("SieveStreaming", &ss),
+        ("SieveStreaming++", &pp),
+        ("Salsa", &salsa),
+    ];
+    for (name, build) in builds {
+        let mut blocked = build(oracle(k));
+        let mut percand = build(percand_oracle(k));
+        for block in ds.raw().chunks(37 * DIM) {
+            blocked.process_batch(block);
+            percand.process_batch(block);
+        }
+        assert_eq!(blocked.value().to_bits(), percand.value().to_bits(), "{name}: value bits");
+        assert_eq!(blocked.summary(), percand.summary(), "{name}: summary rows");
+        assert_eq!(blocked.stats(), percand.stats(), "{name}: stats (incl. kernel_evals)");
+        assert!(blocked.stats().queries > 0, "{name}: workload must exercise the oracle");
     }
 }
 

@@ -39,6 +39,14 @@ fn oracle(k: usize) -> Box<dyn SubmodularFunction> {
     Box::new(NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0)))
 }
 
+/// The per-candidate forward-solve baseline (§Perf iteration 7 toggle);
+/// `clone_empty` propagates the flag into every sieve.
+fn percand_oracle(k: usize) -> Box<dyn SubmodularFunction> {
+    let mut f = NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0));
+    f.set_blocked_solve(false);
+    Box::new(f)
+}
+
 /// Drive `algo` over `ds` in `CHUNK`-row blocks under `par`.
 fn run_batched(
     mut algo: Box<dyn StreamingAlgorithm>,
@@ -152,6 +160,84 @@ fn salsa_panel_sharing_parity() {
         Box::new(a)
     };
     assert_panel_sharing_parity(&shared, &per_sieve, &ds);
+}
+
+/// §Perf iteration 7 acceptance: scalar vs blocked vs per-candidate
+/// solves under the broker must agree on values, summaries, queries AND
+/// kernel_evals at `--threads off`, 2 and 8. The coarse ε keeps the live
+/// sieve count below `2 × threads` at 8 threads, so the 2-D
+/// (sieve × candidate-range) solve grid engages there while `off`/2 run
+/// the unit-serial paths — every combination must be bit-identical.
+#[test]
+fn blocked_solve_grid_parity_across_threads() {
+    let ds = stream(1500, 47);
+    let k = 6;
+    let n = ds.len();
+    type Build<'a> = &'a dyn Fn(Box<dyn SubmodularFunction>) -> Box<dyn StreamingAlgorithm>;
+    let ss = |o: Box<dyn SubmodularFunction>| -> Box<dyn StreamingAlgorithm> {
+        Box::new(SieveStreaming::new(o, k, 0.3))
+    };
+    let pp = |o: Box<dyn SubmodularFunction>| -> Box<dyn StreamingAlgorithm> {
+        Box::new(SieveStreamingPP::new(o, k, 0.3))
+    };
+    let salsa = |o: Box<dyn SubmodularFunction>| -> Box<dyn StreamingAlgorithm> {
+        Box::new(Salsa::new(o, k, 0.8, Some(n)))
+    };
+    let builds: [(&str, Build<'_>); 3] =
+        [("SieveStreaming", &ss), ("SieveStreaming++", &pp), ("Salsa", &salsa)];
+    for (name, build) in builds {
+        let scalar = run_scalar(build(oracle(k)), &ds);
+        let blocked_off = run_batched(build(oracle(k)), &ds, Parallelism::Off);
+        assert_same_semantics(&format!("{name} blocked vs scalar"), &blocked_off, &scalar);
+        for par in [Parallelism::Off, Parallelism::Threads(2), Parallelism::Threads(8)] {
+            let blocked = run_batched(build(oracle(k)), &ds, par);
+            let percand = run_batched(build(percand_oracle(k)), &ds, par);
+            let label = format!("{name} threads={par}");
+            assert_eq!(blocked_off.0, blocked.0, "{label}: value bits");
+            assert_eq!(blocked_off.1, blocked.1, "{label}: summary rows");
+            assert_eq!(blocked_off.2, blocked.2, "{label}: stats (incl. kernel_evals)");
+            assert_eq!(blocked.0, percand.0, "{label}: per-candidate value bits");
+            assert_eq!(blocked.1, percand.1, "{label}: per-candidate summary rows");
+            assert_eq!(blocked.2, percand.2, "{label}: per-candidate stats");
+        }
+    }
+}
+
+/// Checkpoint → restore → continue with the blocked solves active and
+/// the 2-D solve grid engaged (8 threads over a coarse sieve set): the
+/// resumed run must be bit-identical to the run that never paused.
+#[test]
+fn checkpoint_resume_roundtrip_under_blocked_solve_grid() {
+    let ds = stream(1600, 48);
+    let k = 6;
+    let build = || SieveStreaming::new(oracle(k), k, 0.3);
+    let half = ds.len() / 2 * DIM;
+    let exec = ExecContext::new(Parallelism::Threads(8));
+
+    let mut whole = build();
+    let mut first = build();
+    whole.set_exec(exec.clone());
+    first.set_exec(exec.clone());
+    for block in ds.raw()[..half].chunks(CHUNK * DIM) {
+        whole.process_batch(block);
+        first.process_batch(block);
+    }
+    let state = first.snapshot_state().expect("SieveStreaming snapshots under the grid");
+    let parsed = threesieves::util::json::Json::parse(&state.to_string()).unwrap();
+    let summary = first.summary();
+
+    let mut resumed = build();
+    resumed.restore_state(&parsed, &summary).unwrap();
+    resumed.set_exec(exec.clone());
+    assert_eq!(resumed.value().to_bits(), first.value().to_bits());
+    assert_eq!(resumed.stats(), first.stats());
+    for block in ds.raw()[half..].chunks(CHUNK * DIM) {
+        whole.process_batch(block);
+        resumed.process_batch(block);
+    }
+    assert_eq!(resumed.value().to_bits(), whole.value().to_bits());
+    assert_eq!(resumed.summary(), whole.summary());
+    assert_eq!(resumed.stats(), whole.stats(), "stats must survive the pause under the grid");
 }
 
 /// The acceptance working point: a dense multi-sieve grid (ε = 0.01) is
