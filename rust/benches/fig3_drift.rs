@@ -38,11 +38,15 @@ fn main() {
                     None => "-".into(),
                 };
                 println!(
-                    "  K={k:<4} 3S(5000)={} 3S(500)={} SS={} SS++={} ISI={} RND={}",
+                    "  K={k:<4} 3S(5000)={} 3S(500)={} SS={} SS++={} CLP={} SUB(SS)={} \
+                     SUB(3S,500)={} ISI={} RND={}",
                     fmt(pick("ThreeSieves(T=5000)")),
                     fmt(pick("ThreeSieves(T=500)")),
                     fmt(pick("SieveStreaming")),
                     fmt(pick("SieveStreaming++")),
+                    fmt(pick("StreamClipper")),
+                    fmt(pick("Subsampled(p=0.5)+SieveStreaming")),
+                    fmt(pick("Subsampled(p=0.5)+ThreeSieves(T=500)")),
                     fmt(pick("IndependentSetImprovement")),
                     fmt(pick("Random")),
                 );

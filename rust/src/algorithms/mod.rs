@@ -19,16 +19,26 @@
 //! | [`Salsa`] | ½−ε | O(K log K / ε) | O(log K / ε) |
 //! | [`QuickStream`] | 1/(4c)−ε | O(cK log K log 1/ε) | O(⌈1/c⌉+c) |
 //! | [`ThreeSieves`] | (1−ε)(1−1/e) w.p. (1−α)^K | O(K) | O(1) |
+//! | [`StreamClipper`] | ½ (buffered) | O(K) + 2K buffer | O(1) |
+//! | [`Subsampled`] | inner's, on the sampled stream | inner's | p × inner's |
+//!
+//! Construction and dispatch are table-driven: [`registry`] holds one
+//! [`registry::AlgoEntry`] per algorithm (name, parameters, docs, build
+//! function), and config parsing, the CLI, the service OPEN grammar and
+//! the experiment sweeps all route through it.
 
 pub mod greedy;
 pub mod independent_set;
 pub mod preemption;
 pub mod quick_stream;
 pub mod random;
+pub mod registry;
 pub mod salsa;
 pub mod sieve_streaming;
 pub mod sieve_streaming_pp;
+pub mod stream_clipper;
 pub mod stream_greedy;
+pub mod subsampled;
 pub mod three_sieves;
 
 pub use greedy::Greedy;
@@ -39,7 +49,9 @@ pub use random::RandomReservoir;
 pub use salsa::Salsa;
 pub use sieve_streaming::SieveStreaming;
 pub use sieve_streaming_pp::SieveStreamingPP;
+pub use stream_clipper::StreamClipper;
 pub use stream_greedy::StreamGreedy;
+pub use subsampled::Subsampled;
 pub use three_sieves::ThreeSieves;
 
 use crate::exec::ExecContext;

@@ -1,0 +1,1037 @@
+//! The single algorithm registry: one table describing every algorithm the
+//! crate knows — canonical name, aliases, typed parameter definitions
+//! (shared by JSON configs, CLI flags and the service wire protocol),
+//! sweep metadata, doc strings and a build function.
+//!
+//! Everything that used to be an `AlgoSpec` enum match scattered across
+//! config parsing, the experiment runner, the CLI, the service protocol
+//! and the figures is routed through [`ENTRIES`]. Registering a future
+//! algorithm means adding one [`AlgoEntry`] (plus its implementation
+//! module) — the config parser, `--algo` flag set, OPEN grammar, sweep
+//! expansion and README table all pick it up from here. The name-set
+//! equality tests in `tests/registry_field.rs` and the protocol module
+//! enforce that invariant.
+
+use crate::functions::SubmodularFunction;
+use crate::util::json::Json;
+
+use super::three_sieves::SieveTuning;
+use super::{
+    Greedy, IndependentSetImprovement, PreemptionStreaming, QuickStream, RandomReservoir, Salsa,
+    SieveStreaming, SieveStreamingPP, StreamClipper, StreamGreedy, StreamingAlgorithm, Subsampled,
+    ThreeSieves,
+};
+
+/// Wire/JSON/CLI type of a parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    F64,
+    UInt,
+    Bool,
+}
+
+impl ParamKind {
+    fn label(self) -> &'static str {
+        match self {
+            ParamKind::F64 => "number",
+            ParamKind::UInt => "non-negative integer",
+            ParamKind::Bool => "boolean",
+        }
+    }
+}
+
+/// A typed parameter value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamValue {
+    F64(f64),
+    UInt(u64),
+    Bool(bool),
+}
+
+impl ParamValue {
+    pub fn kind(&self) -> ParamKind {
+        match self {
+            ParamValue::F64(_) => ParamKind::F64,
+            ParamValue::UInt(_) => ParamKind::UInt,
+            ParamValue::Bool(_) => ParamKind::Bool,
+        }
+    }
+}
+
+/// One parameter an algorithm accepts: its JSON/wire key, optional CLI
+/// flag spelling, type, default, and an optional wire pin.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamDef {
+    /// JSON config key and service-OPEN key.
+    pub key: &'static str,
+    /// CLI flag name (`--<flag> <value>`); `None` keeps the parameter off
+    /// the command line.
+    pub flag: Option<&'static str>,
+    pub kind: ParamKind,
+    pub default: ParamValue,
+    /// `Some(v)` pins the parameter to `v` on the service wire: OPEN does
+    /// not accept the key and the spec serializer omits it. Used for
+    /// knobs that are meaningless in a service context (Salsa's stream
+    /// length hint — sessions are unbounded streams).
+    pub wire_pin: Option<ParamValue>,
+    pub help: &'static str,
+}
+
+/// Config-grid dimensions `experiments::custom` sweeps for an entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sweep {
+    Epsilon,
+    T,
+}
+
+/// Construct the algorithm behind a spec. `stream_len` is the length hint
+/// for Salsa's position-adaptive rule (`None` disables it).
+pub type BuildFn = fn(
+    &AlgoSpec,
+    Box<dyn SubmodularFunction>,
+    usize,
+    Option<usize>,
+) -> Box<dyn StreamingAlgorithm>;
+
+/// One registered algorithm — the single place a new algorithm is added.
+pub struct AlgoEntry {
+    /// Canonical name: config `"algo"` value, CLI `--algo` value, and the
+    /// service OPEN `algo=` token.
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// Offline/multi-pass reference — refused by the streaming service.
+    pub offline: bool,
+    pub params: &'static [ParamDef],
+    /// `(label, key)` suffixes appended to [`AlgoSpec::id`], e.g.
+    /// `("t", "t")` turning `three-sieves` into `three-sieves-t500`.
+    id_params: &'static [(&'static str, &'static str)],
+    pub sweeps: &'static [Sweep],
+    /// Docs: approximation guarantee (README table column).
+    pub guarantee: &'static str,
+    /// Docs: memory bound (README table column).
+    pub memory: &'static str,
+    /// Docs: oracle queries per element (README table column).
+    pub queries: &'static str,
+    pub build: BuildFn,
+}
+
+const P_EPSILON: ParamDef = ParamDef {
+    key: "epsilon",
+    flag: Some("epsilon"),
+    kind: ParamKind::F64,
+    default: ParamValue::F64(0.001),
+    wire_pin: None,
+    help: "threshold-grid resolution ε",
+};
+
+const P_SEED: ParamDef = ParamDef {
+    key: "seed",
+    flag: Some("seed"),
+    kind: ParamKind::UInt,
+    default: ParamValue::UInt(42),
+    wire_pin: None,
+    help: "PRNG seed",
+};
+
+const P_NU: ParamDef = ParamDef {
+    key: "nu",
+    flag: Some("nu"),
+    kind: ParamKind::F64,
+    default: ParamValue::F64(1e-4),
+    wire_pin: None,
+    help: "multi-pass threshold decay ν",
+};
+
+const P_T: ParamDef = ParamDef {
+    key: "t",
+    flag: Some("t"),
+    kind: ParamKind::UInt,
+    default: ParamValue::UInt(1000),
+    wire_pin: None,
+    help: "ThreeSieves confidence window T",
+};
+
+const P_SHARDS: ParamDef = ParamDef {
+    key: "shards",
+    flag: Some("shards"),
+    kind: ParamKind::UInt,
+    default: ParamValue::UInt(4),
+    wire_pin: None,
+    help: "parallel threshold-partition shards",
+};
+
+const P_C: ParamDef = ParamDef {
+    key: "c",
+    flag: Some("c"),
+    kind: ParamKind::UInt,
+    default: ParamValue::UInt(2),
+    wire_pin: None,
+    help: "QuickStream buffer factor c",
+};
+
+const P_USE_LENGTH_HINT: ParamDef = ParamDef {
+    key: "use_length_hint",
+    flag: None,
+    kind: ParamKind::Bool,
+    default: ParamValue::Bool(true),
+    // Service sessions are unbounded streams: no length hint exists, so
+    // the wire pins the knob off rather than accepting a lie.
+    wire_pin: Some(ParamValue::Bool(false)),
+    help: "enable Salsa's position-adaptive rule (needs the stream length)",
+};
+
+const P_CLIPPER_ALPHA: ParamDef = ParamDef {
+    key: "clipper_alpha",
+    flag: Some("clipper-alpha"),
+    kind: ParamKind::F64,
+    default: ParamValue::F64(1.0),
+    wire_pin: None,
+    help: "accept multiplier: take an element when gain ≥ α·τ",
+};
+
+const P_CLIPPER_BETA: ParamDef = ParamDef {
+    key: "clipper_beta",
+    flag: Some("clipper-beta"),
+    kind: ParamKind::F64,
+    default: ParamValue::F64(0.5),
+    wire_pin: None,
+    help: "defer multiplier: buffer an element when β·τ ≤ gain < α·τ",
+};
+
+const P_SUBSAMPLE_P: ParamDef = ParamDef {
+    key: "subsample_p",
+    flag: Some("subsample-p"),
+    kind: ParamKind::F64,
+    default: ParamValue::F64(0.5),
+    wire_pin: None,
+    help: "probability of offering each element to the inner algorithm",
+};
+
+static ENTRIES: &[AlgoEntry] = &[
+    AlgoEntry {
+        name: "greedy",
+        aliases: &[],
+        offline: true,
+        params: &[],
+        id_params: &[],
+        sweeps: &[],
+        guarantee: "1 − 1/e (offline)",
+        memory: "O(K)",
+        queries: "O(1)",
+        build: |_, oracle, k, _| Box::new(Greedy::new(oracle, k)),
+    },
+    AlgoEntry {
+        name: "random",
+        aliases: &[],
+        offline: false,
+        params: &[P_SEED],
+        id_params: &[],
+        sweeps: &[],
+        guarantee: "¼ (expect.)",
+        memory: "O(K)",
+        queries: "O(1)",
+        build: |s, oracle, k, _| Box::new(RandomReservoir::new(oracle, k, s.uint("seed"))),
+    },
+    AlgoEntry {
+        name: "stream-greedy",
+        aliases: &[],
+        offline: false,
+        params: &[P_NU],
+        id_params: &[],
+        sweeps: &[],
+        guarantee: "½ − ε (multi-pass)",
+        memory: "O(K)",
+        queries: "O(K)",
+        build: |s, oracle, k, _| Box::new(StreamGreedy::new(oracle, k, s.num("nu"))),
+    },
+    AlgoEntry {
+        name: "preemption",
+        aliases: &[],
+        offline: false,
+        params: &[],
+        id_params: &[],
+        sweeps: &[],
+        guarantee: "¼",
+        memory: "O(K)",
+        queries: "O(K)",
+        build: |_, oracle, k, _| Box::new(PreemptionStreaming::new(oracle, k)),
+    },
+    AlgoEntry {
+        name: "isi",
+        aliases: &["independent-set-improvement"],
+        offline: false,
+        params: &[],
+        id_params: &[],
+        sweeps: &[],
+        guarantee: "¼",
+        memory: "O(K)",
+        queries: "O(1)",
+        build: |_, oracle, k, _| Box::new(IndependentSetImprovement::new(oracle, k)),
+    },
+    AlgoEntry {
+        name: "sieve-streaming",
+        aliases: &[],
+        offline: false,
+        params: &[P_EPSILON],
+        id_params: &[],
+        sweeps: &[Sweep::Epsilon],
+        guarantee: "½ − ε",
+        memory: "O(K log K / ε)",
+        queries: "O(log K / ε)",
+        build: |s, oracle, k, _| Box::new(SieveStreaming::new(oracle, k, s.num("epsilon"))),
+    },
+    AlgoEntry {
+        name: "sieve-streaming-pp",
+        aliases: &[],
+        offline: false,
+        params: &[P_EPSILON],
+        id_params: &[],
+        sweeps: &[Sweep::Epsilon],
+        guarantee: "½ − ε",
+        memory: "O(K/ε)",
+        queries: "O(log K / ε)",
+        build: |s, oracle, k, _| Box::new(SieveStreamingPP::new(oracle, k, s.num("epsilon"))),
+    },
+    AlgoEntry {
+        name: "salsa",
+        aliases: &[],
+        offline: false,
+        params: &[P_EPSILON, P_USE_LENGTH_HINT],
+        id_params: &[],
+        sweeps: &[Sweep::Epsilon],
+        guarantee: "½ − ε",
+        memory: "O(K log K / ε)",
+        queries: "O(log K / ε)",
+        build: |s, oracle, k, len| {
+            let hint = if s.flag("use_length_hint") { len } else { None };
+            Box::new(Salsa::new(oracle, k, s.num("epsilon"), hint))
+        },
+    },
+    AlgoEntry {
+        name: "quickstream",
+        aliases: &[],
+        offline: false,
+        params: &[P_C, P_EPSILON, P_SEED],
+        id_params: &[("c", "c")],
+        sweeps: &[],
+        guarantee: "1/(4c) − ε",
+        memory: "O(cK log K · log 1/ε)",
+        queries: "O(⌈1/c⌉ + c)",
+        build: |s, oracle, k, _| {
+            Box::new(QuickStream::new(
+                oracle,
+                k,
+                s.uint("c") as usize,
+                s.num("epsilon"),
+                s.uint("seed"),
+            ))
+        },
+    },
+    AlgoEntry {
+        name: "three-sieves",
+        aliases: &[],
+        offline: false,
+        params: &[P_EPSILON, P_T],
+        id_params: &[("t", "t")],
+        sweeps: &[Sweep::Epsilon, Sweep::T],
+        guarantee: "(1−ε)(1−1/e) w.p. (1−α)^K",
+        memory: "O(K)",
+        queries: "O(1)",
+        build: |s, oracle, k, _| {
+            Box::new(ThreeSieves::new(
+                oracle,
+                k,
+                s.num("epsilon"),
+                SieveTuning::FixedT(s.uint("t") as usize),
+            ))
+        },
+    },
+    AlgoEntry {
+        name: "sharded-three-sieves",
+        aliases: &[],
+        offline: false,
+        params: &[P_EPSILON, P_T, P_SHARDS],
+        id_params: &[("t", "t"), ("p", "shards")],
+        sweeps: &[Sweep::Epsilon, Sweep::T],
+        guarantee: "(1−ε)(1−1/e) w.p. (1−α)^K",
+        memory: "O(K) per shard",
+        queries: "O(1)",
+        build: |s, oracle, k, _| {
+            Box::new(crate::coordinator::ShardedThreeSieves::new(
+                oracle,
+                k,
+                s.num("epsilon"),
+                SieveTuning::FixedT(s.uint("t") as usize),
+                s.uint("shards").max(1) as usize,
+            ))
+        },
+    },
+    AlgoEntry {
+        name: "stream-clipper",
+        aliases: &["streamclipper"],
+        offline: false,
+        params: &[P_CLIPPER_ALPHA, P_CLIPPER_BETA],
+        id_params: &[],
+        sweeps: &[],
+        guarantee: "½ (buffered)",
+        memory: "O(K) (summary + 2K buffer)",
+        queries: "O(1)",
+        build: |s, oracle, k, _| {
+            Box::new(StreamClipper::new(oracle, k, s.num("clipper_alpha"), s.num("clipper_beta")))
+        },
+    },
+    AlgoEntry {
+        name: "subsampled-sieve-streaming",
+        aliases: &["subsampled"],
+        offline: false,
+        params: &[P_EPSILON, P_SUBSAMPLE_P, P_SEED],
+        id_params: &[],
+        sweeps: &[Sweep::Epsilon],
+        guarantee: "½ − ε on the sampled stream (expect.)",
+        memory: "O(K log K / ε)",
+        queries: "O(p · log K / ε)",
+        build: |s, oracle, k, _| {
+            let inner = Box::new(SieveStreaming::new(oracle, k, s.num("epsilon")));
+            Box::new(Subsampled::new(inner, s.num("subsample_p"), s.uint("seed")))
+        },
+    },
+    AlgoEntry {
+        name: "subsampled-three-sieves",
+        aliases: &[],
+        offline: false,
+        params: &[P_EPSILON, P_T, P_SUBSAMPLE_P, P_SEED],
+        id_params: &[("t", "t")],
+        sweeps: &[Sweep::Epsilon, Sweep::T],
+        guarantee: "(1−ε)(1−1/e) w.p. (1−α)^K on the sampled stream",
+        memory: "O(K)",
+        queries: "O(p)",
+        build: |s, oracle, k, _| {
+            let inner = Box::new(ThreeSieves::new(
+                oracle,
+                k,
+                s.num("epsilon"),
+                SieveTuning::FixedT(s.uint("t") as usize),
+            ));
+            Box::new(Subsampled::new(inner, s.num("subsample_p"), s.uint("seed")))
+        },
+    },
+];
+
+/// Every registered algorithm, in table order.
+pub fn entries() -> &'static [AlgoEntry] {
+    ENTRIES
+}
+
+/// Resolve a name or alias to its entry.
+pub fn lookup(name: &str) -> Option<&'static AlgoEntry> {
+    ENTRIES.iter().find(|e| e.name == name || e.aliases.contains(&name))
+}
+
+/// Canonical names, in table order.
+pub fn names() -> Vec<&'static str> {
+    ENTRIES.iter().map(|e| e.name).collect()
+}
+
+/// Canonical names of streaming (service-admissible) algorithms.
+pub fn streaming_names() -> Vec<&'static str> {
+    ENTRIES.iter().filter(|e| !e.offline).map(|e| e.name).collect()
+}
+
+/// Union of all CLI flag names declared by registered parameters, deduped
+/// in table order. The CLI appends these to its base flag spec.
+pub fn cli_flags() -> Vec<&'static str> {
+    let mut out: Vec<&'static str> = Vec::new();
+    for entry in ENTRIES {
+        for def in entry.params {
+            if let Some(flag) = def.flag {
+                if !out.contains(&flag) {
+                    out.push(flag);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Union of all wire-visible parameter keys (wire pins excluded), deduped
+/// in table order. The service OPEN grammar accepts exactly these plus
+/// `k`, `dim`, `algo` and `drift`.
+pub fn wire_param_keys() -> Vec<&'static str> {
+    let mut out: Vec<&'static str> = Vec::new();
+    for entry in ENTRIES {
+        for def in entry.params {
+            if def.wire_pin.is_none() && !out.contains(&def.key) {
+                out.push(def.key);
+            }
+        }
+    }
+    out
+}
+
+/// Edit distance (insert/delete/substitute) for did-you-mean suggestions.
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest registered name (canonical or alias) within a tolerant edit
+/// distance, for "did you mean" errors.
+pub fn did_you_mean(name: &str) -> Option<&'static str> {
+    ENTRIES
+        .iter()
+        .flat_map(|e| std::iter::once(e.name).chain(e.aliases.iter().copied()))
+        .map(|n| (levenshtein(name, n), n))
+        .min()
+        .filter(|&(d, _)| d <= 2.max(name.len() / 3))
+        .map(|(_, n)| n)
+}
+
+fn unknown_algo_error(name: &str) -> String {
+    let mut msg = format!("unknown algo {name:?}");
+    if let Some(suggestion) = did_you_mean(name) {
+        msg.push_str(&format!("; did you mean {suggestion:?}?"));
+    }
+    msg.push_str(&format!(" (expected one of: {})", names().join(", ")));
+    msg
+}
+
+/// The README "Algorithms" table, generated from the registry so docs
+/// cannot drift from the code (a test pins README.md to this output).
+pub fn markdown_table() -> String {
+    let mut s = String::from(
+        "| Algorithm | Parameters | Guarantee | Memory | Queries/elem |\n\
+         |---|---|---|---|---|\n",
+    );
+    for e in ENTRIES {
+        let params = if e.params.is_empty() {
+            "—".to_string()
+        } else {
+            e.params
+                .iter()
+                .map(|p| format!("`{}`", p.key))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        s.push_str(&format!(
+            "| `{}` | {} | {} | {} | {} |\n",
+            e.name, params, e.guarantee, e.memory, e.queries
+        ));
+    }
+    s
+}
+
+/// An algorithm selection with a fully-populated parameter list (every
+/// registered parameter present, in definition order — equality and ids
+/// are therefore deterministic).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlgoSpec {
+    name: &'static str,
+    params: Vec<(&'static str, ParamValue)>,
+}
+
+impl AlgoSpec {
+    /// Build a spec for `name` (canonical or alias) with `overrides`
+    /// applied over the registered defaults. Rejects unknown names,
+    /// unknown keys and kind mismatches.
+    pub fn of(name: &str, overrides: &[(&str, ParamValue)]) -> Result<AlgoSpec, String> {
+        let entry = lookup(name).ok_or_else(|| unknown_algo_error(name))?;
+        let mut params: Vec<(&'static str, ParamValue)> =
+            entry.params.iter().map(|p| (p.key, p.default.clone())).collect();
+        for (key, value) in overrides {
+            let def = entry
+                .params
+                .iter()
+                .find(|p| p.key == *key)
+                .ok_or_else(|| format!("algo {:?} has no parameter {key:?}", entry.name))?;
+            if value.kind() != def.kind {
+                return Err(format!(
+                    "parameter {key:?} of algo {:?} expects a {}",
+                    entry.name,
+                    def.kind.label()
+                ));
+            }
+            let slot = params.iter_mut().find(|(k, _)| k == key).unwrap();
+            slot.1 = value.clone();
+        }
+        // A zero shard count is a degenerate request, not a deployment:
+        // floor it here so ids and builds agree (matches the pre-registry
+        // parsers, which floored at parse time).
+        if let Some(slot) =
+            params.iter_mut().find(|(k, v)| *k == "shards" && *v == ParamValue::UInt(0))
+        {
+            slot.1 = ParamValue::UInt(1);
+        }
+        Ok(AlgoSpec { name: entry.name, params })
+    }
+
+    /// This spec with `overrides` applied on top (panics on unknown keys —
+    /// callers pass registry-declared keys, e.g. sweep expansion).
+    pub fn with(&self, overrides: &[(&str, ParamValue)]) -> AlgoSpec {
+        let mut spec = self.clone();
+        for (key, value) in overrides {
+            let slot = spec
+                .params
+                .iter_mut()
+                .find(|(k, _)| k == key)
+                .unwrap_or_else(|| panic!("algo {:?} has no parameter {key:?}", spec.name));
+            assert_eq!(slot.1.kind(), value.kind(), "kind mismatch for {key:?}");
+            slot.1 = value.clone();
+        }
+        spec
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn entry(&self) -> &'static AlgoEntry {
+        lookup(self.name).expect("specs are registry-built")
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ParamValue> {
+        self.params.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+
+    /// Iterate `(key, value)` pairs in definition order.
+    pub fn params(&self) -> impl Iterator<Item = (&'static str, &ParamValue)> {
+        self.params.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// F64 parameter (panics if absent — specs are registry-built).
+    pub fn num(&self, key: &str) -> f64 {
+        match self.get(key) {
+            Some(ParamValue::F64(v)) => *v,
+            other => panic!("{:?}: no f64 parameter {key:?} ({other:?})", self.name),
+        }
+    }
+
+    /// UInt parameter (panics if absent — specs are registry-built).
+    pub fn uint(&self, key: &str) -> u64 {
+        match self.get(key) {
+            Some(ParamValue::UInt(v)) => *v,
+            other => panic!("{:?}: no uint parameter {key:?} ({other:?})", self.name),
+        }
+    }
+
+    /// Bool parameter (panics if absent — specs are registry-built).
+    pub fn flag(&self, key: &str) -> bool {
+        match self.get(key) {
+            Some(ParamValue::Bool(v)) => *v,
+            other => panic!("{:?}: no bool parameter {key:?} ({other:?})", self.name),
+        }
+    }
+
+    /// Stable identifier used in CSVs and config files.
+    pub fn id(&self) -> String {
+        let mut id = self.name.to_string();
+        for (label, key) in self.entry().id_params {
+            match self.get(key) {
+                Some(ParamValue::UInt(v)) => id.push_str(&format!("-{label}{v}")),
+                Some(ParamValue::F64(v)) => id.push_str(&format!("-{label}{v}")),
+                Some(ParamValue::Bool(v)) => id.push_str(&format!("-{label}{v}")),
+                None => unreachable!("id_params reference registered keys"),
+            }
+        }
+        id
+    }
+
+    /// Parse a spec from a JSON object (`{"algo": "...", "<param>": ...}`).
+    ///
+    /// Strict on types: a parameter that is present but of the wrong kind
+    /// is rejected with an error naming the field — absent parameters take
+    /// their registered defaults; unrecognized keys are ignored so configs
+    /// may carry annotations.
+    pub fn from_json(j: &Json) -> Result<AlgoSpec, String> {
+        let kind = j.get("algo").as_str().ok_or("missing algo")?;
+        let entry = lookup(kind).ok_or_else(|| unknown_algo_error(kind))?;
+        let mut overrides: Vec<(&str, ParamValue)> = Vec::new();
+        for def in entry.params {
+            let v = j.get(def.key);
+            if matches!(v, Json::Null) {
+                continue;
+            }
+            overrides.push((def.key, parse_json_param(entry.name, def, v)?));
+        }
+        AlgoSpec::of(entry.name, &overrides)
+    }
+
+    /// Parse a spec from CLI flags: `get(flag)` returns the raw value for
+    /// a flag name, or `None` to take the registered default.
+    pub fn from_flags(
+        name: &str,
+        get: &dyn Fn(&str) -> Option<String>,
+    ) -> Result<AlgoSpec, String> {
+        let entry = lookup(name).ok_or_else(|| unknown_algo_error(name))?;
+        let mut overrides: Vec<(&str, ParamValue)> = Vec::new();
+        for def in entry.params {
+            let Some(flag) = def.flag else { continue };
+            let Some(raw) = get(flag) else { continue };
+            let value = match def.kind {
+                ParamKind::F64 => raw.parse::<f64>().map(ParamValue::F64).map_err(|e| {
+                    format!("--{flag} {raw:?}: {e}")
+                })?,
+                ParamKind::UInt => raw.parse::<u64>().map(ParamValue::UInt).map_err(|e| {
+                    format!("--{flag} {raw:?}: {e}")
+                })?,
+                ParamKind::Bool => raw.parse::<bool>().map(ParamValue::Bool).map_err(|e| {
+                    format!("--{flag} {raw:?}: {e}")
+                })?,
+            };
+            overrides.push((def.key, value));
+        }
+        AlgoSpec::of(entry.name, &overrides)
+    }
+
+    /// Parse a spec from service-OPEN key/value tokens: `get(key)` returns
+    /// the raw token for a wire key. Wire-pinned parameters take their pin
+    /// instead of a token.
+    pub fn from_wire(
+        name: &str,
+        get: &dyn Fn(&str) -> Option<String>,
+    ) -> Result<AlgoSpec, String> {
+        let entry = lookup(name).ok_or_else(|| unknown_algo_error(name))?;
+        let mut overrides: Vec<(&str, ParamValue)> = Vec::new();
+        for def in entry.params {
+            if let Some(pin) = &def.wire_pin {
+                overrides.push((def.key, pin.clone()));
+                continue;
+            }
+            let Some(raw) = get(def.key) else { continue };
+            let value = match def.kind {
+                ParamKind::F64 => raw.parse::<f64>().map(ParamValue::F64).map_err(|_| {
+                    format!("{}: expected a {}, got {raw:?}", def.key, def.kind.label())
+                })?,
+                ParamKind::UInt => raw.parse::<u64>().map(ParamValue::UInt).map_err(|_| {
+                    format!("{}: expected a {}, got {raw:?}", def.key, def.kind.label())
+                })?,
+                ParamKind::Bool => raw.parse::<bool>().map(ParamValue::Bool).map_err(|_| {
+                    format!("{}: expected a {}, got {raw:?}", def.key, def.kind.label())
+                })?,
+            };
+            overrides.push((def.key, value));
+        }
+        AlgoSpec::of(entry.name, &overrides)
+    }
+
+    /// Serialize the wire-visible parameters as OPEN `key=value` tokens in
+    /// definition order (wire pins omitted; [`from_wire`] re-pins them).
+    ///
+    /// [`from_wire`]: AlgoSpec::from_wire
+    pub fn wire_tokens(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for def in self.entry().params {
+            if def.wire_pin.is_some() {
+                continue;
+            }
+            match self.get(def.key) {
+                Some(ParamValue::F64(v)) => out.push(format!("{}={v}", def.key)),
+                Some(ParamValue::UInt(v)) => out.push(format!("{}={v}", def.key)),
+                Some(ParamValue::Bool(v)) => out.push(format!("{}={v}", def.key)),
+                None => unreachable!("specs are fully populated"),
+            }
+        }
+        out
+    }
+
+    /// Instantiate the algorithm with a fresh oracle.
+    pub fn build(
+        &self,
+        oracle: Box<dyn SubmodularFunction>,
+        k: usize,
+        stream_len: Option<usize>,
+    ) -> Box<dyn StreamingAlgorithm> {
+        (self.entry().build)(self, oracle, k, stream_len)
+    }
+
+    // Convenience constructors — registry-backed replacements for the old
+    // enum variants (parameter order matches the old struct fields).
+
+    pub fn greedy() -> AlgoSpec {
+        AlgoSpec::of("greedy", &[]).unwrap()
+    }
+
+    pub fn random(seed: u64) -> AlgoSpec {
+        AlgoSpec::of("random", &[("seed", ParamValue::UInt(seed))]).unwrap()
+    }
+
+    pub fn stream_greedy(nu: f64) -> AlgoSpec {
+        AlgoSpec::of("stream-greedy", &[("nu", ParamValue::F64(nu))]).unwrap()
+    }
+
+    pub fn preemption() -> AlgoSpec {
+        AlgoSpec::of("preemption", &[]).unwrap()
+    }
+
+    pub fn isi() -> AlgoSpec {
+        AlgoSpec::of("isi", &[]).unwrap()
+    }
+
+    pub fn sieve_streaming(epsilon: f64) -> AlgoSpec {
+        AlgoSpec::of("sieve-streaming", &[("epsilon", ParamValue::F64(epsilon))]).unwrap()
+    }
+
+    pub fn sieve_streaming_pp(epsilon: f64) -> AlgoSpec {
+        AlgoSpec::of("sieve-streaming-pp", &[("epsilon", ParamValue::F64(epsilon))]).unwrap()
+    }
+
+    pub fn salsa(epsilon: f64, use_length_hint: bool) -> AlgoSpec {
+        AlgoSpec::of(
+            "salsa",
+            &[
+                ("epsilon", ParamValue::F64(epsilon)),
+                ("use_length_hint", ParamValue::Bool(use_length_hint)),
+            ],
+        )
+        .unwrap()
+    }
+
+    pub fn quickstream(c: u64, epsilon: f64, seed: u64) -> AlgoSpec {
+        AlgoSpec::of(
+            "quickstream",
+            &[
+                ("c", ParamValue::UInt(c)),
+                ("epsilon", ParamValue::F64(epsilon)),
+                ("seed", ParamValue::UInt(seed)),
+            ],
+        )
+        .unwrap()
+    }
+
+    pub fn three_sieves(epsilon: f64, t: u64) -> AlgoSpec {
+        AlgoSpec::of(
+            "three-sieves",
+            &[("epsilon", ParamValue::F64(epsilon)), ("t", ParamValue::UInt(t))],
+        )
+        .unwrap()
+    }
+
+    pub fn sharded_three_sieves(epsilon: f64, t: u64, shards: u64) -> AlgoSpec {
+        AlgoSpec::of(
+            "sharded-three-sieves",
+            &[
+                ("epsilon", ParamValue::F64(epsilon)),
+                ("t", ParamValue::UInt(t)),
+                ("shards", ParamValue::UInt(shards)),
+            ],
+        )
+        .unwrap()
+    }
+
+    pub fn stream_clipper(alpha: f64, beta: f64) -> AlgoSpec {
+        AlgoSpec::of(
+            "stream-clipper",
+            &[
+                ("clipper_alpha", ParamValue::F64(alpha)),
+                ("clipper_beta", ParamValue::F64(beta)),
+            ],
+        )
+        .unwrap()
+    }
+
+    pub fn subsampled_sieve_streaming(epsilon: f64, p: f64, seed: u64) -> AlgoSpec {
+        AlgoSpec::of(
+            "subsampled-sieve-streaming",
+            &[
+                ("epsilon", ParamValue::F64(epsilon)),
+                ("subsample_p", ParamValue::F64(p)),
+                ("seed", ParamValue::UInt(seed)),
+            ],
+        )
+        .unwrap()
+    }
+
+    pub fn subsampled_three_sieves(epsilon: f64, t: u64, p: f64, seed: u64) -> AlgoSpec {
+        AlgoSpec::of(
+            "subsampled-three-sieves",
+            &[
+                ("epsilon", ParamValue::F64(epsilon)),
+                ("t", ParamValue::UInt(t)),
+                ("subsample_p", ParamValue::F64(p)),
+                ("seed", ParamValue::UInt(seed)),
+            ],
+        )
+        .unwrap()
+    }
+}
+
+fn parse_json_param(algo: &str, def: &ParamDef, v: &Json) -> Result<ParamValue, String> {
+    let fail = || {
+        format!(
+            "parameter {:?} of algo {algo:?} expects a {}, got {v:?}",
+            def.key,
+            def.kind.label()
+        )
+    };
+    match def.kind {
+        ParamKind::F64 => v.as_f64().map(ParamValue::F64).ok_or_else(fail),
+        ParamKind::UInt => v
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| ParamValue::UInt(n as u64))
+            .ok_or_else(fail),
+        ParamKind::Bool => v.as_bool().map(ParamValue::Bool).ok_or_else(fail),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_resolves_names_and_aliases() {
+        assert_eq!(lookup("three-sieves").unwrap().name, "three-sieves");
+        assert_eq!(lookup("streamclipper").unwrap().name, "stream-clipper");
+        assert_eq!(lookup("subsampled").unwrap().name, "subsampled-sieve-streaming");
+        assert_eq!(lookup("independent-set-improvement").unwrap().name, "isi");
+        assert!(lookup("magic").is_none());
+    }
+
+    #[test]
+    fn ids_are_stable() {
+        assert_eq!(AlgoSpec::greedy().id(), "greedy");
+        assert_eq!(AlgoSpec::random(7).id(), "random");
+        assert_eq!(AlgoSpec::stream_greedy(1e-4).id(), "stream-greedy");
+        assert_eq!(AlgoSpec::preemption().id(), "preemption");
+        assert_eq!(AlgoSpec::isi().id(), "isi");
+        assert_eq!(AlgoSpec::sieve_streaming(0.1).id(), "sieve-streaming");
+        assert_eq!(AlgoSpec::sieve_streaming_pp(0.1).id(), "sieve-streaming-pp");
+        assert_eq!(AlgoSpec::salsa(0.1, true).id(), "salsa");
+        assert_eq!(AlgoSpec::quickstream(4, 0.1, 1).id(), "quickstream-c4");
+        assert_eq!(AlgoSpec::three_sieves(0.01, 2500).id(), "three-sieves-t2500");
+        assert_eq!(
+            AlgoSpec::sharded_three_sieves(0.01, 60, 3).id(),
+            "sharded-three-sieves-t60-p3"
+        );
+        assert_eq!(AlgoSpec::stream_clipper(1.0, 0.5).id(), "stream-clipper");
+        assert_eq!(
+            AlgoSpec::subsampled_sieve_streaming(0.1, 0.5, 1).id(),
+            "subsampled-sieve-streaming"
+        );
+        assert_eq!(
+            AlgoSpec::subsampled_three_sieves(0.1, 500, 0.5, 1).id(),
+            "subsampled-three-sieves-t500"
+        );
+    }
+
+    #[test]
+    fn from_json_defaults_and_overrides() {
+        let j = Json::parse(r#"{"algo": "three-sieves", "t": 500}"#).unwrap();
+        let spec = AlgoSpec::from_json(&j).unwrap();
+        assert_eq!(spec, AlgoSpec::three_sieves(0.001, 500));
+
+        let j = Json::parse(r#"{"algo": "quickstream", "c": 4}"#).unwrap();
+        assert_eq!(AlgoSpec::from_json(&j).unwrap().id(), "quickstream-c4");
+    }
+
+    #[test]
+    fn from_json_rejects_mistyped_params() {
+        // The pre-registry parser silently unwrap_or-defaulted these.
+        let j = Json::parse(r#"{"algo": "stream-greedy", "nu": "abc"}"#).unwrap();
+        let err = AlgoSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("nu"), "error must name the field: {err}");
+
+        let j = Json::parse(r#"{"algo": "three-sieves", "t": 12.5}"#).unwrap();
+        let err = AlgoSpec::from_json(&j).unwrap_err();
+        assert!(err.contains('t'), "error must name the field: {err}");
+
+        let j = Json::parse(r#"{"algo": "salsa", "use_length_hint": 3}"#).unwrap();
+        let err = AlgoSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("use_length_hint"), "error must name the field: {err}");
+    }
+
+    #[test]
+    fn unknown_algo_errors_suggest_and_enumerate() {
+        let err = AlgoSpec::of("tree-sieves", &[]).unwrap_err();
+        assert!(err.contains("unknown algo"), "{err}");
+        assert!(err.contains("did you mean \"three-sieves\""), "{err}");
+        assert!(err.contains("stream-clipper"), "error lists registry names: {err}");
+        // Nothing close: no suggestion, still enumerates.
+        let err = AlgoSpec::of("magic", &[]).unwrap_err();
+        assert!(err.contains("unknown algo"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn of_rejects_unknown_keys_and_kind_mismatches() {
+        let err = AlgoSpec::of("three-sieves", &[("shards", ParamValue::UInt(2))]).unwrap_err();
+        assert!(err.contains("shards"), "{err}");
+        let err = AlgoSpec::of("three-sieves", &[("t", ParamValue::F64(2.0))]).unwrap_err();
+        assert!(err.contains('t'), "{err}");
+    }
+
+    #[test]
+    fn shards_floor_at_one() {
+        let spec = AlgoSpec::sharded_three_sieves(0.1, 10, 0);
+        assert_eq!(spec.uint("shards"), 1);
+    }
+
+    #[test]
+    fn wire_tokens_roundtrip_via_from_wire() {
+        let specs = [
+            AlgoSpec::three_sieves(0.02, 60),
+            AlgoSpec::salsa(0.1, false),
+            AlgoSpec::quickstream(2, 0.1, 7),
+            AlgoSpec::stream_clipper(1.0, 0.25),
+            AlgoSpec::subsampled_three_sieves(0.05, 40, 0.5, 9),
+        ];
+        for spec in &specs {
+            let tokens = spec.wire_tokens();
+            let get = |key: &str| -> Option<String> {
+                tokens.iter().find_map(|t| {
+                    t.strip_prefix(&format!("{key}=")).map(str::to_string)
+                })
+            };
+            let back = AlgoSpec::from_wire(spec.name(), &get).unwrap();
+            assert_eq!(&back, spec, "wire roundtrip for {}", spec.name());
+        }
+    }
+
+    #[test]
+    fn wire_pins_override_json_defaults() {
+        // Over the wire, Salsa's length hint is pinned off even though the
+        // JSON default is on.
+        let spec = AlgoSpec::from_wire("salsa", &|_| None).unwrap();
+        assert!(!spec.flag("use_length_hint"));
+        let j = Json::parse(r#"{"algo": "salsa"}"#).unwrap();
+        assert!(AlgoSpec::from_json(&j).unwrap().flag("use_length_hint"));
+    }
+
+    #[test]
+    fn cli_and_wire_key_sets_cover_every_param() {
+        let flags = cli_flags();
+        for want in ["epsilon", "t", "shards", "nu", "c", "seed", "clipper-alpha", "subsample-p"]
+        {
+            assert!(flags.contains(&want), "missing CLI flag {want}");
+        }
+        let keys = wire_param_keys();
+        assert!(keys.contains(&"clipper_beta"));
+        assert!(!keys.contains(&"use_length_hint"), "wire-pinned keys stay off the wire");
+    }
+
+    #[test]
+    fn markdown_table_lists_every_entry() {
+        let table = markdown_table();
+        for name in names() {
+            assert!(table.contains(&format!("| `{name}` |")), "table missing {name}");
+        }
+    }
+
+    #[test]
+    fn did_you_mean_tolerates_typos() {
+        assert_eq!(did_you_mean("salsa"), Some("salsa"));
+        assert_eq!(did_you_mean("sallsa"), Some("salsa"));
+        assert_eq!(did_you_mean("three-seives"), Some("three-sieves"));
+        assert_eq!(did_you_mean("stream-cliper"), Some("stream-clipper"));
+        assert_eq!(did_you_mean("zzzzzzzzzz"), None);
+    }
+}

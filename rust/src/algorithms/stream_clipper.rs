@@ -1,0 +1,842 @@
+//! **Stream Clipper** (Zhou & Bilmes 2016): single-threshold streaming
+//! with a two-sided clip. Each arriving item's marginal gain is compared
+//! against *two* bars derived from the running SieveStreaming threshold
+//! `τ = (v/2 − f(S)) / (K − |S|)`:
+//!
+//! * `Δ ≥ α·τ` — accept immediately (the classic sieve decision,
+//!   tightened by `α ≥ 1` or loosened by `α < 1`);
+//! * `β·τ ≤ Δ < α·τ` — *defer*: the item lands in a bounded buffer
+//!   (capacity `2K`, min-gain eviction) instead of being discarded;
+//! * `Δ < β·τ` — reject outright.
+//!
+//! At budget exhaustion ([`StreamingAlgorithm::finalize`]) the deferred
+//! buffer is drained in two stages: unfilled summary slots are topped up
+//! greedily from the buffer, then each remaining deferred row challenges
+//! the summary's weakest member (smallest recorded accept-time
+//! contribution) and swaps in when its current marginal gain strictly
+//! beats that contribution. The paper's bound-tracking swap test is
+//! rendered here with recorded contributions — stale after earlier swaps,
+//! which is the usual one-pass compromise and is documented where it
+//! matters.
+//!
+//! The whole algorithm is one [`Sieve`] on the shared chassis: the OPT
+//! anchor is the upper grid point `v = K·max_singleton`, so batching
+//! (`peek_gain_batch` rejection runs), the shared kernel-panel broker
+//! (`begin_shared_chunk`/`gains_shared`) and the 2-D
+//! (unit × candidate-range) solve grid all apply unchanged. The deferred
+//! buffer is a pure side effect of the shared first-hit scan
+//! ([`clip_first_hit`]), so the scalar path, the unit-serial batched
+//! path and the grid's Phase B produce bit-identical buffers by
+//! construction.
+
+use std::cell::RefCell;
+
+use crate::exec::ExecContext;
+use crate::functions::{ChunkPanel, PanelScratch, SharedRowStore, SubmodularFunction};
+use crate::metrics::AlgoStats;
+use crate::util::json::Json;
+
+use super::{
+    build_union_panel, offer_chunk_grid, sieve_threshold, union_row_ids, Sieve, SolveGrid,
+    StreamingAlgorithm,
+};
+
+/// Bounded deferred-item buffer: row-major feature rows plus the
+/// defer-time gain that admitted each. At capacity, a new row replaces
+/// the current minimum-gain entry (first such slot on ties) only when
+/// its gain is *strictly* larger — ties keep the incumbent, so the
+/// buffer contents are a deterministic function of the decision
+/// sequence.
+struct ClipBuffer {
+    dim: usize,
+    cap: usize,
+    rows: Vec<f32>,
+    gains: Vec<f64>,
+}
+
+impl ClipBuffer {
+    fn new(dim: usize, cap: usize) -> Self {
+        ClipBuffer { dim, cap, rows: Vec::new(), gains: Vec::new() }
+    }
+
+    fn len(&self) -> usize {
+        self.gains.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.gains.is_empty()
+    }
+
+    /// Defer a row. Returns whether it was kept (insert or eviction).
+    fn push(&mut self, row: &[f32], gain: f64) -> bool {
+        debug_assert_eq!(row.len(), self.dim);
+        if self.len() < self.cap {
+            self.rows.extend_from_slice(row);
+            self.gains.push(gain);
+            return true;
+        }
+        let mut i_min = 0usize;
+        for (i, &g) in self.gains.iter().enumerate().skip(1) {
+            if g < self.gains[i_min] {
+                i_min = i;
+            }
+        }
+        if gain > self.gains[i_min] {
+            // The replacement inherits the evicted slot, so later drains
+            // see a deterministic order on every path.
+            self.rows[i_min * self.dim..(i_min + 1) * self.dim].copy_from_slice(row);
+            self.gains[i_min] = gain;
+            return true;
+        }
+        false
+    }
+
+    /// Remove and return entry `i` (shifts later entries down).
+    fn remove(&mut self, i: usize) -> Vec<f32> {
+        self.gains.remove(i);
+        self.rows.drain(i * self.dim..(i + 1) * self.dim).collect()
+    }
+
+    fn clear(&mut self) {
+        self.rows.clear();
+        self.gains.clear();
+    }
+}
+
+/// The two-bar first-hit scan shared by the scalar path,
+/// [`consume_chunk`], [`consume_chunk_shared`] and the grid driver's
+/// Phase B: returns the first index (relative to `gains[0]`, which sits
+/// at chunk-absolute `pos`) whose gain clears the accept bar `α·τ`,
+/// deferring every scanned item in the clip zone `[β·τ, α·τ)` into the
+/// buffer along the way. The grid calls this exactly once per rejection
+/// run with authoritative oracle state, so the buffer side effect is
+/// identical across execution strategies.
+#[allow(clippy::too_many_arguments)]
+fn clip_first_hit(
+    alpha: f64,
+    beta: f64,
+    v: f64,
+    oracle: &dyn SubmodularFunction,
+    k: usize,
+    gains: &[f64],
+    chunk: &[f32],
+    dim: usize,
+    pos: usize,
+    buffer: &mut ClipBuffer,
+) -> Option<usize> {
+    let tau = sieve_threshold(v, oracle.current_value(), k, oracle.len());
+    for (j, &g) in gains.iter().enumerate() {
+        if g >= alpha * tau {
+            return Some(j);
+        }
+        if g >= beta * tau {
+            buffer.push(&chunk[(pos + j) * dim..(pos + j + 1) * dim], g);
+        }
+    }
+    None
+}
+
+/// One chunk through the clip sieve: one gain panel per rejection run,
+/// an acceptance re-batches from the next item (τ depends on the new
+/// summary). Returns the speculative gain evaluations past acceptances
+/// (see `Sieve::offer_batch` for the accounting argument).
+#[allow(clippy::too_many_arguments)]
+fn consume_chunk(
+    sieve: &mut Sieve,
+    buffer: &mut ClipBuffer,
+    contributions: &mut Vec<f64>,
+    alpha: f64,
+    beta: f64,
+    chunk: &[f32],
+    d: usize,
+    k: usize,
+) -> u64 {
+    let total = chunk.len() / d;
+    let mut pos = 0usize;
+    let mut wasted = 0u64;
+    while pos < total {
+        if sieve.oracle.len() >= k {
+            break; // full: the scalar path stops querying too
+        }
+        let remaining = total - pos;
+        sieve.oracle.peek_gain_batch(&chunk[pos * d..], remaining, &mut sieve.scratch);
+        let hit = clip_first_hit(
+            alpha,
+            beta,
+            sieve.v,
+            sieve.oracle.as_ref(),
+            k,
+            &sieve.scratch[..remaining],
+            chunk,
+            d,
+            pos,
+            buffer,
+        );
+        match hit {
+            Some(j) => {
+                let gain = sieve.scratch[j];
+                sieve.oracle.accept(&chunk[(pos + j) * d..(pos + j + 1) * d]);
+                contributions.push(gain);
+                wasted += (remaining - (j + 1)) as u64;
+                pos += j + 1;
+            }
+            None => {
+                pos = total;
+            }
+        }
+    }
+    wasted
+}
+
+/// [`consume_chunk`] under the shared kernel-panel broker: identical
+/// decisions, buffer contents and query accounting, gains gathered from
+/// the chunk panel. Falls back to the per-sieve path if the sieve cannot
+/// bind.
+#[allow(clippy::too_many_arguments)]
+fn consume_chunk_shared(
+    sieve: &mut Sieve,
+    buffer: &mut ClipBuffer,
+    contributions: &mut Vec<f64>,
+    alpha: f64,
+    beta: f64,
+    panel: &ChunkPanel,
+    chunk: &[f32],
+    d: usize,
+    k: usize,
+) -> u64 {
+    if sieve.oracle.len() >= k {
+        return 0;
+    }
+    if !sieve.begin_shared_chunk(panel) {
+        return consume_chunk(sieve, buffer, contributions, alpha, beta, chunk, d, k);
+    }
+    let total = chunk.len() / d;
+    let mut pos = 0usize;
+    let mut wasted = 0u64;
+    while pos < total {
+        if sieve.oracle.len() >= k {
+            break;
+        }
+        let remaining = total - pos;
+        sieve.gains_shared(panel, pos, remaining);
+        let hit = clip_first_hit(
+            alpha,
+            beta,
+            sieve.v,
+            sieve.oracle.as_ref(),
+            k,
+            &sieve.scratch[..remaining],
+            chunk,
+            d,
+            pos,
+            buffer,
+        );
+        match hit {
+            Some(j) => {
+                let gain = sieve.scratch[j];
+                sieve.accept_shared(panel, chunk, d, pos + j);
+                contributions.push(gain);
+                wasted += (remaining - (j + 1)) as u64;
+                pos += j + 1;
+            }
+            None => {
+                pos = total;
+            }
+        }
+    }
+    wasted
+}
+
+/// The Stream Clipper algorithm (see module docs).
+pub struct StreamClipper {
+    proto: Box<dyn SubmodularFunction>,
+    k: usize,
+    /// Accept-bar multiplier on the sieve threshold (`Δ ≥ α·τ`).
+    alpha: f64,
+    /// Defer-bar multiplier (`Δ ≥ β·τ` lands in the buffer).
+    beta: f64,
+    sieve: Sieve,
+    buffer: ClipBuffer,
+    /// Accept-time marginal gain per summary row, in oracle row order —
+    /// the "weakest member" record the finalize swap stage challenges.
+    contributions: Vec<f64>,
+    elements: u64,
+    /// Speculative batch gains past an acceptance; excluded from
+    /// reported query stats (see `Sieve::offer_batch`).
+    speculative_queries: u64,
+    /// Kernel entries spent on shared chunk panels (once per chunk).
+    panel_evals: u64,
+    /// Broker toggle (bench/parity hook).
+    share_panels: bool,
+    peak_stored: usize,
+    /// Pre-restore counters carried across checkpoint/resume (the
+    /// ThreeSieves rebasing convention).
+    restored_queries: u64,
+    restored_kernel_evals: u64,
+    discounted_kernel_evals: u64,
+    panel_scratch: PanelScratch,
+    solve_pool: SolveGrid,
+    exec: ExecContext,
+}
+
+impl StreamClipper {
+    /// `alpha`/`beta` scale the running sieve threshold into the accept
+    /// and defer bars; the paper's regime is `α ≥ 1 ≥ β > 0` but any
+    /// `α ≥ β > 0` is accepted. The OPT anchor is `v = K·max_singleton`
+    /// (the top of the sieve grid), so the clip buffer — not a threshold
+    /// grid — absorbs the guess error.
+    pub fn new(mut proto: Box<dyn SubmodularFunction>, k: usize, alpha: f64, beta: f64) -> Self {
+        assert!(k > 0, "k must be positive");
+        assert!(alpha >= beta && beta > 0.0, "need alpha >= beta > 0");
+        let dim = proto.dim();
+        if let Some(ps) = proto.panel_sharing() {
+            ps.attach_row_store(SharedRowStore::new(dim));
+        }
+        let v = k as f64 * proto.max_singleton_value();
+        let sieve = Sieve::new(v, proto.as_ref());
+        StreamClipper {
+            proto,
+            k,
+            alpha,
+            beta,
+            sieve,
+            buffer: ClipBuffer::new(dim, 2 * k),
+            contributions: Vec::new(),
+            elements: 0,
+            speculative_queries: 0,
+            panel_evals: 0,
+            share_panels: true,
+            peak_stored: 0,
+            restored_queries: 0,
+            restored_kernel_evals: 0,
+            discounted_kernel_evals: 0,
+            panel_scratch: PanelScratch::default(),
+            solve_pool: SolveGrid::default(),
+            exec: ExecContext::sequential(),
+        }
+    }
+
+    /// Force the per-sieve panel path (`false`) or restore the default
+    /// shared-broker path (`true`). Bit-identical either way; only
+    /// `kernel_evals` moves.
+    pub fn set_panel_sharing(&mut self, on: bool) {
+        self.share_panels = on;
+    }
+
+    /// Deferred-buffer occupancy (bench/test hook).
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    fn build_shared_panel(&mut self, chunk: &[f32]) -> Option<ChunkPanel> {
+        if !self.share_panels || chunk.is_empty() || self.sieve.oracle.len() >= self.k {
+            return None;
+        }
+        let ids = union_row_ids(std::iter::once(&mut self.sieve.oracle), self.k)?;
+        build_union_panel(&mut self.proto, &ids, chunk, &self.exec, &mut self.panel_scratch)
+    }
+
+    fn note_peak(&mut self) {
+        let stored = self.sieve.oracle.len() + self.buffer.len();
+        if stored > self.peak_stored {
+            self.peak_stored = stored;
+        }
+    }
+}
+
+impl StreamingAlgorithm for StreamClipper {
+    fn name(&self) -> String {
+        "StreamClipper".into()
+    }
+
+    fn process(&mut self, item: &[f32]) {
+        self.elements += 1;
+        if self.sieve.oracle.len() >= self.k {
+            // Full summaries stop scanning (sieve semantics); the swap
+            // stage works off the already-buffered deferrals.
+            return;
+        }
+        let (alpha, beta, k) = (self.alpha, self.beta, self.k);
+        let d = self.proto.dim();
+        let StreamClipper { sieve, buffer, contributions, .. } = self;
+        let gain = sieve.oracle.peek_gain(item);
+        let hit = clip_first_hit(
+            alpha,
+            beta,
+            sieve.v,
+            sieve.oracle.as_ref(),
+            k,
+            &[gain],
+            item,
+            d,
+            0,
+            buffer,
+        );
+        if hit.is_some() {
+            sieve.oracle.accept(item);
+            contributions.push(gain);
+        }
+        self.note_peak();
+    }
+
+    /// Batched ingestion on the shared chassis: one gain panel per
+    /// rejection run, the broker's chunk panel when attached, and the
+    /// 2-D solve grid when an exec pool is attached — all bit-identical
+    /// to the scalar path (including the deferred buffer, which is a
+    /// side effect of the shared [`clip_first_hit`] scan).
+    fn process_batch(&mut self, chunk: &[f32]) {
+        let d = self.proto.dim();
+        debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
+        self.elements += (chunk.len() / d) as u64;
+        let (alpha, beta, k) = (self.alpha, self.beta, self.k);
+        let shared = self.build_shared_panel(chunk);
+        let wasted: u64 = match &shared {
+            Some(panel) => {
+                let grid = if self.exec.is_parallel() {
+                    let StreamClipper { sieve, buffer, contributions, solve_pool, exec, .. } =
+                        self;
+                    // Phase B of the grid is sequential, so the RefCells
+                    // are never contended — they only satisfy the Fn
+                    // closure bound.
+                    let buffer = RefCell::new(buffer);
+                    let contributions = RefCell::new(contributions);
+                    let mut refs = [&mut *sieve];
+                    offer_chunk_grid(
+                        &mut refs,
+                        panel,
+                        chunk,
+                        d,
+                        k,
+                        exec,
+                        solve_pool,
+                        |_, v, oracle, gains, pos| {
+                            let hit = clip_first_hit(
+                                alpha,
+                                beta,
+                                v,
+                                oracle,
+                                k,
+                                gains,
+                                chunk,
+                                d,
+                                pos,
+                                &mut buffer.borrow_mut(),
+                            );
+                            if let Some(j) = hit {
+                                contributions.borrow_mut().push(gains[j]);
+                            }
+                            hit
+                        },
+                    )
+                } else {
+                    None
+                };
+                match grid {
+                    Some(w) => w,
+                    None => {
+                        let StreamClipper { sieve, buffer, contributions, .. } = self;
+                        consume_chunk_shared(
+                            sieve,
+                            buffer,
+                            contributions,
+                            alpha,
+                            beta,
+                            panel,
+                            chunk,
+                            d,
+                            k,
+                        )
+                    }
+                }
+            }
+            None => {
+                let StreamClipper { sieve, buffer, contributions, .. } = self;
+                consume_chunk(sieve, buffer, contributions, alpha, beta, chunk, d, k)
+            }
+        };
+        if let Some(panel) = shared {
+            self.panel_evals += panel.evals();
+            self.panel_scratch.recycle(panel);
+        }
+        self.speculative_queries += wasted;
+        self.note_peak();
+    }
+
+    /// Budget-exhaustion drain of the deferred buffer, idempotent (the
+    /// buffer empties). Stage 1 tops up unfilled slots greedily; stage 2
+    /// lets every remaining deferral challenge the weakest member by
+    /// recorded contribution and swap in when its *current* gain
+    /// strictly beats it. Runs sequentially on every path, so batched
+    /// and scalar runs finalize identically.
+    fn finalize(&mut self) {
+        let k = self.k;
+        let StreamClipper { sieve, buffer, contributions, .. } = self;
+        // Stage 1: fill remaining slots with the best buffered rows.
+        while sieve.oracle.len() < k && !buffer.is_empty() {
+            let n = buffer.len();
+            sieve.oracle.peek_gain_batch(&buffer.rows, n, &mut sieve.scratch);
+            let mut best = 0usize;
+            for j in 1..n {
+                if sieve.scratch[j] > sieve.scratch[best] {
+                    best = j;
+                }
+            }
+            let gain = sieve.scratch[best];
+            let row = buffer.remove(best);
+            sieve.oracle.accept(&row);
+            contributions.push(gain);
+        }
+        // Stage 2: swap-in challenges, in buffer order. The recorded
+        // contributions go stale as swaps land — the standard one-pass
+        // compromise for a streaming swap rule.
+        while !buffer.is_empty() {
+            let row = buffer.remove(0);
+            debug_assert!(!contributions.is_empty(), "full summary implies contributions");
+            let gain = sieve.oracle.peek_gain(&row);
+            let mut i_min = 0usize;
+            for (i, &c) in contributions.iter().enumerate().skip(1) {
+                if c < contributions[i_min] {
+                    i_min = i;
+                }
+            }
+            if gain > contributions[i_min] {
+                sieve.oracle.remove(i_min);
+                contributions.remove(i_min);
+                sieve.oracle.accept(&row);
+                contributions.push(gain);
+            }
+        }
+    }
+
+    fn set_exec(&mut self, exec: ExecContext) {
+        self.exec = exec.gated(self.proto.as_ref());
+    }
+
+    fn value(&self) -> f64 {
+        self.sieve.oracle.current_value()
+    }
+
+    fn summary(&self) -> Vec<f32> {
+        self.sieve.oracle.summary().to_vec()
+    }
+
+    fn summary_len(&self) -> usize {
+        self.sieve.oracle.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.proto.dim()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn stats(&self) -> AlgoStats {
+        let stored = self.sieve.oracle.len() + self.buffer.len();
+        AlgoStats {
+            queries: (self.sieve.oracle.queries() + self.restored_queries)
+                .saturating_sub(self.speculative_queries),
+            kernel_evals: (self.sieve.oracle.kernel_evals()
+                + self.panel_evals
+                + self.restored_kernel_evals)
+                .saturating_sub(self.discounted_kernel_evals),
+            elements: self.elements,
+            stored,
+            peak_stored: self.peak_stored.max(stored),
+            instances: 1,
+        }
+    }
+
+    fn reset(&mut self) {
+        // Reported query/kernel totals stay cumulative across a drift
+        // reset (the ThreeSieves convention): fold the current totals
+        // into the restored baseline, then rebuild from scratch with a
+        // fresh row store so dropped rows don't pin the broker's memory.
+        let st = self.stats();
+        self.restored_queries = st.queries;
+        self.restored_kernel_evals = st.kernel_evals;
+        self.speculative_queries = 0;
+        self.discounted_kernel_evals = 0;
+        self.panel_evals = 0;
+        self.elements = 0;
+        self.peak_stored = 0;
+        self.buffer.clear();
+        self.contributions.clear();
+        let dim = self.proto.dim();
+        if let Some(ps) = self.proto.panel_sharing() {
+            ps.attach_row_store(SharedRowStore::new(dim));
+        }
+        self.sieve = Sieve::new(self.sieve.v, self.proto.as_ref());
+    }
+
+    /// Resumable state: the deferred buffer and the accept-time
+    /// contribution record ride along with the counters — the summary
+    /// rows themselves travel via the checkpoint's summary payload and
+    /// are replayed through `accept` on restore, which reproduces the
+    /// Cholesky factor bit-for-bit.
+    fn snapshot_state(&self) -> Option<Json> {
+        if !self.sieve.v.is_finite() {
+            return None;
+        }
+        let st = self.stats();
+        let nums = |xs: &[f64]| Json::Arr(xs.iter().map(|&x| Json::num(x)).collect());
+        let rows = Json::Arr(self.buffer.rows.iter().map(|&x| Json::num(x as f64)).collect());
+        Some(Json::obj(vec![
+            ("algo", Json::str("stream-clipper")),
+            ("k", Json::num(self.k as f64)),
+            ("dim", Json::num(self.proto.dim() as f64)),
+            ("alpha", Json::num(self.alpha)),
+            ("beta", Json::num(self.beta)),
+            ("v", Json::num(self.sieve.v)),
+            ("elements", Json::num(self.elements as f64)),
+            ("queries", Json::num(st.queries as f64)),
+            ("kernel_evals", Json::num(st.kernel_evals as f64)),
+            ("peak_stored", Json::num(self.peak_stored as f64)),
+            ("buffer_rows", rows),
+            ("buffer_gains", nums(&self.buffer.gains)),
+            ("contributions", nums(&self.contributions)),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json, summary: &[f32]) -> Result<(), String> {
+        let field = |name: &str| -> Result<f64, String> {
+            state.get(name).as_f64().ok_or_else(|| format!("checkpoint state missing {name:?}"))
+        };
+        let floats = |name: &str| -> Result<Vec<f64>, String> {
+            let arr = state
+                .get(name)
+                .as_arr()
+                .ok_or_else(|| format!("checkpoint state missing {name:?}"))?;
+            arr.iter()
+                .map(|j| j.as_f64().ok_or_else(|| format!("checkpoint {name} holds a non-number")))
+                .collect()
+        };
+        match state.get("algo").as_str() {
+            Some("stream-clipper") => {}
+            _ => return Err("checkpoint algo mismatch (want stream-clipper)".into()),
+        }
+        let d = self.proto.dim();
+        if field("k")? as usize != self.k {
+            return Err("checkpoint k mismatch".into());
+        }
+        if field("dim")? as usize != d {
+            return Err("checkpoint dim mismatch".into());
+        }
+        let same = |name: &str, mine: f64| -> Result<(), String> {
+            if field(name)?.to_bits() != mine.to_bits() {
+                return Err(format!("checkpoint {name} mismatch"));
+            }
+            Ok(())
+        };
+        same("alpha", self.alpha)?;
+        same("beta", self.beta)?;
+        same("v", self.sieve.v)?;
+        if summary.len() % d != 0 || summary.len() / d > self.k {
+            return Err("checkpoint summary malformed".into());
+        }
+        let elements = field("elements")? as u64;
+        let queries = field("queries")? as u64;
+        let kernel_evals = state.get("kernel_evals").as_f64().unwrap_or(0.0) as u64;
+        let peak = field("peak_stored")? as usize;
+        let rows = floats("buffer_rows")?;
+        let gains = floats("buffer_gains")?;
+        let contributions = floats("contributions")?;
+        if rows.len() != gains.len() * d {
+            return Err("checkpoint buffer rows/gains inconsistent".into());
+        }
+        if gains.len() > self.buffer.cap {
+            return Err("checkpoint buffer exceeds capacity".into());
+        }
+        if contributions.len() != summary.len() / d {
+            return Err("checkpoint contributions/summary inconsistent".into());
+        }
+        // All fields validated — mutate. A fresh store + sieve, then a
+        // replay of the summary through `accept`, reproduces the exact
+        // factor the snapshot saw.
+        if let Some(ps) = self.proto.panel_sharing() {
+            ps.attach_row_store(SharedRowStore::new(d));
+        }
+        self.sieve = Sieve::new(self.sieve.v, self.proto.as_ref());
+        for row in summary.chunks_exact(d) {
+            self.sieve.oracle.accept(row);
+        }
+        self.buffer.rows = rows.into_iter().map(|x| x as f32).collect();
+        self.buffer.gains = gains;
+        self.contributions = contributions;
+        self.elements = elements;
+        self.peak_stored = peak;
+        self.panel_evals = 0;
+        // Rebase: replay work is bookkeeping, not new queries.
+        self.speculative_queries = self.sieve.oracle.queries();
+        self.restored_queries = queries;
+        self.discounted_kernel_evals = self.sieve.oracle.kernel_evals();
+        self.restored_kernel_evals = kernel_evals;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testkit;
+
+    #[test]
+    fn clip_buffer_evicts_min_gain_strictly() {
+        let mut b = ClipBuffer::new(2, 2);
+        assert!(b.push(&[1.0, 0.0], 1.0));
+        assert!(b.push(&[2.0, 0.0], 2.0));
+        // At capacity: 1.5 strictly beats the min (1.0) and takes its slot.
+        assert!(b.push(&[3.0, 0.0], 1.5));
+        assert_eq!(b.gains, vec![1.5, 2.0]);
+        assert_eq!(b.rows, vec![3.0, 0.0, 2.0, 0.0]);
+        // Below the min: rejected.
+        assert!(!b.push(&[4.0, 0.0], 0.5));
+        // Equal to the min: ties keep the incumbent.
+        assert!(!b.push(&[4.0, 0.0], 1.5));
+        assert_eq!(b.gains, vec![1.5, 2.0]);
+    }
+
+    #[test]
+    fn fills_summary_and_tracks_greedy() {
+        let ds = testkit::clustered(2500, 1);
+        let k = 8;
+        let greedy = testkit::greedy_value(&ds, k);
+        let mut algo = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        testkit::run(&mut algo, &ds);
+        assert_eq!(algo.summary_len(), k);
+        assert!(algo.buffered() == 0, "finalize must drain the buffer");
+        let rel = algo.value() / greedy;
+        assert!(rel > 0.5, "relative performance {rel:.3}");
+        // Memory bound: summary + bounded buffer, never more.
+        assert!(algo.stats().peak_stored <= 3 * k);
+    }
+
+    #[test]
+    fn buffer_swap_fills_at_budget_exhaustion() {
+        // An accept bar nothing clears (alpha = 10 on top of the v = K·m
+        // anchor) forces every admitted item through the deferred buffer,
+        // so the summary is built *entirely* by the finalize swap-in.
+        let ds = testkit::clustered(600, 2);
+        let k = 5;
+        let mut algo = StreamClipper::new(testkit::oracle(k), k, 10.0, 0.01);
+        for row in ds.iter() {
+            algo.process(row);
+        }
+        assert_eq!(algo.summary_len(), 0, "nothing passes the accept bar");
+        assert_eq!(algo.buffered(), 2 * k, "buffer fills to capacity");
+        algo.finalize();
+        assert_eq!(algo.summary_len(), k, "swap-in fills the summary");
+        assert_eq!(algo.buffered(), 0);
+        assert!(algo.value() > 0.0);
+    }
+
+    #[test]
+    fn batched_matches_scalar_bitwise() {
+        let ds = testkit::clustered(900, 3);
+        let k = 6;
+        let d = testkit::DIM;
+        let mut scalar = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        let mut batched = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        for row in ds.iter() {
+            scalar.process(row);
+        }
+        for chunk in ds.raw().chunks(37 * d) {
+            batched.process_batch(chunk);
+        }
+        assert_eq!(scalar.value().to_bits(), batched.value().to_bits());
+        assert_eq!(scalar.summary(), batched.summary());
+        assert_eq!(scalar.stats().queries, batched.stats().queries);
+        assert_eq!(scalar.buffered(), batched.buffered());
+        scalar.finalize();
+        batched.finalize();
+        assert_eq!(scalar.value().to_bits(), batched.value().to_bits());
+        assert_eq!(scalar.summary(), batched.summary());
+    }
+
+    #[test]
+    fn shared_panels_match_plain_batches_bitwise() {
+        let ds = testkit::clustered(1100, 4);
+        let k = 6;
+        let d = testkit::DIM;
+        let mut shared = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        let mut plain = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        plain.set_panel_sharing(false);
+        for chunk in ds.raw().chunks(64 * d) {
+            shared.process_batch(chunk);
+            plain.process_batch(chunk);
+        }
+        assert_eq!(shared.value().to_bits(), plain.value().to_bits());
+        assert_eq!(shared.summary(), plain.summary());
+        let (a, b) = (shared.stats(), plain.stats());
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.peak_stored, b.peak_stored);
+        assert!(a.kernel_evals <= b.kernel_evals);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        let ds = testkit::clustered(1000, 5);
+        let k = 6;
+        let d = testkit::DIM;
+        let half = ds.len() / 2 * d;
+        let mut full = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        for chunk in ds.raw().chunks(64 * d) {
+            full.process_batch(chunk);
+        }
+        let mut first = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        for chunk in ds.raw()[..half].chunks(64 * d) {
+            first.process_batch(chunk);
+        }
+        let state = first.snapshot_state().expect("resumable state");
+        let summary = first.summary();
+        let mut resumed = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        resumed.restore_state(&state, &summary).unwrap();
+        for chunk in ds.raw()[half..].chunks(64 * d) {
+            resumed.process_batch(chunk);
+        }
+        assert_eq!(resumed.value().to_bits(), full.value().to_bits());
+        assert_eq!(resumed.summary(), full.summary());
+        let (a, b) = (resumed.stats(), full.stats());
+        assert_eq!(a.queries, b.queries, "queries continue across the pause");
+        assert_eq!(a.elements, b.elements);
+        assert_eq!(a.stored, b.stored);
+        assert_eq!(a.peak_stored, b.peak_stored);
+        // The deferred buffer must survive the roundtrip bitwise, so the
+        // eventual finalize drains identically.
+        resumed.finalize();
+        full.finalize();
+        assert_eq!(resumed.value().to_bits(), full.value().to_bits());
+        assert_eq!(resumed.summary(), full.summary());
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_state() {
+        let k = 4;
+        let mut algo = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        let err = algo.restore_state(&Json::obj(vec![("algo", Json::str("three-sieves"))]), &[]);
+        assert!(err.unwrap_err().contains("algo mismatch"));
+        let mut other = StreamClipper::new(testkit::oracle(k), k, 2.0, 0.5);
+        let state = other.snapshot_state().unwrap();
+        let err = algo.restore_state(&state, &other.summary()).unwrap_err();
+        assert!(err.contains("alpha"), "{err}");
+    }
+
+    #[test]
+    fn reset_clears_selection_but_keeps_query_totals() {
+        let ds = testkit::clustered(400, 6);
+        let k = 5;
+        let mut algo = StreamClipper::new(testkit::oracle(k), k, 1.0, 0.5);
+        for row in ds.iter() {
+            algo.process(row);
+        }
+        let before = algo.stats();
+        assert!(before.queries > 0);
+        algo.reset();
+        let after = algo.stats();
+        assert_eq!(after.elements, 0);
+        assert_eq!(after.stored, 0);
+        assert_eq!(algo.buffered(), 0);
+        assert_eq!(after.queries, before.queries, "totals stay cumulative across drift resets");
+    }
+}

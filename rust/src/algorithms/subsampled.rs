@@ -1,0 +1,325 @@
+//! **Subsampled streaming** ("Do Less, Get More", Feldman, Karbasi &
+//! Kazemi 2018): thin the stream by keeping each element independently
+//! with probability `p`, then feed the survivors to an inner streaming
+//! algorithm. The expected number of oracle calls drops by the factor
+//! `p` while the approximation guarantee degrades gracefully — the
+//! paper's point is that the trade is strongly in favour of sampling.
+//!
+//! The coin for element `i` is [`crate::util::rng::mix_unit`]`(seed, i)`
+//! — a *stateless* mixer keyed on the element's absolute stream index,
+//! not a sequential RNG. A decision therefore depends only on
+//! `(seed, index)`, which makes the thinned stream invariant to batch
+//! size, thread count and pause/resume boundaries by construction: the
+//! whole parity ladder reduces to the inner algorithm's, which the
+//! wrapper inherits wholesale (`process_batch`, the shared kernel-panel
+//! broker and the solve grid all run *inside* the inner algorithm on the
+//! thinned stream).
+//!
+//! Query accounting: the inner algorithm only ever sees kept elements,
+//! so its `AlgoStats::queries` *is* the reduced oracle-call count; the
+//! wrapper overrides `elements` with the observed (pre-thinning) count
+//! so the reduction is measurable against an unthinned baseline on the
+//! same stream.
+
+use crate::exec::ExecContext;
+use crate::metrics::AlgoStats;
+use crate::util::json::Json;
+use crate::util::rng::mix_unit;
+
+use super::StreamingAlgorithm;
+
+/// The sampling wrapper (see module docs).
+pub struct Subsampled {
+    inner: Box<dyn StreamingAlgorithm>,
+    /// Keep probability in (0, 1].
+    p: f64,
+    seed: u64,
+    /// Absolute stream index of the next element — monotone across
+    /// drift resets so coins never repeat within a session.
+    index: u64,
+    /// Elements observed (kept + dropped) since the last reset.
+    observed: u64,
+    /// Kept elements dropped this session (bench/test hook).
+    kept: u64,
+    /// Contiguous staging for kept rows of the current chunk.
+    keep_buf: Vec<f32>,
+}
+
+impl Subsampled {
+    pub fn new(inner: Box<dyn StreamingAlgorithm>, p: f64, seed: u64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "keep probability must be in (0, 1]");
+        Subsampled { inner, p, seed, index: 0, observed: 0, kept: 0, keep_buf: Vec::new() }
+    }
+
+    /// Kept-element count (the thinned stream's length so far).
+    pub fn kept_count(&self) -> u64 {
+        self.kept
+    }
+
+    #[inline]
+    fn keep(&self, index: u64) -> bool {
+        mix_unit(self.seed, index) < self.p
+    }
+}
+
+impl StreamingAlgorithm for Subsampled {
+    fn name(&self) -> String {
+        format!("Subsampled(p={})+{}", self.p, self.inner.name())
+    }
+
+    fn process(&mut self, item: &[f32]) {
+        let idx = self.index;
+        self.index += 1;
+        self.observed += 1;
+        if self.keep(idx) {
+            self.kept += 1;
+            self.inner.process(item);
+        }
+    }
+
+    /// Filter the chunk down to its kept rows (contiguously, preserving
+    /// order) and hand the survivors to the inner algorithm as one
+    /// batch. Because each coin is a pure function of the absolute
+    /// index, the thinned stream — and therefore every inner decision —
+    /// is identical for any chunking of the same input.
+    fn process_batch(&mut self, chunk: &[f32]) {
+        let d = self.inner.dim();
+        debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
+        let total = chunk.len() / d;
+        self.keep_buf.clear();
+        for r in 0..total {
+            if self.keep(self.index + r as u64) {
+                self.keep_buf.extend_from_slice(&chunk[r * d..(r + 1) * d]);
+            }
+        }
+        self.index += total as u64;
+        self.observed += total as u64;
+        self.kept += (self.keep_buf.len() / d) as u64;
+        if !self.keep_buf.is_empty() {
+            // Swap the staging buffer out so the inner call can't alias it.
+            let staged = std::mem::take(&mut self.keep_buf);
+            self.inner.process_batch(&staged);
+            self.keep_buf = staged;
+        }
+    }
+
+    fn finalize(&mut self) {
+        self.inner.finalize();
+    }
+
+    fn set_exec(&mut self, exec: ExecContext) {
+        self.inner.set_exec(exec);
+    }
+
+    fn value(&self) -> f64 {
+        self.inner.value()
+    }
+
+    fn summary(&self) -> Vec<f32> {
+        self.inner.summary()
+    }
+
+    fn summary_len(&self) -> usize {
+        self.inner.summary_len()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    /// The inner stats, with `elements` rebased to the observed
+    /// (pre-thinning) stream so `queries / elements` exposes the
+    /// oracle-call reduction directly.
+    fn stats(&self) -> AlgoStats {
+        let mut st = self.inner.stats();
+        st.elements = self.observed;
+        st
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.observed = 0;
+        self.kept = 0;
+        // `index` deliberately survives: coins are keyed on the absolute
+        // stream position, which keeps ticking across drift resets.
+    }
+
+    fn snapshot_state(&self) -> Option<Json> {
+        let inner = self.inner.snapshot_state()?;
+        Some(Json::obj(vec![
+            ("algo", Json::str("subsampled")),
+            ("p", Json::num(self.p)),
+            ("seed", Json::num(self.seed as f64)),
+            ("index", Json::num(self.index as f64)),
+            ("observed", Json::num(self.observed as f64)),
+            ("kept", Json::num(self.kept as f64)),
+            ("inner", inner),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json, summary: &[f32]) -> Result<(), String> {
+        let field = |name: &str| -> Result<f64, String> {
+            state.get(name).as_f64().ok_or_else(|| format!("checkpoint state missing {name:?}"))
+        };
+        match state.get("algo").as_str() {
+            Some("subsampled") => {}
+            _ => return Err("checkpoint algo mismatch (want subsampled)".into()),
+        }
+        if field("p")?.to_bits() != self.p.to_bits() {
+            return Err("checkpoint p mismatch".into());
+        }
+        if field("seed")? as u64 != self.seed {
+            return Err("checkpoint seed mismatch".into());
+        }
+        let index = field("index")? as u64;
+        let observed = field("observed")? as u64;
+        let kept = field("kept")? as u64;
+        // The inner restore validates everything before mutating, so a
+        // failure below leaves the wrapper untouched too.
+        self.inner.restore_state(state.get("inner"), summary)?;
+        self.index = index;
+        self.observed = observed;
+        self.kept = kept;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testkit;
+    use crate::algorithms::three_sieves::SieveTuning;
+    use crate::algorithms::{SieveStreaming, ThreeSieves};
+
+    fn wrapped(k: usize, p: f64, seed: u64) -> Subsampled {
+        Subsampled::new(Box::new(SieveStreaming::new(testkit::oracle(k), k, 0.1)), p, seed)
+    }
+
+    #[test]
+    fn same_seed_bit_identical_across_batch_sizes() {
+        let ds = testkit::clustered(1200, 1);
+        let k = 6;
+        let d = testkit::DIM;
+        let mut scalar = wrapped(k, 0.5, 7);
+        for row in ds.iter() {
+            scalar.process(row);
+        }
+        for rows in [7usize, 64, 257] {
+            let mut batched = wrapped(k, 0.5, 7);
+            for chunk in ds.raw().chunks(rows * d) {
+                batched.process_batch(chunk);
+            }
+            assert_eq!(scalar.value().to_bits(), batched.value().to_bits(), "rows={rows}");
+            assert_eq!(scalar.summary(), batched.summary(), "rows={rows}");
+            assert_eq!(scalar.stats(), batched.stats(), "rows={rows}");
+            assert_eq!(scalar.kept_count(), batched.kept_count(), "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn thins_oracle_calls_by_roughly_p() {
+        let ds = testkit::clustered(2000, 2);
+        let k = 6;
+        let d = testkit::DIM;
+        let mut plain = SieveStreaming::new(testkit::oracle(k), k, 0.1);
+        let mut thinned = wrapped(k, 0.5, 11);
+        for chunk in ds.raw().chunks(64 * d) {
+            plain.process_batch(chunk);
+            thinned.process_batch(chunk);
+        }
+        let (a, b) = (thinned.stats(), plain.stats());
+        assert_eq!(a.elements, b.elements, "observed stream length is unchanged");
+        assert!(
+            (a.queries as f64) < 0.7 * b.queries as f64,
+            "thinned queries {} not clearly below plain {}",
+            a.queries,
+            b.queries
+        );
+        // The keep rate concentrates around p over 2000 coins.
+        let rate = thinned.kept_count() as f64 / a.elements as f64;
+        assert!((rate - 0.5).abs() < 0.08, "keep rate {rate:.3}");
+    }
+
+    #[test]
+    fn different_seeds_make_different_decisions() {
+        let ds = testkit::clustered(800, 3);
+        let d = testkit::DIM;
+        let mut a = wrapped(5, 0.5, 1);
+        let mut b = wrapped(5, 0.5, 2);
+        for chunk in ds.raw().chunks(64 * d) {
+            a.process_batch(chunk);
+            b.process_batch(chunk);
+        }
+        assert_ne!(
+            (a.kept_count(), a.stats().queries),
+            (b.kept_count(), b.stats().queries),
+            "independent seeds must thin differently"
+        );
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        let ds = testkit::clustered(1000, 4);
+        let k = 5;
+        let d = testkit::DIM;
+        let half = ds.len() / 2 * d;
+        let inner = |s: u64| {
+            let ts = ThreeSieves::new(testkit::oracle(k), k, 0.01, SieveTuning::FixedT(50));
+            Subsampled::new(Box::new(ts), 0.5, s)
+        };
+        let mut full = inner(9);
+        for chunk in ds.raw().chunks(64 * d) {
+            full.process_batch(chunk);
+        }
+        let mut first = inner(9);
+        for chunk in ds.raw()[..half].chunks(64 * d) {
+            first.process_batch(chunk);
+        }
+        let state = first.snapshot_state().expect("resumable state");
+        let summary = first.summary();
+        let mut resumed = inner(9);
+        resumed.restore_state(&state, &summary).unwrap();
+        for chunk in ds.raw()[half..].chunks(64 * d) {
+            resumed.process_batch(chunk);
+        }
+        assert_eq!(resumed.value().to_bits(), full.value().to_bits());
+        assert_eq!(resumed.summary(), full.summary());
+        let (a, b) = (resumed.stats(), full.stats());
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.elements, b.elements);
+        assert_eq!(a.stored, b.stored);
+        assert_eq!(resumed.kept_count(), full.kept_count());
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_wrapper_state() {
+        let mut a = wrapped(5, 0.5, 1);
+        let bad = Json::obj(vec![("algo", Json::str("subsampled")), ("p", Json::num(0.25))]);
+        let err = a.restore_state(&bad, &[]).unwrap_err();
+        assert!(err.contains("p mismatch"), "{err}");
+    }
+
+    #[test]
+    fn reset_keeps_the_coin_sequence_moving() {
+        let ds = testkit::clustered(300, 5);
+        let mut algo = wrapped(4, 0.5, 3);
+        for row in ds.iter() {
+            algo.process(row);
+        }
+        let kept_before = algo.kept_count();
+        algo.reset();
+        assert_eq!(algo.stats().elements, 0);
+        assert_eq!(algo.kept_count(), 0);
+        for row in ds.iter() {
+            algo.process(row);
+        }
+        // Indices continued past the reset, so the second pass flips
+        // different coins than the first.
+        assert_ne!(algo.kept_count(), 0);
+        assert!(algo.kept_count() != kept_before || algo.stats().elements == 300);
+    }
+}

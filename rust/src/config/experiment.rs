@@ -1,86 +1,18 @@
 //! Experiment configuration: which algorithms, datasets and parameter grids
 //! an experiment driver should sweep. JSON-backed (see `util::json`) so
 //! configs can be checked into `configs/` and passed via `--config`.
+//!
+//! Algorithm selection is registry-backed: [`AlgoSpec`] is the single
+//! table-driven spec from [`crate::algorithms::registry`], so the config
+//! parser, CLI, service wire protocol and sweep expansion all accept the
+//! same names and typed parameters.
 
 use std::path::Path;
 
 use crate::exec::Parallelism;
 use crate::util::json::{Json, JsonError};
 
-/// Which algorithm to instantiate, with its hyperparameters.
-#[derive(Clone, Debug, PartialEq)]
-pub enum AlgoSpec {
-    Greedy,
-    Random { seed: u64 },
-    StreamGreedy { nu: f64 },
-    Preemption,
-    IndependentSetImprovement,
-    SieveStreaming { epsilon: f64 },
-    SieveStreamingPP { epsilon: f64 },
-    Salsa { epsilon: f64, use_length_hint: bool },
-    QuickStream { c: usize, epsilon: f64, seed: u64 },
-    ThreeSieves { epsilon: f64, t: usize },
-    /// Paper §3 scale-out: parallel ThreeSieves instances over disjoint
-    /// threshold partitions — the unit of work the exec pool fans out.
-    ShardedThreeSieves { epsilon: f64, t: usize, shards: usize },
-}
-
-impl AlgoSpec {
-    /// Stable identifier used in CSVs and config files.
-    pub fn id(&self) -> String {
-        match self {
-            AlgoSpec::Greedy => "greedy".into(),
-            AlgoSpec::Random { .. } => "random".into(),
-            AlgoSpec::StreamGreedy { .. } => "stream-greedy".into(),
-            AlgoSpec::Preemption => "preemption".into(),
-            AlgoSpec::IndependentSetImprovement => "isi".into(),
-            AlgoSpec::SieveStreaming { .. } => "sieve-streaming".into(),
-            AlgoSpec::SieveStreamingPP { .. } => "sieve-streaming-pp".into(),
-            AlgoSpec::Salsa { .. } => "salsa".into(),
-            AlgoSpec::QuickStream { c, .. } => format!("quickstream-c{c}"),
-            AlgoSpec::ThreeSieves { t, .. } => format!("three-sieves-t{t}"),
-            AlgoSpec::ShardedThreeSieves { t, shards, .. } => {
-                format!("sharded-three-sieves-t{t}-p{shards}")
-            }
-        }
-    }
-
-    pub fn from_json(j: &Json) -> Result<Self, String> {
-        let kind = j.get("algo").as_str().ok_or("missing algo")?;
-        let eps = || j.get("epsilon").as_f64().unwrap_or(0.001);
-        let seed = || j.get("seed").as_f64().unwrap_or(42.0) as u64;
-        Ok(match kind {
-            "greedy" => AlgoSpec::Greedy,
-            "random" => AlgoSpec::Random { seed: seed() },
-            "stream-greedy" => {
-                AlgoSpec::StreamGreedy { nu: j.get("nu").as_f64().unwrap_or(1e-4) }
-            }
-            "preemption" => AlgoSpec::Preemption,
-            "isi" => AlgoSpec::IndependentSetImprovement,
-            "sieve-streaming" => AlgoSpec::SieveStreaming { epsilon: eps() },
-            "sieve-streaming-pp" => AlgoSpec::SieveStreamingPP { epsilon: eps() },
-            "salsa" => AlgoSpec::Salsa {
-                epsilon: eps(),
-                use_length_hint: j.get("use_length_hint").as_bool().unwrap_or(true),
-            },
-            "quickstream" => AlgoSpec::QuickStream {
-                c: j.get("c").as_usize().unwrap_or(1),
-                epsilon: eps(),
-                seed: seed(),
-            },
-            "three-sieves" => AlgoSpec::ThreeSieves {
-                epsilon: eps(),
-                t: j.get("t").as_usize().unwrap_or(1000),
-            },
-            "sharded-three-sieves" => AlgoSpec::ShardedThreeSieves {
-                epsilon: eps(),
-                t: j.get("t").as_usize().unwrap_or(1000),
-                shards: j.get("shards").as_usize().unwrap_or(4).max(1),
-            },
-            other => return Err(format!("unknown algo {other:?}")),
-        })
-    }
-}
+pub use crate::algorithms::registry::{AlgoSpec, ParamValue};
 
 /// A full experiment sweep description.
 #[derive(Clone, Debug)]
@@ -246,7 +178,9 @@ mod tests {
                 {"algo": "greedy"},
                 {"algo": "three-sieves", "epsilon": 0.001, "t": 500},
                 {"algo": "salsa", "epsilon": 0.001},
-                {"algo": "quickstream", "c": 4}
+                {"algo": "quickstream", "c": 4},
+                {"algo": "stream-clipper", "clipper_alpha": 1.0},
+                {"algo": "subsampled-three-sieves", "subsample_p": 0.25}
               ]
             }"#,
         )
@@ -254,9 +188,11 @@ mod tests {
         assert_eq!(cfg.name, "fig2");
         assert_eq!(cfg.datasets.len(), 2);
         assert_eq!(cfg.ks, vec![5, 10, 20]);
-        assert_eq!(cfg.algos.len(), 4);
+        assert_eq!(cfg.algos.len(), 6);
         assert_eq!(cfg.algos[1].id(), "three-sieves-t500");
         assert_eq!(cfg.algos[3].id(), "quickstream-c4");
+        assert_eq!(cfg.algos[4].id(), "stream-clipper");
+        assert_eq!(cfg.algos[5].num("subsample_p"), 0.25);
     }
 
     #[test]
@@ -266,6 +202,16 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.contains("unknown algo"));
+    }
+
+    #[test]
+    fn mistyped_algo_param_rejected_with_field_name() {
+        // Pre-registry, "nu": "abc" silently became the 1e-4 default.
+        let err = ExperimentConfig::from_json_text(
+            r#"{"algos": [{"algo": "stream-greedy", "nu": "abc"}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("nu"), "error must name the field: {err}");
     }
 
     #[test]
@@ -332,9 +278,9 @@ mod tests {
     #[test]
     fn algo_spec_roundtrip_ids() {
         let specs = [
-            AlgoSpec::Greedy,
-            AlgoSpec::ThreeSieves { epsilon: 0.01, t: 2500 },
-            AlgoSpec::SieveStreamingPP { epsilon: 0.1 },
+            AlgoSpec::greedy(),
+            AlgoSpec::three_sieves(0.01, 2500),
+            AlgoSpec::sieve_streaming_pp(0.1),
         ];
         let ids: Vec<String> = specs.iter().map(|s| s.id()).collect();
         assert_eq!(ids, vec!["greedy", "three-sieves-t2500", "sieve-streaming-pp"]);

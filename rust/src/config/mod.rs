@@ -2,4 +2,4 @@
 
 pub mod experiment;
 
-pub use experiment::{AlgoSpec, ExperimentConfig, ServiceConfig};
+pub use experiment::{AlgoSpec, ExperimentConfig, ParamValue, ServiceConfig};

@@ -24,5 +24,5 @@ pub mod sharded;
 pub use drift::{DriftDetector, MeanShiftDetector, NoDrift};
 pub use page_hinkley::PageHinkleyDetector;
 pub use pipeline::{PipelineConfig, PipelineReport, StreamPipeline};
-pub use race::{race, winner, AlgoFactory, LaneReport, RaceConfig};
+pub use race::{race, registry_lanes, winner, AlgoFactory, LaneReport, RaceConfig};
 pub use sharded::ShardedThreeSieves;

@@ -145,6 +145,31 @@ pub fn race(
         .collect()
 }
 
+/// One race lane per **streaming** registry entry at its default
+/// parameters — the whole competitor field, derived from
+/// [`crate::algorithms::registry`] so a newly registered algorithm joins
+/// the race roster with no code change here. Offline entries (Greedy) are
+/// excluded; they cannot consume a broadcast stream.
+pub fn registry_lanes(
+    dim: usize,
+    k: usize,
+    stream_len: Option<usize>,
+) -> Vec<(String, AlgoFactory)> {
+    use crate::config::AlgoSpec;
+    use crate::functions::{LogDetConfig, NativeLogDet};
+    crate::algorithms::registry::streaming_names()
+        .into_iter()
+        .map(|name| {
+            let spec = AlgoSpec::of(name, &[]).expect("registry name builds at defaults");
+            let factory: AlgoFactory = Box::new(move || {
+                let f = NativeLogDet::new(LogDetConfig::for_streaming(dim, k));
+                spec.build(Box::new(f), k, stream_len)
+            });
+            (name.to_string(), factory)
+        })
+        .collect()
+}
+
 /// Pick the winning lane by value.
 pub fn winner(reports: &[LaneReport]) -> &LaneReport {
     reports
@@ -212,6 +237,23 @@ mod tests {
         let lanes = vec![("t".to_string(), ts_factory(16, 4, 50))];
         let reports = race(src, lanes, RaceConfig { channel_capacity: 1, ..Default::default() });
         assert_eq!(reports[0].stats.elements, 1000);
+    }
+
+    #[test]
+    fn registry_field_races_end_to_end() {
+        let n = 400;
+        let src = registry::source("fact-highlevel-like", n, 5).unwrap();
+        let lanes = registry_lanes(16, 4, Some(n));
+        let expected = crate::algorithms::registry::streaming_names().len();
+        assert_eq!(lanes.len(), expected, "one lane per streaming registry entry");
+        let reports = race(src, lanes, RaceConfig { batch_size: 32, ..Default::default() });
+        assert_eq!(reports.len(), expected);
+        for r in &reports {
+            // Subsampled lanes still observe every element (thinning is
+            // internal and accounted as observed).
+            assert_eq!(r.stats.elements, n as u64, "lane {} missed items", r.name);
+            assert!(r.value > 0.0, "lane {} selected nothing", r.name);
+        }
     }
 
     #[test]

@@ -4,7 +4,8 @@
 
 use std::path::Path;
 
-use crate::config::{AlgoSpec, ExperimentConfig};
+use crate::algorithms::registry::Sweep;
+use crate::config::{AlgoSpec, ExperimentConfig, ParamValue};
 use crate::data::registry;
 use crate::exec::ExecContext;
 use crate::metrics::{write_records, RunRecord};
@@ -30,7 +31,7 @@ pub fn run(cfg: &ExperimentConfig, stream: bool) -> std::io::Result<Vec<RunRecor
         };
         let ds = registry::get(dataset, cfg.n, cfg.seed).unwrap();
         for &k in &cfg.ks {
-            let greedy = run_batch_protocol(&AlgoSpec::Greedy, &ds, k, mode, 1.0).value;
+            let greedy = run_batch_protocol(&AlgoSpec::greedy(), &ds, k, mode, 1.0).value;
             for spec in expand(cfg, &cfg.algos) {
                 let rec = if stream {
                     let mut src = registry::source(dataset, cfg.n, cfg.seed).unwrap();
@@ -66,47 +67,39 @@ pub fn run(cfg: &ExperimentConfig, stream: bool) -> std::io::Result<Vec<RunRecor
     Ok(records)
 }
 
-/// Cross the config's epsilon/T grids into concrete specs.
+/// Cross the config's epsilon/T grids into concrete specs, driven by each
+/// entry's registered sweep dimensions — new algorithms get grid expansion
+/// for free by declaring `sweeps` in their registry entry.
 fn expand(cfg: &ExperimentConfig, specs: &[AlgoSpec]) -> Vec<AlgoSpec> {
     let eps_grid = if cfg.epsilons.is_empty() { vec![0.001] } else { cfg.epsilons.clone() };
     let t_grid = if cfg.ts.is_empty() { vec![1000] } else { cfg.ts.clone() };
     let mut out = Vec::new();
     for spec in specs {
-        match spec {
-            AlgoSpec::ThreeSieves { .. } => {
-                for &eps in &eps_grid {
-                    for &t in &t_grid {
-                        out.push(AlgoSpec::ThreeSieves { epsilon: eps, t });
+        let sweeps = spec.entry().sweeps;
+        let eps = sweeps.contains(&Sweep::Epsilon);
+        let t = sweeps.contains(&Sweep::T);
+        match (eps, t) {
+            (true, true) => {
+                for &e in &eps_grid {
+                    for &tv in &t_grid {
+                        out.push(spec.with(&[
+                            ("epsilon", ParamValue::F64(e)),
+                            ("t", ParamValue::UInt(tv as u64)),
+                        ]));
                     }
                 }
             }
-            AlgoSpec::ShardedThreeSieves { shards, .. } => {
-                for &eps in &eps_grid {
-                    for &t in &t_grid {
-                        out.push(AlgoSpec::ShardedThreeSieves {
-                            epsilon: eps,
-                            t,
-                            shards: *shards,
-                        });
-                    }
+            (true, false) => {
+                for &e in &eps_grid {
+                    out.push(spec.with(&[("epsilon", ParamValue::F64(e))]));
                 }
             }
-            AlgoSpec::SieveStreaming { .. } => {
-                for &eps in &eps_grid {
-                    out.push(AlgoSpec::SieveStreaming { epsilon: eps });
+            (false, true) => {
+                for &tv in &t_grid {
+                    out.push(spec.with(&[("t", ParamValue::UInt(tv as u64))]));
                 }
             }
-            AlgoSpec::SieveStreamingPP { .. } => {
-                for &eps in &eps_grid {
-                    out.push(AlgoSpec::SieveStreamingPP { epsilon: eps });
-                }
-            }
-            AlgoSpec::Salsa { use_length_hint, .. } => {
-                for &eps in &eps_grid {
-                    out.push(AlgoSpec::Salsa { epsilon: eps, use_length_hint: *use_length_hint });
-                }
-            }
-            other => out.push(other.clone()),
+            (false, false) => out.push(spec.clone()),
         }
     }
     out

@@ -31,20 +31,20 @@ impl Default for SweepScale {
 /// ThreeSieves with the paper's T grid.
 fn batch_roster(eps: f64, ts: &[usize], seed: u64) -> Vec<AlgoSpec> {
     let mut algos = vec![
-        AlgoSpec::Random { seed },
-        AlgoSpec::IndependentSetImprovement,
-        AlgoSpec::SieveStreaming { epsilon: eps },
-        AlgoSpec::SieveStreamingPP { epsilon: eps },
-        AlgoSpec::Salsa { epsilon: eps, use_length_hint: true },
+        AlgoSpec::random(seed),
+        AlgoSpec::isi(),
+        AlgoSpec::sieve_streaming(eps),
+        AlgoSpec::sieve_streaming_pp(eps),
+        AlgoSpec::salsa(eps, true),
     ];
     for &t in ts {
-        algos.push(AlgoSpec::ThreeSieves { epsilon: eps, t });
+        algos.push(AlgoSpec::three_sieves(eps, t as u64));
     }
     algos
 }
 
 fn greedy_reference(ds: &crate::data::Dataset, k: usize) -> f64 {
-    run_batch_protocol(&AlgoSpec::Greedy, ds, k, GammaMode::Batch, 1.0).value
+    run_batch_protocol(&AlgoSpec::greedy(), ds, k, GammaMode::Batch, 1.0).value
 }
 
 /// **Figure 1**: relative performance / runtime / memory over ε for fixed
@@ -85,7 +85,7 @@ pub fn fig2(out_dir: &Path, scale: SweepScale, ks: &[usize]) -> std::io::Result<
                 records.push(rec);
             }
             // Greedy row itself (relative = 1.0 by construction).
-            let rec = run_batch_protocol(&AlgoSpec::Greedy, &ds, k, GammaMode::Batch, greedy);
+            let rec = run_batch_protocol(&AlgoSpec::greedy(), &ds, k, GammaMode::Batch, greedy);
             records.push(rec);
         }
     }
@@ -95,7 +95,9 @@ pub fn fig2(out_dir: &Path, scale: SweepScale, ks: &[usize]) -> std::io::Result<
 
 /// **Figure 3**: single-pass streaming with concept drift, relative
 /// performance vs K for ε ∈ {0.1, 0.01}. Salsa is excluded (needs stream
-/// metadata — paper §4.2); Greedy is the batch reference.
+/// metadata — paper §4.2); Greedy is the batch reference. The roster also
+/// carries the competitor field extensions — StreamClipper and the
+/// subsampled variants — so their drift behaviour lands in the same CSVs.
 pub fn fig3(out_dir: &Path, scale: SweepScale, ks: &[usize]) -> std::io::Result<Vec<RunRecord>> {
     let epsilons = [0.1, 0.01];
     let ts = [500usize, 1000, 2500, 5000];
@@ -106,18 +108,21 @@ pub fn fig3(out_dir: &Path, scale: SweepScale, ks: &[usize]) -> std::io::Result<
         for &k in ks {
             let greedy = {
                 let rec =
-                    run_batch_protocol(&AlgoSpec::Greedy, &ds, k, GammaMode::Streaming, 1.0);
+                    run_batch_protocol(&AlgoSpec::greedy(), &ds, k, GammaMode::Streaming, 1.0);
                 rec.value
             };
             for &eps in &epsilons {
                 let mut roster = vec![
-                    AlgoSpec::Random { seed: scale.seed },
-                    AlgoSpec::IndependentSetImprovement,
-                    AlgoSpec::SieveStreaming { epsilon: eps },
-                    AlgoSpec::SieveStreamingPP { epsilon: eps },
+                    AlgoSpec::random(scale.seed),
+                    AlgoSpec::isi(),
+                    AlgoSpec::sieve_streaming(eps),
+                    AlgoSpec::sieve_streaming_pp(eps),
+                    AlgoSpec::stream_clipper(1.0, 0.5),
+                    AlgoSpec::subsampled_sieve_streaming(eps, 0.5, scale.seed),
                 ];
                 for &t in &ts {
-                    roster.push(AlgoSpec::ThreeSieves { epsilon: eps, t });
+                    roster.push(AlgoSpec::three_sieves(eps, t as u64));
+                    roster.push(AlgoSpec::subsampled_three_sieves(eps, t as u64, 0.5, scale.seed));
                 }
                 for spec in roster {
                     // Fresh source per run: single pass over the same drift
@@ -169,7 +174,7 @@ mod tests {
         let greedy = greedy_reference(&ds, 5);
         assert!(greedy > 0.0);
         let rec = run_batch_protocol(
-            &AlgoSpec::ThreeSieves { epsilon: 0.01, t: 100 },
+            &AlgoSpec::three_sieves(0.01, 100),
             &ds,
             5,
             GammaMode::Batch,

@@ -3,9 +3,8 @@
 
 use std::time::Instant;
 
-use crate::algorithms::three_sieves::SieveTuning;
 use crate::algorithms::*;
-use crate::config::AlgoSpec;
+use crate::config::{AlgoSpec, ParamValue};
 use crate::data::{Dataset, StreamSource};
 use crate::exec::ExecContext;
 use crate::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
@@ -34,7 +33,7 @@ pub fn make_oracle(dim: usize, k: usize, mode: GammaMode) -> Box<dyn SubmodularF
     Box::new(NativeLogDet::new(LogDetConfig::with_gamma(dim, k, mode.gamma(dim), 1.0)))
 }
 
-/// Instantiate an algorithm from its spec.
+/// Instantiate an algorithm from its spec via the registry's build table.
 ///
 /// `stream_len`: length hint for Salsa's adaptive rule (None disables it).
 pub fn build_algo(
@@ -44,59 +43,20 @@ pub fn build_algo(
     mode: GammaMode,
     stream_len: Option<usize>,
 ) -> Box<dyn StreamingAlgorithm> {
-    let oracle = || make_oracle(dim, k, mode);
-    match *spec {
-        AlgoSpec::Greedy => Box::new(Greedy::new(oracle(), k)),
-        AlgoSpec::Random { seed } => Box::new(RandomReservoir::new(oracle(), k, seed)),
-        AlgoSpec::StreamGreedy { nu } => Box::new(StreamGreedy::new(oracle(), k, nu)),
-        AlgoSpec::Preemption => Box::new(PreemptionStreaming::new(oracle(), k)),
-        AlgoSpec::IndependentSetImprovement => {
-            Box::new(IndependentSetImprovement::new(oracle(), k))
-        }
-        AlgoSpec::SieveStreaming { epsilon } => Box::new(SieveStreaming::new(oracle(), k, epsilon)),
-        AlgoSpec::SieveStreamingPP { epsilon } => {
-            Box::new(SieveStreamingPP::new(oracle(), k, epsilon))
-        }
-        AlgoSpec::Salsa { epsilon, use_length_hint } => Box::new(Salsa::new(
-            oracle(),
-            k,
-            epsilon,
-            if use_length_hint { stream_len } else { None },
-        )),
-        AlgoSpec::QuickStream { c, epsilon, seed } => {
-            Box::new(QuickStream::new(oracle(), k, c, epsilon, seed))
-        }
-        AlgoSpec::ThreeSieves { epsilon, t } => {
-            Box::new(ThreeSieves::new(oracle(), k, epsilon, SieveTuning::FixedT(t)))
-        }
-        AlgoSpec::ShardedThreeSieves { epsilon, t, shards } => {
-            Box::new(crate::coordinator::ShardedThreeSieves::new(
-                oracle(),
-                k,
-                epsilon,
-                SieveTuning::FixedT(t),
-                shards,
-            ))
-        }
-    }
+    spec.build(make_oracle(dim, k, mode), k, stream_len)
 }
 
-/// T parameter for the record (0 when not applicable).
+/// T parameter for the record (0 when the algorithm has none).
 fn t_of(spec: &AlgoSpec) -> usize {
-    match *spec {
-        AlgoSpec::ThreeSieves { t, .. } | AlgoSpec::ShardedThreeSieves { t, .. } => t,
+    match spec.get("t") {
+        Some(ParamValue::UInt(t)) => *t as usize,
         _ => 0,
     }
 }
 
 fn eps_of(spec: &AlgoSpec) -> f64 {
-    match *spec {
-        AlgoSpec::SieveStreaming { epsilon }
-        | AlgoSpec::SieveStreamingPP { epsilon }
-        | AlgoSpec::Salsa { epsilon, .. }
-        | AlgoSpec::QuickStream { epsilon, .. }
-        | AlgoSpec::ThreeSieves { epsilon, .. }
-        | AlgoSpec::ShardedThreeSieves { epsilon, .. } => epsilon,
+    match spec.get("epsilon") {
+        Some(ParamValue::F64(e)) => *e,
         _ => 0.0,
     }
 }
@@ -129,7 +89,7 @@ pub fn run_batch_protocol_chunked(
     batch_size: usize,
     exec: &ExecContext,
 ) -> RunRecord {
-    if matches!(spec, AlgoSpec::Greedy) {
+    if spec.entry().offline {
         // Offline reference does its native multi-pass (lazy) fit.
         let mut g = Greedy::new(make_oracle(ds.dim(), k, mode), k);
         let start = Instant::now();
@@ -261,23 +221,13 @@ mod tests {
 
     #[test]
     fn builds_every_spec() {
-        let specs = [
-            AlgoSpec::Greedy,
-            AlgoSpec::Random { seed: 1 },
-            AlgoSpec::StreamGreedy { nu: 1e-4 },
-            AlgoSpec::Preemption,
-            AlgoSpec::IndependentSetImprovement,
-            AlgoSpec::SieveStreaming { epsilon: 0.1 },
-            AlgoSpec::SieveStreamingPP { epsilon: 0.1 },
-            AlgoSpec::Salsa { epsilon: 0.1, use_length_hint: true },
-            AlgoSpec::QuickStream { c: 2, epsilon: 0.1, seed: 1 },
-            AlgoSpec::ThreeSieves { epsilon: 0.1, t: 100 },
-            AlgoSpec::ShardedThreeSieves { epsilon: 0.1, t: 100, shards: 3 },
-        ];
-        for spec in &specs {
-            let algo = build_algo(spec, 8, 5, GammaMode::Batch, Some(100));
-            assert_eq!(algo.k(), 5);
-            assert_eq!(algo.dim(), 8);
+        // Every registry entry at its defaults — a new registration is
+        // covered here with no edit to this test.
+        for entry in crate::algorithms::registry::entries() {
+            let spec = AlgoSpec::of(entry.name, &[]).unwrap();
+            let algo = build_algo(&spec, 8, 5, GammaMode::Batch, Some(100));
+            assert_eq!(algo.k(), 5, "{}", entry.name);
+            assert_eq!(algo.dim(), 8, "{}", entry.name);
         }
     }
 
@@ -291,7 +241,7 @@ mod tests {
     fn stream_protocol_produces_record() {
         let mut src = registry::source("fact-highlevel-like", 500, 3).unwrap();
         let rec = run_stream_protocol(
-            &AlgoSpec::ThreeSieves { epsilon: 0.01, t: 50 },
+            &AlgoSpec::three_sieves(0.01, 50),
             src.as_mut(),
             "fact-highlevel-like",
             5,
@@ -306,7 +256,7 @@ mod tests {
 
     #[test]
     fn chunked_stream_protocol_matches_per_item() {
-        let spec = AlgoSpec::ThreeSieves { epsilon: 0.01, t: 50 };
+        let spec = AlgoSpec::three_sieves(0.01, 50);
         let mut records = Vec::new();
         for batch_size in [1usize, 33] {
             let mut src = registry::source("fact-highlevel-like", 700, 5).unwrap();
@@ -332,7 +282,7 @@ mod tests {
         let ds = registry::get("fact-highlevel-like", 300, 4).unwrap();
         // High-threshold ThreeSieves with tiny T needs re-runs to fill.
         let rec = run_batch_protocol(
-            &AlgoSpec::ThreeSieves { epsilon: 0.001, t: 40 },
+            &AlgoSpec::three_sieves(0.001, 40),
             &ds,
             8,
             GammaMode::Batch,

@@ -4,7 +4,11 @@
 //! streaming submodular maximization with the **ThreeSieves** algorithm and
 //! the complete baseline family from the paper (Greedy, Random,
 //! StreamGreedy, PreemptionStreaming, IndependentSetImprovement,
-//! SieveStreaming, SieveStreaming++, Salsa, QuickStream).
+//! SieveStreaming, SieveStreaming++, Salsa, QuickStream) plus the
+//! competitor-field extensions StreamClipper and subsampled streaming.
+//! Every algorithm is registered in [`algorithms::registry`] — the single
+//! table behind config parsing, the CLI, the service OPEN grammar and the
+//! experiment sweeps.
 //!
 //! ## Architecture (three layers)
 //!
@@ -55,10 +59,12 @@ pub mod util;
 
 /// Convenience re-exports for the common workflow.
 pub mod prelude {
+    pub use crate::algorithms::registry::{AlgoSpec, ParamValue};
     pub use crate::algorithms::three_sieves::SieveTuning;
     pub use crate::algorithms::{
         Greedy, IndependentSetImprovement, PreemptionStreaming, QuickStream, RandomReservoir,
-        Salsa, SieveStreaming, SieveStreamingPP, StreamGreedy, StreamingAlgorithm, ThreeSieves,
+        Salsa, SieveStreaming, SieveStreamingPP, StreamClipper, StreamGreedy, StreamingAlgorithm,
+        Subsampled, ThreeSieves,
     };
     pub use crate::data::{Dataset, StreamSource};
     pub use crate::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};

@@ -48,21 +48,8 @@ mod cli {
         FlagDef { name, takes_value: false }
     }
 
-    /// Edit distance for the "did you mean" hint.
-    fn levenshtein(a: &str, b: &str) -> usize {
-        let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
-        let mut prev: Vec<usize> = (0..=b.len()).collect();
-        let mut cur = vec![0usize; b.len() + 1];
-        for (i, &ca) in a.iter().enumerate() {
-            cur[0] = i + 1;
-            for (j, &cb) in b.iter().enumerate() {
-                let sub = prev[j] + usize::from(ca != cb);
-                cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
-            }
-            std::mem::swap(&mut prev, &mut cur);
-        }
-        prev[b.len()]
-    }
+    // The same edit distance the registry uses for --algo suggestions.
+    use threesieves::algorithms::registry::levenshtein;
 
     fn unknown_flag(name: &str, spec: &[FlagDef]) -> String {
         let best = spec
@@ -288,10 +275,6 @@ USAGE:
   threesieves pjrt-info [--artifacts DIR] [--config NAME]
   threesieves datasets
 
-Algorithms (--algo): greedy | random | isi | stream-greedy | preemption |
-  sieve-streaming | sieve-streaming-pp | salsa | quickstream |
-  sharded-three-sieves [--shards P] | three-sieves (default)
-
 --threads fans shard/sieve work out across a worker pool (pair with
 --batch-size); summaries, values and query counts are identical at every
 thread count. In network serve mode it sizes the connection-handler pool.
@@ -301,13 +284,36 @@ STATS/CLOSE/METRICS) — see docs/protocol.md, or try:
   printf 'PING\\n' | nc 127.0.0.1 7777
 ";
 
+/// The static usage text plus the algorithm roster and per-algorithm flag
+/// help, generated from the registry so the CLI cannot drift from it.
+fn usage() -> String {
+    use threesieves::algorithms::registry;
+    let mut s = format!(
+        "{USAGE}\nAlgorithms (--algo, default three-sieves):\n  {}\n",
+        registry::names().join(" | ")
+    );
+    s.push_str("\nAlgorithm flags (from the registry):\n");
+    let mut seen: Vec<&str> = Vec::new();
+    for entry in registry::entries() {
+        for p in entry.params {
+            if let Some(flag) = p.flag {
+                if !seen.contains(&flag) {
+                    seen.push(flag);
+                    s.push_str(&format!("  --{flag:<16} {}\n", p.help));
+                }
+            }
+        }
+    }
+    s
+}
+
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     match run(&argv) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("error: {e}");
-            eprintln!("{USAGE}");
+            eprintln!("{}", usage());
             ExitCode::FAILURE
         }
     }
@@ -320,12 +326,7 @@ const SUMMARIZE_FLAGS: &[FlagDef] = &[
     val("n"),
     val("k"),
     val("algo"),
-    val("epsilon"),
-    val("t"),
     val("seed"),
-    val("nu"),
-    val("c"),
-    val("shards"),
     switch("batch"),
     val("batch-size"),
     val("threads"),
@@ -357,12 +358,7 @@ const SERVE_FLAGS: &[FlagDef] = &[
     val("n"),
     val("k"),
     val("algo"),
-    val("epsilon"),
-    val("t"),
     val("seed"),
-    val("nu"),
-    val("c"),
-    val("shards"),
     val("drift-window"),
     val("drift-threshold"),
     val("checkpoint"),
@@ -378,24 +374,37 @@ const SERVE_FLAGS: &[FlagDef] = &[
 const PJRT_FLAGS: &[FlagDef] = &[val("artifacts"), val("config")];
 const DATASETS_FLAGS: &[FlagDef] = &[switch("stats")];
 
+/// Base flags plus every algorithm parameter flag the registry declares —
+/// commands that take `--algo` accept exactly the registered flag set, so
+/// a new algorithm's knobs appear on the CLI with no edit here.
+fn with_algo_flags(base: &[FlagDef]) -> Vec<FlagDef> {
+    let mut spec = base.to_vec();
+    for flag in threesieves::algorithms::registry::cli_flags() {
+        if !spec.iter().any(|d| d.name == flag) {
+            spec.push(val(flag));
+        }
+    }
+    spec
+}
+
 fn run(argv: &[String]) -> Result<(), String> {
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
     if matches!(cmd, "help" | "--help" | "-h") {
-        println!("{USAGE}");
+        println!("{}", usage());
         return Ok(());
     }
     if cmd.starts_with("--") {
         return Err(format!("expected a command before flags, got {cmd:?}"));
     }
-    let spec: &[FlagDef] = match cmd {
-        "summarize" => SUMMARIZE_FLAGS,
-        "experiment" => EXPERIMENT_FLAGS,
-        "serve" => SERVE_FLAGS,
-        "pjrt-info" => PJRT_FLAGS,
-        "datasets" => DATASETS_FLAGS,
+    let spec: Vec<FlagDef> = match cmd {
+        "summarize" => with_algo_flags(SUMMARIZE_FLAGS),
+        "experiment" => EXPERIMENT_FLAGS.to_vec(),
+        "serve" => with_algo_flags(SERVE_FLAGS),
+        "pjrt-info" => PJRT_FLAGS.to_vec(),
+        "datasets" => DATASETS_FLAGS.to_vec(),
         other => return Err(format!("unknown command {other:?}")),
     };
-    let args = cli::Args::parse(argv, spec)?;
+    let args = cli::Args::parse(argv, &spec)?;
     match cmd {
         "summarize" => cmd_summarize(&args),
         "experiment" => cmd_experiment(&args),
@@ -424,30 +433,11 @@ fn run(argv: &[String]) -> Result<(), String> {
     }
 }
 
+/// Build the algorithm spec from `--algo` plus whatever registered flags
+/// were given; unknown names get the registry's did-you-mean error.
 fn algo_spec(args: &cli::Args) -> Result<AlgoSpec, String> {
-    let eps = args.get_f64("epsilon", 0.001)?;
-    let t = args.get_usize("t", 1000)?;
-    let seed = args.get_u64("seed", 42)?;
-    Ok(match args.get("algo").unwrap_or("three-sieves") {
-        "greedy" => AlgoSpec::Greedy,
-        "random" => AlgoSpec::Random { seed },
-        "isi" => AlgoSpec::IndependentSetImprovement,
-        "stream-greedy" => AlgoSpec::StreamGreedy { nu: args.get_f64("nu", 1e-4)? },
-        "preemption" => AlgoSpec::Preemption,
-        "sieve-streaming" => AlgoSpec::SieveStreaming { epsilon: eps },
-        "sieve-streaming-pp" => AlgoSpec::SieveStreamingPP { epsilon: eps },
-        "salsa" => AlgoSpec::Salsa { epsilon: eps, use_length_hint: true },
-        "quickstream" => {
-            AlgoSpec::QuickStream { c: args.get_usize("c", 2)?, epsilon: eps, seed }
-        }
-        "three-sieves" => AlgoSpec::ThreeSieves { epsilon: eps, t },
-        "sharded-three-sieves" => AlgoSpec::ShardedThreeSieves {
-            epsilon: eps,
-            t,
-            shards: args.get_usize("shards", 4)?.max(1),
-        },
-        other => return Err(format!("unknown algorithm {other:?}")),
-    })
+    let name = args.get("algo").unwrap_or("three-sieves");
+    AlgoSpec::from_flags(name, &|flag| args.get(flag).map(String::from))
 }
 
 /// Parse `--threads off|auto|N` (default off).
@@ -684,6 +674,60 @@ fn cmd_serve_local(args: &cli::Args) -> Result<(), String> {
     println!("backpressure   : {} blocked sends", report.backpressure_hits);
     println!("final f(S)     : {:.6} ({} elements)", report.final_value, report.final_summary_len);
     Ok(())
+}
+
+#[cfg(test)]
+mod algo_flag_tests {
+    use super::*;
+    use threesieves::algorithms::registry;
+
+    fn parse(line: &str) -> cli::Args {
+        let argv: Vec<String> = line.split_whitespace().map(String::from).collect();
+        cli::Args::parse(&argv, &with_algo_flags(SUMMARIZE_FLAGS)).unwrap()
+    }
+
+    #[test]
+    fn every_registry_algo_parses_from_the_cli() {
+        for name in registry::names() {
+            let args = parse(&format!("summarize --algo {name}"));
+            let spec = algo_spec(&args).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec.name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_algo_gets_registry_suggestion_and_roster() {
+        let err = algo_spec(&parse("summarize --algo three-seives")).unwrap_err();
+        assert!(err.contains("did you mean \"three-sieves\""), "{err}");
+        assert!(err.contains("stream-clipper"), "roster must be listed: {err}");
+    }
+
+    #[test]
+    fn registry_flags_reach_the_spec_typed() {
+        let args = parse(
+            "summarize --algo stream-clipper --clipper-alpha 1.5 --clipper-beta 0.25",
+        );
+        let spec = algo_spec(&args).unwrap();
+        assert_eq!(spec.num("clipper_alpha"), 1.5);
+        assert_eq!(spec.num("clipper_beta"), 0.25);
+
+        let args = parse("summarize --algo subsampled --subsample-p 0.3 --seed 9");
+        let spec = algo_spec(&args).unwrap();
+        assert_eq!(spec.name(), "subsampled-sieve-streaming");
+        assert_eq!(spec.num("subsample_p"), 0.3);
+        assert_eq!(spec.uint("seed"), 9);
+    }
+
+    #[test]
+    fn usage_lists_every_registry_name_and_flag() {
+        let text = usage();
+        for name in registry::names() {
+            assert!(text.contains(name), "usage missing algo {name}");
+        }
+        for flag in registry::cli_flags() {
+            assert!(text.contains(&format!("--{flag}")), "usage missing flag --{flag}");
+        }
+    }
 }
 
 fn cmd_pjrt_info(args: &cli::Args) -> Result<(), String> {

@@ -5,11 +5,16 @@
 //! lives in `docs/protocol.md`; the shape is:
 //!
 //! ```text
-//! OPEN <id> k=<K> dim=<D> [algo=<name>] [epsilon=<E>] [t=<T>] ... [drift=<W>:<TH>]
+//! OPEN <id> k=<K> dim=<D> [algo=<name>] [<param>=<v>]... [drift=<W>:<TH>]
 //! PUSH <id> rows=<f32,..>[;<f32,..>...]          (CSV form)
 //! PUSH <id> raw=<base64 of little-endian f32s>   (packed form)
 //! SUMMARY <id> | STATS <id> | CLOSE <id> [discard] | METRICS | PING | QUIT
 //! ```
+//!
+//! `algo=` accepts every name in [`crate::algorithms::registry`], and the
+//! accepted `<param>` keys are exactly the registry's wire-visible
+//! parameter keys — a newly registered algorithm is OPEN-able with no
+//! change to this module.
 //!
 //! Replies start with `OK <VERB>` or `ERR <code> <message>`. All floats are
 //! printed with Rust's shortest-roundtrip formatting, so a value crosses
@@ -98,7 +103,7 @@ impl SessionSpec {
     /// A `three-sieves` session — the paper's O(K)-memory flagship and the
     /// service default.
     pub fn three_sieves(dim: usize, k: usize, epsilon: f64, t: usize) -> Self {
-        SessionSpec { algo: AlgoSpec::ThreeSieves { epsilon, t }, dim, k, drift: None }
+        SessionSpec { algo: AlgoSpec::three_sieves(epsilon, t as u64), dim, k, drift: None }
     }
 }
 
@@ -251,16 +256,6 @@ impl<'a> Params<'a> {
         self.pairs.iter().find(|&&(k, _)| k == key).map(|&(_, v)| v)
     }
 
-    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ParseErr>
-    where
-        T::Err: std::fmt::Display,
-    {
-        match self.get(key) {
-            None => Ok(default),
-            Some(v) => parse_num(key, v),
-        }
-    }
-
     fn required<T: std::str::FromStr>(&self, key: &str) -> Result<T, ParseErr>
     where
         T::Err: std::fmt::Display,
@@ -270,8 +265,13 @@ impl<'a> Params<'a> {
     }
 }
 
-const OPEN_KEYS: &[&str] =
-    &["k", "dim", "algo", "epsilon", "t", "seed", "shards", "nu", "c", "drift"];
+/// The OPEN grammar's allowed keys: the fixed session keys plus every
+/// wire-visible parameter key the registry declares.
+fn open_keys() -> Vec<&'static str> {
+    let mut keys = vec!["k", "dim", "algo", "drift"];
+    keys.extend(crate::algorithms::registry::wire_param_keys());
+    keys
+}
 
 fn parse_open_spec(params: &Params<'_>) -> Result<SessionSpec, ParseErr> {
     let dim: usize = params.required("dim")?;
@@ -279,30 +279,12 @@ fn parse_open_spec(params: &Params<'_>) -> Result<SessionSpec, ParseErr> {
     if dim == 0 || k == 0 {
         return Err(bad("k and dim must be positive"));
     }
-    let eps: f64 = params.num("epsilon", 0.001)?;
-    let t: usize = params.num("t", 1000)?;
-    let seed: u64 = params.num("seed", 42)?;
-    let algo = match params.get("algo").unwrap_or("three-sieves") {
-        "three-sieves" => AlgoSpec::ThreeSieves { epsilon: eps, t },
-        "sharded-three-sieves" => AlgoSpec::ShardedThreeSieves {
-            epsilon: eps,
-            t,
-            shards: params.num("shards", 4usize)?.max(1),
-        },
-        "sieve-streaming" => AlgoSpec::SieveStreaming { epsilon: eps },
-        "sieve-streaming-pp" => AlgoSpec::SieveStreamingPP { epsilon: eps },
-        // The service cannot know a tenant's stream length up front, so
-        // Salsa's length-hint rule is always off here.
-        "salsa" => AlgoSpec::Salsa { epsilon: eps, use_length_hint: false },
-        "quickstream" => {
-            AlgoSpec::QuickStream { c: params.num("c", 2usize)?, epsilon: eps, seed }
-        }
-        "stream-greedy" => AlgoSpec::StreamGreedy { nu: params.num("nu", 1e-4)? },
-        "preemption" => AlgoSpec::Preemption,
-        "isi" => AlgoSpec::IndependentSetImprovement,
-        "random" => AlgoSpec::Random { seed },
-        other => return Err(bad(format!("unknown algo {other:?}"))),
-    };
+    // The registry parses and type-checks the algorithm parameters; wire
+    // pins (e.g. Salsa's length hint — a service stream is unbounded) are
+    // applied inside from_wire.
+    let name = params.get("algo").unwrap_or("three-sieves");
+    let algo =
+        AlgoSpec::from_wire(name, &|key| params.get(key).map(String::from)).map_err(bad)?;
     let drift = match params.get("drift") {
         None => None,
         Some(v) => {
@@ -323,35 +305,9 @@ fn parse_open_spec(params: &Params<'_>) -> Result<SessionSpec, ParseErr> {
 
 fn spec_params(spec: &SessionSpec) -> String {
     use std::fmt::Write;
-    let mut s = format!("k={} dim={}", spec.k, spec.dim);
-    match &spec.algo {
-        AlgoSpec::ThreeSieves { epsilon, t } => {
-            let _ = write!(s, " algo=three-sieves epsilon={epsilon} t={t}");
-        }
-        AlgoSpec::ShardedThreeSieves { epsilon, t, shards } => {
-            let _ = write!(s, " algo=sharded-three-sieves epsilon={epsilon} t={t} shards={shards}");
-        }
-        AlgoSpec::SieveStreaming { epsilon } => {
-            let _ = write!(s, " algo=sieve-streaming epsilon={epsilon}");
-        }
-        AlgoSpec::SieveStreamingPP { epsilon } => {
-            let _ = write!(s, " algo=sieve-streaming-pp epsilon={epsilon}");
-        }
-        AlgoSpec::Salsa { epsilon, .. } => {
-            let _ = write!(s, " algo=salsa epsilon={epsilon}");
-        }
-        AlgoSpec::QuickStream { c, epsilon, seed } => {
-            let _ = write!(s, " algo=quickstream c={c} epsilon={epsilon} seed={seed}");
-        }
-        AlgoSpec::StreamGreedy { nu } => {
-            let _ = write!(s, " algo=stream-greedy nu={nu}");
-        }
-        AlgoSpec::Preemption => s.push_str(" algo=preemption"),
-        AlgoSpec::IndependentSetImprovement => s.push_str(" algo=isi"),
-        AlgoSpec::Random { seed } => {
-            let _ = write!(s, " algo=random seed={seed}");
-        }
-        AlgoSpec::Greedy => s.push_str(" algo=greedy"),
+    let mut s = format!("k={} dim={} algo={}", spec.k, spec.dim, spec.algo.name());
+    for token in spec.algo.wire_tokens() {
+        let _ = write!(s, " {token}");
     }
     if let Some((w, th)) = spec.drift {
         let _ = write!(s, " drift={w}:{th}");
@@ -429,7 +385,7 @@ impl Request {
         match verb.to_ascii_uppercase().as_str() {
             "OPEN" => {
                 let id = session_id(1)?;
-                let params = Params::parse(&tokens[2..], OPEN_KEYS)?;
+                let params = Params::parse(&tokens[2..], &open_keys())?;
                 Ok(Request::Open { id, spec: parse_open_spec(&params)? })
             }
             "PUSH" => {
@@ -778,28 +734,26 @@ mod tests {
         let specs = [
             SessionSpec::three_sieves(16, 8, 0.001, 500),
             SessionSpec {
-                algo: AlgoSpec::ShardedThreeSieves { epsilon: 0.01, t: 100, shards: 4 },
+                algo: AlgoSpec::sharded_three_sieves(0.01, 100, 4),
                 dim: 8,
                 k: 5,
                 drift: Some((200, 3.5)),
             },
+            SessionSpec { algo: AlgoSpec::sieve_streaming_pp(0.05), dim: 4, k: 3, drift: None },
+            SessionSpec { algo: AlgoSpec::salsa(0.1, false), dim: 4, k: 3, drift: None },
+            SessionSpec { algo: AlgoSpec::quickstream(3, 0.1, 7), dim: 4, k: 3, drift: None },
+            SessionSpec { algo: AlgoSpec::stream_clipper(1.5, 0.25), dim: 4, k: 3, drift: None },
             SessionSpec {
-                algo: AlgoSpec::SieveStreamingPP { epsilon: 0.05 },
+                algo: AlgoSpec::subsampled_sieve_streaming(0.1, 0.5, 9),
                 dim: 4,
                 k: 3,
                 drift: None,
             },
             SessionSpec {
-                algo: AlgoSpec::Salsa { epsilon: 0.1, use_length_hint: false },
+                algo: AlgoSpec::subsampled_three_sieves(0.05, 200, 0.25, 11),
                 dim: 4,
                 k: 3,
-                drift: None,
-            },
-            SessionSpec {
-                algo: AlgoSpec::QuickStream { c: 3, epsilon: 0.1, seed: 7 },
-                dim: 4,
-                k: 3,
-                drift: None,
+                drift: Some((100, 2.0)),
             },
         ];
         for spec in specs {
@@ -807,6 +761,37 @@ mod tests {
             let back = Request::parse(&req.to_line()).unwrap();
             assert_eq!(back, req, "line: {}", req.to_line());
         }
+    }
+
+    #[test]
+    fn open_accepts_every_registry_name() {
+        // The OPEN grammar is registry-driven: every registered name (and
+        // its wire-roundtripped default spec) must parse. Offline entries
+        // parse too — the session manager is what refuses them.
+        for entry in crate::algorithms::registry::entries() {
+            let line = format!("OPEN t k=3 dim=4 algo={}", entry.name);
+            let req = Request::parse(&line).unwrap_or_else(|e| panic!("{line}: {e:?}"));
+            let Request::Open { spec, .. } = req else { panic!("{line}") };
+            assert_eq!(spec.algo.name(), entry.name);
+            let reopened = Request::Open { id: "t".into(), spec: spec.clone() };
+            let back = Request::parse(&reopened.to_line()).unwrap();
+            assert_eq!(back, Request::Open { id: "t".into(), spec });
+        }
+    }
+
+    #[test]
+    fn open_unknown_algo_suggests_registry_name() {
+        let err = Request::parse("OPEN t k=2 dim=2 algo=three-seives").unwrap_err();
+        assert_eq!(err.0, ErrorCode::BadRequest);
+        assert!(err.1.contains("did you mean \"three-sieves\""), "{}", err.1);
+    }
+
+    #[test]
+    fn open_rejects_mistyped_registry_params() {
+        let err = Request::parse("OPEN t k=2 dim=2 algo=stream-clipper clipper_alpha=abc")
+            .unwrap_err();
+        assert_eq!(err.0, ErrorCode::BadRequest);
+        assert!(err.1.contains("clipper_alpha"), "{}", err.1);
     }
 
     #[test]

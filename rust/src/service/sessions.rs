@@ -37,7 +37,7 @@ use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 use crate::algorithms::StreamingAlgorithm;
-use crate::config::{AlgoSpec, ServiceConfig};
+use crate::config::ServiceConfig;
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::drift::{DriftDetector, MeanShiftDetector, NoDrift};
 use crate::experiments::runner::make_oracle;
@@ -227,10 +227,11 @@ fn build_session_algo(spec: &SessionSpec) -> Result<Box<dyn StreamingAlgorithm>,
     if spec.dim == 0 || spec.k == 0 {
         return Err(ServiceError::Invalid("k and dim must be positive".into()));
     }
-    if matches!(spec.algo, AlgoSpec::Greedy) {
-        return Err(ServiceError::Invalid(
-            "greedy is an offline algorithm; pick a streaming one".into(),
-        ));
+    if spec.algo.entry().offline {
+        return Err(ServiceError::Invalid(format!(
+            "{} is an offline algorithm; pick a streaming one",
+            spec.algo.name()
+        )));
     }
     // Thread-safety gate: `build_algo` constructs every oracle through
     // `make_oracle`, so probing one instance vouches for the family the
@@ -662,6 +663,7 @@ impl SessionManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::AlgoSpec;
     use crate::data::registry;
     use std::time::Duration;
 
@@ -738,7 +740,7 @@ mod tests {
             Err(ServiceError::DimMismatch { .. })
         ));
         assert!(matches!(
-            mgr.open("u", &SessionSpec { algo: AlgoSpec::Greedy, dim: 4, k: 3, drift: None }),
+            mgr.open("u", &SessionSpec { algo: AlgoSpec::greedy(), dim: 4, k: 3, drift: None }),
             Err(ServiceError::Invalid(_))
         ));
         assert!(matches!(mgr.open("bad id", &spec(4, 3)), Err(ServiceError::Invalid(_))));

@@ -27,6 +27,27 @@ fn rotl(x: u64, k: u32) -> u64 {
     x.rotate_left(k)
 }
 
+/// Stateless counter mixer: the SplitMix64 finalizer over `a + b·φ`.
+///
+/// Unlike [`Rng`], which is sequential, `mix64(seed, index)` is a pure
+/// function of its arguments — a streaming decision keyed on an element's
+/// absolute stream index is therefore invariant to batch size, thread
+/// count and pause/resume boundaries *by construction*. The subsampled
+/// streaming wrapper ([`crate::algorithms::Subsampled`]) rests on this.
+#[inline]
+pub fn mix64(a: u64, b: u64) -> u64 {
+    let mut z = a.wrapping_add(b.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// [`mix64`] mapped to [0, 1) with full double precision (53 high bits).
+#[inline]
+pub fn mix_unit(a: u64, b: u64) -> f64 {
+    (mix64(a, b) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
 impl Rng {
     /// Seed deterministically from a single u64 (SplitMix64 expansion).
     pub fn seed_from(seed: u64) -> Self {

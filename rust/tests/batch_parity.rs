@@ -11,7 +11,8 @@
 
 use threesieves::algorithms::three_sieves::SieveTuning;
 use threesieves::algorithms::{
-    RandomReservoir, Salsa, SieveStreaming, SieveStreamingPP, StreamingAlgorithm, ThreeSieves,
+    RandomReservoir, Salsa, SieveStreaming, SieveStreamingPP, StreamClipper, StreamingAlgorithm,
+    Subsampled, ThreeSieves,
 };
 use threesieves::coordinator::ShardedThreeSieves;
 use threesieves::data::synthetic::{Mixture, MixtureSource};
@@ -274,6 +275,40 @@ fn blocked_solve_matches_per_candidate_across_algorithms() {
         assert_eq!(blocked.summary(), percand.summary(), "{name}: summary rows");
         assert_eq!(blocked.stats(), percand.stats(), "{name}: stats (incl. kernel_evals)");
         assert!(blocked.stats().queries > 0, "{name}: workload must exercise the oracle");
+    }
+}
+
+#[test]
+fn stream_clipper_batch_parity() {
+    // Two thresholds move independently within a chunk (accepts raise τ,
+    // deferrals mutate the clip buffer) — the batched scan must replay
+    // both exactly.
+    let ds = stream(1500, 20);
+    let k = 6;
+    for chunk in CHUNKS {
+        let mut a = StreamClipper::new(oracle(k), k, 1.0, 0.5);
+        let mut b = StreamClipper::new(oracle(k), k, 1.0, 0.5);
+        assert_parity(&mut a, &mut b, &ds, chunk);
+    }
+}
+
+#[test]
+fn subsampled_batch_parity() {
+    // The coin is indexed by absolute stream position, not position in
+    // chunk, so any chunking keeps the identical kept set and hands the
+    // inner algorithm the identical thinned stream.
+    let ds = stream(1500, 21);
+    let k = 6;
+    for chunk in CHUNKS {
+        let mut a = Subsampled::new(Box::new(SieveStreaming::new(oracle(k), k, 0.1)), 0.5, 7);
+        let mut b = Subsampled::new(Box::new(SieveStreaming::new(oracle(k), k, 0.1)), 0.5, 7);
+        assert_parity(&mut a, &mut b, &ds, chunk);
+    }
+    for chunk in [7usize, 64] {
+        let inner = || Box::new(ThreeSieves::new(oracle(k), k, 0.05, SieveTuning::FixedT(25)));
+        let mut a = Subsampled::new(inner(), 0.25, 9);
+        let mut b = Subsampled::new(inner(), 0.25, 9);
+        assert_parity(&mut a, &mut b, &ds, chunk);
     }
 }
 

@@ -8,7 +8,7 @@
 //! reorders or splits it (see `rust/src/exec/`).
 
 use threesieves::algorithms::three_sieves::SieveTuning;
-use threesieves::algorithms::{Salsa, SieveStreaming, StreamingAlgorithm};
+use threesieves::algorithms::{Salsa, SieveStreaming, StreamClipper, StreamingAlgorithm, Subsampled};
 use threesieves::coordinator::checkpoint::Checkpoint;
 use threesieves::coordinator::{race, AlgoFactory, RaceConfig, ShardedThreeSieves};
 use threesieves::data::synthetic::{Mixture, MixtureSource};
@@ -89,6 +89,30 @@ fn salsa_thread_invariance() {
     let n = ds.len();
     let build =
         || -> Box<dyn StreamingAlgorithm> { Box::new(Salsa::new(oracle(k), k, 0.2, Some(n))) };
+    assert_thread_invariant(&build, &ds);
+}
+
+#[test]
+fn stream_clipper_thread_invariance() {
+    // The clip buffer mutates only in the sequential Phase B of the grid
+    // driver, so its contents — and therefore the finalize-time swap-ins —
+    // must be identical at every thread count.
+    let ds = stream(1500, 37);
+    let k = 6;
+    let build =
+        || -> Box<dyn StreamingAlgorithm> { Box::new(StreamClipper::new(oracle(k), k, 1.0, 0.5)) };
+    assert_thread_invariant(&build, &ds);
+}
+
+#[test]
+fn subsampled_thread_invariance() {
+    // The coin sequence depends only on (seed, index); the pool never sees
+    // the dropped rows, so the inner fan-out stays invariant too.
+    let ds = stream(1500, 38);
+    let k = 6;
+    let build = || -> Box<dyn StreamingAlgorithm> {
+        Box::new(Subsampled::new(Box::new(SieveStreaming::new(oracle(k), k, 0.1)), 0.5, 7))
+    };
     assert_thread_invariant(&build, &ds);
 }
 

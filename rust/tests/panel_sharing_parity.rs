@@ -16,7 +16,9 @@
 //! instance (fresh row store, replayed interning) must continue
 //! bit-identically to the run that never paused.
 
-use threesieves::algorithms::{Salsa, SieveStreaming, SieveStreamingPP, StreamingAlgorithm};
+use threesieves::algorithms::{
+    Salsa, SieveStreaming, SieveStreamingPP, StreamClipper, StreamingAlgorithm, Subsampled,
+};
 use threesieves::data::synthetic::{Mixture, MixtureSource};
 use threesieves::data::{Dataset, StreamSource};
 use threesieves::exec::{ExecContext, Parallelism};
@@ -158,6 +160,42 @@ fn salsa_panel_sharing_parity() {
         let mut a = Salsa::new(oracle(k), k, 0.2, Some(n));
         a.set_panel_sharing(false);
         Box::new(a)
+    };
+    assert_panel_sharing_parity(&shared, &per_sieve, &ds);
+}
+
+#[test]
+fn stream_clipper_panel_sharing_parity() {
+    // One sieve plus a clip buffer whose deferrals ride the same first-hit
+    // scan — the broker must leave the buffer's contents untouched too
+    // (summary and value would drift at finalize otherwise).
+    let ds = stream(1500, 49);
+    let k = 6;
+    let shared = || -> Box<dyn StreamingAlgorithm> {
+        Box::new(StreamClipper::new(oracle(k), k, 1.0, 0.5))
+    };
+    let per_sieve = || -> Box<dyn StreamingAlgorithm> {
+        let mut a = StreamClipper::new(oracle(k), k, 1.0, 0.5);
+        a.set_panel_sharing(false);
+        Box::new(a)
+    };
+    assert_panel_sharing_parity(&shared, &per_sieve, &ds);
+}
+
+#[test]
+fn subsampled_panel_sharing_parity() {
+    // The wrapper thins the chunk *before* the inner algorithm sees it, so
+    // the broker operates on the kept rows only — parity must hold through
+    // the extra indirection (incl. the forwarded exec context).
+    let ds = stream(1500, 50);
+    let k = 6;
+    let shared = || -> Box<dyn StreamingAlgorithm> {
+        Box::new(Subsampled::new(Box::new(SieveStreaming::new(oracle(k), k, 0.1)), 0.5, 7))
+    };
+    let per_sieve = || -> Box<dyn StreamingAlgorithm> {
+        let mut inner = SieveStreaming::new(oracle(k), k, 0.1);
+        inner.set_panel_sharing(false);
+        Box::new(Subsampled::new(Box::new(inner), 0.5, 7))
     };
     assert_panel_sharing_parity(&shared, &per_sieve, &ds);
 }

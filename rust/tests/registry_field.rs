@@ -1,0 +1,152 @@
+//! The single-registry acceptance gate: every construction and dispatch
+//! surface — config specs, CLI flags, the service OPEN grammar, the race
+//! coordinator, the docs — agrees with `algorithms::registry` on the
+//! exact algorithm name set. Registering a future algorithm therefore
+//! touches exactly one file (`rust/src/algorithms/registry.rs`); this
+//! suite is what enforces that promise.
+
+use threesieves::algorithms::registry::{self, markdown_table, AlgoSpec};
+use threesieves::algorithms::StreamingAlgorithm;
+use threesieves::coordinator::registry_lanes;
+use threesieves::data::synthetic::{Mixture, MixtureSource};
+use threesieves::data::{Dataset, StreamSource};
+use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+use threesieves::service::Request;
+use threesieves::util::rng::Rng;
+
+const DIM: usize = 8;
+
+fn stream(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from(seed);
+    let mix = Mixture::random(DIM, 4, 5.0, 0.5, &mut rng);
+    let mut ds = MixtureSource::new(mix, n, seed).materialize("registry-field", n);
+    ds.normalize();
+    ds
+}
+
+fn oracle(k: usize) -> Box<dyn SubmodularFunction> {
+    Box::new(NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0)))
+}
+
+/// The name-set equality check: config (`AlgoSpec::of`), CLI
+/// (`AlgoSpec::from_flags`) and wire (`OPEN ... algo=<name>`) all accept
+/// exactly the registry's names — no surface has a private roster.
+#[test]
+fn config_cli_and_protocol_accept_exactly_the_registry_name_set() {
+    for name in registry::names() {
+        let spec = AlgoSpec::of(name, &[]).unwrap_or_else(|e| panic!("config {name}: {e}"));
+        assert_eq!(spec.name(), name);
+        let cli = AlgoSpec::from_flags(name, &|_| None)
+            .unwrap_or_else(|e| panic!("cli {name}: {e}"));
+        assert_eq!(cli.id(), spec.id(), "{name}: CLI defaults drift from registry defaults");
+        let line = format!("OPEN s1 k=3 dim={DIM} algo={name}");
+        match Request::parse(&line) {
+            Ok(Request::Open { spec: open, .. }) => assert_eq!(
+                open.algo.id(),
+                spec.id(),
+                "{name}: wire defaults drift from registry defaults"
+            ),
+            other => panic!("wire {name}: OPEN rejected a registry name: {other:?}"),
+        }
+    }
+    // And nothing else gets in: each surface rejects a near-miss with the
+    // registry's did-you-mean suggestion.
+    let bogus = "three-seives";
+    let config_err = AlgoSpec::of(bogus, &[]).unwrap_err();
+    let cli_err = AlgoSpec::from_flags(bogus, &|_| None).unwrap_err();
+    let wire_err = match Request::parse(&format!("OPEN s1 k=3 dim={DIM} algo={bogus}")) {
+        Err((_, msg)) => msg,
+        Ok(req) => panic!("wire accepted {bogus:?}: {req:?}"),
+    };
+    for (surface, err) in [("config", config_err), ("cli", cli_err), ("wire", wire_err)] {
+        assert!(err.contains("unknown algo"), "{surface}: {err}");
+        assert!(err.contains("did you mean \"three-sieves\"?"), "{surface}: {err}");
+    }
+}
+
+#[test]
+fn aliases_resolve_to_their_canonical_entries() {
+    for (alias, canonical) in [
+        ("independent-set-improvement", "isi"),
+        ("streamclipper", "stream-clipper"),
+        ("subsampled", "subsampled-sieve-streaming"),
+    ] {
+        let spec = AlgoSpec::of(alias, &[]).unwrap_or_else(|e| panic!("{alias}: {e}"));
+        assert_eq!(spec.name(), canonical, "{alias}");
+    }
+}
+
+/// Every streaming entry builds at defaults and survives a real stream —
+/// the registry's build functions are live code paths, not stubs.
+#[test]
+fn every_streaming_entry_builds_and_runs_end_to_end() {
+    let ds = stream(300, 61);
+    let k = 4;
+    for name in registry::streaming_names() {
+        let spec = AlgoSpec::of(name, &[]).unwrap();
+        let mut algo = spec.build(oracle(k), k, Some(ds.len()));
+        assert_eq!(algo.dim(), DIM, "{name}");
+        assert_eq!(algo.k(), k, "{name}");
+        for block in ds.raw().chunks(64 * DIM) {
+            algo.process_batch(block);
+        }
+        algo.finalize();
+        assert_eq!(algo.stats().elements, ds.len() as u64, "{name}: element accounting");
+        assert!(algo.value() > 0.0, "{name}: selected nothing");
+        assert!(algo.summary_len() > 0 && algo.summary_len() <= k, "{name}: summary size");
+    }
+    // The race roster is the same set, derived from the same table.
+    assert_eq!(registry_lanes(DIM, k, None).len(), registry::streaming_names().len());
+}
+
+/// The README "Algorithms" table is generated output — it must match
+/// `registry::markdown_table()` verbatim so docs cannot drift.
+#[test]
+fn readme_algorithms_table_matches_the_registry() {
+    let readme = include_str!("../../README.md");
+    let table = markdown_table();
+    assert!(
+        readme.contains(&table),
+        "README.md algorithms table is stale; regenerate it from \
+         registry::markdown_table():\n{table}"
+    );
+}
+
+/// The protocol doc's OPEN grammar must list every registry name and every
+/// wire-visible parameter key.
+#[test]
+fn protocol_doc_lists_every_registry_name_and_wire_key() {
+    let doc = include_str!("../../docs/protocol.md");
+    for name in registry::names() {
+        assert!(doc.contains(name), "docs/protocol.md is missing algo name {name:?}");
+    }
+    for key in registry::wire_param_keys() {
+        assert!(doc.contains(key), "docs/protocol.md is missing OPEN key {key:?}");
+    }
+}
+
+/// The point of the subsampled wrapper: measurably fewer oracle queries
+/// than its inner algorithm on the identical stream, with identical
+/// element accounting (the reduction is visible, not hidden by stats).
+#[test]
+fn subsampling_cuts_oracle_queries_measurably() {
+    let ds = stream(1200, 62);
+    let k = 6;
+    let run = |spec: &AlgoSpec| {
+        let mut algo = spec.build(oracle(k), k, Some(ds.len()));
+        for block in ds.raw().chunks(64 * DIM) {
+            algo.process_batch(block);
+        }
+        algo.finalize();
+        algo.stats()
+    };
+    let full = run(&AlgoSpec::sieve_streaming(0.1));
+    let half = run(&AlgoSpec::subsampled_sieve_streaming(0.1, 0.5, 7));
+    assert_eq!(full.elements, half.elements, "observed-element accounting must not shrink");
+    assert!(
+        half.queries * 3 <= full.queries * 2,
+        "p=0.5 must cut queries well below the full stream: {} vs {}",
+        half.queries,
+        full.queries
+    );
+}

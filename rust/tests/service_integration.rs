@@ -42,26 +42,21 @@ fn standalone(spec: &SessionSpec, raw: &[f32]) -> (f64, Vec<f32>, AlgoStats) {
 
 /// One tenant's workload: dataset surrogate + session spec.
 fn tenant(i: usize) -> (&'static str, usize, u64, SessionSpec) {
-    let ts = |eps: f64, t: usize| AlgoSpec::ThreeSieves { epsilon: eps, t };
+    let ts = |eps: f64, t: u64| AlgoSpec::three_sieves(eps, t);
     let spec = |algo: AlgoSpec, dim: usize, k: usize| SessionSpec { algo, dim, k, drift: None };
     match i {
         0 => ("fact-highlevel-like", 400, 1, spec(ts(0.01, 80), 16, 6)),
         1 => ("forestcover-like", 500, 2, spec(ts(0.005, 50), 10, 5)),
-        2 => ("abc-like", 300, 3, spec(AlgoSpec::SieveStreaming { epsilon: 0.1 }, 50, 4)),
-        3 => {
-            ("creditfraud-like", 350, 4, spec(AlgoSpec::SieveStreamingPP { epsilon: 0.1 }, 29, 4))
+        2 => {
+            let algo = AlgoSpec::subsampled_sieve_streaming(0.1, 0.5, 11);
+            ("abc-like", 300, 3, spec(algo, 50, 4))
         }
-        4 => {
-            let algo = AlgoSpec::Salsa { epsilon: 0.1, use_length_hint: false };
-            ("kddcup-like", 300, 5, spec(algo, 41, 4))
-        }
-        5 => {
-            let algo = AlgoSpec::QuickStream { c: 2, epsilon: 0.1, seed: 7 };
-            ("fact-highlevel-like", 450, 6, spec(algo, 16, 5))
-        }
-        6 => ("stream51-like", 400, 7, spec(ts(0.02, 60), 64, 6)),
+        3 => ("creditfraud-like", 350, 4, spec(AlgoSpec::sieve_streaming_pp(0.1), 29, 4)),
+        4 => ("kddcup-like", 300, 5, spec(AlgoSpec::salsa(0.1, false), 41, 4)),
+        5 => ("fact-highlevel-like", 450, 6, spec(AlgoSpec::quickstream(2, 0.1, 7), 16, 5)),
+        6 => ("stream51-like", 400, 7, spec(AlgoSpec::stream_clipper(1.0, 0.5), 64, 6)),
         _ => {
-            let algo = AlgoSpec::ShardedThreeSieves { epsilon: 0.02, t: 60, shards: 3 };
+            let algo = AlgoSpec::sharded_three_sieves(0.02, 60, 3);
             ("examiner-like", 350, 8, spec(algo, 50, 5))
         }
     }
@@ -192,6 +187,63 @@ fn close_reopen_resumes_bit_identically_over_tcp() {
     client.quit().unwrap();
     handle.shutdown();
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Close → re-`OPEN` roundtrip for one spec over real TCP: the checkpoint
+/// must carry resumable state, and the resumed run must finish with the
+/// same values, summary and chunking-invariant stats as a standalone run
+/// that never paused.
+fn assert_resume_roundtrip(tag: &str, spec: SessionSpec, n: usize, seed: u64) {
+    let dir = tmpdir(tag);
+    let cfg = ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        checkpoint_dir: Some(dir.clone()),
+        parallelism: Parallelism::Threads(2),
+        ..ServiceConfig::default()
+    };
+    let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+    let ds = registry::get("fact-highlevel-like", n, seed).unwrap();
+    assert_eq!(ds.dim(), spec.dim, "{tag}: dataset dim");
+    let half = ds.len() / 2 * ds.dim();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    assert!(!client.open(tag, &spec).unwrap(), "{tag}: fresh open");
+    for chunk in ds.raw()[..half].chunks(CHUNK_ROWS * spec.dim) {
+        client.push_packed(tag, chunk).unwrap();
+    }
+    assert!(client.close(tag, false).unwrap(), "{tag}: close must checkpoint");
+    let ck = Checkpoint::load(&dir.join(format!("{tag}.ckpt"))).unwrap();
+    assert_ne!(ck.state, Json::Null, "{tag}: resumable state must be persisted");
+    assert!(client.open(tag, &spec).unwrap(), "{tag}: must resume from checkpoint");
+    for chunk in ds.raw()[half..].chunks(CHUNK_ROWS * spec.dim) {
+        client.push_packed(tag, chunk).unwrap();
+    }
+    let (want_value, want_summary, want_stats) = standalone(&spec, ds.raw());
+    let got = client.summary(tag).unwrap();
+    assert_eq!(got.value.to_bits(), want_value.to_bits(), "{tag}: value");
+    assert_eq!(got.data, want_summary, "{tag}: summary bits");
+    let stats = client.stats(tag).unwrap();
+    assert_eq!(stats.stats.queries, want_stats.queries, "{tag}: queries across the pause");
+    assert_eq!(stats.stats.elements, want_stats.elements, "{tag}: elements");
+    assert_eq!(stats.stats.stored, want_stats.stored, "{tag}: stored");
+    assert_eq!(stats.stats.peak_stored, want_stats.peak_stored, "{tag}: peak_stored");
+    assert_eq!(stats.stats.instances, want_stats.instances, "{tag}: instances");
+    client.quit().unwrap();
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stream_clipper_close_reopen_resumes_bit_identically_over_tcp() {
+    let algo = AlgoSpec::stream_clipper(1.0, 0.5);
+    assert_resume_roundtrip("clip-res", SessionSpec { algo, dim: 16, k: 6, drift: None }, 800, 22);
+}
+
+#[test]
+fn subsampled_close_reopen_resumes_bit_identically_over_tcp() {
+    // The thinning coin's stream index rides the checkpoint, so the
+    // resumed wrapper keeps the identical kept/dropped sequence.
+    let algo = AlgoSpec::subsampled_sieve_streaming(0.1, 0.5, 7);
+    assert_resume_roundtrip("sub-res", SessionSpec { algo, dim: 16, k: 6, drift: None }, 800, 23);
 }
 
 #[test]
