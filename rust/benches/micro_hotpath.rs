@@ -21,15 +21,20 @@
 //!   solve inside `peek_gain_batch` at n ∈ {32, 128}, B ∈ {16, 64} on a
 //!   solve-dominated configuration (the issue-#5 acceptance point:
 //!   blocked wall ≤ per-candidate at n = 128)
+//! * Observability overhead: the same ThreeSieves chunked run with span/
+//!   wall-clock recording off vs on, plus the per-stage (kernel / solve /
+//!   scan) wall breakdown the recording surfaces (the PR-7 acceptance
+//!   point: ≤3% ns/query overhead, gated in CI via `--obs-json`)
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- [--quick] [--json PATH]
 //! [--scaling-json PATH] [--service-json PATH] [--panel-json PATH]
-//! [--solve-json PATH]]`.
+//! [--solve-json PATH] [--obs-json PATH]]`.
 //! `--quick` shrinks iteration counts to CI-smoke scale; `--json PATH`
 //! writes the headline numbers as a JSON object (the CI bench job uploads
 //! it as an artifact so the BENCH_* trajectory populates); the other
-//! `--*-json` flags write the thread-scaling, service-throughput and
-//! panel-sharing numbers as their own artifacts.
+//! `--*-json` flags write the thread-scaling, service-throughput,
+//! panel-sharing and observability-overhead numbers as their own
+//! artifacts.
 
 use std::path::PathBuf;
 
@@ -449,6 +454,72 @@ fn bench_service_sessions(
     svc.push("service_items_per_session", n_per_session as f64);
 }
 
+/// The PR-7 acceptance row: an identical ThreeSieves chunked run with
+/// observability recording off, then on. Min-over-iterations wall keeps
+/// scheduler noise out of the ratio; CI pins `obs_overhead_ratio` ≤ 1.03.
+/// With recording on the oracle's per-stage wall counters populate, so
+/// the same run also yields the kernel / solve / scan stage breakdown.
+fn bench_obs_overhead(n: usize, iters: usize, rep: &mut Report, obs: &mut Report) {
+    let dataset = "fact-highlevel-like";
+    let info = registry::info(dataset).unwrap();
+    let ds = registry::get(dataset, n, 7).unwrap();
+    let (k, batch) = (50usize, 64usize);
+    let mut ns_per_query = [0f64; 2]; // [off, on]
+    let mut breakdown = (0u64, 0u64, 0u64);
+    let mut on_wall_s = 0f64;
+    for (mode, on) in [false, true].into_iter().enumerate() {
+        threesieves::obs::set_enabled(on);
+        let mut queries = 0u64;
+        let stats = bench_loop(1, iters, || {
+            let f = NativeLogDet::new(LogDetConfig::for_streaming(info.dim, k));
+            let mut algo = ThreeSieves::new(Box::new(f), k, 0.001, SieveTuning::FixedT(1000));
+            for chunk in ds.raw().chunks(batch * info.dim) {
+                algo.process_batch(chunk);
+            }
+            let st = algo.stats();
+            queries = st.queries;
+            if on {
+                breakdown = (st.wall_kernel_ns, st.wall_solve_ns, st.wall_scan_ns);
+            }
+            std::hint::black_box(algo.value());
+        });
+        ns_per_query[mode] = stats.min() * 1e9 / queries.max(1) as f64;
+        if on {
+            on_wall_s = stats.min();
+        }
+    }
+    threesieves::obs::set_enabled(false);
+    let ratio = ns_per_query[1] / ns_per_query[0];
+    println!(
+        "obs overhead     d={:<4} K={k:<4} B={batch:<3}: off {:>8.1} ns/q  on {:>8.1} ns/q  \
+         overhead {ratio:.3}x",
+        info.dim, ns_per_query[0], ns_per_query[1]
+    );
+    let (kn, sn, cn) = breakdown;
+    let pct = |ns: u64| 100.0 * ns as f64 / (on_wall_s * 1e9).max(1.0);
+    println!(
+        "obs stages       kernel {:.1}% ({:.2} ms)  solve {:.1}% ({:.2} ms)  \
+         scan {:.1}% ({:.2} ms) of traced wall",
+        pct(kn),
+        kn as f64 / 1e6,
+        pct(sn),
+        sn as f64 / 1e6,
+        pct(cn),
+        cn as f64 / 1e6
+    );
+    for (key, val) in [
+        ("obs_off_ns_per_query".to_string(), ns_per_query[0]),
+        ("obs_on_ns_per_query".to_string(), ns_per_query[1]),
+        ("obs_overhead_ratio".to_string(), ratio),
+        ("obs_wall_kernel_ns".to_string(), kn as f64),
+        ("obs_wall_solve_ns".to_string(), sn as f64),
+        ("obs_wall_scan_ns".to_string(), cn as f64),
+    ] {
+        rep.push(key.clone(), val);
+        obs.push(key, val);
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -477,11 +548,17 @@ fn main() {
         .position(|a| a == "--solve-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let obs_json_path = args
+        .iter()
+        .position(|a| a == "--obs-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let mut rep = Report { entries: Vec::new() };
     let mut scaling = Report { entries: Vec::new() };
     let mut service = Report { entries: Vec::new() };
     let mut panel = Report { entries: Vec::new() };
     let mut solve = Report { entries: Vec::new() };
+    let mut obs = Report { entries: Vec::new() };
 
     println!("== micro hot-path benchmarks{} ==", if quick { " (quick)" } else { "" });
     let gain_iters = if quick { 200 } else { 2000 };
@@ -508,6 +585,9 @@ fn main() {
     bench_panel_sharing(panel_n, panel_iters, &mut rep, &mut panel);
     let (svc_n, svc_iters) = if quick { (2_000, 2) } else { (8_000, 3) };
     bench_service_sessions(svc_n, 8, svc_iters, &mut rep, &mut service);
+    // Last so the global enable toggle cannot leak into the rows above.
+    let (obs_n, obs_iters) = if quick { (4_000, 3) } else { (20_000, 5) };
+    bench_obs_overhead(obs_n, obs_iters, &mut rep, &mut obs);
 
     if let Some(path) = json_path {
         match rep.write(&path) {
@@ -535,6 +615,12 @@ fn main() {
     }
     if let Some(path) = solve_json_path {
         match solve.write(&path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+    if let Some(path) = obs_json_path {
+        match obs.write(&path) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("failed to write {path}: {e}"),
         }

@@ -140,6 +140,9 @@ impl StreamingAlgorithm for Greedy {
             stored: self.oracle.len(),
             peak_stored: self.peak_stored,
             instances: 1,
+            wall_kernel_ns: self.oracle.wall_kernel_ns(),
+            wall_solve_ns: self.oracle.wall_solve_ns(),
+            wall_scan_ns: 0,
         }
     }
 

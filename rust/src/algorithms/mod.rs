@@ -238,6 +238,10 @@ pub(crate) struct Sieve {
     /// SieveStreaming++) find a surviving row's entries again, and lets a
     /// duplicate acceptance reuse an already computed row.
     local_ids: Vec<u32>,
+    /// Wall-ns spent scanning gains against the sieve rule. Advanced only
+    /// while [`obs`](crate::obs) recording is on; surfaced through
+    /// [`AlgoStats::wall_scan_ns`](crate::metrics::AlgoStats).
+    pub(crate) scan_ns: u64,
 }
 
 impl Sieve {
@@ -249,6 +253,7 @@ impl Sieve {
             kv_src: Vec::new(),
             local: Vec::new(),
             local_ids: Vec::new(),
+            scan_ns: 0,
         }
     }
 
@@ -291,7 +296,10 @@ impl Sieve {
             }
             let remaining = total - pos;
             self.oracle.peek_gain_batch(&chunk[pos * dim..], remaining, &mut self.scratch);
-            match sieve_first_hit(self.v, self.oracle.as_ref(), k, &self.scratch[..remaining]) {
+            let t = crate::obs::clock();
+            let hit = sieve_first_hit(self.v, self.oracle.as_ref(), k, &self.scratch[..remaining]);
+            self.scan_ns += crate::obs::lap(t);
+            match hit {
                 Some(j) => {
                     self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
                     wasted += (remaining - (j + 1)) as u64;
@@ -331,7 +339,10 @@ impl Sieve {
             }
             let remaining = total - pos;
             self.gains_shared(panel, pos, remaining);
-            match sieve_first_hit(self.v, self.oracle.as_ref(), k, &self.scratch[..remaining]) {
+            let t = crate::obs::clock();
+            let hit = sieve_first_hit(self.v, self.oracle.as_ref(), k, &self.scratch[..remaining]);
+            self.scan_ns += crate::obs::lap(t);
+            match hit {
                 Some(j) => {
                     self.accept_shared(panel, chunk, dim, pos + j);
                     wasted += (remaining - (j + 1)) as u64;
@@ -688,7 +699,10 @@ pub(crate) fn offer_chunk_grid(
             }
             let count = total - pos[si];
             let s: &mut Sieve = &mut *sieves[si];
-            match first_hit(si, s.v, s.oracle.as_ref(), &s.scratch[..count], pos[si]) {
+            let t = crate::obs::clock();
+            let hit = first_hit(si, s.v, s.oracle.as_ref(), &s.scratch[..count], pos[si]);
+            s.scan_ns += crate::obs::lap(t);
+            match hit {
                 Some(j_rel) => {
                     let j = pos[si] + j_rel;
                     s.accept_shared(panel, chunk, dim, j);
@@ -724,6 +738,9 @@ pub(crate) fn sieve_stats(
         stored,
         peak_stored: *peak,
         instances: sieves.len(),
+        wall_kernel_ns: sieves.iter().map(|s| s.oracle.wall_kernel_ns()).sum(),
+        wall_solve_ns: sieves.iter().map(|s| s.oracle.wall_solve_ns()).sum(),
+        wall_scan_ns: sieves.iter().map(|s| s.scan_ns).sum(),
     }
 }
 

@@ -179,6 +179,11 @@ impl StreamingAlgorithm for QuickStream {
             stored,
             peak_stored: self.peak_stored.max(stored),
             instances: 1,
+            wall_kernel_ns: self.work.wall_kernel_ns()
+                + self.chosen.as_ref().map(|c| c.wall_kernel_ns()).unwrap_or(0),
+            wall_solve_ns: self.work.wall_solve_ns()
+                + self.chosen.as_ref().map(|c| c.wall_solve_ns()).unwrap_or(0),
+            wall_scan_ns: 0,
         }
     }
 

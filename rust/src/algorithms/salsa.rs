@@ -475,6 +475,9 @@ impl StreamingAlgorithm for Salsa {
             stored,
             peak_stored: self.peak_stored.max(stored),
             instances: self.sieves.len(),
+            wall_kernel_ns: self.sieves.iter().map(|s| s.sieve.oracle.wall_kernel_ns()).sum(),
+            wall_solve_ns: self.sieves.iter().map(|s| s.sieve.oracle.wall_solve_ns()).sum(),
+            wall_scan_ns: self.sieves.iter().map(|s| s.sieve.scan_ns).sum(),
         }
     }
 

@@ -545,6 +545,9 @@ impl StreamingAlgorithm for StreamClipper {
             stored,
             peak_stored: self.peak_stored.max(stored),
             instances: 1,
+            wall_kernel_ns: self.sieve.oracle.wall_kernel_ns(),
+            wall_solve_ns: self.sieve.oracle.wall_solve_ns(),
+            wall_scan_ns: self.sieve.scan_ns,
         }
     }
 

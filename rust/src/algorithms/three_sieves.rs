@@ -82,6 +82,10 @@ pub struct ThreeSieves {
     /// Scratch for `process_batch` gain panels.
     gain_buf: Vec<f64>,
     peak_stored: usize,
+    /// Wall-ns spent in the batch threshold scan, advanced only while
+    /// [`obs`](crate::obs) recording is on. Cumulative like the oracle's
+    /// query counter (not cleared by `reset`, not checkpointed).
+    scan_ns: u64,
 }
 
 impl ThreeSieves {
@@ -138,6 +142,7 @@ impl ThreeSieves {
             discounted_kernel_evals: 0,
             gain_buf: Vec::new(),
             peak_stored: 0,
+            scan_ns: 0,
         };
         ts.pop_threshold();
         ts
@@ -305,6 +310,8 @@ impl StreamingAlgorithm for ThreeSieves {
         );
         let mut consumed = 0usize;
         let mut accepted = false;
+        let scan_span = crate::obs::span("sieve-scan");
+        let scan_t = crate::obs::clock();
         for (j, &gain) in gains.iter().enumerate() {
             self.elements += 1;
             consumed = j + 1;
@@ -332,6 +339,8 @@ impl StreamingAlgorithm for ThreeSieves {
                 }
             }
         }
+        self.scan_ns += crate::obs::lap(scan_t);
+        drop(scan_span);
         self.speculative_queries += (total - consumed) as u64;
         self.gain_buf = gains;
         if accepted {
@@ -372,6 +381,9 @@ impl StreamingAlgorithm for ThreeSieves {
             stored: self.oracle.len(),
             peak_stored: self.peak_stored,
             instances: 1,
+            wall_kernel_ns: self.oracle.wall_kernel_ns(),
+            wall_solve_ns: self.oracle.wall_solve_ns(),
+            wall_scan_ns: self.scan_ns,
         }
     }
 

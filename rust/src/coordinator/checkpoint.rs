@@ -76,6 +76,7 @@ impl Checkpoint {
     }
 
     pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        let _g = crate::obs::span("checkpoint-save");
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -119,6 +120,7 @@ impl Checkpoint {
     }
 
     pub fn load(path: &Path) -> Result<Self, CheckpointError> {
+        let _g = crate::obs::span("checkpoint-restore");
         let mut f = std::fs::File::open(path)?;
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic).map_err(|_| CheckpointError::Corrupt("short magic".into()))?;

@@ -152,7 +152,10 @@ impl StreamPipeline {
                     self.write_checkpoint(algo, drift, items, &epoch_path)?;
                     checkpoints += 1;
                 }
-                algo.reset();
+                {
+                    let _g = crate::obs::span("drift-reset");
+                    algo.reset();
+                }
                 reselections += 1;
             }
             let every = self.cfg.checkpoint_every;

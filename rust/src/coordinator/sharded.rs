@@ -375,6 +375,9 @@ impl StreamingAlgorithm for ShardedThreeSieves {
             stored,
             peak_stored: self.peak_stored.max(stored),
             instances: self.shards.len(),
+            wall_kernel_ns: self.shards.iter().map(|s| s.oracle.wall_kernel_ns()).sum(),
+            wall_solve_ns: self.shards.iter().map(|s| s.oracle.wall_solve_ns()).sum(),
+            wall_scan_ns: 0,
         }
     }
 

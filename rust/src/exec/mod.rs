@@ -171,6 +171,11 @@ impl ExecContext {
         R: Send,
         F: Fn(&mut T) -> R + Sync,
     {
+        if crate::obs::enabled() {
+            static UNITS: std::sync::OnceLock<Arc<crate::obs::Counter>> =
+                std::sync::OnceLock::new();
+            UNITS.get_or_init(|| crate::obs::counter("exec.units")).add(units.len() as u64);
+        }
         match self.pool(units.len()) {
             Some(pool) => {
                 let mut work: Vec<AssertThreadSafe<&mut T>> =

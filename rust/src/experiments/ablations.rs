@@ -152,6 +152,9 @@ pub fn walk_direction(dataset: &str, n: usize, k: usize, seed: u64) -> Vec<Ablat
             stored: bottom.oracle.len(),
             peak_stored: bottom.oracle.len(),
             instances: 1,
+            wall_kernel_ns: bottom.oracle.wall_kernel_ns(),
+            wall_solve_ns: bottom.oracle.wall_solve_ns(),
+            wall_scan_ns: 0,
         },
         note: "fills with first barely-novel items".into(),
     });

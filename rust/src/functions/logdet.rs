@@ -52,8 +52,12 @@
 //! as the bench/parity baseline; `benches/micro_hotpath.rs` tracks the
 //! blocked-vs-per-candidate wall ratio in CI (`bench_solve_panel.json`).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
 use crate::exec::ExecContext;
 use crate::kernels::RbfKernel;
+use crate::obs;
 use crate::util::mathx::floor_eps;
 
 use super::panel::{ChunkPanel, PanelScratch, PanelSharing, RowStore, SharedRowStore, SolveScratch};
@@ -306,6 +310,13 @@ pub struct NativeLogDet {
     /// Interned id per summary row, parallel to `feats` rows — only
     /// maintained while a store is attached.
     row_ids: Vec<u32>,
+    /// Wall-ns spent in the kernel stage. Relaxed atomics because the
+    /// pure range solves take `&self` and may run on several worker
+    /// threads at once; advanced only while [`obs`] recording is on
+    /// (see [`SubmodularFunction::wall_kernel_ns`]).
+    wall_kernel_ns: AtomicU64,
+    /// Wall-ns spent in the forward-solve stage (same rules).
+    wall_solve_ns: AtomicU64,
 }
 
 #[inline]
@@ -333,7 +344,18 @@ impl NativeLogDet {
             kernel_evals: 0,
             store: None,
             row_ids: Vec::new(),
+            wall_kernel_ns: AtomicU64::new(0),
+            wall_solve_ns: AtomicU64::new(0),
             cfg,
+        }
+    }
+
+    /// Accumulate elapsed ns since an [`obs::clock`] start. `None`
+    /// (recording off) touches nothing — not even the atomic.
+    #[inline]
+    fn add_wall(acc: &AtomicU64, t: Option<Instant>) {
+        if let Some(t) = t {
+            acc.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
     }
 
@@ -372,7 +394,10 @@ impl NativeLogDet {
             self.z.resize(n, 0.0);
         }
         self.kernel_row(item);
-        forward_solve(&self.chol, &mut self.z, &self.kv[..n], self.cfg.a)
+        let t = obs::clock();
+        let znorm2 = forward_solve(&self.chol, &mut self.z, &self.kv[..n], self.cfg.a);
+        Self::add_wall(&self.wall_solve_ns, t);
+        znorm2
     }
 
     /// RBF kernel row against the summary into `self.kv[..n]`.
@@ -381,6 +406,7 @@ impl NativeLogDet {
     /// row norms and a 4-lane f32 dot (f64 accumulation of lane sums) —
     /// the fastest variant found in the §Perf iteration log.
     fn kernel_row(&mut self, item: &[f32]) {
+        let t = obs::clock();
         let d = self.cfg.dim;
         let gamma = self.cfg.gamma;
         self.kernel_evals += self.n as u64;
@@ -390,6 +416,7 @@ impl NativeLogDet {
             let d2 = xsq + self.row_norms[i] - 2.0 * dot_lanes(item, row);
             self.kv[i] = rbf_entry(gamma, d2);
         }
+        Self::add_wall(&self.wall_kernel_ns, t);
     }
 
     fn gain_from_znorm2(&self, znorm2: f64) -> f64 {
@@ -401,6 +428,8 @@ impl NativeLogDet {
     /// `count` candidates — [`kernel_panel_into`] over the owned panel
     /// scratch, plus the kernel-eval accounting.
     fn kernel_panel(&mut self, items: &[f32], count: usize) {
+        let _g = obs::span("kernel-panel");
+        let t = obs::clock();
         let n = self.n;
         self.kernel_evals += (count * n) as u64;
         if self.panel.len() < count * n {
@@ -416,6 +445,7 @@ impl NativeLogDet {
             count,
             &mut self.panel,
         );
+        Self::add_wall(&self.wall_kernel_ns, t);
     }
 
     /// The blocked-vs-per-candidate dispatch behind **every** batched
@@ -433,6 +463,8 @@ impl NativeLogDet {
         norm2: &mut [f64],
         out: &mut [f64],
     ) {
+        let _g = obs::span("solve-panel");
+        let t = obs::clock();
         let n = self.n;
         debug_assert!(kv.len() == count * n && out.len() >= count);
         let a = self.cfg.a;
@@ -450,6 +482,7 @@ impl NativeLogDet {
                 *o = self.gain_from_znorm2(znorm2);
             }
         }
+        Self::add_wall(&self.wall_solve_ns, t);
     }
 
     /// [`solve_kv_panel`](Self::solve_kv_panel) over a [`SolveScratch`]
@@ -684,6 +717,14 @@ impl SubmodularFunction for NativeLogDet {
         self.kernel_evals
     }
 
+    fn wall_kernel_ns(&self) -> u64 {
+        self.wall_kernel_ns.load(Ordering::Relaxed)
+    }
+
+    fn wall_solve_ns(&self) -> u64 {
+        self.wall_solve_ns.load(Ordering::Relaxed)
+    }
+
     fn panel_sharing(&mut self) -> Option<&mut dyn PanelSharing> {
         Some(self)
     }
@@ -778,6 +819,8 @@ impl PanelSharing for NativeLogDet {
         exec: &ExecContext,
         scratch: &mut PanelScratch,
     ) -> ChunkPanel {
+        let _g = obs::span("kernel-panel");
+        let t = obs::clock();
         let d = self.cfg.dim;
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
         let b = chunk.len() / d;
@@ -821,10 +864,12 @@ impl PanelSharing for NativeLogDet {
             }
         });
         drop(guard);
+        Self::add_wall(&self.wall_kernel_ns, t);
         panel
     }
 
     fn chunk_kernel_row(&mut self, row: &[f32], chunk: &[f32], from: usize, out: &mut [f64]) {
+        let t = obs::clock();
         let d = self.cfg.dim;
         debug_assert_eq!(row.len(), d);
         let b = chunk.len() / d;
@@ -840,6 +885,7 @@ impl PanelSharing for NativeLogDet {
             out[c] = rbf_entry(gamma, d2);
         }
         self.kernel_evals += (b - from) as u64;
+        Self::add_wall(&self.wall_kernel_ns, t);
     }
 
     /// The gather-fed twin of [`SubmodularFunction::peek_gain_batch`]:
@@ -909,6 +955,7 @@ impl PanelSharing for NativeLogDet {
             return;
         }
         scratch.ensure(count, n);
+        let t = obs::clock();
         kernel_panel_into(
             &self.feats,
             &self.row_norms,
@@ -919,6 +966,7 @@ impl PanelSharing for NativeLogDet {
             count,
             &mut scratch.kv,
         );
+        Self::add_wall(&self.wall_kernel_ns, t);
         self.solve_scratch_kv(count, scratch, out);
     }
 

@@ -106,6 +106,20 @@ pub trait SubmodularFunction {
         0
     }
 
+    /// Wall nanoseconds spent in the kernel stage (row/panel evaluation),
+    /// accumulated only while [`obs`](crate::obs) recording is enabled —
+    /// 0 otherwise. Purely diagnostic: never part of parity comparisons.
+    fn wall_kernel_ns(&self) -> u64 {
+        0
+    }
+
+    /// Wall nanoseconds spent in the Cholesky solve stage (forward
+    /// substitution), accumulated only while [`obs`](crate::obs)
+    /// recording is enabled — 0 otherwise.
+    fn wall_solve_ns(&self) -> u64 {
+        0
+    }
+
     /// The cross-sieve kernel-panel-sharing capability
     /// ([`panel::PanelSharing`]), if this oracle separates kernel
     /// evaluation from its solve state. Default `None`: algorithms fall

@@ -53,6 +53,7 @@ pub mod experiments;
 pub mod functions;
 pub mod kernels;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod service;
 pub mod util;

@@ -262,22 +262,30 @@ threesieves — streaming submodular function maximization (ThreeSieves)
 USAGE:
   threesieves summarize --dataset <name> --n <N> --k <K>
                         [--algo <id>] [--epsilon E] [--t T] [--seed S] [--batch]
-                        [--batch-size B] [--threads off|auto|N]
+                        [--batch-size B] [--threads off|auto|N] [--trace-out PATH]
   threesieves experiment <table1|table2|fig1|fig2|fig3|ablations> [--n N] [--out DIR] [--quick]
   threesieves experiment custom --config <file.json> [--stream]
   threesieves serve     --listen ADDR[:PORT]          (multi-tenant network service)
                         [--config FILE] [--max-sessions N] [--max-stored N]
                         [--idle-timeout SECS] [--checkpoint-dir DIR]
                         [--checkpoint-secs S] [--threads off|auto|N] [--max-seconds S]
+                        [--trace-out PATH]
   threesieves serve     --local --dataset <name> --n <N> --k <K>
                         [--drift-window W] [--drift-threshold X] [--checkpoint PATH]
-                        [--batch-size B] [--threads off|auto|N]   (single-stream demo)
+                        [--batch-size B] [--threads off|auto|N] [--trace-out PATH]
+                        (single-stream demo)
   threesieves pjrt-info [--artifacts DIR] [--config NAME]
   threesieves datasets
 
 --threads fans shard/sieve work out across a worker pool (pair with
 --batch-size); summaries, values and query counts are identical at every
 thread count. In network serve mode it sizes the connection-handler pool.
+
+--trace-out enables per-stage tracing spans (kernel panels, solves, sieve
+scans, drift resets, checkpoints, service requests) and writes them as
+Chrome trace-event JSON on exit — open the file in Perfetto
+(ui.perfetto.dev) or chrome://tracing. Selection output is identical with
+tracing on or off.
 
 The network service speaks a newline-delimited protocol (OPEN/PUSH/SUMMARY/
 STATS/CLOSE/METRICS) — see docs/protocol.md, or try:
@@ -330,6 +338,7 @@ const SUMMARIZE_FLAGS: &[FlagDef] = &[
     switch("batch"),
     val("batch-size"),
     val("threads"),
+    val("trace-out"),
 ];
 
 const EXPERIMENT_FLAGS: &[FlagDef] = &[
@@ -369,6 +378,7 @@ const SERVE_FLAGS: &[FlagDef] = &[
     switch("no-reselect"),
     // Shared.
     val("threads"),
+    val("trace-out"),
 ];
 
 const PJRT_FLAGS: &[FlagDef] = &[val("artifacts"), val("config")];
@@ -448,6 +458,26 @@ fn parallelism_arg(args: &cli::Args) -> Result<Parallelism, String> {
     }
 }
 
+/// Parse `--trace-out PATH` and, when present, switch span recording on
+/// before any work runs so the whole command is traced end-to-end. The
+/// caller hands the returned path to [`write_trace`] once the run is done.
+fn trace_out_arg(args: &cli::Args) -> Option<PathBuf> {
+    let path = args.get("trace-out").map(PathBuf::from);
+    if path.is_some() {
+        threesieves::obs::set_enabled(true);
+    }
+    path
+}
+
+/// Export everything recorded since [`trace_out_arg`] as Chrome
+/// trace-event JSON.
+fn write_trace(path: &std::path::Path) -> Result<(), String> {
+    threesieves::obs::write_chrome_trace(path)
+        .map_err(|e| format!("--trace-out {}: {e}", path.display()))?;
+    println!("trace written  : {} (open in Perfetto)", path.display());
+    Ok(())
+}
+
 fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
     let dataset = args.get("dataset").ok_or("--dataset required")?.to_string();
     let n = args.get_usize("n", 10_000)?;
@@ -460,6 +490,7 @@ fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
     let batch_size = args.get_usize("batch-size", 1)?.max(1);
     // Shard/sieve fan-out pool; results are identical at every setting.
     let exec = ExecContext::new(parallelism_arg(args)?);
+    let trace_out = trace_out_arg(args);
 
     let rec = if args.has("batch") {
         let ds = registry::get(&dataset, n, seed)
@@ -486,6 +517,9 @@ fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
     );
     println!("kernel evals   : {}", rec.stats.kernel_evals);
     println!("peak memory    : {} stored elements", rec.stats.peak_stored);
+    if let Some(path) = trace_out {
+        write_trace(&path)?;
+    }
     Ok(())
 }
 
@@ -581,6 +615,7 @@ fn cmd_serve_network(args: &cli::Args, listen: &str) -> Result<(), String> {
     // this window — std has no signal handling, so a graceful Ctrl-C
     // path cannot be promised; prefer --max-seconds for bounded runs.
     let checkpoint_secs = args.get_f64("checkpoint-secs", 60.0)?;
+    let trace_out = trace_out_arg(args);
     let handle = Server::start(cfg.clone(), listen).map_err(|e| e.to_string())?;
     println!("service listening on {}", handle.addr());
     println!(
@@ -627,6 +662,9 @@ fn cmd_serve_network(args: &cli::Args, listen: &str) -> Result<(), String> {
          checkpoints={}",
         m.sessions, m.items_total, m.pushes, m.opens, m.resumes, m.evictions, m.checkpoints
     );
+    if let Some(path) = trace_out {
+        write_trace(&path)?;
+    }
     Ok(())
 }
 
@@ -643,6 +681,7 @@ fn cmd_serve_local(args: &cli::Args) -> Result<(), String> {
     let src = registry::source(&dataset, n, seed).unwrap();
 
     let spec = algo_spec(args)?;
+    let trace_out = trace_out_arg(args);
     let mut algo =
         threesieves::experiments::build_algo(&spec, info.dim, k, GammaMode::Streaming, Some(n));
 
@@ -673,6 +712,9 @@ fn cmd_serve_local(args: &cli::Args) -> Result<(), String> {
     println!("checkpoints    : {}", report.checkpoints_written);
     println!("backpressure   : {} blocked sends", report.backpressure_hits);
     println!("final f(S)     : {:.6} ({} elements)", report.final_value, report.final_summary_len);
+    if let Some(path) = trace_out {
+        write_trace(&path)?;
+    }
     Ok(())
 }
 

@@ -9,7 +9,7 @@
 use std::time::Duration;
 
 /// Snapshot of an algorithm run's resource usage.
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default)]
 pub struct AlgoStats {
     /// Total oracle queries (gain evaluations + state updates).
     pub queries: u64,
@@ -31,6 +31,31 @@ pub struct AlgoStats {
     pub peak_stored: usize,
     /// Number of oracle instances (sieves/sub-algorithms) alive.
     pub instances: usize,
+    /// Wall nanoseconds in the kernel stage (row/panel evaluation).
+    /// Measured only while [`obs`](crate::obs) recording is enabled — 0
+    /// otherwise. Diagnostic, excluded from equality (see `PartialEq`).
+    pub wall_kernel_ns: u64,
+    /// Wall nanoseconds in the Cholesky solve stage (forward
+    /// substitution). Same gating and equality rules as `wall_kernel_ns`.
+    pub wall_solve_ns: u64,
+    /// Wall nanoseconds in the sieve scan/accept stage (threshold
+    /// comparisons + accepts). Same gating and equality rules.
+    pub wall_scan_ns: u64,
+}
+
+/// Equality compares the six *semantic* accounting fields only. The
+/// `wall_*_ns` timings are measured wall clock — different on every run —
+/// so they are excluded the same way `exec_parity` already excludes
+/// measured `kernel_evals` from its thread-invariance comparisons.
+impl PartialEq for AlgoStats {
+    fn eq(&self, other: &Self) -> bool {
+        self.queries == other.queries
+            && self.kernel_evals == other.kernel_evals
+            && self.elements == other.elements
+            && self.stored == other.stored
+            && self.peak_stored == other.peak_stored
+            && self.instances == other.instances
+    }
 }
 
 impl AlgoStats {
@@ -109,6 +134,9 @@ impl RunRecord {
             ("kernel_evals", Json::num(self.stats.kernel_evals as f64)),
             ("peak_stored", Json::num(self.stats.peak_stored as f64)),
             ("summary_size", Json::num(self.summary_size as f64)),
+            ("wall_kernel_ns", Json::num(self.stats.wall_kernel_ns as f64)),
+            ("wall_solve_ns", Json::num(self.stats.wall_solve_ns as f64)),
+            ("wall_scan_ns", Json::num(self.stats.wall_scan_ns as f64)),
         ])
     }
 }

@@ -1,0 +1,274 @@
+//! Process-wide metrics registry: named counters, gauges and log-bucketed
+//! latency histograms.
+//!
+//! Handles are interned by `&'static str` name on first use and shared
+//! behind `Arc`, so call sites can cache them in a `OnceLock` and record
+//! with one relaxed atomic op. Recording is always allowed; sites on hot
+//! paths gate their `Instant::now()` pairs on [`super::enabled`] so the
+//! whole layer costs a single relaxed load when observability is off.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use super::quantile;
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+const BUCKETS: usize = 64;
+
+/// Log-bucketed histogram of u64 samples (nanoseconds by convention).
+///
+/// Bucket `i` holds values in `[2^i, 2^{i+1})` (0 joins bucket 0), so 64
+/// buckets cover the whole u64 range with ≤ 2× relative resolution per
+/// bucket; the exact observed min/max pin the tails. Percentile
+/// extraction walks the bucket counts to the shared fractional rank
+/// ([`quantile::rank`] — the same convention `BenchStats` uses on raw
+/// samples) and interpolates linearly inside the bucket's bounds, clamped
+/// to [min, max]. All state is relaxed atomics: `observe` is lock-free
+/// and safe from any thread.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        v.max(1).ilog2() as usize
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.max.load(Ordering::Relaxed)
+        }
+    }
+
+    /// Percentile estimate from the bucket counts (NaN when empty): the
+    /// shared fractional rank locates a bucket, a linear walk inside the
+    /// bucket's `[2^i, 2^{i+1})` span resolves the value, and the exact
+    /// min/max clamp the result.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let mn = self.min.load(Ordering::Relaxed) as f64;
+        let mx = self.max.load(Ordering::Relaxed) as f64;
+        let r = quantile::rank(total as usize, p);
+        let mut before = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            // This bucket holds the samples at ranks [before, before+c-1].
+            if r <= (before + c - 1) as f64 {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u128 << (i + 1)) as f64;
+                let within = if c == 1 {
+                    0.0
+                } else {
+                    ((r - before as f64) / (c - 1) as f64).clamp(0.0, 1.0)
+                };
+                return (lo + (hi - lo) * within).clamp(mn, mx);
+            }
+            before += c;
+        }
+        mx
+    }
+
+    /// Summary snapshot for the wire (`METRICS HIST`) and bench output.
+    /// Empty histograms snapshot as all-zero rather than NaN so the text
+    /// protocol roundtrips exactly.
+    pub fn snapshot(&self, name: &str) -> HistSnapshot {
+        let count = self.count();
+        let pct = |p: f64| if count == 0 { 0.0 } else { self.percentile(p) };
+        HistSnapshot {
+            name: name.to_string(),
+            count,
+            p50: pct(50.0),
+            p90: pct(90.0),
+            p99: pct(99.0),
+            max: self.max(),
+        }
+    }
+}
+
+/// One histogram's point-in-time summary (the `METRICS HIST` wire unit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub name: String,
+    pub count: u64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: u64,
+}
+
+type Registry<T> = Mutex<BTreeMap<&'static str, Arc<T>>>;
+
+static COUNTERS: Registry<Counter> = Mutex::new(BTreeMap::new());
+static GAUGES: Registry<Gauge> = Mutex::new(BTreeMap::new());
+static HISTOGRAMS: Registry<Histogram> = Mutex::new(BTreeMap::new());
+
+fn lock<T>(reg: &Registry<T>) -> MutexGuard<'_, BTreeMap<&'static str, Arc<T>>> {
+    reg.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn intern<T>(reg: &Registry<T>, name: &'static str, mk: fn() -> T) -> Arc<T> {
+    Arc::clone(lock(reg).entry(name).or_insert_with(|| Arc::new(mk())))
+}
+
+/// Process-wide counter handle for `name` (created on first use).
+pub fn counter(name: &'static str) -> Arc<Counter> {
+    intern(&COUNTERS, name, Counter::default)
+}
+
+/// Process-wide gauge handle for `name` (created on first use).
+pub fn gauge(name: &'static str) -> Arc<Gauge> {
+    intern(&GAUGES, name, Gauge::default)
+}
+
+/// Process-wide histogram handle for `name` (created on first use).
+pub fn histogram(name: &'static str) -> Arc<Histogram> {
+    intern(&HISTOGRAMS, name, Histogram::new)
+}
+
+/// Snapshot every registered histogram in one pass, name-ordered — the
+/// service's `METRICS HIST` reply.
+pub fn histogram_snapshots() -> Vec<HistSnapshot> {
+    lock(&HISTOGRAMS).iter().map(|(name, h)| h.snapshot(name)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = counter("obs.test.counter");
+        let before = c.get();
+        c.add(3);
+        c.add(2);
+        assert_eq!(c.get(), before + 5);
+        // Interning: the same name yields the same cell.
+        counter("obs.test.counter").add(1);
+        assert_eq!(c.get(), before + 6);
+        let g = gauge("obs.test.gauge");
+        g.set(41);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn histogram_single_bucket_is_exact() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.observe(64);
+        }
+        // All mass in one bucket, min == max == 64: every percentile
+        // clamps to the exact value.
+        assert_eq!(h.percentile(50.0), 64.0);
+        assert_eq!(h.percentile(99.0), 64.0);
+        assert_eq!(h.max(), 64);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 6400);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotonic_and_bounded() {
+        let h = Histogram::new();
+        for v in [3u64, 17, 90, 250, 1_000, 4_096, 60_000, 1_000_000] {
+            h.observe(v);
+        }
+        let (p50, p90, p99) = (h.percentile(50.0), h.percentile(90.0), h.percentile(99.0));
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        assert!((3.0..=1_000_000.0).contains(&p50));
+        assert!(p99 <= 1_000_000.0);
+        // Log-bucket resolution: each estimate is within 2x of a true
+        // sample's bucket, so p50 must land in the right decade.
+        assert!((90.0..=2_000.0).contains(&p50), "p50 = {p50}");
+    }
+
+    #[test]
+    fn empty_histogram_snapshot_is_zero() {
+        let h = Histogram::new();
+        assert!(h.percentile(50.0).is_nan());
+        let s = h.snapshot("empty");
+        assert_eq!(s.name, "empty");
+        assert_eq!(s.count, 0);
+        assert_eq!((s.p50, s.p90, s.p99), (0.0, 0.0, 0.0));
+        assert_eq!(s.max, 0);
+    }
+
+    #[test]
+    fn registry_snapshot_contains_registered_names() {
+        histogram("obs.test.hist").observe(1234);
+        let snaps = histogram_snapshots();
+        let mine = snaps.iter().find(|s| s.name == "obs.test.hist").expect("registered");
+        assert!(mine.count >= 1);
+        // Name-ordered (BTreeMap iteration).
+        let names: Vec<&str> = snaps.iter().map(|s| s.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted);
+    }
+}

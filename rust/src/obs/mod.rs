@@ -1,0 +1,72 @@
+//! Observability: metrics registry + scoped tracing spans (PR 7).
+//!
+//! Std-only and zero-dependency. One process-global toggle gates
+//! everything: when off, [`span`] returns a disarmed guard and
+//! [`clock`] returns `None`, so an instrumented hot path costs exactly
+//! one relaxed atomic load — no clock reads, no ring writes, no
+//! histogram updates. When on, spans record into per-thread ring
+//! buffers ([`trace`]) and wall-time deltas accumulate into the stats
+//! counters and the metrics registry ([`metrics`]). Instrumentation
+//! never alters arithmetic or accounting, so every bit-parity suite
+//! holds with tracing enabled.
+
+pub mod metrics;
+pub mod quantile;
+pub mod trace;
+
+pub use metrics::{
+    counter, gauge, histogram, histogram_snapshots, Counter, Gauge, HistSnapshot, Histogram,
+};
+pub use trace::{drain, event_count, snapshot, write_chrome_trace, SpanEvent, SpanGuard};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is observability recording on? One relaxed load — cheap enough for
+/// any hot path.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span/wall recording on or off at runtime. Enabling pins the
+/// trace epoch on first use.
+pub fn set_enabled(on: bool) {
+    if on {
+        trace::init_epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Open a scoped span: records `name` with wall duration when the
+/// returned guard drops. Disarmed (free) when observability is off.
+#[must_use = "span measures until the guard is dropped"]
+pub fn span(name: &'static str) -> SpanGuard {
+    if enabled() {
+        SpanGuard::armed(name)
+    } else {
+        SpanGuard::disarmed()
+    }
+}
+
+/// Start a wall-time measurement: `Some(now)` when recording, `None`
+/// when off (no clock read). Pair with [`lap`].
+#[inline]
+pub fn clock() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Elapsed nanoseconds since a [`clock`] start, or 0 if it was off.
+#[inline]
+pub fn lap(start: Option<Instant>) -> u64 {
+    match start {
+        Some(t) => t.elapsed().as_nanos() as u64,
+        None => 0,
+    }
+}

@@ -1,0 +1,59 @@
+//! The one shared quantile definition.
+//!
+//! Both ends of the crate's latency reporting — `util::timer::BenchStats`
+//! percentiles over raw samples and [`super::Histogram`]'s bucket-walk
+//! extraction — resolve a percentile to the same fractional rank and the
+//! same linear interpolation, so bench output and service histograms can
+//! never disagree about what "p99" means.
+
+/// Fractional rank of percentile `p` (0–100) among `n` ordered samples:
+/// `(p/100)·(n−1)`, the linear-interpolation convention.
+pub fn rank(n: usize, p: f64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64
+}
+
+/// Linearly interpolated percentile over an **ascending-sorted** slice.
+/// Empty input yields NaN (nothing to summarize).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let r = rank(sorted.len(), p);
+    let lo = r.floor() as usize;
+    let hi = r.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = r - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_convention() {
+        assert_eq!(rank(0, 50.0), 0.0);
+        assert_eq!(rank(1, 99.0), 0.0);
+        assert!((rank(4, 50.0) - 1.5).abs() < 1e-12);
+        assert!((rank(4, 100.0) - 3.0).abs() < 1e-12);
+        // Out-of-range percentiles clamp instead of indexing out of bounds.
+        assert_eq!(rank(4, -5.0), 0.0);
+        assert!((rank(4, 250.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert!((percentile_sorted(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 100.0), 4.0);
+        assert!(percentile_sorted(&[], 50.0).is_nan());
+        assert_eq!(percentile_sorted(&[7.0], 99.0), 7.0);
+    }
+}

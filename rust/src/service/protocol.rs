@@ -8,7 +8,7 @@
 //! OPEN <id> k=<K> dim=<D> [algo=<name>] [<param>=<v>]... [drift=<W>:<TH>]
 //! PUSH <id> rows=<f32,..>[;<f32,..>...]          (CSV form)
 //! PUSH <id> raw=<base64 of little-endian f32s>   (packed form)
-//! SUMMARY <id> | STATS <id> | CLOSE <id> [discard] | METRICS | PING | QUIT
+//! SUMMARY <id> | STATS <id> | CLOSE <id> [discard] | METRICS [HIST] | PING | QUIT
 //! ```
 //!
 //! `algo=` accepts every name in [`crate::algorithms::registry`], and the
@@ -23,6 +23,7 @@
 
 use crate::config::AlgoSpec;
 use crate::metrics::AlgoStats;
+use crate::obs::HistSnapshot;
 
 /// Hard cap on one protocol line (requests and responses). The server
 /// closes connections that exceed it mid-line; at the default `dim`s this
@@ -138,6 +139,9 @@ pub enum Request {
     Stats { id: String },
     Close { id: String, discard: bool },
     Metrics,
+    /// `METRICS HIST`: latency-histogram summaries from the process-wide
+    /// [`obs`](crate::obs) registry (p50/p90/p99/max per named histogram).
+    MetricsHist,
     Ping,
     Quit,
 }
@@ -182,6 +186,14 @@ pub struct MetricsSnapshot {
     /// shared-panel broker's saving, observable per service (see
     /// [`AlgoStats::kernel_evals`]).
     pub kernel_evals: u64,
+    /// Wall-ns aggregates over live sessions' stats (kernel / solve /
+    /// scan stages). Measured only while [`obs`](crate::obs) recording is
+    /// on; 0 otherwise. Like the other live aggregates they obey
+    /// `METRICS == Σ STATS` because the snapshot locks all sessions in
+    /// one consistent pass.
+    pub wall_kernel_ns: u64,
+    pub wall_solve_ns: u64,
+    pub wall_scan_ns: u64,
     pub opens: u64,
     pub resumes: u64,
     pub pushes: u64,
@@ -202,6 +214,7 @@ pub enum Response {
     StatsData { id: String, reply: StatsReply },
     Closed { id: String, checkpointed: bool },
     MetricsData(MetricsSnapshot),
+    MetricsHistData(Vec<HistSnapshot>),
     Pong,
     Bye,
     Error { code: ErrorCode, message: String },
@@ -420,7 +433,11 @@ impl Request {
                 };
                 Ok(Request::Close { id, discard })
             }
-            "METRICS" => Ok(Request::Metrics),
+            "METRICS" => match tokens.get(1) {
+                None => Ok(Request::Metrics),
+                Some(&"HIST") => Ok(Request::MetricsHist),
+                Some(other) => Err(bad(format!("METRICS: unexpected token {other:?}"))),
+            },
             "PING" => Ok(Request::Ping),
             "QUIT" => Ok(Request::Quit),
             other => Err((ErrorCode::UnknownCommand, format!("unknown command {other:?}"))),
@@ -453,6 +470,7 @@ impl Request {
                 }
             }
             Request::Metrics => "METRICS".into(),
+            Request::MetricsHist => "METRICS HIST".into(),
             Request::Ping => "PING".into(),
             Request::Quit => "QUIT".into(),
         }
@@ -495,7 +513,8 @@ impl Response {
             }
             Response::StatsData { id, reply } => format!(
                 "OK STATS id={id} elements={} queries={} kernel_evals={} stored={} peak={} \
-                 instances={} len={} value={} drift={}",
+                 instances={} len={} value={} drift={} wall_kernel_ns={} wall_solve_ns={} \
+                 wall_scan_ns={}",
                 reply.stats.elements,
                 reply.stats.queries,
                 reply.stats.kernel_evals,
@@ -504,7 +523,10 @@ impl Response {
                 reply.stats.instances,
                 reply.len,
                 reply.value,
-                reply.drift_events
+                reply.drift_events,
+                reply.stats.wall_kernel_ns,
+                reply.stats.wall_solve_ns,
+                reply.stats.wall_scan_ns
             ),
             Response::Closed { id, checkpointed } => {
                 format!("OK CLOSE id={id} checkpointed={}", u8::from(*checkpointed))
@@ -512,7 +534,7 @@ impl Response {
             Response::MetricsData(m) => format!(
                 "OK METRICS sessions={} stored={} items={} queries={} kernel_evals={} opens={} \
                  resumes={} pushes={} items_total={} evictions={} closes={} checkpoints={} \
-                 uptime_s={} items_per_s={}",
+                 uptime_s={} items_per_s={} wall_kernel_ns={} wall_solve_ns={} wall_scan_ns={}",
                 m.sessions,
                 m.stored,
                 m.items,
@@ -526,8 +548,29 @@ impl Response {
                 m.closes,
                 m.checkpoints,
                 m.uptime_s,
-                m.items_per_s
+                m.items_per_s,
+                m.wall_kernel_ns,
+                m.wall_solve_ns,
+                m.wall_scan_ns
             ),
+            Response::MetricsHistData(hists) => {
+                use std::fmt::Write;
+                let mut s = format!("OK METRICS HIST n={}", hists.len());
+                if !hists.is_empty() {
+                    s.push_str(" hist=");
+                    for (i, h) in hists.iter().enumerate() {
+                        if i > 0 {
+                            s.push(';');
+                        }
+                        let _ = write!(
+                            s,
+                            "{}:{}:{}:{}:{}:{}",
+                            h.name, h.count, h.p50, h.p90, h.p99, h.max
+                        );
+                    }
+                }
+                s
+            }
             Response::Pong => "OK PONG".into(),
             Response::Bye => "OK BYE".into(),
             Response::Error { code, message } => format!("ERR {} {message}", code.as_str()),
@@ -609,6 +652,11 @@ impl Response {
                         stored: num("stored")? as usize,
                         peak_stored: num("peak")? as usize,
                         instances: num("instances")? as usize,
+                        // Absent in pre-PR-7 server replies (same lenient
+                        // default as kernel_evals above).
+                        wall_kernel_ns: num("wall_kernel_ns").unwrap_or(0.0) as u64,
+                        wall_solve_ns: num("wall_solve_ns").unwrap_or(0.0) as u64,
+                        wall_scan_ns: num("wall_scan_ns").unwrap_or(0.0) as u64,
                     },
                     value: num("value")?,
                     len: num("len")? as usize,
@@ -619,22 +667,60 @@ impl Response {
                 id: field("id")?.to_string(),
                 checkpointed: field("checkpointed")? == "1",
             }),
-            "METRICS" => Ok(Response::MetricsData(MetricsSnapshot {
-                sessions: num("sessions")? as usize,
-                stored: num("stored")? as usize,
-                items: num("items")? as u64,
-                queries: num("queries")? as u64,
-                kernel_evals: num("kernel_evals").unwrap_or(0.0) as u64,
-                opens: num("opens")? as u64,
-                resumes: num("resumes")? as u64,
-                pushes: num("pushes")? as u64,
-                items_total: num("items_total")? as u64,
-                evictions: num("evictions")? as u64,
-                closes: num("closes")? as u64,
-                checkpoints: num("checkpoints")? as u64,
-                uptime_s: num("uptime_s")?,
-                items_per_s: num("items_per_s")?,
-            })),
+            "METRICS" => {
+                if tokens.get(1) == Some(&"HIST") {
+                    let n = num("n")? as usize;
+                    let mut hists = Vec::with_capacity(n);
+                    if n > 0 {
+                        for part in field("hist")?.split(';') {
+                            let cells: Vec<&str> = part.split(':').collect();
+                            if cells.len() != 6 {
+                                return Err(format!("METRICS HIST: bad entry {part:?}"));
+                            }
+                            let pf = |i: usize| -> Result<f64, String> {
+                                cells[i]
+                                    .parse()
+                                    .map_err(|e| format!("METRICS HIST {part:?}: {e}"))
+                            };
+                            hists.push(HistSnapshot {
+                                name: cells[0].to_string(),
+                                count: pf(1)? as u64,
+                                p50: pf(2)?,
+                                p90: pf(3)?,
+                                p99: pf(4)?,
+                                max: pf(5)? as u64,
+                            });
+                        }
+                    }
+                    if hists.len() != n {
+                        return Err(format!(
+                            "METRICS HIST: n={n} but {} entries",
+                            hists.len()
+                        ));
+                    }
+                    return Ok(Response::MetricsHistData(hists));
+                }
+                Ok(Response::MetricsData(MetricsSnapshot {
+                    sessions: num("sessions")? as usize,
+                    stored: num("stored")? as usize,
+                    items: num("items")? as u64,
+                    queries: num("queries")? as u64,
+                    kernel_evals: num("kernel_evals").unwrap_or(0.0) as u64,
+                    // Absent in pre-PR-7 replies; default like kernel_evals.
+                    wall_kernel_ns: num("wall_kernel_ns").unwrap_or(0.0) as u64,
+                    wall_solve_ns: num("wall_solve_ns").unwrap_or(0.0) as u64,
+                    wall_scan_ns: num("wall_scan_ns").unwrap_or(0.0) as u64,
+                    opens: num("opens")? as u64,
+                    resumes: num("resumes")? as u64,
+                    pushes: num("pushes")? as u64,
+                    items_total: num("items_total")? as u64,
+                    evictions: num("evictions")? as u64,
+                    closes: num("closes")? as u64,
+                    checkpoints: num("checkpoints")? as u64,
+                    uptime_s: num("uptime_s")?,
+                    items_per_s: num("items_per_s")?,
+                }))
+            }
             "PONG" => Ok(Response::Pong),
             "BYE" => Ok(Response::Bye),
             other => Err(format!("unknown reply verb {other:?}")),
@@ -831,6 +917,7 @@ mod tests {
             Request::Close { id: "c".into(), discard: false },
             Request::Close { id: "c".into(), discard: true },
             Request::Metrics,
+            Request::MetricsHist,
             Request::Ping,
             Request::Quit,
         ] {
@@ -856,6 +943,7 @@ mod tests {
             ("PUSH t raw=!!!!", ErrorCode::BadRow),
             ("PUSH t rows=1 rows=2", ErrorCode::BadRequest),
             ("CLOSE t keep", ErrorCode::BadRequest),
+            ("METRICS BOGUS", ErrorCode::BadRequest),
         ];
         for (line, code) in cases {
             match Request::parse(line) {
@@ -908,6 +996,9 @@ mod tests {
                         stored: 7,
                         peak_stored: 8,
                         instances: 1,
+                        wall_kernel_ns: 1111,
+                        wall_solve_ns: 2222,
+                        wall_scan_ns: 3333,
                     },
                     value: 2.5,
                     len: 7,
@@ -921,6 +1012,9 @@ mod tests {
                 items: 900,
                 queries: 950,
                 kernel_evals: 12345,
+                wall_kernel_ns: 777,
+                wall_solve_ns: 888,
+                wall_scan_ns: 999,
                 opens: 4,
                 resumes: 1,
                 pushes: 30,
@@ -931,6 +1025,25 @@ mod tests {
                 uptime_s: 1.5,
                 items_per_s: 800.0,
             }),
+            Response::MetricsHistData(vec![
+                HistSnapshot {
+                    name: "service.request_ns".into(),
+                    count: 42,
+                    p50: 1536.0,
+                    p90: 9000.5,
+                    p99: 12000.0,
+                    max: 15000,
+                },
+                HistSnapshot {
+                    name: "empty.hist".into(),
+                    count: 0,
+                    p50: 0.0,
+                    p90: 0.0,
+                    p99: 0.0,
+                    max: 0,
+                },
+            ]),
+            Response::MetricsHistData(Vec::new()),
             Response::Pong,
             Response::Bye,
             Response::Error { code: ErrorCode::NoSession, message: "unknown session".into() },
@@ -938,6 +1051,52 @@ mod tests {
         for resp in cases {
             let line = resp.to_line();
             assert_eq!(Response::parse(&line).unwrap(), resp, "line: {line}");
+        }
+    }
+
+    /// Wall fields ride STATS and survive the roundtrip — and a pre-PR-7
+    /// reply without them still parses with zero defaults (the
+    /// `kernel_evals` compatibility pattern). Checked field-by-field
+    /// because `AlgoStats::eq` deliberately ignores the timing fields.
+    #[test]
+    fn stats_wall_fields_roundtrip_and_default() {
+        let resp = Response::StatsData {
+            id: "t".into(),
+            reply: StatsReply {
+                stats: AlgoStats {
+                    queries: 10,
+                    kernel_evals: 20,
+                    elements: 30,
+                    stored: 2,
+                    peak_stored: 2,
+                    instances: 1,
+                    wall_kernel_ns: 111,
+                    wall_solve_ns: 222,
+                    wall_scan_ns: 333,
+                },
+                value: 0.5,
+                len: 2,
+                drift_events: 0,
+            },
+        };
+        match Response::parse(&resp.to_line()).unwrap() {
+            Response::StatsData { reply, .. } => {
+                assert_eq!(reply.stats.wall_kernel_ns, 111);
+                assert_eq!(reply.stats.wall_solve_ns, 222);
+                assert_eq!(reply.stats.wall_scan_ns, 333);
+            }
+            other => panic!("{other:?}"),
+        }
+        let legacy = "OK STATS id=t elements=30 queries=10 kernel_evals=20 stored=2 peak=2 \
+                      instances=1 len=2 value=0.5 drift=0";
+        match Response::parse(legacy).unwrap() {
+            Response::StatsData { reply, .. } => {
+                assert_eq!(reply.stats.queries, 10);
+                assert_eq!(reply.stats.wall_kernel_ns, 0);
+                assert_eq!(reply.stats.wall_solve_ns, 0);
+                assert_eq!(reply.stats.wall_scan_ns, 0);
+            }
+            other => panic!("{other:?}"),
         }
     }
 

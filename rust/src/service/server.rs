@@ -416,6 +416,14 @@ impl Client {
         })
     }
 
+    /// `METRICS HIST`: every registered latency histogram's summary.
+    pub fn metrics_hist(&mut self) -> Result<Vec<crate::obs::HistSnapshot>, ClientError> {
+        self.expect(&Request::MetricsHist, |r| match r {
+            Response::MetricsHistData(h) => Ok(h),
+            other => Err(other),
+        })
+    }
+
     pub fn ping(&mut self) -> Result<(), ClientError> {
         self.expect(&Request::Ping, |r| match r {
             Response::Pong => Ok(()),

@@ -33,7 +33,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::Instant;
 
 use crate::algorithms::StreamingAlgorithm;
@@ -136,7 +136,10 @@ impl Session {
                     if start < i {
                         self.algo.process_batch(&rows[start * d..i * d]);
                     }
-                    self.algo.reset();
+                    {
+                        let _g = crate::obs::span("drift-reset");
+                        self.algo.reset();
+                    }
                     start = i;
                 }
             }
@@ -593,21 +596,35 @@ impl SessionManager {
     pub fn metrics(&self) -> MetricsSnapshot {
         // Snapshot the cell handles first, then aggregate without the map
         // lock — METRICS behind one busy tenant must not freeze session
-        // lookup for everyone else.
-        let cells: Vec<Arc<SessionCell>> = self.map().values().cloned().collect();
-        let sessions = cells.len();
+        // lookup for everyone else. Every session guard is then held at
+        // once while the sums are taken: a cell-at-a-time sweep would let
+        // a push land between two locks, so `METRICS == Σ STATS` would
+        // only hold for monotone counters and not for the wall-clock
+        // fields. Guards are acquired in sorted-id order so two
+        // concurrent METRICS calls cannot deadlock against each other.
+        let mut cells: Vec<(String, Arc<SessionCell>)> =
+            self.map().iter().map(|(id, c)| (id.clone(), Arc::clone(c))).collect();
+        cells.sort_by(|a, b| a.0.cmp(&b.0));
+        let guards: Vec<_> = cells.iter().map(|(_, c)| c.lock()).collect();
+        let sessions = guards.len();
         let mut stored = 0usize;
         let mut items = 0u64;
         let mut queries = 0u64;
         let mut kernel_evals = 0u64;
-        for cell in &cells {
-            let s = cell.lock();
+        let mut wall_kernel_ns = 0u64;
+        let mut wall_solve_ns = 0u64;
+        let mut wall_scan_ns = 0u64;
+        for s in &guards {
             let st = s.algo.stats();
             stored += st.stored;
             items += st.elements;
             queries += st.queries;
             kernel_evals += st.kernel_evals;
+            wall_kernel_ns += st.wall_kernel_ns;
+            wall_solve_ns += st.wall_solve_ns;
+            wall_scan_ns += st.wall_scan_ns;
         }
+        drop(guards);
         let uptime_s = self.started.elapsed().as_secs_f64();
         let items_total = self.counters.items.load(Ordering::Relaxed);
         MetricsSnapshot {
@@ -616,6 +633,9 @@ impl SessionManager {
             items,
             queries,
             kernel_evals,
+            wall_kernel_ns,
+            wall_solve_ns,
+            wall_scan_ns,
             opens: self.counters.opens.load(Ordering::Relaxed),
             resumes: self.counters.resumes.load(Ordering::Relaxed),
             pushes: self.counters.pushes.load(Ordering::Relaxed),
@@ -629,8 +649,23 @@ impl SessionManager {
     }
 
     /// Execute one parsed request — the single dispatch point shared by
-    /// the TCP server and in-process harnesses.
+    /// the TCP server and in-process harnesses. When observability is on
+    /// each call records a `service-request` span and a sample in the
+    /// `service.request_ns` histogram.
     pub fn execute(&self, req: &Request) -> Response {
+        let _g = crate::obs::span("service-request");
+        let t = crate::obs::clock();
+        let resp = self.execute_inner(req);
+        if let Some(t) = t {
+            static REQUEST_NS: OnceLock<Arc<crate::obs::Histogram>> = OnceLock::new();
+            REQUEST_NS
+                .get_or_init(|| crate::obs::histogram("service.request_ns"))
+                .observe(t.elapsed().as_nanos() as u64);
+        }
+        resp
+    }
+
+    fn execute_inner(&self, req: &Request) -> Response {
         let err = |e: ServiceError| Response::error(e.code(), e.to_string());
         match req {
             Request::Open { id, spec } => match self.open(id, spec) {
@@ -654,6 +689,7 @@ impl SessionManager {
                 Err(e) => err(e),
             },
             Request::Metrics => Response::MetricsData(self.metrics()),
+            Request::MetricsHist => Response::MetricsHistData(crate::obs::histogram_snapshots()),
             Request::Ping => Response::Pong,
             Request::Quit => Response::Bye,
         }

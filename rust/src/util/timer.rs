@@ -80,22 +80,13 @@ impl BenchStats {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Linear-interpolated percentile, p in [0, 100].
+    /// Linear-interpolated percentile, p in [0, 100] (NaN when empty).
+    /// Delegates to the crate-wide quantile convention so bench summaries
+    /// and the obs histograms agree on what "p99" means.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return f64::NAN;
-        }
         let mut xs = self.samples.clone();
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = (p / 100.0) * (xs.len() - 1) as f64;
-        let lo = rank.floor() as usize;
-        let hi = rank.ceil() as usize;
-        if lo == hi {
-            xs[lo]
-        } else {
-            let w = rank - lo as f64;
-            xs[lo] * (1.0 - w) + xs[hi] * w
-        }
+        crate::obs::quantile::percentile_sorted(&xs, p)
     }
 
     /// One-line summary used by the bench harnesses.

@@ -1,0 +1,136 @@
+//! PR-7 acceptance: the observability layer is provably inert when off
+//! and semantically invisible when on.
+//!
+//! One test owns this file so it runs in its own process and may flip the
+//! global recording toggle without racing other tests. Phase 1 (recording
+//! off) runs a ThreeSieves batch workload and a full in-process service
+//! conversation, asserting **zero** recorded span events and all-zero
+//! wall-clock stats. Phase 2 re-runs the identical workloads with
+//! recording on and asserts the selection outputs — values, summaries,
+//! per-push replies, semantic stats — are bit-identical to phase 1, that
+//! the per-stage wall fields now populate, that the expected span names
+//! (kernel-panel, solve-panel, sieve-scan, service-request) were
+//! recorded, and that the Chrome trace export parses back.
+
+use std::time::Duration;
+
+use threesieves::algorithms::three_sieves::SieveTuning;
+use threesieves::algorithms::{StreamingAlgorithm, ThreeSieves};
+use threesieves::config::ServiceConfig;
+use threesieves::data::{registry, Dataset};
+use threesieves::functions::{LogDetConfig, NativeLogDet};
+use threesieves::metrics::AlgoStats;
+use threesieves::obs;
+use threesieves::service::{PushBody, Request, Response, SessionManager, SessionSpec};
+use threesieves::util::json::Json;
+
+fn dataset() -> Dataset {
+    registry::get("fact-highlevel-like", 600, 3).unwrap()
+}
+
+/// The standalone workload: chunked ThreeSieves over the fixed dataset.
+fn run_threesieves(ds: &Dataset) -> (u64, Vec<f32>, AlgoStats) {
+    let k = 8;
+    let f = NativeLogDet::new(LogDetConfig::for_streaming(ds.dim(), k));
+    let mut algo = ThreeSieves::new(Box::new(f), k, 0.01, SieveTuning::FixedT(200));
+    for chunk in ds.raw().chunks(64 * ds.dim()) {
+        algo.process_batch(chunk);
+    }
+    (algo.value().to_bits(), algo.summary(), algo.stats())
+}
+
+/// The service workload, driven through the instrumented `execute`
+/// dispatch: OPEN, chunked PUSHes, then the per-session stats and
+/// summary. Returns the deterministic reply lines (OPEN/PUSH) plus the
+/// session's semantic stats and summary for cross-phase comparison.
+fn run_service(ds: &Dataset) -> (Vec<String>, AlgoStats, Vec<f32>) {
+    let mgr = SessionManager::new(ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        ..ServiceConfig::default()
+    });
+    let spec = SessionSpec::three_sieves(ds.dim(), 6, 0.01, 100);
+    let mut lines = Vec::new();
+    lines.push(mgr.execute(&Request::Open { id: "obs".into(), spec }).to_line());
+    for chunk in ds.raw().chunks(64 * ds.dim()) {
+        let req = Request::Push { id: "obs".into(), body: PushBody::Packed(chunk.to_vec()) };
+        lines.push(mgr.execute(&req).to_line());
+    }
+    // METRICS == Σ STATS must extend to the wall fields: one live session,
+    // so the aggregate equals its stats exactly (in both phases).
+    let st = mgr.stats("obs").unwrap().stats;
+    let m = mgr.metrics();
+    assert_eq!(m.wall_kernel_ns, st.wall_kernel_ns);
+    assert_eq!(m.wall_solve_ns, st.wall_solve_ns);
+    assert_eq!(m.wall_scan_ns, st.wall_scan_ns);
+    let summary = mgr.summary("obs").unwrap().data;
+    (lines, st, summary)
+}
+
+#[test]
+fn observability_is_inert_off_and_invisible_on() {
+    let ds = dataset();
+
+    // Phase 1: recording off (the default). Nothing may reach the rings
+    // and no wall-clock counter may advance.
+    assert!(!obs::enabled());
+    let (value_off, summary_off, stats_off) = run_threesieves(&ds);
+    let (lines_off, svc_stats_off, svc_summary_off) = run_service(&ds);
+    assert_eq!(obs::event_count(), 0, "tracing off must record zero span events");
+    assert_eq!(stats_off.wall_kernel_ns, 0);
+    assert_eq!(stats_off.wall_solve_ns, 0);
+    assert_eq!(stats_off.wall_scan_ns, 0);
+    assert_eq!(svc_stats_off.wall_kernel_ns, 0);
+
+    // Phase 2: recording on. Identical workloads, identical outputs.
+    obs::set_enabled(true);
+    let (value_on, summary_on, stats_on) = run_threesieves(&ds);
+    let (lines_on, svc_stats_on, svc_summary_on) = run_service(&ds);
+    assert_eq!(value_on, value_off, "f(S) must be bit-identical with tracing on");
+    assert_eq!(summary_on, summary_off);
+    assert_eq!(stats_on, stats_off, "semantic stats must not move");
+    assert_eq!(lines_on, lines_off, "wire replies must be bit-identical");
+    assert_eq!(svc_stats_on, svc_stats_off);
+    assert_eq!(svc_summary_on, svc_summary_off);
+    // ...but the measured stage walls now populate.
+    assert!(stats_on.wall_kernel_ns > 0, "kernel wall must advance while recording");
+    assert!(stats_on.wall_solve_ns > 0, "solve wall must advance while recording");
+    assert!(stats_on.wall_scan_ns > 0, "scan wall must advance while recording");
+
+    // The `METRICS HIST` surface now carries the request-latency histogram.
+    let mgr = SessionManager::new(ServiceConfig::default());
+    match mgr.execute(&Request::MetricsHist) {
+        Response::MetricsHistData(hists) => {
+            let req = hists
+                .iter()
+                .find(|h| h.name == "service.request_ns")
+                .expect("request histogram registered");
+            assert!(req.count > 0);
+            assert!(req.p50 <= req.p99 && req.p99 as u64 <= req.max);
+        }
+        other => panic!("METRICS HIST: {other:?}"),
+    }
+
+    // The trace export parses back and contains the acceptance spans.
+    let path = std::env::temp_dir().join("obs_overhead_trace.json");
+    obs::write_chrome_trace(&path).expect("write trace");
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).expect("valid trace JSON");
+    let names: Vec<&str> = doc
+        .get("traceEvents")
+        .as_arr()
+        .expect("traceEvents array")
+        .iter()
+        .filter_map(|e| e.get("name").as_str())
+        .collect();
+    for want in ["kernel-panel", "solve-panel", "sieve-scan", "service-request"] {
+        assert!(names.contains(&want), "trace must contain {want:?}, got {names:?}");
+    }
+    assert!(obs::event_count() > 0);
+
+    obs::set_enabled(false);
+    let _ = std::fs::remove_file(&path);
+    // Off again: a fresh workload adds nothing to the drained rings.
+    let drained = obs::drain();
+    assert!(!drained.is_empty());
+    run_threesieves(&ds);
+    assert_eq!(obs::event_count(), 0, "disabling must stop recording immediately");
+}
