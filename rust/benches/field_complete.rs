@@ -20,6 +20,9 @@ use threesieves::experiments::{run_batch_protocol, run_stream_protocol, GammaMod
 use threesieves::metrics::{write_records, RunRecord};
 
 fn main() {
+    // `--trace-out` / `--events-out` (or TS_TRACE_OUT / TS_EVENTS_OUT)
+    // arm observability for the whole run; inert otherwise.
+    let obs = threesieves::obs::BenchObs::from_env();
     let n: usize =
         std::env::var("TS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(2_000);
     let k: usize = std::env::var("TS_BENCH_K").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
@@ -147,5 +150,6 @@ fn main() {
     }
     let best = winner(&reports);
     println!("race winner: {} (f(S) = {:.4})", best.name, best.value);
+    obs.finish();
     println!("\nfield_complete done — artifact in bench_field_complete.json");
 }

@@ -10,6 +10,9 @@ use std::path::PathBuf;
 use threesieves::experiments::figures::{fig2, SweepScale};
 
 fn main() {
+    // `--trace-out` / `--events-out` (or TS_TRACE_OUT / TS_EVENTS_OUT)
+    // arm observability for the whole run; inert otherwise.
+    let obs = threesieves::obs::BenchObs::from_env();
     let n: usize =
         std::env::var("TS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1_500);
     let ks: Vec<usize> = std::env::var("TS_BENCH_KS")
@@ -47,6 +50,7 @@ fn main() {
             println!("  {row}");
         }
     }
+    obs.finish();
     println!("\nfig2 done — full rows in results/fig2.csv");
 }
 

@@ -10,6 +10,9 @@ use std::path::PathBuf;
 use threesieves::experiments::figures::{fig3, SweepScale};
 
 fn main() {
+    // `--trace-out` / `--events-out` (or TS_TRACE_OUT / TS_EVENTS_OUT)
+    // arm observability for the whole run; inert otherwise.
+    let obs = threesieves::obs::BenchObs::from_env();
     let n: usize =
         std::env::var("TS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1_500);
     let ks: Vec<usize> = std::env::var("TS_BENCH_KS")
@@ -53,5 +56,6 @@ fn main() {
             }
         }
     }
+    obs.finish();
     println!("\nfig3 done — full rows in results/fig3.csv");
 }

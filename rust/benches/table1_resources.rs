@@ -10,6 +10,9 @@ use std::path::PathBuf;
 use threesieves::experiments::table1;
 
 fn main() {
+    // `--trace-out` / `--events-out` (or TS_TRACE_OUT / TS_EVENTS_OUT)
+    // arm observability for the whole run; inert otherwise.
+    let obs = threesieves::obs::BenchObs::from_env();
     let n: usize =
         std::env::var("TS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(3_000);
     let k: usize = std::env::var("TS_BENCH_K").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
@@ -48,5 +51,6 @@ fn main() {
         "  runtime factor Salsa/ThreeSieves: {:.1}×",
         salsa.runtime.as_secs_f64() / three.runtime.as_secs_f64().max(1e-9)
     );
+    obs.finish();
     println!("\ntable1 done — full rows in results/table1.csv");
 }

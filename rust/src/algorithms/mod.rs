@@ -242,6 +242,15 @@ pub(crate) struct Sieve {
     /// while [`obs`](crate::obs) recording is on; surfaced through
     /// [`AlgoStats::wall_scan_ns`](crate::metrics::AlgoStats).
     pub(crate) scan_ns: u64,
+    /// Decision-event identity: this sieve's roster position (see
+    /// [`tag_sieves`]). Feeds the `sieve` field of Accept/Reject events;
+    /// never read by the algorithms themselves.
+    pub(crate) tag: u32,
+    /// Sieve-rule accepts observed. Like `scan_ns`, advanced only while
+    /// obs recording is on; surfaced through `AlgoStats::accepts`.
+    pub(crate) accepts: u64,
+    /// Sieve-rule rejects observed. Same gating as `accepts`.
+    pub(crate) rejects: u64,
 }
 
 impl Sieve {
@@ -254,6 +263,58 @@ impl Sieve {
             local: Vec::new(),
             local_ids: Vec::new(),
             scan_ns: 0,
+            tag: 0,
+            accepts: 0,
+            rejects: 0,
+        }
+    }
+
+    /// Record one decision for the event log and the per-sieve counters.
+    /// `tau` is the accept bar as the owning execution path computed it,
+    /// *before* the accept mutated the oracle. One relaxed load when obs
+    /// recording is off.
+    #[inline]
+    pub(crate) fn note_one(&mut self, accepted: bool, gain: f64, tau: f64) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        let element = self.accepts + self.rejects;
+        if accepted {
+            self.accepts += 1;
+            crate::obs::emit_event(crate::obs::Event::Accept {
+                element,
+                sieve: self.tag,
+                gain,
+                tau,
+            });
+        } else {
+            self.rejects += 1;
+            crate::obs::emit_event(crate::obs::Event::Reject {
+                element,
+                sieve: self.tag,
+                gain,
+                tau,
+            });
+        }
+    }
+
+    /// Record one scanned rejection run — the gains in
+    /// `self.scratch[..len]`, with `hit` marking the first accept (if
+    /// any): `hit` rejects, then one accept; or `len` rejects when the
+    /// whole run failed the rule. Within a run the threshold is constant,
+    /// so one `tau` covers every decision.
+    pub(crate) fn note_run(&mut self, len: usize, hit: Option<usize>, tau: f64) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        let upto = hit.unwrap_or(len);
+        for j in 0..upto {
+            let gain = self.scratch[j];
+            self.note_one(false, gain, tau);
+        }
+        if let Some(j) = hit {
+            let gain = self.scratch[j];
+            self.note_one(true, gain, tau);
         }
     }
 
@@ -265,12 +326,12 @@ impl Sieve {
         }
         let thresh = sieve_threshold(self.v, self.oracle.current_value(), k, len);
         let gain = self.oracle.peek_gain(item);
-        if gain >= thresh {
+        let accepted = gain >= thresh;
+        self.note_one(accepted, gain, thresh);
+        if accepted {
             self.oracle.accept(item);
-            true
-        } else {
-            false
         }
+        accepted
     }
 
     /// Batched [`offer`](Self::offer) over a whole chunk (row-major
@@ -299,6 +360,11 @@ impl Sieve {
             let t = crate::obs::clock();
             let hit = sieve_first_hit(self.v, self.oracle.as_ref(), k, &self.scratch[..remaining]);
             self.scan_ns += crate::obs::lap(t);
+            if crate::obs::enabled() {
+                let tau =
+                    sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
+                self.note_run(remaining, hit, tau);
+            }
             match hit {
                 Some(j) => {
                     self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
@@ -342,6 +408,11 @@ impl Sieve {
             let t = crate::obs::clock();
             let hit = sieve_first_hit(self.v, self.oracle.as_ref(), k, &self.scratch[..remaining]);
             self.scan_ns += crate::obs::lap(t);
+            if crate::obs::enabled() {
+                let tau =
+                    sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
+                self.note_run(remaining, hit, tau);
+            }
             match hit {
                 Some(j) => {
                     self.accept_shared(panel, chunk, dim, pos + j);
@@ -702,6 +773,10 @@ pub(crate) fn offer_chunk_grid(
             let t = crate::obs::clock();
             let hit = first_hit(si, s.v, s.oracle.as_ref(), &s.scratch[..count], pos[si]);
             s.scan_ns += crate::obs::lap(t);
+            if crate::obs::enabled() {
+                let tau = sieve_threshold(s.v, s.oracle.current_value(), k, s.oracle.len());
+                s.note_run(count, hit, tau);
+            }
             match hit {
                 Some(j_rel) => {
                     let j = pos[si] + j_rel;
@@ -741,7 +816,23 @@ pub(crate) fn sieve_stats(
         wall_kernel_ns: sieves.iter().map(|s| s.oracle.wall_kernel_ns()).sum(),
         wall_solve_ns: sieves.iter().map(|s| s.oracle.wall_solve_ns()).sum(),
         wall_scan_ns: sieves.iter().map(|s| s.scan_ns).sum(),
+        accepts: sieves.iter().map(|s| s.accepts).sum(),
+        rejects: sieves.iter().map(|s| s.rejects).sum(),
+        defers: 0,
+        threshold_moves: 0,
     }
+}
+
+/// Assign roster tags `first, first+1, ..` to `sieves` in order and
+/// return the next unused tag. Tags identify sieves in the decision-event
+/// log ([`crate::obs::events`]); they carry no algorithmic meaning.
+pub(crate) fn tag_sieves(sieves: &mut [Sieve], first: u32) -> u32 {
+    let mut next = first;
+    for s in sieves.iter_mut() {
+        s.tag = next;
+        next += 1;
+    }
+    next
 }
 
 #[cfg(test)]

@@ -91,6 +91,7 @@ impl StreamingAlgorithm for PreemptionStreaming {
             wall_kernel_ns: self.oracle.wall_kernel_ns(),
             wall_solve_ns: self.oracle.wall_solve_ns(),
             wall_scan_ns: 0,
+            ..Default::default()
         }
     }
 

@@ -184,6 +184,7 @@ impl StreamingAlgorithm for QuickStream {
             wall_solve_ns: self.work.wall_solve_ns()
                 + self.chosen.as_ref().map(|c| c.wall_solve_ns()).unwrap_or(0),
             wall_scan_ns: 0,
+            ..Default::default()
         }
     }
 

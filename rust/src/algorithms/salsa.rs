@@ -95,6 +95,25 @@ fn rule_first_hit(
     None
 }
 
+/// Decision telemetry for one scanned run (obs-gated; one relaxed load
+/// when recording is off). The event τ is the rule's bar at the run's
+/// first item — exact for the position-independent rules, and a run-start
+/// approximation for the adaptive rule's per-item schedule.
+fn note_rule_run(
+    s: &mut RuleSieve,
+    len: usize,
+    hit: Option<usize>,
+    k: usize,
+    stream_len: Option<usize>,
+    first_elem: u64,
+) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let tau = rule_threshold(s.rule, s.sieve.v, s.sieve.oracle.as_ref(), k, stream_len, first_elem);
+    s.sieve.note_run(len, hit, tau);
+}
+
 /// One (rule, v) sieve consumes a whole chunk: one gain panel per
 /// rejection run, thresholds recomputed per item from the chunk-start
 /// stream position (the adaptive rule's position dependence), an
@@ -128,6 +147,7 @@ fn consume_chunk(
             stream_len,
             start_elements,
         );
+        note_rule_run(s, remaining, hit, k, stream_len, start_elements + pos as u64 + 1);
         match hit {
             Some(j) => {
                 let item = &chunk[(pos + j) * d..(pos + j + 1) * d];
@@ -182,6 +202,7 @@ fn consume_chunk_shared(
             stream_len,
             start_elements,
         );
+        note_rule_run(s, remaining, hit, k, stream_len, start_elements + pos as u64 + 1);
         match hit {
             Some(j) => {
                 s.sieve.accept_shared(panel, chunk, d, pos + j);
@@ -273,9 +294,13 @@ impl Salsa {
             rules.push(Rule::Adaptive);
         }
         self.sieves.clear();
+        let mut tag = 0u32;
         for rule in rules {
             for &v in &grid {
-                self.sieves.push(RuleSieve { rule, sieve: Sieve::new(v, self.proto.as_ref()) });
+                let mut sieve = Sieve::new(v, self.proto.as_ref());
+                sieve.tag = tag;
+                tag += 1;
+                self.sieves.push(RuleSieve { rule, sieve });
             }
         }
     }
@@ -329,7 +354,9 @@ impl StreamingAlgorithm for Salsa {
             let thresh = self.threshold(&self.sieves[i]);
             let s = &mut self.sieves[i];
             let gain = s.sieve.oracle.peek_gain(item);
-            if gain >= thresh {
+            let accepted = gain >= thresh;
+            s.sieve.note_one(accepted, gain, thresh);
+            if accepted {
                 s.sieve.oracle.accept(item);
             }
         }
@@ -478,6 +505,10 @@ impl StreamingAlgorithm for Salsa {
             wall_kernel_ns: self.sieves.iter().map(|s| s.sieve.oracle.wall_kernel_ns()).sum(),
             wall_solve_ns: self.sieves.iter().map(|s| s.sieve.oracle.wall_solve_ns()).sum(),
             wall_scan_ns: self.sieves.iter().map(|s| s.sieve.scan_ns).sum(),
+            accepts: self.sieves.iter().map(|s| s.sieve.accepts).sum(),
+            rejects: self.sieves.iter().map(|s| s.sieve.rejects).sum(),
+            defers: 0,
+            threshold_moves: 0,
         }
     }
 

@@ -10,8 +10,8 @@ use crate::util::json::Json;
 use crate::util::mathx::threshold_grid;
 
 use super::{
-    build_union_panel, offer_chunk_grid, sieve_first_hit, sieve_stats, union_row_ids, Sieve,
-    SolveGrid, StreamingAlgorithm,
+    build_union_panel, offer_chunk_grid, sieve_first_hit, sieve_stats, tag_sieves, union_row_ids,
+    Sieve, SolveGrid, StreamingAlgorithm,
 };
 
 /// Multi-sieve thresholding with a known (or estimated) `m`.
@@ -42,6 +42,14 @@ pub struct SieveStreaming {
     restored_queries: u64,
     restored_kernel_evals: u64,
     discounted_kernel_evals: u64,
+    /// Next decision-event roster tag (m-estimation spawns keep minting
+    /// fresh ids so retired and live sieves stay distinguishable in the
+    /// event log).
+    next_tag: u32,
+    /// Decision counters carried by sieves that m estimation retired, so
+    /// `stats().accepts`/`rejects` stay monotone across refreshes.
+    retired_accepts: u64,
+    retired_rejects: u64,
     peak_stored: usize,
     /// Recycled chunk-panel storage (slot map, entries, candidate norms)
     /// — the broker path allocates nothing per chunk once warm.
@@ -64,10 +72,11 @@ impl SieveStreaming {
             ps.attach_row_store(SharedRowStore::new(dim));
         }
         let m = proto.max_singleton_value();
-        let sieves = threshold_grid(epsilon, m, k as f64 * m)
+        let mut sieves: Vec<Sieve> = threshold_grid(epsilon, m, k as f64 * m)
             .into_iter()
             .map(|v| Sieve::new(v, proto.as_ref()))
             .collect();
+        let next_tag = tag_sieves(&mut sieves, 0);
         SieveStreaming {
             proto,
             k,
@@ -83,6 +92,9 @@ impl SieveStreaming {
             restored_queries: 0,
             restored_kernel_evals: 0,
             discounted_kernel_evals: 0,
+            next_tag,
+            retired_accepts: 0,
+            retired_rejects: 0,
             peak_stored: 0,
             panel_scratch: PanelScratch::default(),
             solve_pool: SolveGrid::default(),
@@ -113,13 +125,24 @@ impl SieveStreaming {
         self.m = m_new;
         let lo = m_new;
         let hi = self.k as f64 * m_new;
-        // Drop sieves below the new lower bound.
-        self.sieves.retain(|s| s.v >= lo && s.v <= hi * (1.0 + 1e-12));
+        let keep = |s: &Sieve| s.v >= lo && s.v <= hi * (1.0 + 1e-12);
+        // Drop sieves below the new lower bound, banking their decision
+        // counters so the aggregate telemetry stays monotone.
+        for s in self.sieves.iter().filter(|s| !keep(s)) {
+            self.retired_accepts += s.accepts;
+            self.retired_rejects += s.rejects;
+            crate::obs::emit_event(crate::obs::Event::SieveRetire { sieve: s.tag, v: s.v });
+        }
+        self.sieves.retain(keep);
         // Add missing grid points.
         for v in threshold_grid(self.epsilon, lo, hi) {
             let exists = self.sieves.iter().any(|s| (s.v / v - 1.0).abs() < 1e-9);
             if !exists {
-                self.sieves.push(Sieve::new(v, self.proto.as_ref()));
+                let mut s = Sieve::new(v, self.proto.as_ref());
+                s.tag = self.next_tag;
+                self.next_tag += 1;
+                crate::obs::emit_event(crate::obs::Event::SieveSpawn { sieve: s.tag, v });
+                self.sieves.push(s);
             }
         }
         self.sieves.sort_by(|a, b| a.v.total_cmp(&b.v));
@@ -294,6 +317,8 @@ impl StreamingAlgorithm for SieveStreaming {
         st.queries = (st.queries + self.restored_queries).saturating_sub(self.speculative_queries);
         st.kernel_evals = (st.kernel_evals + self.panel_evals + self.restored_kernel_evals)
             .saturating_sub(self.discounted_kernel_evals);
+        st.accepts += self.retired_accepts;
+        st.rejects += self.retired_rejects;
         st
     }
 
@@ -315,6 +340,8 @@ impl StreamingAlgorithm for SieveStreaming {
         if let Some(ps) = self.proto.panel_sharing() {
             ps.attach_row_store(SharedRowStore::new(dim));
         }
+        self.retired_accepts = 0;
+        self.retired_rejects = 0;
         if self.estimate_m {
             self.m = 0.0;
             self.sieves.clear();
@@ -325,6 +352,7 @@ impl StreamingAlgorithm for SieveStreaming {
                 .map(|v| Sieve::new(v, self.proto.as_ref()))
                 .collect();
         }
+        self.next_tag = tag_sieves(&mut self.sieves, 0);
     }
 
     /// Full resumable state: the grid is deterministic from `(ε, m, K)`,
@@ -436,6 +464,7 @@ impl StreamingAlgorithm for SieveStreaming {
         }
         let mut sieves: Vec<Sieve> =
             grid.into_iter().map(|v| Sieve::new(v, proto.as_ref())).collect();
+        let next_tag = tag_sieves(&mut sieves, 0);
         for (s, rows) in sieves.iter_mut().zip(&rows_per_sieve) {
             for row in rows.chunks_exact(d) {
                 s.oracle.accept(row);
@@ -456,6 +485,9 @@ impl StreamingAlgorithm for SieveStreaming {
         let stored: usize = sieves.iter().map(|s| s.oracle.len()).sum();
         self.proto = proto;
         self.sieves = sieves;
+        self.next_tag = next_tag;
+        self.retired_accepts = 0;
+        self.retired_rejects = 0;
         self.m = m;
         self.elements = elements;
         self.peak_stored = peak_stored.max(stored);

@@ -10,8 +10,8 @@ use crate::metrics::AlgoStats;
 use crate::util::mathx::threshold_grid;
 
 use super::{
-    build_union_panel, gather_gains_grid, sieve_first_hit, sieve_stats, union_row_ids, Sieve,
-    SolveGrid, StreamingAlgorithm,
+    build_union_panel, gather_gains_grid, sieve_first_hit, sieve_stats, sieve_threshold,
+    union_row_ids, Sieve, SolveGrid, StreamingAlgorithm,
 };
 
 /// Post-accept bookkeeping shared by the scalar and batched paths: fold the
@@ -52,6 +52,13 @@ pub struct SieveStreamingPP {
     /// Cumulative kernel evals of pruned sieves (same preservation for
     /// the measured [`AlgoStats::kernel_evals`] counter).
     retired_kernel_evals: u64,
+    /// Decision counters carried by pruned sieves (same preservation, for
+    /// the obs-gated `AlgoStats::accepts`/`rejects` telemetry).
+    retired_accepts: u64,
+    retired_rejects: u64,
+    /// Next decision-event roster tag — pruning keeps minting fresh ids so
+    /// retired and live sieves stay distinguishable in the event log.
+    next_tag: u32,
     /// Speculative batch gains past a round's earliest acceptance
     /// (see `process_batch`); excluded from reported query stats.
     speculative_queries: u64,
@@ -99,6 +106,9 @@ impl SieveStreamingPP {
             peak_stored: 0,
             retired_queries: 0,
             retired_kernel_evals: 0,
+            retired_accepts: 0,
+            retired_rejects: 0,
+            next_tag: 0,
             speculative_queries: 0,
             panel_evals: 0,
             share_panels: true,
@@ -134,6 +144,9 @@ impl SieveStreamingPP {
         for s in self.sieves.iter().filter(|s| s.v < lo * (1.0 - eps)) {
             retired_q += s.oracle.queries();
             retired_e += s.oracle.kernel_evals();
+            self.retired_accepts += s.accepts;
+            self.retired_rejects += s.rejects;
+            crate::obs::emit_event(crate::obs::Event::SieveRetire { sieve: s.tag, v: s.v });
         }
         self.retired_queries += retired_q;
         self.retired_kernel_evals += retired_e;
@@ -141,7 +154,11 @@ impl SieveStreamingPP {
         for v in threshold_grid(self.epsilon, lo, hi) {
             let exists = self.sieves.iter().any(|s| (s.v / v - 1.0).abs() < 1e-9);
             if !exists {
-                self.sieves.push(Sieve::new(v, self.proto.as_ref()));
+                let mut s = Sieve::new(v, self.proto.as_ref());
+                s.tag = self.next_tag;
+                self.next_tag += 1;
+                crate::obs::emit_event(crate::obs::Event::SieveSpawn { sieve: s.tag, v });
+                self.sieves.push(s);
             }
         }
         self.sieves.sort_by(|a, b| a.v.total_cmp(&b.v));
@@ -329,20 +346,58 @@ impl StreamingAlgorithm for SieveStreamingPP {
                 // No sieve accepts anywhere in the rest of the chunk:
                 // every live panel is consumed exactly to its scalar
                 // extent — nothing is speculative.
+                if crate::obs::enabled() {
+                    let n = (total - pos) as u64;
+                    for s in self.sieves.iter_mut().filter(|s| s.oracle.len() < k) {
+                        s.rejects += n;
+                    }
+                }
                 pos = total;
                 continue;
             };
             // Items pos..j are rejections everywhere; item j is accepted
-            // by every sieve whose first hit is exactly j.
+            // by every sieve whose first hit is exactly j. The coordinated
+            // path resolves hits, not per-item gains, so decision
+            // telemetry here is counters in bulk plus one Accept event per
+            // acceptance (exact gain recovered as the value delta); the
+            // scalar path logs the full per-item stream.
+            if crate::obs::enabled() {
+                let n_rej = (j - pos) as u64;
+                for (s, hit) in self.sieves.iter_mut().zip(hits.iter()) {
+                    if s.oracle.len() >= k {
+                        continue;
+                    }
+                    s.rejects += n_rej;
+                    if *hit != Some(Some(j)) {
+                        s.rejects += 1; // j itself rejects here
+                    }
+                }
+            }
             let item = &chunk[j * d..(j + 1) * d];
             let mut lb_improved = false;
             for (s, hit) in self.sieves.iter_mut().zip(hits.iter_mut()) {
                 if s.oracle.len() >= k || *hit != Some(Some(j)) {
                     continue;
                 }
+                let noted = if crate::obs::enabled() {
+                    let tau =
+                        sieve_threshold(s.v, s.oracle.current_value(), k, s.oracle.len());
+                    Some((s.oracle.current_value(), tau))
+                } else {
+                    None
+                };
                 match &panel {
                     Some(p) => s.accept_shared(p, chunk, d, j),
                     None => s.oracle.accept(item),
+                }
+                if let Some((v_before, tau)) = noted {
+                    s.accepts += 1;
+                    crate::obs::emit_event(crate::obs::Event::Accept {
+                        element: s.accepts + s.rejects - 1,
+                        sieve: s.tag,
+                        gain: s.oracle.current_value() - v_before,
+                        tau,
+                    });
                 }
                 // The accept invalidates this sieve's panel; its unused
                 // tail is work the scalar path never did.
@@ -430,6 +485,8 @@ impl StreamingAlgorithm for SieveStreamingPP {
         st.queries = st.queries.saturating_sub(self.speculative_queries);
         st.kernel_evals += self.retired_kernel_evals + self.panel_evals;
         st.peak_stored = peak.max(self.peak_stored);
+        st.accepts += self.retired_accepts;
+        st.rejects += self.retired_rejects;
         st
     }
 
@@ -440,6 +497,9 @@ impl StreamingAlgorithm for SieveStreamingPP {
         self.peak_stored = 0;
         self.retired_queries = 0;
         self.retired_kernel_evals = 0;
+        self.retired_accepts = 0;
+        self.retired_rejects = 0;
+        self.next_tag = 0;
         self.speculative_queries = 0;
         self.panel_evals = 0;
         self.best_value = 0.0;

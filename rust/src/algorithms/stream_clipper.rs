@@ -52,11 +52,16 @@ struct ClipBuffer {
     cap: usize,
     rows: Vec<f32>,
     gains: Vec<f64>,
+    /// Clip-zone decisions observed while obs recording was on. A defer
+    /// is *also* a chassis reject (the item did not enter the summary),
+    /// so `defers <= rejects` in the reported stats. Counts decisions,
+    /// not occupancy: evicting pushes still count.
+    deferred: u64,
 }
 
 impl ClipBuffer {
     fn new(dim: usize, cap: usize) -> Self {
-        ClipBuffer { dim, cap, rows: Vec::new(), gains: Vec::new() }
+        ClipBuffer { dim, cap, rows: Vec::new(), gains: Vec::new(), deferred: 0 }
     }
 
     fn len(&self) -> usize {
@@ -110,7 +115,10 @@ impl ClipBuffer {
 /// deferring every scanned item in the clip zone `[β·τ, α·τ)` into the
 /// buffer along the way. The grid calls this exactly once per rejection
 /// run with authoritative oracle state, so the buffer side effect is
-/// identical across execution strategies.
+/// identical across execution strategies. `base` is the absolute stream
+/// index of the chunk's first row, used only for defer telemetry (the
+/// emitted `tau` is the *unscaled* sieve threshold; the clip zone is
+/// `[β·τ, α·τ)`).
 #[allow(clippy::too_many_arguments)]
 fn clip_first_hit(
     alpha: f64,
@@ -122,6 +130,7 @@ fn clip_first_hit(
     chunk: &[f32],
     dim: usize,
     pos: usize,
+    base: u64,
     buffer: &mut ClipBuffer,
 ) -> Option<usize> {
     let tau = sieve_threshold(v, oracle.current_value(), k, oracle.len());
@@ -130,6 +139,14 @@ fn clip_first_hit(
             return Some(j);
         }
         if g >= beta * tau {
+            if crate::obs::enabled() {
+                buffer.deferred += 1;
+                crate::obs::emit_event(crate::obs::Event::Defer {
+                    element: base + (pos + j) as u64,
+                    gain: g,
+                    tau,
+                });
+            }
             buffer.push(&chunk[(pos + j) * dim..(pos + j + 1) * dim], g);
         }
     }
@@ -150,6 +167,7 @@ fn consume_chunk(
     chunk: &[f32],
     d: usize,
     k: usize,
+    base: u64,
 ) -> u64 {
     let total = chunk.len() / d;
     let mut pos = 0usize;
@@ -170,8 +188,16 @@ fn consume_chunk(
             chunk,
             d,
             pos,
+            base,
             buffer,
         );
+        if crate::obs::enabled() {
+            // Decision telemetry against the accept bar α·τ (pre-accept
+            // oracle state; defers were already logged by the scan).
+            let tau =
+                sieve_threshold(sieve.v, sieve.oracle.current_value(), k, sieve.oracle.len());
+            sieve.note_run(remaining, hit, alpha * tau);
+        }
         match hit {
             Some(j) => {
                 let gain = sieve.scratch[j];
@@ -203,12 +229,13 @@ fn consume_chunk_shared(
     chunk: &[f32],
     d: usize,
     k: usize,
+    base: u64,
 ) -> u64 {
     if sieve.oracle.len() >= k {
         return 0;
     }
     if !sieve.begin_shared_chunk(panel) {
-        return consume_chunk(sieve, buffer, contributions, alpha, beta, chunk, d, k);
+        return consume_chunk(sieve, buffer, contributions, alpha, beta, chunk, d, k, base);
     }
     let total = chunk.len() / d;
     let mut pos = 0usize;
@@ -229,8 +256,14 @@ fn consume_chunk_shared(
             chunk,
             d,
             pos,
+            base,
             buffer,
         );
+        if crate::obs::enabled() {
+            let tau =
+                sieve_threshold(sieve.v, sieve.oracle.current_value(), k, sieve.oracle.len());
+            sieve.note_run(remaining, hit, alpha * tau);
+        }
         match hit {
             Some(j) => {
                 let gain = sieve.scratch[j];
@@ -358,6 +391,7 @@ impl StreamingAlgorithm for StreamClipper {
         }
         let (alpha, beta, k) = (self.alpha, self.beta, self.k);
         let d = self.proto.dim();
+        let base = self.elements - 1;
         let StreamClipper { sieve, buffer, contributions, .. } = self;
         let gain = sieve.oracle.peek_gain(item);
         let hit = clip_first_hit(
@@ -370,8 +404,14 @@ impl StreamingAlgorithm for StreamClipper {
             item,
             d,
             0,
+            base,
             buffer,
         );
+        if crate::obs::enabled() {
+            let tau =
+                sieve_threshold(sieve.v, sieve.oracle.current_value(), k, sieve.oracle.len());
+            sieve.note_one(hit.is_some(), gain, alpha * tau);
+        }
         if hit.is_some() {
             sieve.oracle.accept(item);
             contributions.push(gain);
@@ -388,6 +428,7 @@ impl StreamingAlgorithm for StreamClipper {
         let d = self.proto.dim();
         debug_assert_eq!(chunk.len() % d, 0, "chunk not row-aligned");
         self.elements += (chunk.len() / d) as u64;
+        let base = self.elements - (chunk.len() / d) as u64;
         let (alpha, beta, k) = (self.alpha, self.beta, self.k);
         let shared = self.build_shared_panel(chunk);
         let wasted: u64 = match &shared {
@@ -420,6 +461,7 @@ impl StreamingAlgorithm for StreamClipper {
                                 chunk,
                                 d,
                                 pos,
+                                base,
                                 &mut buffer.borrow_mut(),
                             );
                             if let Some(j) = hit {
@@ -445,13 +487,14 @@ impl StreamingAlgorithm for StreamClipper {
                             chunk,
                             d,
                             k,
+                            base,
                         )
                     }
                 }
             }
             None => {
                 let StreamClipper { sieve, buffer, contributions, .. } = self;
-                consume_chunk(sieve, buffer, contributions, alpha, beta, chunk, d, k)
+                consume_chunk(sieve, buffer, contributions, alpha, beta, chunk, d, k, base)
             }
         };
         if let Some(panel) = shared {
@@ -548,6 +591,12 @@ impl StreamingAlgorithm for StreamClipper {
             wall_kernel_ns: self.sieve.oracle.wall_kernel_ns(),
             wall_solve_ns: self.sieve.oracle.wall_solve_ns(),
             wall_scan_ns: self.sieve.scan_ns,
+            accepts: self.sieve.accepts,
+            rejects: self.sieve.rejects,
+            // Defers are a subset of rejects: a clip-zone item is
+            // buffered *and* counted as a chassis reject.
+            defers: self.buffer.deferred,
+            threshold_moves: 0,
         }
     }
 
@@ -565,6 +614,10 @@ impl StreamingAlgorithm for StreamClipper {
         self.elements = 0;
         self.peak_stored = 0;
         self.buffer.clear();
+        // Decision telemetry restarts with the rebuilt sieve (whose
+        // accept/reject counters zero below), unlike the cumulative
+        // query totals.
+        self.buffer.deferred = 0;
         self.contributions.clear();
         let dim = self.proto.dim();
         if let Some(ps) = self.proto.panel_sharing() {

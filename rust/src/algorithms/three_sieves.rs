@@ -86,6 +86,12 @@ pub struct ThreeSieves {
     /// [`obs`](crate::obs) recording is on. Cumulative like the oracle's
     /// query counter (not cleared by `reset`, not checkpointed).
     scan_ns: u64,
+    /// Decision telemetry: sieve-rule accepts/rejects and T-budget
+    /// threshold-grid walks. Advanced only while obs recording is on;
+    /// cumulative like `scan_ns`.
+    accepts: u64,
+    rejects: u64,
+    threshold_moves: u64,
 }
 
 impl ThreeSieves {
@@ -143,6 +149,9 @@ impl ThreeSieves {
             gain_buf: Vec::new(),
             peak_stored: 0,
             scan_ns: 0,
+            accepts: 0,
+            rejects: 0,
+            threshold_moves: 0,
         };
         ts.pop_threshold();
         ts
@@ -168,6 +177,46 @@ impl ThreeSieves {
     fn pop_threshold(&mut self) {
         self.t = 0;
         self.v = self.grid.pop().unwrap_or(self.v.min(f64::MAX));
+    }
+
+    /// T-budget certificate fired with thresholds left: log the grid walk,
+    /// then pop. The telemetry is obs-gated; the pop is unconditional.
+    fn budget_pop(&mut self) {
+        if crate::obs::enabled() {
+            self.threshold_moves += 1;
+            let to = *self.grid.last().expect("budget_pop needs a non-empty grid");
+            crate::obs::emit_event(crate::obs::Event::ThresholdMove {
+                sieve: 0,
+                from: self.v,
+                to,
+            });
+        }
+        self.pop_threshold();
+    }
+
+    /// T-budget certificate fired with the grid exhausted: confidence
+    /// restarts on the final threshold (the paper keeps sieving with the
+    /// last v). `emit_event` gates itself, so this is one relaxed load
+    /// when recording is off.
+    fn budget_exhausted(&mut self) {
+        crate::obs::emit_event(crate::obs::Event::ConfidenceReset { sieve: 0, t: self.t as u64 });
+        self.t = 0;
+    }
+
+    /// Log one accept/reject decision (obs-gated; one relaxed load off).
+    #[inline]
+    fn note_decision(&mut self, accepted: bool, gain: f64, tau: f64) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        let element = self.elements - 1;
+        if accepted {
+            self.accepts += 1;
+            crate::obs::emit_event(crate::obs::Event::Accept { element, sieve: 0, gain, tau });
+        } else {
+            self.rejects += 1;
+            crate::obs::emit_event(crate::obs::Event::Reject { element, sieve: 0, gain, tau });
+        }
     }
 
     fn rebuild_grid(&mut self, m: f64) {
@@ -245,7 +294,9 @@ impl StreamingAlgorithm for ThreeSieves {
             Some(g) => g,
             None => self.oracle.peek_gain(item),
         };
-        if gain >= thresh {
+        let accepted = gain >= thresh;
+        self.note_decision(accepted, gain, thresh);
+        if accepted {
             self.oracle.accept(item);
             self.t = 0;
         } else {
@@ -254,9 +305,9 @@ impl StreamingAlgorithm for ThreeSieves {
                 if self.grid.is_empty() {
                     // Smallest threshold exhausted: keep v (the paper keeps
                     // sieving with the last threshold).
-                    self.t = 0;
+                    self.budget_exhausted();
                 } else {
-                    self.pop_threshold();
+                    self.budget_pop();
                 }
             }
         }
@@ -315,7 +366,9 @@ impl StreamingAlgorithm for ThreeSieves {
         for (j, &gain) in gains.iter().enumerate() {
             self.elements += 1;
             consumed = j + 1;
-            if gain >= thresh {
+            let pass = gain >= thresh;
+            self.note_decision(pass, gain, thresh);
+            if pass {
                 self.oracle.accept(&chunk[j * d..(j + 1) * d]);
                 self.t = 0;
                 if self.oracle.len() > self.peak_stored {
@@ -327,9 +380,9 @@ impl StreamingAlgorithm for ThreeSieves {
             self.t += 1;
             if self.t >= self.t_budget {
                 if self.grid.is_empty() {
-                    self.t = 0;
+                    self.budget_exhausted();
                 } else {
-                    self.pop_threshold();
+                    self.budget_pop();
                     thresh = sieve_threshold(
                         self.v,
                         self.oracle.current_value(),
@@ -384,6 +437,10 @@ impl StreamingAlgorithm for ThreeSieves {
             wall_kernel_ns: self.oracle.wall_kernel_ns(),
             wall_solve_ns: self.oracle.wall_solve_ns(),
             wall_scan_ns: self.scan_ns,
+            accepts: self.accepts,
+            rejects: self.rejects,
+            defers: 0,
+            threshold_moves: self.threshold_moves,
         }
     }
 

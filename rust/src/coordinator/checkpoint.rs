@@ -77,6 +77,7 @@ impl Checkpoint {
 
     pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
         let _g = crate::obs::span("checkpoint-save");
+        crate::obs::emit_event(crate::obs::Event::CheckpointSave { elements: self.elements });
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
@@ -152,12 +153,14 @@ impl Checkpoint {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
+        let elements = j.get("elements").as_f64().unwrap_or(0.0) as u64;
+        crate::obs::emit_event(crate::obs::Event::CheckpointRestore { elements });
         Ok(Checkpoint {
             algorithm: j.get("algorithm").as_str().unwrap_or("?").to_string(),
             dim,
             k: j.get("k").as_usize().ok_or_else(|| corrupt("k"))?,
             value: j.get("value").as_f64().unwrap_or(0.0),
-            elements: j.get("elements").as_f64().unwrap_or(0.0) as u64,
+            elements,
             drift_events: j.get("drift_events").as_usize().unwrap_or(0),
             // Absent in pre-state checkpoints; Null = summary-only.
             state: j.get("state").clone(),

@@ -154,6 +154,7 @@ impl StreamPipeline {
                 }
                 {
                     let _g = crate::obs::span("drift-reset");
+                    crate::obs::emit_event(crate::obs::Event::DriftReset { elements: items });
                     algo.reset();
                 }
                 reselections += 1;

@@ -33,12 +33,29 @@ struct Shard {
     /// Per-shard gain-panel scratch (each shard owns its own so the
     /// parallel path needs no shared buffers).
     scratch: Vec<f64>,
+    /// Shard index, used as the `sieve` id in decision events.
+    tag: u32,
+    /// Decision telemetry (advanced only while obs recording is on;
+    /// excluded from stats equality like the wall-time fields).
+    accepts: u64,
+    rejects: u64,
+    threshold_moves: u64,
 }
 
 impl Shard {
-    fn new(mut grid: Vec<f64>, proto: &dyn SubmodularFunction) -> Self {
+    fn new(mut grid: Vec<f64>, proto: &dyn SubmodularFunction, tag: u32) -> Self {
         let v = grid.pop().expect("non-empty shard partition");
-        Shard { grid, v, t: 0, oracle: proto.clone_empty(), scratch: Vec::new() }
+        Shard {
+            grid,
+            v,
+            t: 0,
+            oracle: proto.clone_empty(),
+            scratch: Vec::new(),
+            tag,
+            accepts: 0,
+            rejects: 0,
+            threshold_moves: 0,
+        }
     }
 
     fn process(&mut self, item: &[f32], k: usize, t_budget: usize) {
@@ -48,16 +65,73 @@ impl Shard {
         }
         let thresh = sieve_threshold(self.v, self.oracle.current_value(), k, len);
         let gain = self.oracle.peek_gain(item);
-        if gain >= thresh {
+        let accepted = gain >= thresh;
+        self.note_decision(accepted, gain, thresh);
+        if accepted {
             self.oracle.accept(item);
             self.t = 0;
         } else {
             self.t += 1;
             if self.t >= t_budget {
-                self.t = 0;
-                if let Some(v) = self.grid.pop() {
-                    self.v = v;
+                self.budget_fire();
+            }
+        }
+    }
+
+    /// Log one accept/reject decision (obs-gated; one relaxed load off).
+    /// The event's `element` is this shard's decision ordinal — every
+    /// shard judges every stream element, so it tracks stream position.
+    #[inline]
+    fn note_decision(&mut self, accepted: bool, gain: f64, tau: f64) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        let element = self.accepts + self.rejects;
+        if accepted {
+            self.accepts += 1;
+            crate::obs::emit_event(crate::obs::Event::Accept {
+                element,
+                sieve: self.tag,
+                gain,
+                tau,
+            });
+        } else {
+            self.rejects += 1;
+            crate::obs::emit_event(crate::obs::Event::Reject {
+                element,
+                sieve: self.tag,
+                gain,
+                tau,
+            });
+        }
+    }
+
+    /// T-budget certificate fired: walk down if this partition has
+    /// thresholds left (a `ThresholdMove`), else restart confidence on the
+    /// final threshold (a `ConfidenceReset` — the partition keeps sieving
+    /// with its last v). Returns true when the threshold moved.
+    fn budget_fire(&mut self) -> bool {
+        let t_hit = self.t as u64;
+        self.t = 0;
+        match self.grid.pop() {
+            Some(v) => {
+                if crate::obs::enabled() {
+                    self.threshold_moves += 1;
+                    crate::obs::emit_event(crate::obs::Event::ThresholdMove {
+                        sieve: self.tag,
+                        from: self.v,
+                        to: v,
+                    });
                 }
+                self.v = v;
+                true
+            }
+            None => {
+                crate::obs::emit_event(crate::obs::Event::ConfidenceReset {
+                    sieve: self.tag,
+                    t: t_hit,
+                });
+                false
             }
         }
     }
@@ -106,20 +180,19 @@ impl Shard {
         count: usize,
     ) -> Option<usize> {
         let mut thresh = sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
-        for (j, &gain) in self.scratch[..count].iter().enumerate() {
-            if gain >= thresh {
+        for j in 0..count {
+            let gain = self.scratch[j];
+            let accepted = gain >= thresh;
+            self.note_decision(accepted, gain, thresh);
+            if accepted {
                 self.oracle.accept(&chunk[(pos + j) * dim..(pos + j + 1) * dim]);
                 self.t = 0;
                 return Some(j);
             }
             self.t += 1;
-            if self.t >= t_budget {
-                self.t = 0;
-                if let Some(v) = self.grid.pop() {
-                    self.v = v;
-                    thresh =
-                        sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
-                }
+            if self.t >= t_budget && self.budget_fire() {
+                thresh =
+                    sieve_threshold(self.v, self.oracle.current_value(), k, self.oracle.len());
             }
         }
         None
@@ -161,7 +234,8 @@ impl ShardedThreeSieves {
         let chunk = grid.len().div_ceil(shards_n);
         let shard_vec: Vec<Shard> = grid
             .chunks(chunk)
-            .map(|part| Shard::new(part.to_vec(), proto.as_ref()))
+            .enumerate()
+            .map(|(i, part)| Shard::new(part.to_vec(), proto.as_ref(), i as u32))
             .collect();
         ShardedThreeSieves {
             shards: shard_vec,
@@ -378,6 +452,10 @@ impl StreamingAlgorithm for ShardedThreeSieves {
             wall_kernel_ns: self.shards.iter().map(|s| s.oracle.wall_kernel_ns()).sum(),
             wall_solve_ns: self.shards.iter().map(|s| s.oracle.wall_solve_ns()).sum(),
             wall_scan_ns: 0,
+            accepts: self.shards.iter().map(|s| s.accepts).sum(),
+            rejects: self.shards.iter().map(|s| s.rejects).sum(),
+            defers: 0,
+            threshold_moves: self.shards.iter().map(|s| s.threshold_moves).sum(),
         }
     }
 
@@ -388,8 +466,11 @@ impl StreamingAlgorithm for ShardedThreeSieves {
         let grid = threshold_grid(self.epsilon, m, self.k as f64 * m);
         let shards_n = self.shards.len();
         let chunk = grid.len().div_ceil(shards_n).max(1);
-        self.shards =
-            grid.chunks(chunk).map(|part| Shard::new(part.to_vec(), proto.as_ref())).collect();
+        self.shards = grid
+            .chunks(chunk)
+            .enumerate()
+            .map(|(i, part)| Shard::new(part.to_vec(), proto.as_ref(), i as u32))
+            .collect();
         self.elements = 0;
         self.speculative_queries = 0;
         self.peak_stored = 0;

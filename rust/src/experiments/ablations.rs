@@ -155,6 +155,7 @@ pub fn walk_direction(dataset: &str, n: usize, k: usize, seed: u64) -> Vec<Ablat
             wall_kernel_ns: bottom.oracle.wall_kernel_ns(),
             wall_solve_ns: bottom.oracle.wall_solve_ns(),
             wall_scan_ns: 0,
+            ..Default::default()
         },
         note: "fills with first barely-novel items".into(),
     });

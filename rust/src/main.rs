@@ -263,16 +263,18 @@ USAGE:
   threesieves summarize --dataset <name> --n <N> --k <K>
                         [--algo <id>] [--epsilon E] [--t T] [--seed S] [--batch]
                         [--batch-size B] [--threads off|auto|N] [--trace-out PATH]
+                        [--events-out PATH]
   threesieves experiment <table1|table2|fig1|fig2|fig3|ablations> [--n N] [--out DIR] [--quick]
   threesieves experiment custom --config <file.json> [--stream]
   threesieves serve     --listen ADDR[:PORT]          (multi-tenant network service)
                         [--config FILE] [--max-sessions N] [--max-stored N]
                         [--idle-timeout SECS] [--checkpoint-dir DIR]
                         [--checkpoint-secs S] [--threads off|auto|N] [--max-seconds S]
-                        [--trace-out PATH]
+                        [--trace-out PATH] [--events-out PATH]
   threesieves serve     --local --dataset <name> --n <N> --k <K>
                         [--drift-window W] [--drift-threshold X] [--checkpoint PATH]
                         [--batch-size B] [--threads off|auto|N] [--trace-out PATH]
+                        [--events-out PATH]
                         (single-stream demo)
   threesieves pjrt-info [--artifacts DIR] [--config NAME]
   threesieves datasets
@@ -284,8 +286,11 @@ thread count. In network serve mode it sizes the connection-handler pool.
 --trace-out enables per-stage tracing spans (kernel panels, solves, sieve
 scans, drift resets, checkpoints, service requests) and writes them as
 Chrome trace-event JSON on exit — open the file in Perfetto
-(ui.perfetto.dev) or chrome://tracing. Selection output is identical with
-tracing on or off.
+(ui.perfetto.dev) or chrome://tracing. --events-out additionally records
+the typed decision-event log (accept/reject/defer verdicts, threshold
+moves, sieve births/deaths, drift resets, checkpoint traffic) and writes
+it as NDJSON — see docs/observability.md. Selection output is identical
+with either recording on or off.
 
 The network service speaks a newline-delimited protocol (OPEN/PUSH/SUMMARY/
 STATS/CLOSE/METRICS) — see docs/protocol.md, or try:
@@ -339,6 +344,7 @@ const SUMMARIZE_FLAGS: &[FlagDef] = &[
     val("batch-size"),
     val("threads"),
     val("trace-out"),
+    val("events-out"),
 ];
 
 const EXPERIMENT_FLAGS: &[FlagDef] = &[
@@ -379,6 +385,7 @@ const SERVE_FLAGS: &[FlagDef] = &[
     // Shared.
     val("threads"),
     val("trace-out"),
+    val("events-out"),
 ];
 
 const PJRT_FLAGS: &[FlagDef] = &[val("artifacts"), val("config")];
@@ -478,6 +485,30 @@ fn write_trace(path: &std::path::Path) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse `--events-out PATH` and, when present, switch recording on so
+/// the decision-event log captures the whole command. Same toggle as
+/// `--trace-out`; either flag arms both kinds of recording.
+fn events_out_arg(args: &cli::Args) -> Option<PathBuf> {
+    let path = args.get("events-out").map(PathBuf::from);
+    if path.is_some() {
+        threesieves::obs::set_enabled(true);
+    }
+    path
+}
+
+/// Export the decision-event log recorded since [`events_out_arg`] as
+/// NDJSON (one JSON object per line, time-ordered).
+fn write_events(path: &std::path::Path) -> Result<(), String> {
+    threesieves::obs::events::write_ndjson(path)
+        .map_err(|e| format!("--events-out {}: {e}", path.display()))?;
+    println!(
+        "events written : {} ({} decisions logged)",
+        path.display(),
+        threesieves::obs::events::totals().logged()
+    );
+    Ok(())
+}
+
 fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
     let dataset = args.get("dataset").ok_or("--dataset required")?.to_string();
     let n = args.get_usize("n", 10_000)?;
@@ -491,6 +522,7 @@ fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
     // Shard/sieve fan-out pool; results are identical at every setting.
     let exec = ExecContext::new(parallelism_arg(args)?);
     let trace_out = trace_out_arg(args);
+    let events_out = events_out_arg(args);
 
     let rec = if args.has("batch") {
         let ds = registry::get(&dataset, n, seed)
@@ -517,8 +549,17 @@ fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
     );
     println!("kernel evals   : {}", rec.stats.kernel_evals);
     println!("peak memory    : {} stored elements", rec.stats.peak_stored);
+    if rec.stats.accepts + rec.stats.rejects > 0 {
+        println!(
+            "decisions      : {} accepts / {} rejects / {} defers / {} threshold moves",
+            rec.stats.accepts, rec.stats.rejects, rec.stats.defers, rec.stats.threshold_moves
+        );
+    }
     if let Some(path) = trace_out {
         write_trace(&path)?;
+    }
+    if let Some(path) = events_out {
+        write_events(&path)?;
     }
     Ok(())
 }
@@ -616,6 +657,7 @@ fn cmd_serve_network(args: &cli::Args, listen: &str) -> Result<(), String> {
     // path cannot be promised; prefer --max-seconds for bounded runs.
     let checkpoint_secs = args.get_f64("checkpoint-secs", 60.0)?;
     let trace_out = trace_out_arg(args);
+    let events_out = events_out_arg(args);
     let handle = Server::start(cfg.clone(), listen).map_err(|e| e.to_string())?;
     println!("service listening on {}", handle.addr());
     println!(
@@ -665,6 +707,9 @@ fn cmd_serve_network(args: &cli::Args, listen: &str) -> Result<(), String> {
     if let Some(path) = trace_out {
         write_trace(&path)?;
     }
+    if let Some(path) = events_out {
+        write_events(&path)?;
+    }
     Ok(())
 }
 
@@ -682,6 +727,7 @@ fn cmd_serve_local(args: &cli::Args) -> Result<(), String> {
 
     let spec = algo_spec(args)?;
     let trace_out = trace_out_arg(args);
+    let events_out = events_out_arg(args);
     let mut algo =
         threesieves::experiments::build_algo(&spec, info.dim, k, GammaMode::Streaming, Some(n));
 
@@ -714,6 +760,9 @@ fn cmd_serve_local(args: &cli::Args) -> Result<(), String> {
     println!("final f(S)     : {:.6} ({} elements)", report.final_value, report.final_summary_len);
     if let Some(path) = trace_out {
         write_trace(&path)?;
+    }
+    if let Some(path) = events_out {
+        write_events(&path)?;
     }
     Ok(())
 }

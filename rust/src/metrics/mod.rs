@@ -41,11 +41,25 @@ pub struct AlgoStats {
     /// Wall nanoseconds in the sieve scan/accept stage (threshold
     /// comparisons + accepts). Same gating and equality rules.
     pub wall_scan_ns: u64,
+    /// Sieve-rule accepts observed by the decision-event layer. Counted
+    /// only while [`obs`](crate::obs) recording is enabled — 0 otherwise.
+    /// Diagnostic like the `wall_*_ns` fields, excluded from equality.
+    pub accepts: u64,
+    /// Sieve-rule rejects observed. Same gating and equality rules.
+    pub rejects: u64,
+    /// Clip-zone defers observed (StreamClipper's two-threshold buffer;
+    /// 0 for single-threshold algorithms). Same gating and equality rules.
+    pub defers: u64,
+    /// Threshold-grid walks fired by a T-budget certificate (ThreeSieves
+    /// and its sharded variant; 0 elsewhere). Same gating and equality
+    /// rules.
+    pub threshold_moves: u64,
 }
 
 /// Equality compares the six *semantic* accounting fields only. The
 /// `wall_*_ns` timings are measured wall clock — different on every run —
-/// so they are excluded the same way `exec_parity` already excludes
+/// and the decision counters advance only while obs recording is on, so
+/// both groups are excluded the same way `exec_parity` already excludes
 /// measured `kernel_evals` from its thread-invariance comparisons.
 impl PartialEq for AlgoStats {
     fn eq(&self, other: &Self) -> bool {
@@ -137,6 +151,10 @@ impl RunRecord {
             ("wall_kernel_ns", Json::num(self.stats.wall_kernel_ns as f64)),
             ("wall_solve_ns", Json::num(self.stats.wall_solve_ns as f64)),
             ("wall_scan_ns", Json::num(self.stats.wall_scan_ns as f64)),
+            ("accepts", Json::num(self.stats.accepts as f64)),
+            ("rejects", Json::num(self.stats.rejects as f64)),
+            ("defers", Json::num(self.stats.defers as f64)),
+            ("threshold_moves", Json::num(self.stats.threshold_moves as f64)),
         ])
     }
 }

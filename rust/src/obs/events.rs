@@ -1,0 +1,365 @@
+//! Typed decision-event log (PR 8): *why* a summary ended up the way it
+//! did, not just how long it took.
+//!
+//! ThreeSieves' pitch is a probabilistic certificate — it commits to a
+//! threshold after T observations without improvement — so the signals
+//! that explain a run are decisions: accept/reject/defer verdicts, the
+//! T-counter's rise and reset, threshold-grid moves, sieve births and
+//! deaths, drift resets and checkpoint traffic. This module records them
+//! as a typed [`Event`] stream behind the same single relaxed-atomic gate
+//! as spans ([`super::enabled`]): when observability is off, [`emit`] is
+//! one relaxed load and nothing else — no clock, no ring write, no
+//! counter bump — so every bit-parity suite holds with events on and the
+//! disarmed hot path stays within the ≤ 1.03 overhead gate.
+//!
+//! Storage mirrors [`super::trace`]: fixed-capacity per-thread rings
+//! (recording never contends across threads; the oldest events are
+//! overwritten past [`EVENT_RING_CAPACITY`] so long runs keep the tail),
+//! plus cumulative per-kind totals that survive ring overwrite — the
+//! `WATCH` frames and the Perfetto instant-event fold-in read those.
+//! Export is NDJSON (one JSON object per line, `--events-out`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use crate::util::json::Json;
+
+/// Per-thread event-ring capacity; past this, the oldest are overwritten.
+pub const EVENT_RING_CAPACITY: usize = 65536;
+
+/// One algorithm/coordinator decision. Fields carry the stream element
+/// index, the sieve (or shard / threshold-grid) id, the marginal gain and
+/// the active threshold τ where the site has them; sites without a
+/// natural value report 0. `element` indices are algorithm-local stream
+/// positions, `sieve` ids are instance-local (a sieve's position in its
+/// owner's roster, a shard's index, or 0 for single-instance algorithms).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// An item cleared the sieve rule `Δf(e|S) ≥ τ` and joined a summary.
+    Accept { element: u64, sieve: u32, gain: f64, tau: f64 },
+    /// An item fell short of the sieve rule.
+    Reject { element: u64, sieve: u32, gain: f64, tau: f64 },
+    /// An item landed between a two-threshold pair and was buffered for a
+    /// second look (StreamClipper).
+    Defer { element: u64, gain: f64, tau: f64 },
+    /// A T-budget certificate fired: the threshold walked `from → to`
+    /// down the geometric grid.
+    ThresholdMove { sieve: u32, from: f64, to: f64 },
+    /// The T-counter reset at budget with no lower threshold left to
+    /// move to (grid exhausted): confidence restarts on the same τ.
+    ConfidenceReset { sieve: u32, t: u64 },
+    /// A sieve was born (initial grid or a window refresh spawn).
+    SieveSpawn { sieve: u32, v: f64 },
+    /// A sieve was pruned (its OPT guess fell below the live lower bound).
+    SieveRetire { sieve: u32, v: f64 },
+    /// A drift detector fired and the algorithm was reset.
+    DriftReset { elements: u64 },
+    /// A checkpoint was persisted.
+    CheckpointSave { elements: u64 },
+    /// A checkpoint was loaded back.
+    CheckpointRestore { elements: u64 },
+}
+
+/// Number of event kinds in the schema (the `Event` variant count).
+pub const KINDS: usize = 10;
+
+/// Stable schema names in kind order — the NDJSON `type` values, the
+/// Perfetto instant-event suffixes, and the `WATCH` frame cell order.
+pub const KIND_NAMES: [&str; KINDS] = [
+    "accept",
+    "reject",
+    "defer",
+    "threshold_move",
+    "confidence_reset",
+    "sieve_spawn",
+    "sieve_retire",
+    "drift_reset",
+    "checkpoint_save",
+    "checkpoint_restore",
+];
+
+impl Event {
+    fn kind(&self) -> usize {
+        match self {
+            Event::Accept { .. } => 0,
+            Event::Reject { .. } => 1,
+            Event::Defer { .. } => 2,
+            Event::ThresholdMove { .. } => 3,
+            Event::ConfidenceReset { .. } => 4,
+            Event::SieveSpawn { .. } => 5,
+            Event::SieveRetire { .. } => 6,
+            Event::DriftReset { .. } => 7,
+            Event::CheckpointSave { .. } => 8,
+            Event::CheckpointRestore { .. } => 9,
+        }
+    }
+
+    /// Stable schema name (`accept`, `threshold_move`, …) — the NDJSON
+    /// `type` field and the Perfetto instant-event suffix.
+    pub fn kind_name(&self) -> &'static str {
+        KIND_NAMES[self.kind()]
+    }
+
+    /// Event-specific payload fields, in schema order.
+    fn fields(&self) -> Vec<(&'static str, Json)> {
+        let n = |v: f64| Json::num(v);
+        let u = |v: u64| Json::num(v as f64);
+        match *self {
+            Event::Accept { element, sieve, gain, tau }
+            | Event::Reject { element, sieve, gain, tau } => vec![
+                ("element", u(element)),
+                ("sieve", u(sieve as u64)),
+                ("gain", n(gain)),
+                ("tau", n(tau)),
+            ],
+            Event::Defer { element, gain, tau } => {
+                vec![("element", u(element)), ("gain", n(gain)), ("tau", n(tau))]
+            }
+            Event::ThresholdMove { sieve, from, to } => {
+                vec![("sieve", u(sieve as u64)), ("from", n(from)), ("to", n(to))]
+            }
+            Event::ConfidenceReset { sieve, t } => {
+                vec![("sieve", u(sieve as u64)), ("t", u(t))]
+            }
+            Event::SieveSpawn { sieve, v } | Event::SieveRetire { sieve, v } => {
+                vec![("sieve", u(sieve as u64)), ("v", n(v))]
+            }
+            Event::DriftReset { elements }
+            | Event::CheckpointSave { elements }
+            | Event::CheckpointRestore { elements } => vec![("elements", u(elements))],
+        }
+    }
+}
+
+/// A ring-recorded event: the decision plus its microsecond offset from
+/// the shared tracing epoch (so events line up with spans in the trace).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Recorded {
+    pub ts_us: u64,
+    pub event: Event,
+}
+
+/// Cumulative per-kind emission totals since process start. Unlike the
+/// rings these never overwrite, so they are the authoritative counts for
+/// `WATCH` frames and the Perfetto fold-in even on long runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EventTotals {
+    pub accepts: u64,
+    pub rejects: u64,
+    pub defers: u64,
+    pub threshold_moves: u64,
+    pub confidence_resets: u64,
+    pub sieve_spawns: u64,
+    pub sieve_retires: u64,
+    pub drift_resets: u64,
+    pub checkpoint_saves: u64,
+    pub checkpoint_restores: u64,
+}
+
+impl EventTotals {
+    /// Total events emitted across every kind.
+    pub fn logged(&self) -> u64 {
+        self.as_array().iter().sum()
+    }
+
+    /// Per-kind counts in schema order (the `WATCH` frame cell order).
+    pub fn as_array(&self) -> [u64; KINDS] {
+        [
+            self.accepts,
+            self.rejects,
+            self.defers,
+            self.threshold_moves,
+            self.confidence_resets,
+            self.sieve_spawns,
+            self.sieve_retires,
+            self.drift_resets,
+            self.checkpoint_saves,
+            self.checkpoint_restores,
+        ]
+    }
+
+    /// Rebuild totals from schema-order counts (the wire-parse inverse of
+    /// [`EventTotals::as_array`]).
+    pub fn from_array(a: [u64; KINDS]) -> EventTotals {
+        EventTotals {
+            accepts: a[0],
+            rejects: a[1],
+            defers: a[2],
+            threshold_moves: a[3],
+            confidence_resets: a[4],
+            sieve_spawns: a[5],
+            sieve_retires: a[6],
+            drift_resets: a[7],
+            checkpoint_saves: a[8],
+            checkpoint_restores: a[9],
+        }
+    }
+
+    /// `(schema name, cumulative count)` pairs in schema order.
+    pub fn named(&self) -> Vec<(&'static str, u64)> {
+        KIND_NAMES.iter().copied().zip(self.as_array()).collect()
+    }
+}
+
+struct Ring {
+    events: Vec<Recorded>,
+    /// Next overwrite slot once `events` is at capacity.
+    head: usize,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Recorded) {
+        if self.events.len() < EVENT_RING_CAPACITY {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % EVENT_RING_CAPACITY;
+        }
+    }
+}
+
+static RINGS: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+static TOTALS: [AtomicU64; KINDS] = [const { AtomicU64::new(0) }; KINDS];
+
+thread_local! {
+    static LOCAL: Arc<Mutex<Ring>> = {
+        let ring = Arc::new(Mutex::new(Ring { events: Vec::new(), head: 0 }));
+        lock(&RINGS).push(Arc::clone(&ring));
+        ring
+    };
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Record one decision event. One relaxed load and an immediate return
+/// when observability is off; when on, a timestamped ring write under
+/// the calling thread's own (uncontended) lock plus one relaxed add.
+#[inline]
+pub fn emit(ev: Event) {
+    if !super::enabled() {
+        return;
+    }
+    record(ev);
+}
+
+#[cold]
+fn record(ev: Event) {
+    TOTALS[ev.kind()].fetch_add(1, Ordering::Relaxed);
+    let rec = Recorded { ts_us: super::trace::now_us(), event: ev };
+    LOCAL.with(|ring| lock(ring).push(rec));
+}
+
+/// Total decision events currently held across all thread rings (the
+/// ring tail — see [`totals`] for overwrite-proof cumulative counts).
+pub fn count() -> usize {
+    lock(&RINGS).iter().map(|r| lock(r).events.len()).sum()
+}
+
+/// Cumulative per-kind emission totals since process start.
+pub fn totals() -> EventTotals {
+    let t: Vec<u64> = TOTALS.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+    EventTotals {
+        accepts: t[0],
+        rejects: t[1],
+        defers: t[2],
+        threshold_moves: t[3],
+        confidence_resets: t[4],
+        sieve_spawns: t[5],
+        sieve_retires: t[6],
+        drift_resets: t[7],
+        checkpoint_saves: t[8],
+        checkpoint_restores: t[9],
+    }
+}
+
+/// Drain every ring (destructive) and return all events, time-ordered.
+/// Cumulative [`totals`] are unaffected.
+pub fn drain() -> Vec<Recorded> {
+    let mut out = Vec::new();
+    for ring in lock(&RINGS).iter() {
+        let mut r = lock(ring);
+        out.append(&mut r.events);
+        r.head = 0;
+    }
+    out.sort_by_key(|e| e.ts_us);
+    out
+}
+
+/// Copy every ring's events (non-destructive), time-ordered.
+pub fn snapshot() -> Vec<Recorded> {
+    let mut out = Vec::new();
+    for ring in lock(&RINGS).iter() {
+        out.extend(lock(ring).events.iter().cloned());
+    }
+    out.sort_by_key(|e| e.ts_us);
+    out
+}
+
+/// One event as its NDJSON object (the `--events-out` line format):
+/// `{"ts_us":…,"type":"accept",…payload…}`.
+pub fn to_json(rec: &Recorded) -> Json {
+    let mut fields: Vec<(&'static str, Json)> = vec![
+        ("ts_us", Json::num(rec.ts_us as f64)),
+        ("type", Json::str(rec.event.kind_name())),
+    ];
+    fields.extend(rec.event.fields());
+    Json::obj(fields)
+}
+
+/// Write all recorded events to `path` as NDJSON — one JSON object per
+/// line, time-ordered. Non-destructive, so a trace export alongside
+/// still sees the same rings.
+pub fn write_ndjson(path: &std::path::Path) -> std::io::Result<()> {
+    let mut out = String::new();
+    for rec in snapshot() {
+        out.push_str(&to_json(&rec).to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Events and spans share the global toggle; this flips it under
+    /// [`crate::obs::test_toggle_lock`] and uses distinctive payloads and
+    /// non-destructive reads so it cannot disturb concurrent tests.
+    #[test]
+    fn emit_records_and_serializes() {
+        let _toggle = crate::obs::test_toggle_lock();
+        let before = totals();
+        crate::obs::set_enabled(true);
+        emit(Event::Accept { element: 421_773, sieve: 3, gain: 1.5, tau: 0.75 });
+        emit(Event::ThresholdMove { sieve: 3, from: 2.0, to: 1.5 });
+        crate::obs::set_enabled(false);
+        // Disabled: a further emit is a no-op.
+        emit(Event::DriftReset { elements: 999_999_001 });
+        let after = totals();
+        assert_eq!(after.accepts, before.accepts + 1);
+        assert_eq!(after.threshold_moves, before.threshold_moves + 1);
+        assert_eq!(after.drift_resets, before.drift_resets, "disabled emit must not count");
+        let snap = snapshot();
+        let mine = snap
+            .iter()
+            .find(|r| matches!(r.event, Event::Accept { element: 421_773, .. }))
+            .expect("accept event must land in the ring");
+        let line = to_json(mine).to_string();
+        assert!(line.contains("\"type\":\"accept\""), "{line}");
+        assert!(line.contains("\"element\":421773"), "{line}");
+        assert!(
+            !snap.iter().any(|r| matches!(r.event, Event::DriftReset { elements: 999_999_001 })),
+            "disabled emit must not reach the rings"
+        );
+    }
+
+    #[test]
+    fn totals_name_every_kind() {
+        let named = totals().named();
+        assert_eq!(named.len(), KINDS);
+        assert_eq!(named[0].0, "accept");
+        assert_eq!(named[9].0, "checkpoint_restore");
+    }
+}

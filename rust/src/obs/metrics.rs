@@ -101,6 +101,25 @@ impl Histogram {
         }
     }
 
+    pub fn min(&self) -> u64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.min.load(Ordering::Relaxed)
+        }
+    }
+
+    /// Arithmetic mean of the observed samples (0 when empty, matching
+    /// the all-zero empty-snapshot convention).
+    pub fn mean(&self) -> f64 {
+        let count = self.count();
+        if count == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / count as f64
+        }
+    }
+
     /// Percentile estimate from the bucket counts (NaN when empty): the
     /// shared fractional rank locates a bucket, a linear walk inside the
     /// bucket's `[2^i, 2^{i+1})` span resolves the value, and the exact
@@ -148,11 +167,15 @@ impl Histogram {
             p90: pct(90.0),
             p99: pct(99.0),
             max: self.max(),
+            min: self.min(),
+            mean: self.mean(),
         }
     }
 }
 
 /// One histogram's point-in-time summary (the `METRICS HIST` wire unit).
+/// `min`/`mean` joined the snapshot in PR 8; wire parsers default both
+/// to 0 when a pre-PR-8 peer omits them.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HistSnapshot {
     pub name: String,
@@ -161,6 +184,8 @@ pub struct HistSnapshot {
     pub p90: f64,
     pub p99: f64,
     pub max: u64,
+    pub min: u64,
+    pub mean: f64,
 }
 
 type Registry<T> = Mutex<BTreeMap<&'static str, Arc<T>>>;
@@ -257,6 +282,23 @@ mod tests {
         assert_eq!(s.count, 0);
         assert_eq!((s.p50, s.p90, s.p99), (0.0, 0.0, 0.0));
         assert_eq!(s.max, 0);
+        assert_eq!(s.min, 0, "empty min must read 0, not u64::MAX");
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn min_and_mean_track_samples() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 90] {
+            h.observe(v);
+        }
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 90);
+        assert_eq!(h.mean(), 40.0);
+        let s = h.snapshot("mm");
+        assert_eq!((s.min, s.max), (10, 90));
+        assert_eq!(s.mean, 40.0);
+        assert!(s.min as f64 <= s.p50 && s.p50 <= s.max as f64);
     }
 
     #[test]

@@ -1,19 +1,23 @@
-//! Observability: metrics registry + scoped tracing spans (PR 7).
+//! Observability: metrics registry, scoped tracing spans (PR 7) and the
+//! typed decision-event log (PR 8).
 //!
 //! Std-only and zero-dependency. One process-global toggle gates
-//! everything: when off, [`span`] returns a disarmed guard and
-//! [`clock`] returns `None`, so an instrumented hot path costs exactly
-//! one relaxed atomic load — no clock reads, no ring writes, no
-//! histogram updates. When on, spans record into per-thread ring
-//! buffers ([`trace`]) and wall-time deltas accumulate into the stats
-//! counters and the metrics registry ([`metrics`]). Instrumentation
-//! never alters arithmetic or accounting, so every bit-parity suite
-//! holds with tracing enabled.
+//! everything: when off, [`span`] returns a disarmed guard, [`clock`]
+//! returns `None` and [`events::emit`] returns immediately, so an
+//! instrumented hot path costs exactly one relaxed atomic load — no
+//! clock reads, no ring writes, no histogram updates. When on, spans
+//! record into per-thread ring buffers ([`trace`]), decision events
+//! into their own rings ([`events`]), and wall-time deltas accumulate
+//! into the stats counters and the metrics registry ([`metrics`]).
+//! Instrumentation never alters arithmetic or accounting, so every
+//! bit-parity suite holds with tracing and events enabled.
 
+pub mod events;
 pub mod metrics;
 pub mod quantile;
 pub mod trace;
 
+pub use events::{emit as emit_event, Event, EventTotals};
 pub use metrics::{
     counter, gauge, histogram, histogram_snapshots, Counter, Gauge, HistSnapshot, Histogram,
 };
@@ -38,6 +42,15 @@ pub fn set_enabled(on: bool) {
         trace::init_epoch();
     }
     ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Serializes the unit tests that flip the process-global toggle — a
+/// concurrent `set_enabled(false)` from one test would disarm another
+/// mid-window. Every lib test that calls [`set_enabled`] must hold this.
+#[cfg(test)]
+pub(crate) fn test_toggle_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Open a scoped span: records `name` with wall duration when the
@@ -68,5 +81,63 @@ pub fn lap(start: Option<Instant>) -> u64 {
     match start {
         Some(t) => t.elapsed().as_nanos() as u64,
         None => 0,
+    }
+}
+
+/// Bench-driver observability hookup: the fig/table/field bench binaries
+/// construct one of these first thing in `main` and call
+/// [`BenchObs::finish`] last. Output paths come from `--trace-out PATH`
+/// / `--events-out PATH` after the cargo-bench `--` separator, or the
+/// `TS_TRACE_OUT` / `TS_EVENTS_OUT` environment variables; either one
+/// turns recording on for the whole run. With neither set this is inert
+/// and the bench numbers are untouched (recording stays off).
+#[must_use = "call finish() to write the requested trace/event files"]
+pub struct BenchObs {
+    trace: Option<std::path::PathBuf>,
+    events: Option<std::path::PathBuf>,
+}
+
+impl BenchObs {
+    /// Parse the process args/environment and enable recording if any
+    /// output was requested.
+    pub fn from_env() -> BenchObs {
+        let args: Vec<String> = std::env::args().collect();
+        let flag = |name: &str, env: &str| -> Option<std::path::PathBuf> {
+            let from_args = args
+                .iter()
+                .position(|a| a == name)
+                .and_then(|i| args.get(i + 1))
+                .cloned();
+            from_args.or_else(|| std::env::var(env).ok()).map(std::path::PathBuf::from)
+        };
+        let obs = BenchObs {
+            trace: flag("--trace-out", "TS_TRACE_OUT"),
+            events: flag("--events-out", "TS_EVENTS_OUT"),
+        };
+        if obs.trace.is_some() || obs.events.is_some() {
+            set_enabled(true);
+        }
+        obs
+    }
+
+    /// Write whatever was requested (Perfetto trace JSON and/or decision
+    /// NDJSON) and report the paths on stdout.
+    pub fn finish(self) {
+        if let Some(path) = &self.trace {
+            match write_chrome_trace(path) {
+                Ok(()) => println!("trace written to {}", path.display()),
+                Err(e) => eprintln!("trace write failed ({}): {e}", path.display()),
+            }
+        }
+        if let Some(path) = &self.events {
+            match events::write_ndjson(path) {
+                Ok(()) => println!(
+                    "decision events written to {} ({} logged)",
+                    path.display(),
+                    events::totals().logged()
+                ),
+                Err(e) => eprintln!("events write failed ({}): {e}", path.display()),
+            }
+        }
     }
 }

@@ -69,6 +69,15 @@ pub(super) fn init_epoch() {
     EPOCH.get_or_init(Instant::now);
 }
 
+/// Microseconds since the tracing epoch (pinning it now if unset) — the
+/// shared timebase for spans and decision events, so both line up on the
+/// same Perfetto timeline.
+pub(super) fn now_us() -> u64 {
+    let now = Instant::now();
+    let epoch = *EPOCH.get_or_init(|| now);
+    now.saturating_duration_since(epoch).as_micros() as u64
+}
+
 /// RAII span handle: measures from construction to drop, then records
 /// into the current thread's ring. A disarmed guard (tracing off) is a
 /// no-op and never reads the clock.
@@ -129,9 +138,13 @@ pub fn snapshot() -> Vec<SpanEvent> {
 
 /// Write all recorded spans to `path` as a Chrome trace-event JSON
 /// document (complete-event `"ph": "X"` records; open the file at
-/// `chrome://tracing` or <https://ui.perfetto.dev>). Non-destructive.
+/// `chrome://tracing` or <https://ui.perfetto.dev>). Decision-event
+/// totals ([`super::events`]) fold in as global instant events
+/// (`"ph": "i"`, one `events.<kind>` marker per kind with a nonzero
+/// cumulative count), so the trace shows the decision mix next to the
+/// wall-time spans. Non-destructive.
 pub fn write_chrome_trace(path: &std::path::Path) -> std::io::Result<()> {
-    let events: Vec<Json> = snapshot()
+    let mut events: Vec<Json> = snapshot()
         .iter()
         .map(|e| {
             Json::obj(vec![
@@ -145,6 +158,22 @@ pub fn write_chrome_trace(path: &std::path::Path) -> std::io::Result<()> {
             ])
         })
         .collect();
+    let ts = now_us() as f64;
+    for (kind, count) in super::events::totals().named() {
+        if count == 0 {
+            continue;
+        }
+        events.push(Json::obj(vec![
+            ("name", Json::str(format!("events.{kind}"))),
+            ("cat", Json::str("threesieves-events")),
+            ("ph", Json::str("i")),
+            ("s", Json::str("g")),
+            ("ts", Json::num(ts)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("count", Json::num(count as f64))])),
+        ]));
+    }
     let doc = Json::obj(vec![("traceEvents", Json::Arr(events))]);
     std::fs::write(path, doc.to_string())
 }
@@ -153,11 +182,12 @@ pub fn write_chrome_trace(path: &std::path::Path) -> std::io::Result<()> {
 mod tests {
     use super::*;
 
-    /// The one lib test allowed to flip the global toggle: it uses a
-    /// unique span name and the non-destructive `snapshot()` so it can't
-    /// disturb (or be disturbed by) concurrent tests.
+    /// Flips the global toggle under [`crate::obs::test_toggle_lock`] and
+    /// uses a unique span name plus the non-destructive `snapshot()` so it
+    /// can't disturb (or be disturbed by) concurrent tests.
     #[test]
     fn span_records_and_exports() {
+        let _toggle = crate::obs::test_toggle_lock();
         crate::obs::set_enabled(true);
         {
             let _g = crate::obs::span("obs-unit-test-span");

@@ -25,7 +25,7 @@ pub mod sessions;
 
 pub use protocol::{
     ErrorCode, MetricsSnapshot, PushBody, PushReply, Request, Response, SessionSpec, StatsReply,
-    SummaryReply,
+    SummaryReply, WatchFrame, WatchMode,
 };
 pub use server::{Client, ClientError, Server, ServerHandle};
 pub use sessions::{ServiceError, SessionManager};

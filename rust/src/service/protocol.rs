@@ -9,6 +9,7 @@
 //! PUSH <id> rows=<f32,..>[;<f32,..>...]          (CSV form)
 //! PUSH <id> raw=<base64 of little-endian f32s>   (packed form)
 //! SUMMARY <id> | STATS <id> | CLOSE <id> [discard] | METRICS [HIST] | PING | QUIT
+//! WATCH [interval_ms] [events|hist|all]          (periodic FRAME stream)
 //! ```
 //!
 //! `algo=` accepts every name in [`crate::algorithms::registry`], and the
@@ -130,6 +131,36 @@ impl PushBody {
     }
 }
 
+/// What a `WATCH` subscriber wants in each frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WatchMode {
+    /// Cumulative decision-event totals only.
+    Events,
+    /// Latency-histogram summaries only.
+    Hist,
+    /// Both sections in every frame.
+    All,
+}
+
+impl WatchMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WatchMode::Events => "events",
+            WatchMode::Hist => "hist",
+            WatchMode::All => "all",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WatchMode> {
+        match s {
+            "events" => Some(WatchMode::Events),
+            "hist" => Some(WatchMode::Hist),
+            "all" => Some(WatchMode::All),
+            _ => None,
+        }
+    }
+}
+
 /// One parsed request line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -140,8 +171,12 @@ pub enum Request {
     Close { id: String, discard: bool },
     Metrics,
     /// `METRICS HIST`: latency-histogram summaries from the process-wide
-    /// [`obs`](crate::obs) registry (p50/p90/p99/max per named histogram).
+    /// [`obs`](crate::obs) registry (p50/p90/p99/max/min/mean per named
+    /// histogram).
     MetricsHist,
+    /// `WATCH [interval_ms] [events|hist|all]`: subscribe this connection
+    /// to periodic `FRAME` lines (see [`WatchFrame`]) until it closes.
+    Watch { interval_ms: u64, mode: WatchMode },
     Ping,
     Quit,
 }
@@ -194,6 +229,14 @@ pub struct MetricsSnapshot {
     pub wall_kernel_ns: u64,
     pub wall_solve_ns: u64,
     pub wall_scan_ns: u64,
+    /// Decision-telemetry aggregates over live sessions' stats (sieve-rule
+    /// accepts / rejects / clip-zone defers / T-budget threshold moves).
+    /// Counted only while [`obs`](crate::obs) recording is on; 0
+    /// otherwise. Same snapshot consistency as the wall-ns fields.
+    pub accepts: u64,
+    pub rejects: u64,
+    pub defers: u64,
+    pub threshold_moves: u64,
     pub opens: u64,
     pub resumes: u64,
     pub pushes: u64,
@@ -215,9 +258,146 @@ pub enum Response {
     Closed { id: String, checkpointed: bool },
     MetricsData(MetricsSnapshot),
     MetricsHistData(Vec<HistSnapshot>),
+    /// `WATCH` acknowledgment — `FRAME` lines follow on this connection.
+    Watching { interval_ms: u64, mode: WatchMode },
     Pong,
     Bye,
     Error { code: ErrorCode, message: String },
+}
+
+/// One pushed `WATCH` frame: a single `FRAME` line carrying cumulative
+/// decision-event totals and/or histogram summaries, depending on the
+/// subscribed [`WatchMode`]. `seq` numbers the frames actually written to
+/// this subscriber; `dropped` counts frames the server *coalesced away*
+/// because the connection was busy or slow (the per-subscriber queue is
+/// bounded at one pending frame, drop-oldest — totals are cumulative, so
+/// the surviving frame subsumes the dropped ones).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WatchFrame {
+    pub seq: u64,
+    pub dropped: u64,
+    /// Cumulative event totals (present in `events`/`all` modes).
+    pub events: Option<crate::obs::EventTotals>,
+    /// Histogram summaries (present in `hist`/`all` modes).
+    pub hists: Option<Vec<HistSnapshot>>,
+}
+
+impl WatchFrame {
+    /// Serialize to one `FRAME` wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        use std::fmt::Write;
+        let mut s = format!("FRAME seq={} dropped={}", self.seq, self.dropped);
+        if let Some(ev) = &self.events {
+            s.push_str(" events=");
+            for (i, n) in ev.as_array().iter().enumerate() {
+                if i > 0 {
+                    s.push(':');
+                }
+                let _ = write!(s, "{n}");
+            }
+        }
+        if let Some(hists) = &self.hists {
+            let _ = write!(s, " hist_n={}", hists.len());
+            if !hists.is_empty() {
+                s.push_str(" hist=");
+                s.push_str(&hist_cells(hists));
+            }
+        }
+        s
+    }
+
+    /// Parse one `FRAME` line — the subscriber half of `WATCH`.
+    pub fn parse(line: &str) -> Result<WatchFrame, String> {
+        let line = line.trim_end_matches(['\r', '\n']);
+        let rest = line.strip_prefix("FRAME ").ok_or_else(|| format!("bad frame {line:?}"))?;
+        let fields: Vec<(&str, &str)> =
+            rest.split(' ').filter(|t| !t.is_empty()).filter_map(|t| t.split_once('=')).collect();
+        let field = |key: &str| -> Option<&str> {
+            fields.iter().find(|&&(k, _)| k == key).map(|&(_, v)| v)
+        };
+        let num = |key: &str| -> Result<u64, String> {
+            field(key)
+                .ok_or_else(|| format!("frame missing {key}="))?
+                .parse()
+                .map_err(|e| format!("frame {key}: {e}"))
+        };
+        let events = match field("events") {
+            None => None,
+            Some(v) => {
+                let mut cells = [0u64; crate::obs::events::KINDS];
+                let parts: Vec<&str> = v.split(':').collect();
+                if parts.len() != cells.len() {
+                    return Err(format!("frame events: {} cells, expected {}", parts.len(),
+                        cells.len()));
+                }
+                for (slot, part) in cells.iter_mut().zip(&parts) {
+                    *slot = part.parse().map_err(|e| format!("frame events {part:?}: {e}"))?;
+                }
+                Some(crate::obs::EventTotals::from_array(cells))
+            }
+        };
+        let hists = match field("hist_n") {
+            None => None,
+            Some(v) => {
+                let n: usize = v.parse().map_err(|e| format!("frame hist_n: {e}"))?;
+                let hists = match field("hist") {
+                    None if n == 0 => Vec::new(),
+                    None => return Err(format!("frame hist_n={n} without hist=")),
+                    Some(cells) => parse_hist_cells(cells)?,
+                };
+                if hists.len() != n {
+                    return Err(format!("frame hist_n={n} but {} entries", hists.len()));
+                }
+                Some(hists)
+            }
+        };
+        Ok(WatchFrame { seq: num("seq")?, dropped: num("dropped")?, events, hists })
+    }
+}
+
+/// Shared `name:count:p50:p90:p99:max:min:mean` serialization for
+/// `METRICS HIST` replies and `WATCH` frames.
+fn hist_cells(hists: &[HistSnapshot]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    for (i, h) in hists.iter().enumerate() {
+        if i > 0 {
+            s.push(';');
+        }
+        let _ = write!(
+            s,
+            "{}:{}:{}:{}:{}:{}:{}:{}",
+            h.name, h.count, h.p50, h.p90, h.p99, h.max, h.min, h.mean
+        );
+    }
+    s
+}
+
+/// Parse `METRICS HIST` / `FRAME` histogram entries. Accepts the 6-cell
+/// pre-PR-8 form (no `min`/`mean` — they default to zero) alongside the
+/// current 8-cell form, so new clients read old servers.
+fn parse_hist_cells(s: &str) -> Result<Vec<HistSnapshot>, String> {
+    let mut hists = Vec::new();
+    for part in s.split(';') {
+        let cells: Vec<&str> = part.split(':').collect();
+        if cells.len() != 6 && cells.len() != 8 {
+            return Err(format!("bad histogram entry {part:?}"));
+        }
+        let pf = |i: usize| -> Result<f64, String> {
+            cells[i].parse().map_err(|e| format!("histogram entry {part:?}: {e}"))
+        };
+        hists.push(HistSnapshot {
+            name: cells[0].to_string(),
+            count: pf(1)? as u64,
+            p50: pf(2)?,
+            p90: pf(3)?,
+            p99: pf(4)?,
+            max: pf(5)? as u64,
+            min: if cells.len() == 8 { pf(6)? as u64 } else { 0 },
+            mean: if cells.len() == 8 { pf(7)? } else { 0.0 },
+        });
+    }
+    Ok(hists)
 }
 
 /// A session id: 1–64 chars of `[A-Za-z0-9._-]`. The charset keeps ids
@@ -438,6 +618,27 @@ impl Request {
                 Some(&"HIST") => Ok(Request::MetricsHist),
                 Some(other) => Err(bad(format!("METRICS: unexpected token {other:?}"))),
             },
+            "WATCH" => {
+                let mut rest = &tokens[1..];
+                let mut interval_ms = 1000u64;
+                if let Some(tok) = rest.first() {
+                    if let Ok(ms) = tok.parse::<u64>() {
+                        if ms == 0 {
+                            return Err(bad("WATCH interval must be positive"));
+                        }
+                        interval_ms = ms;
+                        rest = &rest[1..];
+                    }
+                }
+                let mode = match rest {
+                    [] => WatchMode::All,
+                    [tok] => WatchMode::parse(tok).ok_or_else(|| {
+                        bad(format!("WATCH: unknown mode {tok:?} (events|hist|all)"))
+                    })?,
+                    _ => return Err(bad("WATCH takes [interval_ms] [events|hist|all]")),
+                };
+                Ok(Request::Watch { interval_ms, mode })
+            }
             "PING" => Ok(Request::Ping),
             "QUIT" => Ok(Request::Quit),
             other => Err((ErrorCode::UnknownCommand, format!("unknown command {other:?}"))),
@@ -471,6 +672,9 @@ impl Request {
             }
             Request::Metrics => "METRICS".into(),
             Request::MetricsHist => "METRICS HIST".into(),
+            Request::Watch { interval_ms, mode } => {
+                format!("WATCH {interval_ms} {}", mode.as_str())
+            }
             Request::Ping => "PING".into(),
             Request::Quit => "QUIT".into(),
         }
@@ -514,7 +718,7 @@ impl Response {
             Response::StatsData { id, reply } => format!(
                 "OK STATS id={id} elements={} queries={} kernel_evals={} stored={} peak={} \
                  instances={} len={} value={} drift={} wall_kernel_ns={} wall_solve_ns={} \
-                 wall_scan_ns={}",
+                 wall_scan_ns={} accepts={} rejects={} defers={} threshold_moves={}",
                 reply.stats.elements,
                 reply.stats.queries,
                 reply.stats.kernel_evals,
@@ -526,7 +730,11 @@ impl Response {
                 reply.drift_events,
                 reply.stats.wall_kernel_ns,
                 reply.stats.wall_solve_ns,
-                reply.stats.wall_scan_ns
+                reply.stats.wall_scan_ns,
+                reply.stats.accepts,
+                reply.stats.rejects,
+                reply.stats.defers,
+                reply.stats.threshold_moves
             ),
             Response::Closed { id, checkpointed } => {
                 format!("OK CLOSE id={id} checkpointed={}", u8::from(*checkpointed))
@@ -534,7 +742,8 @@ impl Response {
             Response::MetricsData(m) => format!(
                 "OK METRICS sessions={} stored={} items={} queries={} kernel_evals={} opens={} \
                  resumes={} pushes={} items_total={} evictions={} closes={} checkpoints={} \
-                 uptime_s={} items_per_s={} wall_kernel_ns={} wall_solve_ns={} wall_scan_ns={}",
+                 uptime_s={} items_per_s={} wall_kernel_ns={} wall_solve_ns={} wall_scan_ns={} \
+                 accepts={} rejects={} defers={} threshold_moves={}",
                 m.sessions,
                 m.stored,
                 m.items,
@@ -551,25 +760,22 @@ impl Response {
                 m.items_per_s,
                 m.wall_kernel_ns,
                 m.wall_solve_ns,
-                m.wall_scan_ns
+                m.wall_scan_ns,
+                m.accepts,
+                m.rejects,
+                m.defers,
+                m.threshold_moves
             ),
             Response::MetricsHistData(hists) => {
-                use std::fmt::Write;
                 let mut s = format!("OK METRICS HIST n={}", hists.len());
                 if !hists.is_empty() {
                     s.push_str(" hist=");
-                    for (i, h) in hists.iter().enumerate() {
-                        if i > 0 {
-                            s.push(';');
-                        }
-                        let _ = write!(
-                            s,
-                            "{}:{}:{}:{}:{}:{}",
-                            h.name, h.count, h.p50, h.p90, h.p99, h.max
-                        );
-                    }
+                    s.push_str(&hist_cells(hists));
                 }
                 s
+            }
+            Response::Watching { interval_ms, mode } => {
+                format!("OK WATCH interval_ms={interval_ms} mode={}", mode.as_str())
             }
             Response::Pong => "OK PONG".into(),
             Response::Bye => "OK BYE".into(),
@@ -657,6 +863,12 @@ impl Response {
                         wall_kernel_ns: num("wall_kernel_ns").unwrap_or(0.0) as u64,
                         wall_solve_ns: num("wall_solve_ns").unwrap_or(0.0) as u64,
                         wall_scan_ns: num("wall_scan_ns").unwrap_or(0.0) as u64,
+                        // Absent in pre-PR-8 server replies — the decision
+                        // counters default to zero like the wall fields.
+                        accepts: num("accepts").unwrap_or(0.0) as u64,
+                        rejects: num("rejects").unwrap_or(0.0) as u64,
+                        defers: num("defers").unwrap_or(0.0) as u64,
+                        threshold_moves: num("threshold_moves").unwrap_or(0.0) as u64,
                     },
                     value: num("value")?,
                     len: num("len")? as usize,
@@ -670,28 +882,12 @@ impl Response {
             "METRICS" => {
                 if tokens.get(1) == Some(&"HIST") {
                     let n = num("n")? as usize;
-                    let mut hists = Vec::with_capacity(n);
-                    if n > 0 {
-                        for part in field("hist")?.split(';') {
-                            let cells: Vec<&str> = part.split(':').collect();
-                            if cells.len() != 6 {
-                                return Err(format!("METRICS HIST: bad entry {part:?}"));
-                            }
-                            let pf = |i: usize| -> Result<f64, String> {
-                                cells[i]
-                                    .parse()
-                                    .map_err(|e| format!("METRICS HIST {part:?}: {e}"))
-                            };
-                            hists.push(HistSnapshot {
-                                name: cells[0].to_string(),
-                                count: pf(1)? as u64,
-                                p50: pf(2)?,
-                                p90: pf(3)?,
-                                p99: pf(4)?,
-                                max: pf(5)? as u64,
-                            });
-                        }
-                    }
+                    let hists = if n > 0 {
+                        parse_hist_cells(field("hist")?)
+                            .map_err(|e| format!("METRICS HIST: {e}"))?
+                    } else {
+                        Vec::new()
+                    };
                     if hists.len() != n {
                         return Err(format!(
                             "METRICS HIST: n={n} but {} entries",
@@ -710,6 +906,12 @@ impl Response {
                     wall_kernel_ns: num("wall_kernel_ns").unwrap_or(0.0) as u64,
                     wall_solve_ns: num("wall_solve_ns").unwrap_or(0.0) as u64,
                     wall_scan_ns: num("wall_scan_ns").unwrap_or(0.0) as u64,
+                    // Absent in pre-PR-8 replies; default like the wall
+                    // fields above.
+                    accepts: num("accepts").unwrap_or(0.0) as u64,
+                    rejects: num("rejects").unwrap_or(0.0) as u64,
+                    defers: num("defers").unwrap_or(0.0) as u64,
+                    threshold_moves: num("threshold_moves").unwrap_or(0.0) as u64,
                     opens: num("opens")? as u64,
                     resumes: num("resumes")? as u64,
                     pushes: num("pushes")? as u64,
@@ -720,6 +922,14 @@ impl Response {
                     uptime_s: num("uptime_s")?,
                     items_per_s: num("items_per_s")?,
                 }))
+            }
+            "WATCH" => {
+                let mode = field("mode")?;
+                Ok(Response::Watching {
+                    interval_ms: num("interval_ms")? as u64,
+                    mode: WatchMode::parse(mode)
+                        .ok_or_else(|| format!("WATCH reply: unknown mode {mode:?}"))?,
+                })
             }
             "PONG" => Ok(Response::Pong),
             "BYE" => Ok(Response::Bye),
@@ -918,11 +1128,34 @@ mod tests {
             Request::Close { id: "c".into(), discard: true },
             Request::Metrics,
             Request::MetricsHist,
+            Request::Watch { interval_ms: 250, mode: WatchMode::Events },
+            Request::Watch { interval_ms: 1000, mode: WatchMode::Hist },
+            Request::Watch { interval_ms: 50, mode: WatchMode::All },
             Request::Ping,
             Request::Quit,
         ] {
             assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
         }
+    }
+
+    #[test]
+    fn watch_defaults_and_partial_forms() {
+        assert_eq!(
+            Request::parse("WATCH").unwrap(),
+            Request::Watch { interval_ms: 1000, mode: WatchMode::All }
+        );
+        assert_eq!(
+            Request::parse("WATCH 200").unwrap(),
+            Request::Watch { interval_ms: 200, mode: WatchMode::All }
+        );
+        assert_eq!(
+            Request::parse("WATCH events").unwrap(),
+            Request::Watch { interval_ms: 1000, mode: WatchMode::Events }
+        );
+        assert_eq!(
+            Request::parse("WATCH 75 hist").unwrap(),
+            Request::Watch { interval_ms: 75, mode: WatchMode::Hist }
+        );
     }
 
     #[test]
@@ -944,6 +1177,9 @@ mod tests {
             ("PUSH t rows=1 rows=2", ErrorCode::BadRequest),
             ("CLOSE t keep", ErrorCode::BadRequest),
             ("METRICS BOGUS", ErrorCode::BadRequest),
+            ("WATCH 0", ErrorCode::BadRequest),
+            ("WATCH fast", ErrorCode::BadRequest),
+            ("WATCH 100 events extra", ErrorCode::BadRequest),
         ];
         for (line, code) in cases {
             match Request::parse(line) {
@@ -999,6 +1235,10 @@ mod tests {
                         wall_kernel_ns: 1111,
                         wall_solve_ns: 2222,
                         wall_scan_ns: 3333,
+                        accepts: 9,
+                        rejects: 447,
+                        defers: 3,
+                        threshold_moves: 2,
                     },
                     value: 2.5,
                     len: 7,
@@ -1015,6 +1255,10 @@ mod tests {
                 wall_kernel_ns: 777,
                 wall_solve_ns: 888,
                 wall_scan_ns: 999,
+                accepts: 12,
+                rejects: 888,
+                defers: 4,
+                threshold_moves: 6,
                 opens: 4,
                 resumes: 1,
                 pushes: 30,
@@ -1033,6 +1277,8 @@ mod tests {
                     p90: 9000.5,
                     p99: 12000.0,
                     max: 15000,
+                    min: 128,
+                    mean: 2222.5,
                 },
                 HistSnapshot {
                     name: "empty.hist".into(),
@@ -1041,9 +1287,12 @@ mod tests {
                     p90: 0.0,
                     p99: 0.0,
                     max: 0,
+                    min: 0,
+                    mean: 0.0,
                 },
             ]),
             Response::MetricsHistData(Vec::new()),
+            Response::Watching { interval_ms: 500, mode: WatchMode::All },
             Response::Pong,
             Response::Bye,
             Response::Error { code: ErrorCode::NoSession, message: "unknown session".into() },
@@ -1073,6 +1322,10 @@ mod tests {
                     wall_kernel_ns: 111,
                     wall_solve_ns: 222,
                     wall_scan_ns: 333,
+                    accepts: 2,
+                    rejects: 28,
+                    defers: 5,
+                    threshold_moves: 1,
                 },
                 value: 0.5,
                 len: 2,
@@ -1084,6 +1337,10 @@ mod tests {
                 assert_eq!(reply.stats.wall_kernel_ns, 111);
                 assert_eq!(reply.stats.wall_solve_ns, 222);
                 assert_eq!(reply.stats.wall_scan_ns, 333);
+                assert_eq!(reply.stats.accepts, 2);
+                assert_eq!(reply.stats.rejects, 28);
+                assert_eq!(reply.stats.defers, 5);
+                assert_eq!(reply.stats.threshold_moves, 1);
             }
             other => panic!("{other:?}"),
         }
@@ -1095,9 +1352,88 @@ mod tests {
                 assert_eq!(reply.stats.wall_kernel_ns, 0);
                 assert_eq!(reply.stats.wall_solve_ns, 0);
                 assert_eq!(reply.stats.wall_scan_ns, 0);
+                assert_eq!(reply.stats.accepts, 0);
+                assert_eq!(reply.stats.rejects, 0);
+                assert_eq!(reply.stats.defers, 0);
+                assert_eq!(reply.stats.threshold_moves, 0);
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    /// Old peers emit 6-cell `METRICS HIST` entries (no `min`/`mean`);
+    /// the parser must accept both generations, mixed in one reply.
+    #[test]
+    fn hist_parse_accepts_legacy_six_cell_entries() {
+        let legacy = "OK METRICS HIST n=2 hist=a.ns:5:10.5:20:30:40;b.ns:1:2:3:4:5";
+        match Response::parse(legacy).unwrap() {
+            Response::MetricsHistData(hists) => {
+                assert_eq!(hists.len(), 2);
+                assert_eq!(hists[0].name, "a.ns");
+                assert_eq!(hists[0].count, 5);
+                assert_eq!(hists[0].max, 40);
+                assert_eq!(hists[0].min, 0, "legacy entries default min to 0");
+                assert_eq!(hists[0].mean, 0.0, "legacy entries default mean to 0");
+            }
+            other => panic!("{other:?}"),
+        }
+        let mixed = "OK METRICS HIST n=2 hist=a.ns:5:10:20:30:40:1:15.5;b.ns:1:2:3:4:5";
+        match Response::parse(mixed).unwrap() {
+            Response::MetricsHistData(hists) => {
+                assert_eq!(hists[0].min, 1);
+                assert_eq!(hists[0].mean, 15.5);
+                assert_eq!(hists[1].min, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        for bad in [
+            "OK METRICS HIST n=1 hist=a:1:2:3:4",         // 5 cells
+            "OK METRICS HIST n=1 hist=a:1:2:3:4:5:6",     // 7 cells
+            "OK METRICS HIST n=1 hist=a:1:2:3:4:5:6:7:8", // 9 cells
+            "OK METRICS HIST n=1 hist=a:x:2:3:4:5",       // non-numeric
+            "OK METRICS HIST n=3 hist=a:1:2:3:4:5",       // count mismatch
+        ] {
+            assert!(Response::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn watch_frames_roundtrip() {
+        let full = WatchFrame {
+            seq: 7,
+            dropped: 2,
+            events: Some(crate::obs::EventTotals {
+                accepts: 10,
+                rejects: 990,
+                defers: 12,
+                threshold_moves: 3,
+                confidence_resets: 1,
+                sieve_spawns: 40,
+                sieve_retires: 28,
+                drift_resets: 2,
+                checkpoint_saves: 5,
+                checkpoint_restores: 1,
+            }),
+            hists: Some(vec![HistSnapshot {
+                name: "service.request_ns".into(),
+                count: 9,
+                p50: 100.0,
+                p90: 200.0,
+                p99: 300.0,
+                max: 400,
+                min: 50,
+                mean: 150.25,
+            }]),
+        };
+        assert_eq!(WatchFrame::parse(&full.to_line()).unwrap(), full);
+        let events_only =
+            WatchFrame { seq: 0, dropped: 0, events: Some(Default::default()), hists: None };
+        assert_eq!(WatchFrame::parse(&events_only.to_line()).unwrap(), events_only);
+        let hist_only = WatchFrame { seq: 1, dropped: 0, events: None, hists: Some(vec![]) };
+        assert_eq!(WatchFrame::parse(&hist_only.to_line()).unwrap(), hist_only);
+        assert!(WatchFrame::parse("OK WATCH").is_err());
+        assert!(WatchFrame::parse("FRAME seq=1").is_err(), "missing dropped=");
+        assert!(WatchFrame::parse("FRAME seq=1 dropped=0 events=1:2:3").is_err(), "short cells");
     }
 
     #[test]

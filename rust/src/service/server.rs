@@ -30,7 +30,7 @@ use crate::exec::ExecContext;
 
 use super::protocol::{
     ErrorCode, MetricsSnapshot, PushBody, PushReply, Request, Response, SessionSpec, StatsReply,
-    SummaryReply, MAX_LINE_BYTES,
+    SummaryReply, WatchFrame, WatchMode, MAX_LINE_BYTES,
 };
 use super::sessions::SessionManager;
 
@@ -163,6 +163,10 @@ fn accept_loop(
 enum LineStatus {
     /// A complete line is in the buffer.
     Line,
+    /// Read timed out with no complete line yet — partial data stays in
+    /// `buf`; call again to continue. This is the `WATCH` tick hook: the
+    /// serve loop emits due frames between polls.
+    Idle,
     /// Peer closed the connection cleanly.
     Eof,
     /// Shutdown flag observed while idle.
@@ -174,7 +178,9 @@ enum LineStatus {
 /// Read one `\n`-terminated line into `buf` (delimiter stripped), bounded
 /// by [`MAX_LINE_BYTES`] and interruptible by the shutdown flag. Partial
 /// data survives read timeouts — unlike `read_line`, which discards
-/// buffered bytes when the underlying read errors.
+/// buffered bytes when the underlying read errors. Each read timeout
+/// surfaces as [`LineStatus::Idle`] so the caller can interleave periodic
+/// work (watch frames) with the poll.
 fn read_line_bounded(
     reader: &mut BufReader<TcpStream>,
     buf: &mut Vec<u8>,
@@ -193,7 +199,7 @@ fn read_line_bounded(
                     if shutdown.load(Ordering::SeqCst) {
                         return Ok(LineStatus::ShutDown);
                     }
-                    continue;
+                    return Ok(LineStatus::Idle);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(e) => return Err(e),
@@ -227,6 +233,54 @@ fn write_reply(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
     stream.write_all(line.as_bytes())
 }
 
+/// Per-connection `WATCH` subscription. Frames are generated on the
+/// connection's own thread between read polls, so a watcher never blocks
+/// `PUSH` traffic on other connections. The pending-frame queue is
+/// bounded at **one**: if the connection was busy (or the consumer slow)
+/// past a frame boundary, the missed frames are coalesced into the next
+/// one — totals are cumulative, so the survivor subsumes them — and
+/// counted in the frame's `dropped=` field.
+struct WatchState {
+    interval: Duration,
+    mode: WatchMode,
+    seq: u64,
+    dropped: u64,
+    next_due: Instant,
+}
+
+impl WatchState {
+    fn new(interval_ms: u64, mode: WatchMode) -> WatchState {
+        // Clamp to the read-poll tick: finer intervals can't be honored.
+        let interval = Duration::from_millis(interval_ms).max(READ_POLL);
+        WatchState { interval, mode, seq: 0, dropped: 0, next_due: Instant::now() + interval }
+    }
+
+    /// Emit at most one frame if a boundary has passed, coalescing any
+    /// further missed boundaries into `dropped`.
+    fn emit_due(&mut self, writer: &mut TcpStream) -> std::io::Result<()> {
+        let now = Instant::now();
+        if now < self.next_due {
+            return Ok(());
+        }
+        let missed = (now.duration_since(self.next_due).as_nanos()
+            / self.interval.as_nanos().max(1)) as u64;
+        self.dropped += missed;
+        self.next_due = now + self.interval;
+        let frame = WatchFrame {
+            seq: self.seq,
+            dropped: self.dropped,
+            events: matches!(self.mode, WatchMode::Events | WatchMode::All)
+                .then(crate::obs::events::totals),
+            hists: matches!(self.mode, WatchMode::Hist | WatchMode::All)
+                .then(crate::obs::histogram_snapshots),
+        };
+        self.seq += 1;
+        let mut line = frame.to_line();
+        line.push('\n');
+        writer.write_all(line.as_bytes())
+    }
+}
+
 /// Serve one connection to completion (EOF, `QUIT`, IO error or service
 /// shutdown). Never panics on malformed input — every parse failure turns
 /// into an `ERR` reply.
@@ -244,9 +298,24 @@ fn serve_conn(
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::new();
+    let mut watch: Option<WatchState> = None;
     loop {
         buf.clear();
-        match read_line_bounded(&mut reader, &mut buf, shutdown)? {
+        // Poll for a complete line; on idle ticks, push any due frame so
+        // a silent subscriber still streams (requests on this connection
+        // keep working — frames interleave between replies, never inside
+        // them).
+        let status = loop {
+            match read_line_bounded(&mut reader, &mut buf, shutdown)? {
+                LineStatus::Idle => {
+                    if let Some(w) = watch.as_mut() {
+                        w.emit_due(&mut writer)?;
+                    }
+                }
+                other => break other,
+            }
+        };
+        match status {
             LineStatus::Eof | LineStatus::ShutDown => return Ok(()),
             LineStatus::TooLong => {
                 let resp = Response::error(
@@ -256,7 +325,7 @@ fn serve_conn(
                 write_reply(&mut writer, &resp)?;
                 return Ok(()); // framing is unrecoverable mid-line
             }
-            LineStatus::Line => {}
+            LineStatus::Line | LineStatus::Idle => {}
         }
         let text = String::from_utf8_lossy(&buf);
         let line = text.trim();
@@ -264,6 +333,16 @@ fn serve_conn(
             continue;
         }
         let resp = match Request::parse(line) {
+            Ok(Request::Watch { interval_ms, mode }) => {
+                // A second WATCH retunes the subscription in place.
+                let w = WatchState::new(interval_ms, mode);
+                let resp = Response::Watching {
+                    interval_ms: w.interval.as_millis() as u64,
+                    mode,
+                };
+                watch = Some(w);
+                resp
+            }
             Ok(req) => {
                 let resp = manager.execute(&req);
                 if matches!(req, Request::Quit) {
@@ -424,6 +503,30 @@ impl Client {
         })
     }
 
+    /// `WATCH`: subscribe this connection to periodic `FRAME` pushes.
+    /// Returns the interval the server will honor (it clamps very fine
+    /// requests to its poll tick). After this call, read frames with
+    /// [`Client::next_frame`]; this blocking client cannot interleave
+    /// further requests on a watching connection (a frame could land
+    /// between request and reply) — use a second connection for traffic.
+    pub fn watch(&mut self, interval_ms: u64, mode: WatchMode) -> Result<u64, ClientError> {
+        self.expect(&Request::Watch { interval_ms, mode }, |r| match r {
+            Response::Watching { interval_ms, .. } => Ok(interval_ms),
+            other => Err(other),
+        })
+    }
+
+    /// Block for the next pushed `FRAME` line on a watching connection.
+    pub fn next_frame(&mut self) -> Result<WatchFrame, ClientError> {
+        let mut buf = Vec::new();
+        self.reader.read_until(b'\n', &mut buf)?;
+        if buf.is_empty() {
+            return Err(ClientError::Protocol("connection closed by server".into()));
+        }
+        let text = String::from_utf8_lossy(&buf);
+        WatchFrame::parse(text.trim_end_matches(['\r', '\n'])).map_err(ClientError::Protocol)
+    }
+
     pub fn ping(&mut self) -> Result<(), ClientError> {
         self.expect(&Request::Ping, |r| match r {
             Response::Pong => Ok(()),
@@ -511,5 +614,98 @@ mod tests {
         let start = std::time::Instant::now();
         handle.shutdown();
         assert!(start.elapsed() < Duration::from_secs(5), "shutdown wedged");
+    }
+
+    /// Minimal scripted peer: answers each incoming request line with the
+    /// next canned reply, verbatim. Lets the [`Client`] parsers be
+    /// exercised against wire forms a real server of this build would
+    /// never produce (legacy peers, corrupt replies).
+    fn canned_server(replies: Vec<&'static str>) -> (SocketAddr, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            for reply in replies {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                stream.write_all(reply.as_bytes()).unwrap();
+                stream.write_all(b"\n").unwrap();
+            }
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn client_metrics_hist_parses_current_and_legacy_wire_forms() {
+        let (addr, peer) = canned_server(vec![
+            // Modern 8-cell entries (PR 8+): ...:max:min:mean.
+            "OK METRICS HIST n=2 hist=service.request_ns:3:10:20:30:40:5:21.5;push_ns:0:0:0:0:0:0:0",
+            // Legacy 6-cell entries (pre-PR-8 peer): min/mean absent.
+            "OK METRICS HIST n=1 hist=service.request_ns:3:10:20:30:40",
+            "OK METRICS HIST n=0",
+        ]);
+        let mut c = Client::connect(addr).unwrap();
+        let modern = c.metrics_hist().unwrap();
+        assert_eq!(modern.len(), 2);
+        assert_eq!(modern[0].name, "service.request_ns");
+        assert_eq!((modern[0].min, modern[0].mean), (5, 21.5));
+        assert_eq!((modern[1].count, modern[1].mean), (0, 0.0));
+        let legacy = c.metrics_hist().unwrap();
+        assert_eq!(legacy.len(), 1);
+        assert_eq!((legacy[0].count, legacy[0].max), (3, 40));
+        assert_eq!((legacy[0].min, legacy[0].mean), (0, 0.0), "legacy entries default min/mean");
+        assert!(c.metrics_hist().unwrap().is_empty());
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn client_metrics_hist_rejects_malformed_replies() {
+        let (addr, peer) = canned_server(vec![
+            "OK METRICS HIST n=1 hist=a:1:2:3:4:5:6",   // 7 cells: neither 6 nor 8
+            "OK METRICS HIST n=2 hist=a:1:2:3:4:5",     // count disagrees with entries
+            "OK METRICS HIST n=1 hist=a:x:2:3:4:5",     // non-numeric cell
+        ]);
+        let mut c = Client::connect(addr).unwrap();
+        for _ in 0..3 {
+            assert!(matches!(c.metrics_hist(), Err(ClientError::Protocol(_))));
+        }
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn client_metrics_hist_roundtrips_against_live_server() {
+        let _toggle = crate::obs::test_toggle_lock();
+        crate::obs::set_enabled(true);
+        let handle = Server::start(test_cfg(Parallelism::Off), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.ping().unwrap(); // records at least one service.request_ns sample
+        let hists = client.metrics_hist().unwrap();
+        let req = hists.iter().find(|h| h.name == "service.request_ns");
+        let req = req.expect("request histogram must be registered");
+        assert!(req.count >= 1);
+        assert!(req.mean > 0.0, "mean must survive the wire");
+        assert!(req.min > 0 && req.min <= req.max);
+        handle.shutdown();
+        crate::obs::set_enabled(false);
+    }
+
+    #[test]
+    fn watch_streams_numbered_frames() {
+        let handle = Server::start(test_cfg(Parallelism::Off), "127.0.0.1:0").unwrap();
+        let mut watcher = Client::connect(handle.addr()).unwrap();
+        // 1ms is clamped up to the server's poll tick; the granted value
+        // comes back in the acknowledgment.
+        let granted = watcher.watch(1, WatchMode::All).unwrap();
+        assert!(granted >= 1);
+        let f0 = watcher.next_frame().unwrap();
+        let f1 = watcher.next_frame().unwrap();
+        assert_eq!(f0.seq, 0);
+        assert_eq!(f1.seq, 1);
+        assert!(f0.events.is_some() && f0.hists.is_some(), "mode=all carries both sections");
+        // Other connections keep getting served while the watcher streams.
+        let mut second = Client::connect(handle.addr()).unwrap();
+        second.ping().unwrap();
+        handle.shutdown();
     }
 }

@@ -138,6 +138,11 @@ impl Session {
                     }
                     {
                         let _g = crate::obs::span("drift-reset");
+                        if crate::obs::enabled() {
+                            crate::obs::emit_event(crate::obs::Event::DriftReset {
+                                elements: self.algo.stats().elements,
+                            });
+                        }
                         self.algo.reset();
                     }
                     start = i;
@@ -614,6 +619,10 @@ impl SessionManager {
         let mut wall_kernel_ns = 0u64;
         let mut wall_solve_ns = 0u64;
         let mut wall_scan_ns = 0u64;
+        let mut accepts = 0u64;
+        let mut rejects = 0u64;
+        let mut defers = 0u64;
+        let mut threshold_moves = 0u64;
         for s in &guards {
             let st = s.algo.stats();
             stored += st.stored;
@@ -623,6 +632,10 @@ impl SessionManager {
             wall_kernel_ns += st.wall_kernel_ns;
             wall_solve_ns += st.wall_solve_ns;
             wall_scan_ns += st.wall_scan_ns;
+            accepts += st.accepts;
+            rejects += st.rejects;
+            defers += st.defers;
+            threshold_moves += st.threshold_moves;
         }
         drop(guards);
         let uptime_s = self.started.elapsed().as_secs_f64();
@@ -636,6 +649,10 @@ impl SessionManager {
             wall_kernel_ns,
             wall_solve_ns,
             wall_scan_ns,
+            accepts,
+            rejects,
+            defers,
+            threshold_moves,
             opens: self.counters.opens.load(Ordering::Relaxed),
             resumes: self.counters.resumes.load(Ordering::Relaxed),
             pushes: self.counters.pushes.load(Ordering::Relaxed),
@@ -690,6 +707,13 @@ impl SessionManager {
             },
             Request::Metrics => Response::MetricsData(self.metrics()),
             Request::MetricsHist => Response::MetricsHistData(crate::obs::histogram_snapshots()),
+            // WATCH is a connection-level subscription: the TCP server
+            // intercepts it before dispatch (it owns the write half the
+            // frames go out on), so it can never reach the shared executor.
+            Request::Watch { .. } => Response::error(
+                ErrorCode::BadRequest,
+                "WATCH binds to a connection; unavailable via in-process dispatch".into(),
+            ),
             Request::Ping => Response::Pong,
             Request::Quit => Response::Bye,
         }

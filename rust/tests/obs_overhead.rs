@@ -1,16 +1,21 @@
-//! PR-7 acceptance: the observability layer is provably inert when off
-//! and semantically invisible when on.
+//! PR-7/PR-8 acceptance: the observability layer — spans *and* the typed
+//! decision-event log — is provably inert when off and semantically
+//! invisible when on.
 //!
 //! One test owns this file so it runs in its own process and may flip the
 //! global recording toggle without racing other tests. Phase 1 (recording
 //! off) runs a ThreeSieves batch workload and a full in-process service
-//! conversation, asserting **zero** recorded span events and all-zero
-//! wall-clock stats. Phase 2 re-runs the identical workloads with
-//! recording on and asserts the selection outputs — values, summaries,
-//! per-push replies, semantic stats — are bit-identical to phase 1, that
-//! the per-stage wall fields now populate, that the expected span names
-//! (kernel-panel, solve-panel, sieve-scan, service-request) were
-//! recorded, and that the Chrome trace export parses back.
+//! conversation, asserting **zero** recorded span events, **zero**
+//! decision events, all-zero wall-clock stats and all-zero decision
+//! counters. Phase 2 re-runs the identical workloads with recording on
+//! and asserts the selection outputs — values, summaries, per-push
+//! replies, semantic stats — are bit-identical to phase 1, that the
+//! per-stage wall fields and decision counters now populate, that the
+//! expected span names (kernel-panel, solve-panel, sieve-scan,
+//! service-request) were recorded, that the decision-event stream flows
+//! (accept/reject events, NDJSON export parses back line by line, and
+//! the Chrome trace carries the `events.<kind>` fold-in markers), and
+//! that the trace export parses back.
 
 use std::time::Duration;
 
@@ -76,10 +81,18 @@ fn observability_is_inert_off_and_invisible_on() {
     let (value_off, summary_off, stats_off) = run_threesieves(&ds);
     let (lines_off, svc_stats_off, svc_summary_off) = run_service(&ds);
     assert_eq!(obs::event_count(), 0, "tracing off must record zero span events");
+    assert_eq!(obs::events::count(), 0, "events off must record zero decision events");
+    assert_eq!(obs::events::totals().logged(), 0, "cumulative event totals must stay zero");
     assert_eq!(stats_off.wall_kernel_ns, 0);
     assert_eq!(stats_off.wall_solve_ns, 0);
     assert_eq!(stats_off.wall_scan_ns, 0);
     assert_eq!(svc_stats_off.wall_kernel_ns, 0);
+    assert_eq!(
+        stats_off.accepts + stats_off.rejects + stats_off.defers + stats_off.threshold_moves,
+        0,
+        "events off must leave every decision counter at zero"
+    );
+    assert_eq!(svc_stats_off.accepts + svc_stats_off.rejects, 0);
 
     // Phase 2: recording on. Identical workloads, identical outputs.
     obs::set_enabled(true);
@@ -95,6 +108,30 @@ fn observability_is_inert_off_and_invisible_on() {
     assert!(stats_on.wall_kernel_ns > 0, "kernel wall must advance while recording");
     assert!(stats_on.wall_solve_ns > 0, "solve wall must advance while recording");
     assert!(stats_on.wall_scan_ns > 0, "scan wall must advance while recording");
+    // ...and so do the decision counters — without touching any field the
+    // equality above compares.
+    assert!(stats_on.accepts > 0, "a non-empty summary implies accept decisions");
+    assert!(stats_on.rejects > 0, "a 600-element stream implies reject decisions");
+    assert!(stats_on.accepts >= stats_on.stored as u64, "every stored element was accepted");
+    assert!(svc_stats_on.accepts > 0 && svc_stats_on.rejects > 0);
+
+    // The typed decision-event stream flows and its NDJSON export parses
+    // back line by line.
+    let totals = obs::events::totals();
+    assert!(totals.accepts > 0 && totals.rejects > 0, "decision events must flow: {totals:?}");
+    assert!(obs::events::count() > 0);
+    let ev_path = std::env::temp_dir().join("obs_overhead_events.ndjson");
+    obs::events::write_ndjson(&ev_path).expect("write events NDJSON");
+    let text = std::fs::read_to_string(&ev_path).unwrap();
+    let mut parsed = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("NDJSON line must parse: {e}: {line}"));
+        assert!(j.get("type").as_str().is_some(), "every event carries a type: {line}");
+        assert!(j.get("ts_us").as_f64().is_some(), "every event is timestamped: {line}");
+        parsed += 1;
+    }
+    assert_eq!(parsed, obs::events::count(), "export must cover every ring-held event");
+    let _ = std::fs::remove_file(&ev_path);
 
     // The `METRICS HIST` surface now carries the request-latency histogram.
     let mgr = SessionManager::new(ServiceConfig::default());
@@ -124,13 +161,20 @@ fn observability_is_inert_off_and_invisible_on() {
     for want in ["kernel-panel", "solve-panel", "sieve-scan", "service-request"] {
         assert!(names.contains(&want), "trace must contain {want:?}, got {names:?}");
     }
+    // Decision totals fold into the same trace as instant-event markers.
+    for want in ["events.accept", "events.reject"] {
+        assert!(names.contains(&want), "trace must fold in {want:?}, got {names:?}");
+    }
     assert!(obs::event_count() > 0);
 
     obs::set_enabled(false);
     let _ = std::fs::remove_file(&path);
-    // Off again: a fresh workload adds nothing to the drained rings.
+    // Off again: a fresh workload adds nothing to the drained rings and
+    // nothing to the cumulative decision totals.
     let drained = obs::drain();
     assert!(!drained.is_empty());
+    let totals_before = obs::events::totals();
     run_threesieves(&ds);
     assert_eq!(obs::event_count(), 0, "disabling must stop recording immediately");
+    assert_eq!(obs::events::totals(), totals_before, "disabled emits must not count");
 }

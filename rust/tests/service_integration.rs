@@ -20,7 +20,7 @@ use threesieves::data::registry;
 use threesieves::exec::Parallelism;
 use threesieves::experiments::{build_algo, GammaMode};
 use threesieves::metrics::AlgoStats;
-use threesieves::service::{Client, ClientError, ErrorCode, Server, SessionSpec};
+use threesieves::service::{Client, ClientError, ErrorCode, Server, SessionSpec, WatchMode};
 use threesieves::util::json::Json;
 
 const CHUNK_ROWS: usize = 64;
@@ -266,6 +266,76 @@ fn shutdown_checkpoints_open_sessions() {
     let ck = Checkpoint::load(&dir.join("sd.ckpt")).unwrap();
     assert_eq!(ck.elements, ds.len() as u64);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// PR-8 acceptance: a `WATCH` subscriber streams frames while a second
+/// connection pushes a real workload, and the frame stream ends up
+/// consistent with the final `METRICS` reply — cumulative event totals
+/// never regress across frames, sequence numbers strictly increase, and
+/// once the workload is done the process-wide totals in a fresh frame
+/// cover the session's decision counters (they aggregate at least this
+/// server's session, possibly more from tests sharing the process).
+#[test]
+fn watch_streams_frames_while_second_connection_pushes() {
+    threesieves::obs::set_enabled(true);
+    let cfg = ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        parallelism: Parallelism::Threads(4),
+        ..ServiceConfig::default()
+    };
+    let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+    let addr = handle.addr();
+
+    let mut watcher = Client::connect(addr).unwrap();
+    let granted = watcher.watch(100, WatchMode::All).unwrap();
+    assert!(granted >= 100, "server honors (or clamps up) the requested interval");
+    let first = watcher.next_frame().unwrap();
+    assert!(first.events.is_some() && first.hists.is_some(), "mode=all carries both sections");
+
+    // The workload runs on its own connection while frames tick.
+    let pusher = std::thread::spawn(move || {
+        let ds = registry::get("fact-highlevel-like", 600, 44).unwrap();
+        let spec = SessionSpec::three_sieves(ds.dim(), 6, 0.01, 100);
+        let mut client = Client::connect(addr).unwrap();
+        assert!(!client.open("watched", &spec).unwrap());
+        for chunk in ds.raw().chunks(CHUNK_ROWS * ds.dim()) {
+            client.push_packed("watched", chunk).unwrap();
+        }
+        let m = client.metrics().unwrap();
+        client.quit().unwrap();
+        m
+    });
+    let m = pusher.join().unwrap();
+    assert!(m.accepts > 0 && m.rejects > 0, "METRICS must expose live decision aggregates");
+
+    // Frames already in flight may predate the workload's end; keep
+    // reading (they arrive every interval regardless) until one's totals
+    // cover the finished session. Every frame on the way must keep the
+    // stream invariants.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let mut last = first;
+    loop {
+        let frame = watcher.next_frame().unwrap();
+        assert!(frame.seq > last.seq, "frame sequence must strictly increase");
+        assert!(frame.dropped >= last.dropped, "the coalescing counter is cumulative");
+        let (now, prev) = (frame.events.unwrap(), last.events.unwrap());
+        assert!(
+            now.accepts >= prev.accepts
+                && now.rejects >= prev.rejects
+                && now.defers >= prev.defers,
+            "cumulative event totals must never regress: {now:?} after {prev:?}"
+        );
+        last = frame;
+        if now.accepts >= m.accepts && now.rejects >= m.rejects && now.defers >= m.defers {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "frames never caught up with METRICS: {now:?} vs {m:?}"
+        );
+    }
+    handle.shutdown();
+    threesieves::obs::set_enabled(false);
 }
 
 #[test]
