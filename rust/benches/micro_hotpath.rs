@@ -21,6 +21,11 @@
 //!   solve inside `peek_gain_batch` at n ∈ {32, 128}, B ∈ {16, 64} on a
 //!   solve-dominated configuration (the issue-#5 acceptance point:
 //!   blocked wall ≤ per-candidate at n = 128)
+//! * SIMD dispatch tables: scalar vs the CPU's SIMD table on the
+//!   dispatched hot loops — blocked kernel panel, interleaved
+//!   4-candidate dot, and the full blocked-solve gain path — at
+//!   d ∈ {16, 128} (the PR-9 acceptance point: ≥1.5× on the kernel
+//!   panel at d = 128, gated in CI via `--simd-json`)
 //! * Observability overhead: the same ThreeSieves chunked run with span/
 //!   wall-clock recording off vs on, plus the per-stage (kernel / solve /
 //!   scan) wall breakdown the recording surfaces (the PR-7 acceptance
@@ -28,13 +33,17 @@
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- [--quick] [--json PATH]
 //! [--scaling-json PATH] [--service-json PATH] [--panel-json PATH]
-//! [--solve-json PATH] [--obs-json PATH]]`.
+//! [--solve-json PATH] [--simd-json PATH] [--obs-json PATH]
+//! [--backend scalar|simd|auto]]`.
 //! `--quick` shrinks iteration counts to CI-smoke scale; `--json PATH`
 //! writes the headline numbers as a JSON object (the CI bench job uploads
 //! it as an artifact so the BENCH_* trajectory populates); the other
 //! `--*-json` flags write the thread-scaling, service-throughput,
-//! panel-sharing and observability-overhead numbers as their own
-//! artifacts.
+//! panel-sharing, solve-panel, SIMD-backend and observability-overhead
+//! numbers as their own artifacts. `--backend` pins the process-wide
+//! kernel dispatch table for every row above (default: `TS_KERNEL_BACKEND`
+//! or auto-detect); the SIMD head-to-head rows time both explicit tables
+//! regardless.
 
 use std::path::PathBuf;
 
@@ -454,6 +463,125 @@ fn bench_service_sessions(
     svc.push("service_items_per_session", n_per_session as f64);
 }
 
+/// The PR-9 acceptance rows: scalar vs SIMD dispatch table on the
+/// dispatched hot loops at d ∈ {16, 128}. The kernel-panel and dot_x4
+/// rows time the explicit tables head-to-head (no global state); the
+/// blocked-solve row flips the process-wide selection around the full
+/// `peek_gain_batch` path — blocked kernel panel plus blocked forward
+/// solve behind the same seam — and restores the run's backend after.
+/// The d = 128 kernel-panel speedup is the CI headline
+/// (`simd_kernel_panel_d128_speedup`, pinned ≥1.5× on AVX2 runners).
+/// Self-skips on CPUs without a SIMD table — every row would be 1.0x by
+/// definition (`simd` falls back to the scalar table there).
+fn bench_simd(iters: usize, rep: &mut Report, simd_rep: &mut Report) {
+    use threesieves::simd::{self, kernel_panel_into, scalar_ops, simd_ops, BackendChoice};
+    let Some(simd_t) = simd_ops() else {
+        println!("simd backend     : SKIP (no AVX2/NEON on this CPU)");
+        return;
+    };
+    let mut rng = Rng::seed_from(11);
+    let (n, b) = (64usize, 64usize);
+    let mut sink = 0.0f64;
+    for d in [16usize, 128] {
+        let gamma = 1.0 / d as f64;
+        let feats = rand_rows(&mut rng, n, d);
+        let items = rand_rows(&mut rng, b, d);
+        let mut out = vec![0.0f64; b * n];
+        let mut secs = [0f64; 2]; // [scalar, simd]
+        for (mode, ops) in [scalar_ops(), simd_t].into_iter().enumerate() {
+            let norms: Vec<f64> = feats.chunks_exact(d).map(|r| (ops.dot)(r, r)).collect();
+            let stats = bench_loop(iters / 10, iters, || {
+                kernel_panel_into(ops, &feats, &norms, d, n, gamma, &items, b, &mut out);
+                sink += out[0];
+            });
+            secs[mode] = stats.mean();
+        }
+        let scalar_ns = secs[0] * 1e9 / b as f64;
+        let simd_ns = secs[1] * 1e9 / b as f64;
+        let speedup = scalar_ns / simd_ns;
+        println!(
+            "simd kernel panel d={d:<4} |S|={n:<4} B={b:<4}: scalar {scalar_ns:>8.1} ns/q  \
+             simd {simd_ns:>8.1} ns/q  speedup {speedup:.2}x"
+        );
+        for (key, val) in [
+            (format!("simd_kernel_panel_d{d}_scalar_ns_per_query"), scalar_ns),
+            (format!("simd_kernel_panel_d{d}_simd_ns_per_query"), simd_ns),
+            (format!("simd_kernel_panel_d{d}_speedup"), speedup),
+        ] {
+            rep.push(key.clone(), val);
+            simd_rep.push(key, val);
+        }
+
+        let x4 = |i: usize| &items[i * d..(i + 1) * d];
+        let xs: [&[f32]; 4] = [x4(0), x4(1), x4(2), x4(3)];
+        for (mode, ops) in [scalar_ops(), simd_t].into_iter().enumerate() {
+            let stats = bench_loop(iters / 10, iters, || {
+                for row in feats.chunks_exact(d) {
+                    let v = (ops.dot_x4)(&xs, row);
+                    sink += v[0] + v[1] + v[2] + v[3];
+                }
+            });
+            secs[mode] = stats.mean();
+        }
+        let scalar_ns = secs[0] * 1e9 / (n * 4) as f64;
+        let simd_ns = secs[1] * 1e9 / (n * 4) as f64;
+        let speedup = scalar_ns / simd_ns;
+        println!(
+            "simd dot_x4      d={d:<4} |S|={n:<4}       : scalar {scalar_ns:>8.1} ns/dot \
+             simd {simd_ns:>8.1} ns/dot speedup {speedup:.2}x"
+        );
+        for (key, val) in [
+            (format!("simd_dot_x4_d{d}_scalar_ns"), scalar_ns),
+            (format!("simd_dot_x4_d{d}_simd_ns"), simd_ns),
+            (format!("simd_dot_x4_d{d}_speedup"), speedup),
+        ] {
+            rep.push(key.clone(), val);
+            simd_rep.push(key, val);
+        }
+
+        // Full seam: |S| = 128 makes the O(|S|²) blocked forward solve
+        // dominate at d = 16, while d = 128 splits the time with the
+        // kernel panel — both ride the selected dispatch table.
+        let n_solve = 128usize;
+        let rows = rand_rows(&mut rng, n_solve, d);
+        let cands = rand_rows(&mut rng, b, d);
+        let prev = simd::active_name();
+        let choices = [BackendChoice::Scalar, BackendChoice::Simd];
+        for (mode, choice) in choices.into_iter().enumerate() {
+            simd::select(choice);
+            let cfg = LogDetConfig::with_gamma(d, n_solve, 2.0 * d as f64, 1.0);
+            let mut f = NativeLogDet::new(cfg);
+            for i in 0..n_solve {
+                f.accept(&rows[i * d..(i + 1) * d]);
+            }
+            let mut gains = Vec::new();
+            let stats = bench_loop(iters / 10, iters, || {
+                f.peek_gain_batch(&cands, b, &mut gains);
+                sink += gains[0];
+            });
+            secs[mode] = stats.mean();
+        }
+        let restore = if prev == "scalar" { BackendChoice::Scalar } else { BackendChoice::Simd };
+        simd::select(restore);
+        let scalar_ns = secs[0] * 1e9 / b as f64;
+        let simd_ns = secs[1] * 1e9 / b as f64;
+        let speedup = scalar_ns / simd_ns;
+        println!(
+            "simd blocked slv d={d:<4} |S|={n_solve:<4} B={b:<4}: scalar {scalar_ns:>8.1} ns/q  \
+             simd {simd_ns:>8.1} ns/q  speedup {speedup:.2}x"
+        );
+        for (key, val) in [
+            (format!("simd_blocked_solve_d{d}_scalar_ns_per_query"), scalar_ns),
+            (format!("simd_blocked_solve_d{d}_simd_ns_per_query"), simd_ns),
+            (format!("simd_blocked_solve_d{d}_speedup"), speedup),
+        ] {
+            rep.push(key.clone(), val);
+            simd_rep.push(key, val);
+        }
+    }
+    std::hint::black_box(sink);
+}
+
 /// The PR-7 acceptance row: an identical ThreeSieves chunked run with
 /// observability recording off, then on. Min-over-iterations wall keeps
 /// scheduler noise out of the ratio; CI pins `obs_overhead_ratio` ≤ 1.03.
@@ -553,14 +681,32 @@ fn main() {
         .position(|a| a == "--obs-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let simd_json_path = args
+        .iter()
+        .position(|a| a == "--simd-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let backend_choice = match args.iter().position(|a| a == "--backend") {
+        None => threesieves::simd::env_choice(),
+        Some(i) => {
+            let v = args.get(i + 1).map(String::as_str).unwrap_or("");
+            threesieves::simd::BackendChoice::parse(v)
+                .unwrap_or_else(|| panic!("--backend {v}: expected scalar|simd|auto"))
+        }
+    };
+    let backend = threesieves::simd::select(backend_choice).name;
     let mut rep = Report { entries: Vec::new() };
     let mut scaling = Report { entries: Vec::new() };
     let mut service = Report { entries: Vec::new() };
     let mut panel = Report { entries: Vec::new() };
     let mut solve = Report { entries: Vec::new() };
     let mut obs = Report { entries: Vec::new() };
+    let mut simd_rep = Report { entries: Vec::new() };
 
-    println!("== micro hot-path benchmarks{} ==", if quick { " (quick)" } else { "" });
+    println!(
+        "== micro hot-path benchmarks{} (backend: {backend}) ==",
+        if quick { " (quick)" } else { "" }
+    );
     let gain_iters = if quick { 200 } else { 2000 };
     for (d, n) in [(16usize, 10usize), (16, 50), (64, 50), (256, 100)] {
         bench_native_gain(d, n, gain_iters);
@@ -573,6 +719,8 @@ fn main() {
     // The issue-#5 acceptance point: blocked vs per-candidate solve wall
     // on the solve-dominated scenarios.
     bench_solve_panel(gain_iters, &mut rep, &mut solve);
+    // The PR-9 acceptance rows: scalar vs SIMD table head-to-head.
+    bench_simd(panel_iters, &mut rep, &mut simd_rep);
     bench_native_append_remove(16, 50, if quick { 10 } else { 50 });
     bench_native_append_remove(64, 100, if quick { 10 } else { 50 });
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -621,6 +769,12 @@ fn main() {
     }
     if let Some(path) = obs_json_path {
         match obs.write(&path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+    if let Some(path) = simd_json_path {
+        match simd_rep.write(&path) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("failed to write {path}: {e}"),
         }

@@ -10,9 +10,24 @@
 use std::path::Path;
 
 use crate::exec::Parallelism;
+use crate::simd::BackendChoice;
 use crate::util::json::{Json, JsonError};
 
 pub use crate::algorithms::registry::{AlgoSpec, ParamValue};
+
+/// Parse an optional `"kernel_backend": "scalar"|"simd"|"auto"` field —
+/// shared by [`ExperimentConfig`] and [`ServiceConfig`] so the accepted
+/// strings cannot drift from [`BackendChoice::parse`]. `None` means the
+/// config leaves the choice to the CLI flag / `TS_KERNEL_BACKEND` env
+/// var (every backend is bitwise identical — see [`crate::simd`]).
+fn kernel_backend_field(j: &Json) -> Result<Option<BackendChoice>, String> {
+    match j.get("kernel_backend").as_str() {
+        None => Ok(None),
+        Some(s) => BackendChoice::parse(s)
+            .map(Some)
+            .ok_or_else(|| format!("kernel_backend = {s:?}: expected scalar|simd|auto")),
+    }
+}
 
 /// A full experiment sweep description.
 #[derive(Clone, Debug)]
@@ -32,6 +47,10 @@ pub struct ExperimentConfig {
     /// Worker threads for shard/sieve fan-out (`"off"` | `"auto"` | n).
     /// Results are bit-identical at every setting — see [`crate::exec`].
     pub parallelism: Parallelism,
+    /// Kernel/solve SIMD backend (`"scalar"` | `"simd"` | `"auto"`);
+    /// `None` defers to `TS_KERNEL_BACKEND`, then auto-detection.
+    /// Results are bit-identical under every backend — see [`crate::simd`].
+    pub kernel_backend: Option<BackendChoice>,
     /// Output directory for CSV/JSON results.
     pub out_dir: String,
 }
@@ -58,6 +77,11 @@ pub struct ServiceConfig {
     /// connection onto this worker pool (`off` = one dedicated thread per
     /// connection instead).
     pub parallelism: Parallelism,
+    /// Kernel/solve SIMD backend (`"scalar"` | `"simd"` | `"auto"`);
+    /// `None` defers to `TS_KERNEL_BACKEND`, then auto-detection.
+    /// Summaries are bit-identical under every backend — see
+    /// [`crate::simd`].
+    pub kernel_backend: Option<BackendChoice>,
 }
 
 impl Default for ServiceConfig {
@@ -68,6 +92,7 @@ impl Default for ServiceConfig {
             idle_timeout: std::time::Duration::from_secs(300),
             checkpoint_dir: None,
             parallelism: Parallelism::Off,
+            kernel_backend: None,
         }
     }
 }
@@ -105,6 +130,7 @@ impl ServiceConfig {
             idle_timeout,
             checkpoint_dir: j.get("checkpoint_dir").as_str().map(std::path::PathBuf::from),
             parallelism,
+            kernel_backend: kernel_backend_field(j)?,
         })
     }
 }
@@ -148,6 +174,7 @@ impl ExperimentConfig {
             algos,
             batch_size: j.get("batch_size").as_usize().unwrap_or(1).max(1),
             parallelism,
+            kernel_backend: kernel_backend_field(&j)?,
             out_dir: j.get("out_dir").as_str().unwrap_or("results").to_string(),
         })
     }
@@ -273,6 +300,24 @@ mod tests {
         // a config error, not a valid deployment).
         let cfg = ServiceConfig::from_json_text(r#"{"max_sessions": 0}"#).unwrap();
         assert_eq!(cfg.max_sessions, 1);
+    }
+
+    #[test]
+    fn kernel_backend_parses_and_rejects_unknown() {
+        let cfg = ExperimentConfig::from_json_text(r#"{"kernel_backend": "scalar"}"#).unwrap();
+        assert_eq!(cfg.kernel_backend, Some(BackendChoice::Scalar));
+        let cfg = ExperimentConfig::from_json_text(r#"{"kernel_backend": "simd"}"#).unwrap();
+        assert_eq!(cfg.kernel_backend, Some(BackendChoice::Simd));
+        let cfg = ExperimentConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.kernel_backend, None);
+        let err =
+            ExperimentConfig::from_json_text(r#"{"kernel_backend": "avx512"}"#).unwrap_err();
+        assert!(err.contains("kernel_backend"), "{err}");
+
+        let cfg = ServiceConfig::from_json_text(r#"{"kernel_backend": "auto"}"#).unwrap();
+        assert_eq!(cfg.kernel_backend, Some(BackendChoice::Auto));
+        assert_eq!(ServiceConfig::default().kernel_backend, None);
+        assert!(ServiceConfig::from_json_text(r#"{"kernel_backend": "mmx"}"#).is_err());
     }
 
     #[test]

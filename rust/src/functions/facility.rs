@@ -26,6 +26,10 @@ pub struct FacilityLocation {
     /// Reference sample W, row-major.
     refs: Vec<f32>,
     n_refs: usize,
+    /// Cached `‖w‖²` per reference row — the reference set never changes,
+    /// so the norm half of the kernel row is paid once per function
+    /// instead of once per gain query (`RbfKernel::eval_row_cached`).
+    ref_norms: Vec<f64>,
     /// Current best similarity per reference point.
     best: Vec<f64>,
     feats: Vec<f32>,
@@ -43,11 +47,15 @@ impl FacilityLocation {
         assert!(dim > 0);
         assert!(!refs.is_empty() && refs.len() % dim == 0, "refs must be n×dim");
         let n_refs = refs.len() / dim;
+        let kernel = RbfKernel::new(gamma);
+        let mut ref_norms = Vec::with_capacity(n_refs);
+        kernel.row_norms_into(&refs, dim, &mut ref_norms);
         FacilityLocation {
-            kernel: RbfKernel::new(gamma),
+            kernel,
             dim,
             refs,
             n_refs,
+            ref_norms,
             best: vec![0.0; n_refs],
             feats: Vec::new(),
             n: 0,
@@ -62,7 +70,7 @@ impl FacilityLocation {
     }
 
     fn sims_into(&self, item: &[f32], out: &mut [f64]) {
-        self.kernel.eval_row(item, &self.refs, self.dim, out);
+        self.kernel.eval_row_cached(item, &self.refs, self.dim, &self.ref_norms, out);
     }
 
     fn value_from_best(best: &[f64]) -> f64 {

@@ -51,6 +51,23 @@
 //! widest sieve. `set_blocked_solve(false)` keeps the per-candidate loop
 //! as the bench/parity baseline; `benches/micro_hotpath.rs` tracks the
 //! blocked-vs-per-candidate wall ratio in CI (`bench_solve_panel.json`).
+//!
+//! §Perf iteration 8 (runtime-dispatched SIMD backends): the hot
+//! primitives this file used to own — `dot_lanes`, `dot_lanes_x4`,
+//! `dot_lanes_f64`, `rbf_entry`, `kernel_panel_into` — moved behind the
+//! [`crate::simd`] dispatch seam (scalar reference, AVX2/SSE2, NEON;
+//! every backend bitwise identical to scalar by construction, selected
+//! once at startup via `--kernel-backend`/`TS_KERNEL_BACKEND`). Every
+//! kernel loop here now fills its output buffer with raw squared
+//! distances and finishes with one batched [`crate::simd::Ops::rbf_entries`]
+//! exp-cutoff pass — elementwise, so bit-identical to the old inline
+//! `rbf_entry` calls, and wide enough for the backend to vectorize the
+//! `gamma·max(d2,0)` prologue. The solve recurrence takes its `dot_f64`
+//! through the same table. The table pointer is hoisted out of every
+//! loop (one relaxed load per row/panel/solve, zero per element);
+//! `rust/tests/simd_parity.rs` pins scalar-vs-SIMD bitwise equality on
+//! the primitives and end-to-end, and `benches/micro_hotpath.rs`
+//! reports the scalar-vs-SIMD ratio per run (`bench_simd.json`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -58,122 +75,25 @@ use std::time::Instant;
 use crate::exec::ExecContext;
 use crate::kernels::RbfKernel;
 use crate::obs;
+use crate::simd::{self, Ops};
 use crate::util::mathx::floor_eps;
 
 use super::panel::{ChunkPanel, PanelScratch, PanelSharing, RowStore, SharedRowStore, SolveScratch};
 use super::SubmodularFunction;
 
-/// 4-lane f32 dot product with f64 lane-sum accumulation.
-///
-/// Splitting the reduction into four independent accumulators breaks the
-/// loop-carried dependency so the autovectorizer can keep the FMA units
-/// busy; summing the lanes in f64 keeps the cross-item error below the
-/// 1e-9-relative band the tests pin. (§Perf iteration 2.)
-#[inline]
-fn dot_lanes(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 4;
-    let mut acc = [0.0f32; 4];
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut tail = 0.0f64;
-    for i in chunks * 4..a.len() {
-        tail += a[i] as f64 * b[i] as f64;
-    }
-    acc[0] as f64 + acc[1] as f64 + acc[2] as f64 + acc[3] as f64 + tail
-}
-
-/// Four interleaved 4-lane f32 dot products against one shared row.
-///
-/// Per candidate this performs *exactly* the same multiply/add sequence as
-/// [`dot_lanes`] (same lane structure, same f64 lane-sum + tail), so each
-/// result is bitwise identical to the scalar path — the batched gain oracle
-/// relies on that for its parity guarantee. The win is memory traffic: the
-/// row is streamed through the cache once for four candidates instead of
-/// once per candidate, which roughly halves the loads per FMA in the
-/// kernel-panel hot loop (§Perf iteration 5, batched ingestion).
-#[inline]
-fn dot_lanes_x4(xs: &[&[f32]; 4], row: &[f32]) -> [f64; 4] {
-    let len = row.len();
-    let chunks = len / 4;
-    let mut acc = [[0.0f32; 4]; 4];
-    for c in 0..chunks {
-        let i = c * 4;
-        for (q, x) in xs.iter().enumerate() {
-            acc[q][0] += x[i] * row[i];
-            acc[q][1] += x[i + 1] * row[i + 1];
-            acc[q][2] += x[i + 2] * row[i + 2];
-            acc[q][3] += x[i + 3] * row[i + 3];
-        }
-    }
-    let mut out = [0.0f64; 4];
-    for (q, x) in xs.iter().enumerate() {
-        let mut tail = 0.0f64;
-        for i in chunks * 4..len {
-            tail += x[i] as f64 * row[i] as f64;
-        }
-        let lanes = acc[q][0] as f64 + acc[q][1] as f64 + acc[q][2] as f64 + acc[q][3] as f64;
-        out[q] = lanes + tail;
-    }
-    out
-}
-
-/// 4-lane f64 dot product (forward-substitution inner loop).
-#[inline]
-fn dot_lanes_f64(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 4;
-    let mut acc = [0.0f64; 4];
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut sum = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        sum += a[i] * b[i];
-    }
-    sum
-}
-
-/// One RBF kernel entry from a squared distance: `exp(-gamma*max(d2,0))`
-/// with the §Perf-iteration-4 underflow cutoff (`exp()` is ~20ns and most
-/// pairs are far apart under the paper's gammas — skip it when the value
-/// underflows our tolerance anyway, e^-32 ≈ 1e-14).
-///
-/// The single definition every kernel-entry site in this file funnels
-/// through — scalar row, per-sieve panel, broker panel, chunk-local rows —
-/// so the broker's bitwise shared-vs-per-sieve parity holds by
-/// construction rather than by six hand-synced copies.
-#[inline]
-fn rbf_entry(gamma: f64, d2: f64) -> f64 {
-    let e = gamma * d2.max(0.0);
-    if e > 32.0 {
-        0.0
-    } else {
-        (-e).exp()
-    }
-}
-
 /// One forward-substitution step against packed row `i` of the factor:
 /// `z_i = (a·kv_i − Σ_{j<i} L_ij z_j) / L_ii`, with the dot in 4
 /// independent lanes (§Perf iteration 3 — the solve dominates once the
-/// kernel row is cached). The single definition of the per-`i` recurrence
-/// shared by the scalar loop ([`forward_solve`]) and the blocked
-/// multi-RHS pass ([`forward_solve_panel`]) — both issue exactly this
-/// `dot_lanes_f64` call on the same operands in the same order, so their
-/// bitwise agreement holds by construction, like `rbf_entry` for kernel
-/// entries.
+/// kernel row is cached; §Perf iteration 8 routes it through the
+/// dispatched [`Ops::dot_f64`]). The single definition of the per-`i`
+/// recurrence shared by the scalar loop ([`forward_solve`]) and the
+/// blocked multi-RHS pass ([`forward_solve_panel`]) — both issue exactly
+/// this dot call on the same operands in the same order, so their
+/// bitwise agreement holds by construction, like the batched RBF pass
+/// for kernel entries.
 #[inline]
-fn solve_step(row: &[f64], z: &mut [f64], i: usize, kvi: f64, a: f64) -> f64 {
-    let acc = a * kvi - dot_lanes_f64(&row[..i], &z[..i]);
+fn solve_step(ops: &Ops, row: &[f64], z: &mut [f64], i: usize, kvi: f64, a: f64) -> f64 {
+    let acc = a * kvi - (ops.dot_f64)(&row[..i], &z[..i]);
     let zi = acc / row[i];
     z[i] = zi;
     zi
@@ -184,12 +104,12 @@ fn solve_step(row: &[f64], z: &mut [f64], i: usize, kvi: f64, a: f64) -> f64 {
 /// gain path ([`NativeLogDet::solve_for`]) and the per-candidate solve
 /// fallback (`set_blocked_solve(false)` — the bench/parity baseline).
 #[inline]
-fn forward_solve(chol: &[f64], z: &mut [f64], kv: &[f64], a: f64) -> f64 {
+fn forward_solve(ops: &Ops, chol: &[f64], z: &mut [f64], kv: &[f64], a: f64) -> f64 {
     let n = kv.len();
     let mut znorm2 = 0.0;
     for i in 0..n {
         let row = &chol[tri(i)..tri(i) + i + 1];
-        let zi = solve_step(row, z, i, kv[i], a);
+        let zi = solve_step(ops, row, z, i, kv[i], a);
         znorm2 += zi * zi;
     }
     znorm2
@@ -213,6 +133,7 @@ fn forward_solve(chol: &[f64], z: &mut [f64], kv: &[f64], a: f64) -> f64 {
 /// does — so the blocked pass is bitwise identical to `count`
 /// independent solves, which the parity suites pin.
 fn forward_solve_panel(
+    ops: &Ops,
     chol: &[f64],
     n: usize,
     kv: &[f64],
@@ -228,7 +149,7 @@ fn forward_solve_panel(
     for i in 0..n {
         let row = &chol[tri(i)..tri(i) + i + 1];
         for ((z, kv), m) in z.chunks_exact_mut(n).zip(kv.chunks_exact(n)).zip(norm2.iter_mut()) {
-            let zi = solve_step(row, z, i, kv[i], a);
+            let zi = solve_step(ops, row, z, i, kv[i], a);
             *m += zi * zi;
         }
     }
@@ -395,7 +316,7 @@ impl NativeLogDet {
         }
         self.kernel_row(item);
         let t = obs::clock();
-        let znorm2 = forward_solve(&self.chol, &mut self.z, &self.kv[..n], self.cfg.a);
+        let znorm2 = forward_solve(simd::ops(), &self.chol, &mut self.z, &self.kv[..n], self.cfg.a);
         Self::add_wall(&self.wall_solve_ns, t);
         znorm2
     }
@@ -403,19 +324,22 @@ impl NativeLogDet {
     /// RBF kernel row against the summary into `self.kv[..n]`.
     ///
     /// Uses the `‖x‖² + ‖s‖² − 2⟨x,s⟩` decomposition with *cached* summary
-    /// row norms and a 4-lane f32 dot (f64 accumulation of lane sums) —
-    /// the fastest variant found in the §Perf iteration log.
+    /// row norms and the dispatched 4-lane f32 dot; the raw squared
+    /// distances land in `kv` first and one batched
+    /// [`Ops::rbf_entries`] pass turns them into kernel entries
+    /// (§Perf iterations 2 and 8).
     fn kernel_row(&mut self, item: &[f32]) {
         let t = obs::clock();
         let d = self.cfg.dim;
         let gamma = self.cfg.gamma;
         self.kernel_evals += self.n as u64;
-        let xsq = dot_lanes(item, item);
+        let ops = simd::ops();
+        let xsq = (ops.dot)(item, item);
         for i in 0..self.n {
             let row = &self.feats[i * d..(i + 1) * d];
-            let d2 = xsq + self.row_norms[i] - 2.0 * dot_lanes(item, row);
-            self.kv[i] = rbf_entry(gamma, d2);
+            self.kv[i] = xsq + self.row_norms[i] - 2.0 * (ops.dot)(item, row);
         }
+        (ops.rbf_entries)(gamma, &mut self.kv[..self.n]);
         Self::add_wall(&self.wall_kernel_ns, t);
     }
 
@@ -425,8 +349,8 @@ impl NativeLogDet {
     }
 
     /// Blocked kernel panel: `panel[b·n + i] = k(items[b], s_i)` for all
-    /// `count` candidates — [`kernel_panel_into`] over the owned panel
-    /// scratch, plus the kernel-eval accounting.
+    /// `count` candidates — [`simd::kernel_panel_into`] over the owned
+    /// panel scratch, plus the kernel-eval accounting.
     fn kernel_panel(&mut self, items: &[f32], count: usize) {
         let _g = obs::span("kernel-panel");
         let t = obs::clock();
@@ -435,7 +359,8 @@ impl NativeLogDet {
         if self.panel.len() < count * n {
             self.panel.resize(count * n, 0.0);
         }
-        kernel_panel_into(
+        simd::kernel_panel_into(
+            simd::ops(),
             &self.feats,
             &self.row_norms,
             self.cfg.dim,
@@ -468,8 +393,17 @@ impl NativeLogDet {
         let n = self.n;
         debug_assert!(kv.len() == count * n && out.len() >= count);
         let a = self.cfg.a;
+        let ops = simd::ops();
         if self.blocked_solve {
-            forward_solve_panel(&self.chol, n, kv, &mut z[..count * n], &mut norm2[..count], a);
+            forward_solve_panel(
+                ops,
+                &self.chol,
+                n,
+                kv,
+                &mut z[..count * n],
+                &mut norm2[..count],
+                a,
+            );
             for (o, &m) in out[..count].iter_mut().zip(&norm2[..count]) {
                 *o = self.gain_from_znorm2(m);
             }
@@ -478,7 +412,7 @@ impl NativeLogDet {
             // `solve_step` recurrence, factor re-streamed per candidate,
             // one z column reused.
             for (o, kv) in out[..count].iter_mut().zip(kv.chunks_exact(n)) {
-                let znorm2 = forward_solve(&self.chol, z, kv, a);
+                let znorm2 = forward_solve(ops, &self.chol, z, kv, a);
                 *o = self.gain_from_znorm2(znorm2);
             }
         }
@@ -492,67 +426,6 @@ impl NativeLogDet {
         let n = self.n;
         let SolveScratch { kv, z, norm2 } = scratch;
         self.solve_kv_panel(count, &kv[..count * n], z, norm2, out);
-    }
-}
-
-/// Blocked kernel panel into a caller-provided buffer: `out[b·n + i] =
-/// k(items[b], s_i)` for `count` candidates, candidates processed four at
-/// a time so each summary row (and its cached norm) streams through the
-/// cache once per four candidates instead of once per candidate.
-///
-/// Entry arithmetic is identical to [`NativeLogDet::kernel_row`] — same
-/// norm-caching decomposition, same lane structure (via [`dot_lanes_x4`]),
-/// same exp underflow cutoff — so the panel is bitwise equal to `count`
-/// scalar kernel rows. The single definition behind the
-/// accounting-carrying [`NativeLogDet::kernel_panel`] and the pure
-/// [`PanelSharing::solve_batch_range`] (which does its own accounting via
-/// `charge`), so the two can never drift.
-#[allow(clippy::too_many_arguments)]
-fn kernel_panel_into(
-    feats: &[f32],
-    row_norms: &[f64],
-    d: usize,
-    n: usize,
-    gamma: f64,
-    items: &[f32],
-    count: usize,
-    out: &mut [f64],
-) {
-    debug_assert!(out.len() >= count * n);
-    let blocks = count / 4;
-    for blk in 0..blocks {
-        let b0 = blk * 4;
-        let xs: [&[f32]; 4] = [
-            &items[b0 * d..(b0 + 1) * d],
-            &items[(b0 + 1) * d..(b0 + 2) * d],
-            &items[(b0 + 2) * d..(b0 + 3) * d],
-            &items[(b0 + 3) * d..(b0 + 4) * d],
-        ];
-        let xsq = [
-            dot_lanes(xs[0], xs[0]),
-            dot_lanes(xs[1], xs[1]),
-            dot_lanes(xs[2], xs[2]),
-            dot_lanes(xs[3], xs[3]),
-        ];
-        for i in 0..n {
-            let row = &feats[i * d..(i + 1) * d];
-            let rn = row_norms[i];
-            let dots = dot_lanes_x4(&xs, row);
-            for q in 0..4 {
-                let d2 = xsq[q] + rn - 2.0 * dots[q];
-                out[(b0 + q) * n + i] = rbf_entry(gamma, d2);
-            }
-        }
-    }
-    // Tail candidates (count % 4): the scalar kernel-row loop.
-    for b in blocks * 4..count {
-        let x = &items[b * d..(b + 1) * d];
-        let xsq = dot_lanes(x, x);
-        for i in 0..n {
-            let row = &feats[i * d..(i + 1) * d];
-            let d2 = xsq + row_norms[i] - 2.0 * dot_lanes(x, row);
-            out[b * n + i] = rbf_entry(gamma, d2);
-        }
     }
 }
 
@@ -623,7 +496,7 @@ impl SubmodularFunction for NativeLogDet {
         self.chol.extend_from_slice(&self.z[..n]);
         self.chol.push(dval);
         self.feats.extend_from_slice(item);
-        self.row_norms.push(dot_lanes(item, item));
+        self.row_norms.push((simd::ops().dot)(item, item));
         if let Some(store) = &self.store {
             // Intern with the locally cached norm so the store's copy is
             // bit-identical to `row_norms` (panel entries must match the
@@ -757,7 +630,9 @@ impl SubmodularFunction for NativeLogDet {
 /// [`NativeLogDet::kernel_panel`] (and therefore of the scalar
 /// `kernel_row`), transposed to row-major so the broker can split the
 /// panel by row-range across the exec pool.
+#[allow(clippy::too_many_arguments)]
 fn panel_row(
+    ops: &Ops,
     chunk: &[f32],
     d: usize,
     gamma: f64,
@@ -776,17 +651,16 @@ fn panel_row(
             &chunk[(c0 + 2) * d..(c0 + 3) * d],
             &chunk[(c0 + 3) * d..(c0 + 4) * d],
         ];
-        let dots = dot_lanes_x4(&xs, row);
+        let dots = (ops.dot_x4)(&xs, row);
         for q in 0..4 {
-            let d2 = xsq[c0 + q] + rn - 2.0 * dots[q];
-            out[c0 + q] = rbf_entry(gamma, d2);
+            out[c0 + q] = xsq[c0 + q] + rn - 2.0 * dots[q];
         }
     }
     for c in blocks * 4..b {
         let x = &chunk[c * d..(c + 1) * d];
-        let d2 = xsq[c] + rn - 2.0 * dot_lanes(x, row);
-        out[c] = rbf_entry(gamma, d2);
+        out[c] = xsq[c] + rn - 2.0 * (ops.dot)(x, row);
     }
+    (ops.rbf_entries)(gamma, out);
 }
 
 /// A contiguous slot-range of a chunk panel under construction — the unit
@@ -841,10 +715,11 @@ impl PanelSharing for NativeLogDet {
             self.store.as_ref().expect("build_chunk_panel requires an attached row store").lock();
         let store: &RowStore = &guard;
         // Candidate norms once per chunk — shared by every panel row, and
-        // bit-identical to the per-query `dot_lanes(x, x)` of the scalar
+        // bit-identical to the per-query `(ops.dot)(x, x)` of the scalar
         // path. The buffer is reused across chunks.
+        let ops = simd::ops();
         scratch.xsq.clear();
-        scratch.xsq.extend(chunk.chunks_exact(d).map(|x| dot_lanes(x, x)));
+        scratch.xsq.extend(chunk.chunks_exact(d).map(|x| (ops.dot)(x, x)));
         let xsq: &[f64] = &scratch.xsq;
         // Row-range fan-out, several ranges per worker so fast threads
         // pick up the tail (the ROADMAP "work-stealing granularity"
@@ -860,7 +735,7 @@ impl PanelSharing for NativeLogDet {
             for (r, &id) in range.ids.iter().enumerate() {
                 let row = store.row(id);
                 let rn = store.norm(id);
-                panel_row(chunk, d, gamma, xsq, row, rn, &mut range.out[r * b..(r + 1) * b]);
+                panel_row(ops, chunk, d, gamma, xsq, row, rn, &mut range.out[r * b..(r + 1) * b]);
             }
         });
         drop(guard);
@@ -876,14 +751,15 @@ impl PanelSharing for NativeLogDet {
         debug_assert!(out.len() >= b);
         debug_assert!(from <= b);
         let gamma = self.cfg.gamma;
-        // Same bits the accepting oracle cached in `row_norms`: dot_lanes
-        // is deterministic in its inputs.
-        let rn = dot_lanes(row, row);
+        // Same bits the accepting oracle cached in `row_norms`: the
+        // dispatched dot is deterministic in its inputs.
+        let ops = simd::ops();
+        let rn = (ops.dot)(row, row);
         for c in from..b {
             let x = &chunk[c * d..(c + 1) * d];
-            let d2 = dot_lanes(x, x) + rn - 2.0 * dot_lanes(x, row);
-            out[c] = rbf_entry(gamma, d2);
+            out[c] = (ops.dot)(x, x) + rn - 2.0 * (ops.dot)(x, row);
         }
+        (ops.rbf_entries)(gamma, &mut out[from..b]);
         self.kernel_evals += (b - from) as u64;
         Self::add_wall(&self.wall_kernel_ns, t);
     }
@@ -956,7 +832,8 @@ impl PanelSharing for NativeLogDet {
         }
         scratch.ensure(count, n);
         let t = obs::clock();
-        kernel_panel_into(
+        simd::kernel_panel_into(
+            simd::ops(),
             &self.feats,
             &self.row_norms,
             self.cfg.dim,

@@ -6,7 +6,25 @@
 //! the submodular functions are kernel-generic; linear and cosine kernels
 //! are provided for the generality tests.
 
-use crate::util::mathx::{dot_f32, sq_dist_f32};
+use crate::simd;
+use crate::util::mathx::dot_f32;
+
+/// Shared shape check for the block-panel API: a panel is `B × n`
+/// (`B = xs.len() / dim` query points against `n = rows.len() / dim`
+/// rows, both flat row-major) and `out` must hold at least `B·n`
+/// entries. Returns `(B, n)`. The single definition of the invariant
+/// every [`Kernel::eval_block`] implementation must uphold — call it
+/// first so the panics/debug panics are identical across kernels.
+#[inline]
+fn block_shape(xs: &[f32], rows: &[f32], dim: usize, out: &[f64]) -> (usize, usize) {
+    assert!(dim > 0, "eval_block: dim must be positive");
+    debug_assert_eq!(xs.len() % dim, 0, "eval_block: xs not row-aligned");
+    debug_assert_eq!(rows.len() % dim, 0, "eval_block: rows not row-aligned");
+    let b = xs.len() / dim;
+    let n = rows.len() / dim;
+    debug_assert!(out.len() >= b * n, "eval_block: out.len() {} < B·n = {}", out.len(), b * n);
+    (b, n)
+}
 
 /// A (normalized) positive-definite kernel. Implementations must satisfy
 /// `k(x, x) == 1` — the log-det function relies on this (paper Eq. 7 with
@@ -27,25 +45,31 @@ pub trait Kernel: Send + Sync {
 
     /// Kernel panel: `out[b * n + i] = k(xs[b], rows[i])` for a block of
     /// `B = xs.len() / dim` query points against `n = rows.len() / dim`
-    /// summary rows, both flat row-major. `out` must hold `B * n` values.
+    /// summary rows, both flat row-major. `out` must hold `B * n` values
+    /// (checked in one place, [`block_shape`], so every implementation
+    /// panics identically).
     ///
     /// `scratch` is caller-owned working memory reused across calls so the
     /// block path is allocation-free per chunk: [`RbfKernel`] caches the
     /// summary row norms in it (resizing only on the first call or a
-    /// summary-size change); kernels with no cacheable intermediate ignore
-    /// it. Pass the same buffer every chunk — contents are overwritten,
-    /// never read across calls.
+    /// summary-size change). **Contract:** implementations treat the
+    /// buffer as overwrite-only — contents are never read across calls,
+    /// so callers may pass the same buffer to different kernels (or
+    /// drop it between chunks) freely. Kernels with no cacheable
+    /// intermediate — including this default — deliberately leave it
+    /// untouched, which is why a caller must never expect the buffer to
+    /// hold anything meaningful after the call.
     ///
     /// This is the trait-level batched API for kernel-generic consumers
-    /// (facility-location panels, future PJRT/SIMD backends): one B×n
+    /// (facility-location panels, future PJRT backends): one B×n
     /// panel turns per-element kernel rows into cache-friendly
     /// matrix-panel work. The default delegates to
     /// [`eval_row`](Self::eval_row) per query point; [`RbfKernel`]
     /// overrides it with a norm-caching blocked variant. Note
     /// `NativeLogDet` keeps its own fused private panel
     /// (`kernel_panel`) instead of calling this — it additionally needs
-    /// the exp-underflow cutoff and exact `dot_lanes` arithmetic that its
-    /// bitwise batch/scalar parity contract pins.
+    /// the exp-underflow cutoff and the exact [`crate::simd`] lane
+    /// arithmetic that its bitwise batch/scalar parity contract pins.
     fn eval_block(
         &self,
         xs: &[f32],
@@ -54,13 +78,10 @@ pub trait Kernel: Send + Sync {
         out: &mut [f64],
         scratch: &mut Vec<f64>,
     ) {
+        // No cacheable intermediate here: `scratch` stays untouched by
+        // contract (see above).
         let _ = scratch;
-        assert!(dim > 0, "eval_block: dim must be positive");
-        debug_assert_eq!(xs.len() % dim, 0);
-        debug_assert_eq!(rows.len() % dim, 0);
-        let b = xs.len() / dim;
-        let n = rows.len() / dim;
-        debug_assert!(out.len() >= b * n);
+        let (_b, n) = block_shape(xs, rows, dim, out);
         for (q, x) in xs.chunks_exact(dim).enumerate() {
             self.eval_row(x, rows, dim, &mut out[q * n..(q + 1) * n]);
         }
@@ -95,23 +116,64 @@ impl RbfKernel {
     pub fn gamma(&self) -> f64 {
         self.gamma
     }
+
+    /// Summary-row norms `‖rows[i]‖²` into a reusable buffer — the
+    /// cacheable intermediate of the `‖x‖² + ‖s‖² − 2⟨x,s⟩`
+    /// decomposition. Computed through the same dispatched dot as
+    /// [`eval_row_cached`](Self::eval_row_cached), so the cached path is
+    /// bitwise identical to [`Kernel::eval_row`] recomputing norms
+    /// inline.
+    pub fn row_norms_into(&self, rows: &[f32], dim: usize, norms: &mut Vec<f64>) {
+        assert!(dim > 0, "row_norms_into: dim must be positive");
+        debug_assert_eq!(rows.len() % dim, 0, "row_norms_into: rows not row-aligned");
+        let ops = simd::ops();
+        norms.clear();
+        norms.extend(rows.chunks_exact(dim).map(|r| (ops.dot)(r, r)));
+    }
+
+    /// [`Kernel::eval_row`] with the summary-row norms precomputed (see
+    /// [`row_norms_into`](Self::row_norms_into)): the per-row `‖s‖²`
+    /// work is paid once per summary change instead of once per query —
+    /// the same trick `eval_block` plays per panel, available to
+    /// row-at-a-time consumers that keep a summary across queries.
+    pub fn eval_row_cached(
+        &self,
+        x: &[f32],
+        rows: &[f32],
+        dim: usize,
+        row_norms: &[f64],
+        out: &mut [f64],
+    ) {
+        let n = out.len();
+        debug_assert!(rows.len() >= n * dim && row_norms.len() >= n);
+        let ops = simd::ops();
+        let xsq = (ops.dot)(x, x);
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = &rows[i * dim..(i + 1) * dim];
+            *o = xsq + row_norms[i] - 2.0 * (ops.dot)(x, row);
+        }
+        (ops.rbf_entries)(self.gamma, out);
+    }
 }
 
 impl Kernel for RbfKernel {
     #[inline]
     fn eval(&self, x: &[f32], y: &[f32]) -> f64 {
-        (-self.gamma * sq_dist_f32(x, y)).exp()
+        simd::rbf_entry(self.gamma, (simd::ops().sq_dist)(x, y))
     }
 
     fn eval_row(&self, x: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
-        // ||x - s||^2 = ||x||^2 + ||s||^2 - 2 <x, s>; the dot is the hot
-        // loop and auto-vectorizes cleanly (see benches/micro_hotpath).
-        let xsq = dot_f32(x, x);
+        // ||x - s||^2 = ||x||^2 + ||s||^2 - 2 <x, s> through the
+        // dispatched dot, with the raw squared distances landing in
+        // `out` first and one batched exp-cutoff pass finishing them —
+        // the same two-pass shape as the log-det kernel row.
+        let ops = simd::ops();
+        let xsq = (ops.dot)(x, x);
         for (i, o) in out.iter_mut().enumerate() {
             let row = &rows[i * dim..(i + 1) * dim];
-            let d2 = xsq + dot_f32(row, row) - 2.0 * dot_f32(x, row);
-            *o = (-self.gamma * d2.max(0.0)).exp();
+            *o = xsq + (ops.dot)(row, row) - 2.0 * (ops.dot)(x, row);
         }
+        (ops.rbf_entries)(self.gamma, out);
     }
 
     fn eval_block(
@@ -128,23 +190,11 @@ impl Kernel for RbfKernel {
         // rather than once per (query, row) pair of independent calls. The
         // norms live in the caller's scratch so a chunked ingestion loop
         // pays one allocation per run, not one per chunk.
-        assert!(dim > 0, "eval_block: dim must be positive");
-        debug_assert_eq!(xs.len() % dim, 0);
-        debug_assert_eq!(rows.len() % dim, 0);
-        let n = rows.len() / dim;
-        let b = xs.len() / dim;
-        debug_assert!(out.len() >= b * n);
-        scratch.clear();
-        scratch.extend(rows.chunks_exact(dim).map(|r| dot_f32(r, r)));
+        let (_b, n) = block_shape(xs, rows, dim, out);
+        self.row_norms_into(rows, dim, scratch);
         let row_norms: &[f64] = scratch;
         for (q, x) in xs.chunks_exact(dim).enumerate() {
-            let xsq = dot_f32(x, x);
-            let panel = &mut out[q * n..(q + 1) * n];
-            for (i, o) in panel.iter_mut().enumerate() {
-                let row = &rows[i * dim..(i + 1) * dim];
-                let d2 = xsq + row_norms[i] - 2.0 * dot_f32(x, row);
-                *o = (-self.gamma * d2.max(0.0)).exp();
-            }
+            self.eval_row_cached(x, rows, dim, row_norms, &mut out[q * n..(q + 1) * n]);
         }
     }
 
@@ -248,6 +298,25 @@ mod tests {
         for i in 0..n {
             let want = k.eval(&x, &rows[i * d..(i + 1) * d]);
             assert!((out[i] - want).abs() < 1e-9, "row {i}: {} vs {want}", out[i]);
+        }
+    }
+
+    #[test]
+    fn rbf_eval_row_cached_is_bitwise_identical() {
+        let k = RbfKernel::new(3.0);
+        let mut rng = Rng::seed_from(7);
+        let d = 7;
+        let n = 9;
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let x = rand_vec(&mut rng, d);
+        let mut plain = vec![0.0; n];
+        k.eval_row(&x, &rows, d, &mut plain);
+        let mut norms = Vec::new();
+        k.row_norms_into(&rows, d, &mut norms);
+        let mut cached = vec![0.0; n];
+        k.eval_row_cached(&x, &rows, d, &norms, &mut cached);
+        for i in 0..n {
+            assert_eq!(plain[i].to_bits(), cached[i].to_bits(), "row {i}");
         }
     }
 

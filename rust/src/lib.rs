@@ -56,6 +56,7 @@ pub mod metrics;
 pub mod obs;
 pub mod runtime;
 pub mod service;
+pub mod simd;
 pub mod util;
 
 /// Convenience re-exports for the common workflow.

@@ -263,7 +263,7 @@ USAGE:
   threesieves summarize --dataset <name> --n <N> --k <K>
                         [--algo <id>] [--epsilon E] [--t T] [--seed S] [--batch]
                         [--batch-size B] [--threads off|auto|N] [--trace-out PATH]
-                        [--events-out PATH]
+                        [--events-out PATH] [--kernel-backend scalar|simd|auto]
   threesieves experiment <table1|table2|fig1|fig2|fig3|ablations> [--n N] [--out DIR] [--quick]
   threesieves experiment custom --config <file.json> [--stream]
   threesieves serve     --listen ADDR[:PORT]          (multi-tenant network service)
@@ -271,10 +271,11 @@ USAGE:
                         [--idle-timeout SECS] [--checkpoint-dir DIR]
                         [--checkpoint-secs S] [--threads off|auto|N] [--max-seconds S]
                         [--trace-out PATH] [--events-out PATH]
+                        [--kernel-backend scalar|simd|auto]
   threesieves serve     --local --dataset <name> --n <N> --k <K>
                         [--drift-window W] [--drift-threshold X] [--checkpoint PATH]
                         [--batch-size B] [--threads off|auto|N] [--trace-out PATH]
-                        [--events-out PATH]
+                        [--events-out PATH] [--kernel-backend scalar|simd|auto]
                         (single-stream demo)
   threesieves pjrt-info [--artifacts DIR] [--config NAME]
   threesieves datasets
@@ -282,6 +283,15 @@ USAGE:
 --threads fans shard/sieve work out across a worker pool (pair with
 --batch-size); summaries, values and query counts are identical at every
 thread count. In network serve mode it sizes the connection-handler pool.
+
+--kernel-backend picks the dispatch table for the kernel/solve hot loops:
+scalar (portable reference), simd (AVX2 on x86-64, NEON on aarch64;
+falls back to scalar where unsupported) or auto (detect — the default,
+also settable via the TS_KERNEL_BACKEND env var; the flag wins, and in
+serve mode a config-file \"kernel_backend\" sits between the two). Every
+backend is bitwise identical to scalar — the choice moves wall time,
+never selection output. STATS/METRICS report the active table as
+backend=.
 
 --trace-out enables per-stage tracing spans (kernel panels, solves, sieve
 scans, drift resets, checkpoints, service requests) and writes them as
@@ -345,6 +355,7 @@ const SUMMARIZE_FLAGS: &[FlagDef] = &[
     val("threads"),
     val("trace-out"),
     val("events-out"),
+    val("kernel-backend"),
 ];
 
 const EXPERIMENT_FLAGS: &[FlagDef] = &[
@@ -386,6 +397,7 @@ const SERVE_FLAGS: &[FlagDef] = &[
     val("threads"),
     val("trace-out"),
     val("events-out"),
+    val("kernel-backend"),
 ];
 
 const PJRT_FLAGS: &[FlagDef] = &[val("artifacts"), val("config")];
@@ -465,6 +477,19 @@ fn parallelism_arg(args: &cli::Args) -> Result<Parallelism, String> {
     }
 }
 
+/// Parse `--kernel-backend scalar|simd|auto` when given (`None` lets the
+/// caller fall back to its config file and/or `TS_KERNEL_BACKEND`).
+fn kernel_backend_flag(
+    args: &cli::Args,
+) -> Result<Option<threesieves::simd::BackendChoice>, String> {
+    match args.get("kernel-backend") {
+        None => Ok(None),
+        Some(v) => threesieves::simd::BackendChoice::parse(v)
+            .map(Some)
+            .ok_or_else(|| format!("--kernel-backend {v}: expected scalar|simd|auto")),
+    }
+}
+
 /// Parse `--trace-out PATH` and, when present, switch span recording on
 /// before any work runs so the whole command is traced end-to-end. The
 /// caller hands the returned path to [`write_trace`] once the run is done.
@@ -521,6 +546,12 @@ fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
     let batch_size = args.get_usize("batch-size", 1)?.max(1);
     // Shard/sieve fan-out pool; results are identical at every setting.
     let exec = ExecContext::new(parallelism_arg(args)?);
+    // SIMD dispatch for the kernel/solve hot path — flag, then env, then
+    // auto-detect; selected once before any oracle work runs.
+    let backend = threesieves::simd::select(
+        kernel_backend_flag(args)?.unwrap_or_else(threesieves::simd::env_choice),
+    )
+    .name;
     let trace_out = trace_out_arg(args);
     let events_out = events_out_arg(args);
 
@@ -548,6 +579,7 @@ fn cmd_summarize(args: &cli::Args) -> Result<(), String> {
         rec.stats.queries_per_element()
     );
     println!("kernel evals   : {}", rec.stats.kernel_evals);
+    println!("kernel backend : {backend}");
     println!("peak memory    : {} stored elements", rec.stats.peak_stored);
     if rec.stats.accepts + rec.stats.rejects > 0 {
         println!(
@@ -598,6 +630,10 @@ fn cmd_experiment(args: &cli::Args) -> Result<(), String> {
         "custom" => {
             let path = args.get("config").ok_or("--config <file.json> required")?;
             let cfg = threesieves::config::ExperimentConfig::load(std::path::Path::new(path))?;
+            // Config file first, then TS_KERNEL_BACKEND, then auto-detect.
+            threesieves::simd::select(
+                cfg.kernel_backend.unwrap_or_else(threesieves::simd::env_choice),
+            );
             threesieves::experiments::custom::run(&cfg, args.has("stream"))
                 .map_err(|e| e.to_string())?;
         }
@@ -649,7 +685,14 @@ fn cmd_serve_network(args: &cli::Args, listen: &str) -> Result<(), String> {
             Some(v) => Parallelism::parse(v)?,
             None => base.parallelism,
         },
+        kernel_backend: kernel_backend_flag(args)?.or(base.kernel_backend),
     };
+    // Flag > config file > TS_KERNEL_BACKEND > auto-detect; selected once
+    // before the server starts so every session solves on one table.
+    let backend = threesieves::simd::select(
+        cfg.kernel_backend.unwrap_or_else(threesieves::simd::env_choice),
+    )
+    .name;
     let max_seconds = args.get_f64("max-seconds", 0.0)?;
     // Crash insurance: with persistence on, periodically checkpoint every
     // live session in place (0 disables). A SIGKILL then loses at most
@@ -661,7 +704,8 @@ fn cmd_serve_network(args: &cli::Args, listen: &str) -> Result<(), String> {
     let handle = Server::start(cfg.clone(), listen).map_err(|e| e.to_string())?;
     println!("service listening on {}", handle.addr());
     println!(
-        "limits: max-sessions={} max-stored={} idle-timeout={:.0}s checkpoint-dir={} threads={}",
+        "limits: max-sessions={} max-stored={} idle-timeout={:.0}s checkpoint-dir={} threads={} \
+         backend={backend}",
         cfg.max_sessions,
         cfg.max_total_stored,
         cfg.idle_timeout.as_secs_f64(),
@@ -726,6 +770,11 @@ fn cmd_serve_local(args: &cli::Args) -> Result<(), String> {
     let src = registry::source(&dataset, n, seed).unwrap();
 
     let spec = algo_spec(args)?;
+    // Flag, then TS_KERNEL_BACKEND, then auto-detect.
+    let backend = threesieves::simd::select(
+        kernel_backend_flag(args)?.unwrap_or_else(threesieves::simd::env_choice),
+    )
+    .name;
     let trace_out = trace_out_arg(args);
     let events_out = events_out_arg(args);
     let mut algo =
@@ -752,6 +801,7 @@ fn cmd_serve_local(args: &cli::Args) -> Result<(), String> {
     .map_err(|e| e.to_string())?;
 
     println!("items          : {}", report.items);
+    println!("kernel backend : {backend}");
     println!("throughput     : {:.0} items/s", report.throughput);
     println!("drift events   : {}", report.drift_events);
     println!("re-selections  : {}", report.reselections);

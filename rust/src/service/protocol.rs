@@ -205,6 +205,11 @@ pub struct StatsReply {
     pub value: f64,
     pub len: usize,
     pub drift_events: usize,
+    /// Active kernel/solve dispatch table (`"scalar"`/`"avx2"`/`"neon"`,
+    /// see [`crate::simd`]) — process-wide, reported per reply so clients
+    /// can log which backend produced a run. Absent in pre-SIMD replies;
+    /// the parser defaults to `"scalar"`, which is what those servers ran.
+    pub backend: String,
 }
 
 /// `METRICS` payload: the service-wide snapshot. `items`/`queries`/`stored`
@@ -237,6 +242,10 @@ pub struct MetricsSnapshot {
     pub rejects: u64,
     pub defers: u64,
     pub threshold_moves: u64,
+    /// Active kernel/solve dispatch table (`"scalar"`/`"avx2"`/`"neon"`,
+    /// see [`crate::simd`]). Absent in pre-SIMD replies; the parser
+    /// defaults to `"scalar"`, which is what those servers ran.
+    pub backend: String,
     pub opens: u64,
     pub resumes: u64,
     pub pushes: u64,
@@ -718,7 +727,8 @@ impl Response {
             Response::StatsData { id, reply } => format!(
                 "OK STATS id={id} elements={} queries={} kernel_evals={} stored={} peak={} \
                  instances={} len={} value={} drift={} wall_kernel_ns={} wall_solve_ns={} \
-                 wall_scan_ns={} accepts={} rejects={} defers={} threshold_moves={}",
+                 wall_scan_ns={} accepts={} rejects={} defers={} threshold_moves={} \
+                 backend={}",
                 reply.stats.elements,
                 reply.stats.queries,
                 reply.stats.kernel_evals,
@@ -734,7 +744,8 @@ impl Response {
                 reply.stats.accepts,
                 reply.stats.rejects,
                 reply.stats.defers,
-                reply.stats.threshold_moves
+                reply.stats.threshold_moves,
+                reply.backend
             ),
             Response::Closed { id, checkpointed } => {
                 format!("OK CLOSE id={id} checkpointed={}", u8::from(*checkpointed))
@@ -743,7 +754,7 @@ impl Response {
                 "OK METRICS sessions={} stored={} items={} queries={} kernel_evals={} opens={} \
                  resumes={} pushes={} items_total={} evictions={} closes={} checkpoints={} \
                  uptime_s={} items_per_s={} wall_kernel_ns={} wall_solve_ns={} wall_scan_ns={} \
-                 accepts={} rejects={} defers={} threshold_moves={}",
+                 accepts={} rejects={} defers={} threshold_moves={} backend={}",
                 m.sessions,
                 m.stored,
                 m.items,
@@ -764,7 +775,8 @@ impl Response {
                 m.accepts,
                 m.rejects,
                 m.defers,
-                m.threshold_moves
+                m.threshold_moves,
+                m.backend
             ),
             Response::MetricsHistData(hists) => {
                 let mut s = format!("OK METRICS HIST n={}", hists.len());
@@ -873,6 +885,9 @@ impl Response {
                     value: num("value")?,
                     len: num("len")? as usize,
                     drift_events: num("drift")? as usize,
+                    // Absent in pre-SIMD server replies, which ran the
+                    // scalar kernels unconditionally.
+                    backend: field("backend").unwrap_or("scalar").to_string(),
                 },
             }),
             "CLOSE" => Ok(Response::Closed {
@@ -912,6 +927,8 @@ impl Response {
                     rejects: num("rejects").unwrap_or(0.0) as u64,
                     defers: num("defers").unwrap_or(0.0) as u64,
                     threshold_moves: num("threshold_moves").unwrap_or(0.0) as u64,
+                    // Absent in pre-SIMD replies (scalar-only servers).
+                    backend: field("backend").unwrap_or("scalar").to_string(),
                     opens: num("opens")? as u64,
                     resumes: num("resumes")? as u64,
                     pushes: num("pushes")? as u64,
@@ -1243,6 +1260,7 @@ mod tests {
                     value: 2.5,
                     len: 7,
                     drift_events: 0,
+                    backend: "avx2".into(),
                 },
             },
             Response::Closed { id: "t".into(), checkpointed: true },
@@ -1259,6 +1277,7 @@ mod tests {
                 rejects: 888,
                 defers: 4,
                 threshold_moves: 6,
+                backend: "neon".into(),
                 opens: 4,
                 resumes: 1,
                 pushes: 30,
@@ -1330,6 +1349,7 @@ mod tests {
                 value: 0.5,
                 len: 2,
                 drift_events: 0,
+                backend: "scalar".into(),
             },
         };
         match Response::parse(&resp.to_line()).unwrap() {
@@ -1356,6 +1376,7 @@ mod tests {
                 assert_eq!(reply.stats.rejects, 0);
                 assert_eq!(reply.stats.defers, 0);
                 assert_eq!(reply.stats.threshold_moves, 0);
+                assert_eq!(reply.backend, "scalar", "pre-SIMD replies default to scalar");
             }
             other => panic!("{other:?}"),
         }

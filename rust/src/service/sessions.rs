@@ -437,6 +437,7 @@ impl SessionManager {
             value: session.algo.value(),
             len: session.algo.summary_len(),
             drift_events: session.drift_events(),
+            backend: crate::simd::active_name().to_string(),
         })
     }
 
@@ -653,6 +654,7 @@ impl SessionManager {
             rejects,
             defers,
             threshold_moves,
+            backend: crate::simd::active_name().to_string(),
             opens: self.counters.opens.load(Ordering::Relaxed),
             resumes: self.counters.resumes.load(Ordering::Relaxed),
             pushes: self.counters.pushes.load(Ordering::Relaxed),

@@ -1,0 +1,201 @@
+//! AArch64 NEON backends for the five hot primitives.
+//!
+//! Same bit-exactness contract as the x86 module: unfused
+//! `vaddq(vmulq(a, b))` — never `vmlaq`/`vfmaq`, which lower to fused
+//! multiply-adds and would change rounding — with accumulator lanes
+//! extracted individually (never `vaddvq`, whose pairwise reduction
+//! order differs from the scalar left-to-right sum) and the shared
+//! scalar epilogues from [`scalar`]. The f64 primitives split the
+//! 4-lane accumulator across two 128-bit registers: lanes 0/1 in one,
+//! 2/3 in the other, summed in index order.
+//!
+//! NEON is part of the AArch64 baseline, so this table is always
+//! selectable on aarch64 targets.
+
+use std::arch::aarch64::*;
+
+use super::{scalar, Ops};
+
+/// The dispatch table for aarch64. NEON ships with the architecture
+/// baseline; `simd_ops()` returns it unconditionally.
+pub static NEON: Ops = Ops {
+    name: "neon",
+    dot: dot_neon,
+    dot_x4: dot_x4_neon,
+    dot_f64: dot_f64_neon,
+    sq_dist: sq_dist_neon,
+    rbf_entries: rbf_entries_neon,
+};
+
+/// Extract the four f32 lanes of a vector in index order.
+#[inline]
+unsafe fn lanes_f32(v: float32x4_t) -> [f32; 4] {
+    [
+        vgetq_lane_f32::<0>(v),
+        vgetq_lane_f32::<1>(v),
+        vgetq_lane_f32::<2>(v),
+        vgetq_lane_f32::<3>(v),
+    ]
+}
+
+/// Sum a lane-0/1 + lane-2/3 accumulator pair in index order — the
+/// scalar `acc[0] + acc[1] + acc[2] + acc[3]`.
+#[inline]
+unsafe fn sum_f64_pair(acc01: float64x2_t, acc23: float64x2_t) -> f64 {
+    vgetq_lane_f64::<0>(acc01)
+        + vgetq_lane_f64::<1>(acc01)
+        + vgetq_lane_f64::<0>(acc23)
+        + vgetq_lane_f64::<1>(acc23)
+}
+
+/// [`scalar::dot`] with the four accumulator lanes in one `float32x4_t`.
+///
+/// # Safety
+/// Requires NEON (the aarch64 baseline).
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon_impl(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        let va = vld1q_f32(a.as_ptr().add(i));
+        let vb = vld1q_f32(b.as_ptr().add(i));
+        acc = vaddq_f32(acc, vmulq_f32(va, vb));
+    }
+    scalar::acc_tail(lanes_f32(acc), a, b, chunks * 4)
+}
+
+fn dot_neon(a: &[f32], b: &[f32]) -> f64 {
+    // SAFETY: NEON is part of the aarch64 baseline.
+    unsafe { dot_neon_impl(a, b) }
+}
+
+/// [`scalar::dot_x4`] with one 128-bit accumulator per candidate and
+/// the shared row loaded once per chunk for all four.
+///
+/// # Safety
+/// Requires NEON (the aarch64 baseline).
+#[target_feature(enable = "neon")]
+unsafe fn dot_x4_neon_impl(xs: &[&[f32]; 4], row: &[f32]) -> [f64; 4] {
+    let len = row.len();
+    let chunks = len / 4;
+    let mut acc = [vdupq_n_f32(0.0); 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        let r = vld1q_f32(row.as_ptr().add(i));
+        for (q, x) in xs.iter().enumerate() {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            acc[q] = vaddq_f32(acc[q], vmulq_f32(vx, r));
+        }
+    }
+    let mut out = [0.0f64; 4];
+    for (q, x) in xs.iter().enumerate() {
+        out[q] = scalar::acc_tail(lanes_f32(acc[q]), x, row, chunks * 4);
+    }
+    out
+}
+
+fn dot_x4_neon(xs: &[&[f32]; 4], row: &[f32]) -> [f64; 4] {
+    // SAFETY: NEON is part of the aarch64 baseline.
+    unsafe { dot_x4_neon_impl(xs, row) }
+}
+
+/// [`scalar::dot_f64`] with accumulator lanes 0/1 and 2/3 in two
+/// `float64x2_t` registers.
+///
+/// # Safety
+/// Requires NEON (the aarch64 baseline).
+#[target_feature(enable = "neon")]
+unsafe fn dot_f64_neon_impl(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        let lo = vmulq_f64(vld1q_f64(a.as_ptr().add(i)), vld1q_f64(b.as_ptr().add(i)));
+        let hi = vmulq_f64(vld1q_f64(a.as_ptr().add(i + 2)), vld1q_f64(b.as_ptr().add(i + 2)));
+        acc01 = vaddq_f64(acc01, lo);
+        acc23 = vaddq_f64(acc23, hi);
+    }
+    let mut sum = sum_f64_pair(acc01, acc23);
+    for i in chunks * 4..a.len() {
+        sum += a[i] * b[i];
+    }
+    sum
+}
+
+fn dot_f64_neon(a: &[f64], b: &[f64]) -> f64 {
+    // SAFETY: NEON is part of the aarch64 baseline.
+    unsafe { dot_f64_neon_impl(a, b) }
+}
+
+/// [`scalar::sq_dist`] with the widening done by `vcvt_f64_f32` /
+/// `vcvt_high_f64_f32` (exact, as is the scalar `as f64`) and the four
+/// f64 accumulator lanes split across two registers.
+///
+/// # Safety
+/// Requires NEON (the aarch64 baseline).
+#[target_feature(enable = "neon")]
+unsafe fn sq_dist_neon_impl(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        let va = vld1q_f32(a.as_ptr().add(i));
+        let vb = vld1q_f32(b.as_ptr().add(i));
+        let dlo = vsubq_f64(vcvt_f64_f32(vget_low_f32(va)), vcvt_f64_f32(vget_low_f32(vb)));
+        let dhi = vsubq_f64(vcvt_high_f64_f32(va), vcvt_high_f64_f32(vb));
+        acc01 = vaddq_f64(acc01, vmulq_f64(dlo, dlo));
+        acc23 = vaddq_f64(acc23, vmulq_f64(dhi, dhi));
+    }
+    let mut sum = sum_f64_pair(acc01, acc23);
+    for i in chunks * 4..a.len() {
+        let d = a[i] as f64 - b[i] as f64;
+        sum += d * d;
+    }
+    sum
+}
+
+fn sq_dist_neon(a: &[f32], b: &[f32]) -> f64 {
+    // SAFETY: NEON is part of the aarch64 baseline.
+    unsafe { sq_dist_neon_impl(a, b) }
+}
+
+/// [`scalar::rbf_entries`] with the `gamma·max(d2,0)` prologue
+/// vectorized in place. `fmax` propagates NaN where `f64::max(d2, 0.0)`
+/// returns 0, so the max is spelled as a compare+select (`NaN ≥ 0` is
+/// false, selecting 0 — exactly the scalar semantics). The cutoff
+/// branch and the `exp` run as a second scalar pass: identical values
+/// reach the identical libm call, so the entries are bitwise equal to
+/// the scalar pass.
+///
+/// # Safety
+/// Requires NEON (the aarch64 baseline).
+#[target_feature(enable = "neon")]
+unsafe fn rbf_entries_neon_impl(gamma: f64, d2: &mut [f64]) {
+    let zero = vdupq_n_f64(0.0);
+    let g = vdupq_n_f64(gamma);
+    let pairs = d2.len() / 2;
+    for p in 0..pairs {
+        let ptr = d2.as_mut_ptr().add(p * 2);
+        let v = vld1q_f64(ptr);
+        let m = vbslq_f64(vcgeq_f64(v, zero), v, zero);
+        vst1q_f64(ptr, vmulq_f64(g, m));
+    }
+    if d2.len() % 2 == 1 {
+        let last = d2.len() - 1;
+        d2[last] = gamma * d2[last].max(0.0);
+    }
+    for v in d2.iter_mut() {
+        *v = if *v > 32.0 { 0.0 } else { (-*v).exp() };
+    }
+}
+
+fn rbf_entries_neon(gamma: f64, d2: &mut [f64]) {
+    // SAFETY: NEON is part of the aarch64 baseline.
+    unsafe { rbf_entries_neon_impl(gamma, d2) }
+}

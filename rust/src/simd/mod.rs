@@ -1,0 +1,321 @@
+//! Runtime-dispatched SIMD backends for the kernel/solve hot path.
+//!
+//! Every gain query in the crate bottoms out in five primitives: the
+//! 4-lane f32 dot ([`Ops::dot`]), the interleaved 4-candidate dot
+//! ([`Ops::dot_x4`]), the 4-lane f64 dot of the forward-substitution
+//! recurrence ([`Ops::dot_f64`]), the squared-distance row
+//! ([`Ops::sq_dist`]) and the batched RBF exp-cutoff pass
+//! ([`Ops::rbf_entries`]). This module owns one function-pointer table
+//! per backend — the [`scalar`] reference, AVX2/SSE2 on x86-64, NEON on
+//! aarch64 — and a process-wide dispatch slot selected once at startup
+//! (`--kernel-backend scalar|simd|auto` on the CLI, `kernel_backend` in
+//! experiment/service configs, `TS_KERNEL_BACKEND` in the environment).
+//!
+//! **Parity by construction**: the crate's reductions were already
+//! written as four independent accumulator lanes (§Perf iteration 2),
+//! which map 1:1 onto 128-bit SSE2/NEON registers — and pairwise onto
+//! 256-bit AVX2 for the 4-candidate dot, 4×f64 onto one AVX2 register
+//! for the solve. Each SIMD kernel issues the identical unfused
+//! multiply+add per lane and funnels its lanes through the scalar
+//! epilogue, so every backend is **bitwise identical** to the scalar
+//! reference on every input (`rust/tests/simd_parity.rs`). That is what
+//! makes the dispatch safe to flip at any point — even mid-run, even
+//! across checkpoint/resume — without perturbing a single parity suite,
+//! and why `select` can simply fall back to scalar on machines without
+//! AVX2.
+//!
+//! The active backend is visible everywhere decisions are audited: the
+//! `backend=` field on the service's STATS/METRICS lines, the
+//! `summarize` report, and the `kernel.backend_simd` obs gauge.
+
+mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod aarch64;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+pub use scalar::rbf_entry;
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+/// The five hot primitives behind one seam. A backend is a set of
+/// function pointers so dispatch is one relaxed load + indirect call
+/// per *panel or row*, never per element — callers hoist the table out
+/// of their hot loops.
+pub struct Ops {
+    /// Backend name as reported through STATS/METRICS and `summarize`:
+    /// `"scalar"`, `"avx2"` or `"neon"`.
+    pub name: &'static str,
+    /// 4-lane f32 dot product with f64 lane-sum accumulation.
+    pub dot: fn(&[f32], &[f32]) -> f64,
+    /// Four interleaved f32 dots against one shared row.
+    pub dot_x4: fn(&[&[f32]; 4], &[f32]) -> [f64; 4],
+    /// 4-lane f64 dot product (forward-substitution inner loop).
+    pub dot_f64: fn(&[f64], &[f64]) -> f64,
+    /// Lane-structured squared Euclidean distance over f32 rows.
+    pub sq_dist: fn(&[f32], &[f32]) -> f64,
+    /// Batched in-place RBF entry pass (`d2 → exp(-gamma·max(d2,0))`
+    /// with the 32.0 underflow cutoff).
+    pub rbf_entries: fn(f64, &mut [f64]),
+}
+
+/// The scalar reference table — always available, and the oracle every
+/// SIMD backend is pinned bitwise against.
+static SCALAR: Ops = Ops {
+    name: "scalar",
+    dot: scalar::dot,
+    dot_x4: scalar::dot_x4,
+    dot_f64: scalar::dot_f64,
+    sq_dist: scalar::sq_dist,
+    rbf_entries: scalar::rbf_entries,
+};
+
+/// Which backend the user asked for. `Auto` (the default) takes the
+/// best table the CPU supports; `Simd` does the same but exists so
+/// configs/tests can state the intent explicitly; `Scalar` pins the
+/// reference path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// The scalar reference path.
+    Scalar,
+    /// The SIMD table for this CPU; falls back to scalar (bitwise
+    /// identical anyway) when the CPU has neither AVX2 nor NEON.
+    Simd,
+    /// Probe the CPU once and take the best available table.
+    #[default]
+    Auto,
+}
+
+impl BackendChoice {
+    /// Parse the CLI/config/env spelling.
+    pub fn parse(s: &str) -> Option<BackendChoice> {
+        match s {
+            "scalar" => Some(BackendChoice::Scalar),
+            "simd" => Some(BackendChoice::Simd),
+            "auto" => Some(BackendChoice::Auto),
+            _ => None,
+        }
+    }
+
+    /// The canonical spelling (`scalar`/`simd`/`auto`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendChoice::Scalar => "scalar",
+            BackendChoice::Simd => "simd",
+            BackendChoice::Auto => "auto",
+        }
+    }
+}
+
+/// The active dispatch table. Null until first use; [`ops`] initializes
+/// it from `TS_KERNEL_BACKEND` (default `auto`) on the first call, and
+/// [`select`] overwrites it. Only ever stores `&'static` tables, and
+/// every table is bitwise-identical in its results, so a relaxed swap
+/// observed mid-computation is harmless.
+static ACTIVE: AtomicPtr<Ops> = AtomicPtr::new(std::ptr::null_mut());
+
+/// The scalar reference table (parity suites compare against this
+/// without touching the process-wide selection).
+pub fn scalar_ops() -> &'static Ops {
+    &SCALAR
+}
+
+/// The best SIMD table this CPU supports, or `None` (no AVX2 on x86-64,
+/// or an architecture without a backend). Detection runs per call —
+/// cheap (std caches the cpuid probe) and only used off the hot path;
+/// the hot path goes through the cached [`ops`] pointer.
+pub fn simd_ops() -> Option<&'static Ops> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            Some(&x86::AVX2)
+        } else {
+            None
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Some(&aarch64::NEON)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        None
+    }
+}
+
+fn resolve(choice: BackendChoice) -> &'static Ops {
+    match choice {
+        BackendChoice::Scalar => &SCALAR,
+        BackendChoice::Simd | BackendChoice::Auto => simd_ops().unwrap_or(&SCALAR),
+    }
+}
+
+/// Backend requested by the `TS_KERNEL_BACKEND` environment variable;
+/// unset or unparseable means [`BackendChoice::Auto`]. This is how the
+/// test suite runs twice in CI (`TS_KERNEL_BACKEND=scalar` then
+/// `=auto`) without any per-test plumbing.
+pub fn env_choice() -> BackendChoice {
+    match std::env::var("TS_KERNEL_BACKEND") {
+        Ok(v) => BackendChoice::parse(&v).unwrap_or(BackendChoice::Auto),
+        Err(_) => BackendChoice::Auto,
+    }
+}
+
+/// Select the process-wide backend and return the resolved table.
+/// `Simd` on a machine without AVX2/NEON resolves to scalar — the
+/// results are bitwise identical either way, so this is a performance
+/// fallback, not a behavior change. Also publishes the
+/// `kernel.backend_simd` obs gauge (1 when a SIMD table is active).
+pub fn select(choice: BackendChoice) -> &'static Ops {
+    let table = resolve(choice);
+    ACTIVE.store(table as *const Ops as *mut Ops, Ordering::Relaxed);
+    crate::obs::gauge("kernel.backend_simd").set(u64::from(!std::ptr::eq(table, &SCALAR)));
+    table
+}
+
+/// The active dispatch table — one relaxed load on the warm path.
+/// First use initializes from the environment (`TS_KERNEL_BACKEND`,
+/// default `auto`).
+#[inline]
+pub fn ops() -> &'static Ops {
+    let p = ACTIVE.load(Ordering::Relaxed);
+    if p.is_null() {
+        select(env_choice())
+    } else {
+        // SAFETY: `ACTIVE` only ever holds null or a `&'static Ops`
+        // stored by `select` — the pointee is a static, valid forever.
+        unsafe { &*p }
+    }
+}
+
+/// Name of the active backend (`"scalar"`/`"avx2"`/`"neon"`) — the
+/// value STATS/METRICS report as `backend=` and `summarize` prints.
+pub fn active_name() -> &'static str {
+    ops().name
+}
+
+/// Blocked kernel panel into a caller-provided buffer: `out[b·n + i] =
+/// k(items[b], s_i)` for `count` candidates over `n` summary rows
+/// (row-major `feats`, cached `row_norms`), candidates processed four
+/// at a time so each summary row streams through the cache once per
+/// four candidates instead of once per candidate.
+///
+/// Entry arithmetic is identical to the scalar kernel row — the same
+/// `‖x‖² + ‖s‖² − 2⟨x,s⟩` decomposition through the same [`Ops`]
+/// primitives, then one batched [`Ops::rbf_entries`] pass over the d2
+/// panel — so the panel is bitwise equal to `count` scalar kernel rows
+/// under every backend. Lives here (rather than in `logdet.rs`, its
+/// main caller) so `benches/micro_hotpath.rs` can time the exact
+/// production panel under explicit scalar/SIMD tables.
+#[allow(clippy::too_many_arguments)]
+pub fn kernel_panel_into(
+    ops: &Ops,
+    feats: &[f32],
+    row_norms: &[f64],
+    d: usize,
+    n: usize,
+    gamma: f64,
+    items: &[f32],
+    count: usize,
+    out: &mut [f64],
+) {
+    debug_assert!(out.len() >= count * n);
+    let blocks = count / 4;
+    for blk in 0..blocks {
+        let b0 = blk * 4;
+        let xs: [&[f32]; 4] = [
+            &items[b0 * d..(b0 + 1) * d],
+            &items[(b0 + 1) * d..(b0 + 2) * d],
+            &items[(b0 + 2) * d..(b0 + 3) * d],
+            &items[(b0 + 3) * d..(b0 + 4) * d],
+        ];
+        let xsq = [
+            (ops.dot)(xs[0], xs[0]),
+            (ops.dot)(xs[1], xs[1]),
+            (ops.dot)(xs[2], xs[2]),
+            (ops.dot)(xs[3], xs[3]),
+        ];
+        for i in 0..n {
+            let row = &feats[i * d..(i + 1) * d];
+            let rn = row_norms[i];
+            let dots = (ops.dot_x4)(&xs, row);
+            for q in 0..4 {
+                out[(b0 + q) * n + i] = xsq[q] + rn - 2.0 * dots[q];
+            }
+        }
+    }
+    // Tail candidates (count % 4): the scalar kernel-row loop shape.
+    for b in blocks * 4..count {
+        let x = &items[b * d..(b + 1) * d];
+        let xsq = (ops.dot)(x, x);
+        for i in 0..n {
+            let row = &feats[i * d..(i + 1) * d];
+            out[b * n + i] = xsq + row_norms[i] - 2.0 * (ops.dot)(x, row);
+        }
+    }
+    // One batched exp-cutoff pass turns the d2 panel into kernel
+    // entries — elementwise, so bitwise identical to applying
+    // `rbf_entry` inline per entry.
+    (ops.rbf_entries)(gamma, &mut out[..count * n]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parses_and_round_trips() {
+        for (s, want) in [
+            ("scalar", BackendChoice::Scalar),
+            ("simd", BackendChoice::Simd),
+            ("auto", BackendChoice::Auto),
+        ] {
+            let got = BackendChoice::parse(s).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(got.as_str(), s);
+        }
+        assert_eq!(BackendChoice::parse("avx512"), None);
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+    }
+
+    #[test]
+    fn scalar_table_is_always_available() {
+        let ops = scalar_ops();
+        assert_eq!(ops.name, "scalar");
+        assert_eq!((ops.dot)(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!((ops.dot_f64)(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!((ops.sq_dist)(&[0.0, 3.0], &[4.0, 0.0]), 25.0);
+    }
+
+    #[test]
+    fn active_table_resolves() {
+        // Whatever the environment picked, the cached pointer must
+        // resolve to one of the known tables and stay stable.
+        let name = active_name();
+        assert!(name == "scalar" || name == "avx2" || name == "neon", "unknown backend {name}");
+        assert_eq!(active_name(), name);
+    }
+
+    #[test]
+    fn rbf_entry_cutoff_and_clamp() {
+        assert_eq!(rbf_entry(1.0, 33.0), 0.0, "past the cutoff");
+        assert_eq!(rbf_entry(1.0, -0.5), 1.0, "negative d2 clamps to 0");
+        let v = rbf_entry(2.0, 1.0);
+        assert_eq!(v.to_bits(), (-2.0f64).exp().to_bits());
+    }
+
+    #[test]
+    fn simd_table_matches_scalar_on_a_smoke_vector() {
+        // The full randomized-shape suite lives in
+        // rust/tests/simd_parity.rs; this is the in-crate canary.
+        let Some(simd) = simd_ops() else { return };
+        let a: Vec<f32> = (0..19).map(|i| (i as f32) * 0.37 - 3.0).collect();
+        let b: Vec<f32> = (0..19).map(|i| 2.5 - (i as f32) * 0.11).collect();
+        assert_eq!((simd.dot)(&a, &b).to_bits(), (scalar_ops().dot)(&a, &b).to_bits());
+        assert_eq!((simd.sq_dist)(&a, &b).to_bits(), (scalar_ops().sq_dist)(&a, &b).to_bits());
+        let af: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+        let bf: Vec<f64> = b.iter().map(|&x| x as f64).collect();
+        assert_eq!((simd.dot_f64)(&af, &bf).to_bits(), (scalar_ops().dot_f64)(&af, &bf).to_bits());
+    }
+}

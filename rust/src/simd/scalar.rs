@@ -1,0 +1,152 @@
+//! Scalar reference implementations of the five hot primitives.
+//!
+//! These functions *are* the crate's floating-point semantics: every
+//! SIMD backend must reproduce them bit for bit — same lane structure,
+//! same unfused multiply+add, same left-to-right lane sums, same scalar
+//! tails — which is what lets the dispatch layer swap backends at any
+//! point without perturbing a single parity suite. They are also the
+//! always-available fallback on targets without AVX2/NEON.
+//!
+//! The bodies are the §Perf-iteration-2/3/4 loops that previously lived
+//! in `functions/logdet.rs`: four independent accumulators per reduction
+//! (the loop-carried dependency is broken, so even the scalar build
+//! autovectorizes to 128-bit lanes), f64 lane sums, and the exp
+//! underflow cutoff on kernel entries.
+
+/// 4-lane f32 dot product with f64 lane-sum accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc = [0.0f32; 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    acc_tail(acc, a, b, chunks * 4)
+}
+
+/// The shared f32-dot epilogue: f64 lane sum left to right plus the
+/// scalar tail (`a[from..] · b[from..]`). Every backend — scalar, SSE2,
+/// AVX2, NEON — funnels its four accumulator lanes through exactly this
+/// arithmetic, so the reduction order can never drift between them.
+#[inline]
+pub fn acc_tail(acc: [f32; 4], a: &[f32], b: &[f32], from: usize) -> f64 {
+    let mut tail = 0.0f64;
+    for i in from..a.len() {
+        tail += a[i] as f64 * b[i] as f64;
+    }
+    acc[0] as f64 + acc[1] as f64 + acc[2] as f64 + acc[3] as f64 + tail
+}
+
+/// Four interleaved 4-lane f32 dot products against one shared row.
+///
+/// Per candidate this performs *exactly* the same multiply/add sequence
+/// as [`dot`] (same lane structure, same f64 lane-sum + tail), so each
+/// result is bitwise identical to four independent [`dot`] calls — the
+/// batched gain oracle relies on that for its parity guarantee. The win
+/// is memory traffic: the row streams through the cache once for four
+/// candidates instead of once per candidate.
+pub fn dot_x4(xs: &[&[f32]; 4], row: &[f32]) -> [f64; 4] {
+    let len = row.len();
+    let chunks = len / 4;
+    let mut acc = [[0.0f32; 4]; 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        for (q, x) in xs.iter().enumerate() {
+            acc[q][0] += x[i] * row[i];
+            acc[q][1] += x[i + 1] * row[i + 1];
+            acc[q][2] += x[i + 2] * row[i + 2];
+            acc[q][3] += x[i + 3] * row[i + 3];
+        }
+    }
+    let mut out = [0.0f64; 4];
+    for (q, x) in xs.iter().enumerate() {
+        out[q] = acc_tail(acc[q], x, row, chunks * 4);
+    }
+    out
+}
+
+/// 4-lane f64 dot product (the forward-substitution inner loop).
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc = [0.0f64; 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut sum = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        sum += a[i] * b[i];
+    }
+    sum
+}
+
+/// Lane-structured squared Euclidean distance over f32 rows: each
+/// difference is widened to f64 (exact for any f32) before the unfused
+/// multiply+add, four independent accumulator lanes, f64 lane sum left
+/// to right, scalar tail.
+///
+/// This is the hot-path replacement for the *sequential* f64
+/// accumulation of `util::mathx::sq_dist_f32` on the RBF kernel seam —
+/// a sequential reduction cannot be widened to SIMD lanes bit-exactly,
+/// this lane order can. The ~1e-16-relative difference between the two
+/// orders sits far inside every kernel tolerance in the crate (and
+/// `d2 = 0` for identical rows under either order, so self-similarity
+/// stays exactly 1).
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc = [0.0f64; 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] as f64 - b[i] as f64;
+        let d1 = a[i + 1] as f64 - b[i + 1] as f64;
+        let d2 = a[i + 2] as f64 - b[i + 2] as f64;
+        let d3 = a[i + 3] as f64 - b[i + 3] as f64;
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+    }
+    let mut sum = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        let d = a[i] as f64 - b[i] as f64;
+        sum += d * d;
+    }
+    sum
+}
+
+/// One RBF kernel entry from a squared distance: `exp(-gamma·max(d2,0))`
+/// with the §Perf-iteration-4 underflow cutoff (`exp()` is ~20ns and
+/// most pairs are far apart under the paper's gammas — skip it when the
+/// value underflows every tolerance anyway, e⁻³² ≈ 1e-14).
+#[inline]
+pub fn rbf_entry(gamma: f64, d2: f64) -> f64 {
+    let e = gamma * d2.max(0.0);
+    if e > 32.0 {
+        0.0
+    } else {
+        (-e).exp()
+    }
+}
+
+/// Batched RBF entry pass: `d2[j] ← rbf_entry(gamma, d2[j])` in place.
+///
+/// Elementwise and element-independent, so backends may vectorize the
+/// `gamma·max(d2,0)` prologue as long as each element's arithmetic is
+/// exactly the [`rbf_entry`] expression (the cutoff branch and the
+/// `exp` itself stay scalar in every backend — same libm call, same
+/// bits). All kernel loops in the crate fill their output buffer with
+/// raw d2 values and finish with one call to this pass.
+pub fn rbf_entries(gamma: f64, d2: &mut [f64]) {
+    for v in d2.iter_mut() {
+        *v = rbf_entry(gamma, *v);
+    }
+}

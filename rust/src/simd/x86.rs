@@ -1,0 +1,214 @@
+//! x86-64 SIMD backends: SSE2 (part of the x86-64 baseline) for the
+//! plain 4-lane f32 dot, AVX2 for the interleaved 4-candidate dot, the
+//! f64 solve dot, the squared-distance row and the batched RBF pass.
+//!
+//! Bit-exactness contract: every function performs the *identical*
+//! per-lane multiply+add sequence as its [`scalar`] twin — unfused
+//! `add(mul(a, b))`, never FMA (fusing would change rounding) — then
+//! extracts the accumulator lanes and finishes with the exact scalar
+//! epilogue (f64 lane sum left to right, scalar tail loop), so results
+//! are bitwise equal to the scalar reference on every input.
+//! `rust/tests/simd_parity.rs` pins this over randomized shapes; the
+//! crate's 4-independent-accumulator lane structure is what makes the
+//! mapping onto 128/256-bit registers exact rather than approximate.
+
+use std::arch::x86_64::*;
+
+use super::{scalar, Ops};
+
+/// The dispatch table for AVX2-capable x86-64 CPUs. Only reachable
+/// through `simd_ops()` after `is_x86_feature_detected!("avx2")`
+/// succeeded — the safety argument for every `target_feature` call
+/// below lives there.
+pub static AVX2: Ops = Ops {
+    name: "avx2",
+    dot: dot_sse2,
+    dot_x4: dot_x4_avx2,
+    dot_f64: dot_f64_avx2,
+    sq_dist: sq_dist_avx2,
+    rbf_entries: rbf_entries_avx2,
+};
+
+/// Extract the four f32 lanes of a vector in index order.
+#[inline]
+unsafe fn lanes_f32(v: __m128) -> [f32; 4] {
+    let mut out = [0.0f32; 4];
+    _mm_storeu_ps(out.as_mut_ptr(), v);
+    out
+}
+
+/// Extract the four f64 lanes of a vector in index order.
+#[inline]
+unsafe fn lanes_f64(v: __m256d) -> [f64; 4] {
+    let mut out = [0.0f64; 4];
+    _mm256_storeu_pd(out.as_mut_ptr(), v);
+    out
+}
+
+/// [`scalar::dot`] with the four accumulator lanes in one `__m128`.
+/// SSE2 is unconditionally available on x86-64, so no detection guards
+/// this one (AVX2 buys nothing here — the lane structure is 128 bits
+/// wide by construction, and the scalar build already autovectorizes to
+/// exactly this shape; the entry exists so the table is uniform).
+fn dot_sse2(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    // SAFETY: SSE2 is part of the x86-64 baseline; all `loadu` reads
+    // stay inside `chunks * 4 <= len`.
+    let acc = unsafe {
+        let mut acc = _mm_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 4;
+            let va = _mm_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm_loadu_ps(b.as_ptr().add(i));
+            acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+        }
+        lanes_f32(acc)
+    };
+    scalar::acc_tail(acc, a, b, chunks * 4)
+}
+
+/// [`scalar::dot_x4`] with candidate pairs packed into 256-bit
+/// registers: candidates 0/1 share one accumulator (low/high 128-bit
+/// halves), candidates 2/3 the other, and the shared row is broadcast
+/// to both halves — per candidate the lane arithmetic is exactly the
+/// scalar loop's, but the row is loaded once for all four.
+///
+/// # Safety
+/// Requires AVX2 (only called through [`AVX2`], see `simd_ops()`).
+#[target_feature(enable = "avx2")]
+unsafe fn dot_x4_avx2_impl(xs: &[&[f32]; 4], row: &[f32]) -> [f64; 4] {
+    let len = row.len();
+    let chunks = len / 4;
+    let mut acc01 = _mm256_setzero_ps();
+    let mut acc23 = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let i = c * 4;
+        let r = _mm_loadu_ps(row.as_ptr().add(i));
+        let vr = _mm256_set_m128(r, r);
+        let x0 = _mm_loadu_ps(xs[0].as_ptr().add(i));
+        let x1 = _mm_loadu_ps(xs[1].as_ptr().add(i));
+        let x2 = _mm_loadu_ps(xs[2].as_ptr().add(i));
+        let x3 = _mm_loadu_ps(xs[3].as_ptr().add(i));
+        acc01 = _mm256_add_ps(acc01, _mm256_mul_ps(_mm256_set_m128(x1, x0), vr));
+        acc23 = _mm256_add_ps(acc23, _mm256_mul_ps(_mm256_set_m128(x3, x2), vr));
+    }
+    let mut l01 = [0.0f32; 8];
+    let mut l23 = [0.0f32; 8];
+    _mm256_storeu_ps(l01.as_mut_ptr(), acc01);
+    _mm256_storeu_ps(l23.as_mut_ptr(), acc23);
+    let acc = [
+        [l01[0], l01[1], l01[2], l01[3]],
+        [l01[4], l01[5], l01[6], l01[7]],
+        [l23[0], l23[1], l23[2], l23[3]],
+        [l23[4], l23[5], l23[6], l23[7]],
+    ];
+    let mut out = [0.0f64; 4];
+    for (q, x) in xs.iter().enumerate() {
+        out[q] = scalar::acc_tail(acc[q], x, row, chunks * 4);
+    }
+    out
+}
+
+fn dot_x4_avx2(xs: &[&[f32]; 4], row: &[f32]) -> [f64; 4] {
+    // SAFETY: this table is only selectable after
+    // `is_x86_feature_detected!("avx2")` succeeded.
+    unsafe { dot_x4_avx2_impl(xs, row) }
+}
+
+/// [`scalar::dot_f64`] with the four f64 accumulator lanes in one
+/// `__m256d` — the forward-substitution recurrence's dot, where the
+/// scalar build cannot reach 256-bit registers on its own.
+///
+/// # Safety
+/// Requires AVX2 (only called through [`AVX2`], see `simd_ops()`).
+#[target_feature(enable = "avx2")]
+unsafe fn dot_f64_avx2_impl(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let i = c * 4;
+        let va = _mm256_loadu_pd(a.as_ptr().add(i));
+        let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+    }
+    let l = lanes_f64(acc);
+    let mut sum = l[0] + l[1] + l[2] + l[3];
+    for i in chunks * 4..a.len() {
+        sum += a[i] * b[i];
+    }
+    sum
+}
+
+fn dot_f64_avx2(a: &[f64], b: &[f64]) -> f64 {
+    // SAFETY: this table is only selectable after
+    // `is_x86_feature_detected!("avx2")` succeeded.
+    unsafe { dot_f64_avx2_impl(a, b) }
+}
+
+/// [`scalar::sq_dist`] with the widening done by `cvtps_pd` (exact, as
+/// is the scalar `as f64`) and the four f64 accumulator lanes in one
+/// `__m256d`.
+///
+/// # Safety
+/// Requires AVX2 (only called through [`AVX2`], see `simd_ops()`).
+#[target_feature(enable = "avx2")]
+unsafe fn sq_dist_avx2_impl(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let i = c * 4;
+        let va = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i)));
+        let vb = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i)));
+        let d = _mm256_sub_pd(va, vb);
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+    }
+    let l = lanes_f64(acc);
+    let mut sum = l[0] + l[1] + l[2] + l[3];
+    for i in chunks * 4..a.len() {
+        let d = a[i] as f64 - b[i] as f64;
+        sum += d * d;
+    }
+    sum
+}
+
+fn sq_dist_avx2(a: &[f32], b: &[f32]) -> f64 {
+    // SAFETY: this table is only selectable after
+    // `is_x86_feature_detected!("avx2")` succeeded.
+    unsafe { sq_dist_avx2_impl(a, b) }
+}
+
+/// [`scalar::rbf_entries`] with the `gamma·max(d2,0)` prologue
+/// vectorized in place; the cutoff branch and the `exp` itself run as a
+/// second scalar pass over the same buffer — identical values reach the
+/// identical libm call, so the entries are bitwise equal to the scalar
+/// pass. (`maxpd` returns its second operand when the first is NaN,
+/// matching `f64::max(d2, 0.0)`; ±0 differences die in `exp`.)
+///
+/// # Safety
+/// Requires AVX2 (only called through [`AVX2`], see `simd_ops()`).
+#[target_feature(enable = "avx2")]
+unsafe fn rbf_entries_avx2_impl(gamma: f64, d2: &mut [f64]) {
+    let zero = _mm256_setzero_pd();
+    let g = _mm256_set1_pd(gamma);
+    let chunks = d2.len() / 4;
+    for c in 0..chunks {
+        let p = d2.as_mut_ptr().add(c * 4);
+        let v = _mm256_loadu_pd(p);
+        _mm256_storeu_pd(p, _mm256_mul_pd(g, _mm256_max_pd(v, zero)));
+    }
+    for v in d2[chunks * 4..].iter_mut() {
+        *v = gamma * v.max(0.0);
+    }
+    for v in d2.iter_mut() {
+        *v = if *v > 32.0 { 0.0 } else { (-*v).exp() };
+    }
+}
+
+fn rbf_entries_avx2(gamma: f64, d2: &mut [f64]) {
+    // SAFETY: this table is only selectable after
+    // `is_x86_feature_detected!("avx2")` succeeded.
+    unsafe { rbf_entries_avx2_impl(gamma, d2) }
+}

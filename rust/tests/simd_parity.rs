@@ -1,0 +1,327 @@
+//! SIMD backend parity: every dispatch table must be **bitwise
+//! identical** to the scalar reference on every shape.
+//!
+//! Two layers of pinning:
+//!
+//! 1. **Primitive parity** — the five [`threesieves::simd::Ops`]
+//!    primitives (f32 dot, interleaved 4-candidate dot, f64 dot,
+//!    squared distance, batched RBF entry pass) and the blocked
+//!    [`kernel_panel_into`] are compared `to_bits` against the scalar
+//!    table over randomized shapes: odd dims, vector tails of 0–3
+//!    elements past the lane width, empty inputs, candidate blocks
+//!    B ∈ {1, 3, 4, 64}. These use the explicit tables
+//!    ([`scalar_ops`]/[`simd_ops`]) and never touch the process-wide
+//!    selection, so they are race-free under the parallel test runner.
+//! 2. **End-to-end rosters** — full streaming runs with the backend
+//!    forced via [`select`] must produce bit-identical values,
+//!    summaries and stats at `--threads off`, 2 and 8, and across a
+//!    checkpoint/resume pause. These flip the global dispatch slot, so
+//!    they serialize on a local mutex.
+//!
+//! On machines without AVX2/NEON `simd_ops()` is `None` and the SIMD
+//! half of each test self-skips — the scalar half still runs, so the
+//! suite compiles and passes on every target.
+
+use std::sync::{Mutex, OnceLock};
+
+use threesieves::algorithms::{SieveStreaming, StreamingAlgorithm};
+use threesieves::data::synthetic::{Mixture, MixtureSource};
+use threesieves::data::{Dataset, StreamSource};
+use threesieves::exec::{ExecContext, Parallelism};
+use threesieves::functions::{LogDetConfig, NativeLogDet, SubmodularFunction};
+use threesieves::metrics::AlgoStats;
+use threesieves::simd::{self, kernel_panel_into, scalar_ops, simd_ops, BackendChoice, Ops};
+use threesieves::util::rng::Rng;
+
+/// Dims covering every tail class (len % 4 ∈ {0,1,2,3}), the empty
+/// vector, single elements, odd primes and the bench working points.
+const DIMS: [usize; 16] = [0, 1, 2, 3, 4, 5, 7, 8, 11, 16, 17, 19, 31, 64, 127, 128];
+
+fn f32_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+fn f64_vec(rng: &mut Rng, len: usize) -> Vec<f64> {
+    (0..len).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn dot_and_sq_dist_parity_across_shapes() {
+    let Some(simd) = simd_ops() else { return };
+    let scalar = scalar_ops();
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::seed_from(seed);
+        for d in DIMS {
+            let a = f32_vec(&mut rng, d);
+            let b = f32_vec(&mut rng, d);
+            let label = format!("seed={seed} d={d}");
+            assert_eq!(
+                (simd.dot)(&a, &b).to_bits(),
+                (scalar.dot)(&a, &b).to_bits(),
+                "dot {label}"
+            );
+            assert_eq!(
+                (simd.sq_dist)(&a, &b).to_bits(),
+                (scalar.sq_dist)(&a, &b).to_bits(),
+                "sq_dist {label}"
+            );
+            let af = f64_vec(&mut rng, d);
+            let bf = f64_vec(&mut rng, d);
+            assert_eq!(
+                (simd.dot_f64)(&af, &bf).to_bits(),
+                (scalar.dot_f64)(&af, &bf).to_bits(),
+                "dot_f64 {label}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_x4_parity_and_lane_structure() {
+    let scalar = scalar_ops();
+    for seed in [4u64, 5] {
+        let mut rng = Rng::seed_from(seed);
+        for d in DIMS {
+            let xs_owned: [Vec<f32>; 4] = [
+                f32_vec(&mut rng, d),
+                f32_vec(&mut rng, d),
+                f32_vec(&mut rng, d),
+                f32_vec(&mut rng, d),
+            ];
+            let xs: [&[f32]; 4] = [&xs_owned[0], &xs_owned[1], &xs_owned[2], &xs_owned[3]];
+            let row = f32_vec(&mut rng, d);
+            let want = (scalar.dot_x4)(&xs, &row);
+            // Lane structure: each interleaved lane is exactly the
+            // plain dot of its candidate — that is what lets the panel
+            // builder mix blocked and tail candidates bitwise-freely.
+            for q in 0..4 {
+                assert_eq!(
+                    want[q].to_bits(),
+                    (scalar.dot)(xs[q], &row).to_bits(),
+                    "scalar lane {q} d={d}"
+                );
+            }
+            if let Some(simd) = simd_ops() {
+                let got = (simd.dot_x4)(&xs, &row);
+                for q in 0..4 {
+                    assert_eq!(
+                        got[q].to_bits(),
+                        want[q].to_bits(),
+                        "simd lane {q} seed={seed} d={d}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rbf_entries_parity_including_cutoff_and_clamp() {
+    let scalar = scalar_ops();
+    for gamma in [0.25f64, 1.0, 17.5] {
+        let mut rng = Rng::seed_from(6);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 64, 67] {
+            // Mix ordinary squared distances with negatives (the
+            // cancellation clamp) and entries past the exp-32 cutoff.
+            let d2: Vec<f64> = (0..len)
+                .map(|i| match i % 3 {
+                    0 => rng.normal().abs(),
+                    1 => -rng.normal().abs() * 1e-3,
+                    _ => rng.normal().abs() * 40.0,
+                })
+                .collect();
+            let mut want = d2.clone();
+            (scalar.rbf_entries)(gamma, &mut want);
+            // The batched pass is elementwise `rbf_entry`.
+            for (i, (&w, &x)) in want.iter().zip(&d2).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    simd::rbf_entry(gamma, x).to_bits(),
+                    "scalar elementwise gamma={gamma} len={len} i={i}"
+                );
+            }
+            if let Some(simd_t) = simd_ops() {
+                let mut got = d2.clone();
+                (simd_t.rbf_entries)(gamma, &mut got);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "simd gamma={gamma} len={len} i={i}");
+                }
+            }
+        }
+    }
+}
+
+/// Build one panel under `ops` — candidates × summary rows.
+fn panel_under(
+    ops: &Ops,
+    feats: &[f32],
+    d: usize,
+    n: usize,
+    gamma: f64,
+    items: &[f32],
+    count: usize,
+) -> Vec<f64> {
+    let scalar = scalar_ops();
+    let row_norms: Vec<f64> = feats.chunks_exact(d.max(1)).map(|r| (scalar.dot)(r, r)).collect();
+    let mut out = vec![0.0f64; count * n];
+    kernel_panel_into(ops, feats, &row_norms, d, n, gamma, items, count, &mut out);
+    out
+}
+
+#[test]
+fn kernel_panel_parity_across_block_shapes() {
+    let gamma = 0.7;
+    let mut rng = Rng::seed_from(7);
+    for d in [3usize, 8, 17] {
+        for n in [0usize, 1, 9] {
+            for count in [1usize, 3, 4, 64] {
+                let feats = f32_vec(&mut rng, n * d);
+                let items = f32_vec(&mut rng, count * d);
+                let scalar_panel = panel_under(scalar_ops(), &feats, d, n, gamma, &items, count);
+                // The scalar panel must equal entrywise `rbf_entry` of
+                // the ‖x‖²+‖s‖²−2⟨x,s⟩ decomposition — the defining
+                // identity the blocked build promises.
+                let sc = scalar_ops();
+                for b in 0..count {
+                    let x = &items[b * d..(b + 1) * d];
+                    let xsq = (sc.dot)(x, x);
+                    for i in 0..n {
+                        let row = &feats[i * d..(i + 1) * d];
+                        let d2 = xsq + (sc.dot)(row, row) - 2.0 * (sc.dot)(x, row);
+                        assert_eq!(
+                            scalar_panel[b * n + i].to_bits(),
+                            simd::rbf_entry(gamma, d2).to_bits(),
+                            "scalar panel entry d={d} n={n} count={count} b={b} i={i}"
+                        );
+                    }
+                }
+                if let Some(simd_t) = simd_ops() {
+                    let simd_panel = panel_under(simd_t, &feats, d, n, gamma, &items, count);
+                    for (i, (s, r)) in simd_panel.iter().zip(&scalar_panel).enumerate() {
+                        assert_eq!(
+                            s.to_bits(),
+                            r.to_bits(),
+                            "panel d={d} n={n} count={count} entry {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_panel_is_a_no_op() {
+    for ops in [Some(scalar_ops()), simd_ops()].into_iter().flatten() {
+        let mut out: Vec<f64> = Vec::new();
+        kernel_panel_into(ops, &[], &[], 4, 0, 1.0, &[], 0, &mut out);
+        assert!(out.is_empty(), "{}", ops.name);
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end rosters: the global dispatch slot is process-wide, so the
+// tests below serialize on one mutex and restore the environment's
+// choice before returning.
+// ---------------------------------------------------------------------
+
+fn backend_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+const DIM: usize = 8;
+const CHUNK: usize = 64;
+
+fn stream(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from(seed);
+    let mix = Mixture::random(DIM, 4, 5.0, 0.5, &mut rng);
+    let mut ds = MixtureSource::new(mix, n, seed).materialize("simd-parity", n);
+    ds.normalize();
+    ds
+}
+
+fn oracle(k: usize) -> Box<dyn SubmodularFunction> {
+    Box::new(NativeLogDet::new(LogDetConfig::with_gamma(DIM, k, 1.0, 1.0)))
+}
+
+fn run_roster(ds: &Dataset, k: usize, par: Parallelism) -> (u64, Vec<f32>, AlgoStats) {
+    let mut algo = SieveStreaming::new(oracle(k), k, 0.1);
+    algo.set_exec(ExecContext::new(par));
+    for block in ds.raw().chunks(CHUNK * DIM) {
+        algo.process_batch(block);
+    }
+    algo.finalize();
+    (algo.value().to_bits(), algo.summary(), algo.stats())
+}
+
+/// Forcing `simd` must be invisible end to end: bit-identical value,
+/// summary and the full stats struct against the pinned scalar backend,
+/// at every thread count. On machines without AVX2/NEON `Simd` resolves
+/// to the scalar table and the comparison is trivially exact — the
+/// fallback contract itself.
+#[test]
+fn e2e_backend_is_bitwise_invisible_across_threads() {
+    let _g = backend_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let ds = stream(1500, 51);
+    let k = 6;
+    for par in [Parallelism::Off, Parallelism::Threads(2), Parallelism::Threads(8)] {
+        simd::select(BackendChoice::Scalar);
+        let scalar = run_roster(&ds, k, par);
+        simd::select(BackendChoice::Simd);
+        let simd_run = run_roster(&ds, k, par);
+        let label = format!("threads={par}");
+        assert_eq!(scalar.0, simd_run.0, "{label}: value bits");
+        assert_eq!(scalar.1, simd_run.1, "{label}: summary rows");
+        assert_eq!(scalar.2, simd_run.2, "{label}: stats (incl. kernel_evals)");
+    }
+    simd::select(simd::env_choice());
+}
+
+/// Checkpoint under the scalar backend, resume under `simd` (and the
+/// reverse): the pause, the backend flip and the continuation must all
+/// be bitwise invisible against an unpaused scalar run.
+#[test]
+fn e2e_checkpoint_resume_survives_a_backend_flip() {
+    let _g = backend_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let ds = stream(1600, 52);
+    let k = 6;
+    let half = ds.len() / 2 * DIM;
+    let exec = ExecContext::new(Parallelism::Threads(2));
+    let build = || SieveStreaming::new(oracle(k), k, 0.1);
+
+    simd::select(BackendChoice::Scalar);
+    let mut whole = build();
+    whole.set_exec(exec.clone());
+    for block in ds.raw().chunks(CHUNK * DIM) {
+        whole.process_batch(block);
+    }
+
+    for (first_be, second_be) in [
+        (BackendChoice::Scalar, BackendChoice::Simd),
+        (BackendChoice::Simd, BackendChoice::Scalar),
+    ] {
+        simd::select(first_be);
+        let mut first = build();
+        first.set_exec(exec.clone());
+        for block in ds.raw()[..half].chunks(CHUNK * DIM) {
+            first.process_batch(block);
+        }
+        let state = first.snapshot_state().expect("SieveStreaming snapshots");
+        let parsed = threesieves::util::json::Json::parse(&state.to_string()).unwrap();
+        let summary = first.summary();
+
+        simd::select(second_be);
+        let mut resumed = build();
+        resumed.restore_state(&parsed, &summary).unwrap();
+        resumed.set_exec(exec.clone());
+        for block in ds.raw()[half..].chunks(CHUNK * DIM) {
+            resumed.process_batch(block);
+        }
+        let label = format!("{first_be:?}→{second_be:?}");
+        assert_eq!(resumed.value().to_bits(), whole.value().to_bits(), "{label}: value");
+        assert_eq!(resumed.summary(), whole.summary(), "{label}: summary");
+        assert_eq!(resumed.stats(), whole.stats(), "{label}: stats");
+    }
+    simd::select(simd::env_choice());
+}
