@@ -30,11 +30,15 @@
 //!   wall-clock recording off vs on, plus the per-stage (kernel / solve /
 //!   scan) wall breakdown the recording surfaces (the PR-7 acceptance
 //!   point: ≤3% ns/query overhead, gated in CI via `--obs-json`)
+//! * Fault-injection overhead: the full service push path with the chaos
+//!   harness disarmed (one relaxed load per site) vs armed with an inert
+//!   rule (the PR-10 acceptance point: disarmed ratio ≤ 1.03, gated in
+//!   CI via `--fault-json`)
 //!
 //! Run: `cargo bench --bench micro_hotpath [-- [--quick] [--json PATH]
 //! [--scaling-json PATH] [--service-json PATH] [--panel-json PATH]
 //! [--solve-json PATH] [--simd-json PATH] [--obs-json PATH]
-//! [--backend scalar|simd|auto]]`.
+//! [--fault-json PATH] [--backend scalar|simd|auto]]`.
 //! `--quick` shrinks iteration counts to CI-smoke scale; `--json PATH`
 //! writes the headline numbers as a JSON object (the CI bench job uploads
 //! it as an artifact so the BENCH_* trajectory populates); the other
@@ -648,6 +652,68 @@ fn bench_obs_overhead(n: usize, iters: usize, rep: &mut Report, obs: &mut Report
     }
 }
 
+/// The PR-10 acceptance row: the full service push path (session manager,
+/// non-finite gate, fault hooks, algorithm) with the fault harness
+/// disarmed vs armed with a rule that never fires. Disarmed, every site
+/// is one relaxed atomic load; armed, each hit walks the plan's rule list
+/// and declines. CI pins `fault_overhead_ratio` ≤ 1.03 — the chaos
+/// harness must be free when it is off. Min-over-iterations wall keeps
+/// scheduler noise out of the ratio, mirroring the obs-overhead row.
+fn bench_fault_overhead(n: usize, iters: usize, rep: &mut Report, fault_rep: &mut Report) {
+    use threesieves::config::ServiceConfig;
+    use threesieves::fault::{self, site, FaultKind, FaultPlan};
+    use threesieves::service::{PushBody, SessionManager, SessionSpec};
+
+    let dataset = "fact-highlevel-like";
+    let info = registry::info(dataset).unwrap();
+    let ds = registry::get(dataset, n, 7).unwrap();
+    let (k, batch) = (50usize, 64usize);
+    let spec = SessionSpec::three_sieves(info.dim, k, 0.001, 1000);
+    let mut ns_per_query = [0f64; 2]; // [disarmed, armed-noop]
+    for (mode, armed) in [false, true].into_iter().enumerate() {
+        if armed {
+            // Armed but inert: the rule waits for hit u64::MAX, so every
+            // site check takes the slow path, scans the plan and declines.
+            fault::arm(FaultPlan::new().nth(
+                site::PUSH_ROWS,
+                FaultKind::IoError,
+                u64::MAX,
+                1,
+                1,
+            ));
+        }
+        let mut queries = 0u64;
+        let stats = bench_loop(1, iters, || {
+            let mgr = SessionManager::new(ServiceConfig {
+                idle_timeout: std::time::Duration::ZERO,
+                ..ServiceConfig::default()
+            });
+            mgr.open("bench-fault", &spec).unwrap();
+            for chunk in ds.raw().chunks(batch * info.dim) {
+                mgr.push("bench-fault", &PushBody::Packed(chunk.to_vec())).unwrap();
+            }
+            queries = mgr.stats("bench-fault").unwrap().stats.queries;
+            mgr.close("bench-fault", true).unwrap();
+        });
+        fault::disarm();
+        ns_per_query[mode] = stats.min() * 1e9 / queries.max(1) as f64;
+    }
+    let ratio = ns_per_query[1] / ns_per_query[0];
+    println!(
+        "fault overhead   d={:<4} K={k:<4} B={batch:<3}: disarmed {:>8.1} ns/q  \
+         armed-noop {:>8.1} ns/q  overhead {ratio:.3}x",
+        info.dim, ns_per_query[0], ns_per_query[1]
+    );
+    for (key, val) in [
+        ("fault_disarmed_ns_per_query".to_string(), ns_per_query[0]),
+        ("fault_armed_noop_ns_per_query".to_string(), ns_per_query[1]),
+        ("fault_overhead_ratio".to_string(), ratio),
+    ] {
+        rep.push(key.clone(), val);
+        fault_rep.push(key, val);
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -686,6 +752,11 @@ fn main() {
         .position(|a| a == "--simd-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let fault_json_path = args
+        .iter()
+        .position(|a| a == "--fault-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let backend_choice = match args.iter().position(|a| a == "--backend") {
         None => threesieves::simd::env_choice(),
         Some(i) => {
@@ -702,6 +773,7 @@ fn main() {
     let mut solve = Report { entries: Vec::new() };
     let mut obs = Report { entries: Vec::new() };
     let mut simd_rep = Report { entries: Vec::new() };
+    let mut fault_rep = Report { entries: Vec::new() };
 
     println!(
         "== micro hot-path benchmarks{} (backend: {backend}) ==",
@@ -733,9 +805,10 @@ fn main() {
     bench_panel_sharing(panel_n, panel_iters, &mut rep, &mut panel);
     let (svc_n, svc_iters) = if quick { (2_000, 2) } else { (8_000, 3) };
     bench_service_sessions(svc_n, 8, svc_iters, &mut rep, &mut service);
-    // Last so the global enable toggle cannot leak into the rows above.
+    // Last so the global enable toggles cannot leak into the rows above.
     let (obs_n, obs_iters) = if quick { (4_000, 3) } else { (20_000, 5) };
     bench_obs_overhead(obs_n, obs_iters, &mut rep, &mut obs);
+    bench_fault_overhead(obs_n, obs_iters, &mut rep, &mut fault_rep);
 
     if let Some(path) = json_path {
         match rep.write(&path) {
@@ -775,6 +848,12 @@ fn main() {
     }
     if let Some(path) = simd_json_path {
         match simd_rep.write(&path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+    if let Some(path) = fault_json_path {
+        match fault_rep.write(&path) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => eprintln!("failed to write {path}: {e}"),
         }

@@ -82,6 +82,13 @@ pub struct ServiceConfig {
     /// Summaries are bit-identical under every backend — see
     /// [`crate::simd`].
     pub kernel_backend: Option<BackendChoice>,
+    /// Deterministic fault-injection schedule for chaos drills, in the
+    /// [`crate::fault::FaultPlan::parse`] spec grammar (e.g.
+    /// `"checkpoint.write=torn:32@2;conn.read=reset@5"`). Validated at
+    /// config load; armed by the `serve` CLI before the listener starts.
+    /// `None` (the default) leaves injection disarmed — the hot path then
+    /// pays a single relaxed atomic load per site.
+    pub fault_spec: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -93,6 +100,7 @@ impl Default for ServiceConfig {
             checkpoint_dir: None,
             parallelism: Parallelism::Off,
             kernel_backend: None,
+            fault_spec: None,
         }
     }
 }
@@ -120,6 +128,15 @@ impl ServiceConfig {
         } else {
             d.parallelism
         };
+        // Reject a bad schedule at load time, not at the first injected
+        // fault hours into a chaos drill.
+        let fault_spec = match j.get("fault_spec").as_str() {
+            Some(s) => {
+                crate::fault::FaultPlan::parse(s).map_err(|e| format!("fault_spec: {e}"))?;
+                Some(s.to_string())
+            }
+            None => None,
+        };
         Ok(ServiceConfig {
             max_sessions: j.get("max_sessions").as_usize().unwrap_or(d.max_sessions).max(1),
             max_total_stored: j
@@ -131,6 +148,7 @@ impl ServiceConfig {
             checkpoint_dir: j.get("checkpoint_dir").as_str().map(std::path::PathBuf::from),
             parallelism,
             kernel_backend: kernel_backend_field(j)?,
+            fault_spec,
         })
     }
 }
@@ -300,6 +318,22 @@ mod tests {
         // a config error, not a valid deployment).
         let cfg = ServiceConfig::from_json_text(r#"{"max_sessions": 0}"#).unwrap();
         assert_eq!(cfg.max_sessions, 1);
+    }
+
+    #[test]
+    fn fault_spec_validates_at_load_time() {
+        assert_eq!(ServiceConfig::default().fault_spec, None);
+        let cfg = ServiceConfig::from_json_text(
+            r#"{"fault_spec": "checkpoint.write=torn:32@2;conn.read=reset@5"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.fault_spec.as_deref(),
+            Some("checkpoint.write=torn:32@2;conn.read=reset@5")
+        );
+        let err = ServiceConfig::from_json_text(r#"{"fault_spec": "nowhere=explode"}"#)
+            .unwrap_err();
+        assert!(err.contains("fault_spec"), "{err}");
     }
 
     #[test]

@@ -2,16 +2,31 @@
 //! pipeline can restart, or downstream consumers (dashboards, assignment
 //! services) can load the latest summary without touching the pipeline.
 //!
-//! Format: a small JSON header line, then row-major little-endian f32s.
+//! Format **v2** (`TSCKPT2\n`): a small JSON header line, then row-major
+//! little-endian f32s, then a trailing little-endian **FNV-1a-64
+//! checksum** over everything before it (magic, header length, header,
+//! payload). Format v1 (`TSCKPT1\n`, no checksum) still loads — a legacy
+//! file is simply unverifiable, not corrupt.
 //!
-//! Saves are **atomic**: the bytes go to a `<path>.tmp` sibling first and
-//! are renamed over the target only after a successful `sync_all`, so a
-//! crash or eviction mid-write can never leave a torn checkpoint for a
-//! reader (or the service's re-`OPEN` resume path) to trip over.
+//! Saves are **crash-safe**: the bytes go to a `<path>.tmp` sibling
+//! first, are `sync_all`ed, renamed over the target, and the parent
+//! directory is fsynced after the rename — so neither a torn write nor a
+//! crash between write and rename can ever leave a *published*
+//! checkpoint torn, and the rename itself is durable. What a mid-write
+//! crash *can* leave behind — a stale `.tmp`, a truncated or bit-flipped
+//! file from outside interference — is what [`sweep_dir`] recovers from
+//! at service startup: good checkpoints are counted, corrupt ones are
+//! [`quarantine`]d to a `.corrupt` sibling (kept for forensics, out of
+//! the resume path) so a fresh `OPEN` under the same id proceeds.
+//!
+//! Every IO step is a named fault site ([`crate::fault::site`]), so the
+//! chaos suite can force torn writes, rename failures and read errors on
+//! a deterministic schedule.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
+use crate::fault;
 use crate::util::json::Json;
 
 /// A persisted summary.
@@ -34,17 +49,56 @@ pub struct Checkpoint {
     pub summary: Vec<f32>,
 }
 
+/// Why a checkpoint failed to load — the corruption taxonomy behind
+/// [`CheckpointError::Corrupt`]. Every variant is recoverable by
+/// quarantine + fresh `OPEN`; none should ever abort a process.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Corruption {
+    /// The file ends before the named section is complete.
+    Truncated(&'static str),
+    /// The first 8 bytes are not a `TSCKPT*` magic at all.
+    BadMagic,
+    /// A `TSCKPT` magic with a version this build does not speak.
+    UnsupportedVersion(u8),
+    /// The v2 trailer does not match the FNV-1a-64 of the body — a torn
+    /// or bit-flipped file.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// The JSON header is unreadable or missing a required field.
+    Header(String),
+    /// The f32 payload size disagrees with the header's `rows × dim`.
+    PayloadSize { got: usize, want: usize },
+}
+
+impl std::fmt::Display for Corruption {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Corruption::Truncated(what) => write!(f, "truncated: short {what}"),
+            Corruption::BadMagic => write!(f, "bad magic"),
+            Corruption::UnsupportedVersion(v) => {
+                write!(f, "unsupported format version {:?}", *v as char)
+            }
+            Corruption::ChecksumMismatch { stored, computed } => {
+                write!(f, "checksum mismatch: stored {stored:016x}, computed {computed:016x}")
+            }
+            Corruption::Header(msg) => write!(f, "header: {msg}"),
+            Corruption::PayloadSize { got, want } => {
+                write!(f, "payload {got} bytes, expected {want}")
+            }
+        }
+    }
+}
+
 #[derive(Debug)]
 pub enum CheckpointError {
     Io(std::io::Error),
-    Corrupt(String),
+    Corrupt(Corruption),
 }
 
 impl std::fmt::Display for CheckpointError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             CheckpointError::Io(e) => write!(f, "io: {e}"),
-            CheckpointError::Corrupt(msg) => write!(f, "corrupt checkpoint: {msg}"),
+            CheckpointError::Corrupt(c) => write!(f, "corrupt checkpoint: {c}"),
         }
     }
 }
@@ -64,7 +118,26 @@ impl From<std::io::Error> for CheckpointError {
     }
 }
 
-const MAGIC: &[u8; 8] = b"TSCKPT1\n";
+impl From<Corruption> for CheckpointError {
+    fn from(c: Corruption) -> Self {
+        CheckpointError::Corrupt(c)
+    }
+}
+
+const MAGIC_V1: &[u8; 8] = b"TSCKPT1\n";
+const MAGIC_V2: &[u8; 8] = b"TSCKPT2\n";
+
+/// FNV-1a 64-bit over `bytes` — the v2 trailer hash. Std-only, one
+/// multiply per byte; collision resistance is irrelevant here (we defend
+/// against torn writes and bit rot, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 impl Checkpoint {
     pub fn summary_len(&self) -> usize {
@@ -75,12 +148,9 @@ impl Checkpoint {
         }
     }
 
-    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
-        let _g = crate::obs::span("checkpoint-save");
-        crate::obs::emit_event(crate::obs::Event::CheckpointSave { elements: self.elements });
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
+    /// Serialize to the on-disk v2 byte image (magic + header-len +
+    /// header + payload + FNV trailer).
+    pub fn encode(&self) -> Vec<u8> {
         let header = Json::obj(vec![
             ("algorithm", Json::str(self.algorithm.clone())),
             ("dim", Json::num(self.dim as f64)),
@@ -92,6 +162,25 @@ impl Checkpoint {
             ("rows", Json::num(self.summary_len() as f64)),
         ])
         .to_string();
+        let mut buf = Vec::with_capacity(8 + 4 + header.len() + self.summary.len() * 4 + 8);
+        buf.extend_from_slice(MAGIC_V2);
+        buf.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        buf.extend_from_slice(header.as_bytes());
+        for v in &self.summary {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let sum = fnv1a64(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        buf
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        let _g = crate::obs::span("checkpoint-save");
+        crate::obs::emit_event(crate::obs::Event::CheckpointSave { elements: self.elements });
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let buf = self.encode();
         // Append `.tmp` to the *whole* file name rather than replacing the
         // extension: `with_extension` would map both `a.1.ckpt` and
         // `a.2.ckpt` onto `a.tmp`, so two concurrent saves of *different*
@@ -107,54 +196,96 @@ impl Checkpoint {
         };
         {
             let mut f = std::fs::File::create(&tmp)?;
-            f.write_all(MAGIC)?;
-            f.write_all(&(header.len() as u32).to_le_bytes())?;
-            f.write_all(header.as_bytes())?;
-            for v in &self.summary {
-                f.write_all(&v.to_le_bytes())?;
+            match fault::check(fault::site::CKPT_WRITE) {
+                Some(fault::FaultKind::TornWrite { bytes }) => {
+                    // A mid-write crash: a synced prefix of the staging
+                    // file survives, the publish rename never happens.
+                    f.write_all(&buf[..bytes.min(buf.len())])?;
+                    f.sync_all()?;
+                    return Err(fault::io_error(std::io::ErrorKind::WriteZero).into());
+                }
+                Some(_) => {
+                    drop(f);
+                    let _ = std::fs::remove_file(&tmp);
+                    return Err(fault::io_error(std::io::ErrorKind::Other).into());
+                }
+                None => {}
             }
+            f.write_all(&buf)?;
             f.sync_all()?;
         }
-        // Atomic replace so readers never see a torn checkpoint.
+        if fault::check(fault::site::CKPT_RENAME).is_some() {
+            // A crash between staging and publish: the stale `.tmp` is
+            // left behind for the recovery sweep to clean up.
+            return Err(fault::io_error(std::io::ErrorKind::Other).into());
+        }
+        // Atomic replace so readers never see a torn checkpoint…
         std::fs::rename(&tmp, path)?;
+        // …and a directory fsync so the rename itself survives a crash.
+        sync_parent_dir(path);
         Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Self, CheckpointError> {
         let _g = crate::obs::span("checkpoint-restore");
-        let mut f = std::fs::File::open(path)?;
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic).map_err(|_| CheckpointError::Corrupt("short magic".into()))?;
-        if &magic != MAGIC {
-            return Err(CheckpointError::Corrupt("bad magic".into()));
+        if fault::check(fault::site::CKPT_LOAD).is_some() {
+            return Err(fault::io_error(std::io::ErrorKind::Other).into());
         }
-        let mut len_bytes = [0u8; 4];
-        f.read_exact(&mut len_bytes)
-            .map_err(|_| CheckpointError::Corrupt("short header len".into()))?;
-        let hlen = u32::from_le_bytes(len_bytes) as usize;
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf).map_err(|_| CheckpointError::Corrupt("short header".into()))?;
-        let header = String::from_utf8(hbuf)
-            .map_err(|_| CheckpointError::Corrupt("header not utf-8".into()))?;
-        let j = Json::parse(&header)
-            .map_err(|e| CheckpointError::Corrupt(format!("header json: {e}")))?;
+        let bytes = std::fs::read(path)?;
+        let ck = Checkpoint::decode(&bytes)?;
+        crate::obs::emit_event(crate::obs::Event::CheckpointRestore { elements: ck.elements });
+        Ok(ck)
+    }
+
+    /// Parse an on-disk byte image (either format version), verifying
+    /// the v2 checksum. The inverse of [`Checkpoint::encode`].
+    pub fn decode(bytes: &[u8]) -> Result<Self, CheckpointError> {
+        if bytes.len() < 8 {
+            return Err(Corruption::Truncated("magic").into());
+        }
+        let magic = &bytes[..8];
+        let body = if magic == MAGIC_V2 {
+            // Minimum v2: magic + header-len + empty header + trailer.
+            if bytes.len() < 8 + 4 + 8 {
+                return Err(Corruption::Truncated("checksum trailer").into());
+            }
+            let (body, trailer) = bytes.split_at(bytes.len() - 8);
+            let stored = u64::from_le_bytes(trailer.try_into().expect("8-byte trailer"));
+            let computed = fnv1a64(body);
+            if stored != computed {
+                return Err(Corruption::ChecksumMismatch { stored, computed }.into());
+            }
+            body
+        } else if magic == MAGIC_V1 {
+            // Legacy format: no trailer, nothing to verify.
+            bytes
+        } else if let Some(version) = magic.strip_prefix(b"TSCKPT") {
+            return Err(Corruption::UnsupportedVersion(version[0]).into());
+        } else {
+            return Err(Corruption::BadMagic.into());
+        };
+        if body.len() < 12 {
+            return Err(Corruption::Truncated("header length").into());
+        }
+        let hlen = u32::from_le_bytes(body[8..12].try_into().expect("4-byte len")) as usize;
+        if body.len() < 12 + hlen {
+            return Err(Corruption::Truncated("header").into());
+        }
+        let header = std::str::from_utf8(&body[12..12 + hlen])
+            .map_err(|_| Corruption::Header("not utf-8".into()))?;
+        let j = Json::parse(header)
+            .map_err(|e| Corruption::Header(format!("json: {e}")))?;
         let dim = j.get("dim").as_usize().ok_or_else(|| corrupt("dim"))?;
         let rows = j.get("rows").as_usize().ok_or_else(|| corrupt("rows"))?;
-        let mut payload = Vec::new();
-        f.read_to_end(&mut payload)?;
+        let payload = &body[12 + hlen..];
         if payload.len() != rows * dim * 4 {
-            return Err(CheckpointError::Corrupt(format!(
-                "payload {} bytes, expected {}",
-                payload.len(),
-                rows * dim * 4
-            )));
+            return Err(Corruption::PayloadSize { got: payload.len(), want: rows * dim * 4 }.into());
         }
         let summary: Vec<f32> = payload
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         let elements = j.get("elements").as_f64().unwrap_or(0.0) as u64;
-        crate::obs::emit_event(crate::obs::Event::CheckpointRestore { elements });
         Ok(Checkpoint {
             algorithm: j.get("algorithm").as_str().unwrap_or("?").to_string(),
             dim,
@@ -170,7 +301,101 @@ impl Checkpoint {
 }
 
 fn corrupt(field: &str) -> CheckpointError {
-    CheckpointError::Corrupt(format!("missing field {field:?}"))
+    Corruption::Header(format!("missing field {field:?}")).into()
+}
+
+/// Fsync `path`'s parent directory so a just-renamed entry is durable.
+/// Best-effort on platforms where directories cannot be opened.
+fn sync_parent_dir(path: &Path) {
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = std::fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+/// The `.corrupt` sibling a quarantined checkpoint is moved to.
+pub fn quarantine_path(path: &Path) -> PathBuf {
+    match path.file_name() {
+        Some(name) => {
+            let mut q = name.to_os_string();
+            q.push(".corrupt");
+            path.with_file_name(q)
+        }
+        None => path.with_extension("corrupt"),
+    }
+}
+
+/// Move an unloadable checkpoint out of the resume path to its
+/// `.corrupt` sibling (replacing any previous quarantine of the same
+/// file) and return the new location. The bytes are preserved for
+/// forensics; the original path is free for a fresh `OPEN` to reuse.
+pub fn quarantine(path: &Path) -> std::io::Result<PathBuf> {
+    let dst = quarantine_path(path);
+    std::fs::rename(path, &dst)?;
+    sync_parent_dir(path);
+    crate::obs::emit_event(crate::obs::Event::CheckpointQuarantine);
+    Ok(dst)
+}
+
+/// What a [`sweep_dir`] recovery pass found.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepReport {
+    /// Checkpoints that load cleanly and are available for resume.
+    pub good: usize,
+    /// Corrupt checkpoints moved to `.corrupt` quarantine.
+    pub quarantined: usize,
+    /// Stale `.tmp` staging files (interrupted saves) removed.
+    pub stale_tmp: usize,
+}
+
+/// Startup recovery sweep over a checkpoint directory: verify every
+/// `*.ckpt` (quarantining corrupt ones via [`quarantine`]) and delete
+/// stale `*.tmp` staging leftovers from interrupted saves. Missing or
+/// unreadable directories yield an empty report — recovery never blocks
+/// startup. Deterministic: entries are processed in sorted order.
+pub fn sweep_dir(dir: &Path) -> SweepReport {
+    let mut report = SweepReport::default();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return report,
+    };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        let name = match p.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        if name.ends_with(".tmp") {
+            // An interrupted staging write: the publish rename never ran,
+            // so the real checkpoint (if any) is intact next to it.
+            if std::fs::remove_file(&p).is_ok() {
+                report.stale_tmp += 1;
+            }
+            continue;
+        }
+        if !name.ends_with(".ckpt") {
+            continue;
+        }
+        match Checkpoint::load(&p) {
+            Ok(_) => report.good += 1,
+            Err(CheckpointError::Corrupt(c)) => {
+                if let Ok(dst) = quarantine(&p) {
+                    eprintln!(
+                        "checkpoint recovery: quarantined {} ({c}) -> {}",
+                        p.display(),
+                        dst.display()
+                    );
+                    report.quarantined += 1;
+                }
+            }
+            // Unreadable right now (permissions, transient IO): leave it
+            // alone — a later OPEN will retry and decide.
+            Err(CheckpointError::Io(_)) => {}
+        }
+    }
+    report
 }
 
 #[cfg(test)]
@@ -219,7 +444,65 @@ mod tests {
     fn detects_bad_magic() {
         let p = tmp("magic");
         std::fs::write(&p, b"NOTMAGIC rest").unwrap();
-        assert!(matches!(Checkpoint::load(&p), Err(CheckpointError::Corrupt(_))));
+        assert!(matches!(
+            Checkpoint::load(&p),
+            Err(CheckpointError::Corrupt(Corruption::BadMagic))
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn checksum_detects_single_bit_flip() {
+        let p = tmp("bitflip");
+        sample().save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Flip one payload bit (past magic + header length).
+        let idx = bytes.len() - 12;
+        bytes[idx] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            Checkpoint::load(&p),
+            Err(CheckpointError::Corrupt(Corruption::ChecksumMismatch { .. }))
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_version_header() {
+        let p = tmp("version");
+        sample().save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[6] = b'9';
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(matches!(
+            Checkpoint::load(&p),
+            Err(CheckpointError::Corrupt(Corruption::UnsupportedVersion(b'9')))
+        ));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn legacy_v1_still_loads() {
+        let p = tmp("v1");
+        let ck = sample();
+        // A v1 file is the v2 image with the old magic and no trailer.
+        let mut bytes = ck.encode();
+        bytes.truncate(bytes.len() - 8);
+        bytes[..8].copy_from_slice(MAGIC_V1);
+        std::fs::write(&p, &bytes).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_is_truncated_not_panic() {
+        let p = tmp("emptyfile");
+        std::fs::write(&p, b"").unwrap();
+        assert!(matches!(
+            Checkpoint::load(&p),
+            Err(CheckpointError::Corrupt(Corruption::Truncated(_)))
+        ));
         std::fs::remove_file(&p).ok();
     }
 
@@ -271,6 +554,39 @@ mod tests {
         assert!(a.exists());
         assert!(!dir.join("sess.a.ckpt.tmp").exists(), "staging file must be renamed away");
         assert!(!dir.join("sess.tmp").exists(), "must not use with_extension-style staging");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantine_moves_to_corrupt_sibling() {
+        let dir = std::env::temp_dir().join(format!("ts_ckpt_qdir_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ckpt");
+        std::fs::write(&p, b"garbage").unwrap();
+        let dst = quarantine(&p).unwrap();
+        assert_eq!(dst, dir.join("bad.ckpt.corrupt"));
+        assert!(!p.exists());
+        assert_eq!(std::fs::read(&dst).unwrap(), b"garbage");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_quarantines_corrupt_and_removes_stale_tmp() {
+        let dir = std::env::temp_dir().join(format!("ts_ckpt_sweep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        sample().save(&dir.join("good.ckpt")).unwrap();
+        std::fs::write(dir.join("bad.ckpt"), b"TSCKPT2\ntorn").unwrap();
+        std::fs::write(dir.join("stale.ckpt.tmp"), b"half a checkpoint").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"ignore me").unwrap();
+        let report = sweep_dir(&dir);
+        assert_eq!(report, SweepReport { good: 1, quarantined: 1, stale_tmp: 1 });
+        assert!(dir.join("good.ckpt").exists());
+        assert!(dir.join("bad.ckpt.corrupt").exists());
+        assert!(!dir.join("bad.ckpt").exists());
+        assert!(!dir.join("stale.ckpt.tmp").exists());
+        assert!(dir.join("notes.txt").exists(), "sweep only touches ckpt artifacts");
+        // A second sweep is a no-op on the quarantined leftovers.
+        assert_eq!(sweep_dir(&dir), SweepReport { good: 1, quarantined: 0, stale_tmp: 0 });
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,503 @@
+//! Deterministic fault injection (PR 10): make IO, peers and tenants
+//! *fail on schedule* so the hardening layers can be proven, not hoped.
+//!
+//! The service's robustness story (crash-safe checkpoints, session
+//! quarantine, client retry — see `docs/robustness.md`) is only credible
+//! if the failure paths actually run under test. This module plants named
+//! **fault sites** on the hot paths (checkpoint write/rename/load,
+//! connection read/write, PUSH ingestion, the session handler) and lets a
+//! seeded [`FaultPlan`] force a typed [`FaultKind`] at deterministic hit
+//! counts: IO errors, short/torn writes, connection resets, slow reads,
+//! oracle-poisoning non-finite values, handler panics.
+//!
+//! Gating mirrors [`crate::obs`] exactly: one process-wide relaxed
+//! [`AtomicBool`]. Disarmed — the production default — every
+//! [`check`] is a single relaxed load and an immediate return; no lock,
+//! no string compare, no counter. `benches/micro_hotpath.rs
+//! --fault-json` pins the disarmed PUSH path within the same ≤ 1.03
+//! overhead gate as `obs_overhead`. Armed, [`check`] takes the plan lock
+//! (the chaos path does not care about nanoseconds) and consults each
+//! rule for the site in plan order.
+//!
+//! Determinism: a rule fires on *hit counts*, not clocks — `after` skips
+//! the first N hits, `every` fires each Mth hit after that, `count` caps
+//! total injections; the seeded mode drives the decision from a per-rule
+//! LCG advanced once per hit, so a given `(seed, hit sequence)` always
+//! yields the same schedule. Under a single-threaded driver the whole
+//! fault schedule is a pure function of the request sequence — which is
+//! what lets the chaos suite demand *bit-identical* surviving sessions.
+//!
+//! Arming is process-global (like the obs toggle): tests that arm plans
+//! must serialize on a shared lock and disarm when done.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// The named fault sites this crate plants. A [`FaultPlan`] rule may name
+/// any string, but only these are consulted anywhere.
+pub mod site {
+    /// Checkpoint staging-file write (`.ckpt.tmp` body + sync).
+    pub const CKPT_WRITE: &str = "checkpoint.write";
+    /// Checkpoint publish rename (`.tmp` → `.ckpt`).
+    pub const CKPT_RENAME: &str = "checkpoint.rename";
+    /// Checkpoint file read-back.
+    pub const CKPT_LOAD: &str = "checkpoint.load";
+    /// Server side, one hit per complete request line received.
+    pub const CONN_READ: &str = "conn.read";
+    /// Server side, one hit per reply line written.
+    pub const CONN_WRITE: &str = "conn.write";
+    /// PUSH ingestion, one hit per batch, before validation — `nan`
+    /// poisons the decoded rows so the non-finite policy is exercised.
+    pub const PUSH_ROWS: &str = "push.rows";
+    /// Inside the per-session handler, under the session lock — `panic`
+    /// here proves the quarantine path.
+    pub const SESSION_HANDLER: &str = "session.handler";
+
+    /// Every site the crate consults, for docs and validation.
+    pub const ALL: [&str; 7] =
+        [CKPT_WRITE, CKPT_RENAME, CKPT_LOAD, CONN_READ, CONN_WRITE, PUSH_ROWS, SESSION_HANDLER];
+}
+
+/// What a firing rule forces at its site. Sites ignore kinds they cannot
+/// express (e.g. `TornWrite` at a read site injects nothing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A generic `io::Error` (kind `Other`, tagged [`INJECTED_MSG`]).
+    IoError,
+    /// Write only the first `bytes` bytes, sync them, then fail — the
+    /// torn prefix stays on disk exactly as a mid-write crash leaves it.
+    TornWrite { bytes: usize },
+    /// `io::ErrorKind::ConnectionReset` — the peer vanished.
+    ConnReset,
+    /// Stall the site for `ms` milliseconds before proceeding normally.
+    SlowRead { ms: u64 },
+    /// Poison decoded f32 input with a NaN before validation.
+    PoisonNan,
+    /// Panic at the site (the session handler catches and quarantines).
+    Panic,
+}
+
+/// When a rule fires, as a function of its per-rule hit counter.
+#[derive(Clone, Copy, Debug)]
+enum When {
+    /// Skip `after` hits, then fire every `every`th hit, at most `count`
+    /// times total.
+    Nth { after: u64, every: u64, count: u64 },
+    /// Per-hit coin from a rule-local LCG: fires when the draw lands on
+    /// `0 (mod period)`, at most `count` times. Same seed + same hit
+    /// sequence ⇒ same schedule.
+    Seeded { period: u64, count: u64 },
+}
+
+/// One (site, kind, schedule) entry of a [`FaultPlan`].
+#[derive(Debug)]
+pub struct FaultRule {
+    site: String,
+    kind: FaultKind,
+    when: When,
+    /// Hits checked against this rule (1-based in the firing math).
+    hits: AtomicU64,
+    /// Times this rule actually injected.
+    fired: AtomicU64,
+    /// Seeded-mode generator state.
+    lcg: AtomicU64,
+}
+
+const LCG_MUL: u64 = 6364136223846793005;
+const LCG_INC: u64 = 1442695040888963407;
+
+impl FaultRule {
+    fn new(site: &str, kind: FaultKind, when: When, seed: u64) -> FaultRule {
+        FaultRule {
+            site: site.to_string(),
+            kind,
+            when,
+            hits: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+            lcg: AtomicU64::new(seed),
+        }
+    }
+
+    /// Count one hit and decide whether this rule injects on it.
+    fn fire(&self) -> bool {
+        let n = self.hits.fetch_add(1, Ordering::SeqCst) + 1;
+        match self.when {
+            When::Nth { after, every, count } => {
+                if n <= after {
+                    return false;
+                }
+                if (n - after - 1) % every.max(1) != 0 {
+                    return false;
+                }
+                self.take_slot(count)
+            }
+            When::Seeded { period, count } => {
+                let draw = self.lcg_step();
+                if draw % period.max(1) != 0 {
+                    return false;
+                }
+                self.take_slot(count)
+            }
+        }
+    }
+
+    /// Advance the rule's LCG by one step and return the draw (high bits,
+    /// which are the well-mixed ones for this multiplier).
+    fn lcg_step(&self) -> u64 {
+        let mut cur = self.lcg.load(Ordering::SeqCst);
+        loop {
+            let next = cur.wrapping_mul(LCG_MUL).wrapping_add(LCG_INC);
+            match self.lcg.compare_exchange(cur, next, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return next >> 33,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Claim one of the rule's `count` injection slots, atomically.
+    fn take_slot(&self, count: u64) -> bool {
+        let mut cur = self.fired.load(Ordering::SeqCst);
+        loop {
+            if cur >= count {
+                return false;
+            }
+            match self.fired.compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// An ordered set of [`FaultRule`]s. Build programmatically
+/// ([`FaultPlan::nth`] / [`FaultPlan::seeded`]) or from the CLI spec
+/// grammar ([`FaultPlan::parse`]), then [`arm`] it.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Fire `kind` at `site` once, on the first hit.
+    pub fn once(self, site: &str, kind: FaultKind) -> FaultPlan {
+        self.nth(site, kind, 0, 1, 1)
+    }
+
+    /// Fire `kind` at `site`: skip `after` hits, then every `every`th
+    /// hit, at most `count` times (`u64::MAX` ≈ unlimited).
+    pub fn nth(
+        mut self,
+        site: &str,
+        kind: FaultKind,
+        after: u64,
+        every: u64,
+        count: u64,
+    ) -> FaultPlan {
+        self.rules.push(FaultRule::new(site, kind, When::Nth { after, every, count }, 0));
+        self
+    }
+
+    /// Fire `kind` at `site` on a seeded pseudo-random ~`1/period` of
+    /// hits, at most `count` times. Deterministic per (seed, hit order).
+    pub fn seeded(
+        mut self,
+        site: &str,
+        kind: FaultKind,
+        seed: u64,
+        period: u64,
+        count: u64,
+    ) -> FaultPlan {
+        self.rules.push(FaultRule::new(site, kind, When::Seeded { period, count }, seed));
+        self
+    }
+
+    /// Parse the CLI spec grammar (`--fault-plan`):
+    ///
+    /// ```text
+    /// spec  = rule *( ";" rule )
+    /// rule  = site "=" kind [ "@" after ] [ "/" every ] [ "x" ( count / "*" ) ]
+    ///         [ "~" seed [ ":" period ] ]
+    /// kind  = "io" / "torn" [ ":" bytes ] / "reset" / "slow" [ ":" ms ]
+    ///       / "nan" / "panic"
+    /// ```
+    ///
+    /// Defaults: `after=0`, `every=1`, `count=1`, torn `bytes=16`, slow
+    /// `ms=50`; `~seed[:period]` switches the rule to seeded mode
+    /// (default `period=2`). Examples: `checkpoint.write=torn:32@2`
+    /// fires a 32-byte torn write on the third checkpoint write;
+    /// `conn.read=reset@5x2` resets the 6th and 7th request reads;
+    /// `push.rows=nan~7:50x*` poisons ~1/50 of batches from seed 7,
+    /// forever.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (site, rest) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault rule `{part}`: expected site=kind"))?;
+            let site = site.trim();
+            if site.is_empty() {
+                return Err(format!("fault rule `{part}`: empty site"));
+            }
+            let rest = rest.trim();
+            // Kind token runs to the first scheduling modifier.
+            let kind_end =
+                rest.find(['@', '/', 'x', '~']).unwrap_or(rest.len());
+            let (kind_tok, mut mods) = rest.split_at(kind_end);
+            let kind = parse_kind(kind_tok.trim())
+                .map_err(|e| format!("fault rule `{part}`: {e}"))?;
+            let (mut after, mut every, mut count) = (0u64, 1u64, 1u64);
+            let mut seeded: Option<(u64, u64)> = None;
+            while !mods.is_empty() {
+                let tag = mods.as_bytes()[0];
+                mods = &mods[1..];
+                match tag {
+                    b'@' => after = take_u64(&mut mods, part)?,
+                    b'/' => every = take_u64(&mut mods, part)?,
+                    b'x' => {
+                        if let Some(stripped) = mods.strip_prefix('*') {
+                            mods = stripped;
+                            count = u64::MAX;
+                        } else {
+                            count = take_u64(&mut mods, part)?;
+                        }
+                    }
+                    b'~' => {
+                        let seed = take_u64(&mut mods, part)?;
+                        let period = if let Some(stripped) = mods.strip_prefix(':') {
+                            mods = stripped;
+                            take_u64(&mut mods, part)?
+                        } else {
+                            2
+                        };
+                        seeded = Some((seed, period));
+                    }
+                    other => {
+                        return Err(format!(
+                            "fault rule `{part}`: unexpected `{}`",
+                            other as char
+                        ));
+                    }
+                }
+            }
+            plan = match seeded {
+                Some((seed, period)) => plan.seeded(site, kind, seed, period, count),
+                None => plan.nth(site, kind, after, every, count),
+            };
+        }
+        if plan.is_empty() {
+            return Err("fault plan spec is empty".to_string());
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_kind(tok: &str) -> Result<FaultKind, String> {
+    let (name, arg) = match tok.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (tok, None),
+    };
+    let num = |default: u64| -> Result<u64, String> {
+        match arg {
+            None => Ok(default),
+            Some(a) => a.parse::<u64>().map_err(|_| format!("bad numeric arg `{a}`")),
+        }
+    };
+    match name {
+        "io" => Ok(FaultKind::IoError),
+        "torn" => Ok(FaultKind::TornWrite { bytes: num(16)? as usize }),
+        "reset" => Ok(FaultKind::ConnReset),
+        "slow" => Ok(FaultKind::SlowRead { ms: num(50)? }),
+        "nan" => Ok(FaultKind::PoisonNan),
+        "panic" => Ok(FaultKind::Panic),
+        other => Err(format!(
+            "unknown fault kind `{other}` (expected io, torn[:bytes], reset, slow[:ms], nan, panic)"
+        )),
+    }
+}
+
+/// Consume a leading decimal u64 from `*s`, advancing it past the digits.
+fn take_u64(s: &mut &str, rule: &str) -> Result<u64, String> {
+    let digits = s.len() - s.trim_start_matches(|c: char| c.is_ascii_digit()).len();
+    if digits == 0 {
+        return Err(format!("fault rule `{rule}`: expected a number at `{s}`"));
+    }
+    let (num, rest) = s.split_at(digits);
+    *s = rest;
+    num.parse::<u64>().map_err(|_| format!("fault rule `{rule}`: number `{num}` out of range"))
+}
+
+// ---------------------------------------------------------------------------
+// Global arming — one relaxed AtomicBool, exactly like `obs::enabled`.
+// ---------------------------------------------------------------------------
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Whether a fault plan is armed (one relaxed load).
+#[inline(always)]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Install `plan` and arm every fault site. Process-global.
+pub fn arm(plan: FaultPlan) {
+    *lock(&PLAN) = Some(plan);
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm all sites and drop the plan. The disarmed [`check`] is again a
+/// single relaxed load.
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+    *lock(&PLAN) = None;
+}
+
+/// Poll a fault site. Disarmed: one relaxed load, `None`. Armed: the
+/// first rule for `site` whose schedule fires decides the injected kind;
+/// rules are consulted (and count the hit) in plan order.
+#[inline]
+pub fn check(site: &str) -> Option<FaultKind> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    check_slow(site)
+}
+
+#[cold]
+fn check_slow(site: &str) -> Option<FaultKind> {
+    let guard = lock(&PLAN);
+    let plan = guard.as_ref()?;
+    for rule in &plan.rules {
+        if rule.site == site && rule.fire() {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+            if crate::obs::enabled() {
+                crate::obs::counter("fault.injected").add(1);
+            }
+            return Some(rule.kind);
+        }
+    }
+    None
+}
+
+/// Total injections fired since process start (all sites, all plans).
+pub fn injected_total() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Message tag carried by every injected `io::Error`, so logs and tests
+/// can tell scheduled faults from real ones.
+pub const INJECTED_MSG: &str = "fault-injected";
+
+/// Build the `io::Error` for an injected fault of the given kind.
+pub fn io_error(kind: io::ErrorKind) -> io::Error {
+    io::Error::new(kind, INJECTED_MSG)
+}
+
+/// Serializer for tests that arm plans: the toggle is process-global, so
+/// in-crate tests take this lock (and disarm on exit) the same way obs
+/// tests take `obs::test_toggle_lock`.
+#[cfg(test)]
+pub fn test_plan_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    lock(&LOCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_check_is_none() {
+        let _guard = test_plan_lock();
+        disarm();
+        assert!(!armed());
+        assert_eq!(check(site::CONN_READ), None);
+    }
+
+    #[test]
+    fn nth_schedule_fires_deterministically() {
+        let _guard = test_plan_lock();
+        // Skip 2 hits, then every 3rd hit, at most 2 firings:
+        // hits 3, 6 fire; 9 would but the count cap stops it.
+        let run = || -> Vec<u64> {
+            arm(FaultPlan::new().nth(site::CONN_READ, FaultKind::ConnReset, 2, 3, 2));
+            let hits: Vec<u64> =
+                (1u64..=10).filter(|_| check(site::CONN_READ).is_some()).collect();
+            disarm();
+            hits
+        };
+        assert_eq!(run(), vec![3, 6], "hits 3 and 6 fire; 9 is stopped by count=2");
+        assert_eq!(run(), vec![3, 6], "a fresh identical plan replays exactly");
+    }
+
+    #[test]
+    fn sites_are_independent() {
+        let _guard = test_plan_lock();
+        arm(FaultPlan::new().once(site::CKPT_WRITE, FaultKind::IoError));
+        assert_eq!(check(site::CONN_READ), None, "other sites untouched");
+        assert_eq!(check(site::CKPT_WRITE), Some(FaultKind::IoError));
+        assert_eq!(check(site::CKPT_WRITE), None, "count=1 exhausted");
+        disarm();
+    }
+
+    #[test]
+    fn seeded_schedule_replays_bit_identically() {
+        let _guard = test_plan_lock();
+        let run = || -> Vec<bool> {
+            arm(FaultPlan::new().seeded(site::PUSH_ROWS, FaultKind::PoisonNan, 7, 4, u64::MAX));
+            let fires: Vec<bool> =
+                (0..64).map(|_| check(site::PUSH_ROWS).is_some()).collect();
+            disarm();
+            fires
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed + same hit order must replay exactly");
+        assert!(a.iter().any(|&f| f), "1/4 period over 64 hits should fire");
+        assert!(a.iter().any(|&f| !f), "and should not fire every time");
+    }
+
+    #[test]
+    fn spec_grammar_roundtrips() {
+        let plan = FaultPlan::parse(
+            "checkpoint.write=torn:32@2; conn.read=reset@5x2; push.rows=nan~7:50x*; \
+             session.handler=panic; conn.write=slow:5/10x3",
+        )
+        .expect("spec must parse");
+        assert_eq!(plan.rules.len(), 5);
+        assert_eq!(plan.rules[0].kind, FaultKind::TornWrite { bytes: 32 });
+        assert!(matches!(plan.rules[0].when, When::Nth { after: 2, every: 1, count: 1 }));
+        assert_eq!(plan.rules[1].kind, FaultKind::ConnReset);
+        assert!(matches!(plan.rules[1].when, When::Nth { after: 5, every: 1, count: 2 }));
+        assert_eq!(plan.rules[2].kind, FaultKind::PoisonNan);
+        assert!(
+            matches!(plan.rules[2].when, When::Seeded { period: 50, count: u64::MAX })
+        );
+        assert_eq!(plan.rules[3].kind, FaultKind::Panic);
+        assert_eq!(plan.rules[4].kind, FaultKind::SlowRead { ms: 5 });
+        assert!(matches!(plan.rules[4].when, When::Nth { after: 0, every: 10, count: 3 }));
+
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("siteonly").is_err());
+        assert!(FaultPlan::parse("a=warp").is_err());
+        assert!(FaultPlan::parse("a=io@x").is_err());
+    }
+}

@@ -50,6 +50,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod experiments;
+pub mod fault;
 pub mod functions;
 pub mod kernels;
 pub mod metrics;

@@ -271,7 +271,7 @@ USAGE:
                         [--idle-timeout SECS] [--checkpoint-dir DIR]
                         [--checkpoint-secs S] [--threads off|auto|N] [--max-seconds S]
                         [--trace-out PATH] [--events-out PATH]
-                        [--kernel-backend scalar|simd|auto]
+                        [--kernel-backend scalar|simd|auto] [--fault-plan SPEC]
   threesieves serve     --local --dataset <name> --n <N> --k <K>
                         [--drift-window W] [--drift-threshold X] [--checkpoint PATH]
                         [--batch-size B] [--threads off|auto|N] [--trace-out PATH]
@@ -301,6 +301,14 @@ the typed decision-event log (accept/reject/defer verdicts, threshold
 moves, sieve births/deaths, drift resets, checkpoint traffic) and writes
 it as NDJSON — see docs/observability.md. Selection output is identical
 with either recording on or off.
+
+--fault-plan arms the deterministic fault-injection harness for chaos
+drills (CLI wins over a config-file \"fault_spec\"): semicolon-separated
+rules of the form site=kind[@after][/every][xCOUNT|x*][~seed[:period]],
+sites checkpoint.write|checkpoint.rename|checkpoint.load|conn.read|
+conn.write|push.rows|session.handler, kinds io|torn[:bytes]|reset|
+slow[:ms]|nan|panic — see docs/robustness.md. Disarmed (the default)
+the harness costs one relaxed atomic load per site.
 
 The network service speaks a newline-delimited protocol (OPEN/PUSH/SUMMARY/
 STATS/CLOSE/METRICS) — see docs/protocol.md, or try:
@@ -378,6 +386,7 @@ const SERVE_FLAGS: &[FlagDef] = &[
     val("checkpoint-dir"),
     val("checkpoint-secs"),
     val("max-seconds"),
+    val("fault-plan"),
     // Single-stream demo mode.
     switch("local"),
     val("dataset"),
@@ -686,7 +695,18 @@ fn cmd_serve_network(args: &cli::Args, listen: &str) -> Result<(), String> {
             None => base.parallelism,
         },
         kernel_backend: kernel_backend_flag(args)?.or(base.kernel_backend),
+        fault_spec: args.get("fault-plan").map(str::to_string).or(base.fault_spec),
     };
+    // Chaos drills: arm the deterministic fault schedule before the
+    // listener starts so the very first connection is already under it.
+    // Without a plan the harness stays disarmed — one relaxed load per
+    // site on the hot path (see docs/robustness.md).
+    if let Some(spec) = cfg.fault_spec.as_deref() {
+        let plan = threesieves::fault::FaultPlan::parse(spec)
+            .map_err(|e| format!("--fault-plan {spec:?}: {e}"))?;
+        threesieves::fault::arm(plan);
+        eprintln!("fault injection ARMED: {spec}");
+    }
     // Flag > config file > TS_KERNEL_BACKEND > auto-detect; selected once
     // before the server starts so every session solves on one table.
     let backend = threesieves::simd::select(

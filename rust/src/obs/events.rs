@@ -58,10 +58,17 @@ pub enum Event {
     CheckpointSave { elements: u64 },
     /// A checkpoint was loaded back.
     CheckpointRestore { elements: u64 },
+    /// A faulted session (poisoned lock or handler panic) was fenced
+    /// off — subsequent verbs on it draw `ERR quarantined` while every
+    /// other tenant keeps running (PR 10, `docs/robustness.md`).
+    SessionQuarantine { elements: u64 },
+    /// A corrupt/truncated checkpoint was moved to `.corrupt`
+    /// quarantine so a fresh `OPEN` can proceed under the same id.
+    CheckpointQuarantine,
 }
 
 /// Number of event kinds in the schema (the `Event` variant count).
-pub const KINDS: usize = 10;
+pub const KINDS: usize = 12;
 
 /// Stable schema names in kind order — the NDJSON `type` values, the
 /// Perfetto instant-event suffixes, and the `WATCH` frame cell order.
@@ -76,6 +83,8 @@ pub const KIND_NAMES: [&str; KINDS] = [
     "drift_reset",
     "checkpoint_save",
     "checkpoint_restore",
+    "session_quarantine",
+    "checkpoint_quarantine",
 ];
 
 impl Event {
@@ -91,6 +100,8 @@ impl Event {
             Event::DriftReset { .. } => 7,
             Event::CheckpointSave { .. } => 8,
             Event::CheckpointRestore { .. } => 9,
+            Event::SessionQuarantine { .. } => 10,
+            Event::CheckpointQuarantine => 11,
         }
     }
 
@@ -126,7 +137,9 @@ impl Event {
             }
             Event::DriftReset { elements }
             | Event::CheckpointSave { elements }
-            | Event::CheckpointRestore { elements } => vec![("elements", u(elements))],
+            | Event::CheckpointRestore { elements }
+            | Event::SessionQuarantine { elements } => vec![("elements", u(elements))],
+            Event::CheckpointQuarantine => vec![],
         }
     }
 }
@@ -154,6 +167,8 @@ pub struct EventTotals {
     pub drift_resets: u64,
     pub checkpoint_saves: u64,
     pub checkpoint_restores: u64,
+    pub session_quarantines: u64,
+    pub checkpoint_quarantines: u64,
 }
 
 impl EventTotals {
@@ -175,6 +190,8 @@ impl EventTotals {
             self.drift_resets,
             self.checkpoint_saves,
             self.checkpoint_restores,
+            self.session_quarantines,
+            self.checkpoint_quarantines,
         ]
     }
 
@@ -192,6 +209,8 @@ impl EventTotals {
             drift_resets: a[7],
             checkpoint_saves: a[8],
             checkpoint_restores: a[9],
+            session_quarantines: a[10],
+            checkpoint_quarantines: a[11],
         }
     }
 
@@ -271,6 +290,8 @@ pub fn totals() -> EventTotals {
         drift_resets: t[7],
         checkpoint_saves: t[8],
         checkpoint_restores: t[9],
+        session_quarantines: t[10],
+        checkpoint_quarantines: t[11],
     }
 }
 
@@ -361,5 +382,7 @@ mod tests {
         assert_eq!(named.len(), KINDS);
         assert_eq!(named[0].0, "accept");
         assert_eq!(named[9].0, "checkpoint_restore");
+        assert_eq!(named[10].0, "session_quarantine");
+        assert_eq!(named[11].0, "checkpoint_quarantine");
     }
 }

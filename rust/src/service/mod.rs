@@ -27,5 +27,5 @@ pub use protocol::{
     ErrorCode, MetricsSnapshot, PushBody, PushReply, Request, Response, SessionSpec, StatsReply,
     SummaryReply, WatchFrame, WatchMode,
 };
-pub use server::{Client, ClientError, Server, ServerHandle};
+pub use server::{Client, ClientError, RetryPolicy, Server, ServerHandle};
 pub use sessions::{ServiceError, SessionManager};

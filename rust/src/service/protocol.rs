@@ -50,6 +50,12 @@ pub enum ErrorCode {
     DimMismatch,
     /// Row payload failed to decode (CSV/base64).
     BadRow,
+    /// Row payload decoded but carries a non-finite f32 (NaN/±Inf); the
+    /// whole batch is rejected before it reaches the oracle (PR 10).
+    NonFinite,
+    /// The session was fenced off after a fault (poisoned lock or
+    /// handler panic); only `CLOSE <id> discard` is accepted (PR 10).
+    Quarantined,
     /// Filesystem/network failure on the server side.
     Io,
     /// Server-side invariant failure.
@@ -67,6 +73,8 @@ impl ErrorCode {
             ErrorCode::Capacity => "capacity",
             ErrorCode::DimMismatch => "dim-mismatch",
             ErrorCode::BadRow => "bad-row",
+            ErrorCode::NonFinite => "nonfinite",
+            ErrorCode::Quarantined => "quarantined",
             ErrorCode::Io => "io",
             ErrorCode::Internal => "internal",
         }
@@ -82,6 +90,8 @@ impl ErrorCode {
             "capacity" => ErrorCode::Capacity,
             "dim-mismatch" => ErrorCode::DimMismatch,
             "bad-row" => ErrorCode::BadRow,
+            "nonfinite" => ErrorCode::NonFinite,
+            "quarantined" => ErrorCode::Quarantined,
             "io" => ErrorCode::Io,
             _ => ErrorCode::Internal,
         }
@@ -210,6 +220,9 @@ pub struct StatsReply {
     /// can log which backend produced a run. Absent in pre-SIMD replies;
     /// the parser defaults to `"scalar"`, which is what those servers ran.
     pub backend: String,
+    /// Rows this session has rejected under the non-finite input policy
+    /// (`ERR nonfinite`). Absent in pre-PR-10 replies; defaults to 0.
+    pub rejected_rows: u64,
 }
 
 /// `METRICS` payload: the service-wide snapshot. `items`/`queries`/`stored`
@@ -253,6 +266,15 @@ pub struct MetricsSnapshot {
     pub evictions: u64,
     pub closes: u64,
     pub checkpoints: u64,
+    /// Lifetime rows rejected by the non-finite input policy across all
+    /// sessions (`ERR nonfinite`). Absent pre-PR-10; defaults to 0.
+    pub rejected_rows: u64,
+    /// Lifetime sessions fenced off after a fault (poisoned lock or
+    /// handler panic). Absent pre-PR-10; defaults to 0.
+    pub quarantines: u64,
+    /// Lifetime corrupt checkpoints moved to `.corrupt` (startup
+    /// recovery sweep + resume path). Absent pre-PR-10; defaults to 0.
+    pub ckpt_quarantines: u64,
     pub uptime_s: f64,
     pub items_per_s: f64,
 }
@@ -335,8 +357,11 @@ impl WatchFrame {
             Some(v) => {
                 let mut cells = [0u64; crate::obs::events::KINDS];
                 let parts: Vec<&str> = v.split(':').collect();
-                if parts.len() != cells.len() {
-                    return Err(format!("frame events: {} cells, expected {}", parts.len(),
+                // Lenient on *older* frames (fewer kinds existed — the
+                // missing tail defaults to 0, like the six-cell hist
+                // form); reject frames from a *newer* schema outright.
+                if parts.is_empty() || parts.len() > cells.len() {
+                    return Err(format!("frame events: {} cells, expected <= {}", parts.len(),
                         cells.len()));
                 }
                 for (slot, part) in cells.iter_mut().zip(&parts) {
@@ -728,7 +753,7 @@ impl Response {
                 "OK STATS id={id} elements={} queries={} kernel_evals={} stored={} peak={} \
                  instances={} len={} value={} drift={} wall_kernel_ns={} wall_solve_ns={} \
                  wall_scan_ns={} accepts={} rejects={} defers={} threshold_moves={} \
-                 backend={}",
+                 backend={} rejected_rows={}",
                 reply.stats.elements,
                 reply.stats.queries,
                 reply.stats.kernel_evals,
@@ -745,7 +770,8 @@ impl Response {
                 reply.stats.rejects,
                 reply.stats.defers,
                 reply.stats.threshold_moves,
-                reply.backend
+                reply.backend,
+                reply.rejected_rows
             ),
             Response::Closed { id, checkpointed } => {
                 format!("OK CLOSE id={id} checkpointed={}", u8::from(*checkpointed))
@@ -754,7 +780,8 @@ impl Response {
                 "OK METRICS sessions={} stored={} items={} queries={} kernel_evals={} opens={} \
                  resumes={} pushes={} items_total={} evictions={} closes={} checkpoints={} \
                  uptime_s={} items_per_s={} wall_kernel_ns={} wall_solve_ns={} wall_scan_ns={} \
-                 accepts={} rejects={} defers={} threshold_moves={} backend={}",
+                 accepts={} rejects={} defers={} threshold_moves={} backend={} \
+                 rejected_rows={} quarantines={} ckpt_quarantines={}",
                 m.sessions,
                 m.stored,
                 m.items,
@@ -776,7 +803,10 @@ impl Response {
                 m.rejects,
                 m.defers,
                 m.threshold_moves,
-                m.backend
+                m.backend,
+                m.rejected_rows,
+                m.quarantines,
+                m.ckpt_quarantines
             ),
             Response::MetricsHistData(hists) => {
                 let mut s = format!("OK METRICS HIST n={}", hists.len());
@@ -888,6 +918,8 @@ impl Response {
                     // Absent in pre-SIMD server replies, which ran the
                     // scalar kernels unconditionally.
                     backend: field("backend").unwrap_or("scalar").to_string(),
+                    // Absent in pre-PR-10 replies; same lenient default.
+                    rejected_rows: num("rejected_rows").unwrap_or(0.0) as u64,
                 },
             }),
             "CLOSE" => Ok(Response::Closed {
@@ -936,6 +968,10 @@ impl Response {
                     evictions: num("evictions")? as u64,
                     closes: num("closes")? as u64,
                     checkpoints: num("checkpoints")? as u64,
+                    // Absent in pre-PR-10 replies; lenient like the rest.
+                    rejected_rows: num("rejected_rows").unwrap_or(0.0) as u64,
+                    quarantines: num("quarantines").unwrap_or(0.0) as u64,
+                    ckpt_quarantines: num("ckpt_quarantines").unwrap_or(0.0) as u64,
                     uptime_s: num("uptime_s")?,
                     items_per_s: num("items_per_s")?,
                 }))
@@ -1261,6 +1297,7 @@ mod tests {
                     len: 7,
                     drift_events: 0,
                     backend: "avx2".into(),
+                    rejected_rows: 5,
                 },
             },
             Response::Closed { id: "t".into(), checkpointed: true },
@@ -1285,6 +1322,9 @@ mod tests {
                 evictions: 1,
                 closes: 1,
                 checkpoints: 2,
+                rejected_rows: 11,
+                quarantines: 1,
+                ckpt_quarantines: 2,
                 uptime_s: 1.5,
                 items_per_s: 800.0,
             }),
@@ -1350,6 +1390,7 @@ mod tests {
                 len: 2,
                 drift_events: 0,
                 backend: "scalar".into(),
+                rejected_rows: 0,
             },
         };
         match Response::parse(&resp.to_line()).unwrap() {
@@ -1377,6 +1418,7 @@ mod tests {
                 assert_eq!(reply.stats.defers, 0);
                 assert_eq!(reply.stats.threshold_moves, 0);
                 assert_eq!(reply.backend, "scalar", "pre-SIMD replies default to scalar");
+                assert_eq!(reply.rejected_rows, 0, "pre-PR-10 replies default to 0");
             }
             other => panic!("{other:?}"),
         }
@@ -1434,6 +1476,8 @@ mod tests {
                 drift_resets: 2,
                 checkpoint_saves: 5,
                 checkpoint_restores: 1,
+                session_quarantines: 1,
+                checkpoint_quarantines: 2,
             }),
             hists: Some(vec![HistSnapshot {
                 name: "service.request_ns".into(),
@@ -1454,7 +1498,22 @@ mod tests {
         assert_eq!(WatchFrame::parse(&hist_only.to_line()).unwrap(), hist_only);
         assert!(WatchFrame::parse("OK WATCH").is_err());
         assert!(WatchFrame::parse("FRAME seq=1").is_err(), "missing dropped=");
-        assert!(WatchFrame::parse("FRAME seq=1 dropped=0 events=1:2:3").is_err(), "short cells");
+        // A frame from an older peer (fewer event kinds) parses with the
+        // missing tail defaulting to 0 — same policy as 6-cell hists.
+        let legacy = WatchFrame::parse("FRAME seq=1 dropped=0 events=1:2:3:4:5:6:7:8:9:10")
+            .expect("pre-PR-10 ten-cell frames must still parse");
+        let ev = legacy.events.expect("events present");
+        assert_eq!(ev.accepts, 1);
+        assert_eq!(ev.checkpoint_restores, 10);
+        assert_eq!(ev.session_quarantines, 0, "missing tail defaults to 0");
+        assert_eq!(ev.checkpoint_quarantines, 0);
+        // A frame from a *newer* schema (more cells than we know) is an error.
+        assert!(
+            WatchFrame::parse("FRAME seq=1 dropped=0 events=1:2:3:4:5:6:7:8:9:10:11:12:13")
+                .is_err(),
+            "over-long cell lists must be rejected"
+        );
+        assert!(WatchFrame::parse("FRAME seq=1 dropped=0 events=1:x:3").is_err(), "bad cell");
     }
 
     #[test]

@@ -228,6 +228,14 @@ fn read_line_bounded(
 }
 
 fn write_reply(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    // Reply-side fault: the request was already dispatched, so a reset
+    // here models the worst reconnect case — applied but unacknowledged.
+    if matches!(
+        crate::fault::check(crate::fault::site::CONN_WRITE),
+        Some(crate::fault::FaultKind::ConnReset | crate::fault::FaultKind::IoError)
+    ) {
+        return Err(crate::fault::io_error(std::io::ErrorKind::BrokenPipe));
+    }
     let mut line = resp.to_line();
     line.push('\n');
     stream.write_all(line.as_bytes())
@@ -332,6 +340,19 @@ fn serve_conn(
         if line.is_empty() {
             continue;
         }
+        // Read-side fault, checked once per complete request line (never
+        // per poll tick, so a seeded schedule counts requests, not time).
+        // A reset fires BEFORE dispatch: the request is dropped whole and
+        // a client retry cannot double-apply it.
+        match crate::fault::check(crate::fault::site::CONN_READ) {
+            Some(crate::fault::FaultKind::SlowRead { ms }) => {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Some(crate::fault::FaultKind::ConnReset | crate::fault::FaultKind::IoError) => {
+                return Err(crate::fault::io_error(std::io::ErrorKind::ConnectionReset));
+            }
+            _ => {}
+        }
         let resp = match Request::parse(line) {
             Ok(Request::Watch { interval_ms, mode }) => {
                 // A second WATCH retunes the subscription in place.
@@ -390,37 +411,188 @@ impl From<std::io::Error> for ClientError {
     }
 }
 
+/// Deterministic client-side retry schedule: capped exponential backoff
+/// with NO jitter (two runs of the same fault plan retry at the same
+/// instants), bounded both by attempt count and a per-operation deadline.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Additional attempts after the first (0 = fail fast).
+    pub max_retries: u32,
+    /// Delay before the first retry; doubles each attempt.
+    pub base_delay: Duration,
+    /// Ceiling the exponential curve saturates at.
+    pub max_delay: Duration,
+    /// Wall-clock budget for one operation across all its attempts; also
+    /// installed as the socket read timeout so a wedged server cannot
+    /// stall an operation past it.
+    pub op_deadline: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 4,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(500),
+            op_deadline: Duration::from_secs(10),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (0-based):
+    /// `min(base · 2^attempt, max)`.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        self.base_delay.saturating_mul(1u32 << attempt.min(16)).min(self.max_delay)
+    }
+}
+
+const CONN_CLOSED: &str = "connection closed by server";
+
+/// The session id a request addresses, when resuming it could help.
+fn resumable_id(req: &Request) -> Option<&str> {
+    match req {
+        Request::Push { id, .. } | Request::Summary { id } | Request::Stats { id } => Some(id),
+        _ => None,
+    }
+}
+
 /// Blocking line-protocol client — one TCP connection, synchronous
 /// request/response. Used by the integration suite, the throughput bench
 /// and the CI smoke job; doubles as the reference protocol implementation
 /// for external clients.
+///
+/// With [`Client::with_retry`] the client survives connection loss and
+/// server restarts: transport errors reconnect and re-send on the
+/// deterministic [`RetryPolicy`] schedule, and an `ERR no-session` for a
+/// session this client opened triggers one re-`OPEN` with the remembered
+/// spec — the server restores the checkpoint bit-identically, so the
+/// stream continues as if the fault never happened. Retries are
+/// at-least-once: a reply lost *after* dispatch (reply-side reset) is
+/// re-sent, which re-applies a non-idempotent `PUSH` — pair retries with
+/// deduplication upstream if that matters, or accept the paper's
+/// streaming semantics where re-processing a batch is detectable by the
+/// element counters.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Peer address, remembered for reconnects.
+    addr: Option<SocketAddr>,
+    retry: Option<RetryPolicy>,
+    /// Specs of sessions this client opened, for resume-on-reconnect.
+    specs: std::collections::HashMap<String, SessionSpec>,
 }
 
 impl Client {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
+        let addr = stream.peer_addr().ok();
         let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer,
+            addr,
+            retry: None,
+            specs: std::collections::HashMap::new(),
+        })
+    }
+
+    /// Enable retries. Installs `op_deadline` as the socket read timeout.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Client {
+        let _ = self.reader.get_ref().set_read_timeout(Some(policy.op_deadline));
+        self.retry = Some(policy);
+        self
+    }
+
+    /// Drop the current stream and dial the remembered address again.
+    fn reconnect(&mut self) -> std::io::Result<()> {
+        let addr = self.addr.ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::NotConnected, "peer address unknown")
+        })?;
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        if let Some(policy) = &self.retry {
+            let _ = stream.set_read_timeout(Some(policy.op_deadline));
+        }
+        self.writer = stream.try_clone()?;
+        self.reader = BufReader::new(stream);
+        Ok(())
     }
 
     /// Send one request and read its reply. `ERR` replies come back as
     /// `Ok(Response::Error { .. })`; use the typed helpers to get them as
-    /// [`ClientError::Server`].
+    /// [`ClientError::Server`]. With a [`RetryPolicy`] set, transport
+    /// failures reconnect and re-send within the policy's budget.
     pub fn request(&mut self, req: &Request) -> Result<Response, ClientError> {
+        match self.retry.clone() {
+            None => self.request_once(req),
+            Some(policy) => self.request_with_retry(req, &policy),
+        }
+    }
+
+    fn request_once(&mut self, req: &Request) -> Result<Response, ClientError> {
         let mut line = req.to_line();
         line.push('\n');
         self.writer.write_all(line.as_bytes())?;
         let mut buf = Vec::new();
         self.reader.read_until(b'\n', &mut buf)?;
         if buf.is_empty() {
-            return Err(ClientError::Protocol("connection closed by server".into()));
+            return Err(ClientError::Protocol(CONN_CLOSED.into()));
         }
         let text = String::from_utf8_lossy(&buf);
         Response::parse(text.trim_end_matches(['\r', '\n'])).map_err(ClientError::Protocol)
+    }
+
+    fn request_with_retry(
+        &mut self,
+        req: &Request,
+        policy: &RetryPolicy,
+    ) -> Result<Response, ClientError> {
+        let start = Instant::now();
+        let mut attempt = 0u32;
+        // One resume per operation: a second no-session after a successful
+        // re-OPEN means the server truly lost the state — surface it.
+        let mut resumed = false;
+        loop {
+            let err = match self.request_once(req) {
+                Ok(Response::Error { code: ErrorCode::NoSession, message })
+                    if !resumed
+                        && resumable_id(req).is_some_and(|id| self.specs.contains_key(id)) =>
+                {
+                    // The server restarted (connection loss closed nothing:
+                    // sessions only vanish with their process). Re-OPEN with
+                    // the remembered spec: restore from checkpoint is
+                    // bit-identical, so the stream just continues.
+                    resumed = true;
+                    let id = resumable_id(req).unwrap().to_string();
+                    let spec = self.specs[&id].clone();
+                    match self.request_once(&Request::Open { id, spec }) {
+                        Ok(Response::Opened { .. }) => continue,
+                        Ok(_) | Err(_) => {
+                            return Ok(Response::Error { code: ErrorCode::NoSession, message })
+                        }
+                    }
+                }
+                Ok(resp) => return Ok(resp),
+                // Transport loss (including our own clean-close sentinel)
+                // is the retryable class; a reply that *parsed* wrong is
+                // not — re-sending into a desynced stream compounds it.
+                Err(ClientError::Io(e)) => ClientError::Io(e),
+                Err(ClientError::Protocol(msg)) if msg == CONN_CLOSED => {
+                    ClientError::Protocol(msg)
+                }
+                Err(other) => return Err(other),
+            };
+            if attempt >= policy.max_retries || start.elapsed() >= policy.op_deadline {
+                return Err(err);
+            }
+            std::thread::sleep(policy.delay(attempt));
+            attempt += 1;
+            // A failed reconnect is not fatal here: the next request_once
+            // fails fast on the dead stream and burns one more attempt.
+            let _ = self.reconnect();
+        }
     }
 
     fn expect<T>(
@@ -435,12 +607,17 @@ impl Client {
         }
     }
 
-    /// `OPEN`; returns whether the session resumed from a checkpoint.
+    /// `OPEN`; returns whether the session resumed from a checkpoint. The
+    /// spec is remembered so a retrying client can re-`OPEN` (resume) the
+    /// session after a server restart.
     pub fn open(&mut self, id: &str, spec: &SessionSpec) -> Result<bool, ClientError> {
-        self.expect(&Request::Open { id: id.into(), spec: spec.clone() }, |r| match r {
-            Response::Opened { resumed, .. } => Ok(resumed),
-            other => Err(other),
-        })
+        let resumed =
+            self.expect(&Request::Open { id: id.into(), spec: spec.clone() }, |r| match r {
+                Response::Opened { resumed, .. } => Ok(resumed),
+                other => Err(other),
+            })?;
+        self.specs.insert(id.to_string(), spec.clone());
+        Ok(resumed)
     }
 
     /// `PUSH` in CSV form: `rows` is flat row-major `count × dim`.
@@ -480,12 +657,16 @@ impl Client {
         })
     }
 
-    /// `CLOSE`; returns whether a checkpoint was written.
+    /// `CLOSE`; returns whether a checkpoint was written. Forgets the
+    /// remembered spec — a closed session must not be auto-resurrected.
     pub fn close(&mut self, id: &str, discard: bool) -> Result<bool, ClientError> {
-        self.expect(&Request::Close { id: id.into(), discard }, |r| match r {
-            Response::Closed { checkpointed, .. } => Ok(checkpointed),
-            other => Err(other),
-        })
+        let checkpointed =
+            self.expect(&Request::Close { id: id.into(), discard }, |r| match r {
+                Response::Closed { checkpointed, .. } => Ok(checkpointed),
+                other => Err(other),
+            })?;
+        self.specs.remove(id);
+        Ok(checkpointed)
     }
 
     pub fn metrics(&mut self) -> Result<MetricsSnapshot, ClientError> {
@@ -688,6 +869,88 @@ mod tests {
         assert!(req.min > 0 && req.min <= req.max);
         handle.shutdown();
         crate::obs::set_enabled(false);
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_capped() {
+        let p = RetryPolicy {
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(80),
+            ..RetryPolicy::default()
+        };
+        let delays: Vec<u64> = (0..6).map(|a| p.delay(a).as_millis() as u64).collect();
+        assert_eq!(delays, vec![10, 20, 40, 80, 80, 80]);
+        // No overflow far past the cap's exponent.
+        assert_eq!(p.delay(40), Duration::from_millis(80));
+    }
+
+    #[test]
+    fn retrying_client_survives_injected_connection_reset() {
+        let _serial = crate::fault::test_plan_lock();
+        let handle = Server::start(test_cfg(Parallelism::Off), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap().with_retry(RetryPolicy {
+            base_delay: Duration::from_millis(1),
+            ..RetryPolicy::default()
+        });
+        let spec = SessionSpec::three_sieves(4, 3, 0.05, 20);
+        client.open("r1", &spec).unwrap();
+        let rows: Vec<f32> = (0..48).map(|i| (i as f32 * 0.13).cos()).collect();
+        // The reset fires BEFORE dispatch, so the dropped request was
+        // never applied — the retry is exact, not a double-apply.
+        let plan = crate::fault::FaultPlan::new()
+            .once(crate::fault::site::CONN_READ, crate::fault::FaultKind::ConnReset);
+        crate::fault::arm(plan);
+        let reply = client.push_rows("r1", &rows, 4).unwrap();
+        crate::fault::disarm();
+        assert_eq!(reply.rows, 12);
+        assert_eq!(client.metrics().unwrap().pushes, 1, "exactly one PUSH dispatched");
+        client.close("r1", true).unwrap();
+        handle.shutdown();
+    }
+
+    #[test]
+    fn retrying_client_resumes_evicted_session_via_reopen() {
+        let dir = std::env::temp_dir().join(format!("ts_retry_resume_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = ServiceConfig {
+            idle_timeout: Duration::from_millis(5),
+            checkpoint_dir: Some(dir.clone()),
+            parallelism: Parallelism::Off,
+            ..ServiceConfig::default()
+        };
+        let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+        let mut client =
+            Client::connect(handle.addr()).unwrap().with_retry(RetryPolicy::default());
+        let spec = SessionSpec::three_sieves(3, 4, 0.05, 30);
+        client.open("ev", &spec).unwrap();
+        let rows: Vec<f32> = (0..300).map(|i| (i as f32 * 0.071).sin()).collect();
+        client.push_rows("ev", &rows[..150], 3).unwrap();
+        // Wait past the idle timeout so the accept loop's sweep evicts
+        // (checkpointing) the session out from under this client.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while handle.manager().session_count() > 0 {
+            assert!(std::time::Instant::now() < deadline, "eviction sweep never fired");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // The next push hits ERR no-session; the retry layer re-OPENs with
+        // the remembered spec and the checkpoint resume continues the
+        // stream bit-identically.
+        client.push_rows("ev", &rows[150..], 3).unwrap();
+        let got = client.summary("ev").unwrap();
+        let mut solo = crate::experiments::build_algo(
+            &spec.algo,
+            3,
+            spec.k,
+            crate::experiments::GammaMode::Streaming,
+            None,
+        );
+        solo.process_batch(&rows[..150]);
+        solo.process_batch(&rows[150..]);
+        assert_eq!(got.value.to_bits(), solo.value().to_bits());
+        assert_eq!(got.data, solo.summary());
+        client.close("ev", true).unwrap();
+        handle.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -38,7 +38,7 @@ use std::time::Instant;
 
 use crate::algorithms::StreamingAlgorithm;
 use crate::config::ServiceConfig;
-use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::checkpoint::{self, Checkpoint, CheckpointError};
 use crate::coordinator::drift::{DriftDetector, MeanShiftDetector, NoDrift};
 use crate::experiments::runner::make_oracle;
 use crate::experiments::{build_algo, GammaMode};
@@ -57,6 +57,12 @@ pub enum ServiceError {
     SessionLimit { max: usize },
     Capacity { reserved: usize, requested: usize, max: usize },
     DimMismatch { expected: usize, got: usize },
+    /// A pushed batch carries a non-finite f32 (NaN/±Inf) at the named
+    /// position; the whole batch was rejected before touching the oracle.
+    NonFinite { row: usize, col: usize },
+    /// The session is fenced off after a fault (poisoned lock or handler
+    /// panic); only `CLOSE <id> discard` releases it.
+    Quarantined(String),
     Invalid(String),
     Io(String),
 }
@@ -69,6 +75,8 @@ impl ServiceError {
             ServiceError::SessionLimit { .. } => ErrorCode::SessionLimit,
             ServiceError::Capacity { .. } => ErrorCode::Capacity,
             ServiceError::DimMismatch { .. } => ErrorCode::DimMismatch,
+            ServiceError::NonFinite { .. } => ErrorCode::NonFinite,
+            ServiceError::Quarantined(_) => ErrorCode::Quarantined,
             ServiceError::Invalid(_) => ErrorCode::BadRequest,
             ServiceError::Io(_) => ErrorCode::Io,
         }
@@ -91,6 +99,14 @@ impl std::fmt::Display for ServiceError {
             ServiceError::DimMismatch { expected, got } => {
                 write!(f, "row has {got} features, session dim is {expected}")
             }
+            ServiceError::NonFinite { row, col } => write!(
+                f,
+                "non-finite value at row {row} column {col}; batch rejected"
+            ),
+            ServiceError::Quarantined(id) => write!(
+                f,
+                "session {id:?} is quarantined after a fault; CLOSE {id} discard releases it"
+            ),
             ServiceError::Invalid(msg) => write!(f, "{msg}"),
             ServiceError::Io(msg) => write!(f, "{msg}"),
         }
@@ -108,6 +124,10 @@ struct Session {
     /// Drift events recorded before the last resume (the detector itself
     /// restarts cold — its window is deliberately not persisted).
     drift_base: usize,
+    /// Rows this session refused under the non-finite input policy.
+    /// Deliberately not persisted: like the drift window, it describes
+    /// what this *incarnation* saw, not the summary state.
+    rejected_rows: u64,
 }
 
 impl Session {
@@ -202,19 +222,17 @@ struct SessionCell {
     /// so no push is ever acknowledged without being covered by the
     /// closing checkpoint.
     closing: std::sync::atomic::AtomicBool,
+    /// Set when a fault (handler panic, poisoned lock) fenced this tenant
+    /// off. Quarantined sessions answer `ERR quarantined` to every verb
+    /// except `CLOSE <id> discard`, hold their admission reservation, and
+    /// are skipped by eviction/checkpoint sweeps — their in-memory state
+    /// is suspect and must never be persisted over a good checkpoint.
+    quarantined: std::sync::atomic::AtomicBool,
     session: Mutex<Session>,
 }
 
 unsafe impl Send for SessionCell {}
 unsafe impl Sync for SessionCell {}
-
-impl SessionCell {
-    /// Lock the session, riding through poisoning: a panicking handler is
-    /// caught at the pool boundary and must not wedge the tenant forever.
-    fn lock(&self) -> MutexGuard<'_, Session> {
-        self.session.lock().unwrap_or_else(PoisonError::into_inner)
-    }
-}
 
 #[derive(Default)]
 struct Counters {
@@ -226,6 +244,13 @@ struct Counters {
     closes: AtomicU64,
     checkpoints: AtomicU64,
     checkpoint_failures: AtomicU64,
+    /// Rows refused under the non-finite input policy (lifetime).
+    rejected_rows: AtomicU64,
+    /// Sessions fenced off after a fault (lifetime).
+    quarantines: AtomicU64,
+    /// Corrupt checkpoint files moved aside to `.corrupt` (lifetime),
+    /// whether found by the startup sweep or by a resume attempt.
+    ckpt_quarantines: AtomicU64,
 }
 
 /// Construct a session's algorithm, enforcing the service's two
@@ -265,11 +290,29 @@ pub struct SessionManager {
 
 impl SessionManager {
     pub fn new(cfg: ServiceConfig) -> Self {
+        let counters = Counters::default();
+        // Startup recovery sweep: a crash mid-save can leave stale `.tmp`
+        // staging files and (pre-v2 torn writes aside) corrupt `.ckpt`s.
+        // Clean both BEFORE the first OPEN so every resume decision sees
+        // only loadable checkpoints or quarantined `.corrupt` siblings.
+        if let Some(dir) = &cfg.checkpoint_dir {
+            let report = checkpoint::sweep_dir(dir);
+            if report.quarantined > 0 || report.stale_tmp > 0 {
+                eprintln!(
+                    "checkpoint recovery in {}: {} good, {} quarantined, {} stale tmp removed",
+                    dir.display(),
+                    report.good,
+                    report.quarantined,
+                    report.stale_tmp
+                );
+            }
+            counters.ckpt_quarantines.fetch_add(report.quarantined as u64, Ordering::Relaxed);
+        }
         SessionManager {
             cfg,
             started: Instant::now(),
             sessions: Mutex::new(HashMap::new()),
-            counters: Counters::default(),
+            counters,
         }
     }
 
@@ -282,7 +325,48 @@ impl SessionManager {
     }
 
     fn map(&self) -> MutexGuard<'_, HashMap<String, Arc<SessionCell>>> {
+        // The map mutex is only ever held for pointer-sized bookkeeping —
+        // no user code runs under it, so poisoning here means a bug in
+        // this module, not a tenant fault. Riding through is safe because
+        // every critical section leaves the map structurally valid.
         self.sessions.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Fence one tenant off after a fault. Idempotent: only the first
+    /// marking bumps the counter and emits the observability event, so a
+    /// storm of requests against a broken session is counted once.
+    #[cold]
+    fn quarantine_cell(&self, id: &str, cell: &SessionCell, elements: u64) {
+        if !cell.quarantined.swap(true, Ordering::SeqCst) {
+            self.counters.quarantines.fetch_add(1, Ordering::Relaxed);
+            if crate::obs::enabled() {
+                crate::obs::emit_event(crate::obs::Event::SessionQuarantine { elements });
+            }
+            eprintln!("session {id:?} quarantined after fault");
+        }
+    }
+
+    /// Acquire one session's lock unless the tenant is quarantined. A
+    /// poisoned lock — some thread panicked while holding it — quarantines
+    /// the tenant on the spot instead of riding through: the summary may
+    /// be mid-mutation, and serving or persisting it would trade a loud
+    /// typed error for silent corruption. Only this one tenant is lost;
+    /// the manager and every other session keep running.
+    fn lock_session<'a>(
+        &self,
+        id: &str,
+        cell: &'a SessionCell,
+    ) -> Result<MutexGuard<'a, Session>, ServiceError> {
+        if cell.quarantined.load(Ordering::SeqCst) {
+            return Err(ServiceError::Quarantined(id.to_string()));
+        }
+        match cell.session.lock() {
+            Ok(guard) => Ok(guard),
+            Err(_poisoned) => {
+                self.quarantine_cell(id, cell, 0);
+                Err(ServiceError::Quarantined(id.to_string()))
+            }
+        }
     }
 
     /// The admission rules, judged against one view of the map: id free,
@@ -337,15 +421,27 @@ impl SessionManager {
         let mut drift_base = 0usize;
         if let Some(dir) = &self.cfg.checkpoint_dir {
             let path = dir.join(format!("{id}.ckpt"));
-            if let Ok(ck) = Checkpoint::load(&path) {
-                if ck.state != Json::Null
-                    && ck.dim == spec.dim
-                    && ck.k == spec.k
-                    && algo.restore_state(&ck.state, &ck.summary).is_ok()
-                {
-                    resumed = true;
-                    drift_base = ck.drift_events;
+            match Checkpoint::load(&path) {
+                Ok(ck) => {
+                    if ck.state != Json::Null
+                        && ck.dim == spec.dim
+                        && ck.k == spec.k
+                        && algo.restore_state(&ck.state, &ck.summary).is_ok()
+                    {
+                        resumed = true;
+                        drift_base = ck.drift_events;
+                    }
                 }
+                // A corrupt checkpoint must not block the tenant: move the
+                // bytes aside for forensics and let this OPEN start fresh.
+                Err(CheckpointError::Corrupt(c)) => {
+                    if checkpoint::quarantine(&path).is_ok() {
+                        self.counters.ckpt_quarantines.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("checkpoint for {id:?} quarantined on open: {c}");
+                    }
+                }
+                // Absent or unreadable: plain fresh start, as before.
+                Err(CheckpointError::Io(_)) => {}
             }
         }
         let mut map = self.map();
@@ -354,13 +450,14 @@ impl SessionManager {
             Some((w, th)) => Box::new(MeanShiftDetector::new(spec.dim, w, th)),
             None => Box::new(NoDrift::default()),
         };
-        let session = Session { spec: spec.clone(), algo, drift, drift_base };
+        let session = Session { spec: spec.clone(), algo, drift, drift_base, rejected_rows: 0 };
         map.insert(
             id.to_string(),
             Arc::new(SessionCell {
                 k: spec.k,
                 touched_ms: AtomicU64::new(self.now_ms()),
                 closing: std::sync::atomic::AtomicBool::new(false),
+                quarantined: std::sync::atomic::AtomicBool::new(false),
                 session: Mutex::new(session),
             }),
         );
@@ -384,7 +481,7 @@ impl SessionManager {
 
     pub fn push(&self, id: &str, body: &PushBody) -> Result<PushReply, ServiceError> {
         let cell = self.cell(id)?;
-        let mut session = cell.lock();
+        let mut session = self.lock_session(id, &cell)?;
         // Straggler guard: if a close/shutdown marked the cell after we
         // fetched it, its final checkpoint is (or is about to be) on disk
         // without these rows — refuse rather than acknowledge data that
@@ -393,10 +490,18 @@ impl SessionManager {
             return Err(ServiceError::NoSession(id.to_string()));
         }
         let d = session.spec.dim;
+        // Oracle-poisoning fault: flips one value to NaN *before* the
+        // non-finite gate below, proving the gate (not luck) keeps
+        // injected garbage away from the oracle.
+        let injected_nan = matches!(
+            crate::fault::check(crate::fault::site::PUSH_ROWS),
+            Some(crate::fault::FaultKind::PoisonNan)
+        );
         // CSV rows must be flattened (they arrive as separate Vecs); the
         // packed form is already row-major and feeds the algorithm
-        // directly — no copy on the high-throughput path.
-        let reply = match body {
+        // directly — no copy on the high-throughput path unless a fault
+        // forces a mutable staging copy.
+        let mut staged: Option<Vec<f32>> = match body {
             PushBody::Rows(rows) => {
                 let mut flat = Vec::with_capacity(rows.iter().map(Vec::len).sum());
                 for row in rows {
@@ -405,23 +510,77 @@ impl SessionManager {
                     }
                     flat.extend_from_slice(row);
                 }
-                session.push(&flat)
+                Some(flat)
             }
             PushBody::Packed(flat) => {
                 if flat.len() % d != 0 {
                     return Err(ServiceError::DimMismatch { expected: d, got: flat.len() % d });
                 }
-                session.push(flat)
+                if injected_nan {
+                    Some(flat.clone())
+                } else {
+                    None
+                }
             }
         };
-        self.counters.pushes.fetch_add(1, Ordering::Relaxed);
-        self.counters.items.fetch_add(reply.rows, Ordering::Relaxed);
-        Ok(reply)
+        if injected_nan {
+            if let Some(first) = staged.as_mut().and_then(|buf| buf.first_mut()) {
+                *first = f32::NAN;
+            }
+        }
+        let flat: &[f32] = match &staged {
+            Some(buf) => buf,
+            None => match body {
+                PushBody::Packed(flat) => flat,
+                PushBody::Rows(_) => unreachable!("CSV rows are always staged"),
+            },
+        };
+        // Non-finite input policy: NaN/±Inf would flow through kernel
+        // evaluations into every downstream marginal-gain comparison
+        // (NaN makes them all false), silently corrupting the summary.
+        // Reject the whole batch atomically — either every row reaches
+        // the algorithm or none does, so a retried clean batch continues
+        // bit-identically.
+        if let Some(idx) = flat.iter().position(|v| !v.is_finite()) {
+            let rows_rejected = (flat.len() / d) as u64;
+            session.rejected_rows += rows_rejected;
+            self.counters.rejected_rows.fetch_add(rows_rejected, Ordering::Relaxed);
+            if crate::obs::enabled() {
+                crate::obs::counter("service.rejected_rows").add(rows_rejected);
+            }
+            return Err(ServiceError::NonFinite { row: idx / d, col: idx % d });
+        }
+        // Panic containment: a handler panic (real bug or injected fault)
+        // unwinds only to here. The guard lives OUTSIDE the closure, so
+        // the mutex is NOT poisoned by the catch — the session is fenced
+        // off explicitly instead, and the manager keeps serving every
+        // other tenant.
+        let elements_before = session.algo.stats().elements;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if matches!(
+                crate::fault::check(crate::fault::site::SESSION_HANDLER),
+                Some(crate::fault::FaultKind::Panic)
+            ) {
+                panic!("{}", crate::fault::INJECTED_MSG);
+            }
+            session.push(flat)
+        }));
+        match outcome {
+            Ok(reply) => {
+                self.counters.pushes.fetch_add(1, Ordering::Relaxed);
+                self.counters.items.fetch_add(reply.rows, Ordering::Relaxed);
+                Ok(reply)
+            }
+            Err(_panic) => {
+                self.quarantine_cell(id, &cell, elements_before);
+                Err(ServiceError::Quarantined(id.to_string()))
+            }
+        }
     }
 
     pub fn summary(&self, id: &str) -> Result<SummaryReply, ServiceError> {
         let cell = self.cell(id)?;
-        let session = cell.lock();
+        let session = self.lock_session(id, &cell)?;
         Ok(SummaryReply {
             dim: session.spec.dim,
             value: session.algo.value(),
@@ -431,13 +590,14 @@ impl SessionManager {
 
     pub fn stats(&self, id: &str) -> Result<StatsReply, ServiceError> {
         let cell = self.cell(id)?;
-        let session = cell.lock();
+        let session = self.lock_session(id, &cell)?;
         Ok(StatsReply {
             stats: session.algo.stats(),
             value: session.algo.value(),
             len: session.algo.summary_len(),
             drift_events: session.drift_events(),
             backend: crate::simd::active_name().to_string(),
+            rejected_rows: session.rejected_rows,
         })
     }
 
@@ -489,7 +649,7 @@ impl SessionManager {
         let Some(dir) = &self.cfg.checkpoint_dir else {
             return Ok(false);
         };
-        let ck = cell.lock().checkpoint();
+        let ck = self.lock_session(id, cell)?.checkpoint();
         ck.save(&dir.join(format!("{id}.ckpt")))
             .map_err(|e| ServiceError::Io(format!("checkpoint {id}: {e}")))?;
         self.counters.checkpoints.fetch_add(1, Ordering::Relaxed);
@@ -519,6 +679,12 @@ impl SessionManager {
         for (id, cell) in expired {
             if cell.touched_ms.load(Ordering::Relaxed) > cutoff {
                 continue; // touched since the scan
+            }
+            if cell.quarantined.load(Ordering::SeqCst) {
+                // A quarantined session's state must never be persisted,
+                // and dropping it would discard the evidence the operator
+                // needs — it waits for an explicit `CLOSE <id> discard`.
+                continue;
             }
             // Checkpoint FIRST, remove second: a failed write keeps the
             // tenant live (no state loss, no remove-then-reinsert window),
@@ -558,6 +724,9 @@ impl SessionManager {
             self.map().iter().map(|(id, c)| (id.clone(), Arc::clone(c))).collect();
         let mut written = 0usize;
         for (id, cell) in cells {
+            if cell.quarantined.load(Ordering::SeqCst) {
+                continue; // suspect state is never persisted
+            }
             match self.persist(&id, &cell) {
                 Ok(true) => written += 1,
                 Ok(false) => {}
@@ -580,6 +749,9 @@ impl SessionManager {
         }
         let mut written = 0usize;
         for (id, cell) in cells {
+            if cell.quarantined.load(Ordering::SeqCst) {
+                continue; // suspect state is never persisted
+            }
             match self.persist(&id, &cell) {
                 Ok(true) => written += 1,
                 Ok(false) => {}
@@ -611,8 +783,13 @@ impl SessionManager {
         let mut cells: Vec<(String, Arc<SessionCell>)> =
             self.map().iter().map(|(id, c)| (id.clone(), Arc::clone(c))).collect();
         cells.sort_by(|a, b| a.0.cmp(&b.0));
-        let guards: Vec<_> = cells.iter().map(|(_, c)| c.lock()).collect();
-        let sessions = guards.len();
+        let sessions = cells.len();
+        // Quarantined sessions still occupy a slot (counted above) but
+        // cannot answer STATS, so they are excluded from the aggregates —
+        // the `METRICS == Σ STATS` invariant ranges over the sessions
+        // that can actually reply.
+        let guards: Vec<_> =
+            cells.iter().filter_map(|(id, c)| self.lock_session(id, c).ok()).collect();
         let mut stored = 0usize;
         let mut items = 0u64;
         let mut queries = 0u64;
@@ -662,6 +839,9 @@ impl SessionManager {
             evictions: self.counters.evictions.load(Ordering::Relaxed),
             closes: self.counters.closes.load(Ordering::Relaxed),
             checkpoints: self.counters.checkpoints.load(Ordering::Relaxed),
+            rejected_rows: self.counters.rejected_rows.load(Ordering::Relaxed),
+            quarantines: self.counters.quarantines.load(Ordering::Relaxed),
+            ckpt_quarantines: self.counters.ckpt_quarantines.load(Ordering::Relaxed),
             uptime_s,
             items_per_s: if uptime_s > 0.0 { items_total as f64 / uptime_s } else { 0.0 },
         }
@@ -948,5 +1128,133 @@ mod tests {
             assert_eq!(stats, solo.stats());
         }
         assert_eq!(mgr.metrics().sessions, n_sessions);
+    }
+
+    #[test]
+    fn nonfinite_rows_rejected_atomically_in_both_encodings() {
+        let mgr = SessionManager::new(cfg());
+        let ds = stream(300, 21);
+        let d = ds.dim();
+        let sp = spec(d, 5);
+        mgr.open("nf", &sp).unwrap();
+        // Packed encoding: NaN in the middle of the second row.
+        let mut bad = ds.raw()[..3 * d].to_vec();
+        bad[d + 1] = f32::NAN;
+        match mgr.push("nf", &PushBody::Packed(bad)) {
+            Err(ServiceError::NonFinite { row: 1, col: 1 }) => {}
+            other => panic!("{other:?}"),
+        }
+        // CSV encoding: +Inf in the first row.
+        let mut row0 = ds.raw()[..d].to_vec();
+        row0[0] = f32::INFINITY;
+        let rows = vec![row0, ds.raw()[d..2 * d].to_vec()];
+        match mgr.push("nf", &PushBody::Rows(rows)) {
+            Err(ServiceError::NonFinite { row: 0, col: 0 }) => {}
+            other => panic!("{other:?}"),
+        }
+        // Rejection is atomic: after both refusals the session continues
+        // bit-identically to an algorithm that never saw the bad batches.
+        mgr.push("nf", &PushBody::Packed(ds.raw().to_vec())).unwrap();
+        let mut solo = build_algo(&sp.algo, d, sp.k, GammaMode::Streaming, None);
+        solo.process_batch(ds.raw());
+        let got = mgr.summary("nf").unwrap();
+        assert_eq!(got.value.to_bits(), solo.value().to_bits());
+        assert_eq!(got.data, solo.summary());
+        let st = mgr.stats("nf").unwrap();
+        assert_eq!(st.rejected_rows, 3 + 2, "both refused batches counted in full");
+        assert_eq!(mgr.metrics().rejected_rows, 5);
+    }
+
+    #[test]
+    fn handler_panic_quarantines_one_session_not_the_manager() {
+        let _serial = crate::fault::test_plan_lock();
+        let mgr = SessionManager::new(cfg());
+        let ds = stream(200, 33);
+        let d = ds.dim();
+        mgr.open("bad", &spec(d, 4)).unwrap();
+        mgr.open("good", &spec(d, 4)).unwrap();
+        let plan = crate::fault::FaultPlan::new()
+            .once(crate::fault::site::SESSION_HANDLER, crate::fault::FaultKind::Panic);
+        crate::fault::arm(plan);
+        let hit = mgr.push("bad", &PushBody::Packed(ds.raw()[..4 * d].to_vec()));
+        crate::fault::disarm();
+        assert!(matches!(hit, Err(ServiceError::Quarantined(_))), "{hit:?}");
+        // Every verb except discard-close now refuses this tenant...
+        assert!(matches!(mgr.stats("bad"), Err(ServiceError::Quarantined(_))));
+        assert!(matches!(mgr.summary("bad"), Err(ServiceError::Quarantined(_))));
+        assert!(matches!(
+            mgr.push("bad", &PushBody::Packed(ds.raw()[..d].to_vec())),
+            Err(ServiceError::Quarantined(_))
+        ));
+        assert!(matches!(mgr.close("bad", false), Err(ServiceError::Quarantined(_))));
+        // ...while the neighbour tenant is untouched.
+        mgr.push("good", &PushBody::Packed(ds.raw().to_vec())).unwrap();
+        assert!(mgr.stats("good").is_ok());
+        let m = mgr.metrics();
+        assert_eq!(m.quarantines, 1);
+        assert_eq!(m.sessions, 2, "quarantined session still occupies its slot");
+        // Discard-close releases the slot; the id is reusable.
+        mgr.close("bad", true).unwrap();
+        assert_eq!(mgr.session_count(), 1);
+        mgr.open("bad", &spec(d, 4)).unwrap();
+        mgr.push("bad", &PushBody::Packed(ds.raw()[..2 * d].to_vec())).unwrap();
+    }
+
+    #[test]
+    fn poisoned_lock_quarantines_instead_of_riding_through() {
+        let mgr = SessionManager::new(cfg());
+        let ds = stream(100, 7);
+        let d = ds.dim();
+        mgr.open("p", &spec(d, 3)).unwrap();
+        mgr.push("p", &PushBody::Packed(ds.raw()[..4 * d].to_vec())).unwrap();
+        // Poison the session mutex the only way possible: panic while
+        // holding the raw guard (production code can't — push catches).
+        let cell = mgr.cell("p").unwrap();
+        let _ = std::thread::spawn(move || {
+            let _g = cell.session.lock().unwrap();
+            panic!("poison the session lock");
+        })
+        .join();
+        assert!(matches!(mgr.stats("p"), Err(ServiceError::Quarantined(_))));
+        assert_eq!(mgr.metrics().quarantines, 1);
+        mgr.close("p", true).unwrap();
+        assert_eq!(mgr.session_count(), 0);
+    }
+
+    #[test]
+    fn open_after_corrupt_checkpoint_quarantines_and_starts_fresh() {
+        let dir = std::env::temp_dir().join(format!("ts_svc_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Written AFTER construction so the startup sweep can't clean it:
+        // this exercises the resume path's own quarantine arm.
+        let mgr = SessionManager::new(ServiceConfig {
+            checkpoint_dir: Some(dir.clone()),
+            idle_timeout: Duration::ZERO,
+            ..ServiceConfig::default()
+        });
+        std::fs::write(dir.join("cx.ckpt"), b"definitely not a checkpoint").unwrap();
+        assert!(!mgr.open("cx", &spec(4, 3)).unwrap(), "fresh open, not a resume");
+        assert!(!dir.join("cx.ckpt").exists(), "corrupt file moved aside");
+        assert!(dir.join("cx.ckpt.corrupt").exists(), "quarantined sibling kept");
+        assert_eq!(mgr.metrics().ckpt_quarantines, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn startup_sweep_quarantines_corrupt_and_counts_it() {
+        let dir = std::env::temp_dir().join(format!("ts_svc_sweep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("old.ckpt"), b"garbage header").unwrap();
+        std::fs::write(dir.join("stale.ckpt.tmp"), b"torn staging file").unwrap();
+        let mgr = SessionManager::new(ServiceConfig {
+            checkpoint_dir: Some(dir.clone()),
+            idle_timeout: Duration::ZERO,
+            ..ServiceConfig::default()
+        });
+        assert!(!dir.join("stale.ckpt.tmp").exists(), "stale tmp cleaned at startup");
+        assert!(dir.join("old.ckpt.corrupt").exists(), "corrupt checkpoint fenced off");
+        assert_eq!(mgr.metrics().ckpt_quarantines, 1);
+        assert!(!mgr.open("old", &spec(4, 3)).unwrap(), "fresh OPEN proceeds after sweep");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

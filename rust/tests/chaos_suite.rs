@@ -1,0 +1,248 @@
+//! Chaos acceptance gate: under a seeded fault schedule — connection
+//! reset mid-stream, NaN injection into a push, torn checkpoint write on
+//! close, a server restart over the same checkpoint dir — every surviving
+//! session's `SUMMARY` and `STATS` must be **bit-identical** to a
+//! fault-free run of the same stream.
+//!
+//! Fault arming is process-global, so every test here serializes on one
+//! local mutex and disarms before releasing it.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use threesieves::config::ServiceConfig;
+use threesieves::data::registry;
+use threesieves::exec::Parallelism;
+use threesieves::fault::{self, site, FaultKind, FaultPlan};
+use threesieves::metrics::AlgoStats;
+use threesieves::service::{Client, ClientError, ErrorCode, RetryPolicy, Server, SessionSpec};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+const DIM: usize = 16;
+const CHUNK_ROWS: usize = 40;
+
+fn workload() -> (Vec<f32>, SessionSpec) {
+    let ds = registry::get("fact-highlevel-like", 600, 77).unwrap();
+    assert_eq!(ds.dim(), DIM);
+    (ds.raw().to_vec(), SessionSpec::three_sieves(DIM, 6, 0.01, 80))
+}
+
+fn retry_fast() -> RetryPolicy {
+    RetryPolicy { base_delay: Duration::from_millis(1), ..RetryPolicy::default() }
+}
+
+/// Push one chunk, absorbing at most one `ERR nonfinite`: the injection
+/// poisons the batch server-side, the gate rejects it atomically, and the
+/// same (clean) chunk is re-sent — so the oracle sees exactly the
+/// fault-free stream.
+fn push_absorbing_nan(client: &mut Client, id: &str, chunk: &[f32], dim: usize) -> u64 {
+    match client.push_rows(id, chunk, dim) {
+        Ok(reply) => reply.rows,
+        Err(ClientError::Server { code: ErrorCode::NonFinite, .. }) => {
+            client.push_rows(id, chunk, dim).unwrap().rows
+        }
+        Err(other) => panic!("push failed beyond the planned faults: {other}"),
+    }
+}
+
+fn final_state(client: &mut Client, id: &str) -> (f64, Vec<f32>, AlgoStats, usize) {
+    let summary = client.summary(id).unwrap();
+    let stats = client.stats(id).unwrap();
+    assert_eq!(summary.value.to_bits(), stats.value.to_bits());
+    (summary.value, summary.data, stats.stats, stats.drift_events)
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ts_chaos_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn seeded_fault_schedule_is_bit_identical_to_fault_free_run() {
+    let _serial = serial();
+    let (raw, spec) = workload();
+    let chunks: Vec<&[f32]> = raw.chunks(CHUNK_ROWS * DIM).collect();
+    let split = chunks.len() / 2; // server restart happens here
+
+    // ---- fault-free baseline ------------------------------------------
+    let base_dir = tmpdir("base");
+    let cfg = |dir: &std::path::Path| ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        checkpoint_dir: Some(dir.to_path_buf()),
+        parallelism: Parallelism::Off,
+        ..ServiceConfig::default()
+    };
+    let baseline = {
+        let handle = Server::start(cfg(&base_dir), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.open("s1", &spec).unwrap();
+        for chunk in &chunks {
+            client.push_rows("s1", chunk, DIM).unwrap();
+        }
+        let state = final_state(&mut client, "s1");
+        handle.shutdown();
+        state
+    };
+
+    // ---- chaos run -----------------------------------------------------
+    let chaos_dir = tmpdir("chaos");
+    let injected_before = fault::injected_total();
+
+    // Phase A: stream the first half under the schedule. The reset drops
+    // the 5th request line (the 5th PUSH) before dispatch and the retry
+    // re-sends it exactly; the NaN poisons the 7th *dispatched* PUSH,
+    // which the non-finite gate rejects whole.
+    let handle = Server::start(cfg(&chaos_dir), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap().with_retry(retry_fast());
+    client.open("s1", &spec).unwrap();
+    fault::arm(
+        FaultPlan::new()
+            .nth(site::CONN_READ, FaultKind::ConnReset, 4, 1, 1)
+            .nth(site::PUSH_ROWS, FaultKind::PoisonNan, 6, 1, 1)
+            .once(site::CKPT_WRITE, FaultKind::TornWrite { bytes: 24 }),
+    );
+    for chunk in &chunks[..split] {
+        push_absorbing_nan(&mut client, "s1", chunk, DIM);
+    }
+    // "Kill mid-checkpoint": the torn write fires on the first close
+    // attempt, which must fail loudly with the session still live...
+    match client.close("s1", false) {
+        Err(ClientError::Server { code: ErrorCode::Io, .. }) => {}
+        other => panic!("torn checkpoint write must surface as ERR io, got {other:?}"),
+    }
+    // ...and the retried close rewrites the checkpoint atomically.
+    assert!(client.close("s1", false).unwrap(), "second close checkpoints");
+    let m = handle.manager().metrics();
+    assert_eq!(m.rejected_rows, CHUNK_ROWS as u64, "one poisoned batch was rejected");
+    handle.shutdown();
+
+    // Phase B: a fresh server over the same dir sweeps the checkpoint
+    // dir, resumes the session bit-identically, and finishes the stream.
+    let handle = Server::start(cfg(&chaos_dir), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap().with_retry(retry_fast());
+    assert!(client.open("s1", &spec).unwrap(), "must resume from the close checkpoint");
+    for chunk in &chunks[split..] {
+        push_absorbing_nan(&mut client, "s1", chunk, DIM);
+    }
+    let chaos = final_state(&mut client, "s1");
+    fault::disarm();
+    handle.shutdown();
+
+    assert!(fault::injected_total() > injected_before, "the schedule actually fired");
+    // The acceptance bar: bit-identical SUMMARY and STATS.
+    assert_eq!(baseline.0.to_bits(), chaos.0.to_bits(), "f(S) must match to the bit");
+    assert_eq!(baseline.1, chaos.1, "summaries must match exactly");
+    assert_eq!(baseline.2, chaos.2, "algorithm stats must match exactly");
+    assert_eq!(baseline.3, chaos.3, "drift counts must match");
+
+    std::fs::remove_dir_all(&base_dir).ok();
+    std::fs::remove_dir_all(&chaos_dir).ok();
+}
+
+#[test]
+fn slow_read_fault_delays_but_never_alters_results() {
+    let _serial = serial();
+    let (raw, spec) = workload();
+    let chunks: Vec<&[f32]> = raw.chunks(CHUNK_ROWS * DIM).collect();
+
+    let run = |plan: Option<FaultPlan>| {
+        let cfg = ServiceConfig {
+            idle_timeout: Duration::ZERO,
+            parallelism: Parallelism::Off,
+            ..ServiceConfig::default()
+        };
+        let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(handle.addr()).unwrap();
+        client.open("slow", &spec).unwrap();
+        if let Some(plan) = plan {
+            fault::arm(plan);
+        }
+        for chunk in &chunks {
+            client.push_rows("slow", chunk, DIM).unwrap();
+        }
+        fault::disarm();
+        let state = final_state(&mut client, "slow");
+        handle.shutdown();
+        state
+    };
+
+    let clean = run(None);
+    let slowed = run(Some(FaultPlan::new().nth(
+        site::CONN_READ,
+        FaultKind::SlowRead { ms: 10 },
+        0,
+        3,
+        u64::MAX,
+    )));
+    assert_eq!(clean.0.to_bits(), slowed.0.to_bits());
+    assert_eq!(clean.1, slowed.1);
+    assert_eq!(clean.2, slowed.2);
+}
+
+#[test]
+fn reply_side_reset_retries_idempotent_verbs_exactly() {
+    let _serial = serial();
+    let (raw, spec) = workload();
+    let cfg = ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        parallelism: Parallelism::Off,
+        ..ServiceConfig::default()
+    };
+    let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap().with_retry(retry_fast());
+    client.open("rw", &spec).unwrap();
+    client.push_rows("rw", &raw[..8 * DIM], DIM).unwrap();
+    let before = client.stats("rw").unwrap();
+    // The reply to the next request is lost AFTER dispatch; STATS is
+    // idempotent, so the transparent re-send returns the same answer.
+    fault::arm(FaultPlan::new().once(site::CONN_WRITE, FaultKind::ConnReset));
+    let after = client.stats("rw").unwrap();
+    fault::disarm();
+    assert_eq!(before.value.to_bits(), after.value.to_bits());
+    assert_eq!(before.stats, after.stats);
+    handle.shutdown();
+}
+
+#[test]
+fn handler_panic_over_tcp_quarantines_only_that_tenant() {
+    let _serial = serial();
+    let (raw, spec) = workload();
+    let cfg = ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        parallelism: Parallelism::Threads(2),
+        ..ServiceConfig::default()
+    };
+    let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    client.open("victim", &spec).unwrap();
+    client.open("bystander", &spec).unwrap();
+    client.push_rows("bystander", &raw[..8 * DIM], DIM).unwrap();
+    fault::arm(FaultPlan::new().once(site::SESSION_HANDLER, FaultKind::Panic));
+    match client.push_rows("victim", &raw[..8 * DIM], DIM) {
+        Err(ClientError::Server { code: ErrorCode::Quarantined, .. }) => {}
+        other => panic!("expected ERR quarantined, got {other:?}"),
+    }
+    fault::disarm();
+    // The victim stays fenced; the bystander and the manager are fine.
+    match client.stats("victim") {
+        Err(ClientError::Server { code: ErrorCode::Quarantined, .. }) => {}
+        other => panic!("expected ERR quarantined, got {other:?}"),
+    }
+    let by = client.stats("bystander").unwrap();
+    assert_eq!(by.stats.elements, 8);
+    let m = client.metrics().unwrap();
+    assert_eq!(m.quarantines, 1);
+    assert_eq!(m.sessions, 2, "quarantined tenant still holds its slot");
+    // Discard-close releases the slot and the id becomes reusable.
+    client.close("victim", true).unwrap();
+    assert!(!client.open("victim", &spec).unwrap());
+    client.push_rows("victim", &raw[..8 * DIM], DIM).unwrap();
+    handle.shutdown();
+}

@@ -1,0 +1,188 @@
+//! Checkpoint corruption matrix (satellite of the fault-injection PR):
+//! every way a `.ckpt` can rot on disk — truncation, a single flipped
+//! bit, an unknown version header, an empty file, a stale `.tmp` from a
+//! torn save — must (a) be detected with the right [`Corruption`] class,
+//! (b) quarantine the file to a `.corrupt` sibling instead of deleting
+//! evidence, and (c) leave a fresh `OPEN` of the same id working.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use threesieves::config::ServiceConfig;
+use threesieves::coordinator::checkpoint::{
+    sweep_dir, Checkpoint, CheckpointError, Corruption,
+};
+use threesieves::data::registry;
+use threesieves::service::{PushBody, SessionManager, SessionSpec};
+
+const DIM: usize = 10;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ts_ckpt_matrix_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn cfg(dir: &Path) -> ServiceConfig {
+    ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        checkpoint_dir: Some(dir.to_path_buf()),
+        ..ServiceConfig::default()
+    }
+}
+
+/// Run a session to completion so `<id>.ckpt` holds real restorable state.
+fn write_good_checkpoint(dir: &Path, id: &str) -> SessionSpec {
+    let spec = SessionSpec::three_sieves(DIM, 5, 0.01, 60);
+    let mgr = SessionManager::new(cfg(dir));
+    let ds = registry::get("forestcover-like", 300, 5).unwrap();
+    assert_eq!(ds.dim(), DIM);
+    mgr.open(id, &spec).unwrap();
+    mgr.push(id, &PushBody::Packed(ds.raw().to_vec())).unwrap();
+    assert!(mgr.close(id, false).unwrap(), "close must checkpoint");
+    assert!(dir.join(format!("{id}.ckpt")).exists());
+    spec
+}
+
+/// The shared acceptance path for one corruption case: load classifies it,
+/// a fresh manager's sweep quarantines it, and the same id opens fresh.
+fn assert_quarantined_and_reopenable(
+    dir: &Path,
+    id: &str,
+    spec: &SessionSpec,
+    expect: impl Fn(&Corruption) -> bool,
+    case: &str,
+) {
+    let path = dir.join(format!("{id}.ckpt"));
+    match Checkpoint::load(&path) {
+        Err(CheckpointError::Corrupt(c)) => {
+            assert!(expect(&c), "{case}: wrong corruption class: {c}")
+        }
+        other => panic!("{case}: expected Corrupt, got {other:?}"),
+    }
+    let mgr = SessionManager::new(cfg(dir));
+    assert!(!path.exists(), "{case}: sweep must move the corrupt file aside");
+    assert!(
+        dir.join(format!("{id}.ckpt.corrupt")).exists(),
+        "{case}: quarantined sibling must keep the bytes"
+    );
+    assert_eq!(mgr.metrics().ckpt_quarantines, 1, "{case}");
+    assert!(!mgr.open(id, spec).unwrap(), "{case}: fresh OPEN must proceed");
+    mgr.push(id, &PushBody::Packed(vec![0.5; 4 * DIM])).unwrap();
+}
+
+#[test]
+fn truncated_checkpoint_quarantines() {
+    let dir = tmpdir("trunc");
+    let spec = write_good_checkpoint(&dir, "t");
+    let path = dir.join("t.ckpt");
+    let bytes = std::fs::read(&path).unwrap();
+    // A deep cut (half the file) survives the magic check but the last 8
+    // bytes are no longer the FNV trailer of what precedes them — v2
+    // truncation is caught by the checksum, by design.
+    assert!(matches!(
+        Checkpoint::decode(&bytes[..bytes.len() / 2]),
+        Err(CheckpointError::Corrupt(Corruption::ChecksumMismatch { .. }))
+    ));
+    // A cut shallower than the fixed framing is classified as Truncated.
+    assert!(matches!(
+        Checkpoint::decode(&bytes[..10]),
+        Err(CheckpointError::Corrupt(Corruption::Truncated(_)))
+    ));
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert_quarantined_and_reopenable(
+        &dir,
+        "t",
+        &spec,
+        |c| matches!(c, Corruption::ChecksumMismatch { .. }),
+        "truncated",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_bit_flip_fails_the_checksum() {
+    let dir = tmpdir("flip");
+    let spec = write_good_checkpoint(&dir, "f");
+    let path = dir.join("f.ckpt");
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Flip one payload bit, well clear of the 8-byte FNV trailer.
+    let idx = bytes.len() - 16;
+    bytes[idx] ^= 0x04;
+    std::fs::write(&path, &bytes).unwrap();
+    assert_quarantined_and_reopenable(
+        &dir,
+        "f",
+        &spec,
+        |c| matches!(c, Corruption::ChecksumMismatch { .. }),
+        "bit-flip",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_version_header_quarantines() {
+    let dir = tmpdir("ver");
+    let spec = write_good_checkpoint(&dir, "v");
+    let path = dir.join("v.ckpt");
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[6] = b'9'; // TSCKPT2\n -> TSCKPT9\n
+    std::fs::write(&path, &bytes).unwrap();
+    assert_quarantined_and_reopenable(
+        &dir,
+        "v",
+        &spec,
+        |c| matches!(c, Corruption::UnsupportedVersion(b'9')),
+        "unknown-version",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn empty_file_quarantines_without_panicking() {
+    let dir = tmpdir("empty");
+    let spec = write_good_checkpoint(&dir, "e");
+    std::fs::write(dir.join("e.ckpt"), b"").unwrap();
+    assert_quarantined_and_reopenable(
+        &dir,
+        "e",
+        &spec,
+        |c| matches!(c, Corruption::Truncated(_)),
+        "empty",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_tmp_is_cleaned_and_the_real_checkpoint_still_resumes() {
+    let dir = tmpdir("tmp");
+    let spec = write_good_checkpoint(&dir, "s");
+    // A crash between staging and rename leaves `<id>.ckpt.tmp`; the good
+    // checkpoint from an earlier save is still the newest durable state.
+    std::fs::write(dir.join("s.ckpt.tmp"), b"torn staging garbage").unwrap();
+    let report = sweep_dir(&dir);
+    assert_eq!((report.good, report.quarantined, report.stale_tmp), (1, 0, 1));
+    assert!(!dir.join("s.ckpt.tmp").exists(), "stale tmp must be removed");
+    let mgr = SessionManager::new(cfg(&dir));
+    assert!(mgr.open("s", &spec).unwrap(), "the intact checkpoint must still resume");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn garbage_header_is_bad_magic_not_a_crash() {
+    let dir = tmpdir("magic");
+    let spec = write_good_checkpoint(&dir, "g");
+    let path = dir.join("g.ckpt");
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[..8].copy_from_slice(b"NOTAHDR\n");
+    std::fs::write(&path, &bytes).unwrap();
+    assert_quarantined_and_reopenable(
+        &dir,
+        "g",
+        &spec,
+        |c| matches!(c, Corruption::BadMagic),
+        "bad-magic",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

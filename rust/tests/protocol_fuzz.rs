@@ -1,0 +1,154 @@
+//! Protocol fuzz smoke (satellite of the fault-injection PR): seeded LCG
+//! mutations of valid request lines are thrown at a live server. The
+//! contract under garbage input is narrow and absolute — every line gets
+//! exactly one `OK`/`ERR` reply (frames from an accidentally-armed WATCH
+//! may interleave), or the connection closes cleanly. Never a panic,
+//! never a hang. Mutations are substitution-only, so line lengths (and
+//! with them any numeric fields a mutation yields) stay bounded.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use threesieves::config::ServiceConfig;
+use threesieves::exec::Parallelism;
+use threesieves::service::{PushBody, Request, Server, SessionSpec, WatchMode};
+
+const LCG_MUL: u64 = 6364136223846793005;
+const LCG_INC: u64 = 1442695040888963407;
+
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(LCG_MUL).wrapping_add(LCG_INC);
+        self.0 >> 33
+    }
+}
+
+/// The valid corpus: one of each verb, rendered by the same serializer
+/// the real client uses.
+fn corpus() -> Vec<String> {
+    let spec = SessionSpec::three_sieves(8, 4, 0.05, 40);
+    let rows: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+    vec![
+        Request::Open { id: "fz".into(), spec: spec.clone() }.to_line(),
+        Request::Push {
+            id: "fz".into(),
+            body: PushBody::Rows(rows.chunks(8).map(<[f32]>::to_vec).collect()),
+        }
+        .to_line(),
+        Request::Push { id: "fz".into(), body: PushBody::Packed(rows) }.to_line(),
+        Request::Summary { id: "fz".into() }.to_line(),
+        Request::Stats { id: "fz".into() }.to_line(),
+        Request::Close { id: "fz".into(), discard: true }.to_line(),
+        Request::Metrics.to_line(),
+        Request::MetricsHist.to_line(),
+        Request::Watch { interval_ms: 60_000, mode: WatchMode::Events }.to_line(),
+        Request::Ping.to_line(),
+    ]
+}
+
+/// Substitute 1–6 bytes at seeded positions. Newlines and carriage
+/// returns are excluded so one mutation stays one wire line.
+fn mutate(line: &str, lcg: &mut Lcg) -> String {
+    let mut bytes = line.as_bytes().to_vec();
+    if bytes.is_empty() {
+        return String::new();
+    }
+    let edits = 1 + (lcg.next() as usize % 6);
+    for _ in 0..edits {
+        let pos = lcg.next() as usize % bytes.len();
+        let mut b = (lcg.next() % 256) as u8;
+        if b == b'\n' || b == b'\r' {
+            b = b'#';
+        }
+        bytes[pos] = b;
+    }
+    // Lossy round-trip mirrors what the server itself does with the line.
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+struct FuzzConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl FuzzConn {
+    fn connect(addr: std::net::SocketAddr) -> FuzzConn {
+        let stream = TcpStream::connect(addr).unwrap();
+        // The hang detector: any reply slower than this fails the test.
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().unwrap();
+        FuzzConn { reader: BufReader::new(stream), writer }
+    }
+
+    /// Send one line; classify the server's behavior. `Ok(true)` = got a
+    /// reply, `Ok(false)` = connection closed cleanly (reconnect).
+    fn exchange(&mut self, line: &str) -> std::io::Result<bool> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        // Whitespace-only lines are skipped by the server without a reply.
+        if line.trim().is_empty() {
+            return Ok(true);
+        }
+        loop {
+            let mut reply = String::new();
+            let n = self.reader.read_line(&mut reply)?;
+            if n == 0 {
+                return Ok(false); // clean close (QUIT mutation, oversize line)
+            }
+            if reply.starts_with("FRAME") {
+                continue; // a mutated line re-armed WATCH; frames interleave
+            }
+            assert!(
+                reply.starts_with("OK") || reply.starts_with("ERR"),
+                "unclassifiable reply to {line:?}: {reply:?}"
+            );
+            return Ok(true);
+        }
+    }
+}
+
+#[test]
+fn mutated_frames_always_get_err_or_clean_close_never_a_hang() {
+    let cfg = ServiceConfig {
+        idle_timeout: Duration::ZERO,
+        parallelism: Parallelism::Off,
+        max_sessions: 8,
+        max_total_stored: 512,
+        ..ServiceConfig::default()
+    };
+    let handle = Server::start(cfg, "127.0.0.1:0").unwrap();
+    let addr = handle.addr();
+    let corpus = corpus();
+    let mut lcg = Lcg(0x5eed_f00d_cafe_0042);
+    let mut conn = FuzzConn::connect(addr);
+    let mut replies = 0u32;
+    let mut closes = 0u32;
+    for i in 0..500 {
+        let base = &corpus[(lcg.next() as usize) % corpus.len()];
+        // Every 10th line goes through unmutated, keeping real sessions
+        // appearing and disappearing underneath the garbage.
+        let line =
+            if i % 10 == 0 { base.clone() } else { mutate(base, &mut lcg) };
+        match conn.exchange(&line) {
+            Ok(true) => replies += 1,
+            Ok(false) => {
+                closes += 1;
+                conn = FuzzConn::connect(addr);
+            }
+            Err(e) => panic!("server hung or died on {line:?}: {e}"),
+        }
+    }
+    assert!(replies > 400, "most lines must be answered in place ({replies})");
+    // The server survives the storm: a clean request on a fresh
+    // connection still round-trips, and the manager still answers.
+    let mut probe = FuzzConn::connect(addr);
+    assert!(probe.exchange("PING").unwrap());
+    let metrics = handle.manager().metrics();
+    assert!(metrics.sessions <= 8, "admission caps held under fuzz");
+    eprintln!("fuzz: {replies} replies, {closes} clean closes");
+    handle.shutdown();
+}
